@@ -1,0 +1,80 @@
+//! Ablation bench: the design choices DESIGN.md calls out, measured.
+//!
+//! * OS vs WS dataflow — traffic + cycles on the same layer (SectionII-C).
+//! * Line buffer + spike vectors — off-chip input reads vs plain OS
+//!   (Table III's reduction).
+//! * Spike-event encoding vs dense inter-layer transfer (SectionIV-E.1)
+//!   across firing rates.
+//! * Adder tree vs serial psum combine (the Tpe reduction of SectionIV-E.2).
+//!
+//! `cargo bench --bench bench_ablation`
+
+use sti_snn::arch::{scnn5, ConvLayer};
+use sti_snn::codec::{EventCodec, SpikeFrame};
+use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::memory::{DataKind, MemLevel};
+use sti_snn::sim::ws_engine::WsEngine;
+use sti_snn::sim::cycles_to_ms;
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("ablations (design choices)");
+
+    // --- OS vs WS on the SCNN5 bottleneck layer ------------------------
+    let l: ConvLayer = scnn5().accel_convs()[0].clone();
+    let mut rng = Rng::new(3);
+    let input = SpikeFrame::random(l.in_h, l.in_w, l.ci, 0.15, &mut rng);
+    let w = ConvWeights::random(&l, 1);
+
+    let mut os = ConvEngine::new(l.clone(), w.clone(),
+                                 ConvLatencyParams::optimized(), 1);
+    let mut os_rep = None;
+    set.run("OS engine, scnn5 conv2 frame", || {
+        os_rep = Some(os.run_frame(&input, true).1);
+    });
+    let mut ws = WsEngine::new(l.clone(), w, 1);
+    let mut ws_rep = None;
+    set.run("WS engine, scnn5 conv2 frame", || {
+        ws_rep = Some(ws.run_frame(&input).1);
+    });
+    let (os_rep, ws_rep) = (os_rep.unwrap(), ws_rep.unwrap());
+    println!("\n--- OS vs WS (scnn5 conv2, T=1) ---");
+    println!("psum+vmem traffic: OS {} vs WS {}",
+             os_rep.counters.total_of_kind(DataKind::PartialSum)
+                 + os_rep.counters.total_of_kind(DataKind::Vmem),
+             ws_rep.counters.total_of_kind(DataKind::PartialSum));
+    println!("modelled cycles:   OS {} ({:.2} ms) vs WS {} ({:.2} ms)",
+             os_rep.cycles, cycles_to_ms(os_rep.cycles),
+             ws_rep.cycles, cycles_to_ms(ws_rep.cycles));
+
+    // --- Line buffer: measured off-chip reads vs the plain-OS model ----
+    println!("\n--- line buffer + spike vectors (Table III ablation) ---");
+    let dram_reads =
+        os_rep.counters.reads_of(MemLevel::Dram, DataKind::InputSpike);
+    let plain = dataflow::os_access(&l, 1).input_spikes;
+    println!("off-chip input reads: with line buffer {dram_reads}, \
+              plain OS {plain} ({:.0}x reduction)",
+             plain as f64 / dram_reads as f64);
+
+    // --- Event encoding vs dense transfer (rate sweep) -----------------
+    println!("\n--- spike-event encoding vs dense (32x32x64 link) ---");
+    let codec = EventCodec::new(32, 32, 64);
+    for rate in [0.01, 0.05, 0.1, 0.3] {
+        let f = SpikeFrame::random(32, 32, 64, rate, &mut rng);
+        let (_, stats) = codec.encode(&f);
+        println!("rate {rate:>4}: encoded {:>8} bits vs dense {:>8} \
+                  bits ({:.2}x)",
+                 stats.encoded_bits, stats.dense_bits, stats.ratio());
+    }
+
+    // --- Adder tree vs serial combine (Eq. 12 Tpes term) ---------------
+    println!("\n--- psum combine: adder tree vs serial (scnn5 conv2) ---");
+    for (name, t_pes) in [("adder tree (ceil log2 9 = 4)", None),
+                          ("serial (9 cycles)", Some(9u64))] {
+        let timing = ConvLatencyParams { t_rw: 0, t_pe: 1, t_pes };
+        let lat = dataflow::conv_latency(&l, &timing);
+        println!("{name:<28} layer latency {:.2} ms", cycles_to_ms(lat));
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: spike codec — vector ops, event encode/decode, compression
+//! ratio vs firing rate (the SectionIV-E.1 interconnect argument).
+//!
+//! `cargo bench --bench bench_codec`
+
+use sti_snn::codec::{EventCodec, SpikeFrame};
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("spike codec (SectionIV-C / SectionIV-E.1)");
+    let mut rng = Rng::new(4);
+
+    let frame = SpikeFrame::random(32, 32, 64, 0.1, &mut rng);
+    let codec = EventCodec::new(32, 32, 64);
+
+    set.run("encode 32x32x64 @ 10%", || {
+        std::hint::black_box(codec.encode(&frame));
+    });
+
+    let (events, _) = codec.encode(&frame);
+    set.run("decode 32x32x64 @ 10%", || {
+        std::hint::black_box(codec.decode(&events));
+    });
+
+    set.run("frame vector extraction (28x28x16)", || {
+        let f = SpikeFrame::zeros(28, 28, 16);
+        for y in 0..28 {
+            for x in 0..28 {
+                std::hint::black_box(f.vector(y, x));
+            }
+        }
+    });
+
+    println!("\n--- compression ratio vs firing rate (32x32x64) ---");
+    for rate in [0.001, 0.01, 0.05, 0.1, 0.2, 0.5] {
+        let f = SpikeFrame::random(32, 32, 64, rate, &mut rng);
+        let (_, stats) = codec.encode(&f);
+        println!("rate {rate:>5}: events {:>5}/{:>5}, ratio {:.2}x",
+                 stats.events, stats.pixels, stats.ratio());
+    }
+}

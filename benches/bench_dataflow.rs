@@ -1,0 +1,47 @@
+//! Bench: analytical dataflow models + Table I / Table III regeneration.
+//!
+//! `cargo bench --bench bench_dataflow`
+//! (hand-rolled harness — criterion is not vendored; see util::bench)
+
+use sti_snn::arch;
+use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::util::bench::BenchSet;
+
+fn main() {
+    let mut set = BenchSet::new("dataflow models (Tables I & III)");
+
+    let scnn5 = arch::scnn5();
+    let convs: Vec<_> = scnn5.accel_convs().into_iter().cloned().collect();
+
+    set.run("table1: OS+WS access counts, scnn5 all layers", || {
+        for c in &convs {
+            std::hint::black_box(dataflow::os_access(c, 1));
+            std::hint::black_box(dataflow::ws_access(c, 1));
+        }
+    });
+
+    set.run("table3: conv-mode access counts, all models", || {
+        for net in [arch::scnn3(), arch::scnn5(), arch::vmobilenet()] {
+            for c in net.accel_convs() {
+                std::hint::black_box(dataflow::conv_mode_access(c, 1));
+            }
+        }
+    });
+
+    set.run("eq12: pipeline latency model, scnn5", || {
+        std::hint::black_box(dataflow::pipeline_latency(
+            &scnn5, &ConvLatencyParams::optimized(), 1));
+    });
+
+    // Regenerate the table rows (recorded in bench output for
+    // EXPERIMENTS.md).
+    println!("\n--- Table I (scnn5 conv2, T=1 vs T=2) ---");
+    let c = &convs[0];
+    for t in [1, 2] {
+        let os = dataflow::os_access(c, t);
+        let ws = dataflow::ws_access(c, t);
+        println!("T={t}: OS in/w/p = {}/{}/{} | WS = {}/{}/{}",
+                 os.input_spikes, os.weights, os.partial_sums,
+                 ws.input_spikes, ws.weights, ws.partial_sums);
+    }
+}

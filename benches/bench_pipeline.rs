@@ -1,0 +1,65 @@
+//! Bench: whole-pipeline runs — Fig. 11 (T1 vs T2) and Fig. 12
+//! (pipelining + parallelism) regeneration.
+//!
+//! `cargo bench --bench bench_pipeline`
+
+use sti_snn::arch;
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::sim::cycles_to_ms;
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+fn frames(shape: (usize, usize, usize), n: usize) -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(9);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
+                                    &mut rng))
+        .collect()
+}
+
+fn main() {
+    let mut set = BenchSet::new("pipeline (Fig. 11 / Fig. 12)");
+
+    // SCNN3 full pipeline, T=1 vs T=2 (Fig. 11's trend at small scale).
+    for t in [1usize, 2] {
+        let mut pipe = Pipeline::random(
+            arch::scnn3(),
+            PipelineConfig { timesteps: t, ..Default::default() },
+        )
+        .unwrap();
+        let f = frames(pipe.input_shape(), 1);
+        let mut vmem_kb = 0.0;
+        let mut uj = 0.0;
+        set.run(&format!("scnn3 frame, T={t}"), || {
+            let rep = pipe.run(&f);
+            vmem_kb = rep.layer_vmem_bytes.iter().sum::<usize>() as f64
+                / 1024.0;
+            uj = rep.dynamic_energy_per_frame_j() * 1e6;
+        });
+        println!("    -> Vmem {vmem_kb:.1} KB, dyn energy {uj:.1} uJ/frame");
+    }
+
+    // Fig. 12: scnn5 unpipelined vs pipelined vs parallel.
+    for (name, net, pipelined) in [
+        ("scnn5 unpipelined", arch::scnn5(), false),
+        ("scnn5 pipelined", arch::scnn5(), true),
+        ("scnn5 parallel(4,4,2,1)",
+         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1]), true),
+    ] {
+        let mut pipe = Pipeline::random(
+            net, PipelineConfig { pipelined, ..Default::default() })
+            .unwrap();
+        let f = frames(pipe.input_shape(), 1);
+        let mut modelled_ms = 0.0;
+        set.run(name, || {
+            let rep = pipe.run(&f);
+            modelled_ms = if pipelined {
+                cycles_to_ms(rep.t_max)
+            } else {
+                cycles_to_ms(rep.t_sum)
+            };
+        });
+        println!("    -> modelled FPGA delay {modelled_ms:.2} ms/frame");
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: PJRT runtime — HLO compile + execute latency for the AOT
+//! artifacts (the functional-reference path of the e2e driver).
+//!
+//! Requires `make artifacts`; skips gracefully when absent.
+//!
+//! `cargo bench --bench bench_runtime`
+
+use sti_snn::model::Artifact;
+use sti_snn::runtime::{artifacts_dir, Runtime};
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+fn main() {
+    let dir = artifacts_dir().join("scnn3");
+    if !dir.join("model.hlo.txt").exists() {
+        println!("bench_runtime: artifacts/scnn3 missing — run `make \
+                  artifacts` first; skipping");
+        return;
+    }
+    let art = Artifact::load(&dir).expect("artifact loads");
+    let mut set = BenchSet::new("PJRT runtime (AOT artifacts)");
+
+    let mut compile_rt = None;
+    set.run("compile encoder+model HLO", || {
+        let mut rt = Runtime::new().unwrap();
+        rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input).unwrap();
+        rt.load_hlo("model", &art.model_hlo(), art.net.input).unwrap();
+        compile_rt = Some(rt);
+    });
+    let rt = compile_rt.unwrap();
+
+    let (h, w, c) = art.net.input;
+    let mut rng = Rng::new(5);
+    let image: Vec<f32> = (0..h * w * c).map(|_| rng.f32()).collect();
+
+    set.run("encoder execute (image -> spikes)", || {
+        std::hint::black_box(
+            rt.encode("encoder", &image, art.encoder_out_shape()).unwrap());
+    });
+
+    set.run("full model execute (image -> logits)", || {
+        std::hint::black_box(rt.logits("model", &image).unwrap());
+    });
+}

@@ -1,0 +1,66 @@
+//! Bench: cycle-level conv engine throughput (simulation speed itself —
+//! the §Perf hot path) across modes and parallel factors.
+//!
+//! `cargo bench --bench bench_sim_engine`
+
+use sti_snn::arch::{ConvLayer, ConvMode};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+fn layer(mode: ConvMode, ci: usize, co: usize, hw: usize,
+         parallel: usize) -> ConvLayer {
+    let k = if mode == ConvMode::Pointwise { 1 } else { 3 };
+    ConvLayer {
+        mode, in_h: hw, in_w: hw, ci, co, kh: k, kw: k, pad: k / 2,
+        encoder: false, parallel,
+    }
+}
+
+fn main() {
+    let mut set = BenchSet::new("conv engine (cycle-level sim speed)");
+    let mut rng = Rng::new(1);
+
+    // SCNN3 conv2-sized standard layer.
+    let l = layer(ConvMode::Standard, 16, 32, 28, 1);
+    let w = ConvWeights::random(&l, 2);
+    let input = SpikeFrame::random(28, 28, 16, 0.2, &mut rng);
+    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+    let r = set.run("standard 28x28 16->32 (scnn3 conv2)", || {
+        std::hint::black_box(eng.run_frame(&input, true));
+    });
+    let ops = 28 * 28 * 32 * 16 * 9u64;
+    println!("    -> sim rate {:.1} M synaptic ops/s wall",
+             ops as f64 / (r.median_ns / 1e9) / 1e6);
+
+    // SCNN5 conv2-sized layer (the heavyweight).
+    let l = layer(ConvMode::Standard, 64, 128, 16, 4);
+    let w = ConvWeights::random(&l, 3);
+    let input = SpikeFrame::random(16, 16, 64, 0.15, &mut rng);
+    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+    let r = set.run("standard 16x16 64->128 p4 (scnn5 conv2)", || {
+        std::hint::black_box(eng.run_frame(&input, true));
+    });
+    let ops = 16 * 16 * 128 * 64 * 9u64;
+    println!("    -> sim rate {:.1} M synaptic ops/s wall",
+             ops as f64 / (r.median_ns / 1e9) / 1e6);
+
+    // Depthwise + pointwise (vMobileNet block).
+    let l = layer(ConvMode::Depthwise, 32, 32, 14, 1);
+    let w = ConvWeights::random(&l, 4);
+    let input = SpikeFrame::random(14, 14, 32, 0.25, &mut rng);
+    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+    set.run("depthwise 14x14 c32", || {
+        std::hint::black_box(eng.run_frame(&input, true));
+    });
+
+    let l = layer(ConvMode::Pointwise, 32, 64, 14, 1);
+    let w = ConvWeights::random(&l, 5);
+    let input = SpikeFrame::random(14, 14, 32, 0.25, &mut rng);
+    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+    set.run("pointwise 14x14 32->64", || {
+        std::hint::black_box(eng.run_frame(&input, true));
+    });
+}

@@ -1,0 +1,58 @@
+//! Dataflow explorer: sweep timesteps and parallel factors to see the
+//! OS-dataflow trade-offs the paper analyses (SectionII-C, SectionIV-E.2).
+//!
+//! ```bash
+//! cargo run --release --example dataflow_explorer [-- --model scnn5]
+//! ```
+
+use sti_snn::arch;
+use sti_snn::coordinator::scheduler;
+use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::sim::cycles_to_ms;
+use sti_snn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get_str("model", "scnn5");
+    let net = arch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+
+    // --- OS vs WS access counts across timesteps (Table I trend) ------
+    println!("== OS vs WS total memory accesses vs timesteps ({name}) ==");
+    println!("{:>3} {:>18} {:>18} {:>10}", "T", "OS total", "WS total",
+             "OS/WS");
+    for t in [1u64, 2, 4, 6] {
+        let (mut os_tot, mut ws_tot) = (0u64, 0u64);
+        for c in net.accel_convs() {
+            os_tot += dataflow::os_access(c, t).total();
+            ws_tot += dataflow::ws_access(c, t).total();
+        }
+        println!("{t:>3} {os_tot:>18} {ws_tot:>18} {:>10.3}",
+                 os_tot as f64 / ws_tot as f64);
+    }
+
+    // --- Line-buffer reduction per layer (Table III) -------------------
+    println!("\n== line buffer + spike-vector input-access reduction ==");
+    for (i, c) in net.accel_convs().iter().enumerate() {
+        println!("conv{}: {:.0}x fewer off-chip input reads",
+                 i + 1, dataflow::access::input_access_reduction(c, 1));
+    }
+
+    // --- PE budget sweep (the scheduler's latency/area frontier) -------
+    println!("\n== parallel-factor optimiser: PE budget sweep ==");
+    println!("{:>8} {:>20} {:>10}", "budget", "factors", "t_max ms");
+    let timing = ConvLatencyParams::optimized();
+    let min_pes: usize =
+        net.accel_convs().iter().map(|c| c.kh * c.kw).sum();
+    let budgets: Vec<usize> =
+        [1, 2, 3, 4, 8, 16].iter().map(|m| min_pes * m).collect();
+    for choice in scheduler::budget_sweep(&net, &budgets, &timing) {
+        println!("{:>8} {:>20} {:>10.3}",
+                 choice.pes, format!("{:?}", choice.factors),
+                 cycles_to_ms(choice.t_max));
+    }
+
+    println!("\n(the paper's hand-picked profiles — SCNN3 (4,2) @ 54 PEs, \
+              SCNN5 (4,4,2,1) @ 99 PEs — sit on this frontier)");
+    Ok(())
+}

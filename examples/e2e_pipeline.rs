@@ -1,0 +1,179 @@
+//! End-to-end driver (the DESIGN.md validation workload).
+//!
+//! Proves all three layers compose on a real small workload:
+//!
+//!   1. Load the **trained + quantised** SCNN3 artifacts built by the
+//!      python compile path (`make artifacts`): net.json, int8 weights,
+//!      and the AOT HLO graphs lowered from the jax model whose layers
+//!      are the L1 Pallas kernels.
+//!   2. Generate a held-out synthetic-MNIST test set (same generator +
+//!      held-out seed as training).
+//!   3. For every image: run the PJRT **encoder** graph (L2/L1) to get
+//!      the input spike frame, then push it through the cycle-level
+//!      **simulator pipeline** (L3) for the class prediction — and run
+//!      the PJRT **full-model** graph as the functional reference.
+//!   4. Report: accuracy (sim vs reference vs labels), agreement rate,
+//!      and the Table-IV row (FPS / GOPS / W / GOPS/W/PE) for this
+//!      design point.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::metrics::PerfRow;
+use sti_snn::model::Artifact;
+use sti_snn::runtime::{artifacts_dir, Runtime};
+use sti_snn::sim::{EnergyModel, CLK_HZ};
+use sti_snn::util::cli::Args;
+use sti_snn::util::rng::Rng;
+
+/// Synthetic-MNIST glyph generator — a rust port of
+/// `python/compile/data.py::synth_mnist` (seven-segment digit strokes
+/// with affine jitter + noise). Shares the class structure, not the
+/// exact pixels: the e2e claim is that the *trained model* classifies
+/// freshly-drawn samples, end to end, through the accelerator.
+mod synth {
+    use super::Rng;
+
+    const SEGS: [((f64, f64), (f64, f64)); 7] = [
+        ((0.25, 0.20), (0.75, 0.20)), // a: top
+        ((0.75, 0.20), (0.75, 0.50)), // b: top-right
+        ((0.75, 0.50), (0.75, 0.80)), // c: bottom-right
+        ((0.25, 0.80), (0.75, 0.80)), // d: bottom
+        ((0.25, 0.50), (0.25, 0.80)), // e: bottom-left
+        ((0.25, 0.20), (0.25, 0.50)), // f: top-left
+        ((0.25, 0.50), (0.75, 0.50)), // g: middle
+    ];
+    const DIGIT_SEGS: [&str; 10] = [
+        "abcdef", "bc", "abged", "abgcd", "fgbc", "afgcd", "afgedc",
+        "abc", "abcdefg", "abcdfg",
+    ];
+
+    fn seg_index(c: char) -> usize {
+        (c as u8 - b'a') as usize
+    }
+
+    pub fn glyph(digit: usize, rng: &mut Rng, size: usize) -> Vec<f32> {
+        let mut img = vec![0f32; size * size];
+        let tx = rng.f64() * 0.16 - 0.08;
+        let ty = rng.f64() * 0.16 - 0.08;
+        let sc = 0.9 + rng.f64() * 0.2;
+        let shear = rng.f64() * 0.24 - 0.12;
+        let width = 0.05 + rng.f64() * 0.04;
+        let jmap = |x: f64, y: f64| -> (f64, f64) {
+            let (x, y) = ((x - 0.5) * sc + 0.5, (y - 0.5) * sc + 0.5);
+            (x + shear * (y - 0.5) + tx, y + ty)
+        };
+        for ch in DIGIT_SEGS[digit % 10].chars() {
+            let ((x0, y0), (x1, y1)) = SEGS[seg_index(ch)];
+            let p0 = jmap(x0, y0);
+            let p1 = jmap(x1, y1);
+            draw(&mut img, size, p0, p1, width);
+        }
+        // Gaussian-ish noise from the PRNG (sum of uniforms).
+        for v in img.iter_mut() {
+            let n: f64 = (0..4).map(|_| rng.f64()).sum::<f64>() / 2.0 - 1.0;
+            *v = (*v + 0.08 * n as f32).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    fn draw(img: &mut [f32], size: usize, p0: (f64, f64), p1: (f64, f64),
+            width: f64) {
+        let (x0, y0) = p0;
+        let (dx, dy) = (p1.0 - x0, p1.1 - y0);
+        let len2 = dx * dx + dy * dy + 1e-12;
+        for yy in 0..size {
+            for xx in 0..size {
+                let x = (xx as f64 + 0.5) / size as f64;
+                let y = (yy as f64 + 0.5) / size as f64;
+                let t = (((x - x0) * dx + (y - y0) * dy) / len2)
+                    .clamp(0.0, 1.0);
+                let (px, py) = (x0 + t * dx, y0 + t * dy);
+                let d = ((x - px).powi(2) + (y - py).powi(2)).sqrt();
+                let stroke = (1.0 - d / width).clamp(0.0, 1.0) as f32;
+                let i = yy * size + xx;
+                img[i] = img[i].max(stroke);
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get_str("model", "scnn3");
+    let n_samples = args.get_usize("samples", 64);
+
+    // --- 1. Load artifacts ---------------------------------------------
+    let dir = artifacts_dir().join(model);
+    let art = Artifact::load(&dir).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nrun `make artifacts` first")
+    })?;
+    println!("loaded artifact {} (input {:?}, T={})",
+             art.net.name, art.net.input, art.timesteps);
+
+    let mut rt = Runtime::new()?;
+    rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input)?;
+    rt.load_hlo("model", &art.model_hlo(), art.net.input)?;
+    println!("PJRT platform: {} | encoder + full-model HLO compiled",
+             rt.platform());
+
+    let mut pipe = Pipeline::new(art.net.clone(), PipelineConfig::default(),
+                                 art.layer_params()?)?;
+    let enc_shape = art.encoder_out_shape();
+
+    // --- 2. Held-out synthetic test set --------------------------------
+    let mut rng = Rng::new(777);
+    let samples: Vec<(usize, Vec<f32>)> = (0..n_samples)
+        .map(|_| {
+            let digit = rng.below(10);
+            (digit, synth::glyph(digit, &mut rng, art.net.input.0))
+        })
+        .collect();
+
+    // --- 3. Run every sample through all three layers ------------------
+    let mut sim_correct = 0;
+    let mut ref_correct = 0;
+    let mut agree = 0;
+    let mut last_rep = None;
+    for (label, image) in &samples {
+        let frame = rt.encode("encoder", image, enc_shape)?;
+        let rep = pipe.run(std::slice::from_ref(&frame));
+        let sim_class = rep.predictions[0];
+
+        let logits = rt.logits("model", image)?;
+        let ref_class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+
+        sim_correct += usize::from(sim_class == *label);
+        ref_correct += usize::from(ref_class == *label);
+        agree += usize::from(sim_class == ref_class);
+        last_rep = Some(rep);
+    }
+
+    let n = samples.len() as f64;
+    println!("\n=== end-to-end results ({n} held-out samples) ===");
+    println!("simulator accuracy:       {:.1}%",
+             100.0 * sim_correct as f64 / n);
+    println!("PJRT reference accuracy:  {:.1}%",
+             100.0 * ref_correct as f64 / n);
+    println!("sim vs reference agree:   {:.1}%  (int8 PE array vs \
+              fake-quant float graph)", 100.0 * agree as f64 / n);
+
+    // --- 4. Table-IV row for this design point --------------------------
+    let rep = last_rep.expect("at least one sample");
+    let fps = CLK_HZ / rep.t_max as f64;
+    let power = EnergyModel::default().avg_power(
+        rep.dynamic_energy_per_frame_j(), fps, rep.pes,
+        rep.resources.bram36);
+    let row = PerfRow::new(&format!("e2e {model}"), rep.t_max as f64,
+                           art.net.ops_per_frame(), power, rep.pes.max(1));
+    println!("\n{}", PerfRow::header());
+    println!("{row}");
+    Ok(())
+}

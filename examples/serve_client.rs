@@ -1,0 +1,47 @@
+//! Serving demo client (paper Fig. 10's host side).
+//!
+//! Start the server first:
+//! ```bash
+//! cargo run --release -- serve --model scnn3 --addr 127.0.0.1:7878
+//! ```
+//! then:
+//! ```bash
+//! cargo run --release --example serve_client -- --addr 127.0.0.1:7878
+//! ```
+
+use sti_snn::server::Client;
+use sti_snn::util::cli::Args;
+use sti_snn::util::json::Json;
+use sti_snn::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let n = args.get_usize("requests", 8);
+    let pixels = args.get_usize("pixels", 28 * 28);
+
+    let mut client = Client::connect(addr)?;
+    let mut rng = Rng::new(1);
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let image: Vec<f32> = (0..pixels).map(|_| rng.f32()).collect();
+        let resp = client.infer(i as u64, &image)?;
+        match resp.get("class") {
+            Some(c) => println!("request {i}: class {} ({} us)",
+                                c, resp.get("latency_us")
+                                    .and_then(|l| l.as_f64())
+                                    .unwrap_or(0.0)),
+            None => println!("request {i}: error {:?}",
+                             resp.get("error")),
+        }
+    }
+    let dt = t0.elapsed();
+    println!("\n{n} requests in {:.1} ms ({:.1} req/s)",
+             dt.as_secs_f64() * 1e3, n as f64 / dt.as_secs_f64());
+
+    let stats = client.request(&Json::obj(vec![
+        ("cmd", Json::str("stats")),
+    ]))?;
+    println!("server stats: {stats}");
+    Ok(())
+}

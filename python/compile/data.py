@@ -1,0 +1,153 @@
+"""Synthetic image-classification datasets (offline substitute).
+
+The paper evaluates on MNIST / CIFAR10 / CIFAR100 / Tiny ImageNet.  This
+environment has no network access, so we procedurally generate datasets
+of the same shapes and a comparable task character (DESIGN.md
+Substitutions):
+
+  * ``synth_mnist``  — 28x28x1, 10 classes: parametric digit-like stroke
+    glyphs with random affine jitter, stroke-width variation and noise.
+  * ``synth_cifar``  — 32x32x3, ``n_classes`` classes: colored oriented
+    texture/shape compositions with per-sample color jitter and noise.
+
+The claims under reproduction (SDT accuracy collapse at T=1, TET/SFR
+stability, fine-tuning recovery) are about *training dynamics*, which
+these tasks exercise; absolute accuracies are not comparable to the
+paper's and are reported as such in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Digit-like glyphs: 7-segment-style strokes on a 28x28 canvas
+# ---------------------------------------------------------------------------
+
+# Segment layout (like a 7-seg display), in normalised canvas coords:
+#   a: top bar, b: top-right col, c: bottom-right col, d: bottom bar,
+#   e: bottom-left col, f: top-left col, g: middle bar
+_SEGS = {
+    "a": ((0.25, 0.20), (0.75, 0.20)),
+    "b": ((0.75, 0.20), (0.75, 0.50)),
+    "c": ((0.75, 0.50), (0.75, 0.80)),
+    "d": ((0.25, 0.80), (0.75, 0.80)),
+    "e": ((0.25, 0.50), (0.25, 0.80)),
+    "f": ((0.25, 0.20), (0.25, 0.50)),
+    "g": ((0.25, 0.50), (0.75, 0.50)),
+}
+
+_DIGIT_SEGS = {
+    0: "abcdef", 1: "bc", 2: "abged", 3: "abgcd", 4: "fgbc",
+    5: "afgcd", 6: "afgedc", 7: "abc", 8: "abcdefg", 9: "abcdfg",
+}
+
+
+def _draw_segment(img: np.ndarray, p0, p1, width: float):
+    """Rasterise a thick line segment onto img (in-place, max-blend)."""
+    h, w = img.shape
+    ys, xs = np.mgrid[0:h, 0:w]
+    xs = (xs + 0.5) / w
+    ys = (ys + 0.5) / h
+    (x0, y0), (x1, y1) = p0, p1
+    dx, dy = x1 - x0, y1 - y0
+    seg_len2 = dx * dx + dy * dy + 1e-12
+    t = np.clip(((xs - x0) * dx + (ys - y0) * dy) / seg_len2, 0.0, 1.0)
+    px, py = x0 + t * dx, y0 + t * dy
+    dist = np.sqrt((xs - px) ** 2 + (ys - py) ** 2)
+    stroke = np.clip(1.0 - dist / width, 0.0, 1.0)
+    np.maximum(img, stroke, out=img)
+
+
+def _glyph(digit: int, rng: np.random.Generator, size: int = 28) -> np.ndarray:
+    img = np.zeros((size, size), np.float32)
+    # Random affine jitter: translate +-8%, scale 90-110%, shear.
+    tx, ty = rng.uniform(-0.08, 0.08, 2)
+    sc = rng.uniform(0.9, 1.1)
+    shear = rng.uniform(-0.12, 0.12)
+    width = rng.uniform(0.05, 0.09)
+    for seg in _DIGIT_SEGS[digit % 10]:
+        (x0, y0), (x1, y1) = _SEGS[seg]
+
+        def jmap(x, y):
+            x, y = (x - 0.5) * sc + 0.5, (y - 0.5) * sc + 0.5
+            return (x + shear * (y - 0.5) + tx, y + ty)
+
+        _draw_segment(img, jmap(x0, y0), jmap(x1, y1), width)
+    img += rng.normal(0, 0.08, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def synth_mnist(n: int, seed: int = 0, n_classes: int = 10):
+    """Generate (images (n,28,28,1) float32 in [0,1], labels (n,) int32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=n).astype(np.int32)
+    imgs = np.stack([_glyph(int(c), rng) for c in labels])[..., None]
+    return imgs.astype(np.float32), labels
+
+
+# ---------------------------------------------------------------------------
+# CIFAR-like: colored oriented textures, 32x32x3
+# ---------------------------------------------------------------------------
+
+def _texture(cls: int, rng: np.random.Generator, size: int = 32,
+             n_classes: int = 10) -> np.ndarray:
+    """Class = (orientation, frequency, hue) triple with jitter."""
+    ys, xs = np.mgrid[0:size, 0:size] / size
+    theta = (cls % 5) * (np.pi / 5) + rng.normal(0, 0.08)
+    freq = 3.0 + 2.0 * (cls // 5) + rng.normal(0, 0.2)
+    phase = rng.uniform(0, 2 * np.pi)
+    wave = 0.5 + 0.5 * np.sin(
+        2 * np.pi * freq * (xs * np.cos(theta) + ys * np.sin(theta)) + phase)
+    # Class-keyed hue with jitter.
+    base_hue = (cls / n_classes + rng.normal(0, 0.02)) % 1.0
+    rgb = np.stack([
+        wave * (0.5 + 0.5 * np.cos(2 * np.pi * (base_hue + k / 3.0)))
+        for k in range(3)
+    ], axis=-1).astype(np.float32)
+    # A class-dependent blob (shape cue) on top.
+    cx, cy = rng.uniform(0.3, 0.7, 2)
+    r = 0.12 + 0.05 * ((cls * 7) % 3)
+    blob = np.exp(-(((xs - cx) ** 2 + (ys - cy) ** 2) / (r * r)))
+    rgb += 0.4 * blob[..., None]
+    rgb += rng.normal(0, 0.06, rgb.shape).astype(np.float32)
+    return np.clip(rgb, 0.0, 1.0)
+
+
+def synth_cifar(n: int, seed: int = 0, n_classes: int = 10):
+    """Generate (images (n,32,32,3) float32 in [0,1], labels (n,) int32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=n).astype(np.int32)
+    imgs = np.stack([_texture(int(c), rng, n_classes=n_classes)
+                     for c in labels])
+    return imgs.astype(np.float32), labels
+
+
+# ---------------------------------------------------------------------------
+# Dataset registry + batching
+# ---------------------------------------------------------------------------
+
+DATASETS = {
+    "synth-mnist": (synth_mnist, (28, 28, 1), 10),
+    "synth-cifar10": (synth_cifar, (32, 32, 3), 10),
+    "synth-cifar100": (
+        lambda n, seed=0: synth_cifar(n, seed, n_classes=100),
+        (32, 32, 3), 100),
+}
+
+
+def load(name: str, n_train: int, n_test: int, seed: int = 0):
+    """Return ((x_train, y_train), (x_test, y_test), input_shape, classes)."""
+    gen, shape, n_classes = DATASETS[name]
+    xtr, ytr = gen(n_train, seed=seed)
+    xte, yte = gen(n_test, seed=seed + 10_000)
+    return (xtr, ytr), (xte, yte), shape, n_classes
+
+
+def batches(x: np.ndarray, y: np.ndarray, batch_size: int,
+            rng: np.random.Generator):
+    """Shuffled minibatch iterator (drops the ragged tail)."""
+    idx = rng.permutation(len(x))
+    for i in range(0, len(x) - batch_size + 1, batch_size):
+        sel = idx[i:i + batch_size]
+        yield x[sel], y[sel]

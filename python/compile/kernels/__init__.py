@@ -1,0 +1,8 @@
+"""STI-SNN Layer-1 Pallas kernels and their pure-jnp oracles.
+
+Every kernel runs with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is pinned to ``ref`` by the pytest
+suite in ``python/tests/``.
+"""
+
+from . import dsc, fc, lif, pooling, ref, spike_conv  # noqa: F401

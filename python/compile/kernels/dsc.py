@@ -1,0 +1,157 @@
+"""Pallas kernels: depthwise-separable convolution modes (paper Fig. 8c/d).
+
+STI-SNN's multi-mode PE supports depthwise and pointwise convolution by
+reconfiguring the dataflow (SectionIV-D).  The same reconfiguration happens
+here at the kernel level:
+
+  * **Depthwise** — no cross-channel accumulation; the PE "directly
+    outputs the loaded weight upon receiving a spike" (Fig. 8c).  The
+    MXU matmul of the standard mode degenerates into an elementwise
+    (VPU) multiply-accumulate over taps, lane dimension = channels.
+  * **Pointwise** — 1x1 filters; the spike-generation module skips the
+    cross-PE psum adder tree and thresholds PE outputs directly
+    (Fig. 8d).  Kernel = one (W,Ci)@(Ci,Co) matmul per row, no taps.
+
+Both use the same output-stationary structure as ``spike_conv``: one
+output row resident in VMEM per grid step; ``interpret=True`` throughout
+(CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spike_conv import line_buffer_view
+
+
+def _dw_row_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, wo: int):
+    """Depthwise: per-channel tap accumulation, no channel reduction.
+
+    x_ref: (1, Kh, Wi_pad, C); w_ref: (Kh, Kw, C); o_ref: (1, Wo, C).
+    """
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            # Spike-gated weight pass-through (Fig. 8c): with binary
+            # spikes, x * w is "output the weight iff a spike arrived".
+            acc = acc + x_ref[0, i, j:j + wo, :] * w_ref[i, j][None, :]
+    o_ref[0, :, :] = acc
+
+
+def depthwise_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+                   padding: int = 1) -> jnp.ndarray:
+    """Depthwise-convolution partial sums.
+
+    Args:
+      spikes:  (H, W, C) float {0,1}.
+      weights: (Kh, Kw, C) float.
+
+    Returns: (Ho, Wo, C) float32.
+    """
+    kh, kw, c = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    xlb = line_buffer_view(x, kh)
+
+    kern = functools.partial(_dw_row_kernel, kh=kh, kw=kw, wo=wo)
+    return pl.pallas_call(
+        kern,
+        grid=(ho,),
+        in_specs=[
+            pl.BlockSpec((1, kh, w, c), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, wo, c), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xlb, weights)
+
+
+def depthwise_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray,
+                       vth: float, padding: int = 1) -> jnp.ndarray:
+    """Depthwise conv + IF fire at T=1 (no vmem register needed at all —
+    paper SectionIV-D: "a membrane potential register is not required")."""
+    kh, kw, c = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    xlb = line_buffer_view(x, kh)
+
+    def kern(x_ref, w_ref, o_ref):
+        acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+        for i in range(kh):
+            for j in range(kw):
+                acc = acc + x_ref[0, i, j:j + wo, :] * w_ref[i, j][None, :]
+        o_ref[0, :, :] = (acc >= vth).astype(jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=(ho,),
+        in_specs=[
+            pl.BlockSpec((1, kh, w, c), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, wo, c), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xlb, weights)
+
+
+def pointwise_psum(spikes: jnp.ndarray,
+                   weights: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise (1x1) convolution partial sums.
+
+    Args:
+      spikes:  (H, W, Ci) float {0,1}.
+      weights: (Ci, Co) float.
+
+    Returns: (H, W, Co) float32.
+    """
+    h, w, ci = spikes.shape
+    co = weights.shape[1]
+
+    def kern(x_ref, w_ref, o_ref):
+        o_ref[0, :, :] = jnp.dot(x_ref[0], w_ref[...],
+                                 preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, w, ci), lambda r: (r, 0, 0)),
+            pl.BlockSpec((ci, co), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, co), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, co), jnp.float32),
+        interpret=True,
+    )(spikes, weights)
+
+
+def pointwise_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray,
+                       vth: float) -> jnp.ndarray:
+    """Pointwise conv + IF fire at T=1 (Fig. 8d: threshold PE outputs
+    directly, no psum adder tree)."""
+    h, w, ci = spikes.shape
+    co = weights.shape[1]
+
+    def kern(x_ref, w_ref, o_ref):
+        acc = jnp.dot(x_ref[0], w_ref[...],
+                      preferred_element_type=jnp.float32)
+        o_ref[0, :, :] = (acc >= vth).astype(jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, w, ci), lambda r: (r, 0, 0)),
+            pl.BlockSpec((ci, co), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, co), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, co), jnp.float32),
+        interpret=True,
+    )(spikes, weights)

@@ -1,0 +1,44 @@
+"""Pallas kernel: spike-gated fully-connected layer (classifier head).
+
+The FC layer receives the flattened, channel-sorted spike vector of the
+last feature map and produces class logits (= the output neurons'
+membrane potentials; the classifier never fires, the argmax of the
+accumulated potential is the prediction — standard direct-encoding SNN
+head, and what the FPGA's final layer computes).
+
+With binary spikes the matvec is a gather-accumulate over the rows of W
+whose spike bit is set — the FPGA implements it exactly that way; the
+MXU sees a (1, In) @ (In, Out) matmul.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fc_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+            bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Spike-gated FC: (In,) x (In, Out) [+ (Out,)] -> (Out,)."""
+    n_in, n_out = weights.shape
+    b = jnp.zeros((n_out,), jnp.float32) if bias is None else bias
+
+    def kern(s_ref, w_ref, b_ref, o_ref):
+        o_ref[...] = (
+            jnp.dot(s_ref[...][None, :], w_ref[...],
+                    preferred_element_type=jnp.float32)[0]
+            + b_ref[...]
+        )
+
+    return pl.pallas_call(
+        kern,
+        in_specs=[
+            pl.BlockSpec((n_in,), lambda: (0,)),
+            pl.BlockSpec((n_in, n_out), lambda: (0, 0)),
+            pl.BlockSpec((n_out,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_out,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.float32),
+        interpret=True,
+    )(spikes, weights, b)

@@ -1,0 +1,71 @@
+"""Pallas kernels: IF / LIF neuron update (paper SectionII-A, Eq. (2)-(4)).
+
+The neuron module of the accelerator (Fig. 5 "Neuron"): take the CU's
+partial sums, update the membrane potential, compare against the
+threshold, fire and hard-reset.  In multi-timestep mode the updated
+membrane potential is written back to the Vmem buffer (the memory traffic
+that T=1 eliminates); at T=1 callers should prefer the fused
+``*_if_fused`` kernels in ``spike_conv``/``dsc`` which never materialise
+vmem at all.
+
+Elementwise → VPU work; lane dimension = channels; ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _neuron_kernel(p_ref, v_ref, s_out, v_out, *, vth: float, leak: float):
+    """Integrate-fire-reset on one row of neurons.
+
+    p_ref, v_ref: (1, W, C) psums and previous membrane potentials.
+    s_out, v_out: (1, W, C) output spikes and updated potentials.
+    """
+    v = leak * v_ref[...] + p_ref[...]
+    spk = (v >= vth).astype(jnp.float32)
+    s_out[...] = spk
+    # Hard reset to u_r = 0 (paper Eq. (4) with u_r = 0).
+    v_out[...] = jnp.where(spk > 0, 0.0, v)
+
+
+def _run(psum: jnp.ndarray, vmem: jnp.ndarray, vth: float, leak: float):
+    h, w, c = psum.shape
+
+    import functools
+    kern = functools.partial(_neuron_kernel, vth=vth, leak=leak)
+    return pl.pallas_call(
+        kern,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, w, c), lambda r: (r, 0, 0)),
+            pl.BlockSpec((1, w, c), lambda r: (r, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w, c), lambda r: (r, 0, 0)),
+            pl.BlockSpec((1, w, c), lambda r: (r, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+            jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        ],
+        interpret=True,
+    )(psum, vmem)
+
+
+def if_step(psum: jnp.ndarray, vmem: jnp.ndarray, vth: float,
+            bias: jnp.ndarray | None = None):
+    """IF neuron step on (H, W, C) maps. Returns (spikes, new_vmem)."""
+    if bias is not None:
+        psum = psum + bias[None, None, :]
+    return _run(psum, vmem, vth, leak=1.0)
+
+
+def lif_step(psum: jnp.ndarray, vmem: jnp.ndarray, vth: float, leak: float,
+             bias: jnp.ndarray | None = None):
+    """LIF neuron step (leak = 1 - 1/tau_m). Returns (spikes, new_vmem)."""
+    if bias is not None:
+        psum = psum + bias[None, None, :]
+    return _run(psum, vmem, vth, leak=leak)

@@ -1,0 +1,42 @@
+"""Pallas kernel: 2x2 stride-2 OR pooling (paper Fig. 7b).
+
+The FPGA implements pooling as a logical OR across a 2x2 spike window,
+staged through the line buffer + two register rows.  On binary {0,1}
+spike maps OR == max, which is what the kernel computes; the grid walks
+output rows and each step consumes two input rows — the two register
+rows of Fig. 7(b).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, wo: int):
+    """x_ref: (2, W, C) two input rows; o_ref: (1, Wo, C)."""
+    top = x_ref[0]                       # (W, C)
+    bot = x_ref[1]
+    rows = jnp.maximum(top, bot)         # vertical OR (register1 | register2)
+    left = rows[0::2, :][:wo]            # even columns
+    right = rows[1::2, :][:wo]           # odd columns
+    o_ref[0, :, :] = jnp.maximum(left, right)   # horizontal OR
+
+
+def or_pool2(spikes: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 OR pooling: (H, W, C) -> (H//2, W//2, C), H, W even."""
+    h, w, c = spikes.shape
+    assert h % 2 == 0 and w % 2 == 0, "or_pool2 requires even H and W"
+    ho, wo = h // 2, w // 2
+
+    import functools
+    kern = functools.partial(_pool_kernel, wo=wo)
+    return pl.pallas_call(
+        kern,
+        grid=(ho,),
+        in_specs=[pl.BlockSpec((2, w, c), lambda r: (r, 0, 0))],
+        out_specs=pl.BlockSpec((1, wo, c), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.float32),
+        interpret=True,
+    )(spikes)

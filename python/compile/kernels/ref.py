@@ -1,0 +1,178 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: each Pallas kernel in
+``spike_conv.py`` / ``dsc.py`` / ``lif.py`` / ``pooling.py`` / ``fc.py``
+must match its oracle bit-for-bit (binary spike outputs) or to float
+tolerance (membrane potentials / partial sums).
+
+Conventions (shared with the Rust simulator, see rust/src/arch/):
+  * Feature maps are ``(H, W, C)`` — channel-last, so one pixel's spike
+    vector (all C channels, channel-sorted) is contiguous.  This is the
+    paper's "compressed and sorted spike representation" (SectionIV-C): memory
+    layout makes a single access fetch the whole spike vector.
+  * Spikes are float32 tensors holding exactly {0.0, 1.0}.
+  * Conv weights are ``(Kh, Kw, Ci, Co)``; depthwise ``(Kh, Kw, C)``;
+    pointwise ``(Ci, Co)``; FC ``(In, Out)``.
+  * Convolutions are the paper's: stride 1, symmetric zero padding,
+    accumulation over input channels (standard mode only).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Convolution partial sums (the CU in paper Fig. 5/6)
+# ---------------------------------------------------------------------------
+
+def conv2d_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+                padding: int = 1) -> jnp.ndarray:
+    """Standard-convolution partial sums.
+
+    Args:
+      spikes:  (H, W, Ci) float {0,1}.
+      weights: (Kh, Kw, Ci, Co) float.
+      padding: symmetric zero padding on H and W.
+
+    Returns:
+      (Ho, Wo, Co) partial sums with Ho = H + 2p - Kh + 1 (stride 1).
+    """
+    kh, kw, ci, co = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    out = jnp.zeros((ho, wo, co), dtype=jnp.float32)
+    # Tap-by-tap accumulation — mirrors the weight-broadcast order of the
+    # OS dataflow (paper Fig. 6(c)): for each kernel tap the whole output
+    # plane accumulates spike-gated weights.
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[i:i + ho, j:j + wo, :]            # (Ho, Wo, Ci)
+            out = out + jnp.einsum(
+                "hwc,co->hwo", patch, weights[i, j],    # (Ci, Co)
+                preferred_element_type=jnp.float32)
+    return out
+
+
+def depthwise_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+                   padding: int = 1) -> jnp.ndarray:
+    """Depthwise-convolution partial sums (paper Fig. 8(c)).
+
+    No cross-channel accumulation: channel c of the output only sees
+    channel c of the input.
+
+    Args:
+      spikes:  (H, W, C) float {0,1}.
+      weights: (Kh, Kw, C) float.
+    """
+    kh, kw, c = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    out = jnp.zeros((ho, wo, c), dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            out = out + x[i:i + ho, j:j + wo, :] * weights[i, j][None, None, :]
+    return out
+
+
+def pointwise_psum(spikes: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Pointwise (1x1) convolution partial sums (paper Fig. 8(d)).
+
+    Args:
+      spikes:  (H, W, Ci) float {0,1}.
+      weights: (Ci, Co) float.
+    """
+    return jnp.einsum("hwc,co->hwo", spikes, weights,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Neuron dynamics (paper Section II-A, Eq. (2)-(4))
+# ---------------------------------------------------------------------------
+
+def if_step(psum: jnp.ndarray, vmem: jnp.ndarray, vth: float,
+            bias: jnp.ndarray | None = None):
+    """One IF-neuron timestep: integrate, fire, hard reset-to-zero.
+
+    The accelerator implements IF neurons (paper Table V "Neuron Type:
+    IF"); LIF with leak is `lif_step`.
+
+    Returns (spikes, new_vmem).
+    """
+    cur = psum if bias is None else psum + bias
+    v = vmem + cur
+    spk = (v >= vth).astype(jnp.float32)
+    v_next = jnp.where(spk > 0, 0.0, v)
+    return spk, v_next
+
+
+def lif_step(psum: jnp.ndarray, vmem: jnp.ndarray, vth: float,
+             leak: float, bias: jnp.ndarray | None = None):
+    """One LIF timestep, Eq. (3)-(4): v <- leak*v + I; fire & hard reset.
+
+    ``leak`` is (1 - 1/tau_m).
+    """
+    cur = psum if bias is None else psum + bias
+    v = leak * vmem + cur
+    spk = (v >= vth).astype(jnp.float32)
+    v_next = jnp.where(spk > 0, 0.0, v)
+    return spk, v_next
+
+
+# ---------------------------------------------------------------------------
+# Pooling (paper Fig. 7(b): logical-OR over a 2x2 window)
+# ---------------------------------------------------------------------------
+
+def or_pool2(spikes: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 OR pooling on binary spike maps.
+
+    (H, W, C) -> (H//2, W//2, C); H and W must be even.
+    """
+    h, w, c = spikes.shape
+    x = spikes.reshape(h // 2, 2, w // 2, 2, c)
+    return jnp.max(jnp.max(x, axis=3), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fully-connected (classifier head)
+# ---------------------------------------------------------------------------
+
+def fc_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+            bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Spike-gated fully-connected partial sums.
+
+    Args:
+      spikes:  (In,) float {0,1} — flattened channel-last feature map.
+      weights: (In, Out) float.
+    """
+    out = spikes @ weights
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused layers — what the T=1 hardware actually does (OS dataflow: psum is
+# thresholded inside the PE, membrane potential never leaves the register).
+# ---------------------------------------------------------------------------
+
+def conv_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray, vth: float,
+                  padding: int = 1, bias: jnp.ndarray | None = None):
+    """Standard conv + IF fire at T=1 (zero-initialised vmem, discarded)."""
+    psum = conv2d_psum(spikes, weights, padding)
+    if bias is not None:
+        psum = psum + bias
+    return (psum >= vth).astype(jnp.float32)
+
+
+def depthwise_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray, vth: float,
+                       padding: int = 1):
+    psum = depthwise_psum(spikes, weights, padding)
+    return (psum >= vth).astype(jnp.float32)
+
+
+def pointwise_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray, vth: float):
+    psum = pointwise_psum(spikes, weights)
+    return (psum >= vth).astype(jnp.float32)

@@ -1,0 +1,140 @@
+"""Pallas kernel: spike-gated standard convolution in OS dataflow.
+
+This is the compute hot-spot of STI-SNN's convolutional layer (paper
+Fig. 6), re-thought for a TPU-style memory hierarchy instead of the
+paper's FPGA fabric (DESIGN.md "Hardware-Adaptation"):
+
+  * The FPGA keeps one output pixel's membrane potential resident in a PE
+    register while weights stream past (output stationary).  Here the
+    Pallas grid iterates over **output rows**; each grid step keeps one
+    output-row tile ``(Wo, Co)`` resident in VMEM while it accumulates all
+    ``Kh*Kw`` taps — the membrane potential never round-trips to HBM.
+  * The FPGA line buffer (Kh chained FIFOs x Wi x Ci bits, Fig. 7a) is
+    materialised explicitly by ``line_buffer_view``: row r of the view is
+    the Kh-row window the r-th output row's receptive fields need.  The
+    input BlockSpec then fetches exactly that window HBM->VMEM once per
+    output row, reused across all Kw offsets and all Co — the same reuse
+    the FPGA line buffer provides.
+  * The channel-packed spike vector (Fig. 6, SectionIV-C) maps to keeping C
+    innermost (the lane dimension): one VMEM load grabs a whole pixel's
+    spike vector.
+  * Per tap the accumulation is ``spikes(Wo,Ci) @ weights(Ci,Co)`` — with
+    {0,1} spikes the MXU matmul degenerates into exactly the add-network
+    the FPGA PE array implements with adders.
+
+``interpret=True`` always: the CPU PJRT backend cannot run Mosaic
+custom-calls; numerics are validated against ``ref.conv2d_psum``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def line_buffer_view(x: jnp.ndarray, kh: int) -> jnp.ndarray:
+    """(H, W, C) -> (Ho, Kh, W, C): the FPGA line buffer, materialised.
+
+    Row r holds input rows r..r+Kh-1 — the window of ``Kh`` chained FIFOs
+    (each depth W, width C bits) feeding the PE rows in paper Fig. 7(a).
+    XLA lowers this to Kh shifted views; no Kh-fold copy survives fusion
+    into the consuming kernel's gather.
+    """
+    h = x.shape[0]
+    ho = h - kh + 1
+    return jnp.stack([x[i:i + ho] for i in range(kh)], axis=1)
+
+
+def _conv_row_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, wo: int):
+    """One output row: accumulate Kh*Kw spike-gated taps into VMEM.
+
+    x_ref: (1, Kh, Wi_pad, Ci) — line-buffer window for this output row.
+    w_ref: (Kh, Kw, Ci, Co)    — full filter bank (broadcast, Fig. 6c).
+    o_ref: (1, Wo, Co)         — output-stationary accumulator tile.
+    """
+    acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+    # Static unroll over taps: Kh*Kw MXU-shaped matmuls, the accumulator
+    # (the OS membrane potential) resident in registers/VMEM throughout.
+    for i in range(kh):
+        for j in range(kw):
+            patch = x_ref[0, i, j:j + wo, :]        # (Wo, Ci) spike vectors
+            acc = acc + jnp.dot(patch, w_ref[i, j],
+                                preferred_element_type=jnp.float32)
+    o_ref[0, :, :] = acc
+
+
+def conv2d_psum(spikes: jnp.ndarray, weights: jnp.ndarray,
+                padding: int = 1) -> jnp.ndarray:
+    """Standard-convolution partial sums via the OS-dataflow Pallas kernel.
+
+    Args:
+      spikes:  (H, W, Ci) float {0,1}.
+      weights: (Kh, Kw, Ci, Co) float.
+      padding: symmetric zero padding (stride fixed at 1 as in the paper's
+               conv layers; downsampling is done by OR-pooling).
+
+    Returns: (Ho, Wo, Co) float32 partial sums.
+    """
+    kh, kw, ci, co = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    xlb = line_buffer_view(x, kh)                   # (Ho, Kh, W, Ci)
+
+    kern = functools.partial(_conv_row_kernel, kh=kh, kw=kw, wo=wo)
+    return pl.pallas_call(
+        kern,
+        grid=(ho,),
+        in_specs=[
+            pl.BlockSpec((1, kh, w, ci), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda r: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, wo, co), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xlb, weights)
+
+
+def conv_if_fused(spikes: jnp.ndarray, weights: jnp.ndarray, vth: float,
+                  padding: int = 1,
+                  bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fused conv + IF threshold at T=1 (the paper's headline OS win).
+
+    The threshold compare happens on the VMEM-resident accumulator; the
+    membrane potential is *discarded* after the fire decision — exactly
+    the T=1 hardware, where the Vmem buffer is absent (paper Fig. 11).
+    """
+    kh, kw, ci, co = weights.shape
+    x = jnp.pad(spikes, ((padding, padding), (padding, padding), (0, 0)))
+    h, w, _ = x.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    xlb = line_buffer_view(x, kh)
+    b = jnp.zeros((co,), jnp.float32) if bias is None else bias
+
+    def kern(x_ref, w_ref, b_ref, o_ref):
+        acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.float32)
+        for i in range(kh):
+            for j in range(kw):
+                patch = x_ref[0, i, j:j + wo, :]
+                acc = acc + jnp.dot(patch, w_ref[i, j],
+                                    preferred_element_type=jnp.float32)
+        acc = acc + b_ref[:][None, :]
+        # Fire: the neuron module's threshold compare (paper Fig. 8b,
+        # ctrl3) fused into the same kernel — vmem never leaves VMEM.
+        o_ref[0, :, :] = (acc >= vth).astype(jnp.float32)
+
+    return pl.pallas_call(
+        kern,
+        grid=(ho,),
+        in_specs=[
+            pl.BlockSpec((1, kh, w, ci), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, co), lambda r: (0, 0, 0, 0)),
+            pl.BlockSpec((co,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, wo, co), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xlb, weights, b)

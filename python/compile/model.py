@@ -1,0 +1,540 @@
+"""Layer-2: spiking CNN model zoo (STI-SNN algorithm side).
+
+Architecture conventions follow the paper (SectionV-A):
+
+  * **Direct encoding** — the first conv layer receives the analog image
+    every timestep and its IF neurons produce the spike trains ("the
+    first convolution layer is used for spike encoding").
+  * **IF neurons** with hard reset-to-zero and Vth = 1 (Table V).
+  * **OR pooling** (2x2, Fig. 7b) between blocks.
+  * **Classifier head** — the FC output neurons never fire; ``O(t)`` is
+    the head's partial-sum at timestep t (standard direct-training
+    readout; SDT/TET losses consume the per-timestep O(t)).
+
+Each layer has two implementations selected by ``use_pallas``:
+
+  * ``use_pallas=False`` — pure-jnp oracle ops from ``kernels.ref``
+    (differentiable, fast under jit; used for STBP training).
+  * ``use_pallas=True``  — L1 Pallas kernels (``interpret=True``); used
+    when AOT-lowering the T=1 inference graph so the kernels end up in
+    the shipped HLO artifact.
+
+Models (paper SectionV-A):
+  * ``scnn3``      — 28x28: 16c3-32c3-p2-32c3-p2-fc          (MNIST-class)
+  * ``scnn5``      — 32x32: 64c3-p2-128c3-p2-256c3-p2-256c3-p2-512c3-p2-fc
+  * ``vmobilenet`` — 28x28: 16c3-[16dwc3/32c1]-[32dwc3/64c1]-p2-
+                     [64dwc3/64c1]-[64dwc3/128c1]-p2-fc
+                     (pooling inserted to keep the head small; the paper
+                     does not spell out its downsampling — DESIGN.md)
+  * ``vgg_small``  / ``resnet_small`` — scaled-down stand-ins for the
+    paper's VGG16 / ResNet19 accuracy studies (DESIGN.md Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dsc as k_dsc
+from .kernels import fc as k_fc
+from .kernels import pooling as k_pool
+from .kernels import ref
+from .kernels import spike_conv as k_conv
+
+VTH = 1.0  # firing threshold (paper: IF neurons, fixed threshold)
+
+
+# ---------------------------------------------------------------------------
+# Surrogate gradient (SectionII-B): ATan, SpikingJelly's default
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def spike_fn(v: jnp.ndarray) -> jnp.ndarray:
+    """Heaviside(v - VTH) with ATan surrogate gradient (alpha = 2)."""
+    return (v >= VTH).astype(jnp.float32)
+
+
+def _spike_fwd(v):
+    return spike_fn(v), v
+
+
+def _spike_bwd(v, g):
+    alpha = 2.0
+    x = v - VTH
+    sg = alpha / 2.0 / (1.0 + (jnp.pi / 2.0 * alpha * x) ** 2)
+    return (g * sg,)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Layer specs — shared vocabulary with the Rust simulator (rust/src/arch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """Standard conv: co filters of k x k, stride 1, zero pad."""
+    co: int
+    k: int = 3
+    pad: int = 1
+    encoder: bool = False   # True: receives the analog image (no spikes in)
+
+
+@dataclasses.dataclass(frozen=True)
+class DWConv:
+    """Depthwise conv (channel count preserved)."""
+    k: int = 3
+    pad: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PWConv:
+    """Pointwise (1x1) conv."""
+    co: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """2x2 stride-2 OR pooling."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FC:
+    """Classifier head: flatten + linear; output neurons do not fire."""
+    out: int
+
+
+LayerSpec = Any  # Conv | DWConv | PWConv | Pool | FC
+
+
+# ---------------------------------------------------------------------------
+# Model zoo
+# ---------------------------------------------------------------------------
+
+def _scale(c: int, width: float) -> int:
+    return max(4, int(round(c * width)))
+
+
+def scnn3(n_classes: int = 10, width: float = 1.0):
+    s = functools.partial(_scale, width=width)
+    return [
+        Conv(s(16), encoder=True),
+        Conv(s(32)),
+        Pool(),
+        Conv(s(32)),
+        Pool(),
+        FC(n_classes),
+    ]
+
+
+def scnn5(n_classes: int = 10, width: float = 1.0):
+    s = functools.partial(_scale, width=width)
+    return [
+        Conv(s(64), encoder=True), Pool(),
+        Conv(s(128)), Pool(),
+        Conv(s(256)), Pool(),
+        Conv(s(256)), Pool(),
+        Conv(s(512)), Pool(),
+        FC(n_classes),
+    ]
+
+
+def vmobilenet(n_classes: int = 10, width: float = 1.0):
+    s = functools.partial(_scale, width=width)
+    return [
+        Conv(s(16), encoder=True),
+        DWConv(), PWConv(s(32)), Pool(),
+        DWConv(), PWConv(s(64)),
+        DWConv(), PWConv(s(64)), Pool(),
+        DWConv(), PWConv(s(128)),
+        FC(n_classes),
+    ]
+
+
+def vgg_small(n_classes: int = 10, width: float = 1.0):
+    """Scaled-down spiking VGG (stand-in for the paper's VGG16)."""
+    s = functools.partial(_scale, width=width)
+    return [
+        Conv(s(64), encoder=True), Conv(s(64)), Pool(),
+        Conv(s(128)), Conv(s(128)), Pool(),
+        Conv(s(256)), Pool(),
+        FC(n_classes),
+    ]
+
+
+def resnet_small(n_classes: int = 10, width: float = 1.0):
+    """Scaled-down spiking ResNet (stand-in for the paper's ResNet19).
+
+    Residual connections add *partial sums* before the IF neuron (the
+    standard tdBN-style spiking residual): see ``Residual`` handling in
+    the forward pass.
+    """
+    s = functools.partial(_scale, width=width)
+    return [
+        Conv(s(32), encoder=True),
+        Residual(s(32)), Pool(),
+        Residual(s(64)), Pool(),
+        FC(n_classes),
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Residual:
+    """Spiking residual block: IF(conv2(IF(conv1(x))) + proj(x))."""
+    co: int
+    k: int = 3
+
+
+MODELS = {
+    "scnn3": scnn3,
+    "scnn5": scnn5,
+    "vmobilenet": vmobilenet,
+    "vgg_small": vgg_small,
+    "resnet_small": resnet_small,
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(specs, input_shape, seed: int = 0):
+    """He-normal init; returns (params list, per-layer shapes list)."""
+    rng = np.random.default_rng(seed)
+    h, w, c = input_shape
+    params, shapes = [], []
+
+    def he(*shape, fan_in):
+        return jnp.asarray(
+            (rng.normal(size=shape) * np.sqrt(2.0 / fan_in)).astype(
+                np.float32))
+
+    for spec in specs:
+        shapes.append((h, w, c))
+        if isinstance(spec, Conv):
+            fan = spec.k * spec.k * c
+            params.append({
+                "w": he(spec.k, spec.k, c, spec.co, fan_in=fan),
+                "b": jnp.zeros((spec.co,), jnp.float32),
+            })
+            c = spec.co
+        elif isinstance(spec, Residual):
+            fan = spec.k * spec.k * c
+            p = {
+                "w1": he(spec.k, spec.k, c, spec.co, fan_in=fan),
+                "b1": jnp.zeros((spec.co,), jnp.float32),
+                "w2": he(spec.k, spec.k, spec.co, spec.co,
+                         fan_in=spec.k * spec.k * spec.co),
+                "b2": jnp.zeros((spec.co,), jnp.float32),
+            }
+            if spec.co != c:
+                p["wp"] = he(c, spec.co, fan_in=c)
+            params.append(p)
+            c = spec.co
+        elif isinstance(spec, DWConv):
+            params.append({
+                "w": he(spec.k, spec.k, c, fan_in=spec.k * spec.k),
+                "b": jnp.zeros((c,), jnp.float32),
+            })
+        elif isinstance(spec, PWConv):
+            params.append({
+                "w": he(c, spec.co, fan_in=c),
+                "b": jnp.zeros((spec.co,), jnp.float32),
+            })
+            c = spec.co
+        elif isinstance(spec, Pool):
+            params.append({})
+            h, w = h // 2, w // 2
+        elif isinstance(spec, FC):
+            n_in = h * w * c
+            params.append({
+                "w": he(n_in, spec.out, fan_in=n_in),
+                "b": jnp.zeros((spec.out,), jnp.float32),
+            })
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return params, shapes
+
+
+# ---------------------------------------------------------------------------
+# Single-timestep forward (one sample) — returns (O_t, new_states, sfr)
+# ---------------------------------------------------------------------------
+
+def _zeros_states(specs, shapes):
+    """Initial membrane potentials for each spiking layer."""
+    states = []
+    for spec, (h, w, c) in zip(specs, shapes):
+        if isinstance(spec, Conv):
+            states.append(jnp.zeros((h, w, spec.co), jnp.float32))
+        elif isinstance(spec, Residual):
+            states.append((jnp.zeros((h, w, spec.co), jnp.float32),
+                           jnp.zeros((h, w, spec.co), jnp.float32)))
+        elif isinstance(spec, DWConv):
+            states.append(jnp.zeros((h, w, c), jnp.float32))
+        elif isinstance(spec, PWConv):
+            states.append(jnp.zeros((h, w, spec.co), jnp.float32))
+        else:
+            states.append(None)
+    return states
+
+
+def step(specs, params, shapes, x, states, use_pallas: bool = False):
+    """One timestep through the network.
+
+    Args:
+      x: (H, W, C) analog image (fed to the encoder layer each step).
+      states: per-layer membrane potentials (from ``_zeros_states`` or the
+        previous timestep).
+
+    Returns (logits O_t, new_states, sfr) where sfr is the list of
+    per-spiking-layer firing rates for Fig. 4 / Algorithm 1.
+    """
+    act = x
+    new_states, sfr = [], []
+    for spec, p, st in zip(specs, params, states):
+        if isinstance(spec, Conv):
+            psum = (k_conv.conv2d_psum(act, p["w"], spec.pad) if use_pallas
+                    else ref.conv2d_psum(act, p["w"], spec.pad))
+            v = st + psum + p["b"][None, None, :]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, Residual):
+            st1, st2 = st
+            psum1 = (k_conv.conv2d_psum(act, p["w1"], 1) if use_pallas
+                     else ref.conv2d_psum(act, p["w1"], 1))
+            v1 = st1 + psum1 + p["b1"][None, None, :]
+            s1 = spike_fn(v1)
+            psum2 = (k_conv.conv2d_psum(s1, p["w2"], 1) if use_pallas
+                     else ref.conv2d_psum(s1, p["w2"], 1))
+            short = (ref.pointwise_psum(act, p["wp"]) if "wp" in p else act)
+            v2 = st2 + psum2 + short + p["b2"][None, None, :]
+            s2 = spike_fn(v2)
+            new_states.append((jnp.where(s1 > 0, 0.0, v1),
+                               jnp.where(s2 > 0, 0.0, v2)))
+            act = s2
+            sfr.append((s1.mean() + s2.mean()) / 2.0)
+        elif isinstance(spec, DWConv):
+            psum = (k_dsc.depthwise_psum(act, p["w"], spec.pad) if use_pallas
+                    else ref.depthwise_psum(act, p["w"], spec.pad))
+            v = st + psum + p["b"][None, None, :]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, PWConv):
+            psum = (k_dsc.pointwise_psum(act, p["w"]) if use_pallas
+                    else ref.pointwise_psum(act, p["w"]))
+            v = st + psum + p["b"][None, None, :]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, Pool):
+            act = (k_pool.or_pool2(act) if use_pallas else ref.or_pool2(act))
+            new_states.append(None)
+        elif isinstance(spec, FC):
+            flat = act.reshape(-1)
+            out = (k_fc.fc_psum(flat, p["w"], p["b"]) if use_pallas
+                   else ref.fc_psum(flat, p["w"], p["b"]))
+            new_states.append(None)
+            act = out
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return act, new_states, jnp.stack(sfr)
+
+
+def forward(specs, params, shapes, x, timesteps: int,
+            use_pallas: bool = False):
+    """T-timestep rollout of one sample.
+
+    Returns (O: (T, n_classes) per-timestep logits,
+             sfr: (T, n_spiking_layers) firing rates).
+
+    Direct encoding: the same analog frame drives the encoder each
+    timestep; membrane potentials carry across timesteps (Eq. (3)).
+    """
+    states = _zeros_states(specs, shapes)
+    outs, sfrs = [], []
+    for _ in range(timesteps):
+        o, states, sfr = step(specs, params, shapes, x, states, use_pallas)
+        outs.append(o)
+        sfrs.append(sfr)
+    return jnp.stack(outs), jnp.stack(sfrs)
+
+
+# ---------------------------------------------------------------------------
+# Batched training forward (performance path — EXPERIMENTS.md §Perf L2)
+#
+# The per-sample `step` above is the semantic reference (and the AOT
+# path, where it runs through the Pallas kernels). Training on a single
+# CPU core needs the batched equivalents below: XLA's native conv
+# (`lax.conv_general_dilated`) over (B, H, W, C) plus `lax.scan` over
+# timesteps. ~8x faster wall-clock than vmap(per-sample einsum taps).
+# ---------------------------------------------------------------------------
+
+def _conv_b(x, w, pad):
+    """Batched NHWC conv, stride 1: (B,H,W,Ci) x (Kh,Kw,Ci,Co)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _dwconv_b(x, w, pad):
+    """Batched depthwise conv: w (Kh, Kw, C) -> HWIO (Kh,Kw,1,C)."""
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x, w[:, :, None, :], window_strides=(1, 1),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+def step_batched(specs, params, shapes, xb, states):
+    """One timestep over a batch: xb (B, H, W, C)."""
+    act = xb
+    new_states, sfr = [], []
+    for spec, p, st in zip(specs, params, states):
+        if isinstance(spec, Conv):
+            v = st + _conv_b(act, p["w"], spec.pad) + p["b"]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, Residual):
+            st1, st2 = st
+            v1 = st1 + _conv_b(act, p["w1"], 1) + p["b1"]
+            s1 = spike_fn(v1)
+            short = (jnp.einsum("bhwc,co->bhwo", act, p["wp"])
+                     if "wp" in p else act)
+            v2 = st2 + _conv_b(s1, p["w2"], 1) + short + p["b2"]
+            s2 = spike_fn(v2)
+            new_states.append((jnp.where(s1 > 0, 0.0, v1),
+                               jnp.where(s2 > 0, 0.0, v2)))
+            act = s2
+            sfr.append((s1.mean() + s2.mean()) / 2.0)
+        elif isinstance(spec, DWConv):
+            v = st + _dwconv_b(act, p["w"], spec.pad) + p["b"]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, PWConv):
+            v = st + jnp.einsum("bhwc,co->bhwo", act, p["w"]) + p["b"]
+            s = spike_fn(v)
+            new_states.append(jnp.where(s > 0, 0.0, v))
+            act = s
+            sfr.append(s.mean())
+        elif isinstance(spec, Pool):
+            b, h, w, c = act.shape
+            act = act.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+            new_states.append(None)
+        elif isinstance(spec, FC):
+            flat = act.reshape(act.shape[0], -1)
+            act = flat @ p["w"] + p["b"]
+            new_states.append(None)
+        else:
+            raise TypeError(f"unknown spec {spec!r}")
+    return act, new_states, jnp.stack(sfr)
+
+
+def _zeros_states_batched(specs, shapes, batch):
+    states = []
+    for st in _zeros_states(specs, shapes):
+        if st is None:
+            states.append(None)
+        elif isinstance(st, tuple):
+            states.append(tuple(
+                jnp.zeros((batch,) + s.shape, s.dtype) for s in st))
+        else:
+            states.append(jnp.zeros((batch,) + st.shape, st.dtype))
+    return states
+
+
+def forward_batch(specs, params, shapes, xb, timesteps: int):
+    """Batched training forward: xb (B, H, W, C) -> (B, T, classes).
+
+    `lax.scan` over timesteps keeps the lowered graph one-step-sized
+    (compile time and memory stay flat as T grows).
+    """
+    states = _zeros_states_batched(specs, shapes, xb.shape[0])
+
+    def body(states, _):
+        o, states, sfr = step_batched(specs, params, shapes, xb, states)
+        return states, (o, sfr)
+
+    # States contain None entries, which scan tolerates as static pytree
+    # leaves only if they are not jnp arrays — replace with 0-size
+    # placeholders via a tuple filter instead: run a python loop when T
+    # is small (<= 2), scan otherwise with None pruned.
+    if timesteps <= 2:
+        outs = []
+        for _ in range(timesteps):
+            o, states, _ = step_batched(specs, params, shapes, xb, states)
+            outs.append(o)
+        return jnp.stack(outs, axis=1)
+
+    carry_idx = [i for i, s in enumerate(states) if s is not None]
+    carry = tuple(states[i] for i in carry_idx)
+
+    def body2(carry, _):
+        full = list(states)
+        for i, c in zip(carry_idx, carry):
+            full[i] = c
+        o, new_full, _ = step_batched(specs, params, shapes, xb, full)
+        return tuple(new_full[i] for i in carry_idx), o
+
+    _, outs = jax.lax.scan(body2, carry, None, length=timesteps)
+    return jnp.transpose(outs, (1, 0, 2))
+
+
+def forward_batch_sfr(specs, params, shapes, xb, timesteps: int):
+    """Batched eval forward returning (B,T,classes) and (T, layers) SFR."""
+    states = _zeros_states_batched(specs, shapes, xb.shape[0])
+    outs, sfrs = [], []
+    for _ in range(timesteps):
+        o, states, sfr = step_batched(specs, params, shapes, xb, states)
+        outs.append(o)
+        sfrs.append(sfr)
+    return jnp.stack(outs, axis=1), jnp.stack(sfrs)
+
+
+def predict(specs, params, shapes, x, timesteps: int,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Class prediction: argmax of the time-averaged logits."""
+    o, _ = forward(specs, params, shapes, x, timesteps, use_pallas)
+    return jnp.argmax(o.mean(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# Introspection helpers shared with aot.py / the Rust side
+# ---------------------------------------------------------------------------
+
+def spec_dicts(specs, shapes, params) -> list[dict]:
+    """JSON-ready per-layer description (consumed by rust/src/model)."""
+    out = []
+    for spec, (h, w, c) in zip(specs, shapes, strict=True):
+        d: dict[str, Any] = {"in_h": h, "in_w": w, "in_c": c}
+        if isinstance(spec, Conv):
+            d.update(kind="conv", co=spec.co, k=spec.k, pad=spec.pad,
+                     encoder=spec.encoder)
+        elif isinstance(spec, Residual):
+            d.update(kind="residual", co=spec.co, k=spec.k)
+        elif isinstance(spec, DWConv):
+            d.update(kind="dwconv", co=c, k=spec.k, pad=spec.pad)
+        elif isinstance(spec, PWConv):
+            d.update(kind="pwconv", co=spec.co, k=1, pad=0)
+        elif isinstance(spec, Pool):
+            d.update(kind="pool")
+        elif isinstance(spec, FC):
+            d.update(kind="fc", out=spec.out)
+        out.append(d)
+    return out

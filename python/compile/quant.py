@@ -1,0 +1,93 @@
+"""INT8 weight quantisation (paper SectionIV-A).
+
+The accelerator stores weights as 8-bit integers in the on-chip weight
+buffer.  We use symmetric per-tensor quantisation per layer:
+
+    w_q = clip(round(w / s), -127, 127),  s = max|w| / 127
+
+The functional inference graph uses the *dequantised* weights
+(``w_q * s``) so the AOT HLO matches the hardware's numerics, while the
+raw ``int8`` planes + scales are exported for the Rust simulator (whose
+PEs accumulate int8 weights exactly as the FPGA does).
+
+The IF threshold is quantised to the same fixed-point grid so the fire
+decision is bit-identical between the float graph and the int8 PE array:
+thresholding ``sum(w_q * s) >= vth`` is equivalent to the integer
+compare ``sum(w_q) >= vth / s``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_mod
+
+
+@dataclasses.dataclass
+class QuantTensor:
+    """int8 planes + scale; `deq()` gives the float tensor the HLO uses."""
+    q: np.ndarray       # int8
+    scale: float
+
+    def deq(self) -> jnp.ndarray:
+        return jnp.asarray(self.q.astype(np.float32) * self.scale)
+
+
+def quantize_tensor(w: np.ndarray) -> QuantTensor:
+    amax = float(np.abs(w).max())
+    scale = amax / 127.0 if amax > 0 else 1.0
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return QuantTensor(q, scale)
+
+
+def quantize_params(params: list) -> list:
+    """Quantise every weight tensor; biases stay float32 (the FPGA keeps
+    biases/thresholds at full accumulator precision)."""
+    out = []
+    for p in params:
+        qp = {}
+        for k, v in p.items():
+            v = np.asarray(v)
+            if k.startswith("w"):
+                qp[k] = quantize_tensor(v)
+            else:
+                qp[k] = v.astype(np.float32)
+        out.append(qp)
+    return out
+
+
+def dequantized_params(qparams: list) -> list:
+    """Float params whose values lie exactly on the int8 grid."""
+    out = []
+    for qp in qparams:
+        p = {}
+        for k, v in qp.items():
+            p[k] = v.deq() if isinstance(v, QuantTensor) else jnp.asarray(v)
+        out.append(p)
+    return out
+
+
+def quantization_error(params: list) -> float:
+    """Max |w - deq(quant(w))| across all weight tensors (diagnostics)."""
+    err = 0.0
+    for p in params:
+        for k, v in p.items():
+            if k.startswith("w"):
+                v = np.asarray(v)
+                d = np.asarray(quantize_tensor(v).deq())
+                err = max(err, float(np.abs(v - d).max()))
+    return err
+
+
+def accuracy_drop(specs, shapes, params, x, y, timesteps: int):
+    """(float_acc, int8_acc) on the given eval set — the quantisation
+    ablation the paper folds into its 'Int8 precision' design point."""
+    from . import train as train_mod
+    facc, _ = train_mod.evaluate(specs, shapes, params, x, y, timesteps)
+    qacc, _ = train_mod.evaluate(
+        specs, shapes, dequantized_params(quantize_params(params)),
+        x, y, timesteps)
+    return facc, qacc

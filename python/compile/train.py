@@ -1,0 +1,240 @@
+"""STBP training with SDT / TET losses + Algorithm 1 temporal pruning.
+
+Implements the paper's algorithm contribution (SectionIII):
+
+  * **STBP** (spatio-temporal backprop) — jax autodiff through the
+    T-step rollout; the non-differentiable Heaviside is replaced by the
+    ATan surrogate gradient (``model.spike_fn``).
+  * **SDT** (Eq. 6)  — ``CE(mean_t O(t), y)``: optimise only the
+    time-averaged logits.
+  * **TET** (Eq. 8)  — ``mean_t CE(O(t), y)``: optimise *every* timestep,
+    which keeps per-layer spike-firing rates stable when the inference
+    timestep count is later reduced (Fig. 4) — the property the
+    single-timestep accelerator relies on.
+  * **Algorithm 1** — train at T timesteps, measure per-layer SFR at the
+    reduced timestep count, fine-tune at T_de = 1.
+
+Optimiser: Adam (hand-rolled; no optax in this offline environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+# ---------------------------------------------------------------------------
+# Losses (paper Eq. (6) and Eq. (8))
+# ---------------------------------------------------------------------------
+
+def _ce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; logits (B, C), labels (B,) int."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def sdt_loss(outputs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Standard direct training, Eq. (6): CE of time-averaged logits.
+
+    outputs: (B, T, C).
+    """
+    return _ce(outputs.mean(axis=1), labels)
+
+
+def tet_loss(outputs: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Temporal efficient training, Eq. (8): mean over t of CE(O(t), y)."""
+    b, t, c = outputs.shape
+    flat = outputs.reshape(b * t, c)
+    rep = jnp.repeat(labels, t)
+    return _ce(flat, rep)
+
+
+LOSSES: dict[str, Callable] = {"sdt": sdt_loss, "tet": tet_loss}
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled — optax is not vendored in this environment)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Adam:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+            state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m_, v_: p - self.lr * (m_ / bc1) /
+            (jnp.sqrt(v_ / bc2) + self.eps),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainConfig:
+    model: str = "scnn3"
+    dataset: str = "synth-mnist"
+    timesteps: int = 6
+    loss: str = "tet"            # "sdt" | "tet"
+    epochs: int = 3
+    batch_size: int = 32
+    lr: float = 1e-3
+    n_train: int = 1024
+    n_test: int = 256
+    width: float = 1.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: list
+    specs: list
+    shapes: list
+    test_acc: float
+    history: list            # (epoch, loss, test_acc)
+    sfr: np.ndarray          # (n_spiking_layers,) mean firing rate @ T
+
+
+def make_train_step(specs, shapes, loss_name: str, timesteps: int,
+                    opt: Adam):
+    loss_fn = LOSSES[loss_name]
+
+    def loss_of(params, xb, yb):
+        out = model_mod.forward_batch(specs, params, shapes, xb, timesteps)
+        return loss_fn(out, yb)
+
+    @jax.jit
+    def train_step(params, opt_state, xb, yb):
+        loss, grads = jax.value_and_grad(loss_of)(params, xb, yb)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_eval(specs, shapes, timesteps: int):
+    @jax.jit
+    def eval_batch(params, xb):
+        o, sfr = model_mod.forward_batch_sfr(specs, params, shapes, xb,
+                                             timesteps)
+        pred = jnp.argmax(o.mean(axis=1), axis=-1)
+        return pred, sfr.mean(axis=0)
+    return eval_batch
+
+
+def evaluate(specs, shapes, params, x, y, timesteps: int,
+             batch_size: int = 64):
+    """Returns (accuracy, mean per-layer SFR) at the given timestep count."""
+    eval_batch = make_eval(specs, shapes, timesteps)
+    correct, sfrs, n = 0, [], 0
+    for i in range(0, len(x) - batch_size + 1, batch_size):
+        xb = jnp.asarray(x[i:i + batch_size])
+        pred, sfr = eval_batch(params, xb)
+        correct += int((np.asarray(pred) == y[i:i + batch_size]).sum())
+        sfrs.append(np.asarray(sfr))
+        n += batch_size
+    if n == 0:  # dataset smaller than one batch
+        xb = jnp.asarray(x)
+        pred, sfr = eval_batch(params, xb)
+        return float((np.asarray(pred) == y).mean()), np.asarray(sfr)
+    return correct / n, np.mean(sfrs, axis=0)
+
+
+def train(cfg: TrainConfig, init_params=None, verbose: bool = True
+          ) -> TrainResult:
+    """Train one model per ``cfg``; optionally warm-start (fine-tune)."""
+    (xtr, ytr), (xte, yte), shape, n_classes = data_mod.load(
+        cfg.dataset, cfg.n_train, cfg.n_test, seed=cfg.seed)
+    specs = model_mod.MODELS[cfg.model](n_classes, width=cfg.width)
+    params, shapes = model_mod.init_params(specs, shape, seed=cfg.seed)
+    if init_params is not None:
+        params = init_params
+    opt = Adam(lr=cfg.lr)
+    opt_state = opt.init(params)
+    train_step = make_train_step(specs, shapes, cfg.loss, cfg.timesteps, opt)
+
+    rng = np.random.default_rng(cfg.seed)
+    history = []
+    for epoch in range(cfg.epochs):
+        t0, losses = time.time(), []
+        for xb, yb in data_mod.batches(xtr, ytr, cfg.batch_size, rng):
+            params, opt_state, loss = train_step(
+                params, opt_state, jnp.asarray(xb), jnp.asarray(yb))
+            losses.append(float(loss))
+        acc, _ = evaluate(specs, shapes, params, xte, yte, cfg.timesteps)
+        history.append((epoch, float(np.mean(losses)), acc))
+        if verbose:
+            print(f"[{cfg.model}/{cfg.loss} T={cfg.timesteps}] "
+                  f"epoch {epoch}: loss={np.mean(losses):.4f} "
+                  f"acc={acc:.4f} ({time.time() - t0:.1f}s)")
+    acc, sfr = evaluate(specs, shapes, params, xte, yte, cfg.timesteps)
+    return TrainResult(params, specs, shapes, acc, history, sfr)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: SDT/TET-based temporal pruning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PruningResult:
+    base: TrainResult            # trained at T
+    reduced_acc: dict            # T' -> accuracy with base weights
+    reduced_sfr: dict            # T' -> per-layer SFR with base weights
+    finetuned: TrainResult       # fine-tuned at T_de
+
+
+def temporal_pruning(cfg: TrainConfig, t_de: int = 1,
+                     finetune_epochs: int | None = None,
+                     eval_timesteps=(6, 2, 1), verbose: bool = True
+                     ) -> PruningResult:
+    """Paper Algorithm 1.
+
+    1. Train at ``cfg.timesteps`` with ``cfg.loss`` (SDT or TET).
+    2. Directly reduce the inference timesteps; record accuracy + SFR.
+    3. Fine-tune at ``t_de`` starting from the trained weights.
+    """
+    base = train(cfg, verbose=verbose)
+    (_, _), (xte, yte), _, _ = data_mod.load(
+        cfg.dataset, cfg.n_train, cfg.n_test, seed=cfg.seed)
+
+    reduced_acc, reduced_sfr = {}, {}
+    for t in eval_timesteps:
+        acc, sfr = evaluate(base.specs, base.shapes, base.params,
+                            xte, yte, t)
+        reduced_acc[t], reduced_sfr[t] = acc, sfr
+        if verbose:
+            print(f"  reduce to T={t}: acc={acc:.4f} "
+                  f"sfr={np.round(sfr, 3).tolist()}")
+
+    ft_cfg = dataclasses.replace(
+        cfg, timesteps=t_de,
+        epochs=finetune_epochs if finetune_epochs is not None
+        else max(1, cfg.epochs // 2))
+    finetuned = train(ft_cfg, init_params=base.params, verbose=verbose)
+    return PruningResult(base, reduced_acc, reduced_sfr, finetuned)

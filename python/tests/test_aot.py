@@ -1,0 +1,112 @@
+"""AOT export tests: HLO text contract + weight layout contract."""
+
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+from compile import quant as Q
+
+
+def test_hlo_text_has_full_constants():
+    """Regression for the silent-zero-weights bug: large weight
+    constants must be printed in full, never elided as '{...}' (the
+    rust-side text parser reads elided constants back as zeros)."""
+    w = jnp.asarray(np.arange(256, dtype=np.float32).reshape(16, 16))
+
+    def fn(x):
+        return (x @ w,)
+
+    txt = aot.lower_fn(fn, jax.ShapeDtypeStruct((4, 16), jnp.float32))
+    assert "{...}" not in txt
+    assert "HloModule" in txt
+    assert "ROOT" in txt
+
+
+def test_hlo_is_tuple_rooted():
+    """rust Runtime::run_image unconditionally untuples the result."""
+    txt = aot.lower_fn(lambda x: (x + 1.0,),
+                       jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    root_lines = [l for l in txt.splitlines() if "ROOT" in l]
+    assert any("tuple" in l for l in root_lines), root_lines
+
+
+def test_conv_taps_engine_layout():
+    """(Kh,Kw,Ci,Co) -> [co][ci][tap] transpose matches the rust
+    ConvWeights::of_channel indexing."""
+    kh, kw, ci, co = 3, 3, 2, 4
+    q = np.arange(kh * kw * ci * co, dtype=np.int8).reshape(kh, kw, ci, co)
+    taps = aot._conv_taps_engine_layout(q)
+    assert taps.shape == (co, ci, kh * kw)
+    # Spot-check: output channel 1, input channel 0, tap (r=2, c=1).
+    assert taps[1, 0, 2 * kw + 1] == q[2, 1, 0, 1]
+
+
+def test_export_weights_manifest(tmp_path: pathlib.Path):
+    specs = M.scnn3(10, width=0.25)
+    params, shapes = M.init_params(specs, (28, 28, 1))
+    qparams = Q.quantize_params(params)
+    manifest = aot.export_weights(specs, qparams, tmp_path)
+    blob = (tmp_path / "weights.bin").read_bytes()
+
+    # Encoder conv exports nothing; conv2, conv3, fc export w + b.
+    layers = sorted({m["layer"] for m in manifest})
+    assert 0 not in layers, "encoder must not be exported"
+    assert len([m for m in manifest if m["name"] == "w"]) == 3
+
+    # Offsets tile the blob exactly.
+    end = 0
+    for m in sorted(manifest, key=lambda m: m["offset"]):
+        assert m["offset"] == end
+        end += m["len"]
+    assert end == len(blob)
+
+    # int8 tensors round-trip through the blob.
+    wrec = next(m for m in manifest if m["name"] == "w")
+    raw = np.frombuffer(blob[wrec["offset"]:wrec["offset"] + wrec["len"]],
+                        dtype=np.int8)
+    expected = aot._conv_taps_engine_layout(
+        qparams[wrec["layer"]]["w"].q).ravel()
+    np.testing.assert_array_equal(raw, expected)
+
+    # Manifest serialises to valid JSON consumable by the rust side.
+    json.dumps(manifest)
+
+
+def test_outputs_exist_logic(tmp_path: pathlib.Path):
+    assert not aot.outputs_exist(tmp_path)
+    for f in ("net.json", "weights.bin", "encoder.hlo.txt",
+              "model.hlo.txt"):
+        (tmp_path / f).write_text("x")
+    assert aot.outputs_exist(tmp_path)
+
+
+def test_generate_rust_smoke_fixtures():
+    """Lower a tiny Pallas model + reference outputs for the rust-side
+    integration test (rust/tests/rt_smoke.rs reads these)."""
+    out = pathlib.Path("/tmp/sti_snn_fixture")
+    out.mkdir(exist_ok=True)
+    specs = M.scnn3(width=0.25)
+    params, shapes = M.init_params(specs, (28, 28, 1), seed=0)
+    params = [{k: v * 6.0 for k, v in p.items()} for p in params]
+
+    def full(x):
+        o, _ = M.forward(specs, params, shapes, x, 1, use_pallas=True)
+        return (o[0],)
+
+    txt = aot.lower_fn(full, jax.ShapeDtypeStruct((28, 28, 1),
+                                                  jnp.float32))
+    assert "{...}" not in txt
+    (out / "model.hlo.txt").write_text(txt)
+
+    rng = np.random.default_rng(0)
+    img = rng.random((28, 28, 1)).astype(np.float32)
+    logits = np.asarray(full(jnp.asarray(img))[0])
+    assert np.isfinite(logits).all()
+    assert np.abs(logits).max() > 0, "degenerate fixture (all zero)"
+    img.ravel().astype("<f4").tofile(out / "img.f32")
+    logits.astype("<f4").tofile(out / "logits.f32")

@@ -1,0 +1,109 @@
+"""Pallas standard-conv kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, spike_conv
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand_spikes(rng, h, w, c, rate=0.3):
+    return jnp.asarray((rng.random((h, w, c)) < rate).astype(np.float32))
+
+
+def rand_weights(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("h,w,ci,co,k,p", [
+    (8, 8, 4, 8, 3, 1),      # small square
+    (28, 28, 1, 16, 3, 1),   # SCNN3 encoder shape
+    (14, 14, 16, 32, 3, 1),  # SCNN3 mid layer
+    (6, 10, 3, 5, 3, 1),     # non-square
+    (8, 8, 4, 4, 1, 0),      # 1x1 via standard path
+    (9, 9, 2, 3, 3, 0),      # valid padding
+    (5, 5, 7, 11, 5, 2),     # 5x5 kernel
+])
+def test_conv_psum_matches_ref(h, w, ci, co, k, p):
+    rng = np.random.default_rng(42 + h + w + ci + co + k)
+    x, wgt = rand_spikes(rng, h, w, ci), rand_weights(rng, k, k, ci, co)
+    got = spike_conv.conv2d_psum(x, wgt, padding=p)
+    want = ref.conv2d_psum(x, wgt, padding=p)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("vth", [0.0, 0.5, 1.0, 2.5])
+def test_conv_if_fused_matches_ref(vth):
+    rng = np.random.default_rng(7)
+    x, wgt = rand_spikes(rng, 12, 12, 8), rand_weights(rng, 3, 3, 8, 16)
+    b = rand_weights(rng, 16)
+    got = spike_conv.conv_if_fused(x, wgt, vth, padding=1, bias=b)
+    want = ref.conv_if_fused(x, wgt, vth, padding=1, bias=b)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert set(np.unique(np.asarray(got))) <= {0.0, 1.0}
+
+
+def test_conv_zero_input_gives_zero_psum():
+    rng = np.random.default_rng(0)
+    x = jnp.zeros((8, 8, 4), jnp.float32)
+    wgt = rand_weights(rng, 3, 3, 4, 8)
+    got = spike_conv.conv2d_psum(x, wgt)
+    assert np.abs(np.asarray(got)).max() == 0.0
+
+
+def test_conv_all_ones_equals_weight_sums():
+    """Dense spikes: every output pixel (away from borders) is the full
+    tap sum — the add-network interpretation of the spike matmul."""
+    rng = np.random.default_rng(1)
+    x = jnp.ones((8, 8, 4), jnp.float32)
+    wgt = rand_weights(rng, 3, 3, 4, 8)
+    got = np.asarray(spike_conv.conv2d_psum(x, wgt, padding=1))
+    full = np.asarray(wgt).sum(axis=(0, 1, 2))
+    np.testing.assert_allclose(got[1:-1, 1:-1, :],
+                               np.broadcast_to(full, got[1:-1, 1:-1].shape),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_line_buffer_view_windows():
+    x = jnp.arange(5 * 4 * 2, dtype=jnp.float32).reshape(5, 4, 2)
+    lb = spike_conv.line_buffer_view(x, 3)
+    assert lb.shape == (3, 3, 4, 2)
+    for r in range(3):
+        np.testing.assert_array_equal(np.asarray(lb[r]),
+                                      np.asarray(x[r:r + 3]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(4, 16), w=st.integers(4, 16),
+    ci=st.integers(1, 8), co=st.integers(1, 8),
+    rate=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_property_sweep(h, w, ci, co, rate, seed):
+    """Hypothesis sweep: arbitrary shapes/firing rates, kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    x = rand_spikes(rng, h, w, ci, rate)
+    wgt = rand_weights(rng, 3, 3, ci, co)
+    got = spike_conv.conv2d_psum(x, wgt, padding=1)
+    want = ref.conv2d_psum(x, wgt, padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), vth=st.floats(-1.0, 3.0))
+def test_fused_equals_unfused_then_threshold(seed, vth):
+    """Invariant: fused conv+IF == conv followed by threshold."""
+    rng = np.random.default_rng(seed)
+    x, wgt = rand_spikes(rng, 10, 10, 4), rand_weights(rng, 3, 3, 4, 6)
+    fused = np.asarray(spike_conv.conv_if_fused(x, wgt, vth))
+    psum = np.asarray(spike_conv.conv2d_psum(x, wgt))
+    # Guard against threshold-boundary float ties: perturb check only
+    # where |psum - vth| is comfortably non-zero.
+    mask = np.abs(psum - vth) > 1e-4
+    assert (fused[mask] == (psum[mask] >= vth).astype(np.float32)).all()

@@ -1,0 +1,100 @@
+"""Depthwise / pointwise Pallas kernels vs oracles (multi-mode PE)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dsc, ref
+
+
+def rand_spikes(rng, h, w, c, rate=0.3):
+    return jnp.asarray((rng.random((h, w, c)) < rate).astype(np.float32))
+
+
+def rand_weights(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("h,w,c", [(8, 8, 4), (28, 28, 16), (6, 10, 3)])
+def test_depthwise_matches_ref(h, w, c):
+    rng = np.random.default_rng(h * w * c)
+    x, wgt = rand_spikes(rng, h, w, c), rand_weights(rng, 3, 3, c)
+    np.testing.assert_allclose(
+        np.asarray(dsc.depthwise_psum(x, wgt)),
+        np.asarray(ref.depthwise_psum(x, wgt)), rtol=1e-5, atol=1e-5)
+
+
+def test_depthwise_no_channel_mixing():
+    """The defining property of depthwise mode (paper Fig. 8c): output
+    channel c must not depend on input channel c' != c."""
+    rng = np.random.default_rng(3)
+    x = rand_spikes(rng, 8, 8, 4)
+    wgt = rand_weights(rng, 3, 3, 4)
+    base = np.asarray(dsc.depthwise_psum(x, wgt))
+    # Perturb channel 2 of the input; channels 0,1,3 must be unchanged.
+    x2 = x.at[:, :, 2].set(1.0 - x[:, :, 2])
+    pert = np.asarray(dsc.depthwise_psum(x2, wgt))
+    for c in (0, 1, 3):
+        np.testing.assert_array_equal(base[:, :, c], pert[:, :, c])
+    assert np.abs(base[:, :, 2] - pert[:, :, 2]).max() > 0
+
+
+@pytest.mark.parametrize("h,w,ci,co", [(8, 8, 4, 8), (14, 14, 16, 32),
+                                       (7, 7, 64, 128)])
+def test_pointwise_matches_ref(h, w, ci, co):
+    rng = np.random.default_rng(h + ci)
+    x, wgt = rand_spikes(rng, h, w, ci), rand_weights(rng, ci, co)
+    np.testing.assert_allclose(
+        np.asarray(dsc.pointwise_psum(x, wgt)),
+        np.asarray(ref.pointwise_psum(x, wgt)), rtol=1e-4, atol=1e-4)
+
+
+def test_pointwise_preserves_hw_shape():
+    rng = np.random.default_rng(5)
+    x, wgt = rand_spikes(rng, 9, 13, 8), rand_weights(rng, 8, 24)
+    assert dsc.pointwise_psum(x, wgt).shape == (9, 13, 24)
+
+
+@pytest.mark.parametrize("vth", [0.1, 1.0])
+def test_fused_dsc_matches_ref(vth):
+    rng = np.random.default_rng(11)
+    x = rand_spikes(rng, 10, 10, 6)
+    wd, wp = rand_weights(rng, 3, 3, 6), rand_weights(rng, 6, 12)
+    assert (np.asarray(dsc.depthwise_if_fused(x, wd, vth)) ==
+            np.asarray(ref.depthwise_if_fused(x, wd, vth))).all()
+    assert (np.asarray(dsc.pointwise_if_fused(x, wp, vth)) ==
+            np.asarray(ref.pointwise_if_fused(x, wp, vth))).all()
+
+
+def test_dsc_approximates_standard_conv_structure():
+    """DSC = depthwise then pointwise composes to the same shapes as a
+    standard conv — the substitution vMobileNet relies on."""
+    rng = np.random.default_rng(13)
+    x = rand_spikes(rng, 12, 12, 8)
+    wd, wp = rand_weights(rng, 3, 3, 8), rand_weights(rng, 8, 16)
+    mid = dsc.depthwise_if_fused(x, wd, 0.5)
+    out = dsc.pointwise_psum(mid, wp)
+    assert out.shape == (12, 12, 16)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(4, 14), w=st.integers(4, 14), c=st.integers(1, 8),
+       rate=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_depthwise_property_sweep(h, w, c, rate, seed):
+    rng = np.random.default_rng(seed)
+    x, wgt = rand_spikes(rng, h, w, c, rate), rand_weights(rng, 3, 3, c)
+    np.testing.assert_allclose(
+        np.asarray(dsc.depthwise_psum(x, wgt)),
+        np.asarray(ref.depthwise_psum(x, wgt)), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(2, 12), ci=st.integers(1, 16), co=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_pointwise_property_sweep(h, ci, co, seed):
+    rng = np.random.default_rng(seed)
+    x, wgt = rand_spikes(rng, h, h, ci), rand_weights(rng, ci, co)
+    np.testing.assert_allclose(
+        np.asarray(dsc.pointwise_psum(x, wgt)),
+        np.asarray(ref.pointwise_psum(x, wgt)), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,109 @@
+"""IF/LIF neuron kernels vs oracles + dynamics invariants (Eq. (2)-(4))."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lif, ref
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("vth", [0.5, 1.0, 2.0])
+def test_if_step_matches_ref(vth):
+    rng = np.random.default_rng(int(vth * 10))
+    p, v = rand(rng, 8, 8, 6), rand(rng, 8, 8, 6)
+    s1, v1 = lif.if_step(p, v, vth)
+    s2, v2 = ref.if_step(p, v, vth)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("leak", [0.5, 0.75, 1.0])
+def test_lif_step_matches_ref(leak):
+    rng = np.random.default_rng(int(leak * 100))
+    p, v = rand(rng, 6, 6, 4), rand(rng, 6, 6, 4)
+    s1, v1 = lif.lif_step(p, v, 1.0, leak)
+    s2, v2 = ref.lif_step(p, v, 1.0, leak)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fired_neurons_reset_to_zero():
+    """Hard reset (Eq. 4, u_r = 0): v_next == 0 exactly where spiking."""
+    rng = np.random.default_rng(2)
+    p, v = rand(rng, 8, 8, 3), rand(rng, 8, 8, 3)
+    s, v_next = lif.if_step(p, v, 0.5)
+    s, v_next = np.asarray(s), np.asarray(v_next)
+    assert (v_next[s > 0] == 0.0).all()
+    # Non-fired neurons keep their sub-threshold integration.
+    integ = np.asarray(p) + np.asarray(v)
+    np.testing.assert_allclose(v_next[s == 0], integ[s == 0], rtol=1e-6)
+
+
+def test_subthreshold_never_fires():
+    p = jnp.full((4, 4, 2), -1.0)
+    v = jnp.zeros((4, 4, 2))
+    s, _ = lif.if_step(p, v, 0.5)
+    assert np.asarray(s).sum() == 0
+
+
+def test_bias_shifts_current():
+    """Eq. (2): bias adds to the input current before integration."""
+    rng = np.random.default_rng(4)
+    p, v = rand(rng, 4, 4, 3), jnp.zeros((4, 4, 3))
+    b = jnp.asarray([10.0, -10.0, 0.0])
+    s, _ = lif.if_step(p, v, 0.5, bias=b)
+    s = np.asarray(s)
+    assert (s[:, :, 0] == 1).all()       # huge positive bias: always fires
+    assert (s[:, :, 1] == 0).all()       # huge negative bias: never fires
+
+
+def test_multi_timestep_accumulation():
+    """Integration across timesteps: constant sub-threshold current fires
+    after ceil(vth/I) steps — the temporal dependency T=1 removes."""
+    p = jnp.full((1, 1, 1), 0.4)
+    v = jnp.zeros((1, 1, 1))
+    fired_at = None
+    for t in range(5):
+        s, v = lif.if_step(p, v, 1.0)
+        if np.asarray(s).sum() > 0 and fired_at is None:
+            fired_at = t
+    assert fired_at == 2   # 0.4, 0.8, 1.2 -> fires on 3rd step (t=2)
+
+
+def test_leak_slows_integration():
+    """LIF leak (Eq. 3): same current, leaky neuron fires later/never."""
+    p = jnp.full((1, 1, 1), 0.4)
+    v_if = jnp.zeros((1, 1, 1))
+    v_lif = jnp.zeros((1, 1, 1))
+    if_spikes = lif_spikes = 0
+    for _ in range(10):
+        s, v_if = lif.if_step(p, v_if, 1.0)
+        if_spikes += float(np.asarray(s).sum())
+        s, v_lif = lif.lif_step(p, v_lif, 1.0, 0.5)
+        lif_spikes += float(np.asarray(s).sum())
+    assert if_spikes > lif_spikes
+    # leak=0.5, I=0.4 -> v converges to 0.8 < vth: never fires.
+    assert lif_spikes == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(h=st.integers(1, 10), c=st.integers(1, 8),
+       vth=st.floats(0.1, 3.0), leak=st.floats(0.0, 1.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_lif_property_sweep(h, c, vth, leak, seed):
+    rng = np.random.default_rng(seed)
+    p, v = rand(rng, h, h, c), rand(rng, h, h, c)
+    s1, v1 = lif.lif_step(p, v, vth, leak)
+    s2, v2 = ref.lif_step(p, v, vth, leak)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                               rtol=1e-4, atol=1e-5)
+    # Binary output invariant.
+    assert set(np.unique(np.asarray(s1))) <= {0.0, 1.0}

@@ -1,0 +1,91 @@
+"""OR-pooling and FC Pallas kernels vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fc, pooling, ref
+
+
+def rand_spikes(rng, *shape, rate=0.3):
+    return jnp.asarray((rng.random(shape) < rate).astype(np.float32))
+
+
+@pytest.mark.parametrize("h,w,c", [(8, 8, 4), (28, 28, 16), (4, 12, 3)])
+def test_or_pool_matches_ref(h, w, c):
+    rng = np.random.default_rng(h * 7 + c)
+    x = rand_spikes(rng, h, w, c)
+    got, want = pooling.or_pool2(x), ref.or_pool2(x)
+    assert got.shape == (h // 2, w // 2, c)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_or_pool_is_logical_or():
+    """Any spike in the 2x2 window -> pooled spike (paper Fig. 7b)."""
+    x = np.zeros((4, 4, 1), np.float32)
+    x[1, 0, 0] = 1.0           # one spike in top-left window
+    got = np.asarray(pooling.or_pool2(jnp.asarray(x)))
+    assert got[0, 0, 0] == 1.0
+    assert got.sum() == 1.0
+
+
+def test_or_pool_all_zero_and_all_one():
+    z = jnp.zeros((6, 6, 2), jnp.float32)
+    o = jnp.ones((6, 6, 2), jnp.float32)
+    assert np.asarray(pooling.or_pool2(z)).sum() == 0
+    assert (np.asarray(pooling.or_pool2(o)) == 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(ho=st.integers(1, 10), wo=st.integers(1, 10), c=st.integers(1, 8),
+       rate=st.floats(0, 1), seed=st.integers(0, 2**31 - 1))
+def test_or_pool_property_sweep(ho, wo, c, rate, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_spikes(rng, 2 * ho, 2 * wo, c, rate=rate)
+    got = np.asarray(pooling.or_pool2(x))
+    want = np.asarray(ref.or_pool2(x))
+    assert (got == want).all()
+    # Monotone invariant: pooled firing rate >= input firing rate.
+    assert got.mean() >= np.asarray(x).mean() - 1e-7
+
+
+@pytest.mark.parametrize("n_in,n_out", [(16, 10), (128, 10), (512, 100)])
+def test_fc_matches_ref(n_in, n_out):
+    rng = np.random.default_rng(n_in + n_out)
+    s = rand_spikes(rng, n_in)
+    w = jnp.asarray(rng.normal(size=(n_in, n_out)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(n_out,)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fc.fc_psum(s, w, b)),
+                               np.asarray(ref.fc_psum(s, w, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fc_spike_gating():
+    """Zero spikes -> output is exactly the bias (gather-accumulate)."""
+    rng = np.random.default_rng(9)
+    w = jnp.asarray(rng.normal(size=(32, 10)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(10,)).astype(np.float32))
+    out = fc.fc_psum(jnp.zeros((32,), jnp.float32), w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(b), rtol=1e-6)
+
+
+def test_fc_single_spike_selects_row():
+    rng = np.random.default_rng(10)
+    w = jnp.asarray(rng.normal(size=(32, 10)).astype(np.float32))
+    s = jnp.zeros((32,), jnp.float32).at[5].set(1.0)
+    out = fc.fc_psum(s, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w)[5],
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_in=st.integers(1, 64), n_out=st.integers(1, 32),
+       seed=st.integers(0, 2**31 - 1))
+def test_fc_property_sweep(n_in, n_out, seed):
+    rng = np.random.default_rng(seed)
+    s = rand_spikes(rng, n_in)
+    w = jnp.asarray(rng.normal(size=(n_in, n_out)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fc.fc_psum(s, w)),
+                               np.asarray(ref.fc_psum(s, w)),
+                               rtol=1e-4, atol=1e-4)

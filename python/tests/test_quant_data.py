@@ -1,0 +1,138 @@
+"""Quantisation + synthetic dataset tests."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import model as M
+from compile import quant as Q
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(3, 3, 8, 16)).astype(np.float32)
+    qt = Q.quantize_tensor(w)
+    assert qt.q.dtype == np.int8
+    # Symmetric int8: max error is half a quant step.
+    step = np.abs(w).max() / 127.0
+    err = np.abs(np.asarray(qt.deq()) - w).max()
+    assert err <= step / 2 + 1e-7
+
+
+def test_quantize_zero_tensor():
+    qt = Q.quantize_tensor(np.zeros((4, 4), np.float32))
+    assert (qt.q == 0).all()
+    assert qt.scale == 1.0
+
+
+def test_quantize_params_preserves_biases():
+    specs = M.scnn3(10, width=0.25)
+    params, _ = M.init_params(specs, (28, 28, 1))
+    qp = Q.quantize_params(params)
+    for p, q in zip(params, qp):
+        for k in p:
+            if k.startswith("b"):
+                np.testing.assert_array_equal(np.asarray(p[k]), q[k])
+            else:
+                assert isinstance(q[k], Q.QuantTensor)
+
+
+def test_quantization_error_metric():
+    specs = M.scnn3(10, width=0.25)
+    params, _ = M.init_params(specs, (28, 28, 1))
+    err = Q.quantization_error(params)
+    assert 0 < err < 0.05  # small weights -> small absolute error
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_quant_property_roundtrip(seed, scale):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(16,)) * scale).astype(np.float32)
+    qt = Q.quantize_tensor(w)
+    err = np.abs(np.asarray(qt.deq()) - w).max()
+    assert err <= np.abs(w).max() / 127.0 / 2 + 1e-6 * scale
+
+
+def test_int8_accuracy_close_to_float():
+    """Quantisation must not destroy a trained model (ablation)."""
+    from compile import train as T
+    cfg = T.TrainConfig(model="scnn3", timesteps=1, loss="tet", epochs=2,
+                        n_train=192, n_test=96, batch_size=16, width=0.25,
+                        lr=3e-3)
+    res = T.train(cfg, verbose=False)
+    (_, _), (xte, yte), _, _ = D.load(cfg.dataset, cfg.n_train,
+                                      cfg.n_test, seed=cfg.seed)
+    facc, qacc = Q.accuracy_drop(res.specs, res.shapes, res.params,
+                                 xte, yte, 1)
+    assert qacc >= facc - 0.08, f"float {facc} vs int8 {qacc}"
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_synth_mnist_shapes_and_range():
+    x, y = D.synth_mnist(32, seed=1)
+    assert x.shape == (32, 28, 28, 1)
+    assert x.dtype == np.float32
+    assert 0.0 <= x.min() and x.max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_synth_cifar_shapes():
+    x, y = D.synth_cifar(16, seed=2)
+    assert x.shape == (16, 32, 32, 3)
+    assert (y >= 0).all() and (y < 10).all()
+
+
+def test_dataset_determinism():
+    a = D.synth_mnist(8, seed=3)
+    b = D.synth_mnist(8, seed=3)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    c = D.synth_mnist(8, seed=4)
+    assert np.abs(a[0] - c[0]).max() > 0
+
+
+def test_classes_are_distinguishable():
+    """Mean intra-class pixel distance must be well below inter-class —
+    the dataset actually encodes its labels."""
+    x, y = D.synth_mnist(200, seed=5)
+    x = x.reshape(len(x), -1)
+    intra, inter = [], []
+    for c in range(10):
+        xc = x[y == c]
+        if len(xc) < 2:
+            continue
+        mu = xc.mean(axis=0)
+        intra.append(np.linalg.norm(xc - mu, axis=1).mean())
+        rest = x[y != c]
+        inter.append(np.linalg.norm(rest - mu, axis=1).mean())
+    assert np.mean(intra) < np.mean(inter)
+
+
+def test_batches_cover_and_shuffle():
+    x = np.arange(40, dtype=np.float32).reshape(40, 1)
+    y = np.arange(40, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    seen = []
+    for xb, yb in D.batches(x, y, 8, rng):
+        assert xb.shape == (8, 1)
+        seen.extend(yb.tolist())
+    assert len(seen) == 40
+    assert sorted(seen) == list(range(40))
+    assert seen != list(range(40))  # shuffled
+
+
+def test_load_returns_held_out_test():
+    (xtr, ytr), (xte, yte), shape, n_cls = D.load("synth-mnist", 32, 16)
+    assert xtr.shape[0] == 32 and xte.shape[0] == 16
+    assert shape == (28, 28, 1) and n_cls == 10
+    # Train and test sets must not be identical.
+    assert np.abs(xtr[:16] - xte).max() > 0

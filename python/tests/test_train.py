@@ -1,0 +1,92 @@
+"""Training tests: losses, Adam, learning progress, Algorithm 1 wiring."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import train as T
+from compile import model as M
+
+
+def test_sdt_loss_uses_time_average():
+    # Two timesteps that cancel: SDT sees the mean.
+    o = jnp.asarray([[[10.0, 0.0], [-10.0, 0.0]]])  # (B=1, T=2, C=2)
+    y = jnp.asarray([0])
+    # mean logits = (0,0) -> CE = log(2)
+    loss = T.sdt_loss(o, y)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)
+
+
+def test_tet_loss_penalises_each_timestep():
+    o = jnp.asarray([[[10.0, 0.0], [-10.0, 0.0]]])
+    y = jnp.asarray([0])
+    # t0 is confidently right (CE ~ 0), t1 confidently wrong (CE ~ 10).
+    loss = float(T.tet_loss(o, y))
+    assert loss > 4.0
+    # SDT on the same outputs is much smaller — the TET difference.
+    assert loss > float(T.sdt_loss(o, y)) + 3.0
+
+
+def test_losses_equal_at_t1():
+    """At a single timestep SDT == TET by definition."""
+    rng = np.random.default_rng(0)
+    o = jnp.asarray(rng.normal(size=(4, 1, 10)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, 4))
+    np.testing.assert_allclose(float(T.sdt_loss(o, y)),
+                               float(T.tet_loss(o, y)), rtol=1e-6)
+
+
+def test_adam_converges_on_quadratic():
+    opt = T.Adam(lr=0.1)
+    params = [{"w": jnp.asarray([5.0, -3.0])}]
+    state = opt.init(params)
+    import jax
+    for _ in range(200):
+        grads = jax.tree_util.tree_map(lambda p: 2 * p, params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params[0]["w"]).max()) < 1e-2
+
+
+def test_training_reduces_loss():
+    cfg = T.TrainConfig(model="scnn3", timesteps=2, loss="tet", epochs=2,
+                        n_train=128, n_test=64, batch_size=16, width=0.25,
+                        lr=3e-3)
+    res = T.train(cfg, verbose=False)
+    first_loss = res.history[0][1]
+    last_loss = res.history[-1][1]
+    assert last_loss < first_loss, f"{first_loss} -> {last_loss}"
+
+
+def test_evaluate_returns_sfr_per_layer():
+    cfg = T.TrainConfig(model="scnn3", timesteps=1, loss="tet", epochs=1,
+                        n_train=64, n_test=64, batch_size=16, width=0.25)
+    res = T.train(cfg, verbose=False)
+    n_spiking = sum(1 for s in res.specs
+                    if isinstance(s, (M.Conv, M.DWConv, M.PWConv,
+                                      M.Residual)))
+    assert res.sfr.shape == (n_spiking,)
+    assert (res.sfr >= 0).all() and (res.sfr <= 1).all()
+
+
+def test_temporal_pruning_pipeline_runs():
+    cfg = T.TrainConfig(model="scnn3", timesteps=3, loss="tet", epochs=1,
+                        n_train=96, n_test=64, batch_size=16, width=0.25)
+    pr = T.temporal_pruning(cfg, t_de=1, finetune_epochs=1,
+                            eval_timesteps=(3, 1), verbose=False)
+    assert set(pr.reduced_acc) == {3, 1}
+    assert 0.0 <= pr.finetuned.test_acc <= 1.0
+    # Fine-tuned weights must differ from base (training happened).
+    w0 = np.asarray(pr.base.params[0]["w"])
+    w1 = np.asarray(pr.finetuned.params[0]["w"])
+    assert np.abs(w0 - w1).max() > 0
+
+
+def test_finetune_warm_start_uses_base_weights():
+    cfg = T.TrainConfig(model="scnn3", timesteps=1, loss="tet", epochs=0,
+                        n_train=64, n_test=64, batch_size=16, width=0.25)
+    base = T.train(cfg, verbose=False)
+    # 0-epoch "training" from a warm start returns exactly the start.
+    again = T.train(cfg, init_params=base.params, verbose=False)
+    for p, q in zip(base.params, again.params):
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(p[k]),
+                                          np.asarray(q[k]))

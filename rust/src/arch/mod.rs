@@ -1,0 +1,540 @@
+//! Hardware architecture description: layers, networks, design points.
+//!
+//! This is the shared vocabulary between the python compile path
+//! (`model.spec_dicts` -> `artifacts/<model>/net.json`), the analytical
+//! dataflow models (`crate::dataflow`), the cycle-level simulator
+//! (`crate::sim`) and the streaming coordinator (`crate::coordinator`).
+//!
+//! Terminology follows the paper: `Ci/Co` input/output channels,
+//! `Hi/Wi/Ho/Wo` feature-map sizes, `Kh/Kw` kernel sizes, `T` inference
+//! timesteps, and per-conv-layer **parallel factors** for output-channel
+//! parallelism (SectionIV-E.2).
+
+use crate::util::json::Json;
+
+/// Convolution mode of the multi-mode PE (paper Fig. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvMode {
+    /// Standard convolution: accumulate across input channels (Fig. 8b).
+    Standard,
+    /// Depthwise: per-channel taps, no cross-channel accumulation (8c).
+    Depthwise,
+    /// Pointwise 1x1: no psum adder tree, direct threshold (8d).
+    Pointwise,
+}
+
+/// One layer of the network, with its input geometry resolved.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    Conv(ConvLayer),
+    /// 2x2 stride-2 OR pooling (Fig. 7b).
+    Pool { in_h: usize, in_w: usize, c: usize },
+    /// Classifier head; output neurons do not fire.
+    Fc { n_in: usize, n_out: usize },
+}
+
+/// Geometry + mode of one convolutional layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub mode: ConvMode,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub ci: usize,
+    pub co: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub pad: usize,
+    /// Spike-encoding layer: receives the analog frame, runs *outside*
+    /// the accelerator (paper SectionV-A: "the first convolution layer is
+    /// used for spike encoding, with the encoded spikes serving as the
+    /// input to the accelerator"). Excluded from ops/latency accounting.
+    pub encoder: bool,
+    /// Output-channel parallel factor (SectionIV-E.2); 1 = no parallelism.
+    pub parallel: usize,
+}
+
+impl ConvLayer {
+    pub fn out_h(&self) -> usize {
+        self.in_h + 2 * self.pad - self.kh + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.in_w + 2 * self.pad - self.kw + 1
+    }
+
+    /// Synaptic operations (accumulates) per timestep — the paper's "OPs"
+    /// (Table IV: GOPS = kFPS x MOPs with MOPs = per-frame accumulates).
+    pub fn ops(&self) -> u64 {
+        let (ho, wo) = (self.out_h() as u64, self.out_w() as u64);
+        match self.mode {
+            ConvMode::Standard => {
+                ho * wo * self.co as u64 * self.ci as u64
+                    * (self.kh * self.kw) as u64
+            }
+            ConvMode::Depthwise => {
+                ho * wo * self.co as u64 * (self.kh * self.kw) as u64
+            }
+            ConvMode::Pointwise => ho * wo * self.co as u64 * self.ci as u64,
+        }
+    }
+
+    /// Number of PEs this layer's compute array instantiates:
+    /// `Kh*Kw` per output-channel lane (paper SectionIV-B).
+    pub fn pes(&self) -> usize {
+        self.kh * self.kw * self.parallel
+    }
+
+    /// int8 weight footprint in bytes.
+    pub fn weight_bytes(&self) -> usize {
+        match self.mode {
+            ConvMode::Standard => self.kh * self.kw * self.ci * self.co,
+            ConvMode::Depthwise => self.kh * self.kw * self.co,
+            ConvMode::Pointwise => self.ci * self.co,
+        }
+    }
+
+    /// Membrane-potential buffer bytes needed when T > 1 (eliminated at
+    /// T = 1 — the paper's headline storage saving, Fig. 11).
+    ///
+    /// 18-bit fixed-point potentials, one per output pixel: the Xilinx
+    /// BRAM18 native word width, and the precision that reproduces the
+    /// paper's "126 KB saved" for SCNN5 (55296 neurons x 18 bit
+    /// = 124.4 KB).
+    pub fn vmem_bytes(&self) -> usize {
+        (self.out_h() * self.out_w() * self.co * 18).div_ceil(8)
+    }
+}
+
+impl Layer {
+    pub fn ops(&self) -> u64 {
+        match self {
+            Layer::Conv(c) if !c.encoder => c.ops(),
+            Layer::Conv(_) => 0,
+            Layer::Pool { .. } => 0, // OR gates; not counted as synaptic ops
+            Layer::Fc { n_in, n_out } => (*n_in * *n_out) as u64,
+        }
+    }
+
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        match self {
+            Layer::Conv(c) => (c.out_h(), c.out_w(), c.co),
+            Layer::Pool { in_h, in_w, c } => (in_h / 2, in_w / 2, *c),
+            Layer::Fc { n_out, .. } => (1, 1, *n_out),
+        }
+    }
+
+    pub fn in_shape(&self) -> (usize, usize, usize) {
+        match self {
+            Layer::Conv(c) => (c.in_h, c.in_w, c.ci),
+            Layer::Pool { in_h, in_w, c } => (*in_h, *in_w, *c),
+            Layer::Fc { n_in, .. } => (1, 1, *n_in),
+        }
+    }
+}
+
+/// A full network bound to an input geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl NetworkSpec {
+    /// Total accelerator ops per frame per timestep (encoder excluded).
+    pub fn ops_per_frame(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    /// Total PE count across conv layers (the streaming architecture
+    /// instantiates every layer's array; paper Table V "PE Array Size").
+    pub fn total_pes(&self) -> usize {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(c) if !c.encoder => Some(c.pes()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Conv layers that run on the accelerator (encoder excluded),
+    /// in order — the unit of per-layer parallel-factor assignment.
+    pub fn accel_convs(&self) -> Vec<&ConvLayer> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(c) if !c.encoder => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Assign per-conv-layer parallel factors (encoder excluded).
+    /// Panics if `factors.len()` does not match the conv-layer count.
+    pub fn with_parallel_factors(mut self, factors: &[usize]) -> Self {
+        let mut it = factors.iter();
+        for l in self.layers.iter_mut() {
+            if let Layer::Conv(c) = l {
+                if !c.encoder {
+                    c.parallel = *it
+                        .next()
+                        .expect("parallel factor count != conv layer count");
+                }
+            }
+        }
+        assert!(it.next().is_none(),
+                "parallel factor count != conv layer count");
+        self
+    }
+
+    /// Total Vmem buffer bytes at the given timestep count (0 at T = 1).
+    pub fn vmem_bytes(&self, timesteps: usize) -> usize {
+        if timesteps <= 1 {
+            return 0;
+        }
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(c) if !c.encoder => Some(c.vmem_bytes()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.weight_bytes(),
+                Layer::Fc { n_in, n_out } => n_in * n_out,
+                Layer::Pool { .. } => 0,
+            })
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders + the paper's three deployed models (SectionV-A)
+// ---------------------------------------------------------------------------
+
+/// Incremental network builder tracking feature-map geometry.
+pub struct NetBuilder {
+    name: String,
+    input: (usize, usize, usize),
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<Layer>,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, input: (usize, usize, usize)) -> Self {
+        Self {
+            name: name.to_string(),
+            input,
+            h: input.0,
+            w: input.1,
+            c: input.2,
+            layers: Vec::new(),
+        }
+    }
+
+    fn push_conv(mut self, mode: ConvMode, co: usize, k: usize, pad: usize,
+                 encoder: bool) -> Self {
+        let l = ConvLayer {
+            mode,
+            in_h: self.h,
+            in_w: self.w,
+            ci: self.c,
+            co,
+            kh: k,
+            kw: k,
+            pad,
+            encoder,
+            parallel: 1,
+        };
+        self.h = l.out_h();
+        self.w = l.out_w();
+        self.c = co;
+        self.layers.push(Layer::Conv(l));
+        self
+    }
+
+    /// Standard conv co filters of k x k ('same' padding for odd k).
+    pub fn conv(self, co: usize, k: usize) -> Self {
+        self.push_conv(ConvMode::Standard, co, k, k / 2, false)
+    }
+
+    /// Spike-encoding conv (runs off-accelerator).
+    pub fn encoder(self, co: usize, k: usize) -> Self {
+        self.push_conv(ConvMode::Standard, co, k, k / 2, true)
+    }
+
+    pub fn dwconv(self, k: usize) -> Self {
+        let c = self.c;
+        self.push_conv(ConvMode::Depthwise, c, k, k / 2, false)
+    }
+
+    pub fn pwconv(self, co: usize) -> Self {
+        self.push_conv(ConvMode::Pointwise, co, 1, 0, false)
+    }
+
+    pub fn pool(mut self) -> Self {
+        self.layers.push(Layer::Pool { in_h: self.h, in_w: self.w, c: self.c });
+        self.h /= 2;
+        self.w /= 2;
+        self
+    }
+
+    pub fn fc(mut self, n_out: usize) -> Self {
+        let n_in = self.h * self.w * self.c;
+        self.layers.push(Layer::Fc { n_in, n_out });
+        self
+    }
+
+    pub fn build(self) -> NetworkSpec {
+        NetworkSpec { name: self.name, input: self.input, layers: self.layers }
+    }
+}
+
+/// SCNN3 (MNIST): `28x28 16c3-32c3-p2-32c3-p2-fc`.
+pub fn scnn3() -> NetworkSpec {
+    NetBuilder::new("scnn3", (28, 28, 1))
+        .encoder(16, 3)
+        .conv(32, 3)
+        .pool()
+        .conv(32, 3)
+        .pool()
+        .fc(10)
+        .build()
+}
+
+/// SCNN5 (CIFAR10): `32x32 64c3-p2-128c3-p2-256c3-p2-256c3-p2-512c3-p2-fc`.
+pub fn scnn5() -> NetworkSpec {
+    NetBuilder::new("scnn5", (32, 32, 3))
+        .encoder(64, 3)
+        .pool()
+        .conv(128, 3)
+        .pool()
+        .conv(256, 3)
+        .pool()
+        .conv(256, 3)
+        .pool()
+        .conv(512, 3)
+        .pool()
+        .fc(10)
+        .build()
+}
+
+/// vMobileNet (MNIST): `28x28 16c3-16dwc3/32c1-32dwc3/64c1-64dwc3/64c1-
+/// 64dwc3/128c1-fc` (pooling after blocks 1 and 3 — DESIGN.md note).
+pub fn vmobilenet() -> NetworkSpec {
+    NetBuilder::new("vmobilenet", (28, 28, 1))
+        .encoder(16, 3)
+        .dwconv(3)
+        .pwconv(32)
+        .pool()
+        .dwconv(3)
+        .pwconv(64)
+        .dwconv(3)
+        .pwconv(64)
+        .pool()
+        .dwconv(3)
+        .pwconv(128)
+        .fc(10)
+        .build()
+}
+
+pub fn by_name(name: &str) -> Option<NetworkSpec> {
+    match name {
+        "scnn3" => Some(scnn3()),
+        "scnn5" => Some(scnn5()),
+        "vmobilenet" => Some(vmobilenet()),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// net.json interchange (written by python/compile/aot.py)
+// ---------------------------------------------------------------------------
+
+impl NetworkSpec {
+    /// Parse the `net.json` emitted by the compile path.
+    pub fn from_json(j: &Json) -> anyhow::Result<NetworkSpec> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("net")
+            .to_string();
+        let input = j
+            .get("input")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("net.json: missing input"))?;
+        let input = (
+            input[0].as_usize().unwrap_or(0),
+            input[1].as_usize().unwrap_or(0),
+            input[2].as_usize().unwrap_or(0),
+        );
+        let mut layers = Vec::new();
+        for l in j
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("net.json: missing layers"))?
+        {
+            let kind = l.get("kind").and_then(|v| v.as_str()).unwrap_or("");
+            let g = |k: &str| l.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            match kind {
+                "conv" | "dwconv" | "pwconv" => {
+                    let mode = match kind {
+                        "conv" => ConvMode::Standard,
+                        "dwconv" => ConvMode::Depthwise,
+                        _ => ConvMode::Pointwise,
+                    };
+                    layers.push(Layer::Conv(ConvLayer {
+                        mode,
+                        in_h: g("in_h"),
+                        in_w: g("in_w"),
+                        ci: g("in_c"),
+                        co: g("co"),
+                        kh: g("k").max(1),
+                        kw: g("k").max(1),
+                        pad: g("pad"),
+                        encoder: l
+                            .get("encoder")
+                            .and_then(|v| v.as_bool())
+                            .unwrap_or(false),
+                        parallel: 1,
+                    }));
+                }
+                "pool" => layers.push(Layer::Pool {
+                    in_h: g("in_h"),
+                    in_w: g("in_w"),
+                    c: g("in_c"),
+                }),
+                "fc" => layers.push(Layer::Fc {
+                    n_in: g("in_h") * g("in_w") * g("in_c"),
+                    n_out: g("out"),
+                }),
+                "residual" => {
+                    // Residual blocks are a training-side construct; the
+                    // deployed nets (scnn3/scnn5/vmobilenet) do not use
+                    // them. Map to two standard convs for accounting.
+                    let (h, w, ci, co) = (g("in_h"), g("in_w"), g("in_c"),
+                                          g("co"));
+                    for (a, b) in [(ci, co), (co, co)] {
+                        layers.push(Layer::Conv(ConvLayer {
+                            mode: ConvMode::Standard,
+                            in_h: h,
+                            in_w: w,
+                            ci: a,
+                            co: b,
+                            kh: 3,
+                            kw: 3,
+                            pad: 1,
+                            encoder: false,
+                            parallel: 1,
+                        }));
+                    }
+                }
+                other => anyhow::bail!("net.json: unknown layer kind {other}"),
+            }
+        }
+        Ok(NetworkSpec { name, input, layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scnn3_geometry() {
+        let n = scnn3();
+        assert_eq!(n.layers.len(), 6);
+        // Encoder 16c3 on 28x28 keeps size; pools halve twice -> 7x7x32.
+        let shapes: Vec<_> = n.layers.iter().map(|l| l.out_shape()).collect();
+        assert_eq!(shapes[0], (28, 28, 16));
+        assert_eq!(shapes[4], (7, 7, 32));
+        assert_eq!(shapes[5], (1, 1, 10));
+    }
+
+    /// Ops budgets must land on the paper's Table IV MOPs to a few %:
+    /// SCNN3 5.43 MOPs, SCNN5 51.9 MOPs, vMobileNet 2.59 MOPs.
+    #[test]
+    fn ops_match_paper_table4() {
+        let scnn3_mops = scnn3().ops_per_frame() as f64 / 1e6;
+        assert!((scnn3_mops - 5.43).abs() < 0.3, "scnn3 {scnn3_mops}");
+        let scnn5_mops = scnn5().ops_per_frame() as f64 / 1e6;
+        assert!((scnn5_mops - 51.9).abs() < 2.0, "scnn5 {scnn5_mops}");
+        let vm_mops = vmobilenet().ops_per_frame() as f64 / 1e6;
+        assert!((vm_mops - 2.59).abs() < 0.6, "vmobilenet {vm_mops}");
+    }
+
+    /// Paper Table V: PE array sizes 54 (SCNN3 @ (4,2)), 99 (SCNN5 @
+    /// (4,4,2,1)), 40 (vMobileNet, no parallelism).
+    #[test]
+    fn pe_counts_match_paper_table5() {
+        let s3 = scnn3().with_parallel_factors(&[4, 2]);
+        assert_eq!(s3.total_pes(), 54); // 9*4 + 9*2
+        let s5 = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        assert_eq!(s5.total_pes(), 99); // 9*(4+4+2+1)
+        let vm = vmobilenet();
+        // 4 dw blocks (9 PEs each) + 4 pw blocks (1 PE each) = 40.
+        assert_eq!(vm.total_pes(), 40);
+    }
+
+    #[test]
+    fn vmem_zero_at_t1() {
+        let n = scnn5();
+        assert_eq!(n.vmem_bytes(1), 0);
+        assert!(n.vmem_bytes(2) > 0);
+    }
+
+    /// Fig. 11: T=2 needs ~126 KB of membrane-potential storage that
+    /// T=1 eliminates (SCNN5, conv2..conv5).
+    #[test]
+    fn scnn5_vmem_saving_is_about_126kb() {
+        let kb = scnn5().vmem_bytes(2) as f64 / 1024.0;
+        assert!((kb - 126.0).abs() < 40.0, "vmem {kb} KB");
+    }
+
+    #[test]
+    fn parallel_factor_assignment() {
+        let n = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let factors: Vec<_> =
+            n.accel_convs().iter().map(|c| c.parallel).collect();
+        assert_eq!(factors, vec![4, 4, 2, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_factor_count_panics() {
+        let _ = scnn5().with_parallel_factors(&[4, 4]);
+    }
+
+    #[test]
+    fn json_roundtrip_net() {
+        let src = r#"{
+          "name": "t", "input": [8, 8, 2],
+          "layers": [
+            {"kind": "conv", "in_h": 8, "in_w": 8, "in_c": 2, "co": 4,
+             "k": 3, "pad": 1, "encoder": true},
+            {"kind": "pool", "in_h": 8, "in_w": 8, "in_c": 4},
+            {"kind": "fc", "in_h": 4, "in_w": 4, "in_c": 4, "out": 10}
+          ]}"#;
+        let net = NetworkSpec::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[2].out_shape(), (1, 1, 10));
+    }
+
+    #[test]
+    fn dwconv_preserves_channels_pwconv_changes() {
+        let n = vmobilenet();
+        let convs = n.accel_convs();
+        assert_eq!(convs[0].mode, ConvMode::Depthwise);
+        assert_eq!(convs[0].ci, convs[0].co);
+        assert_eq!(convs[1].mode, ConvMode::Pointwise);
+        assert_eq!(convs[1].co, 32);
+    }
+}

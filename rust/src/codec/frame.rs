@@ -1,0 +1,160 @@
+//! Dense spike frame: (H, W, C) binary feature map, channel-last.
+//!
+//! Matches the python/L1 layout (`kernels/ref.py` conventions): channel-
+//! last so a pixel's spike vector (all C channels, channel-sorted) is
+//! contiguous — the paper's compressed & sorted representation.
+
+use super::SpikeVector;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpikeFrame {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major (y, x, c) bitset packed into u64 words per pixel would
+    /// waste space for small C; we store one bit per (y,x,c) in a flat
+    /// bitvec with pixel-major order: index = (y*w + x)*c + ch.
+    bits: Vec<u64>,
+}
+
+impl SpikeFrame {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, bits: vec![0; (h * w * c).div_ceil(64)] }
+    }
+
+    /// Bernoulli(rate) random frame — synthetic workload generator.
+    pub fn random(h: usize, w: usize, c: usize, rate: f64,
+                  rng: &mut Rng) -> Self {
+        let mut f = Self::zeros(h, w, c);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    if rng.bernoulli(rate) {
+                        f.set(y, x, ch);
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Build from f32 {0,1} planes in (H, W, C) order (the python side's
+    /// layout; used when loading spike tensors produced by the runtime).
+    pub fn from_f32(h: usize, w: usize, c: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), h * w * c);
+        let mut f = Self::zeros(h, w, c);
+        for (i, &v) in data.iter().enumerate() {
+            if v >= 0.5 {
+                let ch = i % c;
+                let x = (i / c) % w;
+                let y = i / (c * w);
+                f.set(y, x, ch);
+            }
+        }
+        f
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.h * self.w * self.c];
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..self.c {
+                    if self.get(y, x, ch) {
+                        out[(y * self.w + x) * self.c + ch] = 1.0;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[inline]
+    fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize) {
+        let i = self.idx(y, x, ch);
+        self.bits[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> bool {
+        let i = self.idx(y, x, ch);
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Extract the spike vector (all channels) at one pixel.
+    pub fn vector(&self, y: usize, x: usize) -> SpikeVector {
+        let mut v = SpikeVector::zeros(self.c);
+        for ch in 0..self.c {
+            if self.get(y, x, ch) {
+                v.set(ch);
+            }
+        }
+        v
+    }
+
+    /// Write a spike vector into one pixel.
+    pub fn set_vector(&mut self, y: usize, x: usize, v: &SpikeVector) {
+        debug_assert_eq!(v.channels, self.c);
+        for ch in v.iter_active() {
+            self.set(y, x, ch);
+        }
+    }
+
+    /// Total spike count.
+    pub fn count(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Mean firing rate.
+    pub fn rate(&self) -> f64 {
+        self.count() as f64 / (self.h * self.w * self.c) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut f = SpikeFrame::zeros(4, 5, 3);
+        f.set(0, 0, 0);
+        f.set(3, 4, 2);
+        f.set(1, 2, 1);
+        assert!(f.get(0, 0, 0) && f.get(3, 4, 2) && f.get(1, 2, 1));
+        assert!(!f.get(0, 0, 1));
+        assert_eq!(f.count(), 3);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(3);
+        let f = SpikeFrame::random(6, 7, 5, 0.4, &mut rng);
+        let back = SpikeFrame::from_f32(6, 7, 5, &f.to_f32());
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn vector_extraction_matches_get() {
+        let mut f = SpikeFrame::zeros(2, 2, 70);
+        f.set(1, 0, 0);
+        f.set(1, 0, 69);
+        let v = f.vector(1, 0);
+        assert_eq!(v.popcount(), 2);
+        assert!(v.get(0) && v.get(69));
+        assert!(f.vector(0, 0).is_empty());
+    }
+
+    #[test]
+    fn random_rate_is_close() {
+        let mut rng = Rng::new(11);
+        let f = SpikeFrame::random(32, 32, 16, 0.25, &mut rng);
+        assert!((f.rate() - 0.25).abs() < 0.03, "rate {}", f.rate());
+    }
+}

@@ -1,0 +1,254 @@
+//! Compressed & sorted spike representation + spike-event encoding.
+//!
+//! Paper SectionIV-C: one **spike vector** per pixel holds the spikes of all
+//! `C` channels at that location, in channel order, so a single memory
+//! access fetches the whole vector ("compressed and sorted").  Here a
+//! spike vector is a bit-packed `Vec<u64>` of `C` bits.
+//!
+//! Paper SectionIV-E.1: between pipeline stages, sparse frames are encoded as
+//! **spike events** of `log2(Hi) + log2(Wi) + Ci` bits — coordinates plus
+//! the raw channel vector — and only non-empty pixels are transmitted.
+//! `EventCodec` implements that encoding, its decoder, and the
+//! bits-on-the-wire accounting used by the interconnect energy model.
+
+pub mod frame;
+
+pub use frame::SpikeFrame;
+
+/// Bit-packed spike vector: one pixel, `C` channels, channel-sorted.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SpikeVector {
+    pub channels: usize,
+    words: Vec<u64>,
+}
+
+impl SpikeVector {
+    pub fn zeros(channels: usize) -> Self {
+        Self { channels, words: vec![0; channels.div_ceil(64)] }
+    }
+
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut v = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize) {
+        debug_assert!(c < self.channels);
+        self.words[c / 64] |= 1 << (c % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize) -> bool {
+        debug_assert!(c < self.channels);
+        (self.words[c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    /// Number of active channels (spike count at this pixel).
+    pub fn popcount(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Logical OR (the pooling primitive, Fig. 7b).
+    pub fn or(&self, other: &SpikeVector) -> SpikeVector {
+        debug_assert_eq!(self.channels, other.channels);
+        SpikeVector {
+            channels: self.channels,
+            words: self
+                .words
+                .iter()
+                .zip(&other.words)
+                .map(|(a, b)| a | b)
+                .collect(),
+        }
+    }
+
+    /// Iterate active channel indices in sorted order — the "sorted"
+    /// property the PE weight-fetch sequencer relies on.
+    pub fn iter_active(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut rem = w;
+            std::iter::from_fn(move || {
+                if rem == 0 {
+                    None
+                } else {
+                    let b = rem.trailing_zeros() as usize;
+                    rem &= rem - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Raw words (for width accounting / hashing).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// One spike event on the inter-layer link: pixel coordinates + the
+/// pixel's channel vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpikeEvent {
+    pub y: u16,
+    pub x: u16,
+    pub vector: SpikeVector,
+}
+
+/// Encoder/decoder for the inter-layer event stream (paper SectionIV-E.1).
+#[derive(Debug, Clone)]
+pub struct EventCodec {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CodecStats {
+    /// Pixels with at least one spike (events transmitted).
+    pub events: usize,
+    /// Total pixels scanned.
+    pub pixels: usize,
+    /// Bits on the wire with event encoding.
+    pub encoded_bits: u64,
+    /// Bits a dense (raw bitmap) transfer would need.
+    pub dense_bits: u64,
+}
+
+impl CodecStats {
+    /// Compression ratio dense/encoded (>1 = encoding wins).
+    pub fn ratio(&self) -> f64 {
+        if self.encoded_bits == 0 {
+            f64::INFINITY
+        } else {
+            self.dense_bits as f64 / self.encoded_bits as f64
+        }
+    }
+}
+
+impl EventCodec {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c }
+    }
+
+    /// Bits per event: `log2(Hi) + log2(Wi) + Ci` (paper SectionIV-E.1).
+    pub fn bits_per_event(&self) -> u64 {
+        (usize::BITS - (self.h - 1).leading_zeros()) as u64
+            + (usize::BITS - (self.w - 1).leading_zeros()) as u64
+            + self.c as u64
+    }
+
+    /// Encode a frame into its non-empty pixel events (+ wire stats).
+    pub fn encode(&self, frame: &SpikeFrame) -> (Vec<SpikeEvent>, CodecStats) {
+        assert_eq!((frame.h, frame.w, frame.c), (self.h, self.w, self.c));
+        let mut events = Vec::new();
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let v = frame.vector(y, x);
+                if !v.is_empty() {
+                    events.push(SpikeEvent {
+                        y: y as u16,
+                        x: x as u16,
+                        vector: v,
+                    });
+                }
+            }
+        }
+        let stats = CodecStats {
+            events: events.len(),
+            pixels: self.h * self.w,
+            encoded_bits: events.len() as u64 * self.bits_per_event(),
+            dense_bits: (self.h * self.w * self.c) as u64,
+        };
+        (events, stats)
+    }
+
+    /// Decode events back into a dense frame (the hardware decoder).
+    pub fn decode(&self, events: &[SpikeEvent]) -> SpikeFrame {
+        let mut f = SpikeFrame::zeros(self.h, self.w, self.c);
+        for e in events {
+            for ch in e.vector.iter_active() {
+                f.set(e.y as usize, e.x as usize, ch);
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn vector_set_get_popcount() {
+        let mut v = SpikeVector::zeros(130);
+        v.set(0);
+        v.set(64);
+        v.set(129);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1));
+        assert_eq!(v.popcount(), 3);
+        assert_eq!(v.iter_active().collect::<Vec<_>>(), vec![0, 64, 129]);
+    }
+
+    #[test]
+    fn vector_or_is_union() {
+        let a = SpikeVector::from_bits(&[true, false, true, false]);
+        let b = SpikeVector::from_bits(&[false, false, true, true]);
+        let o = a.or(&b);
+        assert_eq!(o.iter_active().collect::<Vec<_>>(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn bits_per_event_formula() {
+        // 28x28x16: log2(28)->5 bits, log2(28)->5 bits, 16 channel bits.
+        let c = EventCodec::new(28, 28, 16);
+        assert_eq!(c.bits_per_event(), 5 + 5 + 16);
+        // Powers of two need exactly log2 bits.
+        let c = EventCodec::new(32, 32, 64);
+        assert_eq!(c.bits_per_event(), 5 + 5 + 64);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut rng = Rng::new(42);
+        let f = SpikeFrame::random(16, 16, 32, 0.2, &mut rng);
+        let codec = EventCodec::new(16, 16, 32);
+        let (events, stats) = codec.encode(&f);
+        assert_eq!(stats.pixels, 256);
+        let back = codec.decode(&events);
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn sparse_frames_compress() {
+        let mut rng = Rng::new(7);
+        let codec = EventCodec::new(32, 32, 64);
+        // 5% firing rate: most pixels empty -> encoding wins big.
+        let f = SpikeFrame::random(32, 32, 64, 0.002, &mut rng);
+        let (_, stats) = codec.encode(&f);
+        assert!(stats.ratio() > 2.0, "ratio {}", stats.ratio());
+        // Dense frame: encoding loses (coordinate overhead).
+        let f = SpikeFrame::random(32, 32, 64, 0.9, &mut rng);
+        let (_, stats) = codec.encode(&f);
+        assert!(stats.ratio() < 1.0);
+    }
+
+    #[test]
+    fn empty_frame_zero_events() {
+        let f = SpikeFrame::zeros(8, 8, 16);
+        let (events, stats) = EventCodec::new(8, 8, 16).encode(&f);
+        assert!(events.is_empty());
+        assert_eq!(stats.encoded_bits, 0);
+    }
+}

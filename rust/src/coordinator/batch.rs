@@ -1,0 +1,131 @@
+//! Frame batching / request queue for the serving path (host side of
+//! paper Fig. 10).
+//!
+//! The TCP server enqueues requests; the accelerator thread drains them
+//! in batches (larger batches amortise the pipeline fill, Eq. 11).
+//! Plain std sync — tokio is not vendored in this environment.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::codec::SpikeFrame;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub frame: SpikeFrame,
+    pub enqueued_at: Instant,
+}
+
+/// Thread-safe batching queue with a max-batch / max-wait policy.
+pub struct Batcher {
+    inner: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&self, req: Request) {
+        self.inner.lock().unwrap().push_back(req);
+        self.cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take the next batch: waits up to `max_wait` for the first
+    /// request, then drains up to `max_batch`. Returns an empty vec on
+    /// timeout with nothing queued.
+    pub fn next_batch(&self) -> Vec<Request> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout_while(q, self.max_wait, |q| q.is_empty())
+                .unwrap();
+            q = guard;
+        }
+        let n = q.len().min(self.max_batch);
+        q.drain(..n).collect()
+    }
+
+    /// Non-blocking variant used by the simulator-driven loop.
+    pub fn try_batch(&self) -> Vec<Request> {
+        let mut q = self.inner.lock().unwrap();
+        let n = q.len().min(self.max_batch);
+        q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            frame: SpikeFrame::zeros(4, 4, 2),
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let b = Batcher::new(3, Duration::from_millis(10));
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        assert_eq!(b.try_batch().len(), 3);
+        assert_eq!(b.try_batch().len(), 3);
+        assert_eq!(b.try_batch().len(), 1);
+        assert!(b.try_batch().is_empty());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let b = Batcher::new(8, Duration::from_millis(10));
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let ids: Vec<u64> = b.try_batch().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn next_batch_times_out_empty() {
+        let b = Batcher::new(4, Duration::from_millis(5));
+        let batch = b.next_batch();
+        assert!(batch.is_empty());
+    }
+
+    #[test]
+    fn cross_thread_wakeup() {
+        let b = Arc::new(Batcher::new(4, Duration::from_secs(2)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(req(42));
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 42);
+    }
+}

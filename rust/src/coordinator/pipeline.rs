@@ -1,0 +1,472 @@
+//! The layer-wise pipelined streaming accelerator (paper Fig. 5/9).
+//!
+//! Every network layer gets a dedicated hardware engine; layers are
+//! connected by FIFOs carrying spike-event-encoded frames
+//! (SectionIV-E.1).  Frames stream through with the classic pipeline
+//! timing of Eq. (10): after the pipe fills, a new frame completes
+//! every `T_max` (bottleneck layer) cycles.
+//!
+//! The simulator runs layers *functionally in sequence* per frame (the
+//! result is identical — the handshake only affects timing) and applies
+//! the pipeline overlap in the cycle accounting, which the integration
+//! tests cross-check against `dataflow::pipeline_latency`.
+
+use crate::arch::{Layer, NetworkSpec};
+use crate::codec::{EventCodec, SpikeFrame};
+use crate::dataflow::ConvLatencyParams;
+use crate::sim::conv_engine::{ConvEngine, ConvWeights};
+use crate::sim::energy::{EnergyModel, EnergyReport};
+use crate::sim::fc_engine::FcEngine;
+use crate::sim::memory::AccessCounter;
+use crate::sim::pool_engine::PoolEngine;
+use crate::sim::resources::{ResourceModel, ResourceReport};
+use crate::sim::{cycles_to_ms, CLK_HZ};
+
+/// Per-layer weight source for pipeline construction.
+pub enum LayerParams {
+    /// Deterministic random weights (hardware-only experiments — cycle
+    /// and traffic counts are weight-independent).
+    Random { seed: u64 },
+    /// Real quantised weights from `artifacts/` (e2e accuracy runs).
+    Conv(ConvWeights),
+    Fc { weights: Vec<i8>, scale: f32, bias: Vec<f32> },
+}
+
+/// Pipeline construction options.
+pub struct PipelineConfig {
+    pub timesteps: usize,
+    pub timing: ConvLatencyParams,
+    /// Layer-wise pipelining on (Eq. 10) or off (frames serialised).
+    pub pipelined: bool,
+    pub energy: EnergyModel,
+    pub resources: ResourceModel,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            timesteps: 1,
+            timing: ConvLatencyParams::optimized(),
+            pipelined: true,
+            energy: EnergyModel::default(),
+            resources: ResourceModel::default(),
+        }
+    }
+}
+
+enum Engine {
+    Conv(ConvEngine),
+    Pool(PoolEngine),
+    Fc(FcEngine),
+}
+
+/// Aggregated results of running N frames through the pipeline.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub frames: u64,
+    /// Per-layer cycles for ONE frame (all timesteps).
+    pub layer_cycles: Vec<u64>,
+    /// Per-layer names for reporting.
+    pub layer_names: Vec<String>,
+    /// Pipeline interval = max layer cycles (Eq. 11 asymptote).
+    pub t_max: u64,
+    /// Sum of per-layer cycles (unpipelined frame latency).
+    pub t_sum: u64,
+    /// Total cycles for the batch under the configured mode.
+    pub total_cycles: u64,
+    /// Synaptic ops per frame.
+    pub ops_per_frame: u64,
+    /// Aggregated memory traffic (whole batch).
+    pub counters: AccessCounter,
+    /// Per-layer dynamic energy for ONE frame.
+    pub layer_energy: Vec<EnergyReport>,
+    /// Per-layer Vmem buffer bytes (0 at T = 1 — Fig. 11).
+    pub layer_vmem_bytes: Vec<usize>,
+    /// Inter-layer event-stream compression ratios.
+    pub codec_ratios: Vec<f64>,
+    /// Classifier outputs per frame.
+    pub predictions: Vec<usize>,
+    /// Design resources.
+    pub resources: ResourceReport,
+    /// PE count of the design.
+    pub pes: usize,
+}
+
+impl PipelineReport {
+    pub fn fps(&self) -> f64 {
+        self.frames as f64 / (self.total_cycles as f64 / CLK_HZ)
+    }
+
+    pub fn latency_ms_per_frame(&self) -> f64 {
+        cycles_to_ms(self.total_cycles) / self.frames as f64
+    }
+
+    pub fn dynamic_energy_per_frame_j(&self) -> f64 {
+        self.layer_energy.iter().map(|e| e.total_j()).sum()
+    }
+
+    /// Average power (W) at the achieved FPS.
+    pub fn avg_power(&self, model: &EnergyModel) -> f64 {
+        model.avg_power(
+            self.dynamic_energy_per_frame_j(),
+            self.fps(),
+            self.pes,
+            self.resources.bram36,
+        )
+    }
+}
+
+/// The streaming pipeline.
+pub struct Pipeline {
+    pub net: NetworkSpec,
+    pub config: PipelineConfig,
+    engines: Vec<Engine>,
+    codecs: Vec<Option<EventCodec>>,
+}
+
+impl Pipeline {
+    /// Build engines for every accelerated layer. `params` supplies
+    /// weights per *conv/fc* layer in order (pool layers take none).
+    pub fn new(net: NetworkSpec, config: PipelineConfig,
+               mut params: Vec<LayerParams>) -> anyhow::Result<Self> {
+        let mut engines = Vec::new();
+        let mut codecs = Vec::new();
+        params.reverse(); // pop from the front
+        for layer in &net.layers {
+            match layer {
+                Layer::Conv(c) if c.encoder => {
+                    // Encoder runs off-accelerator (host / L2 artifact).
+                    continue;
+                }
+                Layer::Conv(c) => {
+                    let p = params.pop().ok_or_else(|| {
+                        anyhow::anyhow!("missing params for conv layer")
+                    })?;
+                    let w = match p {
+                        LayerParams::Random { seed } => {
+                            ConvWeights::random(c, seed)
+                        }
+                        LayerParams::Conv(w) => w,
+                        LayerParams::Fc { .. } => {
+                            anyhow::bail!("expected conv params, got fc")
+                        }
+                    };
+                    engines.push(Engine::Conv(ConvEngine::new(
+                        c.clone(), w, config.timing, config.timesteps)));
+                    let (h, wdt, ch) = (c.in_h, c.in_w, c.ci);
+                    codecs.push(Some(EventCodec::new(h, wdt, ch)));
+                }
+                Layer::Pool { in_h, in_w, c } => {
+                    engines.push(Engine::Pool(PoolEngine::new(
+                        *in_h, *in_w, *c)));
+                    codecs.push(None);
+                }
+                Layer::Fc { n_in, n_out } => {
+                    let p = params.pop().ok_or_else(|| {
+                        anyhow::anyhow!("missing params for fc layer")
+                    })?;
+                    let eng = match p {
+                        LayerParams::Random { seed } => {
+                            FcEngine::random(*n_in, *n_out, seed)
+                        }
+                        LayerParams::Fc { weights, scale, bias } => {
+                            FcEngine::new(*n_in, *n_out, weights, scale,
+                                          bias)
+                        }
+                        LayerParams::Conv(_) => {
+                            anyhow::bail!("expected fc params, got conv")
+                        }
+                    };
+                    engines.push(Engine::Fc(eng));
+                    codecs.push(None);
+                }
+            }
+        }
+        if !params.is_empty() {
+            anyhow::bail!("{} unused layer params", params.len());
+        }
+        Ok(Self { net, config, engines, codecs })
+    }
+
+    /// Convenience: random weights everywhere (hardware experiments).
+    pub fn random(net: NetworkSpec, config: PipelineConfig)
+                  -> anyhow::Result<Self> {
+        let n: usize = net
+            .layers
+            .iter()
+            .filter(|l| match l {
+                Layer::Conv(c) => !c.encoder,
+                Layer::Pool { .. } => false,
+                Layer::Fc { .. } => true,
+            })
+            .count();
+        let params =
+            (0..n).map(|i| LayerParams::Random { seed: 1000 + i as u64 })
+                  .collect();
+        Self::new(net, config, params)
+    }
+
+    /// Run a batch of (already spike-encoded) frames.
+    ///
+    /// Frames enter at the first accelerated layer: for nets with an
+    /// encoder conv, the caller supplies the encoder's output spikes
+    /// (from the PJRT runtime or a synthetic generator).
+    pub fn run(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
+        assert!(!frames.is_empty(), "empty batch");
+        let t = self.config.timesteps;
+        let mut layer_cycles = vec![0u64; self.engines.len()];
+        let mut layer_names = vec![String::new(); self.engines.len()];
+        let mut layer_energy = vec![EnergyReport::default();
+                                    self.engines.len()];
+        let mut layer_vmem = vec![0usize; self.engines.len()];
+        let mut counters = AccessCounter::new();
+        let mut ops_total = 0u64;
+        let mut codec_ratios = Vec::new();
+        let mut predictions = Vec::new();
+
+        for (fi, frame) in frames.iter().enumerate() {
+            let mut act = frame.clone();
+            for (li, eng) in self.engines.iter_mut().enumerate() {
+                match eng {
+                    Engine::Conv(ce) => {
+                        layer_names[li] = format!(
+                            "conv{li}:{:?}", ce.layer.mode);
+                        // Inter-layer event stream accounting (first
+                        // frame only — ratios are representative).
+                        if fi == 0 {
+                            if let Some(codec) = &self.codecs[li] {
+                                let (_, stats) = codec.encode(&act);
+                                codec_ratios.push(stats.ratio());
+                            }
+                        }
+                        let off_chip = li == 0;
+                        let (out, rep) = ce.run_frame(&act, off_chip);
+                        if fi == 0 {
+                            layer_cycles[li] = rep.cycles;
+                            layer_energy[li] = self
+                                .config
+                                .energy
+                                .dynamic(rep.ops, &rep.counters);
+                            layer_vmem[li] = ce.vmem_bytes();
+                        }
+                        ops_total += rep.ops;
+                        counters.merge(&rep.counters);
+                        act = out;
+                    }
+                    Engine::Pool(pe) => {
+                        layer_names[li] = format!("pool{li}");
+                        let (out, rep) = pe.run(&act);
+                        if fi == 0 {
+                            layer_cycles[li] = rep.cycles * t as u64;
+                            layer_energy[li] = self
+                                .config
+                                .energy
+                                .dynamic(0, &rep.counters);
+                        }
+                        counters.merge(&rep.counters);
+                        act = out;
+                    }
+                    Engine::Fc(fc) => {
+                        layer_names[li] = format!("fc{li}");
+                        let flat = FcEngine::flatten(&act);
+                        // At T > 1 the same final spike map replays per
+                        // timestep (upstream already accumulated).
+                        let reps: Vec<Vec<bool>> =
+                            (0..t).map(|_| flat.clone()).collect();
+                        let (cls, rep) = fc.classify(&reps);
+                        if fi == 0 {
+                            layer_cycles[li] = rep.cycles;
+                            layer_energy[li] = self
+                                .config
+                                .energy
+                                .dynamic(rep.ops, &rep.counters);
+                        }
+                        ops_total += rep.ops;
+                        counters.merge(&rep.counters);
+                        predictions.push(cls);
+                    }
+                }
+            }
+        }
+
+        let t_max = layer_cycles.iter().copied().max().unwrap_or(0);
+        let t_sum: u64 = layer_cycles.iter().sum();
+        let n = frames.len() as u64;
+        // Eq. (10) when pipelined; pure serialisation otherwise.
+        let total_cycles = if self.config.pipelined {
+            n * t_max + (t_sum - t_max)
+        } else {
+            n * t_sum
+        };
+
+        let resources = self
+            .config
+            .resources
+            .network(&self.net, self.config.timesteps);
+
+        PipelineReport {
+            frames: n,
+            layer_cycles,
+            layer_names,
+            t_max,
+            t_sum,
+            total_cycles,
+            ops_per_frame: ops_total / n,
+            counters,
+            layer_energy,
+            layer_vmem_bytes: layer_vmem,
+            codec_ratios,
+            predictions,
+            resources,
+            pes: self.net.total_pes(),
+        }
+    }
+
+    /// Shape of the frames this pipeline expects (post-encoder).
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        for l in &self.net.layers {
+            match l {
+                Layer::Conv(c) if c.encoder => {
+                    // Post-encoder shape, possibly after a pool that
+                    // follows the encoder — find the first accel layer.
+                    continue;
+                }
+                other => return other.in_shape(),
+            }
+        }
+        self.net.input
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn3, scnn5, vmobilenet};
+    use crate::util::rng::Rng;
+
+    fn frames(shape: (usize, usize, usize), n: usize, rate: f64)
+              -> Vec<SpikeFrame> {
+        let mut rng = Rng::new(99);
+        (0..n)
+            .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, rate,
+                                        &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn scnn3_pipeline_runs() {
+        let net = scnn3();
+        let mut p = Pipeline::random(net, PipelineConfig::default()).unwrap();
+        let shape = p.input_shape();
+        assert_eq!(shape, (28, 28, 16)); // post-encoder
+        let rep = p.run(&frames(shape, 2, 0.2));
+        assert_eq!(rep.predictions.len(), 2);
+        assert!(rep.t_max > 0);
+        assert!(rep.ops_per_frame > 0);
+    }
+
+    #[test]
+    fn pipelining_beats_serial() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 4, 0.2);
+        let mut pipe = Pipeline::random(net.clone(),
+                                        PipelineConfig::default()).unwrap();
+        let r_pipe = pipe.run(&f);
+        let mut serial = Pipeline::random(
+            net,
+            PipelineConfig { pipelined: false, ..Default::default() },
+        )
+        .unwrap();
+        let r_serial = serial.run(&f);
+        assert!(r_pipe.total_cycles < r_serial.total_cycles);
+        // Functional results identical.
+        assert_eq!(r_pipe.predictions, r_serial.predictions);
+    }
+
+    #[test]
+    fn pipeline_matches_analytical_model() {
+        let net = scnn3();
+        let mut p = Pipeline::random(net.clone(),
+                                     PipelineConfig::default()).unwrap();
+        let rep = p.run(&frames((28, 28, 16), 1, 0.2));
+        let model = crate::dataflow::pipeline_latency(
+            &net, &ConvLatencyParams::optimized(), 1);
+        // Engine t_max within 5% of Eq. (12) prediction.
+        let err = (rep.t_max as f64 - model.t_max as f64).abs()
+            / model.t_max as f64;
+        assert!(err < 0.05, "engine {} model {}", rep.t_max, model.t_max);
+    }
+
+    #[test]
+    fn vmobilenet_dsc_modes_run() {
+        let net = vmobilenet();
+        let mut p = Pipeline::random(net, PipelineConfig::default()).unwrap();
+        let shape = p.input_shape();
+        assert_eq!(shape, (28, 28, 16));
+        let rep = p.run(&frames(shape, 1, 0.3));
+        assert_eq!(rep.predictions.len(), 1);
+        // 8 DSC layers + fc accounted.
+        assert!(rep.layer_cycles.iter().filter(|&&c| c > 0).count() >= 9);
+    }
+
+    #[test]
+    fn t1_frees_vmem_and_halves_energy_vs_t2() {
+        // Scaled-down SCNN5 geometry keeps the test fast.
+        let net = crate::arch::NetBuilder::new("mini5", (16, 16, 3))
+            .encoder(8, 3)
+            .pool()
+            .conv(16, 3)
+            .pool()
+            .conv(32, 3)
+            .pool()
+            .fc(10)
+            .build();
+        let mut p1 = Pipeline::random(net.clone(),
+                                      PipelineConfig::default()).unwrap();
+        let f = frames(p1.input_shape(), 1, 0.25);
+        let r1 = p1.run(&f);
+        let mut p2 = Pipeline::random(
+            net,
+            PipelineConfig { timesteps: 2, ..Default::default() },
+        )
+        .unwrap();
+        let r2 = p2.run(&f);
+        // Fig. 11: no Vmem at T1, real Vmem at T2.
+        assert!(r1.layer_vmem_bytes.iter().all(|&b| b == 0));
+        assert!(r2.layer_vmem_bytes.iter().any(|&b| b > 0));
+        // Energy roughly doubles with T.
+        let e1 = r1.dynamic_energy_per_frame_j();
+        let e2 = r2.dynamic_energy_per_frame_j();
+        let ratio = e2 / e1;
+        assert!(ratio > 1.8 && ratio < 2.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn parallel_factors_speed_up_scnn5() {
+        // Tiny frame count; scnn5 geometry is the real one so this is
+        // the slowest test — keep N = 1.
+        let mut base = Pipeline::random(scnn5(),
+                                        PipelineConfig::default()).unwrap();
+        let f = frames(base.input_shape(), 1, 0.15);
+        let r_base = base.run(&f);
+        let mut par = Pipeline::random(
+            scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            PipelineConfig::default(),
+        )
+        .unwrap();
+        let r_par = par.run(&f);
+        let speedup = r_base.t_max as f64 / r_par.t_max as f64;
+        assert!(speedup > 3.0, "speedup {speedup}");
+        assert_eq!(r_par.pes, 99);
+    }
+
+    #[test]
+    fn event_codec_ratios_reported() {
+        let net = scnn3();
+        let mut p = Pipeline::random(net, PipelineConfig::default()).unwrap();
+        let rep = p.run(&frames((28, 28, 16), 1, 0.05));
+        assert!(!rep.codec_ratios.is_empty());
+        // Sparse input -> first link compresses.
+        assert!(rep.codec_ratios[0] > 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Memory-access-count models (paper Table I and Table III).
+//!
+//! All counts are *element* accesses per frame for a single conv layer,
+//! exactly as the paper's SectionII-C analysis: no line buffer, no spike
+//! vectors — those optimisations are what Table III then quantifies
+//! (vector accesses with the compressed/sorted representation + line
+//! buffer caching).
+
+use crate::arch::{ConvLayer, ConvMode};
+
+/// Access counts for one layer under one dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessCounts {
+    pub input_spikes: u64,
+    pub weights: u64,
+    pub partial_sums: u64,
+}
+
+impl AccessCounts {
+    pub fn total(&self) -> u64 {
+        self.input_spikes + self.weights + self.partial_sums
+    }
+}
+
+/// Output-stationary dataflow (paper Table I, OS column).
+///
+/// * inputs:  `Ci*Kw*Kh*Co*Wo*Ho*T` — every output pixel re-reads its
+///   receptive field once per output channel.
+/// * weights: `Ci*Kw*Kh*Co*Wo*Ho*T` — weights re-broadcast per pixel.
+/// * psums:   `Co*Wo*Ho*(T-1)` — membrane potential leaves the PE only
+///   between timesteps; **zero at T = 1** (the paper's key win).
+pub fn os_access(l: &ConvLayer, timesteps: u64) -> AccessCounts {
+    let (ho, wo) = (l.out_h() as u64, l.out_w() as u64);
+    let (ci, co) = (l.ci as u64, l.co as u64);
+    let k = (l.kh * l.kw) as u64;
+    AccessCounts {
+        input_spikes: ci * k * co * wo * ho * timesteps,
+        weights: ci * k * co * wo * ho * timesteps,
+        partial_sums: co * wo * ho * timesteps.saturating_sub(1),
+    }
+}
+
+/// Weight-stationary dataflow (paper Table I, WS column).
+///
+/// * inputs:  `Kw*Kh*Wo*Ho*Ci*Co*T`
+/// * weights: `Ci*Kw*Kh*Co*T` — each weight read once per timestep.
+/// * psums:   `Ci*Co*Wo*Ho*T` — partial sums spill per input channel.
+pub fn ws_access(l: &ConvLayer, timesteps: u64) -> AccessCounts {
+    let (ho, wo) = (l.out_h() as u64, l.out_w() as u64);
+    let (ci, co) = (l.ci as u64, l.co as u64);
+    let k = (l.kh * l.kw) as u64;
+    AccessCounts {
+        input_spikes: k * wo * ho * ci * co * timesteps,
+        weights: ci * k * co * timesteps,
+        partial_sums: ci * co * wo * ho * timesteps,
+    }
+}
+
+/// Optimised OS dataflow with the compressed & sorted spike vectors +
+/// line buffer (paper Table III): counts are **vector** accesses.
+///
+/// * inputs:  `Hi*Wi*T` — each input pixel's spike vector is fetched
+///   off-chip exactly once; the line buffer provides all reuse.
+/// * weights: standard `Ci*Co*Ho*Wo*T` vector reads (a vector = one
+///   Kh*Kw tap set); depthwise `Co*Ho*Wo*T`; pointwise `Ci*Co*Ho*Wo*T`.
+/// * psums:   `Co*Ho*Wo*(T-1)` (all modes) — zero at T = 1.
+pub fn conv_mode_access(l: &ConvLayer, timesteps: u64) -> AccessCounts {
+    let (ho, wo) = (l.out_h() as u64, l.out_w() as u64);
+    let (hi, wi) = (l.in_h as u64, l.in_w as u64);
+    let (ci, co) = (l.ci as u64, l.co as u64);
+    let weights = match l.mode {
+        ConvMode::Standard => ci * co * ho * wo * timesteps,
+        ConvMode::Depthwise => co * ho * wo * timesteps,
+        ConvMode::Pointwise => ci * co * ho * wo * timesteps,
+    };
+    AccessCounts {
+        input_spikes: hi * wi * timesteps,
+        weights,
+        partial_sums: co * ho * wo * timesteps.saturating_sub(1),
+    }
+}
+
+/// The paper's SectionIV-C claim: the line buffer + vector representation
+/// reduces off-chip input accesses by ~`Ci*Kw*Kh*Co`.
+pub fn input_access_reduction(l: &ConvLayer, timesteps: u64) -> f64 {
+    let plain = os_access(l, timesteps).input_spikes as f64;
+    let cached = conv_mode_access(l, timesteps).input_spikes as f64;
+    plain / cached
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn5, ConvLayer, ConvMode};
+
+    fn layer() -> ConvLayer {
+        ConvLayer {
+            mode: ConvMode::Standard,
+            in_h: 16,
+            in_w: 16,
+            ci: 64,
+            co: 128,
+            kh: 3,
+            kw: 3,
+            pad: 1,
+            encoder: false,
+            parallel: 1,
+        }
+    }
+
+    #[test]
+    fn table1_formulas() {
+        let l = layer();
+        let t = 4;
+        let os = os_access(&l, t);
+        let ws = ws_access(&l, t);
+        // Inputs identical between OS and WS (same product, Table I).
+        assert_eq!(os.input_spikes, ws.input_spikes);
+        // OS weight accesses exceed WS by exactly Wo*Ho (SectionII-C).
+        assert_eq!(os.weights, ws.weights * 16 * 16);
+        // WS psum traffic is Ci x the OS psum traffic scaled by T/(T-1).
+        assert_eq!(ws.partial_sums, 64 * 128 * 16 * 16 * t);
+        assert_eq!(os.partial_sums, 128 * 16 * 16 * (t - 1));
+    }
+
+    #[test]
+    fn os_psums_zero_at_t1() {
+        let os = os_access(&layer(), 1);
+        assert_eq!(os.partial_sums, 0);
+        // WS still pays psum traffic at T = 1 — the co-design argument.
+        assert!(ws_access(&layer(), 1).partial_sums > 0);
+    }
+
+    #[test]
+    fn access_scales_linearly_with_t() {
+        let l = layer();
+        let a1 = os_access(&l, 1);
+        let a2 = os_access(&l, 2);
+        assert_eq!(a2.input_spikes, 2 * a1.input_spikes);
+        assert_eq!(a2.weights, 2 * a1.weights);
+    }
+
+    #[test]
+    fn table3_line_buffer_reduction() {
+        let l = layer();
+        // SectionIV-C: reduction ~= Ci*Kw*Kh*Co = 64*9*128.
+        let r = input_access_reduction(&l, 1);
+        assert!((r - (64.0 * 9.0 * 128.0)).abs() / r < 0.01, "r={r}");
+    }
+
+    #[test]
+    fn table3_depthwise_weight_reduction() {
+        // SectionIV-D: depthwise reduces weight accesses by a factor Ci.
+        let mut l = layer();
+        let std = conv_mode_access(&l, 1).weights;
+        l.mode = ConvMode::Depthwise;
+        l.co = l.ci; // depthwise preserves channels
+        let dw = conv_mode_access(&l, 1).weights;
+        assert_eq!(std / dw, (128 / 64) * 64);
+    }
+
+    #[test]
+    fn scnn5_all_layers_have_positive_access() {
+        for c in scnn5().accel_convs() {
+            let a = conv_mode_access(c, 1);
+            assert!(a.input_spikes > 0 && a.weights > 0);
+            assert_eq!(a.partial_sums, 0);
+        }
+    }
+}

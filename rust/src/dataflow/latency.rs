@@ -1,0 +1,232 @@
+//! Convolution-layer latency model and pipeline totals.
+//!
+//! Paper Eq. (12): `T_ci = Ho*Wo*Co*[Ci*(Trw + Tpe) + Tpes]` cycles for
+//! a standard conv layer, where `Trw` is the weight-read time (0 when
+//! hidden behind compute, SectionIV-E.2), `Tpe` the per-input-channel
+//! accumulate time inside a PE, and `Tpes` the psum adder-tree time.
+//! Output-channel parallelism divides the `Co` walk by the layer's
+//! parallel factor.
+//!
+//! Paper Eq. (10)/(11): layer-wise pipelining makes the whole-network
+//! latency for N frames `N*T_max + sum(other layers)`, i.e. the average
+//! per-frame latency converges to the slowest layer's latency.
+
+use crate::arch::{ConvLayer, ConvMode, Layer, NetworkSpec};
+
+/// Microarchitectural timing knobs for Eq. (12).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvLatencyParams {
+    /// Weight-read cycles per input channel; 0 when prefetch hides it.
+    pub t_rw: u64,
+    /// Accumulate cycles per input channel inside a PE.
+    pub t_pe: u64,
+    /// Adder-tree cycles to combine the Kh*Kw psums; `None` derives
+    /// ceil(log2(Kh*Kw)) from the layer geometry.
+    pub t_pes: Option<u64>,
+}
+
+impl ConvLatencyParams {
+    /// Unoptimised baseline: weight reads exposed, serial psum combine.
+    pub fn baseline() -> Self {
+        Self { t_rw: 1, t_pe: 1, t_pes: None }
+    }
+
+    /// Optimised (SectionIV-E.2): `Trw` hidden, adder tree for psums.
+    pub fn optimized() -> Self {
+        Self { t_rw: 0, t_pe: 1, t_pes: None }
+    }
+
+    fn tpes(&self, l: &ConvLayer) -> u64 {
+        self.t_pes.unwrap_or_else(|| {
+            let fanin = (l.kh * l.kw).max(2) as u64;
+            64 - (fanin - 1).leading_zeros() as u64
+        })
+    }
+}
+
+/// Cycles for one conv layer, one timestep, one frame — Eq. (12) with
+/// the layer's output-channel parallel factor applied.
+pub fn conv_latency(l: &ConvLayer, p: &ConvLatencyParams) -> u64 {
+    let (ho, wo) = (l.out_h() as u64, l.out_w() as u64);
+    let co_serial = (l.co as u64).div_ceil(l.parallel as u64);
+    match l.mode {
+        ConvMode::Standard => {
+            ho * wo * co_serial
+                * (l.ci as u64 * (p.t_rw + p.t_pe) + self_tpes(l, p))
+        }
+        // Depthwise: no Ci walk (one channel per PE pass), no adder tree.
+        ConvMode::Depthwise => {
+            ho * wo * co_serial * ((l.kh * l.kw) as u64 * (p.t_rw + p.t_pe))
+        }
+        // Pointwise: Ci walk but single-tap, no adder tree (Fig. 8d).
+        ConvMode::Pointwise => {
+            ho * wo * co_serial * (l.ci as u64 * (p.t_rw + p.t_pe))
+        }
+    }
+}
+
+fn self_tpes(l: &ConvLayer, p: &ConvLatencyParams) -> u64 {
+    p.tpes(l)
+}
+
+/// Latency for pooling / FC layers (both are minor next to convs):
+/// pooling one cycle per output vector; FC one cycle per input with
+/// spikes gathered sequentially.
+pub fn layer_latency(l: &Layer, p: &ConvLatencyParams) -> u64 {
+    match l {
+        Layer::Conv(c) if !c.encoder => conv_latency(c, p),
+        Layer::Conv(_) => 0,
+        Layer::Pool { in_h, in_w, .. } => ((in_h / 2) * (in_w / 2)) as u64,
+        Layer::Fc { n_in, .. } => *n_in as u64,
+    }
+}
+
+/// Pipeline latency summary (Eq. (10)/(11)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineLatency {
+    /// Per-layer cycles (accelerated layers only).
+    pub per_layer: Vec<u64>,
+    /// Bottleneck (max) layer cycles: the pipeline interval.
+    pub t_max: u64,
+    /// Sum of all layer cycles: unpipelined per-frame latency.
+    pub t_sum: u64,
+}
+
+impl PipelineLatency {
+    /// Eq. (10): total cycles for N frames through the pipeline.
+    pub fn total_cycles(&self, n_frames: u64) -> u64 {
+        n_frames * self.t_max + (self.t_sum - self.t_max)
+    }
+
+    /// Eq. (11): average per-frame cycles at N frames.
+    pub fn avg_cycles(&self, n_frames: u64) -> f64 {
+        self.total_cycles(n_frames) as f64 / n_frames as f64
+    }
+
+    /// Unpipelined: every frame pays the full sum.
+    pub fn unpipelined_cycles(&self, n_frames: u64) -> u64 {
+        n_frames * self.t_sum
+    }
+}
+
+/// Evaluate the latency model over a whole network at `timesteps`.
+pub fn pipeline_latency(net: &NetworkSpec, p: &ConvLatencyParams,
+                        timesteps: u64) -> PipelineLatency {
+    let per_layer: Vec<u64> = net
+        .layers
+        .iter()
+        .map(|l| layer_latency(l, p) * timesteps)
+        .collect();
+    let t_max = per_layer.iter().copied().max().unwrap_or(0);
+    let t_sum = per_layer.iter().sum();
+    PipelineLatency { per_layer, t_max, t_sum }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn3, scnn5};
+
+    const CLK_HZ: f64 = 200e6; // ZCU102 design clock (paper Table V)
+
+    fn ms(cycles: u64) -> f64 {
+        cycles as f64 / CLK_HZ * 1e3
+    }
+
+    /// Paper SectionV-B.2: SCNN5 pipelined-but-unparallelised inference is
+    /// ~10.06 ms; our Eq. (12) model must land in that neighbourhood.
+    #[test]
+    fn scnn5_pipelined_latency_near_paper() {
+        let net = scnn5();
+        let lat = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
+        let v = ms(lat.t_max);
+        assert!((v - 10.06).abs() / 10.06 < 0.25, "t_max {v} ms");
+    }
+
+    /// Paper SectionV-B.2: unpipelined SCNN5 is ~24.95 ms.
+    #[test]
+    fn scnn5_unpipelined_latency_near_paper() {
+        let net = scnn5();
+        let lat = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
+        let v = ms(lat.t_sum);
+        assert!((v - 24.95).abs() / 24.95 < 0.25, "t_sum {v} ms");
+    }
+
+    /// Paper SectionV-B.2 + Fig. 12: with factors (4,4,2,1) per-frame delay
+    /// drops to ~2.52 ms — a ~9.9x improvement over unpipelined.
+    #[test]
+    fn scnn5_parallel_factors_hit_paper_speedup() {
+        let net = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let lat = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
+        let v = ms(lat.t_max);
+        assert!((v - 2.52).abs() / 2.52 < 0.3, "parallel t_max {v} ms");
+        let unopt = pipeline_latency(&scnn5(),
+                                     &ConvLatencyParams::optimized(), 1);
+        let speedup = unopt.t_sum as f64 / lat.t_max as f64;
+        assert!(speedup > 7.0 && speedup < 13.0, "speedup {speedup}");
+    }
+
+    /// Paper Table IV: SCNN3 341.3 FPS unparallelised, 1333 FPS at (4,2).
+    #[test]
+    fn scnn3_fps_near_paper() {
+        let base = pipeline_latency(&scnn3(),
+                                    &ConvLatencyParams::optimized(), 1);
+        let fps = CLK_HZ / base.t_max as f64;
+        assert!((fps - 341.3).abs() / 341.3 < 0.3, "base fps {fps}");
+
+        let par = pipeline_latency(
+            &scnn3().with_parallel_factors(&[4, 2]),
+            &ConvLatencyParams::optimized(), 1);
+        let fps = CLK_HZ / par.t_max as f64;
+        assert!((fps - 1333.0).abs() / 1333.0 < 0.35, "par fps {fps}");
+    }
+
+    #[test]
+    fn eq10_eq11_converge_to_tmax() {
+        let net = scnn5();
+        let lat = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
+        let avg1 = lat.avg_cycles(1);
+        let avg1k = lat.avg_cycles(1000);
+        assert!(avg1 > avg1k);
+        // As N grows the average approaches T_max (Eq. 11).
+        assert!((avg1k - lat.t_max as f64) / (lat.t_max as f64) < 0.01);
+    }
+
+    #[test]
+    fn latency_scales_with_timesteps() {
+        let net = scnn3();
+        let p = ConvLatencyParams::optimized();
+        let l1 = pipeline_latency(&net, &p, 1);
+        let l2 = pipeline_latency(&net, &p, 2);
+        assert_eq!(l2.t_max, 2 * l1.t_max);
+    }
+
+    #[test]
+    fn baseline_params_slower_than_optimized() {
+        let net = scnn3();
+        let b = pipeline_latency(&net, &ConvLatencyParams::baseline(), 1);
+        let o = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
+        assert!(b.t_max > o.t_max);
+    }
+
+    #[test]
+    fn parallel_factor_divides_co_walk() {
+        // Parallelising only the bottleneck layer moves the bottleneck:
+        // conv2 (2.23M cycles) at P=4 drops below conv3 (2.16M), so
+        // t_max barely moves — the reason the paper parallelises all
+        // four layers with the (4,4,2,1) profile.
+        let base = pipeline_latency(&scnn5(),
+                                    &ConvLatencyParams::optimized(), 1);
+        let only_first = pipeline_latency(
+            &scnn5().with_parallel_factors(&[4, 1, 1, 1]),
+            &ConvLatencyParams::optimized(), 1);
+        let r1 = base.t_max as f64 / only_first.t_max as f64;
+        assert!(r1 > 1.0 && r1 < 1.5, "bottleneck shifted, ratio {r1}");
+
+        let all = pipeline_latency(
+            &scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            &ConvLatencyParams::optimized(), 1);
+        let r_all = base.t_max as f64 / all.t_max as f64;
+        assert!(r_all > 3.0, "full profile ratio {r_all}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytical dataflow models: memory-access counts and latency.
+//!
+//! * [`access`] — Table I (OS vs WS) and Table III (per-conv-mode)
+//!   memory-access-count formulas, cross-checked against the cycle-level
+//!   simulator's counters by the integration tests.
+//! * [`latency`] — the convolution-layer latency model Eq. (12) and the
+//!   layer-wise pipeline totals Eq. (10)-(11).
+
+pub mod access;
+pub mod latency;
+
+pub use access::{conv_mode_access, os_access, ws_access, AccessCounts};
+pub use latency::{conv_latency, pipeline_latency, ConvLatencyParams,
+                  PipelineLatency};

@@ -1,0 +1,27 @@
+//! # STI-SNN — single-timestep-inference SNN accelerator (reproduction)
+//!
+//! Rust Layer-3 of the three-layer stack (DESIGN.md):
+//!
+//! * [`arch`] — network/layer hardware description shared with python.
+//! * [`codec`] — compressed & sorted spike vectors + event encoding.
+//! * [`dataflow`] — analytical access-count (Tables I/III) and latency
+//!   (Eq. 10-12) models.
+//! * [`sim`] — cycle-level simulator of the accelerator (PE array, line
+//!   buffer, neuron unit, OS/WS engines, energy & resource models).
+//! * [`coordinator`] — streaming layer-wise pipeline, parallel-factor
+//!   scheduler, frame batching.
+//! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts.
+//! * [`model`] — artifact loading (net.json + int8 weights).
+//! * [`server`] — TCP host interface (paper Fig. 10).
+//! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting.
+
+pub mod arch;
+pub mod codec;
+pub mod coordinator;
+pub mod dataflow;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;

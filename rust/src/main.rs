@@ -1,0 +1,415 @@
+//! sti-snn CLI: run the accelerator simulator, regenerate the paper's
+//! tables/figures, serve inference.
+//!
+//! Subcommands (each maps to a paper artifact — DESIGN.md experiment
+//! index):
+//!   table1   — OS vs WS memory-access counts (paper Table I)
+//!   table3   — per-conv-mode access counts (paper Table III)
+//!   table4   — FPS/GOPS/W/efficiency design points (paper Table IV)
+//!   table5   — resource utilisation (paper Table V)
+//!   fig11    — SCNN5 per-layer Vmem + energy, T1 vs T2 (paper Fig. 11)
+//!   fig12    — SCNN5 delay/power/LUT/FF before/after parallelism
+//!   optimize — parallel-factor scheduler for a PE budget
+//!   run      — run frames through a model's pipeline (sim)
+//!   serve    — TCP inference server (artifacts required)
+
+use sti_snn::arch;
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::coordinator::scheduler;
+use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::metrics::PerfRow;
+use sti_snn::model::Artifact;
+use sti_snn::runtime::{artifacts_dir, Runtime};
+use sti_snn::server::{Backend, Server};
+use sti_snn::sim::{cycles_to_ms, EnergyModel, ResourceModel, CLK_HZ};
+use sti_snn::util::cli::Args;
+use sti_snn::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("table1") => table1(&args),
+        Some("table3") => table3(&args),
+        Some("table4") => table4(&args),
+        Some("table5") => table5(&args),
+        Some("fig11") => fig11(&args),
+        Some("fig12") => fig12(&args),
+        Some("optimize") => optimize(&args),
+        Some("run") => run(&args),
+        Some("serve") => serve(&args),
+        other => {
+            eprintln!(
+                "usage: sti-snn <table1|table3|table4|table5|fig11|fig12|\
+                 optimize|run|serve> [--model scnn3] [--frames N] ...\n\
+                 (got {other:?})"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn net_for(args: &Args) -> anyhow::Result<arch::NetworkSpec> {
+    let name = args.get_str("model", "scnn5");
+    arch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))
+}
+
+fn synth_frames(shape: (usize, usize, usize), n: usize, rate: f64,
+                seed: u64) -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, rate,
+                                    &mut rng))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Table I
+// ---------------------------------------------------------------------------
+
+fn table1(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let timesteps = args.get_usize("timesteps", 1) as u64;
+    println!("Table I — memory access counts, OS vs WS dataflow");
+    println!("model = {}, T = {timesteps}\n", net.name);
+    println!("{:<10} {:>16} {:>16} {:>16} {:>16} {:>14} {:>14}",
+             "layer", "OS inputs", "WS inputs", "OS weights",
+             "WS weights", "OS psums", "WS psums");
+    for (i, c) in net.accel_convs().iter().enumerate() {
+        let os = dataflow::os_access(c, timesteps);
+        let ws = dataflow::ws_access(c, timesteps);
+        println!("{:<10} {:>16} {:>16} {:>16} {:>16} {:>14} {:>14}",
+                 format!("conv{}", i + 1),
+                 os.input_spikes, ws.input_spikes, os.weights, ws.weights,
+                 os.partial_sums, ws.partial_sums);
+    }
+    println!("\nkey claims: OS psums = 0 at T=1; WS weight reads are \
+              Wo*Ho x fewer but WS psum traffic is Ci x larger.");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table III
+// ---------------------------------------------------------------------------
+
+fn table3(args: &Args) -> anyhow::Result<()> {
+    let timesteps = args.get_usize("timesteps", 1) as u64;
+    println!("Table III — OS + line buffer + spike vectors: vector access \
+              counts per conv mode (T = {timesteps})\n");
+    println!("{:<28} {:>12} {:>14} {:>12} {:>12}",
+             "layer", "mode", "inputs", "weights", "psums");
+    for net in [arch::scnn5(), arch::vmobilenet()] {
+        for (i, c) in net.accel_convs().iter().enumerate() {
+            let a = dataflow::conv_mode_access(c, timesteps);
+            println!("{:<28} {:>12} {:>14} {:>12} {:>12}",
+                     format!("{} conv{}", net.name, i + 1),
+                     format!("{:?}", c.mode),
+                     a.input_spikes, a.weights, a.partial_sums);
+        }
+    }
+    let l = arch::scnn5().accel_convs()[0].clone();
+    println!("\nline-buffer input reduction vs plain OS (SectionIV-C): {:.0}x \
+              (~ Ci*Kw*Kh*Co = {})",
+             dataflow::access::input_access_reduction(&l, 1),
+             l.ci * l.kh * l.kw * l.co);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table IV
+// ---------------------------------------------------------------------------
+
+fn design_point(name: &str, net: arch::NetworkSpec, frames: usize,
+                rate: f64) -> anyhow::Result<PerfRow> {
+    // Paper accounting: MOPs is the *theoretical* synaptic op count per
+    // frame (Table IV "kFPS x MOPs"); the engine's measured spike-gated
+    // op count is the *effective* workload and drives the energy model.
+    let theoretical_ops = net.ops_per_frame();
+    let mut pipe = Pipeline::random(net, PipelineConfig::default())?;
+    let shape = pipe.input_shape();
+    let rep = pipe.run(&synth_frames(shape, frames, rate, 7));
+    let energy = EnergyModel::default();
+    // Steady-state FPS (Eq. 11, N -> inf): one frame per T_max.
+    let fps = CLK_HZ / rep.t_max as f64;
+    let power = energy.avg_power(
+        rep.dynamic_energy_per_frame_j(), fps, rep.pes,
+        rep.resources.bram36);
+    Ok(PerfRow::new(name, rep.t_max as f64, theoretical_ops, power,
+                    rep.pes))
+}
+
+fn table4(args: &Args) -> anyhow::Result<()> {
+    let frames = args.get_usize("frames", 2);
+    let rate = args.get_f64("rate", 0.15);
+    println!("Table IV — accuracy/throughput/power/efficiency\n");
+    println!("{}", PerfRow::header());
+
+    let points: Vec<(&str, arch::NetworkSpec)> = vec![
+        ("Ours-1 SCNN3", arch::scnn3()),
+        ("Ours-2 SCNN3 (4,2)",
+         arch::scnn3().with_parallel_factors(&[4, 2])),
+        ("Ours-3 SCNN5", arch::scnn5()),
+        ("Ours-4 SCNN5 (4,4,2,1)",
+         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1])),
+        ("Ours-5 vMobileNet", arch::vmobilenet()),
+    ];
+    let mut ours = Vec::new();
+    for (name, net) in points {
+        let row = design_point(name, net, frames, rate)?;
+        println!("{row}");
+        ours.push(row);
+    }
+
+    println!("\npaper's reported rows (for shape comparison):");
+    println!("{:<22} {:>9} {:>9} {:>8} {:>10} {:>12}",
+             "design", "FPS", "GOPS", "W", "GOPS/W", "GOPS/W/PE");
+    for (name, fps, gops, w, gpw, gpwpe) in
+        sti_snn::metrics::paper_ours_rows()
+    {
+        println!("{name:<22} {fps:>9.1} {gops:>9.2} {w:>8.2} {gpw:>10.2} \
+                  {gpwpe:>12.3}");
+    }
+
+    println!("\nSOTA comparison rows (paper Table IV, cited):");
+    println!("{}", PerfRow::header());
+    for r in sti_snn::metrics::sota_rows() {
+        println!("{r}");
+    }
+
+    // Headline checks.
+    let s_base = &ours[2];
+    let s_par = &ours[3];
+    println!("\nheadline: SCNN5 speedup {:.2}x (paper 4.0x), \
+              efficiency gain {:.2}x (paper 3.49x), \
+              Ours-4 GOPS/W/PE {:.3} (paper 0.14)",
+             s_par.fps / s_base.fps,
+             s_par.gops_per_w / s_base.gops_per_w,
+             s_par.gops_per_w_per_pe);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table V
+// ---------------------------------------------------------------------------
+
+fn table5(_args: &Args) -> anyhow::Result<()> {
+    let m = ResourceModel::default();
+    println!("Table V — resource utilisation on ZCU102 (xczu9eg)\n");
+    println!("{:<24} {:>6} {:>10} {:>8} {:>10} {:>8} {:>8}",
+             "design", "PEs", "LUT", "LUT %", "FF", "BRAM36", "BRAM %");
+    for (name, net) in [
+        ("SCNN3 (4,2)", arch::scnn3().with_parallel_factors(&[4, 2])),
+        ("SCNN5 (4,4,2,1)",
+         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1])),
+        ("vMobileNet", arch::vmobilenet()),
+    ] {
+        let r = m.network(&net, 1);
+        println!("{:<24} {:>6} {:>10} {:>8.2} {:>10} {:>8.1} {:>8.2}",
+                 name, net.total_pes(), r.lut, r.lut_util(), r.ff,
+                 r.bram36, r.bram_util());
+    }
+    println!("\npaper: LUT 3.5K/25.52K/7.7K; BRAM 11.5/527.5/13.x; \
+              PE 54/99/40; 200 MHz; Int8; IF neurons; OS dataflow");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 11
+// ---------------------------------------------------------------------------
+
+fn fig11(args: &Args) -> anyhow::Result<()> {
+    let frames = args.get_usize("frames", 1);
+    let rate = args.get_f64("rate", 0.15);
+    println!("Fig. 11 — SCNN5 per-conv-layer Vmem memory + energy, T1 vs \
+              T2\n");
+    let mut results = Vec::new();
+    for t in [1usize, 2] {
+        let mut pipe = Pipeline::random(
+            arch::scnn5(),
+            PipelineConfig { timesteps: t, ..Default::default() },
+        )?;
+        let shape = pipe.input_shape();
+        let rep = pipe.run(&synth_frames(shape, frames, rate, 11));
+        results.push(rep);
+    }
+    println!("{:<14} {:>14} {:>14} {:>16} {:>16}",
+             "layer", "T1 Vmem KB", "T2 Vmem KB", "T1 energy uJ/frm",
+             "T2 energy uJ/frm");
+    let r1 = &results[0];
+    let r2 = &results[1];
+    let mut t1_kb = 0.0;
+    let mut t2_kb = 0.0;
+    let (mut e1_tot, mut e2_tot) = (0.0, 0.0);
+    let mut conv_idx = 0;
+    for li in 0..r1.layer_cycles.len() {
+        if !r1.layer_names[li].starts_with("conv") {
+            continue;
+        }
+        conv_idx += 1;
+        let kb1 = r1.layer_vmem_bytes[li] as f64 / 1024.0;
+        let kb2 = r2.layer_vmem_bytes[li] as f64 / 1024.0;
+        let e1 = r1.layer_energy[li].total_j() * 1e6;
+        let e2 = r2.layer_energy[li].total_j() * 1e6;
+        t1_kb += kb1;
+        t2_kb += kb2;
+        e1_tot += e1;
+        e2_tot += e2;
+        println!("{:<14} {:>14.1} {:>14.1} {:>16.2} {:>16.2}",
+                 format!("conv{conv_idx}"), kb1, kb2, e1, e2);
+    }
+    println!("{:<14} {:>14.1} {:>14.1} {:>16.2} {:>16.2}",
+             "total", t1_kb, t2_kb, e1_tot, e2_tot);
+    println!("\nheadline: Vmem saved at T1 = {:.1} KB (paper: 126 KB); \
+              energy T2/T1 = {:.2}x (paper: ~2x, 1.3 J vs 0.6 J)",
+             t2_kb - t1_kb, e2_tot / e1_tot);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 12
+// ---------------------------------------------------------------------------
+
+fn fig12(args: &Args) -> anyhow::Result<()> {
+    let frames = args.get_usize("frames", 1);
+    let rate = args.get_f64("rate", 0.15);
+    println!("Fig. 12 — SCNN5 delay/power/LUT/FF before vs after output-\
+              channel parallelism\n");
+    let energy = EnergyModel::default();
+    let rm = ResourceModel::default();
+
+    let mut rows = Vec::new();
+    for (name, net, pipelined) in [
+        ("unpipelined", arch::scnn5(), false),
+        ("pipelined", arch::scnn5(), true),
+        ("pipelined+parallel(4,4,2,1)",
+         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1]), true),
+    ] {
+        let mut pipe = Pipeline::random(
+            net.clone(),
+            PipelineConfig { pipelined, ..Default::default() },
+        )?;
+        let shape = pipe.input_shape();
+        let rep = pipe.run(&synth_frames(shape, frames, rate, 13));
+        let per_frame_ms = if pipelined {
+            cycles_to_ms(rep.t_max)
+        } else {
+            cycles_to_ms(rep.t_sum)
+        };
+        let fps = 1000.0 / per_frame_ms;
+        let power = energy.avg_power(rep.dynamic_energy_per_frame_j(), fps,
+                                     rep.pes, rep.resources.bram36);
+        let res = rm.network(&net, 1);
+        println!("{name:<32} delay {per_frame_ms:>7.2} ms  power \
+                  {power:>5.2} W  LUT {:>6}  FF {:>6}", res.lut, res.ff);
+        rows.push(per_frame_ms);
+
+        // Per-layer LUT/FF before/after (the bar chart's lower panel).
+        if pipelined {
+            for (i, r) in rm.per_conv_layer(&net, 1).iter().enumerate() {
+                println!("    conv{} LUT {:>6} FF {:>6}",
+                         i + 1, r.lut, r.ff);
+            }
+        }
+    }
+    println!("\nheadline: {:.2} -> {:.2} -> {:.2} ms (paper: 24.95 -> \
+              10.06 -> 2.52 ms, 9.9x); ours {:.1}x",
+             rows[0], rows[1], rows[2], rows[0] / rows[2]);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// optimize / run / serve
+// ---------------------------------------------------------------------------
+
+fn optimize(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let budget = args.get_usize("pe-budget", 99);
+    let choice = scheduler::optimize_factors(
+        &net, budget, &ConvLatencyParams::optimized());
+    println!("model {} | PE budget {budget}", net.name);
+    println!("chosen factors: {:?} ({} PEs)", choice.factors, choice.pes);
+    println!("pipeline interval: {} cycles = {:.2} ms (was {:.2} ms; \
+              speedup {:.2}x)",
+             choice.t_max, cycles_to_ms(choice.t_max),
+             cycles_to_ms(choice.t_max_base), choice.speedup());
+    Ok(())
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let net = net_for(args)?;
+    let frames = args.get_usize("frames", 4);
+    let rate = args.get_f64("rate", 0.15);
+    let t = args.get_usize("timesteps", 1);
+    let mut pipe = Pipeline::random(
+        net, PipelineConfig { timesteps: t, ..Default::default() })?;
+    let shape = pipe.input_shape();
+    println!("running {frames} frames of {shape:?} at rate {rate}, T={t}");
+    let rep = pipe.run(&synth_frames(shape, frames, rate, 17));
+    println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
+              steady-state {:.1} FPS",
+             rep.t_max, cycles_to_ms(rep.t_max), rep.t_sum,
+             CLK_HZ / rep.t_max as f64);
+    println!("ops/frame {:.2} M; dyn energy {:.1} uJ/frame",
+             rep.ops_per_frame as f64 / 1e6,
+             rep.dynamic_energy_per_frame_j() * 1e6);
+    println!("predictions: {:?}", rep.predictions);
+    for (n, c) in rep.layer_names.iter().zip(&rep.layer_cycles) {
+        println!("  {n:<20} {c:>12} cycles");
+    }
+    Ok(())
+}
+
+/// Serving backend: PJRT encoder -> simulator pipeline -> class.
+struct SimBackend {
+    rt: Runtime,
+    pipe: Pipeline,
+    enc_shape: (usize, usize, usize),
+    input_len: usize,
+}
+
+impl Backend for SimBackend {
+    fn infer(&mut self, image: &[f32]) -> anyhow::Result<(usize, Vec<f32>)> {
+        let frame = self.rt.encode("encoder", image, self.enc_shape)?;
+        let rep = self.pipe.run(&[frame]);
+        let class = *rep
+            .predictions
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
+        // Logits from the reference PJRT full-model graph.
+        let logits = self.rt.logits("model", image)?;
+        Ok((class, logits))
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("model", "scnn3");
+    let addr = args.get_str("addr", "127.0.0.1:7878").to_string();
+    let dir = artifacts_dir().join(name);
+    let art = Artifact::load(&dir)?;
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input)?;
+    rt.load_hlo("model", &art.model_hlo(), art.net.input)?;
+    let params = art.layer_params()?;
+    let pipe = Pipeline::new(art.net.clone(), PipelineConfig::default(),
+                             params)?;
+    let (h, w, c) = art.net.input;
+    let backend = SimBackend {
+        rt,
+        pipe,
+        enc_shape: art.encoder_out_shape(),
+        input_len: h * w * c,
+    };
+    let server = Server::new(backend);
+    println!("serving {name} on {addr} (newline-JSON protocol)");
+    server.serve(&addr, |a| println!("bound {a}"))
+}

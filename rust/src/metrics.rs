@@ -1,0 +1,128 @@
+//! Performance metrics: FPS, GOPS, power, efficiency (paper Table IV).
+//!
+//! The paper's metric definitions:
+//! * `GOPS = kFPS x MOPs` — synaptic accumulates per second.
+//! * `Efficiency = GOPS / W`.
+//! * `Efficiency/PE = GOPS / W / PE` — the headline 0.14 (SCNN5) and
+//!   0.19 (SCNN3) GOPS/W/PE numbers.
+
+use crate::sim::CLK_HZ;
+
+/// One Table-IV row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfRow {
+    pub name: String,
+    pub fps: f64,
+    pub mops_per_frame: f64,
+    pub gops: f64,
+    pub power_w: f64,
+    pub gops_per_w: f64,
+    pub gops_per_w_per_pe: f64,
+    pub pes: usize,
+}
+
+impl PerfRow {
+    /// Derive a row from first principles.
+    ///
+    /// * `cycles_per_frame` — pipeline interval (Eq. 11 at large N).
+    /// * `ops_per_frame` — synaptic accumulates per frame.
+    /// * `power_w` — average power from the energy model.
+    pub fn new(name: &str, cycles_per_frame: f64, ops_per_frame: u64,
+               power_w: f64, pes: usize) -> Self {
+        let fps = CLK_HZ / cycles_per_frame;
+        let mops = ops_per_frame as f64 / 1e6;
+        let gops = fps * mops / 1e3; // kFPS x MOPs
+        let gops_per_w = gops / power_w;
+        Self {
+            name: name.to_string(),
+            fps,
+            mops_per_frame: mops,
+            gops,
+            power_w,
+            gops_per_w,
+            gops_per_w_per_pe: gops_per_w / pes as f64,
+            pes,
+        }
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<22} {:>9} {:>9} {:>9} {:>8} {:>10} {:>12} {:>5}",
+            "design", "FPS", "MOPs/frm", "GOPS", "Power W", "GOPS/W",
+            "GOPS/W/PE", "PEs"
+        )
+    }
+}
+
+impl std::fmt::Display for PerfRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<22} {:>9.1} {:>9.2} {:>9.2} {:>8.2} {:>10.2} {:>12.3} {:>5}",
+            self.name, self.fps, self.mops_per_frame, self.gops,
+            self.power_w, self.gops_per_w, self.gops_per_w_per_pe, self.pes
+        )
+    }
+}
+
+/// Published comparison rows (paper Table IV) for printing next to ours.
+pub fn sota_rows() -> Vec<PerfRow> {
+    let mk = |name: &str, fps: f64, gops: f64, w: f64, pes: usize| PerfRow {
+        name: name.to_string(),
+        fps,
+        mops_per_frame: if fps > 0.0 { gops / fps * 1e3 } else { 0.0 },
+        gops,
+        power_w: w,
+        gops_per_w: gops / w,
+        gops_per_w_per_pe: if pes > 0 { gops / w / pes as f64 } else { 0.0 },
+        pes,
+    };
+    vec![
+        mk("Fang et al. [38]", 133.0, 0.65, 4.5, 0),
+        mk("Ye et al. [39]", 826.4, 5.26, 0.98, 256),
+        mk("Ju et al. [40]", 164.0, 2.50, 4.6, 0),
+        mk("Cerebron MNIST [41]", 38_500.0, 40.1, 1.4, 256),
+        mk("Cerebron CIFAR [41]", 94.0, 44.2, 1.4, 256),
+        mk("Firefly SCNN-5 [42]", 2036.0, 265.76, 2.55, 2304),
+        mk("Firefly SCNN-7 [42]", 966.0, 274.49, 2.55, 2304),
+    ]
+}
+
+/// Paper's own result rows (Ours-1..5) for shape comparison.
+pub fn paper_ours_rows() -> Vec<(&'static str, f64, f64, f64, f64, f64)> {
+    // (name, FPS, GOPS, W, GOPS/W, GOPS/W/PE)
+    vec![
+        ("Ours-1 SCNN3", 341.3, 1.85, 0.66, 2.79, 0.16),
+        ("Ours-2 SCNN3 (4,2)", 1333.0, 7.22, 0.71, 10.15, 0.19),
+        ("Ours-3 SCNN5", 99.4, 5.16, 1.34, 3.86, 0.11),
+        ("Ours-4 SCNN5 (4,4,2,1)", 397.0, 20.6, 1.53, 13.46, 0.14),
+        ("Ours-5 vMobileNet", 290.0, 0.75, 0.74, 1.01, 0.03),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_row_math() {
+        // 200 MHz / 2M cycles = 100 FPS; 50 MOPs -> 5 GOPS; 2 W -> 2.5
+        // GOPS/W; 100 PEs -> 0.025 GOPS/W/PE.
+        let r = PerfRow::new("x", 2e6, 50_000_000, 2.0, 100);
+        assert!((r.fps - 100.0).abs() < 1e-9);
+        assert!((r.gops - 5.0).abs() < 1e-9);
+        assert!((r.gops_per_w - 2.5).abs() < 1e-9);
+        assert!((r.gops_per_w_per_pe - 0.025).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sota_rows_consistent() {
+        for r in sota_rows() {
+            if r.pes > 0 {
+                assert!((r.gops_per_w_per_pe
+                    - r.gops / r.power_w / r.pes as f64)
+                    .abs() < 1e-9);
+            }
+        }
+    }
+}

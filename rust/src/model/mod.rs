@@ -1,0 +1,255 @@
+//! Artifact loader: `net.json` + `weights.bin` emitted by
+//! `python/compile/aot.py`.
+//!
+//! Layout contract (kept in sync with aot.py):
+//! * `net.json` — network description (`arch::NetworkSpec::from_json`)
+//!   plus a `tensors` manifest: name, per-layer index, kind
+//!   (`int8`/`f32`), shape, quant scale, byte offset and length into
+//!   `weights.bin`.
+//! * `weights.bin` — concatenated tensor bytes; int8 raw, f32 LE.
+//! * Conv weights are pre-transposed by aot.py to the engine layout
+//!   `[co][ci][tap]` (depthwise `[c][1][tap]`, pointwise `[co][ci][1]`);
+//!   FC weights to `[n_in][n_out]`.
+//! * `encoder.hlo.txt` / `model.hlo.txt` — the AOT graphs for the
+//!   runtime (spike encoding; full-net logits reference).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::arch::{Layer, NetworkSpec};
+use crate::coordinator::pipeline::LayerParams;
+use crate::sim::conv_engine::ConvWeights;
+use crate::util::json::Json;
+
+/// One tensor record from the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorRec {
+    pub layer: usize,
+    pub name: String,
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub scale: f32,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A fully-loaded model artifact.
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub net: NetworkSpec,
+    pub vth: f32,
+    pub timesteps: usize,
+    pub tensors: Vec<TensorRec>,
+    blob: Vec<u8>,
+}
+
+impl Artifact {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let net_path = dir.join("net.json");
+        let txt = std::fs::read_to_string(&net_path)
+            .with_context(|| format!("reading {net_path:?}"))?;
+        let j = Json::parse(&txt)
+            .with_context(|| format!("parsing {net_path:?}"))?;
+        let net = NetworkSpec::from_json(&j)?;
+        let vth =
+            j.get("vth").and_then(|v| v.as_f64()).unwrap_or(1.0) as f32;
+        let timesteps =
+            j.get("timesteps").and_then(|v| v.as_usize()).unwrap_or(1);
+
+        let mut tensors = Vec::new();
+        if let Some(arr) = j.get("tensors").and_then(|v| v.as_arr()) {
+            for t in arr {
+                tensors.push(TensorRec {
+                    layer: t.get("layer").and_then(|v| v.as_usize())
+                        .context("tensor.layer")?,
+                    name: t.get("name").and_then(|v| v.as_str())
+                        .context("tensor.name")?.to_string(),
+                    kind: t.get("kind").and_then(|v| v.as_str())
+                        .context("tensor.kind")?.to_string(),
+                    shape: t.get("shape").and_then(|v| v.as_arr())
+                        .map(|a| a.iter()
+                             .filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
+                    scale: t.get("scale").and_then(|v| v.as_f64())
+                        .unwrap_or(1.0) as f32,
+                    offset: t.get("offset").and_then(|v| v.as_usize())
+                        .context("tensor.offset")?,
+                    len: t.get("len").and_then(|v| v.as_usize())
+                        .context("tensor.len")?,
+                });
+            }
+        }
+
+        let blob = if tensors.is_empty() {
+            Vec::new()
+        } else {
+            std::fs::read(dir.join("weights.bin"))
+                .with_context(|| format!("reading {dir:?}/weights.bin"))?
+        };
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            net,
+            vth,
+            timesteps,
+            tensors,
+            blob,
+        })
+    }
+
+    fn tensor(&self, layer: usize, name: &str) -> Result<&TensorRec> {
+        self.tensors
+            .iter()
+            .find(|t| t.layer == layer && t.name == name)
+            .with_context(|| format!("tensor layer={layer} name={name}"))
+    }
+
+    pub fn int8(&self, rec: &TensorRec) -> Result<Vec<i8>> {
+        anyhow::ensure!(rec.kind == "int8", "{} is {}", rec.name, rec.kind);
+        let bytes = self
+            .blob
+            .get(rec.offset..rec.offset + rec.len)
+            .context("tensor out of blob bounds")?;
+        Ok(bytes.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn f32(&self, rec: &TensorRec) -> Result<Vec<f32>> {
+        anyhow::ensure!(rec.kind == "f32", "{} is {}", rec.name, rec.kind);
+        let bytes = self
+            .blob
+            .get(rec.offset..rec.offset + rec.len)
+            .context("tensor out of blob bounds")?;
+        anyhow::ensure!(bytes.len() % 4 == 0);
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Build pipeline layer params from the manifest.
+    pub fn layer_params(&self) -> Result<Vec<LayerParams>> {
+        let mut out = Vec::new();
+        for (li, layer) in self.net.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv(c) if !c.encoder => {
+                    let wrec = self.tensor(li, "w")?;
+                    let brec = self.tensor(li, "b")?;
+                    let w = ConvWeights::new(
+                        c,
+                        self.int8(wrec)?,
+                        wrec.scale,
+                        self.f32(brec)?,
+                        self.vth,
+                    );
+                    out.push(LayerParams::Conv(w));
+                }
+                Layer::Fc { .. } => {
+                    let wrec = self.tensor(li, "w")?;
+                    let brec = self.tensor(li, "b")?;
+                    out.push(LayerParams::Fc {
+                        weights: self.int8(wrec)?,
+                        scale: wrec.scale,
+                        bias: self.f32(brec)?,
+                    });
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn encoder_hlo(&self) -> PathBuf {
+        self.dir.join("encoder.hlo.txt")
+    }
+
+    pub fn model_hlo(&self) -> PathBuf {
+        self.dir.join("model.hlo.txt")
+    }
+
+    /// Post-encoder spike-frame shape (the pipeline's input).
+    pub fn encoder_out_shape(&self) -> (usize, usize, usize) {
+        for l in &self.net.layers {
+            if let Layer::Conv(c) = l {
+                if c.encoder {
+                    return (c.out_h(), c.out_w(), c.co);
+                }
+            }
+        }
+        self.net.input
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-trip a synthetic artifact through the loader.
+    #[test]
+    fn load_synthetic_artifact() {
+        let dir = std::env::temp_dir().join("sti_snn_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // conv layer 1 (non-encoder): 2 -> 2 channels, 3x3.
+        // taps: [co][ci][9] = 2*2*9 = 36 int8 bytes at offset 0.
+        // bias: 2 f32 = 8 bytes at offset 36.
+        // fc: 8 -> 2, w 16 bytes at 44, b 8 bytes at 60.
+        let mut blob: Vec<u8> = Vec::new();
+        blob.extend((0..36u8).map(|i| i));          // conv w
+        blob.extend(0.5f32.to_le_bytes());          // conv b[0]
+        blob.extend((-0.5f32).to_le_bytes());       // conv b[1]
+        blob.extend((0..16u8).map(|i| i));          // fc w
+        blob.extend(1.0f32.to_le_bytes());
+        blob.extend(2.0f32.to_le_bytes());
+        std::fs::write(dir.join("weights.bin"), &blob).unwrap();
+
+        let net_json = r#"{
+          "name": "tiny", "input": [4, 4, 1], "vth": 1.0, "timesteps": 1,
+          "layers": [
+            {"kind":"conv","in_h":4,"in_w":4,"in_c":1,"co":2,"k":3,
+             "pad":1,"encoder":true},
+            {"kind":"conv","in_h":4,"in_w":4,"in_c":2,"co":2,"k":3,
+             "pad":1,"encoder":false},
+            {"kind":"pool","in_h":4,"in_w":4,"in_c":2},
+            {"kind":"fc","in_h":2,"in_w":2,"in_c":2,"out":2}
+          ],
+          "tensors": [
+            {"layer":1,"name":"w","kind":"int8","shape":[2,2,9],
+             "scale":0.01,"offset":0,"len":36},
+            {"layer":1,"name":"b","kind":"f32","shape":[2],
+             "scale":1.0,"offset":36,"len":8},
+            {"layer":3,"name":"w","kind":"int8","shape":[8,2],
+             "scale":0.02,"offset":44,"len":16},
+            {"layer":3,"name":"b","kind":"f32","shape":[2],
+             "scale":1.0,"offset":60,"len":8}
+          ]
+        }"#;
+        std::fs::write(dir.join("net.json"), net_json).unwrap();
+
+        let art = Artifact::load(&dir).unwrap();
+        assert_eq!(art.net.name, "tiny");
+        assert_eq!(art.encoder_out_shape(), (4, 4, 2));
+        let params = art.layer_params().unwrap();
+        assert_eq!(params.len(), 2);
+        match &params[0] {
+            LayerParams::Conv(w) => {
+                assert!((w.scale - 0.01).abs() < 1e-9);
+                assert_eq!(w.bias, vec![0.5, -0.5]);
+            }
+            _ => panic!("expected conv"),
+        }
+        match &params[1] {
+            LayerParams::Fc { weights, scale, bias } => {
+                assert_eq!(weights.len(), 16);
+                assert!((scale - 0.02).abs() < 1e-9);
+                assert_eq!(bias, &vec![1.0, 2.0]);
+            }
+            _ => panic!("expected fc"),
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Artifact::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin) exactly as the
+//! reference wiring in /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (jax >= 0.5 emits 64-bit-id protos that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Python never runs at inference time: `make artifacts` lowers the
+//! L2 jax graphs (which call the L1 Pallas kernels, interpret mode)
+//! once; this module compiles the text on startup and executes from
+//! the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::codec::SpikeFrame;
+
+/// A compiled executable plus its I/O geometry.
+pub struct CompiledModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shape (H, W, C) of the image the graph expects.
+    pub input_shape: (usize, usize, usize),
+}
+
+/// The runtime: one PJRT CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, CompiledModel>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file into a named executable.
+    pub fn load_hlo(&mut self, name: &str, path: &Path,
+                    input_shape: (usize, usize, usize)) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.models.insert(
+            name.to_string(),
+            CompiledModel { name: name.to_string(), exe, input_shape },
+        );
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.models.contains_key(name)
+    }
+
+    /// Execute a single-input graph on an (H, W, C) f32 image, returning
+    /// the flat f32 outputs of every tuple element.
+    pub fn run_image(&self, name: &str, image: &[f32])
+                     -> Result<Vec<Vec<f32>>> {
+        let m = self
+            .models
+            .get(name)
+            .with_context(|| format!("model {name} not loaded"))?;
+        let (h, w, c) = m.input_shape;
+        anyhow::ensure!(image.len() == h * w * c,
+                        "image size {} != {h}x{w}x{c}", image.len());
+        let lit = xla::Literal::vec1(image)
+            .reshape(&[h as i64, w as i64, c as i64])?;
+        let result = m.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for e in elems {
+            out.push(e.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Run the spike-encoder graph: image -> binary spike frame.
+    pub fn encode(&self, name: &str, image: &[f32],
+                  out_shape: (usize, usize, usize)) -> Result<SpikeFrame> {
+        let outs = self.run_image(name, image)?;
+        let spikes = &outs[0];
+        let (h, w, c) = out_shape;
+        anyhow::ensure!(spikes.len() == h * w * c,
+                        "encoder output {} != {h}x{w}x{c}", spikes.len());
+        Ok(SpikeFrame::from_f32(h, w, c, spikes))
+    }
+
+    /// Run the full-net graph: image -> per-class logits.
+    pub fn logits(&self, name: &str, image: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.run_image(name, image)?;
+        Ok(outs.last().context("empty output tuple")?.clone())
+    }
+}
+
+/// Locate the artifacts directory (env override for tests).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("STI_SNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Compiles and runs a hand-written HLO module (no artifacts
+    /// needed): f(x) = (x + 1,) over f32[2,3,1].
+    #[test]
+    fn run_handwritten_hlo() {
+        let hlo = r#"
+HloModule add_one, entry_computation_layout={(f32[2,3,1]{2,1,0})->(f32[2,3,1]{2,1,0})}
+
+ENTRY main {
+  x = f32[2,3,1]{2,1,0} parameter(0)
+  one = f32[] constant(1)
+  ones = f32[2,3,1]{2,1,0} broadcast(one), dimensions={}
+  sum = f32[2,3,1]{2,1,0} add(x, ones)
+  ROOT t = (f32[2,3,1]{2,1,0}) tuple(sum)
+}
+"#;
+        let dir = std::env::temp_dir().join("sti_snn_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("add_one.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+
+        let mut rt = Runtime::new().unwrap();
+        rt.load_hlo("add1", &path, (2, 3, 1)).unwrap();
+        assert!(rt.has("add1"));
+        let img: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let outs = rt.run_image("add1", &img).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0], vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.run_image("nope", &[0.0]).is_err());
+    }
+
+    #[test]
+    fn wrong_image_size_errors() {
+        let hlo_dir = std::env::temp_dir().join("sti_snn_rt_test2");
+        std::fs::create_dir_all(&hlo_dir).unwrap();
+        // Reuse the add-one module.
+        let hlo = r#"
+HloModule add_one, entry_computation_layout={(f32[1,1,1]{2,1,0})->(f32[1,1,1]{2,1,0})}
+
+ENTRY main {
+  x = f32[1,1,1]{2,1,0} parameter(0)
+  ROOT t = (f32[1,1,1]{2,1,0}) tuple(x)
+}
+"#;
+        let path = hlo_dir.join("id.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load_hlo("id", &path, (1, 1, 1)).unwrap();
+        assert!(rt.run_image("id", &[1.0, 2.0]).is_err());
+    }
+}

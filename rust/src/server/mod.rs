@@ -1,0 +1,350 @@
+//! TCP host interface (paper Fig. 10: the Vitis TCP server that takes
+//! images + control from the host and returns results).
+//!
+//! Protocol: newline-delimited JSON over TCP.
+//!
+//! Request:  `{"id": 1, "image": [f32...]}`  (H*W*C floats, row-major
+//!           channel-last, matching the artifact's input shape) or
+//!           `{"cmd": "stats"}` / `{"cmd": "shutdown"}`.
+//! Response: `{"id": 1, "class": 3, "logits": [...], "latency_us": 42}`
+//!           or `{"stats": {...}}`.
+//!
+//! Architecture: connection threads only parse/serialise; inference
+//! requests flow over an mpsc channel to the serve thread, which owns
+//! the backend exclusively. This keeps non-`Send` backends (the PJRT
+//! client's internals are `Rc`-based) on one thread — matching the
+//! physical reality of a single accelerator device. std::net + threads;
+//! tokio is not vendored in this environment.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Inference backend the server fronts: image in, (class, logits) out.
+/// Deliberately NOT required to be `Send` — it never leaves the serve
+/// thread.
+pub trait Backend {
+    fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)>;
+    fn input_len(&self) -> usize;
+}
+
+/// Serving statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub total_latency_us: AtomicU64,
+}
+
+/// An inference job travelling from a connection thread to the backend.
+struct Job {
+    id: f64,
+    image: Vec<f32>,
+    reply: Sender<Json>,
+}
+
+pub struct Server<B: Backend> {
+    backend: B,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl<B: Backend> Server<B> {
+    pub fn new(backend: B) -> Self {
+        Self {
+            backend,
+            stats: Arc::new(ServerStats::default()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Bind and serve until a shutdown command arrives. `on_bound`
+    /// receives the bound address (port 0 => ephemeral, for tests).
+    pub fn serve(mut self, addr: &str,
+                 on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true)?;
+        on_bound(listener.local_addr()?);
+
+        let (job_tx, job_rx): (Sender<Job>, Receiver<Job>) = channel();
+        let mut handles = Vec::new();
+
+        while !self.shutdown.load(Ordering::SeqCst) {
+            // Accept new connections (non-blocking).
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let tx = job_tx.clone();
+                    let stats = self.stats.clone();
+                    let shutdown = self.shutdown.clone();
+                    let input_len = self.backend.input_len();
+                    handles.push(std::thread::spawn(move || {
+                        let _ = conn_loop(stream, tx, stats, shutdown,
+                                          input_len);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e.into()),
+            }
+            // Drain inference jobs on this (backend-owning) thread.
+            let mut worked = false;
+            while let Ok(job) = job_rx.try_recv() {
+                worked = true;
+                let t0 = Instant::now();
+                let reply = match self.backend.infer(&job.image) {
+                    Ok((class, logits)) => {
+                        let us = t0.elapsed().as_micros() as u64;
+                        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+                        self.stats
+                            .total_latency_us
+                            .fetch_add(us, Ordering::SeqCst);
+                        Json::obj(vec![
+                            ("id", Json::num(job.id)),
+                            ("class", Json::num(class as f64)),
+                            ("logits",
+                             Json::Arr(logits
+                                 .iter()
+                                 .map(|&l| Json::num(l as f64))
+                                 .collect())),
+                            ("latency_us", Json::num(us as f64)),
+                        ])
+                    }
+                    Err(e) => {
+                        self.stats.errors.fetch_add(1, Ordering::SeqCst);
+                        Json::obj(vec![("error",
+                                        Json::str(&e.to_string()))])
+                    }
+                };
+                let _ = job.reply.send(reply);
+            }
+            if !worked {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        drop(job_tx);
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Per-connection loop: parse lines, ship jobs, write replies.
+fn conn_loop(stream: TcpStream, jobs: Sender<Job>,
+             stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
+             input_len: usize) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let reply = match Json::parse(line.trim()) {
+            Err(e) => Json::obj(vec![("error", Json::str(&e.to_string()))]),
+            Ok(req) => {
+                if let Some(cmd) = req.get("cmd").and_then(|c| c.as_str()) {
+                    match cmd {
+                        "shutdown" => {
+                            shutdown.store(true, Ordering::SeqCst);
+                            let r = Json::obj(vec![("ok", Json::Bool(true))]);
+                            writeln!(out, "{r}")?;
+                            return Ok(());
+                        }
+                        "stats" => Json::obj(vec![(
+                            "stats",
+                            Json::obj(vec![
+                                ("requests",
+                                 Json::num(stats.requests
+                                     .load(Ordering::SeqCst) as f64)),
+                                ("errors",
+                                 Json::num(stats.errors
+                                     .load(Ordering::SeqCst) as f64)),
+                                ("total_latency_us",
+                                 Json::num(stats.total_latency_us
+                                     .load(Ordering::SeqCst) as f64)),
+                            ]),
+                        )]),
+                        other => Json::obj(vec![(
+                            "error",
+                            Json::str(&format!("unknown cmd {other}")),
+                        )]),
+                    }
+                } else {
+                    match parse_infer(&req, input_len) {
+                        Err(msg) => {
+                            stats.errors.fetch_add(1, Ordering::SeqCst);
+                            Json::obj(vec![("error", Json::str(&msg))])
+                        }
+                        Ok((id, image)) => {
+                            let (tx, rx) = channel();
+                            jobs.send(Job { id, image, reply: tx })
+                                .map_err(|_| {
+                                    anyhow::anyhow!("server shutting down")
+                                })?;
+                            rx.recv().unwrap_or_else(|_| {
+                                Json::obj(vec![(
+                                    "error",
+                                    Json::str("server shutting down"),
+                                )])
+                            })
+                        }
+                    }
+                }
+            }
+        };
+        writeln!(out, "{reply}")?;
+    }
+}
+
+fn parse_infer(req: &Json, input_len: usize)
+               -> std::result::Result<(f64, Vec<f32>), String> {
+    let id = req.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let image: Vec<f32> = match req.get("image").and_then(|v| v.as_arr()) {
+        Some(arr) => arr
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as f32)
+            .collect(),
+        None => return Err("missing image".to_string()),
+    };
+    if image.len() != input_len {
+        return Err(format!("image len {} != {input_len}", image.len()));
+    }
+    Ok((id, image))
+}
+
+/// Simple blocking client (used by examples + tests).
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader })
+    }
+
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.stream, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())?)
+    }
+
+    pub fn infer(&mut self, id: u64, image: &[f32]) -> Result<Json> {
+        let req = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("image",
+             Json::Arr(image.iter().map(|&x| Json::num(x as f64)).collect())),
+        ]);
+        self.request(&req)
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.request(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy backend: class = argmax of the 4-pixel image.
+    struct Toy;
+
+    impl Backend for Toy {
+        fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)> {
+            let arg = image
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            Ok((arg, image.to_vec()))
+        }
+
+        fn input_len(&self) -> usize {
+            4
+        }
+    }
+
+    #[test]
+    fn end_to_end_roundtrip() {
+        let server = Server::new(Toy);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap();
+
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let resp = c.infer(7, &[0.1, 0.9, 0.2, 0.3]).unwrap();
+        assert_eq!(resp.get("class").unwrap().as_usize(), Some(1));
+        assert_eq!(resp.get("id").unwrap().as_f64(), Some(7.0));
+
+        // Wrong image size -> error, server stays up.
+        let resp = c.infer(8, &[0.1]).unwrap();
+        assert!(resp.get("error").is_some());
+
+        // Stats reflect the traffic.
+        let resp = c
+            .request(&Json::obj(vec![("cmd", Json::str("stats"))]))
+            .unwrap();
+        let stats = resp.get("stats").unwrap();
+        assert_eq!(stats.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(stats.get("errors").unwrap().as_usize(), Some(1));
+
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = Server::new(Toy);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut clients: Vec<_> = (0..4)
+            .map(|i| {
+                let a = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&a).unwrap();
+                    let mut img = [0.0f32; 4];
+                    img[i % 4] = 1.0;
+                    let resp = c.infer(i as u64, &img).unwrap();
+                    resp.get("class").unwrap().as_usize().unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<usize> =
+            clients.drain(..).map(|h| h.join().unwrap()).collect();
+        assert_eq!(results, vec![0, 1, 2, 3]);
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+}

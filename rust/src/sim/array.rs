@@ -1,0 +1,342 @@
+//! Compute array: `Kh x Kw` PEs per output-channel lane, `parallel`
+//! lanes (paper SectionIV-B + SectionIV-E.2).
+//!
+//! The array processes one receptive field at a time (the spike-vector
+//! window from the line buffer).  For each output channel assigned to a
+//! lane, weights stream channel-by-channel past the PEs; each PE gates
+//! its tap's weight on its tap's spike bit.  After the `Ci` walk the
+//! lane's psums combine in the adder tree and the neuron fires.
+//!
+//! ## Implementation note (§Perf L3)
+//!
+//! The behavioural single-PE model lives in [`super::pe`] (with its own
+//! tests); the array's `process_field` is the *hot loop* of the whole
+//! simulator and is written event-driven: it iterates only the **active
+//! channels** of each window vector (`SpikeVector::iter_active`) over a
+//! **tap-major** weight slice, with zero per-field allocation.  The
+//! psum and the spike-gated op count are identical to stepping the PEs
+//! one (spike, weight) pair at a time — pinned by unit tests — while
+//! the cycle count stays the *architectural* Eq. (12) walk (the FPGA
+//! spends the full `Ci` walk regardless of sparsity; only our host-side
+//! simulation exploits it).
+
+use crate::arch::{ConvLayer, ConvMode};
+use crate::codec::SpikeVector;
+
+use super::pe::{adder_tree_latency, Acc};
+
+/// One output-channel lane: Kh*Kw PEs + adder tree (logically); the
+/// simulator tracks the lane-aggregate op count.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    pub ops: u64,
+    pub busy_cycles: u64,
+}
+
+/// The per-layer compute array.
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pub mode: ConvMode,
+    pub kh: usize,
+    pub kw: usize,
+    pub lanes: Vec<Lane>,
+    /// Scratch psum-per-tap buffer (reused across fields; §Perf).
+    scratch: Vec<Acc>,
+}
+
+/// Result of processing one receptive field for one output channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FieldResult {
+    pub psum: Acc,
+    /// Cycles consumed: Ci walk + adder tree (mode-dependent).
+    pub cycles: u64,
+}
+
+impl PeArray {
+    pub fn for_layer(l: &ConvLayer) -> Self {
+        Self {
+            mode: l.mode,
+            kh: l.kh,
+            kw: l.kw,
+            lanes: (0..l.parallel)
+                .map(|_| Lane { ops: 0, busy_cycles: 0 })
+                .collect(),
+            scratch: vec![0; l.kh * l.kw],
+        }
+    }
+
+    pub fn pe_count(&self) -> usize {
+        self.lanes.len() * self.kh * self.kw
+    }
+
+    /// Process one receptive field for one output channel on one lane.
+    ///
+    /// * `rows[r]` — the `Kw` window vectors of tap row r (already
+    ///   sliced at the field's x offset by the engine).
+    /// * `taps_tm` — this output channel's weights, **tap-major**:
+    ///   `taps_tm[t * n_ci + ci]` (depthwise: `taps_tm[t]`; pointwise:
+    ///   `taps_tm[ci]`).
+    /// * `n_ci` — input channels walked (1 for depthwise).
+    /// * `channel` — the spike bit a depthwise lane gates on.
+    /// * `t_rw`/`t_pe` — Eq. (12) timing knobs.
+    pub fn process_field(
+        &mut self,
+        lane: usize,
+        rows: &[&[SpikeVector]],
+        taps_tm: &[i8],
+        n_ci: usize,
+        channel: usize,
+        t_rw: u64,
+        t_pe: u64,
+    ) -> FieldResult {
+        let lane = &mut self.lanes[lane];
+        let ntaps = self.kh * self.kw;
+        debug_assert_eq!(taps_tm.len(), ntaps * n_ci);
+
+        match self.mode {
+            ConvMode::Standard => {
+                // Event-driven accumulate: per tap, iterate only the
+                // active channels of the window vector.
+                let mut psum: Acc = 0;
+                let mut ops = 0u64;
+                for r in 0..self.kh {
+                    let row = rows[r];
+                    for c in 0..self.kw {
+                        let base = (r * self.kw + c) * n_ci;
+                        let taps = &taps_tm[base..base + n_ci];
+                        for ci in row[c].iter_active() {
+                            psum += taps[ci] as Acc;
+                            ops += 1;
+                        }
+                    }
+                }
+                lane.ops += ops;
+                // Architectural cycles: the full Ci walk + adder tree.
+                let cycles = n_ci as u64 * (t_rw + t_pe)
+                    + adder_tree_latency(ntaps);
+                lane.busy_cycles += cycles;
+                FieldResult { psum, cycles }
+            }
+            ConvMode::Depthwise => {
+                // Fig. 8c: pass the tap weight through iff the lane's
+                // channel spiked at that tap.
+                let mut psum: Acc = 0;
+                let mut ops = 0u64;
+                for r in 0..self.kh {
+                    let row = rows[r];
+                    for c in 0..self.kw {
+                        if row[c].get(channel) {
+                            psum += taps_tm[r * self.kw + c] as Acc;
+                            ops += 1;
+                        }
+                    }
+                }
+                lane.ops += ops;
+                let cycles = ntaps as u64 * (t_rw + t_pe)
+                    + adder_tree_latency(ntaps);
+                lane.busy_cycles += cycles;
+                FieldResult { psum, cycles }
+            }
+            ConvMode::Pointwise => {
+                // Fig. 8d: single tap, Ci walk on one PE, no adder tree.
+                let mut psum: Acc = 0;
+                let mut ops = 0u64;
+                for ci in rows[0][0].iter_active() {
+                    psum += taps_tm[ci] as Acc;
+                    ops += 1;
+                }
+                lane.ops += ops;
+                let cycles = n_ci as u64 * (t_rw + t_pe);
+                lane.busy_cycles += cycles;
+                FieldResult { psum, cycles }
+            }
+        }
+    }
+
+    /// Standard-mode variant taking a pre-decoded active list (pairs of
+    /// `(tap, ci)` for every set spike bit in the window). The engine
+    /// builds the list once per receptive field and reuses it across
+    /// all output channels of the Co walk — the decode cost is paid
+    /// once instead of `Co` times (§Perf iteration 2).
+    pub fn process_field_active(
+        &mut self,
+        lane: usize,
+        active: &[(u16, u16)],
+        taps_tm: &[i8],
+        n_ci: usize,
+        t_rw: u64,
+        t_pe: u64,
+    ) -> FieldResult {
+        debug_assert_eq!(self.mode, ConvMode::Standard);
+        let lane = &mut self.lanes[lane];
+        let ntaps = self.kh * self.kw;
+        debug_assert_eq!(taps_tm.len(), ntaps * n_ci);
+        let mut psum: Acc = 0;
+        for &(tap, ci) in active {
+            psum += taps_tm[tap as usize * n_ci + ci as usize] as Acc;
+        }
+        lane.ops += active.len() as u64;
+        let cycles =
+            n_ci as u64 * (t_rw + t_pe) + adder_tree_latency(ntaps);
+        lane.busy_cycles += cycles;
+        FieldResult { psum, cycles }
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.lanes.iter().map(|l| l.ops).sum()
+    }
+
+    /// Scratch access for engines needing a per-tap psum buffer.
+    pub fn scratch(&mut self) -> &mut Vec<Acc> {
+        &mut self.scratch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ConvLayer;
+    use crate::sim::pe::Pe;
+
+    fn mk_layer(mode: ConvMode, parallel: usize) -> ConvLayer {
+        let k = if mode == ConvMode::Pointwise { 1 } else { 3 };
+        ConvLayer {
+            mode,
+            in_h: 8,
+            in_w: 8,
+            ci: 4,
+            co: 8,
+            kh: k,
+            kw: k,
+            pad: k / 2,
+            encoder: false,
+            parallel,
+        }
+    }
+
+    fn window_rows(v: &SpikeVector, kw: usize) -> Vec<Vec<SpikeVector>> {
+        (0..3).map(|_| vec![v.clone(); kw]).collect()
+    }
+
+    #[test]
+    fn array_shape_follows_layer() {
+        let arr = PeArray::for_layer(&mk_layer(ConvMode::Standard, 4));
+        assert_eq!(arr.pe_count(), 36);
+        assert_eq!(arr.lanes.len(), 4);
+    }
+
+    #[test]
+    fn standard_field_computation() {
+        let mut arr = PeArray::for_layer(&mk_layer(ConvMode::Standard, 1));
+        // Window: all spikes on in channel 0, none in channel 1.
+        let v_on = SpikeVector::from_bits(&[true, false]);
+        let rows_own = window_rows(&v_on, 3);
+        let rows: Vec<&[SpikeVector]> =
+            rows_own.iter().map(|r| r.as_slice()).collect();
+        // Tap-major: per tap [w_ci0, w_ci1] = [1, 100].
+        let taps_tm: Vec<i8> =
+            (0..9).flat_map(|_| [1i8, 100]).collect();
+        let r = arr.process_field(0, &rows, &taps_tm, 2, 0, 0, 1);
+        assert_eq!(r.psum, 9);          // 9 taps x weight 1, ci=1 gated
+        // Ci walk (2 cycles) + adder tree over 9 (4 cycles).
+        assert_eq!(r.cycles, 2 + 4);
+        assert_eq!(arr.total_ops(), 9);
+    }
+
+    /// Fast path == stepping the behavioural PE model pair-by-pair.
+    #[test]
+    fn fast_path_matches_pe_model() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let n_ci = 5;
+        let ntaps = 9;
+        // Random window + weights.
+        let rows_own: Vec<Vec<SpikeVector>> = (0..3)
+            .map(|_| {
+                (0..3)
+                    .map(|_| {
+                        let bits: Vec<bool> =
+                            (0..n_ci).map(|_| rng.bernoulli(0.4)).collect();
+                        SpikeVector::from_bits(&bits)
+                    })
+                    .collect()
+            })
+            .collect();
+        let taps_tm: Vec<i8> =
+            (0..ntaps * n_ci).map(|_| rng.int8()).collect();
+
+        // Behavioural: one PE per tap, step per (spike, weight).
+        let mut pes: Vec<Pe> =
+            (0..ntaps).map(|_| Pe::new(ConvMode::Standard)).collect();
+        for pe in pes.iter_mut() {
+            pe.start(0);
+        }
+        for ci in 0..n_ci {
+            for r in 0..3 {
+                for c in 0..3 {
+                    let t = r * 3 + c;
+                    pes[t].step(rows_own[r][c].get(ci),
+                                taps_tm[t * n_ci + ci]);
+                }
+            }
+        }
+        let want: Acc = pes.iter_mut().map(|p| p.drain()).sum();
+        let want_ops: u64 = pes.iter().map(|p| p.ops).sum();
+
+        let mut arr = PeArray::for_layer(&mk_layer(ConvMode::Standard, 1));
+        let rows: Vec<&[SpikeVector]> =
+            rows_own.iter().map(|r| r.as_slice()).collect();
+        let got = arr.process_field(0, &rows, &taps_tm, n_ci, 0, 0, 1);
+        assert_eq!(got.psum, want);
+        assert_eq!(arr.total_ops(), want_ops);
+    }
+
+    #[test]
+    fn eq12_cycle_shape() {
+        // Standard mode cycles = Ci*(Trw+Tpe) + Tpes — Eq. (12) inner
+        // bracket, which the conv engine multiplies by Ho*Wo*Co.
+        let mut arr = PeArray::for_layer(&mk_layer(ConvMode::Standard, 1));
+        let v = SpikeVector::zeros(4);
+        let rows_own = window_rows(&v, 3);
+        let rows: Vec<&[SpikeVector]> =
+            rows_own.iter().map(|r| r.as_slice()).collect();
+        let taps_tm = vec![0i8; 36];
+        let r = arr.process_field(0, &rows, &taps_tm, 4, 0, 1, 1);
+        assert_eq!(r.cycles, 4 * (1 + 1) + 4);
+    }
+
+    #[test]
+    fn depthwise_field_computation() {
+        let mut arr = PeArray::for_layer(&mk_layer(ConvMode::Depthwise, 1));
+        let on = SpikeVector::from_bits(&[true]);
+        let off = SpikeVector::from_bits(&[false]);
+        // Checkerboard spikes; taps 1..9.
+        let rows_own: Vec<Vec<SpikeVector>> = (0..3)
+            .map(|r| {
+                (0..3)
+                    .map(|c| if (r + c) % 2 == 0 { on.clone() }
+                         else { off.clone() })
+                    .collect()
+            })
+            .collect();
+        let rows: Vec<&[SpikeVector]> =
+            rows_own.iter().map(|r| r.as_slice()).collect();
+        let taps: Vec<i8> = (1..=9).collect();
+        let r = arr.process_field(0, &rows, &taps, 1, 0, 0, 1);
+        // Active taps: (0,0)=1,(0,2)=3,(1,1)=5,(2,0)=7,(2,2)=9 -> 25.
+        assert_eq!(r.psum, 25);
+    }
+
+    #[test]
+    fn pointwise_field_computation() {
+        let mut arr = PeArray::for_layer(&mk_layer(ConvMode::Pointwise, 1));
+        let v = SpikeVector::from_bits(&[true, false, true, true]);
+        let rows_own = vec![vec![v]];
+        let rows: Vec<&[SpikeVector]> =
+            rows_own.iter().map(|r| r.as_slice()).collect();
+        let taps: Vec<i8> = vec![10, 20, 30, 40];
+        let r = arr.process_field(0, &rows, &taps, 4, 0, 0, 1);
+        assert_eq!(r.psum, 10 + 30 + 40);
+        assert_eq!(r.cycles, 4); // Ci walk, no tree
+    }
+}

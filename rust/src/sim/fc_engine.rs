@@ -1,0 +1,164 @@
+//! Fully-connected (classifier) engine.
+//!
+//! The head consumes the flattened, channel-sorted spike vector of the
+//! final feature map and accumulates int8 weight rows for active
+//! inputs — a gather-accumulate, which is exactly how the FPGA
+//! implements it (weights fetched only for spiking inputs: the
+//! event-driven win). Output neurons never fire; the i32 accumulators
+//! (dequantised + bias) are the logits.
+
+use crate::codec::SpikeFrame;
+
+use super::memory::{AccessCounter, DataKind, MemLevel};
+
+#[derive(Debug, Clone, Default)]
+pub struct FcRunReport {
+    pub cycles: u64,
+    pub ops: u64,
+    pub counters: AccessCounter,
+}
+
+pub struct FcEngine {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub scale: f32,
+    /// Row-major `[n_in][n_out]` int8.
+    weights: Vec<i8>,
+    pub bias: Vec<f32>,
+}
+
+impl FcEngine {
+    pub fn new(n_in: usize, n_out: usize, weights: Vec<i8>, scale: f32,
+               bias: Vec<f32>) -> Self {
+        assert_eq!(weights.len(), n_in * n_out);
+        assert_eq!(bias.len(), n_out);
+        Self { n_in, n_out, scale, weights, bias }
+    }
+
+    pub fn random(n_in: usize, n_out: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let weights = (0..n_in * n_out).map(|_| rng.int8()).collect();
+        Self {
+            n_in,
+            n_out,
+            scale: 1.0 / 127.0 / (n_in as f32).sqrt(),
+            weights,
+            bias: vec![0.0; n_out],
+        }
+    }
+
+    /// Flatten a (H, W, C) spike frame in channel-last order — must
+    /// match python's `act.reshape(-1)` on (H, W, C).
+    pub fn flatten(frame: &SpikeFrame) -> Vec<bool> {
+        let mut out = Vec::with_capacity(frame.h * frame.w * frame.c);
+        for y in 0..frame.h {
+            for x in 0..frame.w {
+                for ch in 0..frame.c {
+                    out.push(frame.get(y, x, ch));
+                }
+            }
+        }
+        out
+    }
+
+    /// One timestep: returns logits. Event-driven: only active inputs
+    /// cost weight fetches + accumulates.
+    pub fn run(&self, spikes: &[bool]) -> (Vec<f32>, FcRunReport) {
+        assert_eq!(spikes.len(), self.n_in);
+        let mut acc = vec![0i64; self.n_out];
+        let mut rep = FcRunReport::default();
+        for (i, &s) in spikes.iter().enumerate() {
+            rep.cycles += 1; // input scan
+            if !s {
+                continue;
+            }
+            let row = &self.weights[i * self.n_out..(i + 1) * self.n_out];
+            rep.counters.read(MemLevel::Bram, DataKind::Weight, 1);
+            for (o, &w) in row.iter().enumerate() {
+                acc[o] += w as i64;
+            }
+            rep.ops += self.n_out as u64;
+        }
+        let logits: Vec<f32> = acc
+            .iter()
+            .zip(&self.bias)
+            .map(|(&a, &b)| a as f32 * self.scale + b)
+            .collect();
+        rep.counters.write(MemLevel::Bram, DataKind::OutputSpike,
+                           self.n_out as u64);
+        (logits, rep)
+    }
+
+    /// Accumulate logits across timesteps then argmax (SDT readout).
+    pub fn classify(&self, frames: &[Vec<bool>]) -> (usize, FcRunReport) {
+        let mut total = vec![0f32; self.n_out];
+        let mut rep = FcRunReport::default();
+        for f in frames {
+            let (l, r) = self.run(f);
+            for (t, v) in total.iter_mut().zip(&l) {
+                *t += v;
+            }
+            rep.cycles += r.cycles;
+            rep.ops += r.ops;
+            rep.counters.merge(&r.counters);
+        }
+        let arg = total
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        (arg, rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_spike_selects_row() {
+        let mut w = vec![0i8; 4 * 3];
+        w[1 * 3..2 * 3].copy_from_slice(&[1, 2, 3]);
+        let fc = FcEngine::new(4, 3, w, 1.0, vec![0.0; 3]);
+        let mut spikes = vec![false; 4];
+        spikes[1] = true;
+        let (logits, rep) = fc.run(&spikes);
+        assert_eq!(logits, vec![1.0, 2.0, 3.0]);
+        assert_eq!(rep.ops, 3);
+    }
+
+    #[test]
+    fn no_spikes_costs_no_weight_reads() {
+        let fc = FcEngine::random(16, 4, 1);
+        let (logits, rep) = fc.run(&vec![false; 16]);
+        assert!(logits.iter().all(|&l| l == 0.0));
+        assert_eq!(rep.counters.reads_of(MemLevel::Bram, DataKind::Weight), 0);
+        assert_eq!(rep.ops, 0);
+        assert_eq!(rep.cycles, 16); // scan still happens
+    }
+
+    #[test]
+    fn classify_accumulates_timesteps() {
+        let mut w = vec![0i8; 2 * 2];
+        w[0] = 10; // input 0 votes class 0
+        w[3] = 6;  // input 1 votes class 1
+        let fc = FcEngine::new(2, 2, w, 1.0, vec![0.0; 2]);
+        // Two timesteps of input-1 spikes beat one of input-0.
+        let (cls, _) = fc.classify(&[
+            vec![true, false],
+            vec![false, true],
+            vec![false, true],
+        ]);
+        assert_eq!(cls, 1);
+    }
+
+    #[test]
+    fn flatten_is_channel_last() {
+        let mut f = SpikeFrame::zeros(2, 2, 3);
+        f.set(0, 1, 2); // flat index (0*2+1)*3 + 2 = 5
+        let flat = FcEngine::flatten(&f);
+        assert!(flat[5]);
+        assert_eq!(flat.iter().filter(|&&b| b).count(), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Hardware FIFO model with capacity, backpressure, and occupancy stats.
+//!
+//! Used for the line buffer rows (Fig. 7a) and the inter-layer buffers
+//! of the streaming pipeline (SectionIV-E.1). `push` fails when full — the
+//! "request-response" handshake turns that into upstream stall cycles.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    capacity: usize,
+    items: VecDeque<T>,
+    pub stats: FifoStats,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FifoStats {
+    pub pushes: u64,
+    pub pops: u64,
+    /// Rejected pushes (upstream stalls under the handshake).
+    pub full_rejects: u64,
+    /// Pops attempted while empty (downstream starvation).
+    pub empty_rejects: u64,
+    /// High-water mark of occupancy.
+    pub max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "fifo capacity must be positive");
+        Self {
+            capacity,
+            items: VecDeque::with_capacity(capacity),
+            stats: FifoStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    /// Try to enqueue; `Err(item)` when full (backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.is_full() {
+            self.stats.full_rejects += 1;
+            return Err(item);
+        }
+        self.items.push_back(item);
+        self.stats.pushes += 1;
+        self.stats.max_occupancy = self.stats.max_occupancy.max(self.len());
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        match self.items.pop_front() {
+            Some(x) => {
+                self.stats.pops += 1;
+                Some(x)
+            }
+            None => {
+                self.stats.empty_rejects += 1;
+                None
+            }
+        }
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    /// Tail-to-head chaining (Fig. 7a): pop here, push into `next`.
+    pub fn shift_into(&mut self, next: &mut Fifo<T>) -> bool {
+        if next.is_full() || self.is_empty() {
+            return false;
+        }
+        let item = self.pop().expect("checked non-empty");
+        next.push(item).ok().expect("checked non-full");
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut f = Fifo::new(4);
+        for i in 0..4 {
+            f.push(i).unwrap();
+        }
+        assert!(f.is_full());
+        assert_eq!(f.pop(), Some(0));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_on_full() {
+        let mut f = Fifo::new(2);
+        f.push(1).unwrap();
+        f.push(2).unwrap();
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.stats.full_rejects, 1);
+    }
+
+    #[test]
+    fn starvation_counted() {
+        let mut f: Fifo<u8> = Fifo::new(2);
+        assert!(f.pop().is_none());
+        assert_eq!(f.stats.empty_rejects, 1);
+    }
+
+    #[test]
+    fn chained_shift() {
+        let mut a = Fifo::new(2);
+        let mut b = Fifo::new(2);
+        a.push(7).unwrap();
+        assert!(a.shift_into(&mut b));
+        assert_eq!(b.pop(), Some(7));
+        assert!(!a.shift_into(&mut b)); // a now empty
+    }
+
+    #[test]
+    fn high_water_mark() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        for _ in 0..3 {
+            f.pop();
+        }
+        assert_eq!(f.stats.max_occupancy, 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _: Fifo<u8> = Fifo::new(0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Line buffer: `Kh` chained FIFOs of spike vectors (paper Fig. 7a).
+//!
+//! The FIFOs are arranged tail-to-head: pushing a new pixel's spike
+//! vector into row 0 shifts the column history upward, so after priming,
+//! reading the heads of all `Kh` rows yields the `Kh x 1` column of the
+//! current receptive field.  Each FIFO has depth `Wi` (one image row)
+//! and width `Ci` bits (one spike vector) — exactly the paper's sizing.
+//!
+//! The conv engine walks receptive fields through [`LineBuffer::window`]
+//! which also counts the BRAM traffic the structure implies: each input
+//! vector is **written once** on fill (the single off-chip fetch of
+//! Table III) and **read `Kw`** times per row it participates in from
+//! on-chip FIFOs.
+
+use crate::codec::{SpikeFrame, SpikeVector};
+
+use super::memory::{AccessCounter, DataKind, MemLevel};
+
+#[derive(Debug, Clone)]
+pub struct LineBuffer {
+    pub kh: usize,
+    pub wi: usize,
+    pub ci: usize,
+    /// rows[r] = the r-th most recent image row (r = 0 newest).
+    rows: Vec<Vec<SpikeVector>>,
+    /// Number of image rows pushed so far.
+    filled: usize,
+}
+
+impl LineBuffer {
+    pub fn new(kh: usize, wi: usize, ci: usize) -> Self {
+        Self {
+            kh,
+            wi,
+            ci,
+            rows: (0..kh).map(|_| Vec::with_capacity(wi)).collect(),
+            filled: 0,
+        }
+    }
+
+    /// Capacity in bits: `Kh * Wi * Ci` (the Fig. 7a sizing rule).
+    pub fn capacity_bits(&self) -> usize {
+        self.kh * self.wi * self.ci
+    }
+
+    /// Push one full image row of spike vectors (the fill from the
+    /// previous layer / DRAM). Counts one off-chip read + one BRAM
+    /// write per vector. Rows shift tail-to-head: the oldest falls off.
+    pub fn push_row(&mut self, row: Vec<SpikeVector>,
+                    counters: &mut AccessCounter, off_chip: bool) {
+        assert_eq!(row.len(), self.wi, "row width mismatch");
+        for v in &row {
+            assert_eq!(v.channels, self.ci, "channel width mismatch");
+        }
+        counters.read(
+            if off_chip { MemLevel::Dram } else { MemLevel::Bram },
+            DataKind::InputSpike,
+            self.wi as u64,
+        );
+        counters.write(MemLevel::Bram, DataKind::InputSpike, self.wi as u64);
+        self.rows.rotate_right(1);
+        self.rows[0] = row;
+        self.filled += 1;
+    }
+
+    /// True when `Kh` rows are resident (the array can start).
+    pub fn primed(&self) -> bool {
+        self.filled >= self.kh
+    }
+
+    /// Borrow the `Kh` resident rows bottom-up (index 0 = top of the
+    /// receptive field) for zero-copy window slicing (§Perf hot path).
+    /// Traffic is accounted separately via [`Self::count_window_read`].
+    pub fn resident_rows(&self) -> Vec<&[SpikeVector]> {
+        debug_assert!(self.primed());
+        (0..self.kh)
+            .map(|r| self.rows[self.kh - 1 - r].as_slice())
+            .collect()
+    }
+
+    /// Account the BRAM reads of one `Kh x Kw` window fetch.
+    pub fn count_window_read(&self, kw: usize,
+                             counters: &mut AccessCounter) {
+        counters.read(MemLevel::Bram, DataKind::InputSpike,
+                      (self.kh * kw) as u64);
+    }
+
+    /// The `Kh x Kw` window of spike vectors whose top-left input column
+    /// is `x0` (0-based within the padded row). Counts `Kh*Kw` BRAM
+    /// reads — the on-chip reuse traffic.
+    pub fn window(&self, x0: usize, kw: usize,
+                  counters: &mut AccessCounter) -> Vec<Vec<&SpikeVector>> {
+        debug_assert!(self.primed());
+        debug_assert!(x0 + kw <= self.wi);
+        counters.read(MemLevel::Bram, DataKind::InputSpike,
+                      (self.kh * kw) as u64);
+        // rows[0] is the newest = bottom of the receptive field.
+        (0..self.kh)
+            .map(|r| {
+                let row = &self.rows[self.kh - 1 - r];
+                (x0..x0 + kw).map(|x| &row[x]).collect()
+            })
+            .collect()
+    }
+}
+
+/// Build the padded spike-vector rows of a frame (zero padding).
+pub fn padded_rows(frame: &SpikeFrame, pad: usize) -> Vec<Vec<SpikeVector>> {
+    let wi = frame.w + 2 * pad;
+    let mut rows = Vec::with_capacity(frame.h + 2 * pad);
+    let zero_row =
+        || (0..wi).map(|_| SpikeVector::zeros(frame.c)).collect::<Vec<_>>();
+    for _ in 0..pad {
+        rows.push(zero_row());
+    }
+    for y in 0..frame.h {
+        let mut row = Vec::with_capacity(wi);
+        for _ in 0..pad {
+            row.push(SpikeVector::zeros(frame.c));
+        }
+        for x in 0..frame.w {
+            row.push(frame.vector(y, x));
+        }
+        for _ in 0..pad {
+            row.push(SpikeVector::zeros(frame.c));
+        }
+        rows.push(row);
+    }
+    for _ in 0..pad {
+        rows.push(zero_row());
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sizing_rule() {
+        let lb = LineBuffer::new(3, 28, 16);
+        assert_eq!(lb.capacity_bits(), 3 * 28 * 16);
+    }
+
+    #[test]
+    fn priming_and_window() {
+        let mut rng = Rng::new(5);
+        let f = SpikeFrame::random(4, 4, 2, 0.5, &mut rng);
+        let rows = padded_rows(&f, 0);
+        let mut lb = LineBuffer::new(3, 4, 2);
+        let mut ctr = AccessCounter::new();
+        lb.push_row(rows[0].clone(), &mut ctr, true);
+        assert!(!lb.primed());
+        lb.push_row(rows[1].clone(), &mut ctr, true);
+        lb.push_row(rows[2].clone(), &mut ctr, true);
+        assert!(lb.primed());
+        let win = lb.window(1, 3, &mut ctr);
+        // Window row r must equal image row r (rows 0..2), cols 1..3.
+        for (r, wrow) in win.iter().enumerate() {
+            for (c, v) in wrow.iter().enumerate() {
+                assert_eq!(**v, f.vector(r, 1 + c), "mismatch at {r},{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_shifts_with_new_rows() {
+        let mut rng = Rng::new(6);
+        let f = SpikeFrame::random(5, 3, 1, 0.5, &mut rng);
+        let rows = padded_rows(&f, 0);
+        let mut lb = LineBuffer::new(3, 3, 1);
+        let mut ctr = AccessCounter::new();
+        for r in rows.iter().take(4) {
+            lb.push_row(r.clone(), &mut ctr, true);
+        }
+        // After 4 pushes the window covers image rows 1..3.
+        let win = lb.window(0, 3, &mut ctr);
+        assert_eq!(*win[0][0], f.vector(1, 0));
+        assert_eq!(*win[2][2], f.vector(3, 2));
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut lb = LineBuffer::new(3, 8, 4);
+        let mut ctr = AccessCounter::new();
+        for _ in 0..3 {
+            let row = (0..8).map(|_| SpikeVector::zeros(4)).collect();
+            lb.push_row(row, &mut ctr, true);
+        }
+        // 3 rows x 8 vectors: one DRAM read + one BRAM write each.
+        assert_eq!(ctr.reads_of(MemLevel::Dram, DataKind::InputSpike), 24);
+        assert_eq!(ctr.writes_of(MemLevel::Bram, DataKind::InputSpike), 24);
+        lb.window(0, 3, &mut ctr);
+        assert_eq!(ctr.reads_of(MemLevel::Bram, DataKind::InputSpike), 9);
+    }
+
+    #[test]
+    fn padded_rows_geometry() {
+        let f = SpikeFrame::zeros(4, 6, 3);
+        let rows = padded_rows(&f, 1);
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0].len(), 8);
+    }
+}

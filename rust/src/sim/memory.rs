@@ -1,0 +1,132 @@
+//! Memory hierarchy model: access counters per level and data kind.
+//!
+//! The paper's energy argument is a *traffic* argument (SectionII-C): what
+//! matters is how many times each datum crosses each memory boundary.
+//! Every engine in the simulator routes its accesses through an
+//! [`AccessCounter`] so Tables I/III and Fig. 11 fall out of the run.
+
+use std::collections::BTreeMap;
+
+/// Memory level crossed by an access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemLevel {
+    /// Off-chip DDR4 (frames in/out, streaming weights for huge nets).
+    Dram,
+    /// On-chip BRAM (weight buffer, line buffer, Vmem buffer, FIFOs).
+    Bram,
+    /// PE-internal registers (membrane potential during OS accumulate).
+    Reg,
+}
+
+/// What kind of datum the access moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DataKind {
+    InputSpike,
+    Weight,
+    PartialSum,
+    Vmem,
+    OutputSpike,
+}
+
+/// Read/write counts keyed by (level, kind).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AccessCounter {
+    pub reads: BTreeMap<(MemLevel, DataKind), u64>,
+    pub writes: BTreeMap<(MemLevel, DataKind), u64>,
+}
+
+impl AccessCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn read(&mut self, level: MemLevel, kind: DataKind, n: u64) {
+        *self.reads.entry((level, kind)).or_insert(0) += n;
+    }
+
+    #[inline]
+    pub fn write(&mut self, level: MemLevel, kind: DataKind, n: u64) {
+        *self.writes.entry((level, kind)).or_insert(0) += n;
+    }
+
+    pub fn reads_of(&self, level: MemLevel, kind: DataKind) -> u64 {
+        self.reads.get(&(level, kind)).copied().unwrap_or(0)
+    }
+
+    pub fn writes_of(&self, level: MemLevel, kind: DataKind) -> u64 {
+        self.writes.get(&(level, kind)).copied().unwrap_or(0)
+    }
+
+    /// Total accesses (reads + writes) of a kind across all levels.
+    pub fn total_of_kind(&self, kind: DataKind) -> u64 {
+        let r: u64 = self
+            .reads
+            .iter()
+            .filter(|((_, k), _)| *k == kind)
+            .map(|(_, v)| v)
+            .sum();
+        let w: u64 = self
+            .writes
+            .iter()
+            .filter(|((_, k), _)| *k == kind)
+            .map(|(_, v)| v)
+            .sum();
+        r + w
+    }
+
+    /// Total accesses at a level.
+    pub fn total_at_level(&self, level: MemLevel) -> u64 {
+        let r: u64 = self
+            .reads
+            .iter()
+            .filter(|((l, _), _)| *l == level)
+            .map(|(_, v)| v)
+            .sum();
+        let w: u64 = self
+            .writes
+            .iter()
+            .filter(|((l, _), _)| *l == level)
+            .map(|(_, v)| v)
+            .sum();
+        r + w
+    }
+
+    pub fn merge(&mut self, other: &AccessCounter) {
+        for (k, v) in &other.reads {
+            *self.reads.entry(*k).or_insert(0) += v;
+        }
+        for (k, v) in &other.writes {
+            *self.writes.entry(*k).or_insert(0) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let mut c = AccessCounter::new();
+        c.read(MemLevel::Bram, DataKind::Weight, 10);
+        c.read(MemLevel::Bram, DataKind::Weight, 5);
+        c.write(MemLevel::Dram, DataKind::Vmem, 3);
+        assert_eq!(c.reads_of(MemLevel::Bram, DataKind::Weight), 15);
+        assert_eq!(c.writes_of(MemLevel::Dram, DataKind::Vmem), 3);
+        assert_eq!(c.total_of_kind(DataKind::Weight), 15);
+        assert_eq!(c.total_at_level(MemLevel::Dram), 3);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = AccessCounter::new();
+        a.read(MemLevel::Reg, DataKind::PartialSum, 7);
+        let mut b = AccessCounter::new();
+        b.read(MemLevel::Reg, DataKind::PartialSum, 5);
+        b.write(MemLevel::Bram, DataKind::InputSpike, 1);
+        a.merge(&b);
+        assert_eq!(a.reads_of(MemLevel::Reg, DataKind::PartialSum), 12);
+        assert_eq!(a.writes_of(MemLevel::Bram, DataKind::InputSpike), 1);
+    }
+}

@@ -1,0 +1,44 @@
+//! Cycle-level simulator of the STI-SNN accelerator microarchitecture.
+//!
+//! This is the DESIGN.md substitution for the paper's ZCU102 FPGA: the
+//! same microarchitecture (multi-mode PE array, line buffer, neuron
+//! unit, OS dataflow, layer-wise pipeline) expressed as a simulator
+//! whose **counters** (cycles, memory accesses, energy, resources) are
+//! the quantities the paper's evaluation reports.
+//!
+//! Functional behaviour (which spikes come out) is bit-exact against
+//! the L1/L2 reference semantics — validated by `rust/tests/` against
+//! vectors exported from python.
+
+pub mod array;
+pub mod conv_engine;
+pub mod energy;
+pub mod fc_engine;
+pub mod fifo;
+pub mod linebuf;
+pub mod memory;
+pub mod neuron;
+pub mod pe;
+pub mod pool_engine;
+pub mod resources;
+pub mod ws_engine;
+
+pub use conv_engine::ConvEngine;
+pub use energy::{EnergyModel, EnergyReport};
+pub use fc_engine::FcEngine;
+pub use memory::{AccessCounter, DataKind, MemLevel};
+pub use pool_engine::PoolEngine;
+pub use resources::{ResourceModel, ResourceReport, Zcu102};
+
+/// Design clock of the paper's implementation (Table V): 200 MHz.
+pub const CLK_HZ: f64 = 200e6;
+
+/// Cycles -> milliseconds at the design clock.
+pub fn cycles_to_ms(cycles: u64) -> f64 {
+    cycles as f64 / CLK_HZ * 1e3
+}
+
+/// Cycles -> seconds at the design clock.
+pub fn cycles_to_s(cycles: u64) -> f64 {
+    cycles as f64 / CLK_HZ
+}

@@ -1,0 +1,135 @@
+//! Neuron module: threshold compare, fire, reset, Vmem buffer (Fig. 5).
+//!
+//! The accelerator uses IF neurons (paper Table V).  At T = 1 the psum
+//! is compared against the threshold and discarded — no membrane
+//! potential ever leaves the PE/adder-tree datapath.  At T > 1 the
+//! updated potential must round-trip through the on-chip **Vmem
+//! buffer** every timestep: this module owns that buffer and counts its
+//! traffic (the cost Fig. 11 quantifies).
+//!
+//! Numerics: PEs accumulate int8 weights into i32; the threshold check
+//! dequantises with the layer scale and adds the (float) bias:
+//! `acc*scale + bias >= vth` — bit-identical to the L2 fake-quant graph.
+
+use super::memory::{AccessCounter, DataKind, MemLevel};
+use super::pe::Acc;
+
+/// Per-layer neuron unit.
+#[derive(Debug, Clone)]
+pub struct NeuronUnit {
+    pub vth: f32,
+    pub scale: f32,
+    pub bias: Vec<f32>,
+    /// Membrane potentials (Ho*Wo*Co), allocated only when T > 1.
+    vmem: Option<Vec<f32>>,
+    n_neurons: usize,
+}
+
+impl NeuronUnit {
+    pub fn new(vth: f32, scale: f32, bias: Vec<f32>, n_neurons: usize,
+               timesteps: usize) -> Self {
+        Self {
+            vth,
+            scale,
+            bias,
+            vmem: if timesteps > 1 {
+                Some(vec![0.0; n_neurons])
+            } else {
+                None
+            },
+            n_neurons,
+        }
+    }
+
+    /// Bytes of Vmem buffer this unit allocates (0 at T = 1 — Fig. 11).
+    pub fn vmem_bytes(&self) -> usize {
+        self.vmem.as_ref().map_or(0, |v| v.len() * 4)
+    }
+
+    /// Process one neuron's psum: integrate (+saved vmem), compare,
+    /// fire, reset. `idx` is the flat (y*Wo + x)*Co + co index; `co`
+    /// selects the bias lane. Returns the spike bit.
+    #[inline]
+    pub fn fire(&mut self, idx: usize, co: usize, psum: Acc,
+                counters: &mut AccessCounter) -> bool {
+        debug_assert!(idx < self.n_neurons);
+        let current = psum as f32 * self.scale + self.bias[co];
+        match self.vmem.as_mut() {
+            None => {
+                // T = 1: threshold on the live accumulator; no storage.
+                current >= self.vth
+            }
+            Some(vm) => {
+                // T > 1: read-modify-write the Vmem buffer (BRAM).
+                counters.read(MemLevel::Bram, DataKind::Vmem, 1);
+                let v = vm[idx] + current;
+                let spike = v >= self.vth;
+                vm[idx] = if spike { 0.0 } else { v };
+                counters.write(MemLevel::Bram, DataKind::Vmem, 1);
+                spike
+            }
+        }
+    }
+
+    /// Clear state between frames (potentials reset per input frame).
+    pub fn reset(&mut self) {
+        if let Some(vm) = self.vmem.as_mut() {
+            vm.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(t: usize) -> NeuronUnit {
+        NeuronUnit::new(1.0, 0.1, vec![0.0; 4], 16, t)
+    }
+
+    #[test]
+    fn t1_no_vmem_allocated() {
+        assert_eq!(unit(1).vmem_bytes(), 0);
+        assert_eq!(unit(2).vmem_bytes(), 64);
+    }
+
+    #[test]
+    fn t1_threshold_fire() {
+        let mut n = unit(1);
+        let mut c = AccessCounter::new();
+        assert!(n.fire(0, 0, 10, &mut c)); // 10*0.1 = 1.0 >= 1.0
+        assert!(!n.fire(0, 0, 9, &mut c)); // 0.9 < 1.0
+        // T = 1 must generate zero vmem traffic.
+        assert_eq!(c.total_of_kind(DataKind::Vmem), 0);
+    }
+
+    #[test]
+    fn t2_accumulates_across_timesteps() {
+        let mut n = unit(2);
+        let mut c = AccessCounter::new();
+        assert!(!n.fire(3, 0, 6, &mut c)); // v = 0.6
+        assert!(n.fire(3, 0, 6, &mut c));  // v = 1.2 -> fire
+        assert!(!n.fire(3, 0, 6, &mut c)); // reset to 0, v = 0.6
+        // Each fire() at T>1 is one read + one write of the buffer.
+        assert_eq!(c.reads_of(MemLevel::Bram, DataKind::Vmem), 3);
+        assert_eq!(c.writes_of(MemLevel::Bram, DataKind::Vmem), 3);
+    }
+
+    #[test]
+    fn bias_lane_applied() {
+        let mut n = NeuronUnit::new(1.0, 0.1, vec![0.0, 100.0], 4, 1);
+        let mut c = AccessCounter::new();
+        assert!(!n.fire(0, 0, 0, &mut c));
+        assert!(n.fire(1, 1, 0, &mut c)); // bias lane 1 pushes over vth
+    }
+
+    #[test]
+    fn reset_clears_potentials() {
+        let mut n = unit(2);
+        let mut c = AccessCounter::new();
+        n.fire(0, 0, 6, &mut c);
+        n.reset();
+        // After reset the same sub-threshold input does not fire.
+        assert!(!n.fire(0, 0, 6, &mut c));
+    }
+}

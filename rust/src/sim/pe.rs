@@ -1,0 +1,160 @@
+//! Multi-mode processing element (paper Fig. 8).
+//!
+//! One PE owns one kernel tap position. Per input channel it receives
+//! (spike bit, int8 weight) and, depending on mode:
+//!
+//! * **Standard** (Fig. 8b): accumulates the weight into its psum
+//!   register iff the spike bit is set; after all input channels the
+//!   psum is offloaded to the spike-generation adder tree (`ctrl1`).
+//! * **Depthwise** (Fig. 8c): no cross-channel accumulation — each
+//!   channel's tap product is emitted directly (accumulation happens
+//!   across taps in the adder tree instead).
+//! * **Pointwise** (Fig. 8d): single-tap; the PE's accumulated psum is
+//!   thresholded directly with no adder tree.
+//!
+//! In multi-timestep mode the PE seeds its accumulator from the saved
+//! membrane potential and hands the updated value back (the Vmem-buffer
+//! round trip that T = 1 eliminates).
+
+use crate::arch::ConvMode;
+
+/// PE accumulator precision: 32-bit signed, matching the RTL's
+/// worst-case `Ci*Kh*Kw*127` growth.
+pub type Acc = i32;
+
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub mode: ConvMode,
+    psum: Acc,
+    /// Spike-gated accumulates performed (for ops accounting).
+    pub ops: u64,
+    /// Cycles the PE was busy.
+    pub busy_cycles: u64,
+}
+
+impl Pe {
+    pub fn new(mode: ConvMode) -> Self {
+        Self { mode, psum: 0, ops: 0, busy_cycles: 0 }
+    }
+
+    /// Begin a new output pixel; in multi-timestep mode `seed` is the
+    /// saved membrane potential (always 0 in standard OS accumulation —
+    /// the neuron module owns vmem across timesteps).
+    pub fn start(&mut self, seed: Acc) {
+        self.psum = seed;
+    }
+
+    /// One (spike, weight) step. Returns the depthwise pass-through
+    /// value when in depthwise mode (caller routes it to the tree).
+    #[inline]
+    pub fn step(&mut self, spike: bool, weight: i8) -> Option<Acc> {
+        self.busy_cycles += 1;
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                if spike {
+                    self.psum += weight as Acc;
+                    self.ops += 1;
+                }
+                None
+            }
+            ConvMode::Depthwise => {
+                // Fig. 8c: output the loaded weight iff a spike arrived.
+                if spike {
+                    self.ops += 1;
+                    Some(weight as Acc)
+                } else {
+                    Some(0)
+                }
+            }
+        }
+    }
+
+    /// Offload the accumulated psum (ctrl1) and clear the register.
+    pub fn drain(&mut self) -> Acc {
+        let v = self.psum;
+        self.psum = 0;
+        v
+    }
+
+    /// Observe without clearing (multi-timestep save path).
+    pub fn peek(&self) -> Acc {
+        self.psum
+    }
+}
+
+/// Psum adder tree (the spike-generation module's combiner, Fig. 8a).
+/// Returns (sum, tree latency in cycles = ceil(log2(n)) for n > 1).
+pub fn adder_tree(psums: &[Acc]) -> (Acc, u64) {
+    let sum = psums.iter().copied().sum();
+    (sum, adder_tree_latency(psums.len()))
+}
+
+/// Latency of an n-input adder tree: ceil(log2(n)) cycles (0 for n<=1).
+pub fn adder_tree_latency(n: usize) -> u64 {
+    let n = n.max(1) as u64;
+    if n <= 1 { 0 } else { 64 - (n - 1).leading_zeros() as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_mode_gates_on_spike() {
+        let mut pe = Pe::new(ConvMode::Standard);
+        pe.start(0);
+        pe.step(true, 5);
+        pe.step(false, 100); // gated off
+        pe.step(true, -3);
+        assert_eq!(pe.drain(), 2);
+        assert_eq!(pe.ops, 2);
+        assert_eq!(pe.drain(), 0); // cleared
+    }
+
+    #[test]
+    fn depthwise_mode_passes_weight_through() {
+        let mut pe = Pe::new(ConvMode::Depthwise);
+        pe.start(0);
+        assert_eq!(pe.step(true, 7), Some(7));
+        assert_eq!(pe.step(false, 7), Some(0));
+        // No internal accumulation in depthwise mode.
+        assert_eq!(pe.peek(), 0);
+    }
+
+    #[test]
+    fn pointwise_accumulates_like_standard() {
+        let mut pe = Pe::new(ConvMode::Pointwise);
+        pe.start(0);
+        for w in [1i8, 2, 3] {
+            pe.step(true, w);
+        }
+        assert_eq!(pe.drain(), 6);
+    }
+
+    #[test]
+    fn multi_timestep_seed() {
+        let mut pe = Pe::new(ConvMode::Standard);
+        pe.start(10); // saved membrane potential
+        pe.step(true, 1);
+        assert_eq!(pe.peek(), 11);
+    }
+
+    #[test]
+    fn adder_tree_sums_and_latency() {
+        let (s, lat) = adder_tree(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(s, 45);
+        assert_eq!(lat, 4); // ceil(log2(9)) = 4
+        let (s, lat) = adder_tree(&[42]);
+        assert_eq!((s, lat), (42, 0));
+    }
+
+    #[test]
+    fn accumulator_handles_negative_weights() {
+        let mut pe = Pe::new(ConvMode::Standard);
+        pe.start(0);
+        for _ in 0..1000 {
+            pe.step(true, -127);
+        }
+        assert_eq!(pe.drain(), -127_000);
+    }
+}

@@ -1,0 +1,89 @@
+//! Pooling layer engine: 2x2 stride-2 logical-OR on spike vectors,
+//! staged through the line buffer + register pair (paper Fig. 7b).
+
+use crate::codec::SpikeFrame;
+
+use super::memory::{AccessCounter, DataKind, MemLevel};
+
+#[derive(Debug, Clone, Default)]
+pub struct PoolRunReport {
+    pub cycles: u64,
+    pub counters: AccessCounter,
+}
+
+pub struct PoolEngine {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub c: usize,
+}
+
+impl PoolEngine {
+    pub fn new(in_h: usize, in_w: usize, c: usize) -> Self {
+        assert!(in_h % 2 == 0 && in_w % 2 == 0,
+                "OR pooling needs even dimensions");
+        Self { in_h, in_w, c }
+    }
+
+    pub fn run(&self, input: &SpikeFrame) -> (SpikeFrame, PoolRunReport) {
+        assert_eq!((input.h, input.w, input.c),
+                   (self.in_h, self.in_w, self.c));
+        let (ho, wo) = (self.in_h / 2, self.in_w / 2);
+        let mut out = SpikeFrame::zeros(ho, wo, self.c);
+        let mut rep = PoolRunReport::default();
+        for oy in 0..ho {
+            for ox in 0..wo {
+                // Fig. 7b: four vector reads, OR reduce, one write.
+                let v = input
+                    .vector(2 * oy, 2 * ox)
+                    .or(&input.vector(2 * oy, 2 * ox + 1))
+                    .or(&input.vector(2 * oy + 1, 2 * ox))
+                    .or(&input.vector(2 * oy + 1, 2 * ox + 1));
+                rep.counters.read(MemLevel::Bram, DataKind::InputSpike, 4);
+                out.set_vector(oy, ox, &v);
+                rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
+                rep.cycles += 1; // one output vector per cycle
+            }
+        }
+        (out, rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn or_pooling_semantics() {
+        let mut f = SpikeFrame::zeros(4, 4, 2);
+        f.set(0, 1, 0); // one spike in the top-left window, channel 0
+        f.set(3, 3, 1); // one in bottom-right, channel 1
+        let (out, _) = PoolEngine::new(4, 4, 2).run(&f);
+        assert!(out.get(0, 0, 0));
+        assert!(!out.get(0, 0, 1));
+        assert!(out.get(1, 1, 1));
+        assert_eq!(out.count(), 2);
+    }
+
+    #[test]
+    fn cycle_count_is_output_pixels() {
+        let mut rng = Rng::new(1);
+        let f = SpikeFrame::random(8, 8, 4, 0.3, &mut rng);
+        let (_, rep) = PoolEngine::new(8, 8, 4).run(&f);
+        assert_eq!(rep.cycles, 16);
+    }
+
+    #[test]
+    fn rate_never_decreases() {
+        let mut rng = Rng::new(2);
+        let f = SpikeFrame::random(16, 16, 8, 0.2, &mut rng);
+        let (out, _) = PoolEngine::new(16, 16, 8).run(&f);
+        assert!(out.rate() >= f.rate());
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_dims_rejected() {
+        PoolEngine::new(7, 8, 1);
+    }
+}

@@ -1,0 +1,218 @@
+//! FPGA resource model: LUT / FF / BRAM per module vs the ZCU102 budget.
+//!
+//! ## Calibration (DESIGN.md Substitutions)
+//!
+//! Vivado synthesis reports are replaced by a first-order area model
+//! fitted to the paper's Table V design points:
+//!
+//! * Per conv layer: `LUT = 40*PEs + 12*P*Ci + 50`, where the `P*Ci`
+//!   term is the weight-mux / spike-vector datapath width scaling with
+//!   the parallel factor. FF = 1.2 x LUT (register-rich pipeline).
+//!   This lands SCNN3@(4,2) ~ 3.5K LUT, SCNN5@(4,4,2,1) ~ 25.5K LUT,
+//!   vMobileNet ~ 7.7K LUT region (paper: 3.5 / 25.52 / 7.7).
+//! * BRAM36: weight buffers at int8 (`bytes/4608` blocks) + line
+//!   buffers (`Kh * Wi * Ci` bits) + Vmem buffer when T > 1 + a block
+//!   per inter-layer FIFO.
+
+use crate::arch::{ConvLayer, ConvMode, Layer, NetworkSpec};
+
+/// ZCU102 (xczu9eg) budget — paper Table V "Available".
+#[derive(Debug, Clone, Copy)]
+pub struct Zcu102;
+
+impl Zcu102 {
+    pub const LUT: u64 = 274_000;
+    pub const FF: u64 = 548_000;
+    pub const BRAM36: f64 = 912.0;
+    pub const DSP: u64 = 2_520;
+}
+
+/// Resource usage of one module or a whole design.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceReport {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram36: f64,
+    pub dsp: u64,
+}
+
+impl ResourceReport {
+    pub fn add(&mut self, o: &ResourceReport) {
+        self.lut += o.lut;
+        self.ff += o.ff;
+        self.bram36 += o.bram36;
+        self.dsp += o.dsp;
+    }
+
+    pub fn lut_util(&self) -> f64 {
+        self.lut as f64 / Zcu102::LUT as f64 * 100.0
+    }
+
+    pub fn bram_util(&self) -> f64 {
+        self.bram36 / Zcu102::BRAM36 * 100.0
+    }
+
+    pub fn fits(&self) -> bool {
+        self.lut <= Zcu102::LUT
+            && self.ff <= Zcu102::FF
+            && self.bram36 <= Zcu102::BRAM36
+            && self.dsp <= Zcu102::DSP
+    }
+}
+
+/// Area model.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceModel {
+    pub lut_per_pe: u64,
+    pub lut_per_ci_lane: u64,
+    pub lut_layer_control: u64,
+    pub ff_per_lut: f64,
+    /// BRAM36 bytes capacity (36 Kbit = 4608 bytes).
+    pub bram_bytes: usize,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        Self {
+            lut_per_pe: 40,
+            lut_per_ci_lane: 12,
+            lut_layer_control: 50,
+            ff_per_lut: 1.2,
+            bram_bytes: 4608,
+        }
+    }
+}
+
+impl ResourceModel {
+    /// Logic + memory of one conv layer at `timesteps`.
+    pub fn conv_layer(&self, l: &ConvLayer, timesteps: usize)
+                      -> ResourceReport {
+        let lut = self.lut_per_pe * l.pes() as u64
+            + self.lut_per_ci_lane * (l.parallel * l.ci) as u64
+            + self.lut_layer_control;
+
+        // Line buffer: Kh rows x Wi pixels x Ci bits (only multi-tap
+        // modes need it; pointwise streams directly).
+        let linebuf_bits = if l.mode == ConvMode::Pointwise {
+            0
+        } else {
+            l.kh * l.in_w * l.ci
+        };
+        // Weight buffer + Vmem buffer (T > 1 only, Fig. 11).
+        let weight_bytes = l.weight_bytes();
+        let vmem_bytes = if timesteps > 1 { l.vmem_bytes() } else { 0 };
+        let bram_bytes_total =
+            weight_bytes + vmem_bytes + linebuf_bits.div_ceil(8);
+        let bram36 = bram_bytes_total as f64 / self.bram_bytes as f64;
+
+        ResourceReport {
+            lut,
+            ff: (lut as f64 * self.ff_per_lut) as u64,
+            bram36,
+            dsp: 0, // spike-gated adds need no DSP48 (the SNN advantage)
+        }
+    }
+
+    /// Whole design: conv layers + pooling (negligible logic) + FC
+    /// weight storage + one inter-layer FIFO block per boundary.
+    pub fn network(&self, net: &NetworkSpec, timesteps: usize)
+                   -> ResourceReport {
+        let mut total = ResourceReport::default();
+        for layer in &net.layers {
+            match layer {
+                Layer::Conv(c) if !c.encoder => {
+                    total.add(&self.conv_layer(c, timesteps))
+                }
+                Layer::Conv(_) => {}
+                Layer::Pool { .. } => total.add(&ResourceReport {
+                    lut: 30,
+                    ff: 36,
+                    bram36: 0.0,
+                    dsp: 0,
+                }),
+                Layer::Fc { n_in, n_out } => total.add(&ResourceReport {
+                    lut: 200,
+                    ff: 240,
+                    bram36: (n_in * n_out) as f64 / self.bram_bytes as f64,
+                    dsp: 0,
+                }),
+            }
+        }
+        // Inter-layer FIFOs: half a BRAM36 per boundary.
+        total.bram36 += (net.layers.len() as f64 - 1.0) * 0.5;
+        total
+    }
+
+    /// Per-layer reports for Fig. 12 (before/after parallelism).
+    pub fn per_conv_layer(&self, net: &NetworkSpec, timesteps: usize)
+                          -> Vec<ResourceReport> {
+        net.accel_convs()
+            .iter()
+            .map(|c| self.conv_layer(c, timesteps))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn3, scnn5, vmobilenet};
+
+    /// Table V: used LUT 3.5K / 25.52K / 7.7K; BRAM 11.5 / 527.5 / ~13.
+    #[test]
+    fn table5_lut_calibration() {
+        let m = ResourceModel::default();
+        let s3 = m.network(&scnn3().with_parallel_factors(&[4, 2]), 1);
+        assert!((s3.lut as f64 - 3500.0).abs() / 3500.0 < 0.5,
+                "scnn3 lut {}", s3.lut);
+        let s5 = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        assert!((s5.lut as f64 - 25520.0).abs() / 25520.0 < 0.3,
+                "scnn5 lut {}", s5.lut);
+        let vm = m.network(&vmobilenet(), 1);
+        assert!((vm.lut as f64 - 7700.0).abs() / 7700.0 < 0.6,
+                "vmobilenet lut {}", vm.lut);
+    }
+
+    #[test]
+    fn table5_bram_calibration() {
+        let m = ResourceModel::default();
+        let s5 = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        assert!((s5.bram36 - 527.5).abs() / 527.5 < 0.15,
+                "scnn5 bram {}", s5.bram36);
+        let s3 = m.network(&scnn3().with_parallel_factors(&[4, 2]), 1);
+        assert!(s3.bram36 > 2.0 && s3.bram36 < 20.0,
+                "scnn3 bram {}", s3.bram36);
+    }
+
+    #[test]
+    fn t2_needs_more_bram_than_t1() {
+        let m = ResourceModel::default();
+        let net = scnn5();
+        let t1 = m.network(&net, 1).bram36;
+        let t2 = m.network(&net, 2).bram36;
+        // Fig. 11: the delta is the Vmem buffer, ~126 KB ~= 28 BRAM36.
+        let delta_kb = (t2 - t1) * 4608.0 / 1024.0;
+        assert!((delta_kb - 126.0).abs() < 40.0, "delta {delta_kb} KB");
+    }
+
+    #[test]
+    fn parallelism_costs_logic_not_bram() {
+        let m = ResourceModel::default();
+        let base = m.network(&scnn5(), 1);
+        let par = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        assert!(par.lut > base.lut);
+        assert!((par.bram36 - base.bram36).abs() < 1.0);
+    }
+
+    #[test]
+    fn everything_fits_zcu102() {
+        let m = ResourceModel::default();
+        for net in [
+            scnn3().with_parallel_factors(&[4, 2]),
+            scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            vmobilenet(),
+        ] {
+            assert!(m.network(&net, 2).fits(), "{} does not fit", net.name);
+        }
+    }
+}

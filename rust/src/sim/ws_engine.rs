@@ -1,0 +1,129 @@
+//! Weight-stationary baseline engine (Table I comparison).
+//!
+//! A counting model of a WS conv layer: weights pinned in PEs, input
+//! spikes re-streamed per (ci, co) pair, partial sums spilled to and
+//! re-fetched from the psum buffer for every input channel — the
+//! traffic pattern whose cost motivates the paper's OS choice
+//! (SectionII-C).  Functional output uses the same semantics as the OS
+//! engine (convolution is dataflow-invariant); only traffic and cycle
+//! accounting differ.
+
+use crate::arch::ConvLayer;
+use crate::codec::SpikeFrame;
+use crate::dataflow::ws_access;
+
+use super::conv_engine::{ConvEngine, ConvRunReport, ConvWeights};
+use super::memory::{AccessCounter, DataKind, MemLevel};
+
+pub struct WsEngine {
+    inner: ConvEngine,
+}
+
+impl WsEngine {
+    pub fn new(layer: ConvLayer, weights: ConvWeights,
+               timesteps: usize) -> Self {
+        let timing = crate::dataflow::ConvLatencyParams::optimized();
+        Self { inner: ConvEngine::new(layer, weights, timing, timesteps) }
+    }
+
+    /// Run one frame under WS accounting.
+    pub fn run_frame(&mut self, input: &SpikeFrame)
+                     -> (SpikeFrame, ConvRunReport) {
+        // Functional result: identical to OS (dataflow changes traffic,
+        // not math).
+        let (out, os_rep) = self.inner.run_frame(input, true);
+
+        // Replace the traffic with the WS pattern from Table I.
+        let l = &self.inner.layer;
+        let a = ws_access(l, self.timesteps() as u64);
+        let mut counters = AccessCounter::new();
+        counters.read(MemLevel::Bram, DataKind::InputSpike, a.input_spikes);
+        counters.read(MemLevel::Bram, DataKind::Weight, a.weights);
+        // WS psums: half reads, half writes of the spill traffic.
+        counters.read(MemLevel::Bram, DataKind::PartialSum,
+                      a.partial_sums / 2);
+        counters.write(MemLevel::Bram, DataKind::PartialSum,
+                       a.partial_sums - a.partial_sums / 2);
+
+        // WS cycles: the psum spill serialises on the buffer port —
+        // one extra cycle per psum access on top of the compute walk.
+        let cycles = os_rep.cycles + a.partial_sums;
+
+        (out, ConvRunReport {
+            cycles,
+            ops: os_rep.ops,
+            out_spikes: os_rep.out_spikes,
+            counters,
+        })
+    }
+
+    fn timesteps(&self) -> usize {
+        // ConvEngine stores timesteps privately; reconstruct from vmem.
+        if self.inner.vmem_bytes() > 0 { 2 } else { 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ConvMode;
+    use crate::util::rng::Rng;
+
+    fn layer() -> ConvLayer {
+        ConvLayer {
+            mode: ConvMode::Standard,
+            in_h: 8,
+            in_w: 8,
+            ci: 4,
+            co: 6,
+            kh: 3,
+            kw: 3,
+            pad: 1,
+            encoder: false,
+            parallel: 1,
+        }
+    }
+
+    #[test]
+    fn ws_and_os_agree_functionally() {
+        let l = layer();
+        let w = ConvWeights::random(&l, 1);
+        let mut rng = Rng::new(2);
+        let input = SpikeFrame::random(8, 8, 4, 0.3, &mut rng);
+        let mut os = ConvEngine::new(
+            l.clone(), w.clone(),
+            crate::dataflow::ConvLatencyParams::optimized(), 1);
+        let (os_out, _) = os.run_frame(&input, true);
+        let mut ws = WsEngine::new(l, w, 1);
+        let (ws_out, _) = ws.run_frame(&input);
+        assert_eq!(os_out, ws_out);
+    }
+
+    #[test]
+    fn ws_pays_psum_traffic_at_t1() {
+        let l = layer();
+        let w = ConvWeights::random(&l, 3);
+        let mut rng = Rng::new(4);
+        let input = SpikeFrame::random(8, 8, 4, 0.3, &mut rng);
+        let mut ws = WsEngine::new(l, w, 1);
+        let (_, rep) = ws.run_frame(&input);
+        // Table I WS psums at T=1: Ci*Co*Wo*Ho > 0 — the OS engine's is 0.
+        assert_eq!(rep.counters.total_of_kind(DataKind::PartialSum),
+                   4 * 6 * 8 * 8);
+    }
+
+    #[test]
+    fn ws_slower_than_os() {
+        let l = layer();
+        let w = ConvWeights::random(&l, 5);
+        let mut rng = Rng::new(6);
+        let input = SpikeFrame::random(8, 8, 4, 0.3, &mut rng);
+        let mut os = ConvEngine::new(
+            l.clone(), w.clone(),
+            crate::dataflow::ConvLatencyParams::optimized(), 1);
+        let (_, os_rep) = os.run_frame(&input, true);
+        let mut ws = WsEngine::new(l, w, 1);
+        let (_, ws_rep) = ws.run_frame(&input);
+        assert!(ws_rep.cycles > os_rep.cycles);
+    }
+}

@@ -1,0 +1,88 @@
+//! Micro-bench harness (criterion is not vendored).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`BenchSet`]: warm-up, then timed iterations with median/mean/min
+//! reporting. Good enough to find regressions and to print the paper's
+//! table rows; not a statistics suite.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn per_iter(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, autotuning iteration count to roughly `target_ms` total.
+pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let iters = ((target_ms as f64 * 1e6 / once).ceil() as usize).clamp(3, 1000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+    };
+    println!(
+        "{:<48} {:>12}/iter  (mean {:>12}, min {:>12}, n={})",
+        res.name,
+        fmt_ns(res.median_ns),
+        fmt_ns(res.mean_ns),
+        fmt_ns(res.min_ns),
+        res.iters
+    );
+    res
+}
+
+/// Named group of benches with a header, mirroring criterion's groups.
+pub struct BenchSet {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        Self { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = bench(name, 200, f);
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+}

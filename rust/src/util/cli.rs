@@ -1,0 +1,93 @@
+//! Tiny CLI argument helper (clap is not vendored).
+//!
+//! Syntax: `sti-snn <subcommand> [--flag value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` or bare `--switch` (next arg missing or
+                // itself a flag).
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table4 --model scnn5 --frames 16 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("table4"));
+        assert_eq!(a.get("model"), Some("scnn5"));
+        assert_eq!(a.get_usize("frames", 0), 16);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_usize("frames", 8), 8);
+        assert_eq!(a.get_str("model", "scnn3"), "scnn3");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("run file1 file2 --x 1");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small std-only utilities replacing crates that are not vendored in
+//! this offline environment (serde_json, clap, rand, criterion,
+//! proptest). See Cargo.toml for the constraint.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

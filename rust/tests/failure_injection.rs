@@ -1,0 +1,157 @@
+//! Failure-injection tests: malformed artifacts, bad protocol input,
+//! and misuse of the public API must fail loudly and cleanly (no
+//! panics on the error paths a user can actually hit).
+
+use std::path::Path;
+
+use sti_snn::arch::NetworkSpec;
+use sti_snn::coordinator::pipeline::{LayerParams, Pipeline,
+                                     PipelineConfig};
+use sti_snn::model::Artifact;
+use sti_snn::util::json::Json;
+
+fn write(dir: &Path, name: &str, contents: &[u8]) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join(name), contents).unwrap();
+}
+
+const NET_OK: &str = r#"{
+  "name": "t", "input": [4, 4, 1], "vth": 1.0, "timesteps": 1,
+  "layers": [
+    {"kind":"conv","in_h":4,"in_w":4,"in_c":1,"co":2,"k":3,"pad":1,
+     "encoder":false}
+  ],
+  "tensors": [
+    {"layer":0,"name":"w","kind":"int8","shape":[2,1,9],"scale":0.01,
+     "offset":0,"len":18},
+    {"layer":0,"name":"b","kind":"f32","shape":[2],"scale":1.0,
+     "offset":18,"len":8}
+  ]}"#;
+
+#[test]
+fn corrupt_net_json_is_an_error_not_a_panic() {
+    let dir = std::env::temp_dir().join("sti_fail_json");
+    write(&dir, "net.json", b"{ not json ");
+    write(&dir, "weights.bin", &[0u8; 26]);
+    let err = match Artifact::load(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt json must not load"),
+    };
+    assert!(err.to_string().contains("net.json")
+            || format!("{err:#}").contains("json"),
+            "unhelpful error: {err:#}");
+}
+
+#[test]
+fn truncated_weights_blob_is_detected() {
+    let dir = std::env::temp_dir().join("sti_fail_trunc");
+    write(&dir, "net.json", NET_OK.as_bytes());
+    write(&dir, "weights.bin", &[0u8; 5]); // needs 26
+    let art = Artifact::load(&dir).unwrap();
+    let err = match art.layer_params() {
+        Err(e) => e,
+        Ok(_) => panic!("truncated blob must not load"),
+    };
+    assert!(format!("{err:#}").contains("bounds"), "{err:#}");
+}
+
+#[test]
+fn missing_tensor_for_layer_is_detected() {
+    let dir = std::env::temp_dir().join("sti_fail_missing");
+    let net = NET_OK.replace(r#"{"layer":0,"name":"b","kind":"f32","shape":[2],"scale":1.0,
+     "offset":18,"len":8}"#, r#"{"layer":9,"name":"b","kind":"f32","shape":[2],"scale":1.0,
+     "offset":18,"len":8}"#);
+    write(&dir, "net.json", net.as_bytes());
+    write(&dir, "weights.bin", &[0u8; 26]);
+    let art = Artifact::load(&dir).unwrap();
+    assert!(art.layer_params().is_err());
+}
+
+#[test]
+fn unknown_layer_kind_rejected() {
+    let j = Json::parse(r#"{"name":"x","input":[2,2,1],
+        "layers":[{"kind":"transformer","in_h":2,"in_w":2,"in_c":1}]}"#)
+        .unwrap();
+    assert!(NetworkSpec::from_json(&j).is_err());
+}
+
+#[test]
+fn pipeline_rejects_wrong_param_count() {
+    let net = sti_snn::arch::scnn3();
+    // scnn3 needs 3 params (2 convs + fc); give 1.
+    let r = Pipeline::new(net, PipelineConfig::default(),
+                          vec![LayerParams::Random { seed: 1 }]);
+    assert!(r.is_err());
+    // And too many.
+    let net = sti_snn::arch::scnn3();
+    let r = Pipeline::new(
+        net, PipelineConfig::default(),
+        (0..9).map(|s| LayerParams::Random { seed: s }).collect());
+    assert!(r.is_err());
+}
+
+#[test]
+#[should_panic(expected = "input shape mismatch")]
+fn engine_rejects_wrong_input_shape() {
+    use sti_snn::arch::{ConvLayer, ConvMode};
+    use sti_snn::codec::SpikeFrame;
+    use sti_snn::dataflow::ConvLatencyParams;
+    use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+    let l = ConvLayer {
+        mode: ConvMode::Standard, in_h: 8, in_w: 8, ci: 4, co: 4,
+        kh: 3, kw: 3, pad: 1, encoder: false, parallel: 1,
+    };
+    let w = ConvWeights::random(&l, 1);
+    let mut e = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+    let bad = SpikeFrame::zeros(6, 6, 4); // wrong H, W
+    let _ = e.run_frame(&bad, true);
+}
+
+#[test]
+fn server_survives_malformed_requests() {
+    use sti_snn::server::{Backend, Client, Server};
+
+    struct Echo;
+    impl Backend for Echo {
+        fn infer(&mut self, img: &[f32]) -> anyhow::Result<(usize, Vec<f32>)> {
+            Ok((0, img.to_vec()))
+        }
+        fn input_len(&self) -> usize { 2 }
+    }
+
+    let server = Server::new(Echo);
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+    });
+    let addr = rx.recv().unwrap().to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Garbage JSON -> error reply, connection + server stay alive.
+    let resp = c.request(&Json::Str("not an object".into())).unwrap();
+    assert!(resp.get("error").is_some());
+    // Missing image field.
+    let resp = c.request(&Json::obj(vec![("id", Json::num(1.0))])).unwrap();
+    assert!(resp.get("error").is_some());
+    // Unknown command.
+    let resp = c.request(&Json::obj(vec![("cmd", Json::str("reboot"))]))
+        .unwrap();
+    assert!(resp.get("error").is_some());
+    // Then a good request still works.
+    let resp = c.infer(5, &[0.1, 0.2]).unwrap();
+    assert_eq!(resp.get("class").unwrap().as_usize(), Some(0));
+
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+}
+
+#[test]
+fn runtime_rejects_garbage_hlo() {
+    use sti_snn::runtime::Runtime;
+    let dir = std::env::temp_dir().join("sti_fail_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.hlo.txt");
+    std::fs::write(&p, "this is not hlo").unwrap();
+    let mut rt = Runtime::new().unwrap();
+    assert!(rt.load_hlo("bad", &p, (1, 1, 1)).is_err());
+}

@@ -1,0 +1,127 @@
+//! Integration tests against the real trained artifacts (the three-
+//! layer contract: python-trained + AOT HLO vs rust simulator).
+//!
+//! These require `make artifacts`; they skip (pass vacuously, with a
+//! note) when artifacts are absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::path::PathBuf;
+
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::model::Artifact;
+use sti_snn::runtime::Runtime;
+use sti_snn::util::rng::Rng;
+
+fn artifact_dir(name: &str) -> Option<PathBuf> {
+    let dir = std::env::var("STI_SNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+        .join(name);
+    if dir.join("net.json").exists()
+        && dir.join("model.hlo.txt").exists()
+    {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/{name} missing — skipping (run `make \
+                   artifacts`)");
+        None
+    }
+}
+
+/// Artifact loads and its geometry is self-consistent.
+#[test]
+fn artifact_loads_and_is_consistent() {
+    for name in ["scnn3", "vmobilenet", "scnn5"] {
+        let Some(dir) = artifact_dir(name) else { continue };
+        let art = Artifact::load(&dir).unwrap();
+        assert!(!art.tensors.is_empty(), "{name}: no tensors");
+        // Every non-encoder conv/fc layer has weights + bias.
+        let params = art.layer_params().unwrap();
+        assert!(!params.is_empty(), "{name}: no layer params");
+        // Pipeline builds from the artifact.
+        let pipe = Pipeline::new(art.net.clone(),
+                                 PipelineConfig::default(), params);
+        assert!(pipe.is_ok(), "{name}: {:?}", pipe.err());
+    }
+}
+
+/// The HLO graphs compile under the rust PJRT client and produce
+/// plausible outputs (binary spikes from the encoder; finite logits).
+#[test]
+fn artifact_hlo_compiles_and_runs() {
+    let Some(dir) = artifact_dir("scnn3") else { return };
+    let art = Artifact::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input).unwrap();
+    rt.load_hlo("model", &art.model_hlo(), art.net.input).unwrap();
+
+    let (h, w, c) = art.net.input;
+    let mut rng = Rng::new(42);
+    let image: Vec<f32> = (0..h * w * c).map(|_| rng.f32()).collect();
+
+    let frame = rt.encode("encoder", &image, art.encoder_out_shape())
+        .unwrap();
+    let rate = frame.rate();
+    assert!(rate > 0.0 && rate < 1.0,
+            "encoder produced degenerate rate {rate}");
+
+    let logits = rt.logits("model", &image).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|l| l.is_finite()));
+}
+
+/// Three-layer agreement: the int8 simulator pipeline and the PJRT
+/// fake-quant float graph must usually agree on the class (they share
+/// quantised weights; ties at the int8 grid may flip rare samples).
+#[test]
+fn simulator_agrees_with_pjrt_reference() {
+    let Some(dir) = artifact_dir("scnn3") else { return };
+    let art = Artifact::load(&dir).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input).unwrap();
+    rt.load_hlo("model", &art.model_hlo(), art.net.input).unwrap();
+    let mut pipe = Pipeline::new(art.net.clone(),
+                                 PipelineConfig::default(),
+                                 art.layer_params().unwrap())
+        .unwrap();
+
+    let (h, w, c) = art.net.input;
+    let mut rng = Rng::new(7);
+    let n = 16;
+    let mut agree = 0;
+    for _ in 0..n {
+        let image: Vec<f32> = (0..h * w * c).map(|_| rng.f32()).collect();
+        let frame = rt
+            .encode("encoder", &image, art.encoder_out_shape())
+            .unwrap();
+        let sim_class = pipe.run(std::slice::from_ref(&frame))
+            .predictions[0];
+        let logits = rt.logits("model", &image).unwrap();
+        let ref_class = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        agree += usize::from(sim_class == ref_class);
+    }
+    assert!(agree * 100 >= n * 75,
+            "simulator agreed with PJRT on only {agree}/{n} random \
+             images");
+}
+
+/// Trained accuracy recorded at AOT time is sane (better than chance by
+/// a solid margin on the 10-class synthetic set).
+#[test]
+fn trained_accuracy_recorded() {
+    for name in ["scnn3", "vmobilenet"] {
+        let Some(dir) = artifact_dir(name) else { continue };
+        let txt = std::fs::read_to_string(dir.join("net.json")).unwrap();
+        let j = sti_snn::util::json::Json::parse(&txt).unwrap();
+        let acc = j.get("acc_t1").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        assert!(acc > 0.4, "{name}: T=1 accuracy {acc} too close to \
+                chance (0.1)");
+    }
+}

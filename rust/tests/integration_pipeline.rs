@@ -1,0 +1,213 @@
+//! Integration tests: engines x coordinator x analytical models.
+//!
+//! These cross-check the cycle-level simulator against the paper's
+//! closed-form models (Eq. 10-12, Tables I/III) and verify the paper's
+//! qualitative claims end-to-end at test-sized geometry.
+
+use sti_snn::arch::{self, NetBuilder};
+use sti_snn::codec::{EventCodec, SpikeFrame};
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::coordinator::scheduler;
+use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::sim::memory::DataKind;
+use sti_snn::sim::EnergyModel;
+use sti_snn::util::rng::Rng;
+
+fn frames(shape: (usize, usize, usize), n: usize, rate: f64,
+          seed: u64) -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, rate,
+                                    &mut rng))
+        .collect()
+}
+
+fn mini_net() -> arch::NetworkSpec {
+    NetBuilder::new("mini", (12, 12, 2))
+        .encoder(4, 3)
+        .conv(8, 3)
+        .pool()
+        .conv(8, 3)
+        .pool()
+        .fc(10)
+        .build()
+}
+
+/// The engine's cycle count must track Eq. (12) across every conv layer
+/// of every deployed model geometry (scaled input).
+#[test]
+fn engine_cycles_track_eq12_for_all_models() {
+    for net in [mini_net(), arch::scnn3()] {
+        let model = dataflow::pipeline_latency(
+            &net, &ConvLatencyParams::optimized(), 1);
+        let mut pipe =
+            Pipeline::random(net.clone(), PipelineConfig::default())
+                .unwrap();
+        let shape = pipe.input_shape();
+        let rep = pipe.run(&frames(shape, 1, 0.25, 1));
+        let err = (rep.t_max as f64 - model.t_max as f64).abs()
+            / model.t_max as f64;
+        assert!(err < 0.05, "{}: engine {} vs model {}", net.name,
+                rep.t_max, model.t_max);
+    }
+}
+
+/// Eq. (10): total pipeline cycles for N frames == N*T_max + fill.
+#[test]
+fn pipeline_total_cycles_follow_eq10() {
+    let mut pipe =
+        Pipeline::random(mini_net(), PipelineConfig::default()).unwrap();
+    let shape = pipe.input_shape();
+    for n in [1usize, 3, 7] {
+        let rep = pipe.run(&frames(shape, n, 0.25, 2));
+        let expect = n as u64 * rep.t_max + (rep.t_sum - rep.t_max);
+        assert_eq!(rep.total_cycles, expect, "n={n}");
+    }
+}
+
+/// Table I claim at the system level: T=1 OS run has ZERO psum/vmem
+/// traffic anywhere in the pipeline; T=2 has it.
+#[test]
+fn t1_eliminates_all_vmem_traffic() {
+    let mut p1 =
+        Pipeline::random(mini_net(), PipelineConfig::default()).unwrap();
+    let shape = p1.input_shape();
+    let r1 = p1.run(&frames(shape, 2, 0.3, 3));
+    assert_eq!(r1.counters.total_of_kind(DataKind::Vmem), 0);
+    assert_eq!(r1.counters.total_of_kind(DataKind::PartialSum), 0);
+
+    let mut p2 = Pipeline::random(
+        mini_net(),
+        PipelineConfig { timesteps: 2, ..Default::default() },
+    )
+    .unwrap();
+    let r2 = p2.run(&frames(shape, 2, 0.3, 3));
+    assert!(r2.counters.total_of_kind(DataKind::Vmem) > 0);
+}
+
+/// Fig. 11 energy claim: dynamic energy scales ~linearly in T.
+#[test]
+fn energy_linear_in_timesteps() {
+    let mut p =
+        Pipeline::random(mini_net(), PipelineConfig::default()).unwrap();
+    let shape = p.input_shape();
+    let f = frames(shape, 1, 0.3, 4);
+    let mut e = vec![p.run(&f).dynamic_energy_per_frame_j()];
+    for t in [2usize, 4] {
+        let mut p = Pipeline::random(
+            mini_net(),
+            PipelineConfig { timesteps: t, ..Default::default() },
+        )
+        .unwrap();
+        e.push(p.run(&f).dynamic_energy_per_frame_j());
+    }
+    let r21 = e[1] / e[0];
+    let r42 = e[2] / e[1];
+    assert!((r21 - 2.0).abs() < 0.4, "T2/T1 = {r21}");
+    assert!((r42 - 2.0).abs() < 0.4, "T4/T2 = {r42}");
+}
+
+/// The scheduler's choice must beat or match every manual profile we
+/// try under the same budget.
+#[test]
+fn scheduler_beats_manual_profiles() {
+    let net = arch::scnn3();
+    let timing = ConvLatencyParams::optimized();
+    let choice = scheduler::optimize_factors(&net, 54, &timing);
+    for manual in [[1usize, 1], [2, 1], [2, 2], [4, 2], [1, 4]] {
+        let with = arch::scnn3().with_parallel_factors(&manual);
+        let pes = with.total_pes();
+        let lat = dataflow::pipeline_latency(&with, &timing, 1);
+        if pes <= 54 {
+            assert!(choice.t_max <= lat.t_max,
+                    "scheduler {} vs manual {manual:?} {}",
+                    choice.t_max, lat.t_max);
+        }
+    }
+}
+
+/// Spike-event stream between layers is lossless (codec roundtrip at
+/// every inter-layer boundary shape of the deployed models).
+#[test]
+fn event_stream_lossless_at_all_boundaries() {
+    for net in [arch::scnn3(), arch::vmobilenet()] {
+        let mut rng = Rng::new(5);
+        for layer in &net.layers {
+            let (h, w, c) = layer.in_shape();
+            if h == 1 {
+                continue;
+            }
+            let f = SpikeFrame::random(h, w, c, 0.2, &mut rng);
+            let codec = EventCodec::new(h, w, c);
+            let (events, _) = codec.encode(&f);
+            assert_eq!(codec.decode(&events), f,
+                       "boundary {h}x{w}x{c} of {}", net.name);
+        }
+    }
+}
+
+/// Functional invariance: pipelining mode and parallel factors must not
+/// change predictions (only timing).
+#[test]
+fn timing_knobs_do_not_change_predictions() {
+    let f = {
+        let p = Pipeline::random(mini_net(), PipelineConfig::default())
+            .unwrap();
+        frames(p.input_shape(), 3, 0.3, 6)
+    };
+    let mut preds = Vec::new();
+    for (pipelined, factors) in [
+        (true, vec![1usize, 1]),
+        (false, vec![1, 1]),
+        (true, vec![4, 2]),
+        (true, vec![8, 8]),
+    ] {
+        let net = mini_net().with_parallel_factors(&factors);
+        let mut p = Pipeline::random(
+            net, PipelineConfig { pipelined, ..Default::default() })
+            .unwrap();
+        preds.push(p.run(&f).predictions);
+    }
+    for w in preds.windows(2) {
+        assert_eq!(w[0], w[1]);
+    }
+}
+
+/// Static power model sanity at all three deployed design points.
+#[test]
+fn power_is_in_paper_band() {
+    let m = EnergyModel::default();
+    for (pes, bram, paper_w) in [
+        (54usize, 11.5, 0.71),
+        (99, 527.5, 1.53),
+        (40, 13.5, 0.74),
+    ] {
+        let p = m.static_power(pes, bram);
+        assert!((p - paper_w).abs() / paper_w < 0.35,
+                "static {p} vs paper {paper_w}");
+    }
+}
+
+/// WS baseline pays psum traffic that OS avoids, on every conv layer of
+/// the mini net at T=1 (the SectionII-C co-design argument, measured).
+#[test]
+fn os_beats_ws_traffic_at_t1() {
+    use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+    use sti_snn::sim::ws_engine::WsEngine;
+    let net = mini_net();
+    for c in net.accel_convs() {
+        let w = ConvWeights::random(c, 7);
+        let mut rng = Rng::new(8);
+        let input = SpikeFrame::random(c.in_h, c.in_w, c.ci, 0.3, &mut rng);
+        let mut os = ConvEngine::new(c.clone(), w.clone(),
+                                     ConvLatencyParams::optimized(), 1);
+        let (_, os_rep) = os.run_frame(&input, true);
+        let mut ws = WsEngine::new(c.clone(), w, 1);
+        let (_, ws_rep) = ws.run_frame(&input);
+        let os_psum = os_rep.counters.total_of_kind(DataKind::PartialSum)
+            + os_rep.counters.total_of_kind(DataKind::Vmem);
+        let ws_psum = ws_rep.counters.total_of_kind(DataKind::PartialSum);
+        assert_eq!(os_psum, 0);
+        assert!(ws_psum > 0);
+    }
+}

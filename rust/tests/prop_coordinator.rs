@@ -1,0 +1,263 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! proptest is not vendored in this offline environment, so this file
+//! implements the same discipline by hand: each property runs across
+//! many PRNG-generated cases (seeded, deterministic) and asserts an
+//! invariant; on failure the seed is printed for reproduction.
+
+use sti_snn::arch::{ConvLayer, ConvMode, NetBuilder, NetworkSpec};
+use sti_snn::codec::{EventCodec, SpikeFrame, SpikeVector};
+use sti_snn::coordinator::batch::{Batcher, Request};
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::coordinator::scheduler;
+use sti_snn::dataflow::{conv_latency, ConvLatencyParams};
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::fifo::Fifo;
+use sti_snn::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+/// Random small network with valid geometry.
+fn random_net(rng: &mut Rng) -> NetworkSpec {
+    let h = 8 + 4 * rng.below(3); // 8, 12, 16
+    let c_in = 1 + rng.below(3);
+    let mut b = NetBuilder::new("prop", (h, h, c_in))
+        .encoder(2 + rng.below(6), 3)
+        .conv(2 + rng.below(8), 3); // >= 1 accelerated conv, always
+    let layers = rng.below(3);
+    let mut cur_h = h;
+    for _ in 0..layers {
+        match rng.below(3) {
+            0 => b = b.conv(2 + rng.below(8), 3),
+            1 => {
+                b = b.dwconv(3);
+                b = b.pwconv(2 + rng.below(8));
+            }
+            _ => {
+                if cur_h >= 4 && cur_h % 2 == 0 {
+                    b = b.pool();
+                    cur_h /= 2;
+                } else {
+                    b = b.conv(2 + rng.below(8), 3);
+                }
+            }
+        }
+    }
+    b.fc(10).build()
+}
+
+/// Codec roundtrip: encode/decode is the identity for arbitrary frames.
+#[test]
+fn prop_codec_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let (h, w, c) = (1 + rng.below(20), 1 + rng.below(20),
+                         1 + rng.below(100));
+        let rate = rng.f64();
+        let f = SpikeFrame::random(h, w, c, rate, &mut rng);
+        let codec = EventCodec::new(h, w, c);
+        let (events, stats) = codec.encode(&f);
+        assert_eq!(codec.decode(&events), f, "seed={seed}");
+        // Event count == non-empty pixels; encoded bits formula.
+        assert_eq!(stats.encoded_bits,
+                   events.len() as u64 * codec.bits_per_event(),
+                   "seed={seed}");
+    }
+}
+
+/// Spike vector algebra: OR is commutative/idempotent; popcount is the
+/// sum of active bit iteration.
+#[test]
+fn prop_spike_vector_algebra() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let c = 1 + rng.below(200);
+        let bits_a: Vec<bool> = (0..c).map(|_| rng.bernoulli(0.3)).collect();
+        let bits_b: Vec<bool> = (0..c).map(|_| rng.bernoulli(0.3)).collect();
+        let a = SpikeVector::from_bits(&bits_a);
+        let b = SpikeVector::from_bits(&bits_b);
+        assert_eq!(a.or(&b), b.or(&a), "seed={seed}");
+        assert_eq!(a.or(&a), a, "seed={seed}");
+        assert_eq!(a.iter_active().count(), a.popcount(), "seed={seed}");
+        // OR popcount bounds.
+        let o = a.or(&b);
+        assert!(o.popcount() >= a.popcount().max(b.popcount()));
+        assert!(o.popcount() <= a.popcount() + b.popcount());
+    }
+}
+
+/// FIFO: pop order equals push order; occupancy never exceeds capacity.
+#[test]
+fn prop_fifo_order_and_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let cap = 1 + rng.below(16);
+        let mut f = Fifo::new(cap);
+        let mut model: std::collections::VecDeque<u64> =
+            Default::default();
+        for _ in 0..200 {
+            if rng.bernoulli(0.6) {
+                let v = rng.next_u64();
+                if f.push(v).is_ok() {
+                    model.push_back(v);
+                }
+            } else {
+                assert_eq!(f.pop(), model.pop_front(), "seed={seed}");
+            }
+            assert!(f.len() <= cap, "seed={seed}");
+            assert_eq!(f.len(), model.len(), "seed={seed}");
+        }
+    }
+}
+
+/// Batcher: never returns more than max_batch; preserves FIFO order;
+/// drains completely.
+#[test]
+fn prop_batcher_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let max_batch = 1 + rng.below(8);
+        let b = Batcher::new(max_batch,
+                             std::time::Duration::from_millis(1));
+        let n = rng.below(40);
+        for i in 0..n {
+            b.push(Request {
+                id: i as u64,
+                frame: SpikeFrame::zeros(2, 2, 1),
+                enqueued_at: std::time::Instant::now(),
+            });
+        }
+        let mut seen = Vec::new();
+        loop {
+            let batch = b.try_batch();
+            if batch.is_empty() {
+                break;
+            }
+            assert!(batch.len() <= max_batch, "seed={seed}");
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        let expect: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(seen, expect, "seed={seed}");
+    }
+}
+
+/// Scheduler: never exceeds the PE budget; t_max monotonically
+/// non-increasing in budget; factors are powers of two within Co.
+#[test]
+fn prop_scheduler_budget_and_monotonicity() {
+    let timing = ConvLatencyParams::optimized();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let net = random_net(&mut rng);
+        let min_pes: usize =
+            net.accel_convs().iter().map(|c| c.kh * c.kw).sum();
+        let mut last_tmax = u64::MAX;
+        for mult in [1usize, 2, 4, 8] {
+            let budget = min_pes * mult;
+            let choice = scheduler::optimize_factors(&net, budget, &timing);
+            assert!(choice.pes <= budget, "seed={seed}");
+            assert!(choice.t_max <= last_tmax, "seed={seed}");
+            last_tmax = choice.t_max;
+            for (c, f) in net.accel_convs().iter().zip(&choice.factors) {
+                assert!(f.is_power_of_two(), "seed={seed}");
+                assert!(*f <= c.co.max(1), "seed={seed}");
+            }
+        }
+    }
+}
+
+/// Engine/model agreement on random standard-conv layers: cycle count
+/// within 5% of Eq. (12) for any geometry and parallel factor.
+#[test]
+fn prop_engine_matches_eq12_on_random_layers() {
+    for seed in 0..20 {
+        let mut rng = Rng::new(5000 + seed);
+        let l = ConvLayer {
+            mode: ConvMode::Standard,
+            in_h: 6 + rng.below(8),
+            in_w: 6 + rng.below(8),
+            ci: 1 + rng.below(8),
+            co: 1 + rng.below(12),
+            kh: 3,
+            kw: 3,
+            pad: 1,
+            encoder: false,
+            parallel: 1 << rng.below(3),
+        };
+        let analytical = conv_latency(&l, &ConvLatencyParams::optimized());
+        let input =
+            SpikeFrame::random(l.in_h, l.in_w, l.ci, 0.3, &mut rng);
+        let w = ConvWeights::random(&l, seed);
+        let mut eng =
+            ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
+        let (_, rep) = eng.run_frame(&input, true);
+        let err = (rep.cycles as f64 - analytical as f64).abs()
+            / analytical.max(1) as f64;
+        assert!(err < 0.05, "seed={seed} engine {} model {analytical}",
+                rep.cycles);
+    }
+}
+
+/// Whole-pipeline functional determinism: same seed -> same predictions
+/// regardless of batch split.
+#[test]
+fn prop_pipeline_batch_split_invariance() {
+    for seed in 0..10 {
+        let mut rng = Rng::new(6000 + seed);
+        let net = random_net(&mut rng);
+        let mut pipe =
+            Pipeline::random(net.clone(), PipelineConfig::default())
+                .unwrap();
+        let shape = pipe.input_shape();
+        let mut frng = Rng::new(7000 + seed);
+        let frames: Vec<SpikeFrame> = (0..4)
+            .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.3,
+                                        &mut frng))
+            .collect();
+        let all = pipe.run(&frames).predictions;
+        // Re-run frame by frame on a fresh pipeline.
+        let mut pipe2 =
+            Pipeline::random(net, PipelineConfig::default()).unwrap();
+        let mut split = Vec::new();
+        for f in &frames {
+            split.extend(pipe2.run(std::slice::from_ref(f)).predictions);
+        }
+        assert_eq!(all, split, "seed={seed}");
+    }
+}
+
+/// OR-pooling engine: monotone (adding spikes never removes output
+/// spikes).
+#[test]
+fn prop_pooling_monotone() {
+    use sti_snn::sim::pool_engine::PoolEngine;
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let (h, w, c) = (2 + 2 * rng.below(6), 2 + 2 * rng.below(6),
+                         1 + rng.below(8));
+        let f1 = SpikeFrame::random(h, w, c, 0.2, &mut rng);
+        // f2 = f1 plus extra spikes.
+        let extra = SpikeFrame::random(h, w, c, 0.2, &mut rng);
+        let mut f2 = f1.clone();
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    if extra.get(y, x, ch) {
+                        f2.set(y, x, ch);
+                    }
+                }
+            }
+        }
+        let eng = PoolEngine::new(h, w, c);
+        let (o1, _) = eng.run(&f1);
+        let (o2, _) = eng.run(&f2);
+        for y in 0..h / 2 {
+            for x in 0..w / 2 {
+                for ch in 0..c {
+                    assert!(!o1.get(y, x, ch) || o2.get(y, x, ch),
+                            "seed={seed}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Smoke: execute the jax/Pallas-lowered HLO from rust PJRT and match
+//! the python reference numerics — the AOT-bridge integration test.
+//!
+//! Fixtures are produced by python/tests/test_aot.py::
+//! test_generate_rust_smoke_fixtures (run `make test` python side
+//! first); the test skips when they are absent.
+
+use std::path::Path;
+
+use sti_snn::runtime::Runtime;
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn pallas_lowered_hlo_runs_in_rust() {
+    let dir = Path::new("/tmp/sti_snn_fixture");
+    if !dir.join("model.hlo.txt").exists() {
+        eprintln!("fixtures missing (run pytest first); skipping");
+        return;
+    }
+    let img = read_f32(&dir.join("img.f32"));
+    let want = read_f32(&dir.join("logits.f32"));
+
+    let mut rt = Runtime::new().unwrap();
+    rt.load_hlo("m", &dir.join("model.hlo.txt"), (28, 28, 1)).unwrap();
+    let got = rt.logits("m", &img).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert!((g - w).abs() < 1e-3, "got {g} want {w}");
+    }
+    println!("rust PJRT logits match the jax/Pallas reference: {got:?}");
+}
