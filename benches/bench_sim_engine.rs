@@ -1,5 +1,11 @@
 //! Bench: cycle-level conv engine throughput (simulation speed itself —
-//! the §Perf hot path) across modes and parallel factors.
+//! the §Perf hot path) across modes, parallel factors, and functional
+//! compute backends (event-driven `accurate` vs bit-plane popcount
+//! `word-parallel`; see `sim::backend`).
+//!
+//! Every accurate/word-parallel pair also cross-checks bit-exactness
+//! and report equality, so the speedup numbers are guaranteed to be
+//! apples-to-apples.
 //!
 //! `cargo bench --bench bench_sim_engine`
 
@@ -7,6 +13,7 @@ use sti_snn::arch::{ConvLayer, ConvMode};
 use sti_snn::codec::SpikeFrame;
 use sti_snn::dataflow::ConvLatencyParams;
 use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::BackendKind;
 use sti_snn::util::bench::BenchSet;
 use sti_snn::util::rng::Rng;
 
@@ -19,48 +26,68 @@ fn layer(mode: ConvMode, ci: usize, co: usize, hw: usize,
     }
 }
 
+/// Bench one layer under both backends; cross-check equivalence and
+/// print the word-parallel speedup.
+fn compare(set: &mut BenchSet, name: &str, l: ConvLayer, seed: u64,
+           rate: f64, rng: &mut Rng) -> (f64, f64) {
+    let w = ConvWeights::random(&l, seed);
+    let input = SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, rng);
+    let timing = ConvLatencyParams::optimized();
+
+    let mut acc = ConvEngine::new(l.clone(), w.clone(), timing, 1);
+    let mut wp = ConvEngine::with_backend(l, w, timing, 1,
+                                          BackendKind::WordParallel);
+
+    // Equivalence gate before timing anything.
+    let (oa, ra) = acc.run_frame(&input, true);
+    let (ow, rw) = wp.run_frame(&input, true);
+    assert_eq!(oa, ow, "{name}: backends diverge functionally");
+    assert_eq!(ra, rw, "{name}: backends diverge on reports");
+
+    let r_acc = set.run(&format!("{name} [accurate]"), || {
+        std::hint::black_box(acc.run_frame(&input, true));
+    });
+    let acc_ns = r_acc.median_ns;
+    let r_wp = set.run(&format!("{name} [word-parallel]"), || {
+        std::hint::black_box(wp.run_frame(&input, true));
+    });
+    let wp_ns = r_wp.median_ns;
+    println!("    -> word-parallel speedup {:.2}x", acc_ns / wp_ns);
+    (acc_ns, wp_ns)
+}
+
 fn main() {
     let mut set = BenchSet::new("conv engine (cycle-level sim speed)");
     let mut rng = Rng::new(1);
 
-    // SCNN3 conv2-sized standard layer.
-    let l = layer(ConvMode::Standard, 16, 32, 28, 1);
-    let w = ConvWeights::random(&l, 2);
-    let input = SpikeFrame::random(28, 28, 16, 0.2, &mut rng);
-    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
-    let r = set.run("standard 28x28 16->32 (scnn3 conv2)", || {
-        std::hint::black_box(eng.run_frame(&input, true));
-    });
+    // SCNN3 conv2-sized standard layer — the acceptance workload:
+    // standard conv at default sparsity.
+    let (acc_ns, wp_ns) = compare(
+        &mut set, "standard 28x28 16->32 (scnn3 conv2)",
+        layer(ConvMode::Standard, 16, 32, 28, 1), 2, 0.2, &mut rng);
     let ops = 28 * 28 * 32 * 16 * 9u64;
-    println!("    -> sim rate {:.1} M synaptic ops/s wall",
-             ops as f64 / (r.median_ns / 1e9) / 1e6);
+    println!("    -> sim rate {:.1} (accurate) / {:.1} (word-parallel) \
+              M synaptic ops/s wall",
+             ops as f64 / (acc_ns / 1e9) / 1e6,
+             ops as f64 / (wp_ns / 1e9) / 1e6);
 
     // SCNN5 conv2-sized layer (the heavyweight).
-    let l = layer(ConvMode::Standard, 64, 128, 16, 4);
-    let w = ConvWeights::random(&l, 3);
-    let input = SpikeFrame::random(16, 16, 64, 0.15, &mut rng);
-    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
-    let r = set.run("standard 16x16 64->128 p4 (scnn5 conv2)", || {
-        std::hint::black_box(eng.run_frame(&input, true));
-    });
+    let (acc_ns, wp_ns) = compare(
+        &mut set, "standard 16x16 64->128 p4 (scnn5 conv2)",
+        layer(ConvMode::Standard, 64, 128, 16, 4), 3, 0.15, &mut rng);
     let ops = 16 * 16 * 128 * 64 * 9u64;
-    println!("    -> sim rate {:.1} M synaptic ops/s wall",
-             ops as f64 / (r.median_ns / 1e9) / 1e6);
+    println!("    -> sim rate {:.1} (accurate) / {:.1} (word-parallel) \
+              M synaptic ops/s wall",
+             ops as f64 / (acc_ns / 1e9) / 1e6,
+             ops as f64 / (wp_ns / 1e9) / 1e6);
+
+    // Wide standard layer: 256 input channels = 4 words per tap.
+    compare(&mut set, "standard 8x8 256->256 (scnn5 conv4)",
+            layer(ConvMode::Standard, 256, 256, 8, 1), 7, 0.15, &mut rng);
 
     // Depthwise + pointwise (vMobileNet block).
-    let l = layer(ConvMode::Depthwise, 32, 32, 14, 1);
-    let w = ConvWeights::random(&l, 4);
-    let input = SpikeFrame::random(14, 14, 32, 0.25, &mut rng);
-    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
-    set.run("depthwise 14x14 c32", || {
-        std::hint::black_box(eng.run_frame(&input, true));
-    });
-
-    let l = layer(ConvMode::Pointwise, 32, 64, 14, 1);
-    let w = ConvWeights::random(&l, 5);
-    let input = SpikeFrame::random(14, 14, 32, 0.25, &mut rng);
-    let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
-    set.run("pointwise 14x14 32->64", || {
-        std::hint::black_box(eng.run_frame(&input, true));
-    });
+    compare(&mut set, "depthwise 14x14 c32",
+            layer(ConvMode::Depthwise, 32, 32, 14, 1), 4, 0.25, &mut rng);
+    compare(&mut set, "pointwise 14x14 32->64",
+            layer(ConvMode::Pointwise, 32, 64, 14, 1), 5, 0.25, &mut rng);
 }

@@ -1,9 +1,14 @@
 //! Frame batching / request queue for the serving path (host side of
 //! paper Fig. 10).
 //!
-//! The TCP server enqueues requests; the accelerator thread drains them
-//! in batches (larger batches amortise the pipeline fill, Eq. 11).
-//! Plain std sync — tokio is not vendored in this environment.
+//! The TCP server and the replica pool enqueue work items; consumer
+//! threads drain them in batches (larger batches amortise the pipeline
+//! fill, Eq. 11). The queue is generic over the item type so the same
+//! structure backs both the simulator-facing [`Request`] queue and the
+//! server's in-flight job queue. Multiple consumers may drain one
+//! queue concurrently — that is exactly how the replica pool shares
+//! work across pipelines. Plain std sync — tokio is not vendored in
+//! this environment.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -20,14 +25,14 @@ pub struct Request {
 }
 
 /// Thread-safe batching queue with a max-batch / max-wait policy.
-pub struct Batcher {
-    inner: Mutex<VecDeque<Request>>,
+pub struct Batcher<T> {
+    inner: Mutex<VecDeque<T>>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
 }
 
-impl Batcher {
+impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch > 0);
         Self {
@@ -38,8 +43,8 @@ impl Batcher {
         }
     }
 
-    pub fn push(&self, req: Request) {
-        self.inner.lock().unwrap().push_back(req);
+    pub fn push(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
         self.cv.notify_one();
     }
 
@@ -52,9 +57,9 @@ impl Batcher {
     }
 
     /// Take the next batch: waits up to `max_wait` for the first
-    /// request, then drains up to `max_batch`. Returns an empty vec on
+    /// item, then drains up to `max_batch`. Returns an empty vec on
     /// timeout with nothing queued.
-    pub fn next_batch(&self) -> Vec<Request> {
+    pub fn next_batch(&self) -> Vec<T> {
         let mut q = self.inner.lock().unwrap();
         if q.is_empty() {
             let (guard, _timeout) = self
@@ -68,10 +73,16 @@ impl Batcher {
     }
 
     /// Non-blocking variant used by the simulator-driven loop.
-    pub fn try_batch(&self) -> Vec<Request> {
+    pub fn try_batch(&self) -> Vec<T> {
         let mut q = self.inner.lock().unwrap();
         let n = q.len().min(self.max_batch);
         q.drain(..n).collect()
+    }
+
+    /// Drain everything immediately (shutdown path: reply with errors).
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut q = self.inner.lock().unwrap();
+        q.drain(..).collect()
     }
 }
 
@@ -112,7 +123,7 @@ mod tests {
 
     #[test]
     fn next_batch_times_out_empty() {
-        let b = Batcher::new(4, Duration::from_millis(5));
+        let b: Batcher<Request> = Batcher::new(4, Duration::from_millis(5));
         let batch = b.next_batch();
         assert!(batch.is_empty());
     }
@@ -127,5 +138,47 @@ mod tests {
         let got = h.join().unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].id, 42);
+    }
+
+    #[test]
+    fn generic_items_and_drain_all() {
+        let b: Batcher<u32> = Batcher::new(2, Duration::from_millis(1));
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.try_batch(), vec![0, 1]);
+        assert_eq!(b.drain_all(), vec![2, 3, 4]);
+        assert!(b.is_empty());
+    }
+
+    /// Two consumers on one queue see disjoint items covering the whole
+    /// input — the replica-pool sharing contract.
+    #[test]
+    fn multiple_consumers_partition_the_queue() {
+        let b = Arc::new(Batcher::new(4, Duration::from_millis(5)));
+        for i in 0..64u64 {
+            b.push(req(i));
+        }
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let q = b.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    let batch = q.try_batch();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    got.extend(batch.into_iter().map(|r| r.id));
+                }
+                got
+            }));
+        }
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
     }
 }

@@ -9,12 +9,17 @@
 //! * [`scheduler`] — the output-channel parallel-factor optimiser:
 //!   given a PE budget, pick per-layer factors that minimise the
 //!   pipeline interval (the latency model drives the search).
-//! * [`batch`] — frame batching / request queue for the serving path.
+//! * [`batch`] — generic batching work queue for the serving path.
+//! * [`replica`] — N-pipeline replica pool draining one shared queue
+//!   (multi-core parallel serving; per-replica metrics in
+//!   `crate::metrics`).
 
 pub mod batch;
 pub mod pipeline;
+pub mod replica;
 pub mod scheduler;
 
 pub use batch::{Batcher, Request};
 pub use pipeline::{Pipeline, PipelineConfig, PipelineReport};
+pub use replica::{PoolResult, ReplicaPool};
 pub use scheduler::{optimize_factors, ScheduleChoice};

@@ -14,6 +14,7 @@
 use crate::arch::{Layer, NetworkSpec};
 use crate::codec::{EventCodec, SpikeFrame};
 use crate::dataflow::ConvLatencyParams;
+use crate::sim::backend::BackendKind;
 use crate::sim::conv_engine::{ConvEngine, ConvWeights};
 use crate::sim::energy::{EnergyModel, EnergyReport};
 use crate::sim::fc_engine::FcEngine;
@@ -33,6 +34,7 @@ pub enum LayerParams {
 }
 
 /// Pipeline construction options.
+#[derive(Clone)]
 pub struct PipelineConfig {
     pub timesteps: usize,
     pub timing: ConvLatencyParams,
@@ -40,6 +42,9 @@ pub struct PipelineConfig {
     pub pipelined: bool,
     pub energy: EnergyModel,
     pub resources: ResourceModel,
+    /// Functional compute backend for every engine (bit-exact across
+    /// kinds; cycle / traffic reports are identical — `sim::backend`).
+    pub backend: BackendKind,
 }
 
 impl Default for PipelineConfig {
@@ -50,6 +55,7 @@ impl Default for PipelineConfig {
             pipelined: true,
             energy: EnergyModel::default(),
             resources: ResourceModel::default(),
+            backend: BackendKind::Accurate,
         }
     }
 }
@@ -86,6 +92,8 @@ pub struct PipelineReport {
     pub codec_ratios: Vec<f64>,
     /// Classifier outputs per frame.
     pub predictions: Vec<usize>,
+    /// Accumulated classifier logits per frame (serving path).
+    pub logits: Vec<Vec<f32>>,
     /// Design resources.
     pub resources: ResourceReport,
     /// PE count of the design.
@@ -151,8 +159,9 @@ impl Pipeline {
                             anyhow::bail!("expected conv params, got fc")
                         }
                     };
-                    engines.push(Engine::Conv(ConvEngine::new(
-                        c.clone(), w, config.timing, config.timesteps)));
+                    engines.push(Engine::Conv(ConvEngine::with_backend(
+                        c.clone(), w, config.timing, config.timesteps,
+                        config.backend)));
                     let (h, wdt, ch) = (c.in_h, c.in_w, c.ci);
                     codecs.push(Some(EventCodec::new(h, wdt, ch)));
                 }
@@ -177,7 +186,8 @@ impl Pipeline {
                             anyhow::bail!("expected fc params, got conv")
                         }
                     };
-                    engines.push(Engine::Fc(eng));
+                    engines.push(Engine::Fc(
+                        eng.with_backend(config.backend)));
                     codecs.push(None);
                 }
             }
@@ -223,6 +233,7 @@ impl Pipeline {
         let mut ops_total = 0u64;
         let mut codec_ratios = Vec::new();
         let mut predictions = Vec::new();
+        let mut logits_all = Vec::new();
 
         for (fi, frame) in frames.iter().enumerate() {
             let mut act = frame.clone();
@@ -273,7 +284,7 @@ impl Pipeline {
                         // timestep (upstream already accumulated).
                         let reps: Vec<Vec<bool>> =
                             (0..t).map(|_| flat.clone()).collect();
-                        let (cls, rep) = fc.classify(&reps);
+                        let (cls, logits, rep) = fc.classify_full(&reps);
                         if fi == 0 {
                             layer_cycles[li] = rep.cycles;
                             layer_energy[li] = self
@@ -284,6 +295,7 @@ impl Pipeline {
                         ops_total += rep.ops;
                         counters.merge(&rep.counters);
                         predictions.push(cls);
+                        logits_all.push(logits);
                     }
                 }
             }
@@ -317,6 +329,7 @@ impl Pipeline {
             layer_vmem_bytes: layer_vmem,
             codec_ratios,
             predictions,
+            logits: logits_all,
             resources,
             pes: self.net.total_pes(),
         }
@@ -458,6 +471,31 @@ mod tests {
         let speedup = r_base.t_max as f64 / r_par.t_max as f64;
         assert!(speedup > 3.0, "speedup {speedup}");
         assert_eq!(r_par.pes, 99);
+    }
+
+    /// The word-parallel backend changes host speed only: predictions,
+    /// logits, cycle totals, op counts and traffic are all identical.
+    #[test]
+    fn word_parallel_pipeline_is_bit_exact() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut acc = Pipeline::random(net.clone(),
+                                       PipelineConfig::default()).unwrap();
+        let mut wp = Pipeline::random(
+            net,
+            PipelineConfig {
+                backend: BackendKind::WordParallel,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ra = acc.run(&f);
+        let rw = wp.run(&f);
+        assert_eq!(ra.predictions, rw.predictions);
+        assert_eq!(ra.logits, rw.logits);
+        assert_eq!(ra.total_cycles, rw.total_cycles);
+        assert_eq!(ra.ops_per_frame, rw.ops_per_frame);
+        assert_eq!(ra.counters, rw.counters);
     }
 
     #[test]

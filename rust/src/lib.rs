@@ -7,13 +7,18 @@
 //! * [`dataflow`] — analytical access-count (Tables I/III) and latency
 //!   (Eq. 10-12) models.
 //! * [`sim`] — cycle-level simulator of the accelerator (PE array, line
-//!   buffer, neuron unit, OS/WS engines, energy & resource models).
+//!   buffer, neuron unit, OS/WS engines, energy & resource models) with
+//!   pluggable functional compute backends (`sim::backend`: event-driven
+//!   `accurate` vs bit-plane popcount `word-parallel`, bit-exact).
 //! * [`coordinator`] — streaming layer-wise pipeline, parallel-factor
-//!   scheduler, frame batching.
-//! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts.
+//!   scheduler, frame batching, and the N-replica serving pool.
+//! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts
+//!   (requires the `pjrt` cargo feature; stubs out otherwise).
 //! * [`model`] — artifact loading (net.json + int8 weights).
-//! * [`server`] — TCP host interface (paper Fig. 10).
-//! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting.
+//! * [`server`] — TCP host interface (paper Fig. 10), single-pipeline
+//!   or replica-pool mode.
+//! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting plus
+//!   per-replica serving counters.
 
 pub mod arch;
 pub mod codec;

@@ -13,6 +13,8 @@
 //!   run      — run frames through a model's pipeline (sim)
 //!   serve    — TCP inference server (artifacts required)
 
+use std::time::Duration;
+
 use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
@@ -22,9 +24,50 @@ use sti_snn::metrics::PerfRow;
 use sti_snn::model::Artifact;
 use sti_snn::runtime::{artifacts_dir, Runtime};
 use sti_snn::server::{Backend, Server};
-use sti_snn::sim::{cycles_to_ms, EnergyModel, ResourceModel, CLK_HZ};
+use sti_snn::sim::{cycles_to_ms, BackendKind, EnergyModel, ResourceModel,
+                   CLK_HZ};
 use sti_snn::util::cli::Args;
 use sti_snn::util::rng::Rng;
+
+fn usage() {
+    eprintln!(
+        "usage: sti-snn <subcommand> [flags]\n\
+         \n\
+         subcommands:\n\
+         \x20 table1   OS vs WS memory-access counts (paper Table I)\n\
+         \x20 table3   per-conv-mode access counts (paper Table III)\n\
+         \x20 table4   FPS/GOPS/W/efficiency design points (Table IV)\n\
+         \x20 table5   resource utilisation (paper Table V)\n\
+         \x20 fig11    SCNN5 per-layer Vmem + energy, T1 vs T2\n\
+         \x20 fig12    SCNN5 delay/power/LUT/FF with parallelism\n\
+         \x20 optimize parallel-factor scheduler for a PE budget\n\
+         \x20 run      run frames through a model's pipeline (sim)\n\
+         \x20 serve    TCP inference server\n\
+         \x20 help     this text\n\
+         \n\
+         common flags:\n\
+         \x20 --model scnn3|scnn5|vmobilenet   network (default varies)\n\
+         \x20 --frames N      frames per run (run/table4/figs)\n\
+         \x20 --rate R        synthetic input firing rate\n\
+         \x20 --timesteps T   inference timesteps (default 1)\n\
+         \x20 --backend accurate|word-parallel\n\
+         \x20                 functional compute backend (default\n\
+         \x20                 accurate; word-parallel is the fast\n\
+         \x20                 bit-plane popcount path — bit-exact,\n\
+         \x20                 identical cycle/energy reports)\n\
+         \n\
+         serve flags:\n\
+         \x20 --addr HOST:PORT     bind address (default 127.0.0.1:7878)\n\
+         \x20 --replicas N         pipeline replicas draining the shared\n\
+         \x20                      queue (default 1; N>1 scales request\n\
+         \x20                      throughput with host cores)\n\
+         \x20 --synthetic          serve a random-weight simulator\n\
+         \x20                      pipeline (no artifacts / XLA needed);\n\
+         \x20                      images are threshold-encoded at 0.5\n\
+         \x20 --max-batch N        queue drain batch size (default 16)\n\
+         \x20 --max-wait-ms MS     queue wait for first item (default 5)"
+    );
+}
 
 fn main() {
     let args = Args::from_env();
@@ -38,12 +81,17 @@ fn main() {
         Some("optimize") => optimize(&args),
         Some("run") => run(&args),
         Some("serve") => serve(&args),
+        Some("help") => {
+            usage();
+            std::process::exit(0);
+        }
+        None => {
+            usage();
+            std::process::exit(2);
+        }
         other => {
-            eprintln!(
-                "usage: sti-snn <table1|table3|table4|table5|fig11|fig12|\
-                 optimize|run|serve> [--model scnn3] [--frames N] ...\n\
-                 (got {other:?})"
-            );
+            eprintln!("unknown subcommand {other:?}\n");
+            usage();
             std::process::exit(2);
         }
     };
@@ -51,6 +99,12 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+fn backend_for(args: &Args) -> anyhow::Result<BackendKind> {
+    args.get_with("backend", BackendKind::parse)
+        .map(|o| o.unwrap_or(BackendKind::Accurate))
+        .map_err(|e| anyhow::anyhow!("{e} (accurate|word-parallel)"))
 }
 
 fn net_for(args: &Args) -> anyhow::Result<arch::NetworkSpec> {
@@ -345,10 +399,13 @@ fn run(args: &Args) -> anyhow::Result<()> {
     let frames = args.get_usize("frames", 4);
     let rate = args.get_f64("rate", 0.15);
     let t = args.get_usize("timesteps", 1);
+    let backend = backend_for(args)?;
     let mut pipe = Pipeline::random(
-        net, PipelineConfig { timesteps: t, ..Default::default() })?;
+        net,
+        PipelineConfig { timesteps: t, backend, ..Default::default() })?;
     let shape = pipe.input_shape();
-    println!("running {frames} frames of {shape:?} at rate {rate}, T={t}");
+    println!("running {frames} frames of {shape:?} at rate {rate}, T={t}, \
+              backend={backend}");
     let rep = pipe.run(&synth_frames(shape, frames, rate, 17));
     println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
               steady-state {:.1} FPS",
@@ -390,9 +447,80 @@ impl Backend for SimBackend {
     }
 }
 
+/// Artifact-free serving backend: images are threshold-encoded to the
+/// pipeline's (post-encoder) input shape and classified by a
+/// deterministic-random-weight simulator pipeline. `Send`, so the
+/// replica pool can spread copies across worker threads.
+struct SynthBackend {
+    pipe: Pipeline,
+    shape: (usize, usize, usize),
+}
+
+impl Backend for SynthBackend {
+    fn infer(&mut self, image: &[f32]) -> anyhow::Result<(usize, Vec<f32>)> {
+        let (h, w, c) = self.shape;
+        let frame = SpikeFrame::from_f32(h, w, c, image);
+        let rep = self.pipe.run(std::slice::from_ref(&frame));
+        let class = *rep
+            .predictions
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
+        let logits = rep.logits.first().cloned().unwrap_or_default();
+        Ok((class, logits))
+    }
+
+    fn input_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+}
+
 fn serve(args: &Args) -> anyhow::Result<()> {
     let name = args.get_str("model", "scnn3");
     let addr = args.get_str("addr", "127.0.0.1:7878").to_string();
+    let replicas = args.get_usize("replicas", 1).max(1);
+    let backend_kind = backend_for(args)?;
+    let max_batch = args.get_usize("max-batch", 16);
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
+    let t = args.get_usize("timesteps", 1);
+
+    if args.has("synthetic") {
+        // Simulator-only serving: no artifacts, no XLA; one pipeline
+        // replica per worker thread drains the shared queue.
+        let net = arch::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+        let mut backends = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            let pipe = Pipeline::random(
+                net.clone(),
+                PipelineConfig {
+                    timesteps: t,
+                    backend: backend_kind,
+                    ..Default::default()
+                },
+            )?;
+            let shape = pipe.input_shape();
+            backends.push(SynthBackend { pipe, shape });
+        }
+        let server = Server::with_backends(backends)
+            .with_queue(max_batch, max_wait);
+        println!("serving synthetic {} on {addr} ({replicas} replica(s), \
+                  backend={backend_kind}, newline-JSON protocol)",
+                 net.name);
+        return if replicas > 1 {
+            server.serve_pool(&addr, |a| println!("bound {a}"))
+        } else {
+            server.serve(&addr, |a| println!("bound {a}"))
+        };
+    }
+
+    // Artifact serving: PJRT encoder + reference logits. The runtime is
+    // single-threaded (the PJRT client is not Send), so this path runs
+    // one pipeline regardless of --replicas.
+    if replicas > 1 {
+        eprintln!("note: --replicas {replicas} ignored for artifact \
+                   serving (PJRT backend is single-threaded); use \
+                   --synthetic for the replica pool");
+    }
     let dir = artifacts_dir().join(name);
     let art = Artifact::load(&dir)?;
     let mut rt = Runtime::new()?;
@@ -400,8 +528,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input)?;
     rt.load_hlo("model", &art.model_hlo(), art.net.input)?;
     let params = art.layer_params()?;
-    let pipe = Pipeline::new(art.net.clone(), PipelineConfig::default(),
-                             params)?;
+    let pipe = Pipeline::new(
+        art.net.clone(),
+        PipelineConfig { backend: backend_kind, ..Default::default() },
+        params)?;
     let (h, w, c) = art.net.input;
     let backend = SimBackend {
         rt,
@@ -409,7 +539,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         enc_shape: art.encoder_out_shape(),
         input_len: h * w * c,
     };
-    let server = Server::new(backend);
+    let server = Server::new(backend).with_queue(max_batch, max_wait);
     println!("serving {name} on {addr} (newline-JSON protocol)");
     server.serve(&addr, |a| println!("bound {a}"))
 }

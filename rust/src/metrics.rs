@@ -1,10 +1,14 @@
-//! Performance metrics: FPS, GOPS, power, efficiency (paper Table IV).
+//! Performance metrics: FPS, GOPS, power, efficiency (paper Table IV) —
+//! plus the serving-side per-replica counters ([`PoolMetrics`]) that
+//! the multi-pipeline server and the replica pool aggregate.
 //!
 //! The paper's metric definitions:
 //! * `GOPS = kFPS x MOPs` — synaptic accumulates per second.
 //! * `Efficiency = GOPS / W`.
 //! * `Efficiency/PE = GOPS / W / PE` — the headline 0.14 (SCNN5) and
 //!   0.19 (SCNN3) GOPS/W/PE numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sim::CLK_HZ;
 
@@ -65,6 +69,94 @@ impl std::fmt::Display for PerfRow {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving metrics (multi-pipeline replica pool)
+// ---------------------------------------------------------------------------
+
+/// Lock-free counters of one pipeline replica in the serving pool.
+#[derive(Debug, Default)]
+pub struct ReplicaMetrics {
+    /// Requests completed by this replica.
+    pub requests: AtomicU64,
+    /// Requests that failed in this replica's backend.
+    pub errors: AtomicU64,
+    /// Microseconds the replica spent inside the backend.
+    pub busy_us: AtomicU64,
+    /// Sum of end-to-end request latencies (queue wait + compute), µs.
+    pub latency_us: AtomicU64,
+}
+
+/// Plain-data snapshot of one replica's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplicaSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub busy_us: u64,
+    pub latency_us: u64,
+}
+
+/// Aggregated metrics of an N-replica serving pool. Writers update
+/// their own replica's atomics; readers snapshot without locking.
+#[derive(Debug)]
+pub struct PoolMetrics {
+    replicas: Vec<ReplicaMetrics>,
+}
+
+impl PoolMetrics {
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            replicas: (0..replicas.max(1))
+                .map(|_| ReplicaMetrics::default())
+                .collect(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Record a completed request on replica `i`.
+    pub fn record(&self, i: usize, latency_us: u64, busy_us: u64) {
+        let r = &self.replicas[i];
+        r.requests.fetch_add(1, Ordering::Relaxed);
+        r.latency_us.fetch_add(latency_us, Ordering::Relaxed);
+        r.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+    }
+
+    /// Record a failed request on replica `i`.
+    pub fn record_error(&self, i: usize) {
+        self.replicas[i].errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot one replica.
+    pub fn replica(&self, i: usize) -> ReplicaSnapshot {
+        let r = &self.replicas[i];
+        ReplicaSnapshot {
+            requests: r.requests.load(Ordering::Relaxed),
+            errors: r.errors.load(Ordering::Relaxed),
+            busy_us: r.busy_us.load(Ordering::Relaxed),
+            latency_us: r.latency_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot every replica.
+    pub fn per_replica(&self) -> Vec<ReplicaSnapshot> {
+        (0..self.replicas.len()).map(|i| self.replica(i)).collect()
+    }
+
+    /// Pool-wide totals (sum over replicas).
+    pub fn totals(&self) -> ReplicaSnapshot {
+        let mut t = ReplicaSnapshot::default();
+        for s in self.per_replica() {
+            t.requests += s.requests;
+            t.errors += s.errors;
+            t.busy_us += s.busy_us;
+            t.latency_us += s.latency_us;
+        }
+        t
+    }
+}
+
 /// Published comparison rows (paper Table IV) for printing next to ours.
 pub fn sota_rows() -> Vec<PerfRow> {
     let mk = |name: &str, fps: f64, gops: f64, w: f64, pes: usize| PerfRow {
@@ -113,6 +205,46 @@ mod tests {
         assert!((r.gops - 5.0).abs() < 1e-9);
         assert!((r.gops_per_w - 2.5).abs() < 1e-9);
         assert!((r.gops_per_w_per_pe - 0.025).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_metrics_aggregate_across_replicas() {
+        let m = PoolMetrics::new(3);
+        m.record(0, 100, 60);
+        m.record(0, 50, 30);
+        m.record(2, 10, 5);
+        m.record_error(1);
+        assert_eq!(m.replica(0).requests, 2);
+        assert_eq!(m.replica(0).latency_us, 150);
+        assert_eq!(m.replica(1).errors, 1);
+        assert_eq!(m.replica(2).busy_us, 5);
+        let t = m.totals();
+        assert_eq!((t.requests, t.errors, t.latency_us, t.busy_us),
+                   (3, 1, 160, 95));
+        assert_eq!(m.per_replica().len(), 3);
+    }
+
+    #[test]
+    fn pool_metrics_shared_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(PoolMetrics::new(4));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.record(i, 1, 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.totals().requests, 400);
+        for i in 0..4 {
+            assert_eq!(m.replica(i).requests, 100);
+        }
     }
 
     #[test]

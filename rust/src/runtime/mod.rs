@@ -9,103 +9,18 @@
 //! L2 jax graphs (which call the L1 Pallas kernels, interpret mode)
 //! once; this module compiles the text on startup and executes from
 //! the request path.
+//!
+//! ## Feature gating
+//!
+//! The `xla` crate needs the XLA toolchain, which most build hosts do
+//! not have. The real implementation is therefore gated behind the
+//! `pjrt` cargo feature; without it this module compiles a **stub**
+//! with the same API whose entry points return errors at runtime, so
+//! `cargo build && cargo test` pass everywhere and callers degrade
+//! gracefully (the CLI's `serve --synthetic` path needs no runtime at
+//! all).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
-
-use crate::codec::SpikeFrame;
-
-/// A compiled executable plus its I/O geometry.
-pub struct CompiledModel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    /// Input shape (H, W, C) of the image the graph expects.
-    pub input_shape: (usize, usize, usize),
-}
-
-/// The runtime: one PJRT CPU client, many compiled executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    models: HashMap<String, CompiledModel>,
-}
-
-impl Runtime {
-    pub fn new() -> Result<Self> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, models: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile an HLO text file into a named executable.
-    pub fn load_hlo(&mut self, name: &str, path: &Path,
-                    input_shape: (usize, usize, usize)) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        self.models.insert(
-            name.to_string(),
-            CompiledModel { name: name.to_string(), exe, input_shape },
-        );
-        Ok(())
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.models.contains_key(name)
-    }
-
-    /// Execute a single-input graph on an (H, W, C) f32 image, returning
-    /// the flat f32 outputs of every tuple element.
-    pub fn run_image(&self, name: &str, image: &[f32])
-                     -> Result<Vec<Vec<f32>>> {
-        let m = self
-            .models
-            .get(name)
-            .with_context(|| format!("model {name} not loaded"))?;
-        let (h, w, c) = m.input_shape;
-        anyhow::ensure!(image.len() == h * w * c,
-                        "image size {} != {h}x{w}x{c}", image.len());
-        let lit = xla::Literal::vec1(image)
-            .reshape(&[h as i64, w as i64, c as i64])?;
-        let result = m.exe.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True.
-        let elems = result.to_tuple()?;
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>()?);
-        }
-        Ok(out)
-    }
-
-    /// Run the spike-encoder graph: image -> binary spike frame.
-    pub fn encode(&self, name: &str, image: &[f32],
-                  out_shape: (usize, usize, usize)) -> Result<SpikeFrame> {
-        let outs = self.run_image(name, image)?;
-        let spikes = &outs[0];
-        let (h, w, c) = out_shape;
-        anyhow::ensure!(spikes.len() == h * w * c,
-                        "encoder output {} != {h}x{w}x{c}", spikes.len());
-        Ok(SpikeFrame::from_f32(h, w, c, spikes))
-    }
-
-    /// Run the full-net graph: image -> per-class logits.
-    pub fn logits(&self, name: &str, image: &[f32]) -> Result<Vec<f32>> {
-        let outs = self.run_image(name, image)?;
-        Ok(outs.last().context("empty output tuple")?.clone())
-    }
-}
+use std::path::PathBuf;
 
 /// Locate the artifacts directory (env override for tests).
 pub fn artifacts_dir() -> PathBuf {
@@ -114,7 +29,171 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-#[cfg(test)]
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use crate::codec::SpikeFrame;
+
+    /// A compiled executable plus its I/O geometry.
+    pub struct CompiledModel {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        /// Input shape (H, W, C) of the image the graph expects.
+        pub input_shape: (usize, usize, usize),
+    }
+
+    /// The runtime: one PJRT CPU client, many compiled executables.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        models: HashMap<String, CompiledModel>,
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client, models: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an HLO text file into a named executable.
+        pub fn load_hlo(&mut self, name: &str, path: &Path,
+                        input_shape: (usize, usize, usize)) -> Result<()> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.models.insert(
+                name.to_string(),
+                CompiledModel { name: name.to_string(), exe, input_shape },
+            );
+            Ok(())
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.models.contains_key(name)
+        }
+
+        /// Execute a single-input graph on an (H, W, C) f32 image,
+        /// returning the flat f32 outputs of every tuple element.
+        pub fn run_image(&self, name: &str, image: &[f32])
+                         -> Result<Vec<Vec<f32>>> {
+            let m = self
+                .models
+                .get(name)
+                .with_context(|| format!("model {name} not loaded"))?;
+            let (h, w, c) = m.input_shape;
+            anyhow::ensure!(image.len() == h * w * c,
+                            "image size {} != {h}x{w}x{c}", image.len());
+            let lit = xla::Literal::vec1(image)
+                .reshape(&[h as i64, w as i64, c as i64])?;
+            let result = m.exe.execute::<xla::Literal>(&[lit])?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True.
+            let elems = result.to_tuple()?;
+            let mut out = Vec::with_capacity(elems.len());
+            for e in elems {
+                out.push(e.to_vec::<f32>()?);
+            }
+            Ok(out)
+        }
+
+        /// Run the spike-encoder graph: image -> binary spike frame.
+        pub fn encode(&self, name: &str, image: &[f32],
+                      out_shape: (usize, usize, usize))
+                      -> Result<SpikeFrame> {
+            let outs = self.run_image(name, image)?;
+            let spikes = &outs[0];
+            let (h, w, c) = out_shape;
+            anyhow::ensure!(spikes.len() == h * w * c,
+                            "encoder output {} != {h}x{w}x{c}",
+                            spikes.len());
+            Ok(SpikeFrame::from_f32(h, w, c, spikes))
+        }
+
+        /// Run the full-net graph: image -> per-class logits.
+        pub fn logits(&self, name: &str, image: &[f32])
+                      -> Result<Vec<f32>> {
+            let outs = self.run_image(name, image)?;
+            Ok(outs.last().context("empty output tuple")?.clone())
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    use crate::codec::SpikeFrame;
+
+    /// API-compatible stub compiled when the `pjrt` feature is off:
+    /// construction succeeds (so binaries link and start everywhere);
+    /// anything that would need XLA returns a descriptive error.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn new() -> Result<Self> {
+            Ok(Self { _private: () })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without the `pjrt` feature)".to_string()
+        }
+
+        pub fn load_hlo(&mut self, name: &str, path: &Path,
+                        _input_shape: (usize, usize, usize)) -> Result<()> {
+            anyhow::bail!(
+                "cannot compile HLO {path:?} for model {name}: this \
+                 binary was built without the `pjrt` feature (rebuild \
+                 with `--features pjrt` and a vendored xla crate, or \
+                 use the simulator-only paths, e.g. `serve --synthetic`)"
+            )
+        }
+
+        pub fn has(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn run_image(&self, name: &str, _image: &[f32])
+                         -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("model {name} not loaded (pjrt feature disabled)")
+        }
+
+        pub fn encode(&self, name: &str, image: &[f32],
+                      _out_shape: (usize, usize, usize))
+                      -> Result<SpikeFrame> {
+            self.run_image(name, image).map(|_| unreachable!())
+        }
+
+        pub fn logits(&self, name: &str, image: &[f32])
+                      -> Result<Vec<f32>> {
+            self.run_image(name, image).map(|_| unreachable!())
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{CompiledModel, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -171,5 +250,24 @@ ENTRY main {
         let mut rt = Runtime::new().unwrap();
         rt.load_hlo("id", &path, (1, 1, 1)).unwrap();
         assert!(rt.run_image("id", &[1.0, 2.0]).is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructs_and_errors_cleanly() {
+        let mut rt = Runtime::new().unwrap();
+        assert!(rt.platform().contains("stub"));
+        assert!(!rt.has("anything"));
+        let err = rt
+            .load_hlo("m", std::path::Path::new("/nope.hlo.txt"), (1, 1, 1))
+            .unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(rt.run_image("m", &[0.0]).is_err());
+        assert!(rt.logits("m", &[0.0]).is_err());
+        assert!(rt.encode("m", &[0.0], (1, 1, 1)).is_err());
     }
 }

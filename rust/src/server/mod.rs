@@ -6,63 +6,132 @@
 //! Request:  `{"id": 1, "image": [f32...]}`  (H*W*C floats, row-major
 //!           channel-last, matching the artifact's input shape) or
 //!           `{"cmd": "stats"}` / `{"cmd": "shutdown"}`.
-//! Response: `{"id": 1, "class": 3, "logits": [...], "latency_us": 42}`
-//!           or `{"stats": {...}}`.
+//! Response: `{"id": 1, "class": 3, "logits": [...], "latency_us": 42,
+//!           "replica": 0}` or `{"stats": {...}}`.
 //!
 //! Architecture: connection threads only parse/serialise; inference
-//! requests flow over an mpsc channel to the serve thread, which owns
-//! the backend exclusively. This keeps non-`Send` backends (the PJRT
-//! client's internals are `Rc`-based) on one thread — matching the
-//! physical reality of a single accelerator device. std::net + threads;
-//! tokio is not vendored in this environment.
+//! jobs flow into a shared [`Batcher`] queue drained by the backend
+//! worker(s).
+//!
+//! * [`Server::serve`] — single-pipeline mode: the accept thread owns
+//!   the backend exclusively, matching the physical reality of one
+//!   accelerator device. Backends need NOT be `Send` here (the PJRT
+//!   client's internals are `Rc`-based).
+//! * [`Server::serve_pool`] — multi-pipeline mode: N `Send` backend
+//!   replicas each drain the shared queue on their own thread, so
+//!   request throughput scales with host cores. Per-replica counters
+//!   aggregate in [`crate::metrics::PoolMetrics`] and are reported by
+//!   the `stats` command.
+//!
+//! std::net + threads; tokio is not vendored in this environment.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::batch::Batcher;
+use crate::metrics::PoolMetrics;
 use crate::util::json::Json;
 
 /// Inference backend the server fronts: image in, (class, logits) out.
-/// Deliberately NOT required to be `Send` — it never leaves the serve
-/// thread.
+/// Deliberately NOT required to be `Send` — `serve` keeps it on one
+/// thread. `serve_pool` additionally requires `Send` backends.
 pub trait Backend {
     fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)>;
     fn input_len(&self) -> usize;
 }
 
-/// Serving statistics.
-#[derive(Debug, Default)]
+/// Serving statistics. Request/latency aggregates are derived from the
+/// per-replica [`PoolMetrics`] (single source of truth); the only
+/// separate counter is for protocol errors that never reach a replica.
+#[derive(Debug)]
 pub struct ServerStats {
-    pub requests: AtomicU64,
-    pub errors: AtomicU64,
-    pub total_latency_us: AtomicU64,
+    /// Bad JSON / bad request shape, counted before replica dispatch.
+    pub protocol_errors: AtomicU64,
+    /// Per-replica counters (one entry in single-pipeline mode).
+    pub pool: PoolMetrics,
 }
 
-/// An inference job travelling from a connection thread to the backend.
+impl ServerStats {
+    fn new(replicas: usize) -> Self {
+        Self {
+            protocol_errors: AtomicU64::new(0),
+            pool: PoolMetrics::new(replicas),
+        }
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.pool.totals().requests
+    }
+
+    /// Backend errors across replicas + protocol-level errors.
+    pub fn errors(&self) -> u64 {
+        self.pool.totals().errors
+            + self.protocol_errors.load(Ordering::SeqCst)
+    }
+
+    pub fn total_latency_us(&self) -> u64 {
+        self.pool.totals().latency_us
+    }
+}
+
+/// How long a connection waits for its queued job's reply before
+/// reporting a timeout (bounds client hangs across shutdown races and
+/// overload; the error message names both causes).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// An inference job travelling from a connection thread to a backend.
 struct Job {
     id: f64,
     image: Vec<f32>,
+    enqueued_at: Instant,
     reply: Sender<Json>,
 }
 
 pub struct Server<B: Backend> {
-    backend: B,
+    backends: Vec<B>,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    max_batch: usize,
+    max_wait: Duration,
 }
 
 impl<B: Backend> Server<B> {
+    /// Single-pipeline server (the paper's one-accelerator shape).
     pub fn new(backend: B) -> Self {
+        Self::with_backends(vec![backend])
+    }
+
+    /// Server fronting a pool of backend replicas. All replicas must
+    /// answer identically (same model); the pool only adds throughput.
+    pub fn with_backends(backends: Vec<B>) -> Self {
+        assert!(!backends.is_empty(), "server needs at least one backend");
+        let n = backends.len();
         Self {
-            backend,
-            stats: Arc::new(ServerStats::default()),
+            backends,
+            stats: Arc::new(ServerStats::new(n)),
             shutdown: Arc::new(AtomicBool::new(false)),
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
         }
+    }
+
+    /// Tune the shared queue's batching policy.
+    pub fn with_queue(mut self, max_batch: usize, max_wait: Duration)
+                      -> Self {
+        assert!(max_batch > 0);
+        self.max_batch = max_batch;
+        self.max_wait = max_wait;
+        self
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.backends.len()
     }
 
     pub fn stats(&self) -> Arc<ServerStats> {
@@ -73,79 +142,203 @@ impl<B: Backend> Server<B> {
         self.shutdown.clone()
     }
 
-    /// Bind and serve until a shutdown command arrives. `on_bound`
-    /// receives the bound address (port 0 => ephemeral, for tests).
-    pub fn serve(mut self, addr: &str,
-                 on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    fn bind(&self, addr: &str,
+            on_bound: impl FnOnce(std::net::SocketAddr))
+            -> Result<TcpListener> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         listener.set_nonblocking(true)?;
         on_bound(listener.local_addr()?);
+        Ok(listener)
+    }
 
-        let (job_tx, job_rx): (Sender<Job>, Receiver<Job>) = channel();
+    /// Bind and serve until a shutdown command arrives, draining jobs
+    /// on this (backend-owning) thread. `on_bound` receives the bound
+    /// address (port 0 => ephemeral, for tests). Uses the first backend
+    /// only — use [`Server::serve_pool`] for replica parallelism.
+    pub fn serve(mut self, addr: &str,
+                 on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = self.bind(addr, on_bound)?;
+        let queue: Arc<Batcher<Job>> =
+            Arc::new(Batcher::new(self.max_batch, self.max_wait));
         let mut handles = Vec::new();
 
         while !self.shutdown.load(Ordering::SeqCst) {
-            // Accept new connections (non-blocking).
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    let tx = job_tx.clone();
-                    let stats = self.stats.clone();
-                    let shutdown = self.shutdown.clone();
-                    let input_len = self.backend.input_len();
-                    handles.push(std::thread::spawn(move || {
-                        let _ = conn_loop(stream, tx, stats, shutdown,
-                                          input_len);
-                    }));
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-                Err(e) => return Err(e.into()),
-            }
+            accept_connections(&listener, &queue, &self.stats,
+                               &self.shutdown,
+                               self.backends[0].input_len(),
+                               &mut handles)?;
             // Drain inference jobs on this (backend-owning) thread.
-            let mut worked = false;
-            while let Ok(job) = job_rx.try_recv() {
-                worked = true;
-                let t0 = Instant::now();
-                let reply = match self.backend.infer(&job.image) {
-                    Ok((class, logits)) => {
-                        let us = t0.elapsed().as_micros() as u64;
-                        self.stats.requests.fetch_add(1, Ordering::SeqCst);
-                        self.stats
-                            .total_latency_us
-                            .fetch_add(us, Ordering::SeqCst);
-                        Json::obj(vec![
-                            ("id", Json::num(job.id)),
-                            ("class", Json::num(class as f64)),
-                            ("logits",
-                             Json::Arr(logits
-                                 .iter()
-                                 .map(|&l| Json::num(l as f64))
-                                 .collect())),
-                            ("latency_us", Json::num(us as f64)),
-                        ])
-                    }
-                    Err(e) => {
-                        self.stats.errors.fetch_add(1, Ordering::SeqCst);
-                        Json::obj(vec![("error",
-                                        Json::str(&e.to_string()))])
-                    }
-                };
-                let _ = job.reply.send(reply);
+            let batch = queue.try_batch();
+            if batch.is_empty() {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
             }
-            if !worked {
-                std::thread::sleep(std::time::Duration::from_millis(2));
+            for job in batch {
+                handle_job(&mut self.backends[0], 0, job, &self.stats);
             }
         }
-        drop(job_tx);
+        reject_pending(&queue);
         for h in handles {
             let _ = h.join();
         }
+        // A connection racing the shutdown flag may have pushed after
+        // the first drain; it has exited (or timed out) by now, so one
+        // final sweep leaves nothing unanswered.
+        reject_pending(&queue);
+        Ok(())
+    }
+
+    /// Total requests served (stats convenience for tests/benches).
+    pub fn requests_served(&self) -> u64 {
+        self.stats.requests()
+    }
+}
+
+impl<B: Backend + Send + 'static> Server<B> {
+    /// Bind and serve with every backend replica draining the shared
+    /// queue on its own worker thread.
+    pub fn serve_pool(mut self, addr: &str,
+                      on_bound: impl FnOnce(std::net::SocketAddr))
+                      -> Result<()> {
+        let listener = self.bind(addr, on_bound)?;
+        let queue: Arc<Batcher<Job>> =
+            Arc::new(Batcher::new(self.max_batch, self.max_wait));
+        let input_len = self.backends[0].input_len();
+
+        let mut workers = Vec::new();
+        for (idx, mut backend) in self.backends.drain(..).enumerate() {
+            let queue = queue.clone();
+            let stats = self.stats.clone();
+            let stop = self.shutdown.clone();
+            workers.push(std::thread::spawn(move || {
+                loop {
+                    let batch = queue.next_batch();
+                    if batch.is_empty() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        continue;
+                    }
+                    for job in batch {
+                        handle_job(&mut backend, idx, job, &stats);
+                    }
+                }
+            }));
+        }
+
+        let mut handles = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            accept_connections(&listener, &queue, &self.stats,
+                               &self.shutdown, input_len, &mut handles)?;
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for w in workers {
+            let _ = w.join(); // workers drain the queue before exiting
+        }
+        reject_pending(&queue);
+        for h in handles {
+            let _ = h.join();
+        }
+        // Final sweep for jobs pushed in the shutdown race window (the
+        // connection threads have all exited or timed out by now).
+        reject_pending(&queue);
         Ok(())
     }
 }
 
+/// Accept pending connections (non-blocking listener).
+fn accept_connections(
+    listener: &TcpListener, queue: &Arc<Batcher<Job>>,
+    stats: &Arc<ServerStats>, shutdown: &Arc<AtomicBool>,
+    input_len: usize,
+    handles: &mut Vec<std::thread::JoinHandle<()>>) -> Result<()> {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                let shutdown = shutdown.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = conn_loop(stream, queue, stats, shutdown,
+                                      input_len);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Run one job through a backend, updating aggregate + replica stats.
+fn handle_job<B: Backend>(backend: &mut B, replica: usize, job: Job,
+                          stats: &ServerStats) {
+    let t0 = Instant::now();
+    let reply = match backend.infer(&job.image) {
+        Ok((class, logits)) => {
+            let busy_us = t0.elapsed().as_micros() as u64;
+            let us = job.enqueued_at.elapsed().as_micros() as u64;
+            stats.pool.record(replica, us, busy_us);
+            Json::obj(vec![
+                ("id", Json::num(job.id)),
+                ("class", Json::num(class as f64)),
+                ("logits",
+                 Json::Arr(logits
+                     .iter()
+                     .map(|&l| Json::num(l as f64))
+                     .collect())),
+                ("latency_us", Json::num(us as f64)),
+                ("replica", Json::num(replica as f64)),
+            ])
+        }
+        Err(e) => {
+            stats.pool.record_error(replica);
+            Json::obj(vec![("error", Json::str(&e.to_string()))])
+        }
+    };
+    let _ = job.reply.send(reply);
+}
+
+/// Error out whatever is still queued at shutdown.
+fn reject_pending(queue: &Batcher<Job>) {
+    for job in queue.drain_all() {
+        let _ = job.reply.send(Json::obj(vec![(
+            "error",
+            Json::str("server shutting down"),
+        )]));
+    }
+}
+
+fn stats_json(stats: &ServerStats) -> Json {
+    let per: Vec<Json> = stats
+        .pool
+        .per_replica()
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("requests", Json::num(s.requests as f64)),
+                ("errors", Json::num(s.errors as f64)),
+                ("busy_us", Json::num(s.busy_us as f64)),
+                ("latency_us", Json::num(s.latency_us as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![(
+        "stats",
+        Json::obj(vec![
+            ("requests", Json::num(stats.requests() as f64)),
+            ("errors", Json::num(stats.errors() as f64)),
+            ("total_latency_us",
+             Json::num(stats.total_latency_us() as f64)),
+            ("replicas", Json::Arr(per)),
+        ]),
+    )])
+}
+
 /// Per-connection loop: parse lines, ship jobs, write replies.
-fn conn_loop(stream: TcpStream, jobs: Sender<Job>,
+fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
              stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
              input_len: usize) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -167,20 +360,7 @@ fn conn_loop(stream: TcpStream, jobs: Sender<Job>,
                             writeln!(out, "{r}")?;
                             return Ok(());
                         }
-                        "stats" => Json::obj(vec![(
-                            "stats",
-                            Json::obj(vec![
-                                ("requests",
-                                 Json::num(stats.requests
-                                     .load(Ordering::SeqCst) as f64)),
-                                ("errors",
-                                 Json::num(stats.errors
-                                     .load(Ordering::SeqCst) as f64)),
-                                ("total_latency_us",
-                                 Json::num(stats.total_latency_us
-                                     .load(Ordering::SeqCst) as f64)),
-                            ]),
-                        )]),
+                        "stats" => stats_json(&stats),
                         other => Json::obj(vec![(
                             "error",
                             Json::str(&format!("unknown cmd {other}")),
@@ -189,21 +369,34 @@ fn conn_loop(stream: TcpStream, jobs: Sender<Job>,
                 } else {
                     match parse_infer(&req, input_len) {
                         Err(msg) => {
-                            stats.errors.fetch_add(1, Ordering::SeqCst);
+                            stats.protocol_errors
+                                .fetch_add(1, Ordering::SeqCst);
                             Json::obj(vec![("error", Json::str(&msg))])
                         }
                         Ok((id, image)) => {
-                            let (tx, rx) = channel();
-                            jobs.send(Job { id, image, reply: tx })
-                                .map_err(|_| {
-                                    anyhow::anyhow!("server shutting down")
-                                })?;
-                            rx.recv().unwrap_or_else(|_| {
+                            if shutdown.load(Ordering::SeqCst) {
                                 Json::obj(vec![(
                                     "error",
                                     Json::str("server shutting down"),
                                 )])
-                            })
+                            } else {
+                                let (tx, rx) = channel();
+                                queue.push(Job {
+                                    id,
+                                    image,
+                                    enqueued_at: Instant::now(),
+                                    reply: tx,
+                                });
+                                rx.recv_timeout(REPLY_TIMEOUT)
+                                    .unwrap_or_else(|_| {
+                                        Json::obj(vec![(
+                                            "error",
+                                            Json::str("request timed out \
+                                                       (overloaded or \
+                                                       shutting down)"),
+                                        )])
+                                    })
+                            }
                         }
                     }
                 }
@@ -344,6 +537,67 @@ mod tests {
         assert_eq!(results, vec![0, 1, 2, 3]);
 
         let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// Four replicas behind one port: every request answered correctly,
+    /// per-replica stats sum to the total, and the stats command
+    /// reports one entry per replica.
+    #[test]
+    fn replica_pool_serves_concurrent_clients() {
+        let server =
+            Server::with_backends(vec![Toy, Toy, Toy, Toy])
+                .with_queue(4, Duration::from_millis(2));
+        assert_eq!(server.replicas(), 4);
+        let stats = server.stats();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve_pool("127.0.0.1:0",
+                              move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut clients: Vec<_> = (0..8u64)
+            .map(|i| {
+                let a = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&a).unwrap();
+                    let mut got = Vec::new();
+                    for j in 0..4u64 {
+                        let mut img = [0.0f32; 4];
+                        img[((i + j) % 4) as usize] = 1.0;
+                        let resp = c.infer(i * 10 + j, &img).unwrap();
+                        got.push((
+                            resp.get("class").unwrap().as_usize().unwrap(),
+                            ((i + j) % 4) as usize,
+                        ));
+                    }
+                    got
+                })
+            })
+            .collect();
+        for c in clients.drain(..) {
+            for (got, want) in c.join().unwrap() {
+                assert_eq!(got, want);
+            }
+        }
+
+        let totals = stats.pool.totals();
+        assert_eq!(totals.requests, 32);
+        assert_eq!(stats.requests(), 32);
+        assert_eq!(stats.pool.per_replica().len(), 4);
+
+        let mut c = Client::connect(&addr).unwrap();
+        let resp = c
+            .request(&Json::obj(vec![("cmd", Json::str("stats"))]))
+            .unwrap();
+        let replicas = resp
+            .get("stats")
+            .and_then(|s| s.get("replicas"))
+            .and_then(|r| r.as_arr())
+            .expect("per-replica stats present");
+        assert_eq!(replicas.len(), 4);
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
     }

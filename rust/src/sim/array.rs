@@ -10,15 +10,17 @@
 //! ## Implementation note (§Perf L3)
 //!
 //! The behavioural single-PE model lives in [`super::pe`] (with its own
-//! tests); the array's `process_field` is the *hot loop* of the whole
-//! simulator and is written event-driven: it iterates only the **active
-//! channels** of each window vector (`SpikeVector::iter_active`) over a
-//! **tap-major** weight slice, with zero per-field allocation.  The
-//! psum and the spike-gated op count are identical to stepping the PEs
-//! one (spike, weight) pair at a time — pinned by unit tests — while
-//! the cycle count stays the *architectural* Eq. (12) walk (the FPGA
-//! spends the full `Ci` walk regardless of sparsity; only our host-side
-//! simulation exploits it).
+//! tests). The simulator's *hot loop* now lives in the pluggable
+//! compute backends ([`super::backend`]): the conv engine calls a
+//! backend for each field's psums and reports the lane-aggregate
+//! accounting back here via [`PeArray::record`]. The `process_field` /
+//! `process_field_active` paths below are the original event-driven
+//! implementations, kept as the behavioural oracle the backends (and
+//! these unit tests) are pinned against: the psum and the spike-gated
+//! op count are identical to stepping the PEs one (spike, weight) pair
+//! at a time, while the cycle count stays the *architectural* Eq. (12)
+//! walk (the FPGA spends the full `Ci` walk regardless of sparsity;
+//! only our host-side simulation exploits it).
 
 use crate::arch::{ConvLayer, ConvMode};
 use crate::codec::SpikeVector;
@@ -180,6 +182,17 @@ impl PeArray {
             n_ci as u64 * (t_rw + t_pe) + adder_tree_latency(ntaps);
         lane.busy_cycles += cycles;
         FieldResult { psum, cycles }
+    }
+
+    /// Record one field evaluation's lane-aggregate accounting. The
+    /// conv engine's compute backends (`sim::backend`) produce the
+    /// psum + op count; the array keeps the per-lane books exactly as
+    /// the inline `process_field` paths do.
+    #[inline]
+    pub fn record(&mut self, lane: usize, ops: u64, cycles: u64) {
+        let lane = &mut self.lanes[lane];
+        lane.ops += ops;
+        lane.busy_cycles += cycles;
     }
 
     pub fn total_ops(&self) -> u64 {

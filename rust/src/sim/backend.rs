@@ -1,0 +1,611 @@
+//! Functional compute backends for the conv / FC engines.
+//!
+//! The simulator separates *what the hardware computes* (psums, spikes,
+//! op counts) from *what it costs* (cycles, memory traffic). The cost
+//! side is weight- and sparsity-independent — Eq. (12) cycles and the
+//! Table I/III access counts depend only on layer geometry — so the
+//! engines are free to compute the functional side with whatever host
+//! algorithm is fastest, as long as it is bit-exact.
+//!
+//! Two backends implement that contract:
+//!
+//! * [`BackendKind::Accurate`] — the original event walk: iterate the
+//!   active channels of each window vector over tap-major weights,
+//!   exactly mirroring the behavioural PE model ([`super::pe::Pe`]).
+//! * [`BackendKind::WordParallel`] — sparsity-aware word processing in
+//!   the style of SpikeX (arXiv 2505.12292): the receptive field's
+//!   spike vectors are packed into one contiguous `ntaps*Ci`-bit string
+//!   of `u64` words, int8 weights are decomposed into 8 two's-complement
+//!   **bit-planes** over the same bit positions, and the psum is a sum
+//!   of shifted popcounts:
+//!
+//!   ```text
+//!   psum = sum_{b=0..6} 2^b * popcount(window & plane_b)
+//!          - 128 * popcount(window & plane_7)
+//!   ```
+//!
+//!   64 channel-accumulates collapse into 8 AND+popcount ops, all
+//!   branchless and streaming — the word-level win the compressed &
+//!   sorted spike-vector layout (paper SectionIV-C) was built for.
+//!
+//! Both backends produce identical spikes, identical op counts, and the
+//! engines charge identical (architectural) cycles and memory accesses
+//! regardless of backend — pinned by `tests/prop_backend.rs`.
+
+use crate::arch::{ConvLayer, ConvMode};
+use crate::codec::SpikeVector;
+
+use super::conv_engine::ConvWeights;
+use super::pe::Acc;
+
+/// Which functional backend an engine computes with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// Event-driven active-channel walk (the behavioural reference).
+    #[default]
+    Accurate,
+    /// Bit-plane popcount over packed spike words (fast host path).
+    WordParallel,
+}
+
+impl BackendKind {
+    /// Parse a CLI spelling of the backend name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "accurate" | "acc" | "event" => Some(Self::Accurate),
+            "word-parallel" | "word_parallel" | "wordparallel" | "wp"
+                | "word" => Some(Self::WordParallel),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Accurate => "accurate",
+            Self::WordParallel => "word-parallel",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv backends
+// ---------------------------------------------------------------------------
+
+/// Per-layer conv compute backend. The engine feeds it one receptive
+/// field at a time ([`ConvCompute::begin_field`], once per output
+/// pixel) and then asks for the psum of each output channel of the Co
+/// walk — so per-field preprocessing (event decode / word packing) is
+/// paid once and amortised over all output channels.
+pub trait ConvCompute: Send {
+    fn kind(&self) -> BackendKind;
+
+    /// Ingest the receptive field whose top-left input column is `ox`
+    /// within the padded rows. `rows[r]` is the full padded row of tap
+    /// row `r` (top of the field first).
+    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize);
+
+    /// `(psum, spike-gated ops)` of the current field for output
+    /// channel `co`. `w` carries the tap-major weights (ignored by
+    /// backends that pre-transformed them at construction).
+    fn field_psum(&mut self, w: &ConvWeights, co: usize) -> (Acc, u64);
+}
+
+/// Build a conv backend for one layer.
+pub fn conv_backend(kind: BackendKind, layer: &ConvLayer,
+                    weights: &ConvWeights) -> Box<dyn ConvCompute> {
+    match kind {
+        BackendKind::Accurate => Box::new(AccurateConv::new(layer)),
+        BackendKind::WordParallel => {
+            Box::new(WordParallelConv::new(layer, weights))
+        }
+    }
+}
+
+/// The original event walk, hoisted out of the engine loop.
+struct AccurateConv {
+    mode: ConvMode,
+    kh: usize,
+    kw: usize,
+    n_ci: usize,
+    /// Standard/pointwise: decoded `(tap, ci)` active list of the field.
+    active: Vec<(u16, u16)>,
+    /// Depthwise: the field's vectors copied word-wise, tap-major
+    /// (`wpc` words per tap), for per-channel bit tests.
+    tap_words: Vec<u64>,
+    wpc: usize,
+}
+
+impl AccurateConv {
+    fn new(layer: &ConvLayer) -> Self {
+        let n_ci = match layer.mode {
+            ConvMode::Depthwise => 1,
+            _ => layer.ci,
+        };
+        let (kh, kw) = match layer.mode {
+            ConvMode::Pointwise => (1, 1),
+            _ => (layer.kh, layer.kw),
+        };
+        let wpc = layer.ci.div_ceil(64);
+        Self {
+            mode: layer.mode,
+            kh,
+            kw,
+            n_ci,
+            active: Vec::with_capacity(kh * kw * layer.ci.min(1 << 14)),
+            tap_words: vec![0; kh * kw * wpc],
+            wpc,
+        }
+    }
+}
+
+impl ConvCompute for AccurateConv {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Accurate
+    }
+
+    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize) {
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                self.active.clear();
+                for (r, row) in rows.iter().take(self.kh).enumerate() {
+                    for c in 0..self.kw {
+                        let tap = (r * self.kw + c) as u16;
+                        for ci in row[ox + c].iter_active() {
+                            self.active.push((tap, ci as u16));
+                        }
+                    }
+                }
+            }
+            ConvMode::Depthwise => {
+                for (r, row) in rows.iter().take(self.kh).enumerate() {
+                    for c in 0..self.kw {
+                        let t = r * self.kw + c;
+                        let words = row[ox + c].words();
+                        self.tap_words[t * self.wpc..(t + 1) * self.wpc]
+                            .copy_from_slice(words);
+                    }
+                }
+            }
+        }
+    }
+
+    fn field_psum(&mut self, w: &ConvWeights, co: usize) -> (Acc, u64) {
+        let taps_tm = w.taps_tm(co);
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                let mut psum: Acc = 0;
+                let n_ci = self.n_ci;
+                for &(tap, ci) in &self.active {
+                    psum += taps_tm[tap as usize * n_ci + ci as usize]
+                        as Acc;
+                }
+                (psum, self.active.len() as u64)
+            }
+            ConvMode::Depthwise => {
+                // Fig. 8c: pass the tap weight through iff the lane's
+                // channel spiked at that tap.
+                let mut psum: Acc = 0;
+                let mut ops = 0u64;
+                let (word, bit) = (co / 64, co % 64);
+                for t in 0..self.kh * self.kw {
+                    if (self.tap_words[t * self.wpc + word] >> bit) & 1 == 1
+                    {
+                        psum += taps_tm[t] as Acc;
+                        ops += 1;
+                    }
+                }
+                (psum, ops)
+            }
+        }
+    }
+}
+
+/// Bit-plane popcount backend.
+struct WordParallelConv {
+    mode: ConvMode,
+    kh: usize,
+    kw: usize,
+    n_ci: usize,
+    ntaps: usize,
+    /// Words of the packed `ntaps * n_ci`-bit field string
+    /// (standard/pointwise) or of the per-co tap mask (depthwise: 1).
+    w_words: usize,
+    /// Weight bit-planes, laid out `[co][plane][word]` over the same
+    /// bit positions as the packed field string (standard/pointwise) or
+    /// over tap positions (depthwise).
+    planes: Vec<u64>,
+    /// Per-co bitmask of planes with at least one set bit (lets the
+    /// psum loop skip empty planes — frequent with real quantised
+    /// weights whose magnitudes are small).
+    plane_nz: Vec<u8>,
+    /// Scratch: the packed field string of the current field.
+    win: Vec<u64>,
+    /// Depthwise scratch: field vectors copied tap-major (wpc per tap).
+    tap_words: Vec<u64>,
+    wpc: usize,
+    /// Active spike count of the current field (standard/pointwise).
+    count: u64,
+}
+
+impl WordParallelConv {
+    fn new(layer: &ConvLayer, weights: &ConvWeights) -> Self {
+        let n_ci = match layer.mode {
+            ConvMode::Depthwise => 1,
+            _ => layer.ci,
+        };
+        let (kh, kw) = match layer.mode {
+            ConvMode::Pointwise => (1, 1),
+            _ => (layer.kh, layer.kw),
+        };
+        let ntaps = kh * kw;
+        let wpc = layer.ci.div_ceil(64);
+        let w_words = match layer.mode {
+            // Tap mask over ntaps bits — one word covers kernels <= 8x8.
+            ConvMode::Depthwise => {
+                assert!(ntaps <= 64,
+                        "word-parallel depthwise supports kernels up to \
+                         8x8 ({ntaps} taps)");
+                1
+            }
+            _ => (ntaps * n_ci).div_ceil(64),
+        };
+        let mut planes = vec![0u64; layer.co * 8 * w_words];
+        let mut plane_nz = vec![0u8; layer.co];
+        for co in 0..layer.co {
+            let taps_tm = weights.taps_tm(co);
+            let base = co * 8 * w_words;
+            for t in 0..ntaps {
+                for ci in 0..n_ci {
+                    let byte = taps_tm[t * n_ci + ci] as u8;
+                    // Bit position inside the packed field string: the
+                    // field packs tap-major, n_ci bits per tap. For
+                    // depthwise the position is simply the tap index.
+                    let pos = if layer.mode == ConvMode::Depthwise {
+                        t
+                    } else {
+                        t * n_ci + ci
+                    };
+                    for b in 0..8 {
+                        if (byte >> b) & 1 == 1 {
+                            planes[base + b * w_words + pos / 64] |=
+                                1u64 << (pos % 64);
+                            plane_nz[co] |= 1 << b;
+                        }
+                    }
+                }
+            }
+        }
+        Self {
+            mode: layer.mode,
+            kh,
+            kw,
+            n_ci,
+            ntaps,
+            w_words,
+            planes,
+            plane_nz,
+            win: vec![0; w_words],
+            tap_words: vec![0; ntaps * wpc],
+            wpc,
+            count: 0,
+        }
+    }
+
+    /// Sum of shifted popcounts over the 8 two's-complement bit-planes
+    /// of output channel `co`, against the `w_words`-long bit string
+    /// `win`.
+    #[inline]
+    fn plane_psum(&self, win: &[u64], co: usize) -> Acc {
+        let ww = self.w_words;
+        let nz = self.plane_nz[co];
+        let planes = &self.planes[co * 8 * ww..(co + 1) * 8 * ww];
+        let mut psum: Acc = 0;
+        for (b, plane) in planes.chunks_exact(ww).enumerate() {
+            if nz & (1u8 << b) == 0 {
+                continue;
+            }
+            let mut cnt: u32 = 0;
+            for (w, p) in win.iter().zip(plane) {
+                cnt += (w & p).count_ones();
+            }
+            if b == 7 {
+                // Two's complement: bit 7 weighs -128.
+                psum -= (cnt as Acc) << 7;
+            } else {
+                psum += (cnt as Acc) << b;
+            }
+        }
+        psum
+    }
+}
+
+/// Append `nbits` bits of `src` (LSB-first words) into `dst` at bit
+/// offset `pos`; returns the new offset. `dst` must be pre-zeroed.
+#[inline]
+fn append_bits(dst: &mut [u64], mut pos: usize, src: &[u64],
+               nbits: usize) -> usize {
+    let mut remaining = nbits;
+    let mut si = 0;
+    while remaining > 0 {
+        let take = remaining.min(64);
+        let mut w = src[si];
+        if take < 64 {
+            w &= (1u64 << take) - 1;
+        }
+        let (word, off) = (pos / 64, pos % 64);
+        dst[word] |= w << off;
+        if off + take > 64 {
+            // off >= 1 here (take <= 64), so the shift is in range.
+            dst[word + 1] |= w >> (64 - off);
+        }
+        pos += take;
+        remaining -= take;
+        si += 1;
+    }
+    pos
+}
+
+impl ConvCompute for WordParallelConv {
+    fn kind(&self) -> BackendKind {
+        BackendKind::WordParallel
+    }
+
+    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize) {
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                self.win.iter_mut().for_each(|w| *w = 0);
+                let mut pos = 0;
+                let mut count = 0u64;
+                for row in rows.iter().take(self.kh) {
+                    for c in 0..self.kw {
+                        let v = &row[ox + c];
+                        let words = v.words();
+                        pos = append_bits(&mut self.win, pos, words,
+                                          self.n_ci);
+                        count += words
+                            .iter()
+                            .map(|w| w.count_ones() as u64)
+                            .sum::<u64>();
+                    }
+                }
+                self.count = count;
+            }
+            ConvMode::Depthwise => {
+                for (r, row) in rows.iter().take(self.kh).enumerate() {
+                    for c in 0..self.kw {
+                        let t = r * self.kw + c;
+                        self.tap_words[t * self.wpc..(t + 1) * self.wpc]
+                            .copy_from_slice(row[ox + c].words());
+                    }
+                }
+            }
+        }
+    }
+
+    fn field_psum(&mut self, _w: &ConvWeights, co: usize) -> (Acc, u64) {
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                let psum = self.plane_psum(&self.win, co);
+                (psum, self.count)
+            }
+            ConvMode::Depthwise => {
+                let (word, bit) = (co / 64, co % 64);
+                let mut mask = 0u64;
+                for t in 0..self.ntaps {
+                    mask |= ((self.tap_words[t * self.wpc + word] >> bit)
+                        & 1)
+                        << t;
+                }
+                let psum = self.plane_psum(&[mask], co);
+                (psum, mask.count_ones() as u64)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FC backends
+// ---------------------------------------------------------------------------
+
+/// Classifier-head compute backend: accumulate the int8 weight rows of
+/// active inputs into per-class i64 accumulators, returning the active
+/// input count (the engines derive ops/traffic from it).
+pub trait FcCompute: Send {
+    fn kind(&self) -> BackendKind;
+    fn accumulate(&mut self, spikes: &[bool], weights: &[i8],
+                  n_out: usize, acc: &mut [i64]) -> u64;
+}
+
+pub fn fc_backend(kind: BackendKind, n_in: usize, n_out: usize,
+                  weights: &[i8]) -> Box<dyn FcCompute> {
+    match kind {
+        BackendKind::Accurate => Box::new(AccurateFc),
+        BackendKind::WordParallel => {
+            Box::new(WordParallelFc::new(n_in, n_out, weights))
+        }
+    }
+}
+
+/// Row-gather over active inputs (the event-driven reference).
+struct AccurateFc;
+
+impl FcCompute for AccurateFc {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Accurate
+    }
+
+    fn accumulate(&mut self, spikes: &[bool], weights: &[i8],
+                  n_out: usize, acc: &mut [i64]) -> u64 {
+        let mut active = 0u64;
+        for (i, &s) in spikes.iter().enumerate() {
+            if !s {
+                continue;
+            }
+            active += 1;
+            let row = &weights[i * n_out..(i + 1) * n_out];
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += w as i64;
+            }
+        }
+        active
+    }
+}
+
+/// Bit-plane popcount over the packed input spike vector. The `[n_in]
+/// [n_out]` weight matrix is transposed into per-output-neuron planes
+/// at construction.
+struct WordParallelFc {
+    n_in: usize,
+    w_words: usize,
+    /// `[o][plane][word]` bit-planes over the n_in input positions.
+    planes: Vec<u64>,
+    plane_nz: Vec<u8>,
+    packed: Vec<u64>,
+}
+
+impl WordParallelFc {
+    fn new(n_in: usize, n_out: usize, weights: &[i8]) -> Self {
+        assert_eq!(weights.len(), n_in * n_out);
+        let w_words = n_in.div_ceil(64);
+        let mut planes = vec![0u64; n_out * 8 * w_words];
+        let mut plane_nz = vec![0u8; n_out];
+        for i in 0..n_in {
+            for o in 0..n_out {
+                let byte = weights[i * n_out + o] as u8;
+                let base = o * 8 * w_words;
+                for b in 0..8 {
+                    if (byte >> b) & 1 == 1 {
+                        planes[base + b * w_words + i / 64] |=
+                            1u64 << (i % 64);
+                        plane_nz[o] |= 1 << b;
+                    }
+                }
+            }
+        }
+        Self { n_in, w_words, planes, plane_nz, packed: vec![0; w_words] }
+    }
+}
+
+impl FcCompute for WordParallelFc {
+    fn kind(&self) -> BackendKind {
+        BackendKind::WordParallel
+    }
+
+    fn accumulate(&mut self, spikes: &[bool], _weights: &[i8],
+                  n_out: usize, acc: &mut [i64]) -> u64 {
+        assert_eq!(spikes.len(), self.n_in);
+        self.packed.iter_mut().for_each(|w| *w = 0);
+        let mut active = 0u64;
+        for (i, &s) in spikes.iter().enumerate() {
+            if s {
+                self.packed[i / 64] |= 1u64 << (i % 64);
+                active += 1;
+            }
+        }
+        let ww = self.w_words;
+        for (o, a) in acc.iter_mut().enumerate().take(n_out) {
+            let nz = self.plane_nz[o];
+            let planes = &self.planes[o * 8 * ww..(o + 1) * 8 * ww];
+            let mut sum: i64 = 0;
+            for (b, plane) in planes.chunks_exact(ww).enumerate() {
+                if nz & (1u8 << b) == 0 {
+                    continue;
+                }
+                let mut cnt: u32 = 0;
+                for (w, p) in self.packed.iter().zip(plane) {
+                    cnt += (w & p).count_ones();
+                }
+                if b == 7 {
+                    sum -= (cnt as i64) << 7;
+                } else {
+                    sum += (cnt as i64) << b;
+                }
+            }
+            *a += sum;
+        }
+        active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("accurate"),
+                   Some(BackendKind::Accurate));
+        assert_eq!(BackendKind::parse("word-parallel"),
+                   Some(BackendKind::WordParallel));
+        assert_eq!(BackendKind::parse("WP"),
+                   Some(BackendKind::WordParallel));
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::WordParallel.to_string(), "word-parallel");
+    }
+
+    #[test]
+    fn append_bits_packs_across_word_boundaries() {
+        // Three 40-bit chunks: bits straddle the first word boundary.
+        let mut dst = vec![0u64; 2];
+        let mut pos = 0;
+        for k in 0..3u64 {
+            let src = [0b1011 | (k << 36)];
+            pos = append_bits(&mut dst, pos, &src, 40);
+        }
+        assert_eq!(pos, 120);
+        for k in 0..3 {
+            let base = k * 40;
+            for (bit, want) in [(0, true), (1, true), (2, false),
+                                (3, true)] {
+                let p = base + bit;
+                let got = (dst[p / 64] >> (p % 64)) & 1 == 1;
+                assert_eq!(got, want, "chunk {k} bit {bit}");
+            }
+        }
+    }
+
+    /// Bit-plane decomposition identity: for random int8 weights and a
+    /// random active set, the shifted-popcount sum equals the direct
+    /// signed sum. Exercises the -128 plane.
+    #[test]
+    fn plane_decomposition_matches_signed_sum() {
+        let mut rng = Rng::new(11);
+        for trial in 0..50 {
+            let n = 1 + rng.below(200);
+            let weights: Vec<i8> = (0..n)
+                .map(|_| {
+                    if rng.bernoulli(0.05) {
+                        i8::MIN // hit the -128 corner explicitly
+                    } else {
+                        rng.int8()
+                    }
+                })
+                .collect();
+            let active: Vec<bool> =
+                (0..n).map(|_| rng.bernoulli(0.4)).collect();
+
+            // Direct sum.
+            let want: i64 = weights
+                .iter()
+                .zip(&active)
+                .filter(|(_, &a)| a)
+                .map(|(&w, _)| w as i64)
+                .sum();
+
+            // Plane sum (via the FC backend, n_out = 1).
+            let mut be = WordParallelFc::new(n, 1, &weights);
+            let mut acc = vec![0i64];
+            let got_active = be.accumulate(&active, &weights, 1, &mut acc);
+            assert_eq!(acc[0], want, "trial {trial}");
+            assert_eq!(got_active,
+                       active.iter().filter(|&&a| a).count() as u64);
+        }
+    }
+}

@@ -7,15 +7,24 @@
 //! Eq. (12); the integration tests cross-check it against the
 //! analytical `dataflow::latency` model, and the functional output is
 //! bit-exact against the python L1/L2 semantics.
+//!
+//! The *functional* psum computation is delegated to a pluggable
+//! [`ComputeBackend`](super::backend::ConvCompute): the event-driven
+//! `Accurate` walk or the bit-plane `WordParallel` popcount path. Both
+//! are bit-exact; cycle / op / access reports are identical by
+//! construction (they depend only on layer geometry and the spike
+//! pattern, never on the host algorithm — see `sim::backend`).
 
 use crate::arch::{ConvLayer, ConvMode};
-use crate::codec::{SpikeFrame, SpikeVector};
+use crate::codec::SpikeFrame;
 use crate::dataflow::ConvLatencyParams;
 
 use super::array::PeArray;
+use super::backend::{conv_backend, BackendKind, ConvCompute};
 use super::linebuf::{padded_rows, LineBuffer};
 use super::memory::{AccessCounter, DataKind, MemLevel};
 use super::neuron::NeuronUnit;
+use super::pe::adder_tree_latency;
 
 /// int8 weights of one conv layer, laid out `[co][ci][tap]`
 /// (depthwise: `[c][0][tap]`; pointwise: `[co][ci][0]`).
@@ -26,7 +35,7 @@ pub struct ConvWeights {
     pub vth: f32,
     taps: Vec<i8>,
     /// Tap-major mirror `[co][tap][ci]` — the hot-path layout
-    /// (`PeArray::process_field` walks active channels per tap; §Perf).
+    /// (the backends walk active channels per tap; §Perf).
     taps_tm: Vec<i8>,
     ci: usize,
     ntaps: usize,
@@ -103,20 +112,23 @@ impl ConvWeights {
         self.ci
     }
 
-    /// Taps of output channel `co`, as `[ci][tap]` slices.
-    pub fn of_channel(&self, co: usize) -> Vec<Vec<i8>> {
-        let base = co * self.ci * self.ntaps;
-        (0..self.ci)
-            .map(|ci| {
-                let s = base + ci * self.ntaps;
-                self.taps[s..s + self.ntaps].to_vec()
-            })
-            .collect()
+    /// Kernel taps walked per (co, ci) pair (1 for pointwise).
+    pub fn n_taps(&self) -> usize {
+        self.ntaps
+    }
+
+    /// The `[tap]` slice of one (output, input) channel pair — a
+    /// borrowed view into the canonical `[co][ci][tap]` layout (no
+    /// per-call allocation; §Perf).
+    #[inline]
+    pub fn taps_of(&self, co: usize, ci: usize) -> &[i8] {
+        let s = (co * self.ci + ci) * self.ntaps;
+        &self.taps[s..s + self.ntaps]
     }
 }
 
 /// Per-run report of the engine.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ConvRunReport {
     pub cycles: u64,
     pub ops: u64,
@@ -131,12 +143,22 @@ pub struct ConvEngine {
     pub timing: ConvLatencyParams,
     pub array: PeArray,
     pub neuron: NeuronUnit,
+    backend: Box<dyn ConvCompute>,
     timesteps: usize,
 }
 
 impl ConvEngine {
+    /// Engine with the default (event-driven `Accurate`) backend.
     pub fn new(layer: ConvLayer, weights: ConvWeights,
                timing: ConvLatencyParams, timesteps: usize) -> Self {
+        Self::with_backend(layer, weights, timing, timesteps,
+                           BackendKind::Accurate)
+    }
+
+    /// Engine with an explicit compute backend.
+    pub fn with_backend(layer: ConvLayer, weights: ConvWeights,
+                        timing: ConvLatencyParams, timesteps: usize,
+                        kind: BackendKind) -> Self {
         let n_neurons = layer.out_h() * layer.out_w() * layer.co;
         let neuron = NeuronUnit::new(
             weights.vth,
@@ -146,7 +168,13 @@ impl ConvEngine {
             timesteps,
         );
         let array = PeArray::for_layer(&layer);
-        Self { layer, weights, timing, array, neuron, timesteps }
+        let backend = conv_backend(kind, &layer, &weights);
+        Self { layer, weights, timing, array, neuron, backend, timesteps }
+    }
+
+    /// Which functional backend this engine computes with.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
     }
 
     /// Architectural Vmem buffer size (18-bit potentials — the BRAM18
@@ -158,6 +186,28 @@ impl ConvEngine {
             0
         } else {
             self.layer.vmem_bytes()
+        }
+    }
+
+    /// Architectural cycles of one (receptive field, output channel)
+    /// evaluation — Eq. (12)'s inner bracket. The FPGA spends the full
+    /// `Ci` walk regardless of sparsity or weights, so this is constant
+    /// per layer and identical across functional backends.
+    fn field_cycles(&self) -> u64 {
+        let l = &self.layer;
+        let (t_rw, t_pe) = (self.timing.t_rw, self.timing.t_pe);
+        let ntaps = l.kh * l.kw;
+        match l.mode {
+            ConvMode::Standard => {
+                self.weights.n_ci() as u64 * (t_rw + t_pe)
+                    + adder_tree_latency(ntaps)
+            }
+            ConvMode::Depthwise => {
+                ntaps as u64 * (t_rw + t_pe) + adder_tree_latency(ntaps)
+            }
+            ConvMode::Pointwise => {
+                self.weights.n_ci() as u64 * (t_rw + t_pe)
+            }
         }
     }
 
@@ -183,16 +233,14 @@ impl ConvEngine {
                         &mut rep.counters, off_chip_input);
         }
 
-        let t_rw = self.timing.t_rw;
-        let t_pe = self.timing.t_pe;
         let groups = l.co.div_ceil(l.parallel);
-
         let n_ci = self.weights.n_ci();
-        // Reused active-spike list: one decode per receptive field,
-        // shared across the whole Co walk (§Perf iteration 2).
-        let mut active: Vec<(u16, u16)> = Vec::with_capacity(
-            l.kh * l.kw * l.ci.min(u16::MAX as usize));
-        let standard = l.mode == ConvMode::Standard;
+        let field_cycles = self.field_cycles();
+        // One weight-buffer read per input channel per output channel
+        // walked — charged once per field (hoisted out of the Co loop;
+        // identical totals, far fewer counter-map touches. §Perf).
+        let weight_reads_per_field = (n_ci * l.co) as u64;
+
         for oy in 0..ho {
             if oy > 0 {
                 // Shift one new input row in (overlapped with compute —
@@ -201,56 +249,31 @@ impl ConvEngine {
                             &mut rep.counters, off_chip_input);
             }
             let full_rows = lb.resident_rows();
-            let mut wrows: Vec<&[SpikeVector]> =
-                Vec::with_capacity(l.kh);
             for ox in 0..wo {
                 lb.count_window_read(l.kw, &mut rep.counters);
-                // Zero-copy window: Kh sub-slices at this x offset.
-                wrows.clear();
-                for fr in &full_rows {
-                    wrows.push(&fr[ox..ox + l.kw]);
-                }
-                if standard {
-                    active.clear();
-                    for (r, row) in wrows.iter().enumerate() {
-                        for c in 0..l.kw {
-                            let tap = (r * l.kw + c) as u16;
-                            for ci in row[c].iter_active() {
-                                active.push((tap, ci as u16));
-                            }
-                        }
-                    }
-                }
+                // One decode / pack per receptive field, shared across
+                // the whole Co walk (§Perf).
+                self.backend.begin_field(&full_rows, ox);
+                rep.counters.read(MemLevel::Bram, DataKind::Weight,
+                                  weight_reads_per_field);
                 // Output channels in groups of `parallel` lanes; lanes
                 // run concurrently so the group costs one lane's time.
                 for g in 0..groups {
-                    let mut group_cycles = 0u64;
                     for lane in 0..l.parallel {
                         let co = g * l.parallel + lane;
                         if co >= l.co {
                             break;
                         }
-                        // Weight-buffer reads: one vector per input
-                        // channel walked (hidden or not, still traffic).
-                        rep.counters.read(MemLevel::Bram, DataKind::Weight,
-                                          n_ci as u64);
-                        let fr = if standard {
-                            self.array.process_field_active(
-                                lane, &active, self.weights.taps_tm(co),
-                                n_ci, t_rw, t_pe)
-                        } else {
-                            self.array.process_field(
-                                lane, &wrows, self.weights.taps_tm(co),
-                                n_ci, co, t_rw, t_pe)
-                        };
-                        group_cycles = group_cycles.max(fr.cycles);
+                        let (psum, ops) =
+                            self.backend.field_psum(&self.weights, co);
+                        self.array.record(lane, ops, field_cycles);
                         let idx = (oy * wo + ox) * l.co + co;
-                        if self.neuron.fire(idx, co, fr.psum,
+                        if self.neuron.fire(idx, co, psum,
                                             &mut rep.counters) {
                             out.set(oy, ox, co);
                         }
                     }
-                    rep.cycles += group_cycles;
+                    rep.cycles += field_cycles;
                 }
                 rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
             }
@@ -314,7 +337,6 @@ mod tests {
         for oy in 0..ho {
             for ox in 0..wo {
                 for co in 0..l.co {
-                    let taps = w.of_channel(co);
                     let mut acc: i64 = 0;
                     match l.mode {
                         ConvMode::Standard | ConvMode::Depthwise => {
@@ -334,7 +356,7 @@ mod tests {
                                         ConvMode::Standard => {
                                             for ci in 0..l.ci {
                                                 if input.get(iy, ix, ci) {
-                                                    acc += taps[ci]
+                                                    acc += w.taps_of(co, ci)
                                                         [r * l.kw + c]
                                                         as i64;
                                                 }
@@ -342,7 +364,8 @@ mod tests {
                                         }
                                         _ => {
                                             if input.get(iy, ix, co) {
-                                                acc += taps[0][r * l.kw + c]
+                                                acc += w.taps_of(co, 0)
+                                                    [r * l.kw + c]
                                                     as i64;
                                             }
                                         }
@@ -353,7 +376,7 @@ mod tests {
                         ConvMode::Pointwise => {
                             for ci in 0..l.ci {
                                 if input.get(oy, ox, ci) {
-                                    acc += taps[ci][0] as i64;
+                                    acc += w.taps_of(co, ci)[0] as i64;
                                 }
                             }
                         }
@@ -403,6 +426,30 @@ mod tests {
         let mut eng = ConvEngine::new(l, w, ConvLatencyParams::optimized(), 1);
         let (got, _) = eng.run_frame(&input, true);
         assert_eq!(got, want);
+    }
+
+    /// The word-parallel backend matches the reference semantics and
+    /// the accurate backend's full report on every conv mode.
+    #[test]
+    fn word_parallel_backend_is_bit_exact() {
+        for mode in [ConvMode::Standard, ConvMode::Depthwise,
+                     ConvMode::Pointwise] {
+            let l = layer(mode, 2);
+            let w = ConvWeights::random(&l, 31);
+            let mut rng = Rng::new(9);
+            let input = SpikeFrame::random(10, 10, 6, 0.35, &mut rng);
+            let want = ref_conv_if(&input, &l, &w);
+            let mut acc = ConvEngine::new(
+                l.clone(), w.clone(), ConvLatencyParams::optimized(), 1);
+            let mut wp = ConvEngine::with_backend(
+                l, w, ConvLatencyParams::optimized(), 1,
+                BackendKind::WordParallel);
+            let (got_a, rep_a) = acc.run_frame(&input, true);
+            let (got_w, rep_w) = wp.run_frame(&input, true);
+            assert_eq!(got_w, want, "{mode:?}");
+            assert_eq!(got_a, got_w, "{mode:?}");
+            assert_eq!(rep_a, rep_w, "{mode:?} reports diverge");
+        }
     }
 
     #[test]
@@ -496,5 +543,21 @@ mod tests {
         let rows_pushed = (l_kh() + (10 - 1)) as u64;
         assert_eq!(dram_reads, rows_pushed * 12);
         fn l_kh() -> usize { 3 }
+    }
+
+    #[test]
+    fn taps_of_matches_tap_major_mirror() {
+        let l = layer(ConvMode::Standard, 1);
+        let w = ConvWeights::random(&l, 29);
+        for co in 0..l.co {
+            let tm = w.taps_tm(co);
+            for ci in 0..l.ci {
+                let row = w.taps_of(co, ci);
+                assert_eq!(row.len(), l.kh * l.kw);
+                for (t, &v) in row.iter().enumerate() {
+                    assert_eq!(v, tm[t * l.ci + ci], "co={co} ci={ci} t={t}");
+                }
+            }
+        }
     }
 }

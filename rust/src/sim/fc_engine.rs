@@ -6,12 +6,19 @@
 //! implements it (weights fetched only for spiking inputs: the
 //! event-driven win). Output neurons never fire; the i32 accumulators
 //! (dequantised + bias) are the logits.
+//!
+//! Like the conv engine, the functional accumulate is delegated to a
+//! [`FcCompute`](super::backend::FcCompute) backend (event-driven row
+//! gather or word-parallel bit-plane popcount); reports are identical
+//! across backends because cycles / ops / weight traffic depend only
+//! on the spike pattern.
 
 use crate::codec::SpikeFrame;
 
+use super::backend::{fc_backend, BackendKind, FcCompute};
 use super::memory::{AccessCounter, DataKind, MemLevel};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FcRunReport {
     pub cycles: u64,
     pub ops: u64,
@@ -25,6 +32,7 @@ pub struct FcEngine {
     /// Row-major `[n_in][n_out]` int8.
     weights: Vec<i8>,
     pub bias: Vec<f32>,
+    backend: Box<dyn FcCompute>,
 }
 
 impl FcEngine {
@@ -32,19 +40,28 @@ impl FcEngine {
                bias: Vec<f32>) -> Self {
         assert_eq!(weights.len(), n_in * n_out);
         assert_eq!(bias.len(), n_out);
-        Self { n_in, n_out, scale, weights, bias }
+        let backend = fc_backend(BackendKind::Accurate, n_in, n_out,
+                                 &weights);
+        Self { n_in, n_out, scale, weights, bias, backend }
     }
 
     pub fn random(n_in: usize, n_out: usize, seed: u64) -> Self {
         let mut rng = crate::util::rng::Rng::new(seed);
-        let weights = (0..n_in * n_out).map(|_| rng.int8()).collect();
-        Self {
-            n_in,
-            n_out,
-            scale: 1.0 / 127.0 / (n_in as f32).sqrt(),
-            weights,
-            bias: vec![0.0; n_out],
-        }
+        let weights: Vec<i8> =
+            (0..n_in * n_out).map(|_| rng.int8()).collect();
+        Self::new(n_in, n_out, weights,
+                  1.0 / 127.0 / (n_in as f32).sqrt(), vec![0.0; n_out])
+    }
+
+    /// Swap the functional compute backend (bit-exact across kinds).
+    pub fn with_backend(mut self, kind: BackendKind) -> Self {
+        self.backend = fc_backend(kind, self.n_in, self.n_out,
+                                  &self.weights);
+        self
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
     }
 
     /// Flatten a (H, W, C) spike frame in channel-last order — must
@@ -63,21 +80,19 @@ impl FcEngine {
 
     /// One timestep: returns logits. Event-driven: only active inputs
     /// cost weight fetches + accumulates.
-    pub fn run(&self, spikes: &[bool]) -> (Vec<f32>, FcRunReport) {
+    pub fn run(&mut self, spikes: &[bool]) -> (Vec<f32>, FcRunReport) {
         assert_eq!(spikes.len(), self.n_in);
         let mut acc = vec![0i64; self.n_out];
         let mut rep = FcRunReport::default();
-        for (i, &s) in spikes.iter().enumerate() {
-            rep.cycles += 1; // input scan
-            if !s {
-                continue;
-            }
-            let row = &self.weights[i * self.n_out..(i + 1) * self.n_out];
-            rep.counters.read(MemLevel::Bram, DataKind::Weight, 1);
-            for (o, &w) in row.iter().enumerate() {
-                acc[o] += w as i64;
-            }
-            rep.ops += self.n_out as u64;
+        let active = self.backend.accumulate(spikes, &self.weights,
+                                             self.n_out, &mut acc);
+        // Architectural accounting — identical for every backend: the
+        // input scan costs one cycle per input; each active input costs
+        // one weight-row fetch and n_out accumulates.
+        rep.cycles = self.n_in as u64;
+        rep.ops = active * self.n_out as u64;
+        if active > 0 {
+            rep.counters.read(MemLevel::Bram, DataKind::Weight, active);
         }
         let logits: Vec<f32> = acc
             .iter()
@@ -89,8 +104,10 @@ impl FcEngine {
         (logits, rep)
     }
 
-    /// Accumulate logits across timesteps then argmax (SDT readout).
-    pub fn classify(&self, frames: &[Vec<bool>]) -> (usize, FcRunReport) {
+    /// Accumulate logits across timesteps (SDT readout): returns the
+    /// argmax class, the accumulated logits, and the merged report.
+    pub fn classify_full(&mut self, frames: &[Vec<bool>])
+                         -> (usize, Vec<f32>, FcRunReport) {
         let mut total = vec![0f32; self.n_out];
         let mut rep = FcRunReport::default();
         for f in frames {
@@ -108,6 +125,13 @@ impl FcEngine {
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap_or(0);
+        (arg, total, rep)
+    }
+
+    /// Accumulate logits across timesteps then argmax (SDT readout).
+    pub fn classify(&mut self, frames: &[Vec<bool>])
+                    -> (usize, FcRunReport) {
+        let (arg, _, rep) = self.classify_full(frames);
         (arg, rep)
     }
 }
@@ -120,7 +144,7 @@ mod tests {
     fn single_spike_selects_row() {
         let mut w = vec![0i8; 4 * 3];
         w[1 * 3..2 * 3].copy_from_slice(&[1, 2, 3]);
-        let fc = FcEngine::new(4, 3, w, 1.0, vec![0.0; 3]);
+        let mut fc = FcEngine::new(4, 3, w, 1.0, vec![0.0; 3]);
         let mut spikes = vec![false; 4];
         spikes[1] = true;
         let (logits, rep) = fc.run(&spikes);
@@ -130,7 +154,7 @@ mod tests {
 
     #[test]
     fn no_spikes_costs_no_weight_reads() {
-        let fc = FcEngine::random(16, 4, 1);
+        let mut fc = FcEngine::random(16, 4, 1);
         let (logits, rep) = fc.run(&vec![false; 16]);
         assert!(logits.iter().all(|&l| l == 0.0));
         assert_eq!(rep.counters.reads_of(MemLevel::Bram, DataKind::Weight), 0);
@@ -143,7 +167,7 @@ mod tests {
         let mut w = vec![0i8; 2 * 2];
         w[0] = 10; // input 0 votes class 0
         w[3] = 6;  // input 1 votes class 1
-        let fc = FcEngine::new(2, 2, w, 1.0, vec![0.0; 2]);
+        let mut fc = FcEngine::new(2, 2, w, 1.0, vec![0.0; 2]);
         // Two timesteps of input-1 spikes beat one of input-0.
         let (cls, _) = fc.classify(&[
             vec![true, false],
@@ -160,5 +184,26 @@ mod tests {
         let flat = FcEngine::flatten(&f);
         assert!(flat[5]);
         assert_eq!(flat.iter().filter(|&&b| b).count(), 1);
+    }
+
+    /// Both backends produce identical logits + identical reports on
+    /// random weights and spike patterns.
+    #[test]
+    fn word_parallel_fc_matches_accurate() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for trial in 0..10 {
+            let n_in = 1 + rng.below(300);
+            let n_out = 1 + rng.below(12);
+            let mut acc_fc = FcEngine::random(n_in, n_out, 100 + trial);
+            let mut wp_fc = FcEngine::random(n_in, n_out, 100 + trial)
+                .with_backend(BackendKind::WordParallel);
+            let spikes: Vec<bool> =
+                (0..n_in).map(|_| rng.bernoulli(0.3)).collect();
+            let (la, ra) = acc_fc.run(&spikes);
+            let (lw, rw) = wp_fc.run(&spikes);
+            assert_eq!(la, lw, "trial {trial}");
+            assert_eq!(ra, rw, "trial {trial}");
+        }
     }
 }

@@ -11,6 +11,7 @@
 //! vectors exported from python.
 
 pub mod array;
+pub mod backend;
 pub mod conv_engine;
 pub mod energy;
 pub mod fc_engine;
@@ -23,6 +24,7 @@ pub mod pool_engine;
 pub mod resources;
 pub mod ws_engine;
 
+pub use backend::BackendKind;
 pub use conv_engine::ConvEngine;
 pub use energy::{EnergyModel, EnergyReport};
 pub use fc_engine::FcEngine;

@@ -15,6 +15,11 @@
 //! In multi-timestep mode the PE seeds its accumulator from the saved
 //! membrane potential and hands the updated value back (the Vmem-buffer
 //! round trip that T = 1 eliminates).
+//!
+//! This model is the semantic ground truth for the functional compute
+//! backends in [`super::backend`]: any backend's field psum / op count
+//! must equal stepping these PEs one (spike, weight) pair at a time —
+//! pinned by the array unit tests and `tests/prop_backend.rs`.
 
 use crate::arch::ConvMode;
 

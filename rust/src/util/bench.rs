@@ -4,8 +4,18 @@
 //! [`BenchSet`]: warm-up, then timed iterations with median/mean/min
 //! reporting. Good enough to find regressions and to print the paper's
 //! table rows; not a statistics suite.
+//!
+//! CI hooks (both via environment variables so bench sources stay
+//! untouched):
+//! * `STI_SNN_BENCH_SMOKE=1` — run exactly one timed iteration per
+//!   bench (fast correctness smoke on every push).
+//! * `STI_SNN_BENCH_JSON=path.json` — every [`BenchSet`] appends its
+//!   results to a JSON array at `path.json` when it is dropped; the CI
+//!   workflow uploads the file as the `BENCH_sim.json` artifact.
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -34,13 +44,24 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// True when `STI_SNN_BENCH_SMOKE` asks for one-iteration bench runs.
+pub fn smoke_mode() -> bool {
+    std::env::var("STI_SNN_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
 /// Time `f`, autotuning iteration count to roughly `target_ms` total.
 pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
     // Warm-up + calibration.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_nanos().max(1) as f64;
-    let iters = ((target_ms as f64 * 1e6 / once).ceil() as usize).clamp(3, 1000);
+    let iters = if smoke_mode() {
+        1
+    } else {
+        ((target_ms as f64 * 1e6 / once).ceil() as usize).clamp(3, 1000)
+    };
 
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -69,6 +90,7 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: u64, mut f: F) -> BenchResult {
 }
 
 /// Named group of benches with a header, mirroring criterion's groups.
+/// On drop, results are appended to `$STI_SNN_BENCH_JSON` if set.
 pub struct BenchSet {
     pub title: String,
     pub results: Vec<BenchResult>,
@@ -84,5 +106,106 @@ impl BenchSet {
         let r = bench(name, 200, f);
         self.results.push(r);
         self.results.last().unwrap()
+    }
+
+    /// Register an externally-timed result (throughput-style benches
+    /// that cannot be expressed as a repeated closure).
+    pub fn add(&mut self, r: BenchResult) -> &BenchResult {
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("results",
+             Json::Arr(self
+                 .results
+                 .iter()
+                 .map(|r| {
+                     Json::obj(vec![
+                         ("name", Json::str(&r.name)),
+                         ("iters", Json::num(r.iters as f64)),
+                         ("mean_ns", Json::num(r.mean_ns)),
+                         ("median_ns", Json::num(r.median_ns)),
+                         ("min_ns", Json::num(r.min_ns)),
+                     ])
+                 })
+                 .collect())),
+        ])
+    }
+
+    /// Append this set to the JSON array at `path` (read-modify-write;
+    /// bench binaries run sequentially so this is race-free in
+    /// practice).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut sets: Vec<Json> = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| match j {
+                Json::Arr(v) => Some(v),
+                _ => None,
+            })
+            .unwrap_or_default();
+        sets.push(self.to_json());
+        std::fs::write(path, format!("{}", Json::Arr(sets)))
+    }
+}
+
+impl Drop for BenchSet {
+    fn drop(&mut self) {
+        if self.results.is_empty() {
+            return;
+        }
+        if let Ok(path) = std::env::var("STI_SNN_BENCH_JSON") {
+            if !path.is_empty() {
+                if let Err(e) = self.write_json(&path) {
+                    eprintln!("bench json write failed ({path}): {e}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_roundtrips_and_appends() {
+        let path = std::env::temp_dir().join("sti_snn_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut s1 = BenchSet::new("set-one");
+        s1.add(BenchResult {
+            name: "a".into(),
+            iters: 3,
+            mean_ns: 10.0,
+            median_ns: 9.0,
+            min_ns: 8.0,
+        });
+        s1.write_json(&path).unwrap();
+        let mut s2 = BenchSet::new("set-two");
+        s2.add(BenchResult {
+            name: "b".into(),
+            iters: 1,
+            mean_ns: 5.0,
+            median_ns: 5.0,
+            min_ns: 5.0,
+        });
+        s2.write_json(&path).unwrap();
+
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&txt).unwrap();
+        let arr = j.as_arr().expect("top-level array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("title").and_then(|t| t.as_str()),
+                   Some("set-one"));
+        let results = arr[1].get("results").and_then(|r| r.as_arr())
+            .unwrap();
+        assert_eq!(results[0].get("name").and_then(|n| n.as_str()),
+                   Some("b"));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -51,6 +51,24 @@ impl Args {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Parse a flag through an arbitrary converter (used for enum-ish
+    /// flags like `--backend`); `None` if the flag is absent, `Err` on
+    /// an unparseable value so the caller can report it.
+    pub fn get_with<T>(&self, key: &str,
+                       parse: impl Fn(&str) -> Option<T>)
+                       -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => parse(s)
+                .map(Some)
+                .ok_or_else(|| format!("invalid value {s:?} for --{key}")),
+        }
+    }
+
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
@@ -89,5 +107,21 @@ mod tests {
     fn positional_args() {
         let a = parse("run file1 file2 --x 1");
         assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn typed_flag_helpers() {
+        let a = parse("serve --max-wait-ms 7 --backend wp");
+        assert_eq!(a.get_u64("max-wait-ms", 5), 7);
+        assert_eq!(a.get_u64("missing", 5), 5);
+        let parse_ab = |s: &str| match s {
+            "wp" => Some(1u8),
+            "acc" => Some(0),
+            _ => None,
+        };
+        assert_eq!(a.get_with("backend", parse_ab), Ok(Some(1)));
+        assert_eq!(a.get_with("missing", parse_ab), Ok(None));
+        let b = parse("serve --backend gpu");
+        assert!(b.get_with("backend", parse_ab).is_err());
     }
 }

@@ -1,0 +1,147 @@
+//! Property tests: the `word-parallel` compute backend is bit-exact
+//! against the `accurate` event walk — identical output spike frames
+//! AND identical run reports (cycles, ops, spike counts, memory
+//! traffic) — across random layer geometries, conv modes, parallel
+//! factors, timestep counts, and sparsity levels.
+//!
+//! proptest is not vendored; same hand-rolled discipline as
+//! `prop_coordinator.rs`: seeded PRNG cases, seed printed on failure.
+
+use sti_snn::arch::{ConvLayer, ConvMode};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::fc_engine::FcEngine;
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+const CASES: u64 = 30;
+
+/// Random conv layer: all three modes, channel counts crossing the
+/// 64-bit word boundary, kernel sizes 1/3/5, odd geometries.
+fn random_layer(rng: &mut Rng) -> ConvLayer {
+    let mode = match rng.below(3) {
+        0 => ConvMode::Standard,
+        1 => ConvMode::Depthwise,
+        _ => ConvMode::Pointwise,
+    };
+    let k = match mode {
+        ConvMode::Pointwise => 1,
+        _ => 1 + 2 * rng.range(1, 2), // 3 or 5
+    };
+    // Channel counts: bias toward word-boundary-straddling values.
+    let ci = match rng.below(4) {
+        0 => 1 + rng.below(8),
+        1 => 60 + rng.below(10), // straddles 64
+        2 => 64,
+        _ => 65 + rng.below(80),
+    };
+    let co = match mode {
+        ConvMode::Depthwise => ci,
+        _ => 1 + rng.below(12),
+    };
+    ConvLayer {
+        mode,
+        in_h: k + rng.below(8),
+        in_w: k + rng.below(8),
+        ci,
+        co,
+        kh: k,
+        kw: k,
+        pad: k / 2,
+        encoder: false,
+        parallel: 1 << rng.below(3),
+    }
+}
+
+#[test]
+fn prop_conv_backends_identical_frames_and_reports() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(9000 + seed);
+        let l = random_layer(&mut rng);
+        let w = ConvWeights::random(&l, 100 + seed);
+        let rate = [0.02, 0.1, 0.25, 0.5, 0.9][rng.below(5)];
+        let input =
+            SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, &mut rng);
+        let timesteps = 1 + rng.below(2); // 1 or 2 (vmem path)
+        let timing = if rng.bernoulli(0.5) {
+            ConvLatencyParams::optimized()
+        } else {
+            ConvLatencyParams::baseline()
+        };
+
+        let mut acc = ConvEngine::with_backend(
+            l.clone(), w.clone(), timing, timesteps,
+            BackendKind::Accurate);
+        let mut wp = ConvEngine::with_backend(
+            l.clone(), w, timing, timesteps, BackendKind::WordParallel);
+
+        let (frame_a, rep_a) = acc.run_frame(&input, true);
+        let (frame_w, rep_w) = wp.run_frame(&input, true);
+        assert_eq!(frame_a, frame_w,
+                   "seed={seed} {:?} ci={} co={} k={} p={} rate={rate} \
+                    t={timesteps}: frames diverge",
+                   l.mode, l.ci, l.co, l.kh, l.parallel);
+        assert_eq!(rep_a, rep_w,
+                   "seed={seed} {:?} ci={} co={}: reports diverge",
+                   l.mode, l.ci, l.co);
+    }
+}
+
+#[test]
+fn prop_fc_backends_identical_logits_and_reports() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(10_000 + seed);
+        let n_in = 1 + rng.below(400);
+        let n_out = 1 + rng.below(16);
+        let mut acc = FcEngine::random(n_in, n_out, 200 + seed);
+        let mut wp = FcEngine::random(n_in, n_out, 200 + seed)
+            .with_backend(BackendKind::WordParallel);
+        assert_eq!(wp.backend_kind(), BackendKind::WordParallel);
+        let rate = rng.f64();
+        let spikes: Vec<bool> =
+            (0..n_in).map(|_| rng.bernoulli(rate)).collect();
+        let (logits_a, rep_a) = acc.run(&spikes);
+        let (logits_w, rep_w) = wp.run(&spikes);
+        assert_eq!(logits_a, logits_w, "seed={seed} n_in={n_in}");
+        assert_eq!(rep_a, rep_w, "seed={seed} n_in={n_in}");
+    }
+}
+
+/// Whole-pipeline equivalence on the deployed model geometries:
+/// predictions, logits, cycle totals, per-layer cycles, energy inputs
+/// (ops) and traffic all identical, so Table IV / Fig. 11 artifacts are
+/// backend-independent.
+#[test]
+fn deployed_models_are_backend_invariant() {
+    use sti_snn::arch;
+    for (net, rate) in [(arch::scnn3(), 0.2), (arch::vmobilenet(), 0.3)] {
+        let shape_seed = 77;
+        let mut acc = Pipeline::random(net.clone(),
+                                       PipelineConfig::default()).unwrap();
+        let mut wp = Pipeline::random(
+            net.clone(),
+            PipelineConfig {
+                backend: BackendKind::WordParallel,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let shape = acc.input_shape();
+        let mut rng = Rng::new(shape_seed);
+        let frames: Vec<SpikeFrame> = (0..2)
+            .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, rate,
+                                        &mut rng))
+            .collect();
+        let ra = acc.run(&frames);
+        let rw = wp.run(&frames);
+        assert_eq!(ra.predictions, rw.predictions, "{}", net.name);
+        assert_eq!(ra.logits, rw.logits, "{}", net.name);
+        assert_eq!(ra.total_cycles, rw.total_cycles, "{}", net.name);
+        assert_eq!(ra.layer_cycles, rw.layer_cycles, "{}", net.name);
+        assert_eq!(ra.ops_per_frame, rw.ops_per_frame, "{}", net.name);
+        assert_eq!(ra.counters, rw.counters, "{}", net.name);
+        assert_eq!(ra.layer_energy, rw.layer_energy, "{}", net.name);
+    }
+}
