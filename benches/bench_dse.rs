@@ -1,0 +1,69 @@
+//! Bench: design-space exploration throughput — candidate enumeration,
+//! analytical evaluation rate, Pareto pruning, and the end-to-end
+//! `explore` path (plus the one genuinely simulator-bound stage, the
+//! calibration probes).
+//!
+//! `cargo bench --bench bench_dse`
+//!
+//! When `STI_SNN_BENCH_DSE_JSON` is set, this bench redirects its own
+//! `STI_SNN_BENCH_JSON` output there, so one `cargo bench` run ships
+//! the DSE numbers as their own artifact (`BENCH_dse.json`) without
+//! contaminating `BENCH_sim.json`.
+
+use sti_snn::arch;
+use sti_snn::dse::{self, CalibrationConfig, CostModel, Evaluator,
+                   SearchSpace};
+use sti_snn::util::bench::BenchSet;
+
+fn main() {
+    if let Ok(path) = std::env::var("STI_SNN_BENCH_DSE_JSON") {
+        if !path.is_empty() {
+            std::env::set_var("STI_SNN_BENCH_JSON", path);
+        }
+    }
+    let mut set = BenchSet::new("design-space exploration (dse)");
+
+    // scnn5 at 2x the paper budget: a few hundred exhaustive
+    // candidates across 4 replica splits and both backends.
+    let net = arch::scnn5();
+    let model = CostModel::default();
+    let space = SearchSpace::new(net.clone(), 198).with_replicas(4);
+
+    let cands = space.enumerate(&model.timing);
+    assert!(!cands.is_empty(), "empty search space");
+    set.run(&format!("enumerate scnn5 ({} candidates)", cands.len()),
+            || {
+                let c = space.enumerate(&model.timing);
+                assert_eq!(c.len(), cands.len());
+            });
+
+    let eval = Evaluator::new(&net, &model, 1);
+    set.run(&format!("evaluate {} candidates", cands.len()), || {
+        let mut fits = 0usize;
+        for c in &cands {
+            let p = eval.evaluate(c).expect("enumerated candidates valid");
+            fits += p.fits as usize;
+        }
+        assert!(fits > 0);
+    });
+
+    let r = set.run("explore scnn5 end-to-end (enumerate+evaluate+\
+                     pareto+choose)",
+                    || {
+                        let ex = dse::explore(&space, &model);
+                        assert!(ex.chosen.is_some());
+                        assert!(!ex.frontier.is_empty());
+                    });
+    let per_cand_ns = r.median_ns / cands.len() as f64;
+    println!("    -> {:.1} candidates/ms end-to-end",
+             1e6 / per_cand_ns);
+
+    // The simulator-bound stage: probe runs + correction-factor fit on
+    // scnn3 (the serving default), both backends.
+    let scnn3 = arch::scnn3();
+    set.run("calibrate scnn3 (sim probes, both backends)", || {
+        let cal = dse::calibrate(&scnn3, &model.timing,
+                                 &CalibrationConfig::default());
+        assert!(cal.op_activity > 0.0);
+    });
+}

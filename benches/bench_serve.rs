@@ -1,6 +1,8 @@
 //! Bench: multi-pipeline parallel serving — request throughput of the
-//! replica pool at N = 1 vs N = host-scaled replicas, plus the TCP
-//! server's end-to-end single-replica latency.
+//! replica pool at N = 1 vs N = host-scaled replicas, the combined
+//! word-parallel x replica speedup, and the DSE auto-tuned
+//! configuration (what `serve --auto-tune` boots) against the serve
+//! defaults.
 //!
 //! The pool replicates the whole accelerator pipeline per worker
 //! thread (coordinator::replica), so request throughput scales with
@@ -14,6 +16,7 @@ use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::coordinator::replica::ReplicaPool;
+use sti_snn::dse::{self, AutoTuneOptions};
 use sti_snn::sim::BackendKind;
 use sti_snn::util::bench::{fmt_ns, smoke_mode, BenchResult, BenchSet};
 use sti_snn::util::rng::Rng;
@@ -37,12 +40,12 @@ fn frames(n: usize) -> Vec<SpikeFrame> {
         .collect()
 }
 
-/// Push every frame through an N-replica pool; returns (requests/s,
-/// per-request mean ns) and the predictions for cross-checking.
-fn pool_run(replicas: usize, fs: &[SpikeFrame], backend: BackendKind)
-            -> (f64, f64, Vec<usize>) {
-    let pool = ReplicaPool::new(pipelines(replicas, backend), 4,
-                                Duration::from_millis(2));
+/// Push every frame through a pool built from `pipes`; returns
+/// (requests/s, per-request mean ns) and the predictions for
+/// cross-checking.
+fn pool_run_pipes(pipes: Vec<Pipeline>, fs: &[SpikeFrame])
+                  -> (f64, f64, Vec<usize>) {
+    let pool = ReplicaPool::new(pipes, 4, Duration::from_millis(2));
     let t0 = Instant::now();
     let rxs: Vec<_> = fs.iter().map(|f| pool.submit(f.clone())).collect();
     let preds: Vec<usize> = rxs
@@ -53,6 +56,11 @@ fn pool_run(replicas: usize, fs: &[SpikeFrame], backend: BackendKind)
     pool.shutdown();
     let rps = fs.len() as f64 / dt.as_secs_f64();
     (rps, dt.as_nanos() as f64 / fs.len() as f64, preds)
+}
+
+fn pool_run(replicas: usize, fs: &[SpikeFrame], backend: BackendKind)
+            -> (f64, f64, Vec<usize>) {
+    pool_run_pipes(pipelines(replicas, backend), fs)
 }
 
 fn main() {
@@ -107,4 +115,40 @@ fn main() {
              fmt_ns(ns_acc));
     println!("    -> combined word-parallel x {big}-replica speedup \
               {:.2}x over accurate x 1", rps_n / rps_acc);
+
+    // DSE auto-tuned configuration — the exact `serve --auto-tune`
+    // recipe (shared `dse::auto_tune` + `dse::build_pool_pipelines`,
+    // same defaults) — vs the serve defaults measured above (1
+    // replica, accurate backend, unit factors).
+    let net = arch::scnn3();
+    let (best, _) = dse::auto_tune(&net, &AutoTuneOptions {
+        max_replicas: big,
+        ..Default::default()
+    })
+    .expect("dse found no feasible serving point");
+    let tuned = dse::build_pool_pipelines(&net, &best, 1)
+        .expect("chosen factors are valid");
+    let (rps_tuned, ns_tuned, preds_tuned) = pool_run_pipes(tuned, &fs);
+    set.add(BenchResult {
+        name: format!("pool auto-tuned ({:?} x{} {})",
+                      best.candidate.factors, best.candidate.replicas,
+                      best.candidate.backend),
+        iters: n_requests,
+        mean_ns: ns_tuned,
+        median_ns: ns_tuned,
+        min_ns: ns_tuned,
+    });
+    assert_eq!(preds1, preds_tuned, "auto-tuned pool changed predictions");
+    println!("pool auto-tuned (factors {:?}, N={}, backend={}): \
+              {rps_tuned:.1} req/s ({}/req)",
+             best.candidate.factors, best.candidate.replicas,
+             best.candidate.backend, fmt_ns(ns_tuned));
+    let ratio = rps_tuned / rps_acc;
+    println!("    -> auto-tuned vs default serve configuration: \
+              {ratio:.2}x");
+    if !smoke_mode() {
+        assert!(ratio >= 1.0,
+                "auto-tuned configuration slower than the default \
+                 ({ratio:.2}x)");
+    }
 }

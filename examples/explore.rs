@@ -1,0 +1,68 @@
+//! Design-space exploration demo: calibrate the analytical cost models
+//! against the simulator, search the joint space of per-layer parallel
+//! factors x replica count x compute backend under a PE budget, and
+//! print the latency/energy/resource Pareto frontier as a table.
+//!
+//! ```bash
+//! cargo run --release --example explore [-- --model scnn3 \
+//!     --pe-budget 144 --max-replicas 4]
+//! ```
+
+use sti_snn::arch;
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::dse::{self, CalibrationConfig, CostModel, SearchSpace};
+use sti_snn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.get_str("model", "scnn3");
+    let net = arch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let budget = args.get_usize("pe-budget", 8 * dse::min_pes(&net));
+    let max_replicas = args.get_usize("max-replicas", 4);
+
+    // 1. Calibrate: a handful of simulator probes fit per-term
+    //    correction factors (and measure host speed per backend). The
+    //    default probe rate is shared with `serve --auto-tune`, so this
+    //    example and the CLI fit the same model.
+    let timing = ConvLatencyParams::optimized();
+    let model = CostModel {
+        calibration: dse::calibrate(&net, &timing,
+                                    &CalibrationConfig::default()),
+        timing,
+        ..CostModel::default()
+    };
+    println!("calibration for {name}:");
+    println!("  cycle scales (std/dw/pw): {:.3} / {:.3} / {:.3}",
+             model.calibration.cycle_scales[0],
+             model.calibration.cycle_scales[1],
+             model.calibration.cycle_scales[2]);
+    println!("  op activity: {:.3}  weight scale: {:.3}  input scales \
+              (DRAM/BRAM): {:.3} / {:.3}",
+             model.calibration.op_activity,
+             model.calibration.weight_scale,
+             model.calibration.input_dram_scale,
+             model.calibration.input_bram_scale);
+    for (b, ns) in &model.calibration.host_ns_per_frame {
+        println!("  host speed [{b}]: {:.2} ms/frame", ns / 1e6);
+    }
+
+    // 2. Explore the space and print the frontier.
+    let space = SearchSpace::new(net, budget)
+        .with_replicas(max_replicas);
+    let ex = dse::explore(&space, &model);
+    println!("\n{} | PE budget {budget} | {} candidates -> frontier {}",
+             space.net.name, ex.candidates, ex.frontier.len());
+    print!("{}", dse::frontier_table(&ex));
+
+    // 3. The serving choice `serve --auto-tune` would boot with.
+    match &ex.chosen {
+        Some(c) => println!("\nserving choice: factors {:?} x{} \
+                             replica(s), backend {} -> {:.1} FPS at \
+                             {:.2} W",
+                            c.candidate.factors, c.candidate.replicas,
+                            c.candidate.backend, c.pool_fps, c.power_w),
+        None => println!("\nno candidate fits the device"),
+    }
+    Ok(())
+}

@@ -171,21 +171,65 @@ impl NetworkSpec {
     }
 
     /// Assign per-conv-layer parallel factors (encoder excluded).
-    /// Panics if `factors.len()` does not match the conv-layer count.
-    pub fn with_parallel_factors(mut self, factors: &[usize]) -> Self {
+    /// Panics on invalid input — see [`Self::try_with_parallel_factors`]
+    /// for the validating, error-returning variant.
+    pub fn with_parallel_factors(self, factors: &[usize]) -> Self {
+        match self.try_with_parallel_factors(factors) {
+            Ok(net) => net,
+            Err(e) => panic!("invalid parallel factors: {e}"),
+        }
+    }
+
+    /// Validating parallel-factor assignment. A factor is rejected when
+    /// it is zero, exceeds the layer's `Co`, or does not divide `Co`
+    /// (the RTL replicates whole output-channel lanes, so `Co` must
+    /// split evenly across them); the count must match the accelerated
+    /// conv-layer count. PE budgets are a property of the whole design,
+    /// not one assignment — check them with [`Self::check_pe_budget`].
+    pub fn try_with_parallel_factors(mut self, factors: &[usize])
+                                     -> anyhow::Result<Self> {
+        let n_convs = self
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv(c) if !c.encoder))
+            .count();
+        if factors.len() != n_convs {
+            anyhow::bail!(
+                "parallel factor count {} != conv layer count {n_convs}",
+                factors.len());
+        }
         let mut it = factors.iter();
         for l in self.layers.iter_mut() {
             if let Layer::Conv(c) = l {
                 if !c.encoder {
-                    c.parallel = *it
-                        .next()
-                        .expect("parallel factor count != conv layer count");
+                    let f = *it.next().expect("count checked above");
+                    if f == 0 {
+                        anyhow::bail!("parallel factor 0 (Co = {})", c.co);
+                    }
+                    if f > c.co {
+                        anyhow::bail!(
+                            "parallel factor {f} exceeds Co = {}", c.co);
+                    }
+                    if c.co % f != 0 {
+                        anyhow::bail!(
+                            "parallel factor {f} does not divide Co = {}",
+                            c.co);
+                    }
+                    c.parallel = f;
                 }
             }
         }
-        assert!(it.next().is_none(),
-                "parallel factor count != conv layer count");
-        self
+        Ok(self)
+    }
+
+    /// Error when the design's total PE count exceeds a budget (the
+    /// constraint the `dse` search space and scheduler enforce).
+    pub fn check_pe_budget(&self, pe_budget: usize) -> anyhow::Result<()> {
+        let pes = self.total_pes();
+        if pes > pe_budget {
+            anyhow::bail!("design needs {pes} PEs, budget is {pe_budget}");
+        }
+        Ok(())
     }
 
     /// Total Vmem buffer bytes at the given timestep count (0 at T = 1).
@@ -511,6 +555,37 @@ mod tests {
     #[should_panic]
     fn wrong_factor_count_panics() {
         let _ = scnn5().with_parallel_factors(&[4, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_dividing_factor_panics() {
+        // scnn3 convs have Co = 32; 3 does not divide 32.
+        let _ = scnn3().with_parallel_factors(&[3, 2]);
+    }
+
+    #[test]
+    fn try_with_parallel_factors_rejects_bad_input() {
+        // Factor that does not divide Co.
+        let err = scnn3().try_with_parallel_factors(&[3, 2]).unwrap_err();
+        assert!(err.to_string().contains("divide"), "{err}");
+        // Factor exceeding Co.
+        let err = scnn3().try_with_parallel_factors(&[64, 1]).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        // Zero factor.
+        assert!(scnn3().try_with_parallel_factors(&[0, 1]).is_err());
+        // Wrong count.
+        assert!(scnn3().try_with_parallel_factors(&[4]).is_err());
+        // Valid profile passes through unchanged.
+        let net = scnn3().try_with_parallel_factors(&[4, 2]).unwrap();
+        assert_eq!(net.total_pes(), 54);
+    }
+
+    #[test]
+    fn check_pe_budget_enforced() {
+        let net = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        assert!(net.check_pe_budget(99).is_ok());
+        assert!(net.check_pe_budget(98).is_err());
     }
 
     #[test]

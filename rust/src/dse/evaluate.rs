@@ -1,0 +1,483 @@
+//! Analytical candidate evaluation: one multi-objective cost point per
+//! design-space candidate.
+//!
+//! This module is the single home of the cost math that used to live in
+//! `coordinator::scheduler`: per-layer latencies under parallel factors
+//! (Eq. 12), PE accounting, and the greedy bottleneck-doubling factor
+//! optimiser. The scheduler's public functions are now thin wrappers
+//! over these.
+//!
+//! On top of that, [`Evaluator`] combines the analytical models —
+//! `dataflow::latency` (cycles), `dataflow::access` (memory traffic),
+//! `sim::energy` (per-event energies + static power) and
+//! `sim::resources` (LUT/FF/BRAM area) — into a [`CostPoint`] per
+//! [`Candidate`], with the [`Calibration`] correction factors fitted
+//! from real simulator probes applied to every term.
+
+use crate::arch::{Layer, NetworkSpec};
+use crate::dataflow::latency::layer_latency;
+use crate::dataflow::{conv_latency, conv_mode_access, ConvLatencyParams};
+use crate::sim::energy::EnergyModel;
+use crate::sim::resources::{ResourceModel, ResourceReport};
+use crate::sim::CLK_HZ;
+
+use super::calibrate::Calibration;
+use super::space::Candidate;
+
+// ---------------------------------------------------------------------------
+// Parallel-factor schedules (migrated from coordinator::scheduler)
+// ---------------------------------------------------------------------------
+
+/// A chosen per-layer parallel-factor schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleChoice {
+    pub factors: Vec<usize>,
+    pub pes: usize,
+    /// Pipeline interval (cycles) under the latency model.
+    pub t_max: u64,
+    /// Interval before optimisation (all factors 1).
+    pub t_max_base: u64,
+}
+
+impl ScheduleChoice {
+    pub fn speedup(&self) -> f64 {
+        self.t_max_base as f64 / self.t_max as f64
+    }
+
+    /// Steady-state frames/s of one pipeline at this schedule (Eq. 11,
+    /// N -> inf) for a given clock.
+    pub fn fps(&self, clk_hz: f64) -> f64 {
+        clk_hz / self.t_max as f64
+    }
+}
+
+/// A schedule replicated across N identical pipeline copies (the
+/// serving pool of `coordinator::replica`): replicas trade per-frame
+/// latency (fewer lanes per copy) for request throughput (more copies).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicatedSchedule {
+    pub replicas: usize,
+    pub per_replica: ScheduleChoice,
+    /// Total PEs across all replicas.
+    pub pes_total: usize,
+}
+
+impl ReplicatedSchedule {
+    /// Aggregate frames/s of the whole pool at a given clock.
+    pub fn pool_fps(&self, clk_hz: f64) -> f64 {
+        self.replicas as f64 * self.per_replica.fps(clk_hz)
+    }
+}
+
+/// Per-conv-layer latencies of a factor assignment (Eq. 12 each).
+fn conv_latencies(net: &NetworkSpec, factors: &[usize],
+                  timing: &ConvLatencyParams) -> Vec<u64> {
+    net.accel_convs()
+        .iter()
+        .zip(factors)
+        .map(|(c, &f)| {
+            let mut l = (*c).clone();
+            l.parallel = f;
+            conv_latency(&l, timing)
+        })
+        .collect()
+}
+
+/// Total PEs of a factor assignment.
+fn factors_pes(net: &NetworkSpec, factors: &[usize]) -> usize {
+    net.accel_convs()
+        .iter()
+        .zip(factors)
+        .map(|(c, &f)| c.kh * c.kw * f)
+        .sum()
+}
+
+/// Lexicographic descent key: pipeline interval first, then how many
+/// layers sit at it. The second component lets the greedy escape tied
+/// bottlenecks (doubling one of two equal layers leaves the max
+/// unchanged but is a necessary step of any schedule that beats it).
+fn bottleneck_key(lat: &[u64]) -> (u64, usize) {
+    let m = *lat.iter().max().unwrap();
+    (m, lat.iter().filter(|&&x| x == m).count())
+}
+
+/// Greedy bottleneck doubling. Tie moves (doubling one of several
+/// layers tied at the interval) are explored because any schedule that
+/// beats a tie must upgrade every tied layer — but they are only
+/// *committed* if the interval eventually drops: trailing tie moves
+/// that never pay off are rolled back so the returned schedule spends
+/// no PEs without a latency return. Returns the choice plus the
+/// committed trajectory from all-ones to it (the chain doubles as a
+/// search-space sample in `dse::space`).
+fn greedy_search(net: &NetworkSpec, pe_budget: usize,
+                 timing: &ConvLatencyParams)
+                 -> (ScheduleChoice, Vec<Vec<usize>>) {
+    let convs = net.accel_convs();
+    assert!(!convs.is_empty(), "network has no accelerated conv layers");
+    let mut factors = vec![1usize; convs.len()];
+    let mut chain = vec![factors.clone()];
+
+    let base_lat = conv_latencies(net, &factors, timing);
+    let t_max_base = *base_lat.iter().max().unwrap();
+    // Chain index of the last state that lowered the interval.
+    let mut committed = 0usize;
+    let mut best_max = t_max_base;
+
+    loop {
+        let lat = conv_latencies(net, &factors, timing);
+        let cur = bottleneck_key(&lat);
+        // Walk layers from the bottleneck down, doubling the first one
+        // that still fits the budget, its channel count, and lane
+        // divisibility (Co must split evenly across lanes).
+        let mut order: Vec<usize> = (0..factors.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(lat[i]));
+        let mut improved = false;
+        for &i in &order {
+            let c = convs[i];
+            let next = factors[i] * 2;
+            if next > c.co || c.co % next != 0 {
+                continue; // no more even lane splits for this layer
+            }
+            let mut trial = factors.clone();
+            trial[i] = next;
+            if factors_pes(net, &trial) > pe_budget {
+                continue;
+            }
+            // Only useful if it improves (interval, #bottlenecks).
+            let new_lat = conv_latencies(net, &trial, timing);
+            let new_key = bottleneck_key(&new_lat);
+            if new_key < cur {
+                factors = trial;
+                chain.push(factors.clone());
+                if new_key.0 < best_max {
+                    best_max = new_key.0;
+                    committed = chain.len() - 1;
+                }
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // Roll back tie moves after the last interval drop.
+    chain.truncate(committed + 1);
+    let factors = chain.last().unwrap().clone();
+    let final_lat = conv_latencies(net, &factors, timing);
+    let choice = ScheduleChoice {
+        pes: factors_pes(net, &factors),
+        t_max: *final_lat.iter().max().unwrap(),
+        t_max_base,
+        factors,
+    };
+    (choice, chain)
+}
+
+/// Choose per-conv-layer factors under a total-PE budget (greedy
+/// steepest descent on the latency model: repeatedly double the
+/// bottleneck layer's factor while the budget allows — optimal for
+/// this objective because layer latencies are independent and monotone
+/// in their own factor). Factors are powers of two that divide each
+/// layer's `Co`.
+pub fn optimize_factors(net: &NetworkSpec, pe_budget: usize,
+                        timing: &ConvLatencyParams) -> ScheduleChoice {
+    greedy_search(net, pe_budget, timing).0
+}
+
+/// Every factor vector on the greedy optimiser's committed path from
+/// all-ones to the budget-optimal point — a monotone latency/PE chain.
+pub fn greedy_chain(net: &NetworkSpec, pe_budget: usize,
+                    timing: &ConvLatencyParams) -> Vec<Vec<usize>> {
+    greedy_search(net, pe_budget, timing).1
+}
+
+/// Schedule `replicas` identical copies under one total PE budget.
+pub fn optimize_replicated(net: &NetworkSpec, pe_budget: usize,
+                           replicas: usize, timing: &ConvLatencyParams)
+                           -> ReplicatedSchedule {
+    let replicas = replicas.max(1);
+    let per_replica = optimize_factors(net, pe_budget / replicas, timing);
+    ReplicatedSchedule {
+        replicas,
+        pes_total: per_replica.pes * replicas,
+        per_replica,
+    }
+}
+
+/// Sweep PE budgets, reporting the latency/PE trade-off curve (the
+/// flexibility argument of SectionV-C).
+pub fn budget_sweep(net: &NetworkSpec, budgets: &[usize],
+                    timing: &ConvLatencyParams) -> Vec<ScheduleChoice> {
+    budgets
+        .iter()
+        .map(|&b| optimize_factors(net, b, timing))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Multi-objective candidate evaluation
+// ---------------------------------------------------------------------------
+
+/// The analytical models + calibration a DSE run evaluates with.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub timing: ConvLatencyParams,
+    pub energy: EnergyModel,
+    pub resources: ResourceModel,
+    pub calibration: Calibration,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            timing: ConvLatencyParams::optimized(),
+            energy: EnergyModel::default(),
+            resources: ResourceModel::default(),
+            calibration: Calibration::identity(),
+        }
+    }
+}
+
+/// One evaluated design point: a candidate plus its predicted latency,
+/// throughput, energy, power, and FPGA resource costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostPoint {
+    pub candidate: Candidate,
+    /// Calibrated per-replica pipeline interval (cycles, all layers).
+    pub t_max_cycles: f64,
+    /// Steady-state per-frame latency of one replica (ms).
+    pub latency_ms: f64,
+    /// Aggregate frames/s of the replica pool at the design clock.
+    pub pool_fps: f64,
+    /// Calibrated dynamic energy per frame (J).
+    pub energy_per_frame_j: f64,
+    /// Average power at pool throughput (dynamic + static floor, W).
+    pub power_w: f64,
+    /// Resources across all replicas.
+    pub resources: ResourceReport,
+    /// PEs across all replicas.
+    pub pes: usize,
+    /// Whether the whole pool fits the ZCU102 budget.
+    pub fits: bool,
+    /// Measured host wall-time per frame for the candidate's compute
+    /// backend (ns), when calibration probed it.
+    pub host_ns_per_frame: Option<f64>,
+}
+
+impl CostPoint {
+    /// Minimisation objectives for Pareto pruning:
+    /// `[pool interval (cycles/frame at pool level), per-frame latency
+    /// (ms), energy/frame (J), LUTs]`.
+    pub fn objectives(&self) -> [f64; 4] {
+        [
+            self.t_max_cycles / self.candidate.replicas as f64,
+            self.latency_ms,
+            self.energy_per_frame_j,
+            self.resources.lut as f64,
+        ]
+    }
+}
+
+/// Evaluates candidates for one network under one cost model.
+pub struct Evaluator<'a> {
+    net: &'a NetworkSpec,
+    model: &'a CostModel,
+    timesteps: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(net: &'a NetworkSpec, model: &'a CostModel,
+               timesteps: usize) -> Self {
+        Self { net, model, timesteps: timesteps.max(1) }
+    }
+
+    /// Evaluate one candidate. Errors only on invalid factor vectors
+    /// (wrong count / zero / non-dividing — `arch` validation).
+    pub fn evaluate(&self, cand: &Candidate) -> anyhow::Result<CostPoint> {
+        let net = self
+            .net
+            .clone()
+            .try_with_parallel_factors(&cand.factors)?;
+        let replicas = cand.replicas.max(1);
+        let t = self.timesteps as u64;
+        let cal = &self.model.calibration;
+        let timing = &self.model.timing;
+
+        // Calibrated per-layer cycles (Eq. 12 x per-mode correction for
+        // convs; pool/FC latencies are minor and used uncorrected).
+        let mut t_max = 0f64;
+        for layer in &net.layers {
+            let cycles = match layer {
+                Layer::Conv(c) if !c.encoder => {
+                    conv_latency(c, timing) as f64 * cal.cycle_scale(c.mode)
+                }
+                Layer::Conv(_) => 0.0,
+                other => layer_latency(other, timing) as f64,
+            } * t as f64;
+            t_max = t_max.max(cycles);
+        }
+
+        // Calibrated dynamic energy: theoretical ops scaled by the
+        // measured spike activity, plus per-class memory traffic at the
+        // Eyeriss-style per-level energies (first conv streams its
+        // input from DRAM; everything downstream is on-chip).
+        let e = &self.model.energy;
+        let mut energy_pj = 0.0;
+        let mut first = true;
+        for c in net.accel_convs() {
+            let a = conv_mode_access(c, t);
+            energy_pj +=
+                c.ops() as f64 * t as f64 * cal.op_activity * e.pj_per_op;
+            let inputs = a.input_spikes as f64;
+            if first {
+                energy_pj += inputs * cal.input_dram_scale * e.pj_dram;
+                first = false;
+            }
+            energy_pj += inputs * cal.input_bram_scale * e.pj_bram;
+            energy_pj += a.weights as f64 * cal.weight_scale * e.pj_bram;
+            energy_pj +=
+                a.partial_sums as f64 * cal.vmem_scale * e.pj_bram;
+            let outputs = (c.out_h() * c.out_w()) as f64 * t as f64;
+            energy_pj += outputs * cal.output_scale * e.pj_bram;
+        }
+        for layer in &net.layers {
+            if let Layer::Fc { n_in, n_out } = layer {
+                energy_pj += (n_in * n_out) as f64 * t as f64
+                    * cal.op_activity
+                    * e.pj_per_op;
+            }
+        }
+        let energy_per_frame_j = energy_pj * 1e-12;
+
+        // Resources and power scale with the replica count (each
+        // replica is a full copy of the array + buffers).
+        let base = self.model.resources.network(&net, self.timesteps);
+        let resources = ResourceReport {
+            lut: base.lut * replicas as u64,
+            ff: base.ff * replicas as u64,
+            bram36: base.bram36 * replicas as f64,
+            dsp: base.dsp * replicas as u64,
+        };
+        let pes = net.total_pes() * replicas;
+        let pool_fps = replicas as f64 * CLK_HZ / t_max;
+        let power_w = e.avg_power(energy_per_frame_j, pool_fps, pes,
+                                  resources.bram36);
+
+        Ok(CostPoint {
+            host_ns_per_frame: cal.host_ns(cand.backend),
+            candidate: cand.clone(),
+            t_max_cycles: t_max,
+            latency_ms: t_max / CLK_HZ * 1e3,
+            pool_fps,
+            energy_per_frame_j,
+            power_w,
+            resources,
+            pes,
+            fits: resources.fits(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn3, scnn5};
+    use crate::sim::BackendKind;
+
+    fn cand(factors: &[usize], replicas: usize) -> Candidate {
+        Candidate {
+            factors: factors.to_vec(),
+            replicas,
+            backend: BackendKind::Accurate,
+        }
+    }
+
+    #[test]
+    fn more_lanes_lower_latency_higher_lut() {
+        let net = scnn3();
+        let model = CostModel::default();
+        let ev = Evaluator::new(&net, &model, 1);
+        let base = ev.evaluate(&cand(&[1, 1], 1)).unwrap();
+        let par = ev.evaluate(&cand(&[4, 2], 1)).unwrap();
+        assert!(par.latency_ms < base.latency_ms);
+        assert!(par.resources.lut > base.resources.lut);
+        // Function-preserving knob: energy per frame is unchanged.
+        let de = (par.energy_per_frame_j - base.energy_per_frame_j).abs();
+        assert!(de / base.energy_per_frame_j < 1e-9);
+    }
+
+    #[test]
+    fn replicas_scale_pool_fps_and_resources() {
+        let net = scnn3();
+        let model = CostModel::default();
+        let ev = Evaluator::new(&net, &model, 1);
+        let one = ev.evaluate(&cand(&[2, 2], 1)).unwrap();
+        let four = ev.evaluate(&cand(&[2, 2], 4)).unwrap();
+        assert!((four.pool_fps / one.pool_fps - 4.0).abs() < 1e-9);
+        assert_eq!(four.resources.lut, 4 * one.resources.lut);
+        assert_eq!(four.pes, 4 * one.pes);
+        // Per-replica latency is identical.
+        assert!((four.latency_ms - one.latency_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_factors_are_an_error_not_a_panic() {
+        let net = scnn3();
+        let model = CostModel::default();
+        let ev = Evaluator::new(&net, &model, 1);
+        assert!(ev.evaluate(&cand(&[3, 2], 1)).is_err());
+        assert!(ev.evaluate(&cand(&[4], 1)).is_err());
+    }
+
+    #[test]
+    fn evaluator_latency_matches_schedule_choice() {
+        // The evaluator (identity calibration) and the migrated greedy
+        // agree on the pipeline interval of the same factor profile.
+        let net = scnn5();
+        let timing = ConvLatencyParams::optimized();
+        let choice = optimize_factors(&net, 99, &timing);
+        let model = CostModel::default();
+        let ev = Evaluator::new(&net, &model, 1);
+        let p = ev.evaluate(&cand(&choice.factors, 1)).unwrap();
+        // Conv bottleneck dominates every deployed net, so the whole-
+        // pipeline interval equals the schedule's conv interval.
+        assert!((p.t_max_cycles - choice.t_max as f64).abs() < 1.0,
+                "evaluator {} vs schedule {}", p.t_max_cycles,
+                choice.t_max);
+    }
+
+    #[test]
+    fn tied_bottlenecks_roll_back_unpaid_tie_moves() {
+        // Two identical convs tie at the interval. With budget for
+        // only one doubling the tie move cannot pay off and is rolled
+        // back (no PEs spent at speedup 1.0); with budget for both,
+        // the interval halves.
+        let net = crate::arch::NetBuilder::new("tie", (8, 8, 2))
+            .encoder(8, 3)
+            .conv(8, 3)
+            .conv(8, 3)
+            .fc(10)
+            .build();
+        let timing = ConvLatencyParams::optimized();
+        let one = optimize_factors(&net, 27, &timing);
+        assert_eq!(one.factors, vec![1, 1]);
+        assert_eq!(one.pes, 18);
+        assert_eq!(one.speedup(), 1.0);
+        let both = optimize_factors(&net, 36, &timing);
+        assert_eq!(both.factors, vec![2, 2]);
+        assert!(both.t_max < one.t_max);
+    }
+
+    #[test]
+    fn greedy_chain_starts_at_ones_and_ends_at_choice() {
+        let net = scnn5();
+        let timing = ConvLatencyParams::optimized();
+        let chain = greedy_chain(&net, 99, &timing);
+        let choice = optimize_factors(&net, 99, &timing);
+        assert_eq!(chain.first().unwrap(), &vec![1, 1, 1, 1]);
+        assert_eq!(chain.last().unwrap(), &choice.factors);
+        assert!(chain.len() >= 2);
+    }
+}

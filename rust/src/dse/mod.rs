@@ -1,0 +1,243 @@
+//! Design-space exploration: calibrated cost models, Pareto search,
+//! and auto-tuned serving configurations.
+//!
+//! STI-SNN's computation array is *parameterized* — PE modes, per-layer
+//! intra-layer parallel factors, and inter-layer pipelining are knobs
+//! to be tuned per model (paper SectionIV). This subsystem searches the
+//! joint space of those knobs plus the serving-side ones (replica
+//! count, compute backend) against latency, energy, *and* resource
+//! budgets, feeding measured simulator results back into the
+//! analytical models:
+//!
+//! * [`space`] — search-space enumeration under a total PE budget
+//!   (dividing power-of-two factors, replica budget splits, backend
+//!   cross product), with greedy-trajectory sampling past a size cap.
+//! * [`evaluate`] — the analytical evaluator combining
+//!   `dataflow::latency`, `dataflow::access`, `sim::energy` and
+//!   `sim::resources` into one [`CostPoint`] per candidate. Also the
+//!   home of the parallel-factor schedule optimiser that
+//!   `coordinator::scheduler` now wraps.
+//! * [`calibrate`] — probe the real `sim` engines and fit per-term
+//!   correction factors so analytical cycles/accesses track simulated
+//!   counters (and measure host speed per backend).
+//! * [`pareto`] — latency/energy/resource frontier with dominance
+//!   pruning and deterministic tie-breaking, plus the serving choice.
+//! * [`report`] — JSON report of the frontier + chosen point
+//!   (`dse_report.json`, `BENCH_dse.json`-compatible conventions).
+//!
+//! End to end: `sti-snn explore` prints and writes the frontier;
+//! `sti-snn serve --auto-tune` boots the `ReplicaPool` from the
+//! winning point.
+
+pub mod calibrate;
+pub mod evaluate;
+pub mod pareto;
+pub mod report;
+pub mod space;
+
+use crate::arch::NetworkSpec;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+use crate::dataflow::ConvLatencyParams;
+
+pub use calibrate::{calibrate, Calibration, CalibrationConfig};
+pub use evaluate::{CostModel, CostPoint, Evaluator};
+pub use pareto::{dominates, pareto_frontier};
+pub use report::{frontier_table, report_json, write_report};
+pub use space::{min_pes, Candidate, SearchSpace};
+
+/// The result of one exploration run.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    /// Enumerated candidate count.
+    pub candidates: usize,
+    /// Successfully evaluated count (== candidates unless a factor
+    /// vector was rejected by `arch` validation).
+    pub evaluated: usize,
+    /// Every evaluated cost point, in enumeration order.
+    pub points: Vec<CostPoint>,
+    /// The non-dominated subset (deterministically ordered).
+    pub frontier: Vec<CostPoint>,
+    /// Serving choice: best-throughput point that fits the device.
+    pub chosen: Option<CostPoint>,
+    /// The calibration the evaluator ran with (recorded for the
+    /// report).
+    pub calibration: Calibration,
+}
+
+/// Enumerate, evaluate, and prune a search space under a cost model.
+pub fn explore(space: &SearchSpace, model: &CostModel) -> Exploration {
+    let cands = space.enumerate(&model.timing);
+    let eval = Evaluator::new(&space.net, model, space.timesteps);
+    let mut points = Vec::with_capacity(cands.len());
+    for c in &cands {
+        if let Ok(p) = eval.evaluate(c) {
+            points.push(p);
+        }
+    }
+    let frontier = pareto::pareto_frontier(&points);
+    let chosen = pareto::choose(&points);
+    Exploration {
+        candidates: cands.len(),
+        evaluated: points.len(),
+        points,
+        frontier,
+        chosen,
+        calibration: model.calibration.clone(),
+    }
+}
+
+/// The `serve --auto-tune` recipe, shared by the CLI, benches, and
+/// examples so the measured configuration is exactly the booted one.
+#[derive(Debug, Clone)]
+pub struct AutoTuneOptions {
+    /// Total PE budget; `None` = 8x the net's unit-factor minimum.
+    pub pe_budget: Option<usize>,
+    /// Largest replica split to consider.
+    pub max_replicas: usize,
+    pub timesteps: usize,
+    /// Calibration probe firing rate.
+    pub rate: f64,
+}
+
+impl Default for AutoTuneOptions {
+    fn default() -> Self {
+        Self {
+            pe_budget: None,
+            max_replicas: std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+                .clamp(1, 8),
+            timesteps: 1,
+            rate: CalibrationConfig::default().rate,
+        }
+    }
+}
+
+/// Calibrate against the simulator, explore the space, and return the
+/// chosen serving point (plus the full exploration for reporting).
+/// Errors when no candidate fits the device.
+pub fn auto_tune(net: &NetworkSpec, opts: &AutoTuneOptions)
+                 -> anyhow::Result<(CostPoint, Exploration)> {
+    let budget = opts.pe_budget.unwrap_or_else(|| 8 * min_pes(net));
+    let timing = ConvLatencyParams::optimized();
+    let model = CostModel {
+        calibration: calibrate(net, &timing, &CalibrationConfig {
+            rate: opts.rate,
+            timesteps: opts.timesteps,
+            ..Default::default()
+        }),
+        timing,
+        ..CostModel::default()
+    };
+    let space = SearchSpace::new(net.clone(), budget)
+        .with_replicas(opts.max_replicas)
+        .with_timesteps(opts.timesteps);
+    let ex = explore(&space, &model);
+    let chosen = ex.chosen.clone().ok_or_else(|| {
+        anyhow::anyhow!(
+            "auto-tune: no design point fits a {budget}-PE budget on \
+             the ZCU102")
+    })?;
+    Ok((chosen, ex))
+}
+
+/// Build the replica-pool pipelines a chosen point describes (random
+/// weights — the synthetic serving path).
+pub fn build_pool_pipelines(net: &NetworkSpec, chosen: &CostPoint,
+                            timesteps: usize)
+                            -> anyhow::Result<Vec<Pipeline>> {
+    let tuned = net
+        .clone()
+        .try_with_parallel_factors(&chosen.candidate.factors)?;
+    (0..chosen.candidate.replicas)
+        .map(|_| {
+            Pipeline::random(tuned.clone(), PipelineConfig {
+                timesteps,
+                backend: chosen.candidate.backend,
+                ..Default::default()
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::scnn3;
+    use crate::sim::BackendKind;
+
+    #[test]
+    fn explore_scnn3_finds_the_paper_profile_on_the_frontier() {
+        // With the paper's 54-PE budget, the (4,2) hand profile must be
+        // on (or dominated by nothing on) the frontier.
+        let space = SearchSpace::new(scnn3(), 54);
+        let ex = explore(&space, &CostModel::default());
+        assert_eq!(ex.candidates, ex.evaluated);
+        assert!(!ex.frontier.is_empty());
+        let best_latency = ex
+            .frontier
+            .iter()
+            .map(|p| p.latency_ms)
+            .fold(f64::INFINITY, f64::min);
+        let hand = ex
+            .points
+            .iter()
+            .find(|p| p.candidate.factors == vec![4, 2]
+                  && p.candidate.replicas == 1)
+            .expect("(4,2) enumerated");
+        assert!(hand.latency_ms <= best_latency * 1.0001,
+                "hand profile off the frontier: {} vs {}",
+                hand.latency_ms, best_latency);
+    }
+
+    #[test]
+    fn chosen_point_fits_and_maximises_pool_fps() {
+        let space = SearchSpace::new(scnn3(), 144).with_replicas(4);
+        let ex = explore(&space, &CostModel::default());
+        let chosen = ex.chosen.expect("feasible point exists");
+        assert!(chosen.fits);
+        for p in ex.points.iter().filter(|p| p.fits) {
+            assert!(chosen.pool_fps >= p.pool_fps,
+                    "chosen {} beaten by {:?} at {}", chosen.pool_fps,
+                    p.candidate, p.pool_fps);
+        }
+    }
+
+    #[test]
+    fn frontier_prefers_measured_faster_backend_on_ties() {
+        // With measured host times, equal-hardware candidates keep the
+        // faster backend after dedup.
+        let model = CostModel {
+            calibration: Calibration {
+                host_ns_per_frame: vec![
+                    (BackendKind::Accurate, 1000.0),
+                    (BackendKind::WordParallel, 10.0),
+                ],
+                ..Calibration::identity()
+            },
+            ..CostModel::default()
+        };
+        let space = SearchSpace::new(scnn3(), 36);
+        let ex = explore(&space, &model);
+        assert!(!ex.frontier.is_empty());
+        for p in &ex.frontier {
+            assert_eq!(p.candidate.backend, BackendKind::WordParallel);
+        }
+    }
+
+    #[test]
+    fn auto_tune_yields_a_bootable_pool() {
+        let net = scnn3();
+        let (best, ex) = auto_tune(&net, &AutoTuneOptions {
+            max_replicas: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(best.fits);
+        assert!(!ex.frontier.is_empty());
+        // Measured host times flowed into the chosen point.
+        assert!(best.host_ns_per_frame.is_some());
+        let pipes = build_pool_pipelines(&net, &best, 1).unwrap();
+        assert_eq!(pipes.len(), best.candidate.replicas);
+    }
+}

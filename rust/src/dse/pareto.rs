@@ -1,0 +1,183 @@
+//! Pareto-frontier extraction over evaluated cost points.
+//!
+//! Objectives are the minimisation vector of
+//! [`CostPoint::objectives`]: pool interval (throughput), per-frame
+//! latency, energy per frame, and LUTs. The frontier keeps every
+//! non-dominated point, deduplicates identical objective vectors with
+//! a deterministic preference order (measured-faster host backend
+//! first, then fewer replicas, then lexicographic factors, then
+//! backend name), and is itself deterministically ordered — the same
+//! inputs always produce the same frontier.
+
+use std::cmp::Ordering;
+
+use super::evaluate::CostPoint;
+
+/// Strict Pareto dominance for minimisation: `a` is no worse anywhere
+/// and strictly better somewhere.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Deterministic total order over precomputed objective vectors:
+/// objectives lexicographically, then the tie-break preferences
+/// documented at module level.
+fn order_by(oa: &[f64; 4], ob: &[f64; 4], a: &CostPoint, b: &CostPoint)
+            -> Ordering {
+    for (x, y) in oa.iter().zip(ob) {
+        match x.total_cmp(y) {
+            Ordering::Equal => {}
+            o => return o,
+        }
+    }
+    let ha = a.host_ns_per_frame.unwrap_or(f64::INFINITY);
+    let hb = b.host_ns_per_frame.unwrap_or(f64::INFINITY);
+    ha.total_cmp(&hb)
+        .then(a.candidate.replicas.cmp(&b.candidate.replicas))
+        .then_with(|| a.candidate.factors.cmp(&b.candidate.factors))
+        .then_with(|| {
+            a.candidate.backend.name().cmp(b.candidate.backend.name())
+        })
+}
+
+/// Deterministic total order between two points.
+fn order(a: &CostPoint, b: &CostPoint) -> Ordering {
+    order_by(&a.objectives(), &b.objectives(), a, b)
+}
+
+/// Non-dominated subset of `points`, deduplicated and deterministically
+/// ordered. Objectives are computed once per point (the scan itself is
+/// all-pairs).
+pub fn pareto_frontier(points: &[CostPoint]) -> Vec<CostPoint> {
+    let objs: Vec<[f64; 4]> = points.iter().map(|p| p.objectives()).collect();
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        order_by(&objs[a], &objs[b], &points[a], &points[b])
+    });
+    let mut front: Vec<CostPoint> = Vec::new();
+    let mut front_objs: Vec<[f64; 4]> = Vec::new();
+    'outer: for &i in &idx {
+        for j in 0..points.len() {
+            if j != i && dominates(&objs[j], &objs[i]) {
+                continue 'outer;
+            }
+        }
+        if front_objs.contains(&objs[i]) {
+            continue; // duplicate metrics: the preferred variant is
+                      // already in (sorted order put it first)
+        }
+        front.push(points[i].clone());
+        front_objs.push(objs[i]);
+    }
+    front
+}
+
+/// Serving choice: the fitting point with the highest pool throughput;
+/// ties fall to lower energy, then fewer LUTs, then the deterministic
+/// preference order. Evaluated over every point (not just the
+/// frontier) so a feasible choice survives even when the unconstrained
+/// frontier is dominated by designs that do not fit the device.
+pub fn choose(points: &[CostPoint]) -> Option<CostPoint> {
+    points
+        .iter()
+        .filter(|p| p.fits)
+        .max_by(|a, b| {
+            a.pool_fps
+                .total_cmp(&b.pool_fps)
+                .then_with(|| {
+                    b.energy_per_frame_j.total_cmp(&a.energy_per_frame_j)
+                })
+                .then_with(|| b.resources.lut.cmp(&a.resources.lut))
+                .then_with(|| order(b, a))
+        })
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::resources::ResourceReport;
+    use crate::sim::BackendKind;
+
+    use crate::dse::space::Candidate;
+
+    fn point(t_max: f64, energy: f64, lut: u64, replicas: usize,
+             fits: bool) -> CostPoint {
+        CostPoint {
+            candidate: Candidate {
+                factors: vec![1],
+                replicas,
+                backend: BackendKind::Accurate,
+            },
+            t_max_cycles: t_max,
+            latency_ms: t_max / 200e3,
+            pool_fps: replicas as f64 * 200e6 / t_max,
+            energy_per_frame_j: energy,
+            power_w: 1.0,
+            resources: ResourceReport {
+                lut,
+                ff: lut,
+                bram36: 1.0,
+                dsp: 0,
+            },
+            pes: 9,
+            fits,
+            host_ns_per_frame: None,
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement() {
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[1.0, 2.0]));
+        assert!(!dominates(&[1.0, 4.0], &[2.0, 3.0])); // trade-off
+    }
+
+    #[test]
+    fn frontier_drops_dominated_points() {
+        let fast_big = point(100.0, 1e-6, 1000, 1, true);
+        let slow_small = point(400.0, 1e-6, 250, 1, true);
+        let dominated = point(400.0, 2e-6, 1200, 1, true);
+        let front = pareto_frontier(&[
+            fast_big.clone(),
+            slow_small.clone(),
+            dominated,
+        ]);
+        assert_eq!(front.len(), 2);
+        assert!(front.contains(&fast_big));
+        assert!(front.contains(&slow_small));
+    }
+
+    #[test]
+    fn frontier_dedups_identical_metrics() {
+        let a = point(100.0, 1e-6, 500, 1, true);
+        let b = point(100.0, 1e-6, 500, 1, true);
+        assert_eq!(pareto_frontier(&[a, b]).len(), 1);
+    }
+
+    #[test]
+    fn choose_prefers_throughput_among_fitting_points() {
+        let fast = point(100.0, 2e-6, 1000, 1, true);
+        let pool = point(100.0, 2e-6, 2000, 4, true); // 4x fps
+        let huge = point(50.0, 1e-6, 500, 8, false); // best but no fit
+        let chosen = choose(&[fast, pool, huge]).unwrap();
+        assert_eq!(chosen.candidate.replicas, 4);
+        assert!(chosen.fits);
+    }
+
+    #[test]
+    fn choose_returns_none_when_nothing_fits() {
+        let p = point(100.0, 1e-6, 500, 1, false);
+        assert!(choose(&[p]).is_none());
+    }
+}

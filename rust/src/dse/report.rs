@@ -1,0 +1,148 @@
+//! JSON report of an exploration: search-space summary, fitted
+//! calibration, the Pareto frontier, and the chosen serving point.
+//!
+//! The schema mirrors `util::bench`'s JSON conventions (flat objects,
+//! numeric fields in base units) so the `BENCH_dse.json` artifact and
+//! `dse_report.json` can be post-processed by the same tooling:
+//!
+//! ```json
+//! {
+//!   "model": "scnn3", "pe_budget": 144, "max_replicas": 4,
+//!   "timesteps": 1, "candidates": 120, "evaluated": 120,
+//!   "calibration": {"cycle_scale_standard": 1.0, ...},
+//!   "frontier": [{"factors": [4, 2], "replicas": 1,
+//!                 "backend": "word-parallel", "t_max_cycles": ...,
+//!                 "latency_ms": ..., "pool_fps": ...,
+//!                 "energy_uj_per_frame": ..., "power_w": ...,
+//!                 "pes": 54, "lut": ..., "bram36": ..., "fits": true},
+//!                ...],
+//!   "chosen": { ...same shape... }   // null when nothing fits
+//! }
+//! ```
+
+use crate::util::json::Json;
+
+use super::evaluate::CostPoint;
+use super::space::SearchSpace;
+use super::Exploration;
+
+fn point_json(p: &CostPoint) -> Json {
+    Json::obj(vec![
+        ("factors",
+         Json::Arr(p.candidate
+             .factors
+             .iter()
+             .map(|&f| Json::num(f as f64))
+             .collect())),
+        ("replicas", Json::num(p.candidate.replicas as f64)),
+        ("backend", Json::str(p.candidate.backend.name())),
+        ("t_max_cycles", Json::num(p.t_max_cycles)),
+        ("latency_ms", Json::num(p.latency_ms)),
+        ("pool_fps", Json::num(p.pool_fps)),
+        ("energy_uj_per_frame", Json::num(p.energy_per_frame_j * 1e6)),
+        ("power_w", Json::num(p.power_w)),
+        ("pes", Json::num(p.pes as f64)),
+        ("lut", Json::num(p.resources.lut as f64)),
+        ("bram36", Json::num(p.resources.bram36)),
+        ("fits", Json::Bool(p.fits)),
+    ])
+}
+
+/// Fixed-width frontier table (one header + one line per frontier
+/// point), shared by the `explore` subcommand and the examples so the
+/// two entry points cannot drift.
+pub fn frontier_table(ex: &Exploration) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<16} {:>4} {:>14} {:>10} {:>10} {:>10} {:>8} {:>8} {:>7} \
+         {:>5}",
+        "factors", "rep", "backend", "t_max ms", "pool FPS", "uJ/frame",
+        "power W", "LUT", "BRAM", "fits");
+    for p in &ex.frontier {
+        let _ = writeln!(
+            s,
+            "{:<16} {:>4} {:>14} {:>10.3} {:>10.1} {:>10.2} {:>8.2} \
+             {:>8} {:>7.1} {:>5}",
+            format!("{:?}", p.candidate.factors),
+            p.candidate.replicas,
+            p.candidate.backend.name(),
+            p.latency_ms,
+            p.pool_fps,
+            p.energy_per_frame_j * 1e6,
+            p.power_w,
+            p.resources.lut,
+            p.resources.bram36,
+            p.fits);
+    }
+    s
+}
+
+/// The full report as a JSON value.
+pub fn report_json(ex: &Exploration, space: &SearchSpace) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(&space.net.name)),
+        ("pe_budget", Json::num(space.pe_budget as f64)),
+        ("max_replicas", Json::num(space.max_replicas as f64)),
+        ("timesteps", Json::num(space.timesteps as f64)),
+        ("candidates", Json::num(ex.candidates as f64)),
+        ("evaluated", Json::num(ex.evaluated as f64)),
+        ("calibration", ex.calibration.to_json()),
+        ("frontier",
+         Json::Arr(ex.frontier.iter().map(point_json).collect())),
+        ("chosen",
+         ex.chosen.as_ref().map(point_json).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Write the report to `path` (pretty enough for diffing: one blob,
+/// stable key order from the BTreeMap-backed object).
+pub fn write_report(path: &str, ex: &Exploration, space: &SearchSpace)
+                    -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", report_json(ex, space)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::scnn3;
+    use crate::dse::{self, CostModel};
+
+    #[test]
+    fn report_roundtrips_and_names_the_chosen_point() {
+        let space = dse::SearchSpace::new(scnn3(), 54).with_replicas(2);
+        let model = CostModel::default();
+        let ex = dse::explore(&space, &model);
+        assert!(!ex.frontier.is_empty());
+        let j = report_json(&ex, &space);
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.get("model").and_then(|m| m.as_str()),
+                   Some("scnn3"));
+        let frontier = re.get("frontier").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(frontier.len(), ex.frontier.len());
+        let chosen = re.get("chosen").unwrap();
+        assert!(chosen.get("fits").and_then(|f| f.as_bool()).unwrap());
+        // Factors in the report stay valid for the model.
+        let factors: Vec<usize> = chosen
+            .get("factors")
+            .and_then(|f| f.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        assert!(scnn3().try_with_parallel_factors(&factors).is_ok());
+    }
+
+    #[test]
+    fn report_writes_to_disk() {
+        let space = dse::SearchSpace::new(scnn3(), 36);
+        let ex = dse::explore(&space, &CostModel::default());
+        let path = std::env::temp_dir().join("sti_dse_report_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_report(&path, &ex, &space).unwrap();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(txt.trim()).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

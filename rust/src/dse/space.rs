@@ -1,0 +1,276 @@
+//! Design-space enumeration: the joint space of per-layer parallel
+//! factors, replica counts, and functional compute backends under a
+//! total PE budget.
+//!
+//! Constraints are conv-mode-aware through the layer geometry
+//! (`arch::ConvMode` determines `Kh*Kw`, the PEs one lane costs —
+//! pointwise lanes are 1 PE, standard/depthwise `Kh*Kw`): a factor is
+//! admissible when it is a power of two, divides the layer's `Co`
+//! (whole-lane replication), and the whole design fits the budget.
+//! Replicas split the budget evenly; each replica is a full pipeline
+//! copy (`coordinator::replica`).
+//!
+//! Enumeration is exhaustive (depth-first with suffix-minimum budget
+//! pruning) while the space is small; past `max_candidates` factor
+//! vectors per replica count it falls back to the greedy optimiser's
+//! trajectory (`evaluate::greedy_chain`) — a monotone latency/PE chain
+//! that samples the interesting diagonal of the space.
+
+use std::collections::BTreeSet;
+
+use crate::arch::{ConvLayer, NetworkSpec};
+use crate::dataflow::ConvLatencyParams;
+use crate::sim::BackendKind;
+
+use super::evaluate::greedy_chain;
+
+/// One point of the search space.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Per-accelerated-conv-layer output-channel parallel factors.
+    pub factors: Vec<usize>,
+    /// Pipeline replicas sharing the PE budget.
+    pub replicas: usize,
+    /// Functional compute backend (host-side; bit-exact either way).
+    pub backend: BackendKind,
+}
+
+/// Minimum PEs a single pipeline of `net` needs (all factors 1).
+pub fn min_pes(net: &NetworkSpec) -> usize {
+    net.accel_convs().iter().map(|c| c.kh * c.kw).sum()
+}
+
+/// The search space of one network under one PE budget.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub net: NetworkSpec,
+    /// Total PE budget across all replicas.
+    pub pe_budget: usize,
+    /// Largest replica count to consider (>= 1).
+    pub max_replicas: usize,
+    /// Backends to cross the hardware configurations with.
+    pub backends: Vec<BackendKind>,
+    pub timesteps: usize,
+    /// Cap on exhaustively enumerated factor vectors per replica
+    /// count; beyond it the greedy trajectory samples the space.
+    pub max_candidates: usize,
+}
+
+impl SearchSpace {
+    pub fn new(net: NetworkSpec, pe_budget: usize) -> Self {
+        Self {
+            net,
+            pe_budget,
+            max_replicas: 1,
+            backends: vec![BackendKind::Accurate, BackendKind::WordParallel],
+            timesteps: 1,
+            max_candidates: 2048,
+        }
+    }
+
+    pub fn with_replicas(mut self, max_replicas: usize) -> Self {
+        self.max_replicas = max_replicas.max(1);
+        self
+    }
+
+    pub fn with_backends(mut self, backends: Vec<BackendKind>) -> Self {
+        assert!(!backends.is_empty(), "need at least one backend");
+        self.backends = backends;
+        self
+    }
+
+    pub fn with_timesteps(mut self, timesteps: usize) -> Self {
+        self.timesteps = timesteps.max(1);
+        self
+    }
+
+    pub fn with_max_candidates(mut self, cap: usize) -> Self {
+        self.max_candidates = cap.max(1);
+        self
+    }
+
+    /// Admissible factors for one layer under a per-replica budget:
+    /// powers of two dividing `Co` whose lane cost alone fits.
+    pub fn factor_options(c: &ConvLayer, budget: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut f = 1usize;
+        loop {
+            if f > c.co || c.co % f != 0 || c.kh * c.kw * f > budget {
+                break;
+            }
+            out.push(f);
+            f *= 2;
+        }
+        out
+    }
+
+    /// Enumerate the whole space, deterministically ordered by
+    /// (replicas, factors, backend). `timing` drives the greedy
+    /// fallback when the exhaustive product exceeds `max_candidates`.
+    pub fn enumerate(&self, timing: &ConvLatencyParams) -> Vec<Candidate> {
+        let mut configs: BTreeSet<(usize, Vec<usize>)> = BTreeSet::new();
+        for replicas in 1..=self.max_replicas {
+            let budget = self.pe_budget / replicas;
+            if budget < min_pes(&self.net) {
+                continue; // not even unit factors fit this split
+            }
+            let vecs = exhaustive_factors(&self.net, budget,
+                                          self.max_candidates)
+                .unwrap_or_else(|| greedy_chain(&self.net, budget, timing));
+            for v in vecs {
+                configs.insert((replicas, v));
+            }
+        }
+        let mut out = Vec::new();
+        for (replicas, factors) in configs {
+            for &backend in &self.backends {
+                out.push(Candidate {
+                    factors: factors.clone(),
+                    replicas,
+                    backend,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Exhaustive factor-vector product under a budget, or `None` when it
+/// would exceed `cap` vectors (caller falls back to sampling).
+fn exhaustive_factors(net: &NetworkSpec, budget: usize, cap: usize)
+                      -> Option<Vec<Vec<usize>>> {
+    let convs = net.accel_convs();
+    let opts: Vec<Vec<usize>> = convs
+        .iter()
+        .map(|c| SearchSpace::factor_options(c, budget))
+        .collect();
+    if opts.iter().any(|o| o.is_empty()) {
+        return Some(Vec::new());
+    }
+    // Suffix sums of the minimum (factor 1) PE cost, for pruning.
+    let mut tail = vec![0usize; convs.len() + 1];
+    for i in (0..convs.len()).rev() {
+        tail[i] = tail[i + 1] + convs[i].kh * convs[i].kw;
+    }
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(convs.len());
+    if dfs(&convs, &opts, &tail, budget, cap, 0, 0, &mut cur, &mut out) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(convs: &[&ConvLayer], opts: &[Vec<usize>], tail: &[usize],
+       budget: usize, cap: usize, i: usize, used: usize,
+       cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) -> bool {
+    if i == convs.len() {
+        if out.len() >= cap {
+            return false; // over the cap: abandon exhaustive mode
+        }
+        out.push(cur.clone());
+        return true;
+    }
+    for &f in &opts[i] {
+        let pes = convs[i].kh * convs[i].kw * f;
+        if used + pes + tail[i + 1] > budget {
+            break; // options ascend, so no later f fits either
+        }
+        cur.push(f);
+        let ok = dfs(convs, opts, tail, budget, cap, i + 1, used + pes,
+                     cur, out);
+        cur.pop();
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{scnn3, scnn5, vmobilenet};
+
+    #[test]
+    fn factor_options_divide_co_and_fit_budget() {
+        let c = scnn5().accel_convs()[0].clone(); // Co = 128, 3x3
+        let opts = SearchSpace::factor_options(&c, 99);
+        assert_eq!(opts, vec![1, 2, 4, 8]); // 9*16 = 144 > 99
+        let tiny = SearchSpace::factor_options(&c, 8);
+        assert!(tiny.is_empty()); // one 3x3 lane needs 9 PEs
+    }
+
+    #[test]
+    fn enumerate_respects_budget_and_is_deterministic() {
+        let space = SearchSpace::new(scnn3(), 54).with_replicas(2);
+        let timing = ConvLatencyParams::optimized();
+        let cands = space.enumerate(&timing);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            let net = space
+                .net
+                .clone()
+                .try_with_parallel_factors(&c.factors)
+                .expect("enumerated factors are valid");
+            assert!(net.total_pes() * c.replicas <= 54,
+                    "{c:?} blows the budget");
+        }
+        assert_eq!(cands, space.enumerate(&timing));
+    }
+
+    #[test]
+    fn backends_cross_every_hardware_config() {
+        let space = SearchSpace::new(scnn3(), 36);
+        let cands = space.enumerate(&ConvLatencyParams::optimized());
+        let n_acc = cands
+            .iter()
+            .filter(|c| c.backend == BackendKind::Accurate)
+            .count();
+        assert_eq!(cands.len(), 2 * n_acc);
+    }
+
+    #[test]
+    fn replica_splits_shrink_the_per_copy_budget() {
+        let space = SearchSpace::new(scnn3(), 54).with_replicas(3);
+        let cands = space.enumerate(&ConvLatencyParams::optimized());
+        // 54 / 3 = 18 < 18-PE minimum? scnn3 needs 2 x 9 = 18, so
+        // replicas = 3 is exactly feasible at unit factors only.
+        let r3: Vec<_> =
+            cands.iter().filter(|c| c.replicas == 3).collect();
+        assert!(!r3.is_empty());
+        for c in r3 {
+            assert_eq!(c.factors, vec![1, 1]);
+        }
+    }
+
+    #[test]
+    fn oversized_space_falls_back_to_greedy_chain() {
+        // vMobileNet has 8 accelerated convs — the exhaustive product
+        // explodes, so a tiny cap must trigger the trajectory fallback
+        // and still produce valid, budget-respecting candidates.
+        let net = vmobilenet();
+        let budget = min_pes(&net) * 8;
+        let space = SearchSpace::new(net, budget)
+            .with_max_candidates(4);
+        let timing = ConvLatencyParams::optimized();
+        let cands = space.enumerate(&timing);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            let net = space
+                .net
+                .clone()
+                .try_with_parallel_factors(&c.factors)
+                .expect("fallback factors are valid");
+            assert!(net.total_pes() <= budget);
+        }
+    }
+
+    #[test]
+    fn min_pes_matches_unit_factor_design() {
+        assert_eq!(min_pes(&scnn3()), 18);
+        assert_eq!(min_pes(&scnn5()), 36);
+        assert_eq!(min_pes(&vmobilenet()), 40); // 4 x 9 dw + 4 x 1 pw
+    }
+}

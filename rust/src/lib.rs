@@ -12,6 +12,9 @@
 //!   `accurate` vs bit-plane popcount `word-parallel`, bit-exact).
 //! * [`coordinator`] — streaming layer-wise pipeline, parallel-factor
 //!   scheduler, frame batching, and the N-replica serving pool.
+//! * [`dse`] — design-space exploration: search-space enumeration,
+//!   calibrated analytical evaluation, Pareto frontier + serving
+//!   choice, JSON reporting (`explore` / `serve --auto-tune`).
 //! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts
 //!   (requires the `pjrt` cargo feature; stubs out otherwise).
 //! * [`model`] — artifact loading (net.json + int8 weights).
@@ -24,6 +27,7 @@ pub mod arch;
 pub mod codec;
 pub mod coordinator;
 pub mod dataflow;
+pub mod dse;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -10,8 +10,10 @@
 //!   fig11    — SCNN5 per-layer Vmem + energy, T1 vs T2 (paper Fig. 11)
 //!   fig12    — SCNN5 delay/power/LUT/FF before/after parallelism
 //!   optimize — parallel-factor scheduler for a PE budget
+//!   explore  — design-space exploration (Pareto frontier + report)
 //!   run      — run frames through a model's pipeline (sim)
-//!   serve    — TCP inference server (artifacts required)
+//!   serve    — TCP inference server (artifacts required; --synthetic
+//!              and --auto-tune need none)
 
 use std::time::Duration;
 
@@ -20,6 +22,7 @@ use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::coordinator::scheduler;
 use sti_snn::dataflow::{self, ConvLatencyParams};
+use sti_snn::dse;
 use sti_snn::metrics::PerfRow;
 use sti_snn::model::Artifact;
 use sti_snn::runtime::{artifacts_dir, Runtime};
@@ -41,6 +44,9 @@ fn usage() {
          \x20 fig11    SCNN5 per-layer Vmem + energy, T1 vs T2\n\
          \x20 fig12    SCNN5 delay/power/LUT/FF with parallelism\n\
          \x20 optimize parallel-factor scheduler for a PE budget\n\
+         \x20 explore  design-space exploration: enumerate array\n\
+         \x20          shapes / replicas / backends, print the Pareto\n\
+         \x20          frontier, write a JSON report\n\
          \x20 run      run frames through a model's pipeline (sim)\n\
          \x20 serve    TCP inference server\n\
          \x20 help     this text\n\
@@ -56,6 +62,16 @@ fn usage() {
          \x20                 bit-plane popcount path — bit-exact,\n\
          \x20                 identical cycle/energy reports)\n\
          \n\
+         explore flags:\n\
+         \x20 --pe-budget N        total PE budget across replicas\n\
+         \x20                      (default 8x the unit-factor minimum)\n\
+         \x20 --max-replicas N     largest replica split to consider\n\
+         \x20                      (default 4)\n\
+         \x20 --no-calibrate       skip the simulator calibration probes\n\
+         \x20                      (use the analytical models as-is)\n\
+         \x20 --report PATH        JSON report path (default\n\
+         \x20                      dse_report.json)\n\
+         \n\
          serve flags:\n\
          \x20 --addr HOST:PORT     bind address (default 127.0.0.1:7878)\n\
          \x20 --replicas N         pipeline replicas draining the shared\n\
@@ -64,6 +80,15 @@ fn usage() {
          \x20 --synthetic          serve a random-weight simulator\n\
          \x20                      pipeline (no artifacts / XLA needed);\n\
          \x20                      images are threshold-encoded at 0.5\n\
+         \x20 --auto-tune          run design-space exploration first\n\
+         \x20                      (implies --synthetic) and boot the\n\
+         \x20                      pool from the winning configuration:\n\
+         \x20                      parallel factors, replica count, and\n\
+         \x20                      compute backend (--pe-budget /\n\
+         \x20                      --max-replicas as for explore; an\n\
+         \x20                      explicit --replicas pins the search\n\
+         \x20                      to that split, an explicit --backend\n\
+         \x20                      swaps the host compute path)\n\
          \x20 --max-batch N        queue drain batch size (default 16)\n\
          \x20 --max-wait-ms MS     queue wait for first item (default 5)"
     );
@@ -79,6 +104,7 @@ fn main() {
         Some("fig11") => fig11(&args),
         Some("fig12") => fig12(&args),
         Some("optimize") => optimize(&args),
+        Some("explore") => explore(&args),
         Some("run") => run(&args),
         Some("serve") => serve(&args),
         Some("help") => {
@@ -394,6 +420,58 @@ fn optimize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build a cost model for `net`, calibrated against the simulator
+/// unless the user opted out.
+fn cost_model_for(args: &Args, net: &arch::NetworkSpec, timesteps: usize)
+                  -> dse::CostModel {
+    let mut model = dse::CostModel::default();
+    if !args.has("no-calibrate") {
+        println!("calibrating cost model against the simulator ...");
+        let rate = args.get_f64("rate",
+                                dse::AutoTuneOptions::default().rate);
+        model.calibration = dse::calibrate(net, &model.timing,
+                                           &dse::CalibrationConfig {
+            rate,
+            timesteps,
+            ..Default::default()
+        });
+    }
+    model
+}
+
+fn explore(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("model", "scnn3");
+    let net = arch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let budget = args.get_usize("pe-budget", 8 * dse::min_pes(&net));
+    let max_replicas = args.get_usize("max-replicas", 4);
+    let t = args.get_usize("timesteps", 1);
+    let model = cost_model_for(args, &net, t);
+    let space = dse::SearchSpace::new(net, budget)
+        .with_replicas(max_replicas)
+        .with_timesteps(t);
+    let ex = dse::explore(&space, &model);
+
+    println!("model {} | PE budget {budget} | max replicas \
+              {max_replicas} | T = {t}",
+             space.net.name);
+    println!("{} candidates, {} evaluated, frontier size {}\n",
+             ex.candidates, ex.evaluated, ex.frontier.len());
+    print!("{}", dse::frontier_table(&ex));
+    match &ex.chosen {
+        Some(c) => println!("\nchosen: factors {:?} x{} replica(s), \
+                             backend {}, {:.1} FPS, {:.2} W, fits = {}",
+                            c.candidate.factors, c.candidate.replicas,
+                            c.candidate.backend, c.pool_fps, c.power_w,
+                            c.fits),
+        None => println!("\nno candidate fits the ZCU102 budget"),
+    }
+    let path = args.get_str("report", "dse_report.json").to_string();
+    dse::write_report(&path, &ex, &space)?;
+    println!("report written to {path}");
+    Ok(())
+}
+
 fn run(args: &Args) -> anyhow::Result<()> {
     let net = net_for(args)?;
     let frames = args.get_usize("frames", 4);
@@ -483,21 +561,72 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
     let t = args.get_usize("timesteps", 1);
 
-    if args.has("synthetic") {
+    if args.has("synthetic") || args.has("auto-tune") {
         // Simulator-only serving: no artifacts, no XLA; one pipeline
         // replica per worker thread drains the shared queue.
         let net = arch::by_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
-        let mut backends = Vec::with_capacity(replicas);
-        for _ in 0..replicas {
-            let pipe = Pipeline::random(
-                net.clone(),
-                PipelineConfig {
+        let mut backend_kind = backend_kind;
+        let pipes: Vec<Pipeline> = if args.has("auto-tune") {
+            // DSE picks the serving configuration (the shared
+            // `dse::auto_tune` recipe bench_serve measures). An
+            // explicit --replicas pins the search to that split so
+            // the factors match what actually boots; an explicit
+            // --backend only swaps the host compute path (hardware
+            // metrics are backend-invariant).
+            let defaults = dse::AutoTuneOptions::default();
+            let user_replicas = args.get("replicas").map(|_| replicas);
+            println!("auto-tune: calibrating + exploring ...");
+            let (chosen, ex) =
+                dse::auto_tune(&net, &dse::AutoTuneOptions {
+                    pe_budget: Some(args.get_usize(
+                        "pe-budget", 8 * dse::min_pes(&net))),
+                    max_replicas: user_replicas.unwrap_or_else(|| {
+                        args.get_usize("max-replicas",
+                                       defaults.max_replicas)
+                    }),
                     timesteps: t,
-                    backend: backend_kind,
-                    ..Default::default()
-                },
-            )?;
+                    rate: args.get_f64("rate", defaults.rate),
+                })?;
+            let mut best = match user_replicas {
+                None => chosen,
+                Some(r) => {
+                    let at_r: Vec<_> = ex
+                        .points
+                        .iter()
+                        .filter(|p| p.candidate.replicas == r)
+                        .cloned()
+                        .collect();
+                    dse::pareto::choose(&at_r).ok_or_else(|| {
+                        anyhow::anyhow!("auto-tune: no fitting design \
+                                         point at --replicas {r}")
+                    })?
+                }
+            };
+            if args.get("backend").is_some() {
+                best.candidate.backend = backend_kind;
+            }
+            println!("auto-tune: factors {:?}, {} replica(s), backend \
+                      {} ({:.1} simulated FPS, {:.2} W, {} LUT)",
+                     best.candidate.factors, best.candidate.replicas,
+                     best.candidate.backend, best.pool_fps,
+                     best.power_w, best.resources.lut);
+            backend_kind = best.candidate.backend;
+            dse::build_pool_pipelines(&net, &best, t)?
+        } else {
+            (0..replicas)
+                .map(|_| {
+                    Pipeline::random(net.clone(), PipelineConfig {
+                        timesteps: t,
+                        backend: backend_kind,
+                        ..Default::default()
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
+        let replicas = pipes.len();
+        let mut backends = Vec::with_capacity(replicas);
+        for pipe in pipes {
             let shape = pipe.input_shape();
             backends.push(SynthBackend { pipe, shape });
         }

@@ -1,0 +1,220 @@
+//! Property tests for the `dse` subsystem.
+//!
+//! 1. **Calibration transfer**: on randomly generated `ConvLayer`s,
+//!    calibrated analytical latency/access predictions stay within a
+//!    pinned tolerance of the simulator's cycle/access counters — for
+//!    both the `accurate` and `word-parallel` backends, and at design
+//!    points (parallel factors) the probe never saw.
+//! 2. **Frontier soundness**: the Pareto frontier is actually
+//!    non-dominated, covers every evaluated point, and is
+//!    deterministic.
+//!
+//! proptest is not vendored; same hand-rolled discipline as
+//! `prop_coordinator.rs`: seeded PRNG cases, seed printed on failure.
+
+use sti_snn::arch::{ConvLayer, ConvMode, Layer, NetBuilder, NetworkSpec};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::dse::{self, dominates, CalibrationConfig, CostModel,
+                   SearchSpace};
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::memory::{DataKind, MemLevel};
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+/// Pinned agreement tolerance between calibrated predictions and the
+/// simulator's counters (the counters are architectural, so transfer
+/// across inputs and parallel factors is tight).
+const TOL: f64 = 0.05;
+
+/// Random conv layer with power-of-two channel counts so every
+/// power-of-two parallel factor divides `Co`.
+fn random_layer(rng: &mut Rng) -> ConvLayer {
+    let mode = match rng.below(3) {
+        0 => ConvMode::Standard,
+        1 => ConvMode::Depthwise,
+        _ => ConvMode::Pointwise,
+    };
+    let k = if mode == ConvMode::Pointwise { 1 } else { 3 };
+    let co = 1 << rng.range(2, 4); // 4, 8, or 16
+    let ci = match mode {
+        ConvMode::Depthwise => co,
+        _ => 2 + rng.below(6),
+    };
+    ConvLayer {
+        mode,
+        in_h: 6 + rng.below(6),
+        in_w: 6 + rng.below(6),
+        ci,
+        co,
+        kh: k,
+        kw: k,
+        pad: k / 2,
+        encoder: false,
+        parallel: 1,
+    }
+}
+
+fn rel_err(pred: f64, sim: u64) -> f64 {
+    if sim == 0 {
+        pred.abs() // absolute when the counter is zero
+    } else {
+        (pred - sim as f64).abs() / sim as f64
+    }
+}
+
+#[test]
+fn prop_calibrated_predictions_track_simulator_counters() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let l = random_layer(&mut rng);
+        let net = NetworkSpec {
+            name: "probe".into(),
+            input: (l.in_h, l.in_w, l.ci),
+            layers: vec![Layer::Conv(l.clone())],
+        };
+        let timesteps = 1 + rng.below(2); // 1 or 2 (vmem path)
+        let timing = ConvLatencyParams::optimized();
+        // A design point the probe never saw: a dividing parallel
+        // factor and a fresh input.
+        let mut l2 = l.clone();
+        l2.parallel = 1 << rng.below(3); // 1, 2, or 4 — divides Co
+        let input =
+            SpikeFrame::random(l2.in_h, l2.in_w, l2.ci, 0.3, &mut rng);
+
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            let cal = dse::calibrate(&net, &timing, &CalibrationConfig {
+                timesteps,
+                backends: vec![backend],
+                seed: 5 + seed,
+                ..Default::default()
+            });
+            let w = ConvWeights::random(&l2, 300 + seed);
+            let mut eng = ConvEngine::with_backend(
+                l2.clone(), w, timing, timesteps, backend);
+            let (_, rep) = eng.run_frame(&input, true);
+
+            let ctx = format!(
+                "seed={seed} {:?} ci={} co={} p={} t={timesteps} \
+                 backend={backend}",
+                l2.mode, l2.ci, l2.co, l2.parallel);
+
+            let pred = cal.predict_conv_cycles(&l2, &timing, timesteps);
+            assert!(rel_err(pred, rep.cycles) < TOL,
+                    "{ctx}: cycles pred {pred} sim {}", rep.cycles);
+
+            let a = cal.predict_access(&l2, timesteps, true);
+            let c = &rep.counters;
+            assert!(rel_err(a.input_dram,
+                            c.reads_of(MemLevel::Dram,
+                                       DataKind::InputSpike)) < TOL,
+                    "{ctx}: input@DRAM");
+            let in_bram = c.reads_of(MemLevel::Bram, DataKind::InputSpike)
+                + c.writes_of(MemLevel::Bram, DataKind::InputSpike);
+            assert!(rel_err(a.input_bram, in_bram) < TOL,
+                    "{ctx}: input@BRAM pred {} sim {in_bram}",
+                    a.input_bram);
+            assert!(rel_err(a.weight,
+                            c.reads_of(MemLevel::Bram, DataKind::Weight))
+                    < TOL,
+                    "{ctx}: weights");
+            assert!(rel_err(a.vmem, c.total_of_kind(DataKind::Vmem))
+                    < TOL,
+                    "{ctx}: vmem pred {} sim {}", a.vmem,
+                    c.total_of_kind(DataKind::Vmem));
+            assert!(rel_err(a.output,
+                            c.writes_of(MemLevel::Bram,
+                                        DataKind::OutputSpike)) < TOL,
+                    "{ctx}: outputs");
+        }
+    }
+}
+
+/// Random small net for frontier properties (power-of-two channels so
+/// factor enumeration has depth).
+fn random_net(rng: &mut Rng) -> NetworkSpec {
+    let h = 8 + 4 * rng.below(2); // 8 or 12
+    let co1 = 1 << rng.range(2, 4);
+    let co2 = 1 << rng.range(2, 4);
+    NetBuilder::new("prop-dse", (h, h, 2))
+        .encoder(4, 3)
+        .conv(co1, 3)
+        .pool()
+        .conv(co2, 3)
+        .fc(10)
+        .build()
+}
+
+#[test]
+fn prop_pareto_frontier_is_non_dominated_and_deterministic() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let net = random_net(&mut rng);
+        let budget = dse::min_pes(&net) * (1 + rng.below(6));
+        let space = SearchSpace::new(net, budget)
+            .with_replicas(1 + rng.below(3));
+        let model = CostModel::default();
+        let ex = dse::explore(&space, &model);
+        assert_eq!(ex.candidates, ex.evaluated, "seed={seed}");
+        assert!(!ex.frontier.is_empty(), "seed={seed}");
+
+        // Pairwise non-dominance on the frontier.
+        for (i, a) in ex.frontier.iter().enumerate() {
+            for (j, b) in ex.frontier.iter().enumerate() {
+                if i != j {
+                    assert!(!dominates(&a.objectives(), &b.objectives()),
+                            "seed={seed}: frontier point {i} dominates \
+                             {j}");
+                }
+            }
+        }
+        // Coverage: every evaluated point is equalled or dominated by
+        // some frontier point.
+        for p in &ex.points {
+            let o = p.objectives();
+            assert!(ex.frontier.iter().any(|f| {
+                let fo = f.objectives();
+                fo == o || dominates(&fo, &o)
+            }), "seed={seed}: {:?} uncovered", p.candidate);
+        }
+        // Determinism: a second run reproduces the frontier exactly.
+        let ex2 = dse::explore(&space, &model);
+        assert_eq!(ex.frontier, ex2.frontier, "seed={seed}");
+        assert_eq!(ex.chosen, ex2.chosen, "seed={seed}");
+
+        // The chosen serving point fits and maximises pool throughput.
+        if let Some(chosen) = &ex.chosen {
+            assert!(chosen.fits, "seed={seed}");
+            for p in ex.points.iter().filter(|p| p.fits) {
+                assert!(chosen.pool_fps >= p.pool_fps, "seed={seed}");
+            }
+        }
+    }
+}
+
+/// The scheduler facade and the dse evaluator agree: the greedy
+/// optimum is never beaten (on the latency model) by any enumerated
+/// single-replica candidate under the same budget.
+#[test]
+fn prop_greedy_optimum_on_or_above_enumerated_candidates() {
+    use sti_snn::coordinator::scheduler;
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let net = random_net(&mut rng);
+        let budget = dse::min_pes(&net) * (1 + rng.below(4));
+        let timing = ConvLatencyParams::optimized();
+        let choice = scheduler::optimize_factors(&net, budget, &timing);
+        let model = CostModel::default();
+        let space = SearchSpace::new(net, budget);
+        let ex = dse::explore(&space, &model);
+        let best_enum = ex
+            .points
+            .iter()
+            .filter(|p| p.candidate.replicas == 1)
+            .map(|p| p.t_max_cycles)
+            .fold(f64::INFINITY, f64::min);
+        assert!(choice.t_max as f64 <= best_enum * 1.0001,
+                "seed={seed}: greedy {} vs enumerated best {best_enum}",
+                choice.t_max);
+    }
+}
