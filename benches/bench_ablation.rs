@@ -1,6 +1,9 @@
 //! Ablation bench: the design choices DESIGN.md calls out, measured.
 //!
-//! * OS vs WS dataflow — traffic + cycles on the same layer (SectionII-C).
+//! * OS vs WS dataflow — traffic + cycles on the same layer
+//!   (SectionII-C), both engines driven through the public
+//!   `LayerEngine` trait: the WS baseline exercises the exact code
+//!   path the pipeline runs engines through.
 //! * Line buffer + spike vectors — off-chip input reads vs plain OS
 //!   (Table III's reduction).
 //! * Spike-event encoding vs dense inter-layer transfer (SectionIV-E.1)
@@ -13,6 +16,7 @@ use sti_snn::arch::{scnn5, ConvLayer};
 use sti_snn::codec::{EventCodec, SpikeFrame};
 use sti_snn::dataflow::{self, ConvLatencyParams};
 use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::engine::{LayerEngine, LayerStep};
 use sti_snn::sim::memory::{DataKind, MemLevel};
 use sti_snn::sim::ws_engine::WsEngine;
 use sti_snn::sim::cycles_to_ms;
@@ -23,21 +27,24 @@ fn main() {
     let mut set = BenchSet::new("ablations (design choices)");
 
     // --- OS vs WS on the SCNN5 bottleneck layer ------------------------
+    // Both engines run through the LayerEngine trait — the same
+    // dispatch surface the streaming pipeline uses.
     let l: ConvLayer = scnn5().accel_convs()[0].clone();
     let mut rng = Rng::new(3);
     let input = SpikeFrame::random(l.in_h, l.in_w, l.ci, 0.15, &mut rng);
     let w = ConvWeights::random(&l, 1);
 
-    let mut os = ConvEngine::new(l.clone(), w.clone(),
-                                 ConvLatencyParams::optimized(), 1);
-    let mut os_rep = None;
+    let mut os: Box<dyn LayerEngine> = Box::new(ConvEngine::new(
+        l.clone(), w.clone(), ConvLatencyParams::optimized(), 1));
+    let mut os_rep: Option<LayerStep> = None;
     set.run("OS engine, scnn5 conv2 frame", || {
-        os_rep = Some(os.run_frame(&input, true).1);
+        os_rep = Some(os.process_frame(&input, true).1);
     });
-    let mut ws = WsEngine::new(l.clone(), w, 1);
-    let mut ws_rep = None;
+    let mut ws: Box<dyn LayerEngine> =
+        Box::new(WsEngine::new(l.clone(), w, 1));
+    let mut ws_rep: Option<LayerStep> = None;
     set.run("WS engine, scnn5 conv2 frame", || {
-        ws_rep = Some(ws.run_frame(&input).1);
+        ws_rep = Some(ws.process_frame(&input, true).1);
     });
     let (os_rep, ws_rep) = (os_rep.unwrap(), ws_rep.unwrap());
     println!("\n--- OS vs WS (scnn5 conv2, T=1) ---");

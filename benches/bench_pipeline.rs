@@ -1,11 +1,12 @@
 //! Bench: whole-pipeline runs — Fig. 11 (T1 vs T2) and Fig. 12
-//! (pipelining + parallelism) regeneration.
+//! (pipelining + parallelism) regeneration, constructed through the
+//! `Session` facade.
 //!
 //! `cargo bench --bench bench_pipeline`
 
 use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::session::Session;
 use sti_snn::sim::cycles_to_ms;
 use sti_snn::util::bench::BenchSet;
 use sti_snn::util::rng::Rng;
@@ -23,19 +24,19 @@ fn main() {
 
     // SCNN3 full pipeline, T=1 vs T=2 (Fig. 11's trend at small scale).
     for t in [1usize, 2] {
-        let mut pipe = Pipeline::random(
-            arch::scnn3(),
-            PipelineConfig { timesteps: t, ..Default::default() },
-        )
-        .unwrap();
-        let f = frames(pipe.input_shape(), 1);
+        let mut session = Session::builder()
+            .network(arch::scnn3())
+            .timesteps(t)
+            .build()
+            .unwrap();
+        let f = frames(session.input_shape(), 1);
         let mut vmem_kb = 0.0;
         let mut uj = 0.0;
         set.run(&format!("scnn3 frame, T={t}"), || {
-            let rep = pipe.run(&f);
+            let rep = session.infer_batch(&f);
             vmem_kb = rep.layer_vmem_bytes.iter().sum::<usize>() as f64
                 / 1024.0;
-            uj = rep.dynamic_energy_per_frame_j() * 1e6;
+            uj = rep.energy_per_frame_j * 1e6;
         });
         println!("    -> Vmem {vmem_kb:.1} KB, dyn energy {uj:.1} uJ/frame");
     }
@@ -45,15 +46,18 @@ fn main() {
         ("scnn5 unpipelined", arch::scnn5(), false),
         ("scnn5 pipelined", arch::scnn5(), true),
         ("scnn5 parallel(4,4,2,1)",
-         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1]), true),
+         arch::scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(),
+         true),
     ] {
-        let mut pipe = Pipeline::random(
-            net, PipelineConfig { pipelined, ..Default::default() })
+        let mut session = Session::builder()
+            .network(net)
+            .pipelined(pipelined)
+            .build()
             .unwrap();
-        let f = frames(pipe.input_shape(), 1);
+        let f = frames(session.input_shape(), 1);
         let mut modelled_ms = 0.0;
         set.run(name, || {
-            let rep = pipe.run(&f);
+            let rep = session.infer_batch(&f);
             modelled_ms = if pipelined {
                 cycles_to_ms(rep.t_max)
             } else {

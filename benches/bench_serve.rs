@@ -2,36 +2,19 @@
 //! replica pool at N = 1 vs N = host-scaled replicas, the combined
 //! word-parallel x replica speedup, and the DSE auto-tuned
 //! configuration (what `serve --auto-tune` boots) against the serve
-//! defaults.
-//!
-//! The pool replicates the whole accelerator pipeline per worker
-//! thread (coordinator::replica), so request throughput scales with
-//! host cores while results stay bit-identical to one pipeline.
+//! defaults. Every pool is constructed through the `Session` facade —
+//! the exact stack the CLI serves.
 //!
 //! `cargo bench --bench bench_serve`
 
 use std::time::{Duration, Instant};
 
-use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
-use sti_snn::coordinator::replica::ReplicaPool;
-use sti_snn::dse::{self, AutoTuneOptions};
+use sti_snn::dse::AutoTuneOptions;
+use sti_snn::session::{Session, SessionBuilder};
 use sti_snn::sim::BackendKind;
 use sti_snn::util::bench::{fmt_ns, smoke_mode, BenchResult, BenchSet};
 use sti_snn::util::rng::Rng;
-
-fn pipelines(n: usize, backend: BackendKind) -> Vec<Pipeline> {
-    (0..n)
-        .map(|_| {
-            Pipeline::random(
-                arch::scnn3(),
-                PipelineConfig { backend, ..Default::default() },
-            )
-            .unwrap()
-        })
-        .collect()
-}
 
 fn frames(n: usize) -> Vec<SpikeFrame> {
     let mut rng = Rng::new(42);
@@ -40,27 +23,33 @@ fn frames(n: usize) -> Vec<SpikeFrame> {
         .collect()
 }
 
-/// Push every frame through a pool built from `pipes`; returns
-/// (requests/s, per-request mean ns) and the predictions for
+/// Build the session, push every frame through its replica pool;
+/// returns (requests/s, per-request mean ns) and the predictions for
 /// cross-checking.
-fn pool_run_pipes(pipes: Vec<Pipeline>, fs: &[SpikeFrame])
-                  -> (f64, f64, Vec<usize>) {
-    let pool = ReplicaPool::new(pipes, 4, Duration::from_millis(2));
+fn pool_run(builder: SessionBuilder, fs: &[SpikeFrame])
+            -> (f64, f64, Vec<usize>, Session) {
+    let mut session = builder.build().expect("session builds");
+    session.start_pool().expect("pool starts");
     let t0 = Instant::now();
-    let rxs: Vec<_> = fs.iter().map(|f| pool.submit(f.clone())).collect();
+    let rxs: Vec<_> = fs
+        .iter()
+        .map(|f| session.submit(f.clone()).unwrap())
+        .collect();
     let preds: Vec<usize> = rxs
         .into_iter()
         .map(|rx| rx.recv().unwrap().prediction.unwrap())
         .collect();
     let dt = t0.elapsed();
-    pool.shutdown();
     let rps = fs.len() as f64 / dt.as_secs_f64();
-    (rps, dt.as_nanos() as f64 / fs.len() as f64, preds)
+    (rps, dt.as_nanos() as f64 / fs.len() as f64, preds, session)
 }
 
-fn pool_run(replicas: usize, fs: &[SpikeFrame], backend: BackendKind)
-            -> (f64, f64, Vec<usize>) {
-    pool_run_pipes(pipelines(replicas, backend), fs)
+fn builder(replicas: usize, backend: BackendKind) -> SessionBuilder {
+    Session::builder()
+        .model("scnn3")
+        .backend(backend)
+        .replicas(replicas)
+        .queue(4, Duration::from_millis(2))
 }
 
 fn main() {
@@ -74,8 +63,9 @@ fn main() {
         "replica-pool serving (scnn3, word-parallel backend)");
     let fs = frames(n_requests);
 
-    let (rps1, ns1, preds1) =
-        pool_run(1, &fs, BackendKind::WordParallel);
+    let (rps1, ns1, preds1, s) =
+        pool_run(builder(1, BackendKind::WordParallel), &fs);
+    s.shutdown();
     set.add(BenchResult {
         name: "pool N=1".into(),
         iters: n_requests,
@@ -85,8 +75,9 @@ fn main() {
     });
     println!("pool N=1: {rps1:.1} req/s ({}/req)", fmt_ns(ns1));
 
-    let (rps_n, ns_n, preds_n) =
-        pool_run(big, &fs, BackendKind::WordParallel);
+    let (rps_n, ns_n, preds_n, s) =
+        pool_run(builder(big, BackendKind::WordParallel), &fs);
+    s.shutdown();
     set.add(BenchResult {
         name: format!("pool N={big}"),
         iters: n_requests,
@@ -101,8 +92,9 @@ fn main() {
 
     // Reference: the accurate backend at N=1, to show the combined
     // word-parallel + replica win end to end.
-    let (rps_acc, ns_acc, preds_acc) =
-        pool_run(1, &fs, BackendKind::Accurate);
+    let (rps_acc, ns_acc, preds_acc, s) =
+        pool_run(builder(1, BackendKind::Accurate), &fs);
+    s.shutdown();
     set.add(BenchResult {
         name: "pool N=1 [accurate]".into(),
         iters: n_requests,
@@ -117,18 +109,20 @@ fn main() {
               {:.2}x over accurate x 1", rps_n / rps_acc);
 
     // DSE auto-tuned configuration — the exact `serve --auto-tune`
-    // recipe (shared `dse::auto_tune` + `dse::build_pool_pipelines`,
-    // same defaults) — vs the serve defaults measured above (1
-    // replica, accurate backend, unit factors).
-    let net = arch::scnn3();
-    let (best, _) = dse::auto_tune(&net, &AutoTuneOptions {
-        max_replicas: big,
-        ..Default::default()
-    })
-    .expect("dse found no feasible serving point");
-    let tuned = dse::build_pool_pipelines(&net, &best, 1)
-        .expect("chosen factors are valid");
-    let (rps_tuned, ns_tuned, preds_tuned) = pool_run_pipes(tuned, &fs);
+    // recipe (Session::builder().auto_tune(..), same defaults) — vs
+    // the serve defaults measured above (1 replica, accurate backend,
+    // unit factors).
+    let tuned_builder = Session::builder()
+        .model("scnn3")
+        .auto_tune(AutoTuneOptions {
+            max_replicas: big,
+            ..Default::default()
+        })
+        .queue(4, Duration::from_millis(2));
+    let (rps_tuned, ns_tuned, preds_tuned, s) =
+        pool_run(tuned_builder, &fs);
+    let best = s.tuned().expect("auto-tuned session").clone();
+    s.shutdown();
     set.add(BenchResult {
         name: format!("pool auto-tuned ({:?} x{} {})",
                       best.candidate.factors, best.candidate.replicas,

@@ -1,47 +1,41 @@
 //! Bench: Table IV regeneration — all five "Ours" design points with
-//! FPS / GOPS / W / GOPS/W / GOPS/W/PE, printed paper-style.
+//! FPS / GOPS / W / GOPS/W / GOPS/W/PE, printed paper-style, built
+//! through the `Session` facade.
 //!
 //! `cargo bench --bench bench_table4`
 
 use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::metrics::PerfRow;
-use sti_snn::sim::{EnergyModel, CLK_HZ};
+use sti_snn::session::Session;
 use sti_snn::util::bench::BenchSet;
 use sti_snn::util::rng::Rng;
 
 fn main() {
     let mut set = BenchSet::new("Table IV design points");
-    let energy = EnergyModel::default();
 
     let points: Vec<(&str, arch::NetworkSpec)> = vec![
         ("Ours-1 SCNN3", arch::scnn3()),
-        ("Ours-2 SCNN3 (4,2)", arch::scnn3().with_parallel_factors(&[4, 2])),
+        ("Ours-2 SCNN3 (4,2)",
+         arch::scnn3().try_with_parallel_factors(&[4, 2]).unwrap()),
         ("Ours-3 SCNN5", arch::scnn5()),
         ("Ours-4 SCNN5 (4,4,2,1)",
-         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1])),
+         arch::scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap()),
         ("Ours-5 vMobileNet", arch::vmobilenet()),
     ];
 
     let mut rows = Vec::new();
     for (name, net) in points {
-        let ops = net.ops_per_frame();
-        let mut pipe =
-            Pipeline::random(net, PipelineConfig::default()).unwrap();
-        let shape = pipe.input_shape();
+        let mut session =
+            Session::builder().network(net).build().unwrap();
+        let shape = session.input_shape();
         let mut rng = Rng::new(7);
         let f = vec![SpikeFrame::random(shape.0, shape.1, shape.2, 0.15,
                                         &mut rng)];
         let mut row = None;
         set.run(name, || {
-            let rep = pipe.run(&f);
-            let fps = CLK_HZ / rep.t_max as f64;
-            let power = energy.avg_power(rep.dynamic_energy_per_frame_j(),
-                                         fps, rep.pes,
-                                         rep.resources.bram36);
-            row = Some(PerfRow::new(name, rep.t_max as f64, ops, power,
-                                    rep.pes));
+            let rep = session.infer_batch(&f);
+            row = Some(rep.perf_row(name));
         });
         rows.push(row.unwrap());
     }

@@ -9,7 +9,7 @@
 
 use sti_snn::arch::{self, NetBuilder};
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::session::Session;
 use sti_snn::sim::cycles_to_ms;
 use sti_snn::util::rng::Rng;
 
@@ -36,17 +36,17 @@ fn main() -> anyhow::Result<()> {
         let mops = net.ops_per_frame() as f64 / 1e6;
         let wkb = net.weight_bytes() as f64 / 1024.0;
         let pes = net.total_pes();
-        let mut pipe = Pipeline::random(net, PipelineConfig::default())?;
-        let shape = pipe.input_shape();
+        let mut session = Session::builder().network(net).build()?;
+        let shape = session.input_shape();
         let mut rng = Rng::new(3);
         let frames: Vec<SpikeFrame> = (0..2)
             .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
                                         &mut rng))
             .collect();
-        let rep = pipe.run(&frames);
+        let rep = session.infer_batch(&frames);
         println!("{:<16} {:>12.2} {:>12.1} {:>12.3} {:>12.1} {:>12}",
                  name, mops, wkb, cycles_to_ms(rep.t_max),
-                 rep.dynamic_energy_per_frame_j() * 1e6, pes);
+                 rep.energy_per_frame_j * 1e6, pes);
     }
 
     println!("\nDSC wins on parameters + ops; the multi-mode PE array \

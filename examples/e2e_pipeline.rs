@@ -20,11 +20,10 @@
 //! make artifacts && cargo run --release --example e2e_pipeline
 //! ```
 
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::metrics::PerfRow;
 use sti_snn::model::Artifact;
 use sti_snn::runtime::{artifacts_dir, Runtime};
-use sti_snn::sim::{EnergyModel, CLK_HZ};
+use sti_snn::session::{Session, Weights};
 use sti_snn::util::cli::Args;
 use sti_snn::util::rng::Rng;
 
@@ -119,8 +118,10 @@ fn main() -> anyhow::Result<()> {
     println!("PJRT platform: {} | encoder + full-model HLO compiled",
              rt.platform());
 
-    let mut pipe = Pipeline::new(art.net.clone(), PipelineConfig::default(),
-                                 art.layer_params()?)?;
+    let mut session = Session::builder()
+        .weights(Weights::Artifact(dir.clone()))
+        .timesteps(1)
+        .build()?;
     let enc_shape = art.encoder_out_shape();
 
     // --- 2. Held-out synthetic test set --------------------------------
@@ -139,7 +140,7 @@ fn main() -> anyhow::Result<()> {
     let mut last_rep = None;
     for (label, image) in &samples {
         let frame = rt.encode("encoder", image, enc_shape)?;
-        let rep = pipe.run(std::slice::from_ref(&frame));
+        let rep = session.infer_batch(std::slice::from_ref(&frame));
         let sim_class = rep.predictions[0];
 
         let logits = rt.logits("model", image)?;
@@ -167,12 +168,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 4. Table-IV row for this design point --------------------------
     let rep = last_rep.expect("at least one sample");
-    let fps = CLK_HZ / rep.t_max as f64;
-    let power = EnergyModel::default().avg_power(
-        rep.dynamic_energy_per_frame_j(), fps, rep.pes,
-        rep.resources.bram36);
-    let row = PerfRow::new(&format!("e2e {model}"), rep.t_max as f64,
-                           art.net.ops_per_frame(), power, rep.pes.max(1));
+    let row = rep.perf_row(&format!("e2e {model}"));
     println!("\n{}", PerfRow::header());
     println!("{row}");
     Ok(())

@@ -1,5 +1,6 @@
-//! Quickstart: build the SCNN3 accelerator, run synthetic spike frames
-//! through the layer-wise pipeline, print throughput + energy.
+//! Quickstart: build the SCNN3 accelerator through the `Session`
+//! facade, run synthetic spike frames through the layer-wise pipeline,
+//! print throughput + energy from the unified report.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,32 +9,35 @@
 //! No artifacts needed — weights are deterministic-random (cycle and
 //! traffic counts are weight-independent; see DESIGN.md).
 
-use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
-use sti_snn::sim::{cycles_to_ms, EnergyModel, CLK_HZ};
+use sti_snn::session::{Session, Weights};
+use sti_snn::sim::cycles_to_ms;
 use sti_snn::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Pick a network and a design point (paper SCNN3 at factors (4,2)).
-    let net = arch::scnn3().with_parallel_factors(&[4, 2]);
+    // 1. One builder for the whole stack: network, design point
+    //    (paper SCNN3 at factors (4,2)), weights, backend.
+    let mut session = Session::builder()
+        .model("scnn3")
+        .parallel_factors(&[4, 2])
+        .weights(Weights::Random { seed: 1000 })
+        .build()?;
     println!("network: {} | {} PEs | {:.2} MOPs/frame",
-             net.name, net.total_pes(),
-             net.ops_per_frame() as f64 / 1e6);
+             session.net().name, session.net().total_pes(),
+             session.net().ops_per_frame() as f64 / 1e6);
 
-    // 2. Build the streaming pipeline (one engine per layer, T = 1).
-    let mut pipe = Pipeline::random(net, PipelineConfig::default())?;
-
-    // 3. Feed 8 synthetic post-encoder spike frames at ~20% firing rate.
-    let shape = pipe.input_shape();
+    // 2. Feed 8 synthetic post-encoder spike frames at ~20% firing
+    //    rate.
+    let shape = session.input_shape();
     let mut rng = Rng::new(42);
     let frames: Vec<SpikeFrame> = (0..8)
         .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
                                     &mut rng))
         .collect();
-    let rep = pipe.run(&frames);
+    let rep = session.infer_batch(&frames);
 
-    // 4. Report.
+    // 3. Report — cycles, energy, power, and throughput come from the
+    //    one unified `session::Report`.
     println!("\nper-layer cycles (frame 0):");
     for (name, cycles) in rep.layer_names.iter().zip(&rep.layer_cycles) {
         println!("  {name:<22} {cycles:>10} ({:.3} ms)",
@@ -41,14 +45,12 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\npipeline interval (T_max): {} cycles = {:.3} ms",
              rep.t_max, cycles_to_ms(rep.t_max));
-    println!("steady-state throughput:   {:.0} FPS",
-             CLK_HZ / rep.t_max as f64);
+    println!("steady-state throughput:   {:.0} FPS", rep.fps_steady);
     println!("dynamic energy:            {:.1} uJ/frame",
-             rep.dynamic_energy_per_frame_j() * 1e6);
-    let power = EnergyModel::default().avg_power(
-        rep.dynamic_energy_per_frame_j(), CLK_HZ / rep.t_max as f64,
-        rep.pes, rep.resources.bram36);
-    println!("average power:             {power:.2} W");
+             rep.energy_per_frame_j * 1e6);
+    println!("average power:             {:.2} W", rep.power_w);
+    println!("efficiency:                {:.2} GOPS/W ({:.3} GOPS/W/PE)",
+             rep.gops_per_w, rep.gops_per_w_per_pe);
     println!("predictions:               {:?}", rep.predictions);
     Ok(())
 }

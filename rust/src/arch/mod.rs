@@ -170,16 +170,6 @@ impl NetworkSpec {
             .collect()
     }
 
-    /// Assign per-conv-layer parallel factors (encoder excluded).
-    /// Panics on invalid input — see [`Self::try_with_parallel_factors`]
-    /// for the validating, error-returning variant.
-    pub fn with_parallel_factors(self, factors: &[usize]) -> Self {
-        match self.try_with_parallel_factors(factors) {
-            Ok(net) => net,
-            Err(e) => panic!("invalid parallel factors: {e}"),
-        }
-    }
-
     /// Validating parallel-factor assignment. A factor is rejected when
     /// it is zero, exceeds the layer's `Co`, or does not divide `Co`
     /// (the RTL replicates whole output-channel lanes, so `Co` must
@@ -519,9 +509,9 @@ mod tests {
     /// (4,4,2,1)), 40 (vMobileNet, no parallelism).
     #[test]
     fn pe_counts_match_paper_table5() {
-        let s3 = scnn3().with_parallel_factors(&[4, 2]);
+        let s3 = scnn3().try_with_parallel_factors(&[4, 2]).unwrap();
         assert_eq!(s3.total_pes(), 54); // 9*4 + 9*2
-        let s5 = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let s5 = scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap();
         assert_eq!(s5.total_pes(), 99); // 9*(4+4+2+1)
         let vm = vmobilenet();
         // 4 dw blocks (9 PEs each) + 4 pw blocks (1 PE each) = 40.
@@ -545,23 +535,21 @@ mod tests {
 
     #[test]
     fn parallel_factor_assignment() {
-        let n = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let n = scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap();
         let factors: Vec<_> =
             n.accel_convs().iter().map(|c| c.parallel).collect();
         assert_eq!(factors, vec![4, 4, 2, 1]);
     }
 
     #[test]
-    #[should_panic]
-    fn wrong_factor_count_panics() {
-        let _ = scnn5().with_parallel_factors(&[4, 4]);
+    fn wrong_factor_count_is_an_error() {
+        assert!(scnn5().try_with_parallel_factors(&[4, 4]).is_err());
     }
 
     #[test]
-    #[should_panic]
-    fn non_dividing_factor_panics() {
+    fn non_dividing_factor_is_an_error() {
         // scnn3 convs have Co = 32; 3 does not divide 32.
-        let _ = scnn3().with_parallel_factors(&[3, 2]);
+        assert!(scnn3().try_with_parallel_factors(&[3, 2]).is_err());
     }
 
     #[test]
@@ -583,7 +571,7 @@ mod tests {
 
     #[test]
     fn check_pe_budget_enforced() {
-        let net = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let net = scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap();
         assert!(net.check_pe_budget(99).is_ok());
         assert!(net.check_pe_budget(98).is_err());
     }

@@ -1,11 +1,14 @@
 //! Streaming coordinator: the layer-wise pipelined architecture
 //! (paper SectionIV-E) built from per-layer engines.
 //!
-//! * [`pipeline`] — constructs one engine per layer, connects them with
-//!   inter-layer FIFOs + the spike-event codec, runs frames through the
-//!   pipeline with Eq. (10)/(11) cycle accounting, and aggregates the
-//!   energy / traffic / resource reports that the Table IV / Fig. 11 /
-//!   Fig. 12 experiments consume.
+//! * [`pipeline`] — composes one boxed
+//!   [`LayerEngine`](crate::sim::engine::LayerEngine) per layer,
+//!   connects them with inter-layer FIFOs + the spike-event codec,
+//!   runs frames through the pipeline with Eq. (10)/(11) cycle
+//!   accounting, and aggregates the energy / traffic / resource
+//!   reports that the Table IV / Fig. 11 / Fig. 12 experiments
+//!   consume. Construct pipelines through the
+//!   `sti_snn::session::Session` facade.
 //! * [`scheduler`] — the output-channel parallel-factor optimiser:
 //!   given a PE budget, pick per-layer factors that minimise the
 //!   pipeline interval (the latency model drives the search).

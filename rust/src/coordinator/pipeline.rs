@@ -15,23 +15,12 @@ use crate::arch::{Layer, NetworkSpec};
 use crate::codec::{EventCodec, SpikeFrame};
 use crate::dataflow::ConvLatencyParams;
 use crate::sim::backend::BackendKind;
-use crate::sim::conv_engine::{ConvEngine, ConvWeights};
 use crate::sim::energy::{EnergyModel, EnergyReport};
-use crate::sim::fc_engine::FcEngine;
+use crate::sim::engine::{build_engines, random_sources, EngineConfig,
+                         LayerEngine, LayerOutput, LayerWeights};
 use crate::sim::memory::AccessCounter;
-use crate::sim::pool_engine::PoolEngine;
 use crate::sim::resources::{ResourceModel, ResourceReport};
 use crate::sim::{cycles_to_ms, CLK_HZ};
-
-/// Per-layer weight source for pipeline construction.
-pub enum LayerParams {
-    /// Deterministic random weights (hardware-only experiments — cycle
-    /// and traffic counts are weight-independent).
-    Random { seed: u64 },
-    /// Real quantised weights from `artifacts/` (e2e accuracy runs).
-    Conv(ConvWeights),
-    Fc { weights: Vec<i8>, scale: f32, bias: Vec<f32> },
-}
 
 /// Pipeline construction options.
 #[derive(Clone)]
@@ -58,12 +47,6 @@ impl Default for PipelineConfig {
             backend: BackendKind::Accurate,
         }
     }
-}
-
-enum Engine {
-    Conv(ConvEngine),
-    Pool(PoolEngine),
-    Fc(FcEngine),
 }
 
 /// Aggregated results of running N frames through the pipeline.
@@ -124,96 +107,47 @@ impl PipelineReport {
     }
 }
 
-/// The streaming pipeline.
+/// The streaming pipeline: one boxed [`LayerEngine`] per accelerated
+/// layer, composed through the trait — new layer kinds are one impl
+/// (`sim::engine`), not a coordinator edit.
 pub struct Pipeline {
     pub net: NetworkSpec,
     pub config: PipelineConfig,
-    engines: Vec<Engine>,
+    engines: Vec<Box<dyn LayerEngine>>,
     codecs: Vec<Option<EventCodec>>,
 }
 
 impl Pipeline {
-    /// Build engines for every accelerated layer. `params` supplies
+    /// Build engines for every accelerated layer. `sources` supplies
     /// weights per *conv/fc* layer in order (pool layers take none).
+    ///
+    /// Prefer constructing through `sti_snn::session::Session` — this
+    /// constructor is the facade's internal building block, kept
+    /// public for tests and custom engine wiring.
     pub fn new(net: NetworkSpec, config: PipelineConfig,
-               mut params: Vec<LayerParams>) -> anyhow::Result<Self> {
-        let mut engines = Vec::new();
-        let mut codecs = Vec::new();
-        params.reverse(); // pop from the front
-        for layer in &net.layers {
-            match layer {
-                Layer::Conv(c) if c.encoder => {
-                    // Encoder runs off-accelerator (host / L2 artifact).
-                    continue;
-                }
-                Layer::Conv(c) => {
-                    let p = params.pop().ok_or_else(|| {
-                        anyhow::anyhow!("missing params for conv layer")
-                    })?;
-                    let w = match p {
-                        LayerParams::Random { seed } => {
-                            ConvWeights::random(c, seed)
-                        }
-                        LayerParams::Conv(w) => w,
-                        LayerParams::Fc { .. } => {
-                            anyhow::bail!("expected conv params, got fc")
-                        }
-                    };
-                    engines.push(Engine::Conv(ConvEngine::with_backend(
-                        c.clone(), w, config.timing, config.timesteps,
-                        config.backend)));
-                    let (h, wdt, ch) = (c.in_h, c.in_w, c.ci);
-                    codecs.push(Some(EventCodec::new(h, wdt, ch)));
-                }
-                Layer::Pool { in_h, in_w, c } => {
-                    engines.push(Engine::Pool(PoolEngine::new(
-                        *in_h, *in_w, *c)));
-                    codecs.push(None);
-                }
-                Layer::Fc { n_in, n_out } => {
-                    let p = params.pop().ok_or_else(|| {
-                        anyhow::anyhow!("missing params for fc layer")
-                    })?;
-                    let eng = match p {
-                        LayerParams::Random { seed } => {
-                            FcEngine::random(*n_in, *n_out, seed)
-                        }
-                        LayerParams::Fc { weights, scale, bias } => {
-                            FcEngine::new(*n_in, *n_out, weights, scale,
-                                          bias)
-                        }
-                        LayerParams::Conv(_) => {
-                            anyhow::bail!("expected fc params, got conv")
-                        }
-                    };
-                    engines.push(Engine::Fc(
-                        eng.with_backend(config.backend)));
-                    codecs.push(None);
-                }
-            }
-        }
-        if !params.is_empty() {
-            anyhow::bail!("{} unused layer params", params.len());
-        }
-        Ok(Self { net, config, engines, codecs })
+               sources: Vec<LayerWeights>) -> anyhow::Result<Self> {
+        let cfg = EngineConfig {
+            timing: config.timing,
+            timesteps: config.timesteps,
+            backend: config.backend,
+        };
+        let engines = build_engines(&net, &cfg, sources)?;
+        Ok(Self::from_engines(net, config, engines))
+    }
+
+    /// Assemble a pipeline from pre-built engines (the trait-level
+    /// constructor: any [`LayerEngine`] impls, in layer order).
+    pub fn from_engines(net: NetworkSpec, config: PipelineConfig,
+                        engines: Vec<Box<dyn LayerEngine>>) -> Self {
+        let codecs = engines.iter().map(|e| e.event_codec()).collect();
+        Self { net, config, engines, codecs }
     }
 
     /// Convenience: random weights everywhere (hardware experiments).
     pub fn random(net: NetworkSpec, config: PipelineConfig)
                   -> anyhow::Result<Self> {
-        let n: usize = net
-            .layers
-            .iter()
-            .filter(|l| match l {
-                Layer::Conv(c) => !c.encoder,
-                Layer::Pool { .. } => false,
-                Layer::Fc { .. } => true,
-            })
-            .count();
-        let params =
-            (0..n).map(|i| LayerParams::Random { seed: 1000 + i as u64 })
-                  .collect();
-        Self::new(net, config, params)
+        let sources = random_sources(&net, 1000);
+        Self::new(net, config, sources)
     }
 
     /// Run a batch of (already spike-encoded) frames.
@@ -223,7 +157,6 @@ impl Pipeline {
     /// (from the PJRT runtime or a synthetic generator).
     pub fn run(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
         assert!(!frames.is_empty(), "empty batch");
-        let t = self.config.timesteps;
         let mut layer_cycles = vec![0u64; self.engines.len()];
         let mut layer_names = vec![String::new(); self.engines.len()];
         let mut layer_energy = vec![EnergyReport::default();
@@ -238,63 +171,32 @@ impl Pipeline {
         for (fi, frame) in frames.iter().enumerate() {
             let mut act = frame.clone();
             for (li, eng) in self.engines.iter_mut().enumerate() {
-                match eng {
-                    Engine::Conv(ce) => {
-                        layer_names[li] = format!(
-                            "conv{li}:{:?}", ce.layer.mode);
-                        // Inter-layer event stream accounting (first
-                        // frame only — ratios are representative).
-                        if fi == 0 {
-                            if let Some(codec) = &self.codecs[li] {
-                                let (_, stats) = codec.encode(&act);
-                                codec_ratios.push(stats.ratio());
-                            }
-                        }
-                        let off_chip = li == 0;
-                        let (out, rep) = ce.run_frame(&act, off_chip);
-                        if fi == 0 {
-                            layer_cycles[li] = rep.cycles;
-                            layer_energy[li] = self
-                                .config
-                                .energy
-                                .dynamic(rep.ops, &rep.counters);
-                            layer_vmem[li] = ce.vmem_bytes();
-                        }
-                        ops_total += rep.ops;
-                        counters.merge(&rep.counters);
-                        act = out;
+                if fi == 0 {
+                    layer_names[li] = format!("{}{li}{}", eng.kind(),
+                                              eng.label_detail());
+                    // Inter-layer event stream accounting (first frame
+                    // only — ratios are representative).
+                    if let Some(codec) = &self.codecs[li] {
+                        let (_, stats) = codec.encode(&act);
+                        codec_ratios.push(stats.ratio());
                     }
-                    Engine::Pool(pe) => {
-                        layer_names[li] = format!("pool{li}");
-                        let (out, rep) = pe.run(&act);
-                        if fi == 0 {
-                            layer_cycles[li] = rep.cycles * t as u64;
-                            layer_energy[li] = self
-                                .config
-                                .energy
-                                .dynamic(0, &rep.counters);
-                        }
-                        counters.merge(&rep.counters);
-                        act = out;
-                    }
-                    Engine::Fc(fc) => {
-                        layer_names[li] = format!("fc{li}");
-                        let flat = FcEngine::flatten(&act);
-                        // At T > 1 the same final spike map replays per
-                        // timestep (upstream already accumulated).
-                        let reps: Vec<Vec<bool>> =
-                            (0..t).map(|_| flat.clone()).collect();
-                        let (cls, logits, rep) = fc.classify_full(&reps);
-                        if fi == 0 {
-                            layer_cycles[li] = rep.cycles;
-                            layer_energy[li] = self
-                                .config
-                                .energy
-                                .dynamic(rep.ops, &rep.counters);
-                        }
-                        ops_total += rep.ops;
-                        counters.merge(&rep.counters);
-                        predictions.push(cls);
+                }
+                let off_chip = li == 0;
+                let (out, step) = eng.process_frame(&act, off_chip);
+                if fi == 0 {
+                    layer_cycles[li] = step.cycles;
+                    layer_energy[li] = self
+                        .config
+                        .energy
+                        .dynamic(step.ops, &step.counters);
+                    layer_vmem[li] = eng.vmem_bytes();
+                }
+                ops_total += step.ops;
+                counters.merge(&step.counters);
+                match out {
+                    LayerOutput::Frame(f) => act = f,
+                    LayerOutput::Classified { class, logits } => {
+                        predictions.push(class);
                         logits_all.push(logits);
                     }
                 }
@@ -463,7 +365,7 @@ mod tests {
         let f = frames(base.input_shape(), 1, 0.15);
         let r_base = base.run(&f);
         let mut par = Pipeline::random(
-            scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(),
             PipelineConfig::default(),
         )
         .unwrap();

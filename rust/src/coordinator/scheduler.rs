@@ -36,9 +36,12 @@ pub fn budget_sweep(net: &NetworkSpec, budgets: &[usize],
     evaluate::budget_sweep(net, budgets, timing)
 }
 
-/// Apply a schedule to a network spec.
-pub fn apply(net: NetworkSpec, choice: &ScheduleChoice) -> NetworkSpec {
-    net.with_parallel_factors(&choice.factors)
+/// Apply a schedule to a network spec. Errors if the schedule's
+/// factors do not validate against the spec (e.g. a schedule computed
+/// for a different network).
+pub fn apply(net: NetworkSpec, choice: &ScheduleChoice)
+             -> anyhow::Result<NetworkSpec> {
+    net.try_with_parallel_factors(&choice.factors)
 }
 
 #[cfg(test)]
@@ -55,7 +58,7 @@ mod tests {
         let choice = optimize_factors(&net, 99, &timing);
         assert!(choice.pes <= 99);
         let hand = crate::dataflow::pipeline_latency(
-            &scnn5().with_parallel_factors(&[4, 4, 2, 1]), &timing, 1);
+            &scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(), &timing, 1);
         assert!(choice.t_max <= hand.t_max,
                 "optimizer {} vs hand {}", choice.t_max, hand.t_max);
         assert!(choice.speedup() > 3.0);
@@ -68,7 +71,7 @@ mod tests {
         assert!(choice.pes <= 54);
         // Paper's (4,2) gives 54 PEs; ours must do at least as well.
         let hand = crate::dataflow::pipeline_latency(
-            &scnn3().with_parallel_factors(&[4, 2]),
+            &scnn3().try_with_parallel_factors(&[4, 2]).unwrap(),
             &ConvLatencyParams::optimized(), 1);
         assert!(choice.t_max <= hand.t_max);
     }
@@ -130,7 +133,7 @@ mod tests {
         let net = scnn5();
         let timing = ConvLatencyParams::optimized();
         let choice = optimize_factors(&net, 99, &timing);
-        let a = apply(net.clone(), &choice);
+        let a = apply(net.clone(), &choice).unwrap();
         let b = net.clone().try_with_parallel_factors(&choice.factors)
             .expect("scheduler factors are always valid");
         assert_eq!(a, b);

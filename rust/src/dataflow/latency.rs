@@ -156,7 +156,7 @@ mod tests {
     /// drops to ~2.52 ms — a ~9.9x improvement over unpipelined.
     #[test]
     fn scnn5_parallel_factors_hit_paper_speedup() {
-        let net = scnn5().with_parallel_factors(&[4, 4, 2, 1]);
+        let net = scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap();
         let lat = pipeline_latency(&net, &ConvLatencyParams::optimized(), 1);
         let v = ms(lat.t_max);
         assert!((v - 2.52).abs() / 2.52 < 0.3, "parallel t_max {v} ms");
@@ -175,7 +175,7 @@ mod tests {
         assert!((fps - 341.3).abs() / 341.3 < 0.3, "base fps {fps}");
 
         let par = pipeline_latency(
-            &scnn3().with_parallel_factors(&[4, 2]),
+            &scnn3().try_with_parallel_factors(&[4, 2]).unwrap(),
             &ConvLatencyParams::optimized(), 1);
         let fps = CLK_HZ / par.t_max as f64;
         assert!((fps - 1333.0).abs() / 1333.0 < 0.35, "par fps {fps}");
@@ -218,13 +218,13 @@ mod tests {
         let base = pipeline_latency(&scnn5(),
                                     &ConvLatencyParams::optimized(), 1);
         let only_first = pipeline_latency(
-            &scnn5().with_parallel_factors(&[4, 1, 1, 1]),
+            &scnn5().try_with_parallel_factors(&[4, 1, 1, 1]).unwrap(),
             &ConvLatencyParams::optimized(), 1);
         let r1 = base.t_max as f64 / only_first.t_max as f64;
         assert!(r1 > 1.0 && r1 < 1.5, "bottleneck shifted, ratio {r1}");
 
         let all = pipeline_latency(
-            &scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            &scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(),
             &ConvLatencyParams::optimized(), 1);
         let r_all = base.t_max as f64 / all.t_max as f64;
         assert!(r_all > 3.0, "full profile ratio {r_all}");

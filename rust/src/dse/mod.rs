@@ -27,7 +27,8 @@
 //!
 //! End to end: `sti-snn explore` prints and writes the frontier;
 //! `sti-snn serve --auto-tune` boots the `ReplicaPool` from the
-//! winning point.
+//! winning point via the session facade
+//! (`sti_snn::session::SessionBuilder::auto_tune`).
 
 pub mod calibrate;
 pub mod evaluate;
@@ -36,7 +37,6 @@ pub mod report;
 pub mod space;
 
 use crate::arch::NetworkSpec;
-use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
 use crate::dataflow::ConvLatencyParams;
 
 pub use calibrate::{calibrate, Calibration, CalibrationConfig};
@@ -141,25 +141,6 @@ pub fn auto_tune(net: &NetworkSpec, opts: &AutoTuneOptions)
     Ok((chosen, ex))
 }
 
-/// Build the replica-pool pipelines a chosen point describes (random
-/// weights — the synthetic serving path).
-pub fn build_pool_pipelines(net: &NetworkSpec, chosen: &CostPoint,
-                            timesteps: usize)
-                            -> anyhow::Result<Vec<Pipeline>> {
-    let tuned = net
-        .clone()
-        .try_with_parallel_factors(&chosen.candidate.factors)?;
-    (0..chosen.candidate.replicas)
-        .map(|_| {
-            Pipeline::random(tuned.clone(), PipelineConfig {
-                timesteps,
-                backend: chosen.candidate.backend,
-                ..Default::default()
-            })
-        })
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,7 +218,18 @@ mod tests {
         assert!(!ex.frontier.is_empty());
         // Measured host times flowed into the chosen point.
         assert!(best.host_ns_per_frame.is_some());
-        let pipes = build_pool_pipelines(&net, &best, 1).unwrap();
-        assert_eq!(pipes.len(), best.candidate.replicas);
+        // The session facade boots the chosen configuration.
+        let session = crate::session::Session::builder()
+            .network(net)
+            .auto_tune(AutoTuneOptions {
+                max_replicas: 2,
+                ..Default::default()
+            })
+            .build()
+            .unwrap();
+        let tuned = session.tuned().expect("auto-tuned session");
+        assert!(tuned.fits);
+        assert_eq!(session.replicas(), tuned.candidate.replicas);
+        assert_eq!(session.backend(), tuned.candidate.backend);
     }
 }

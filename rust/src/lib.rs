@@ -1,25 +1,40 @@
 //! # STI-SNN — single-timestep-inference SNN accelerator (reproduction)
 //!
-//! Rust Layer-3 of the three-layer stack (DESIGN.md):
+//! Rust Layer-3 of the three-layer stack (DESIGN.md).
 //!
+//! **Start here:** [`session`] — the public construction API. A
+//! [`session::Session`] assembles the whole stack (network + engines +
+//! pipeline + replica pool + TCP serving) through one fluent builder;
+//! the CLI, benches, and examples all go through it. The per-layer
+//! hardware surface underneath is the [`sim::engine::LayerEngine`]
+//! trait.
+//!
+//! Module map:
+//!
+//! * [`session`] — the `Session` facade: one builder for sim, serving,
+//!   DSE auto-tuning, benches, and examples; unified `Report`.
 //! * [`arch`] — network/layer hardware description shared with python.
 //! * [`codec`] — compressed & sorted spike vectors + event encoding.
 //! * [`dataflow`] — analytical access-count (Tables I/III) and latency
 //!   (Eq. 10-12) models.
 //! * [`sim`] — cycle-level simulator of the accelerator (PE array, line
-//!   buffer, neuron unit, OS/WS engines, energy & resource models) with
-//!   pluggable functional compute backends (`sim::backend`: event-driven
-//!   `accurate` vs bit-plane popcount `word-parallel`, bit-exact).
-//! * [`coordinator`] — streaming layer-wise pipeline, parallel-factor
-//!   scheduler, frame batching, and the N-replica serving pool.
+//!   buffer, neuron unit, OS/WS engines, energy & resource models).
+//!   [`sim::engine`] defines the `LayerEngine` trait every layer
+//!   engine implements; `sim::backend` holds the pluggable functional
+//!   compute backends (event-driven `accurate` vs bit-plane popcount
+//!   `word-parallel`, bit-exact).
+//! * [`coordinator`] — streaming layer-wise pipeline over boxed
+//!   `LayerEngine`s, parallel-factor scheduler, frame batching, and
+//!   the N-replica serving pool.
 //! * [`dse`] — design-space exploration: search-space enumeration,
 //!   calibrated analytical evaluation, Pareto frontier + serving
 //!   choice, JSON reporting (`explore` / `serve --auto-tune`).
 //! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts
 //!   (requires the `pjrt` cargo feature; stubs out otherwise).
-//! * [`model`] — artifact loading (net.json + int8 weights).
+//! * [`model`] — artifact loading (net.json + int8 weights) into
+//!   `LayerWeights` engine sources.
 //! * [`server`] — TCP host interface (paper Fig. 10), single-pipeline
-//!   or replica-pool mode.
+//!   or replica-pool mode; `Session::serve` fronts it.
 //! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting plus
 //!   per-replica serving counters.
 
@@ -32,5 +47,8 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod sim;
 pub mod util;
+
+pub use session::{Session, SessionBuilder, Weights};

@@ -1,6 +1,10 @@
 //! sti-snn CLI: run the accelerator simulator, regenerate the paper's
 //! tables/figures, serve inference.
 //!
+//! Every subcommand constructs the simulator stack through the
+//! `sti_snn::session` facade (one builder for network, weights, design
+//! point, replicas, and auto-tuning).
+//!
 //! Subcommands (each maps to a paper artifact — DESIGN.md experiment
 //! index):
 //!   table1   — OS vs WS memory-access counts (paper Table I)
@@ -19,7 +23,6 @@ use std::time::Duration;
 
 use sti_snn::arch;
 use sti_snn::codec::SpikeFrame;
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::coordinator::scheduler;
 use sti_snn::dataflow::{self, ConvLatencyParams};
 use sti_snn::dse;
@@ -27,8 +30,9 @@ use sti_snn::metrics::PerfRow;
 use sti_snn::model::Artifact;
 use sti_snn::runtime::{artifacts_dir, Runtime};
 use sti_snn::server::{Backend, Server};
-use sti_snn::sim::{cycles_to_ms, BackendKind, EnergyModel, ResourceModel,
-                   CLK_HZ};
+use sti_snn::session::{Session, Weights};
+use sti_snn::sim::{cycles_to_ms, BackendKind, EnergyModel,
+                   ResourceModel};
 use sti_snn::util::cli::Args;
 use sti_snn::util::rng::Rng;
 
@@ -51,16 +55,34 @@ fn usage() {
          \x20 serve    TCP inference server\n\
          \x20 help     this text\n\
          \n\
-         common flags:\n\
-         \x20 --model scnn3|scnn5|vmobilenet   network (default varies)\n\
-         \x20 --frames N      frames per run (run/table4/figs)\n\
-         \x20 --rate R        synthetic input firing rate\n\
-         \x20 --timesteps T   inference timesteps (default 1)\n\
-         \x20 --backend accurate|word-parallel\n\
-         \x20                 functional compute backend (default\n\
-         \x20                 accurate; word-parallel is the fast\n\
-         \x20                 bit-plane popcount path — bit-exact,\n\
-         \x20                 identical cycle/energy reports)\n\
+         session flags (the one construction surface — every flag maps\n\
+         to a sti_snn::session::SessionBuilder knob):\n\
+         \x20 flag                 applies to        meaning\n\
+         \x20 --model NAME         all               scnn3|scnn5|vmobilenet\n\
+         \x20 --backend KIND       run/serve         functional compute\n\
+         \x20                                        backend: accurate\n\
+         \x20                                        (default) or\n\
+         \x20                                        word-parallel (fast\n\
+         \x20                                        bit-plane popcount;\n\
+         \x20                                        bit-exact, identical\n\
+         \x20                                        reports). With\n\
+         \x20                                        --auto-tune, pins\n\
+         \x20                                        the backend choice.\n\
+         \x20 --replicas N         serve             pipeline replicas\n\
+         \x20                                        draining one queue\n\
+         \x20                                        (default 1). With\n\
+         \x20                                        --auto-tune, pins\n\
+         \x20                                        the replica split.\n\
+         \x20 --auto-tune          serve             calibrate + explore\n\
+         \x20                                        first (implies\n\
+         \x20                                        --synthetic), boot\n\
+         \x20                                        the winning factors/\n\
+         \x20                                        replicas/backend\n\
+         \x20 --timesteps T        all               inference timesteps\n\
+         \x20                                        (default 1)\n\
+         \x20 --frames N           run/table4/figs   frames per run\n\
+         \x20 --rate R             run/table4/figs   synthetic input\n\
+         \x20                                        firing rate\n\
          \n\
          explore flags:\n\
          \x20 --pe-budget N        total PE budget across replicas\n\
@@ -74,52 +96,78 @@ fn usage() {
          \n\
          serve flags:\n\
          \x20 --addr HOST:PORT     bind address (default 127.0.0.1:7878)\n\
-         \x20 --replicas N         pipeline replicas draining the shared\n\
-         \x20                      queue (default 1; N>1 scales request\n\
-         \x20                      throughput with host cores)\n\
          \x20 --synthetic          serve a random-weight simulator\n\
          \x20                      pipeline (no artifacts / XLA needed);\n\
          \x20                      images are threshold-encoded at 0.5\n\
-         \x20 --auto-tune          run design-space exploration first\n\
-         \x20                      (implies --synthetic) and boot the\n\
-         \x20                      pool from the winning configuration:\n\
-         \x20                      parallel factors, replica count, and\n\
-         \x20                      compute backend (--pe-budget /\n\
-         \x20                      --max-replicas as for explore; an\n\
-         \x20                      explicit --replicas pins the search\n\
-         \x20                      to that split, an explicit --backend\n\
-         \x20                      swaps the host compute path)\n\
+         \x20 --pe-budget N        auto-tune search budget (as explore)\n\
+         \x20 --max-replicas N     auto-tune replica cap (as explore)\n\
          \x20 --max-batch N        queue drain batch size (default 16)\n\
-         \x20 --max-wait-ms MS     queue wait for first item (default 5)"
+         \x20 --max-wait-ms MS     queue wait for first item (default 5)\n\
+         \n\
+         unknown flags are rejected with a nearest-flag suggestion."
     );
 }
 
+/// Per-subcommand flag vocabulary (for validation + suggestions).
+fn known_flags(sub: &str) -> &'static [&'static str] {
+    const COMMON: &[&str] = &["model", "timesteps"];
+    match sub {
+        "table1" | "table3" | "table5" => COMMON,
+        "table4" | "fig11" | "fig12" => {
+            &["model", "timesteps", "frames", "rate"]
+        }
+        "optimize" => &["model", "timesteps", "pe-budget"],
+        "explore" => &["model", "timesteps", "rate", "pe-budget",
+                       "max-replicas", "no-calibrate", "report"],
+        "run" => &["model", "timesteps", "frames", "rate", "backend"],
+        "serve" => &["model", "timesteps", "rate", "backend", "addr",
+                     "replicas", "synthetic", "auto-tune", "pe-budget",
+                     "max-replicas", "max-batch", "max-wait-ms"],
+        _ => COMMON,
+    }
+}
+
+const SUBCOMMANDS: &[&str] = &["table1", "table3", "table4", "table5",
+                               "fig11", "fig12", "optimize", "explore",
+                               "run", "serve"];
+
 fn main() {
     let args = Args::from_env();
-    let result = match args.subcommand.as_deref() {
-        Some("table1") => table1(&args),
-        Some("table3") => table3(&args),
-        Some("table4") => table4(&args),
-        Some("table5") => table5(&args),
-        Some("fig11") => fig11(&args),
-        Some("fig12") => fig12(&args),
-        Some("optimize") => optimize(&args),
-        Some("explore") => explore(&args),
-        Some("run") => run(&args),
-        Some("serve") => serve(&args),
+    let sub = match args.subcommand.as_deref() {
         Some("help") => {
             usage();
             std::process::exit(0);
         }
+        Some(s) => s.to_string(),
         None => {
             usage();
             std::process::exit(2);
         }
-        other => {
-            eprintln!("unknown subcommand {other:?}\n");
-            usage();
-            std::process::exit(2);
-        }
+    };
+    // Subcommand validity first, so a typoed subcommand is reported as
+    // such instead of as an unknown flag of the COMMON fallback set.
+    if !SUBCOMMANDS.contains(&sub.as_str()) {
+        eprintln!("unknown subcommand {sub:?}\n");
+        usage();
+        std::process::exit(2);
+    }
+    if let Err(e) = args.check_known(known_flags(&sub)) {
+        eprintln!("error: {e}\n");
+        usage();
+        std::process::exit(2);
+    }
+    let result = match sub.as_str() {
+        "table1" => table1(&args),
+        "table3" => table3(&args),
+        "table4" => table4(&args),
+        "table5" => table5(&args),
+        "fig11" => fig11(&args),
+        "fig12" => fig12(&args),
+        "optimize" => optimize(&args),
+        "explore" => explore(&args),
+        "run" => run(&args),
+        "serve" => serve(&args),
+        _ => unreachable!("subcommand validated above"),
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
@@ -127,9 +175,8 @@ fn main() {
     }
 }
 
-fn backend_for(args: &Args) -> anyhow::Result<BackendKind> {
+fn backend_for(args: &Args) -> anyhow::Result<Option<BackendKind>> {
     args.get_with("backend", BackendKind::parse)
-        .map(|o| o.unwrap_or(BackendKind::Accurate))
         .map_err(|e| anyhow::anyhow!("{e} (accurate|word-parallel)"))
 }
 
@@ -206,21 +253,13 @@ fn table3(args: &Args) -> anyhow::Result<()> {
 
 fn design_point(name: &str, net: arch::NetworkSpec, frames: usize,
                 rate: f64) -> anyhow::Result<PerfRow> {
-    // Paper accounting: MOPs is the *theoretical* synaptic op count per
-    // frame (Table IV "kFPS x MOPs"); the engine's measured spike-gated
-    // op count is the *effective* workload and drives the energy model.
-    let theoretical_ops = net.ops_per_frame();
-    let mut pipe = Pipeline::random(net, PipelineConfig::default())?;
-    let shape = pipe.input_shape();
-    let rep = pipe.run(&synth_frames(shape, frames, rate, 7));
-    let energy = EnergyModel::default();
-    // Steady-state FPS (Eq. 11, N -> inf): one frame per T_max.
-    let fps = CLK_HZ / rep.t_max as f64;
-    let power = energy.avg_power(
-        rep.dynamic_energy_per_frame_j(), fps, rep.pes,
-        rep.resources.bram36);
-    Ok(PerfRow::new(name, rep.t_max as f64, theoretical_ops, power,
-                    rep.pes))
+    // Paper accounting: the session report's MOPs is the *theoretical*
+    // synaptic op count per frame (Table IV "kFPS x MOPs"); the
+    // measured spike-gated op count drives the energy model.
+    let mut session = Session::builder().network(net).build()?;
+    let shape = session.input_shape();
+    let rep = session.infer_batch(&synth_frames(shape, frames, rate, 7));
+    Ok(rep.perf_row(name))
 }
 
 fn table4(args: &Args) -> anyhow::Result<()> {
@@ -232,10 +271,10 @@ fn table4(args: &Args) -> anyhow::Result<()> {
     let points: Vec<(&str, arch::NetworkSpec)> = vec![
         ("Ours-1 SCNN3", arch::scnn3()),
         ("Ours-2 SCNN3 (4,2)",
-         arch::scnn3().with_parallel_factors(&[4, 2])),
+         arch::scnn3().try_with_parallel_factors(&[4, 2])?),
         ("Ours-3 SCNN5", arch::scnn5()),
         ("Ours-4 SCNN5 (4,4,2,1)",
-         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1])),
+         arch::scnn5().try_with_parallel_factors(&[4, 4, 2, 1])?),
         ("Ours-5 vMobileNet", arch::vmobilenet()),
     ];
     let mut ours = Vec::new();
@@ -283,9 +322,10 @@ fn table5(_args: &Args) -> anyhow::Result<()> {
     println!("{:<24} {:>6} {:>10} {:>8} {:>10} {:>8} {:>8}",
              "design", "PEs", "LUT", "LUT %", "FF", "BRAM36", "BRAM %");
     for (name, net) in [
-        ("SCNN3 (4,2)", arch::scnn3().with_parallel_factors(&[4, 2])),
+        ("SCNN3 (4,2)",
+         arch::scnn3().try_with_parallel_factors(&[4, 2])?),
         ("SCNN5 (4,4,2,1)",
-         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1])),
+         arch::scnn5().try_with_parallel_factors(&[4, 4, 2, 1])?),
         ("vMobileNet", arch::vmobilenet()),
     ] {
         let r = m.network(&net, 1);
@@ -309,12 +349,13 @@ fn fig11(args: &Args) -> anyhow::Result<()> {
               T2\n");
     let mut results = Vec::new();
     for t in [1usize, 2] {
-        let mut pipe = Pipeline::random(
-            arch::scnn5(),
-            PipelineConfig { timesteps: t, ..Default::default() },
-        )?;
-        let shape = pipe.input_shape();
-        let rep = pipe.run(&synth_frames(shape, frames, rate, 11));
+        let mut session = Session::builder()
+            .network(arch::scnn5())
+            .timesteps(t)
+            .build()?;
+        let shape = session.input_shape();
+        let rep = session
+            .infer_batch(&synth_frames(shape, frames, rate, 11));
         results.push(rep);
     }
     println!("{:<14} {:>14} {:>14} {:>16} {:>16}",
@@ -367,21 +408,22 @@ fn fig12(args: &Args) -> anyhow::Result<()> {
         ("unpipelined", arch::scnn5(), false),
         ("pipelined", arch::scnn5(), true),
         ("pipelined+parallel(4,4,2,1)",
-         arch::scnn5().with_parallel_factors(&[4, 4, 2, 1]), true),
+         arch::scnn5().try_with_parallel_factors(&[4, 4, 2, 1])?, true),
     ] {
-        let mut pipe = Pipeline::random(
-            net.clone(),
-            PipelineConfig { pipelined, ..Default::default() },
-        )?;
-        let shape = pipe.input_shape();
-        let rep = pipe.run(&synth_frames(shape, frames, rate, 13));
+        let mut session = Session::builder()
+            .network(net.clone())
+            .pipelined(pipelined)
+            .build()?;
+        let shape = session.input_shape();
+        let rep = session
+            .infer_batch(&synth_frames(shape, frames, rate, 13));
         let per_frame_ms = if pipelined {
             cycles_to_ms(rep.t_max)
         } else {
             cycles_to_ms(rep.t_sum)
         };
         let fps = 1000.0 / per_frame_ms;
-        let power = energy.avg_power(rep.dynamic_energy_per_frame_j(), fps,
+        let power = energy.avg_power(rep.energy_per_frame_j, fps,
                                      rep.pes, rep.resources.bram36);
         let res = rm.network(&net, 1);
         println!("{name:<32} delay {per_frame_ms:>7.2} ms  power \
@@ -403,7 +445,7 @@ fn fig12(args: &Args) -> anyhow::Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// optimize / run / serve
+// optimize / explore / run / serve
 // ---------------------------------------------------------------------------
 
 fn optimize(args: &Args) -> anyhow::Result<()> {
@@ -477,21 +519,23 @@ fn run(args: &Args) -> anyhow::Result<()> {
     let frames = args.get_usize("frames", 4);
     let rate = args.get_f64("rate", 0.15);
     let t = args.get_usize("timesteps", 1);
-    let backend = backend_for(args)?;
-    let mut pipe = Pipeline::random(
-        net,
-        PipelineConfig { timesteps: t, backend, ..Default::default() })?;
-    let shape = pipe.input_shape();
+    let backend = backend_for(args)?.unwrap_or_default();
+    let mut session = Session::builder()
+        .network(net)
+        .backend(backend)
+        .timesteps(t)
+        .build()?;
+    let shape = session.input_shape();
     println!("running {frames} frames of {shape:?} at rate {rate}, T={t}, \
               backend={backend}");
-    let rep = pipe.run(&synth_frames(shape, frames, rate, 17));
+    let rep = session.infer_batch(&synth_frames(shape, frames, rate, 17));
     println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
               steady-state {:.1} FPS",
              rep.t_max, cycles_to_ms(rep.t_max), rep.t_sum,
-             CLK_HZ / rep.t_max as f64);
+             rep.fps_steady);
     println!("ops/frame {:.2} M; dyn energy {:.1} uJ/frame",
              rep.ops_per_frame as f64 / 1e6,
-             rep.dynamic_energy_per_frame_j() * 1e6);
+             rep.energy_per_frame_j * 1e6);
     println!("predictions: {:?}", rep.predictions);
     for (n, c) in rep.layer_names.iter().zip(&rep.layer_cycles) {
         println!("  {n:<20} {c:>12} cycles");
@@ -499,10 +543,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Serving backend: PJRT encoder -> simulator pipeline -> class.
+/// Serving backend for the artifact path: PJRT encoder -> session
+/// pipeline -> class; logits from the reference PJRT full-model graph.
 struct SimBackend {
     rt: Runtime,
-    pipe: Pipeline,
+    session: Session,
     enc_shape: (usize, usize, usize),
     input_len: usize,
 }
@@ -510,11 +555,7 @@ struct SimBackend {
 impl Backend for SimBackend {
     fn infer(&mut self, image: &[f32]) -> anyhow::Result<(usize, Vec<f32>)> {
         let frame = self.rt.encode("encoder", image, self.enc_shape)?;
-        let rep = self.pipe.run(&[frame]);
-        let class = *rep
-            .predictions
-            .first()
-            .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
+        let class = self.session.infer(frame)?.class;
         // Logits from the reference PJRT full-model graph.
         let logits = self.rt.logits("model", image)?;
         Ok((class, logits))
@@ -525,130 +566,69 @@ impl Backend for SimBackend {
     }
 }
 
-/// Artifact-free serving backend: images are threshold-encoded to the
-/// pipeline's (post-encoder) input shape and classified by a
-/// deterministic-random-weight simulator pipeline. `Send`, so the
-/// replica pool can spread copies across worker threads.
-struct SynthBackend {
-    pipe: Pipeline,
-    shape: (usize, usize, usize),
-}
-
-impl Backend for SynthBackend {
-    fn infer(&mut self, image: &[f32]) -> anyhow::Result<(usize, Vec<f32>)> {
-        let (h, w, c) = self.shape;
-        let frame = SpikeFrame::from_f32(h, w, c, image);
-        let rep = self.pipe.run(std::slice::from_ref(&frame));
-        let class = *rep
-            .predictions
-            .first()
-            .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
-        let logits = rep.logits.first().cloned().unwrap_or_default();
-        Ok((class, logits))
-    }
-
-    fn input_len(&self) -> usize {
-        self.shape.0 * self.shape.1 * self.shape.2
-    }
-}
-
 fn serve(args: &Args) -> anyhow::Result<()> {
     let name = args.get_str("model", "scnn3");
     let addr = args.get_str("addr", "127.0.0.1:7878").to_string();
-    let replicas = args.get_usize("replicas", 1).max(1);
-    let backend_kind = backend_for(args)?;
+    let backend = backend_for(args)?;
     let max_batch = args.get_usize("max-batch", 16);
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
     let t = args.get_usize("timesteps", 1);
 
     if args.has("synthetic") || args.has("auto-tune") {
         // Simulator-only serving: no artifacts, no XLA; one pipeline
-        // replica per worker thread drains the shared queue.
-        let net = arch::by_name(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
-        let mut backend_kind = backend_kind;
-        let pipes: Vec<Pipeline> = if args.has("auto-tune") {
-            // DSE picks the serving configuration (the shared
-            // `dse::auto_tune` recipe bench_serve measures). An
-            // explicit --replicas pins the search to that split so
-            // the factors match what actually boots; an explicit
-            // --backend only swaps the host compute path (hardware
-            // metrics are backend-invariant).
-            let defaults = dse::AutoTuneOptions::default();
-            let user_replicas = args.get("replicas").map(|_| replicas);
+        // replica per worker thread drains the shared queue. The
+        // session facade resolves the whole configuration (an explicit
+        // --replicas pins the auto-tune search to that split; an
+        // explicit --backend swaps the host compute path only).
+        let mut builder = Session::builder()
+            .model(name)
+            .timesteps(t)
+            .queue(max_batch, max_wait);
+        if let Some(b) = backend {
+            builder = builder.backend(b);
+        }
+        if let Some(r) = args.get("replicas") {
+            let r: usize = r.parse().map_err(|_| {
+                anyhow::anyhow!("invalid --replicas {r:?}")
+            })?;
+            builder = builder.replicas(r.max(1));
+        }
+        if args.has("auto-tune") {
             println!("auto-tune: calibrating + exploring ...");
-            let (chosen, ex) =
-                dse::auto_tune(&net, &dse::AutoTuneOptions {
-                    pe_budget: Some(args.get_usize(
-                        "pe-budget", 8 * dse::min_pes(&net))),
-                    max_replicas: user_replicas.unwrap_or_else(|| {
-                        args.get_usize("max-replicas",
-                                       defaults.max_replicas)
-                    }),
-                    timesteps: t,
-                    rate: args.get_f64("rate", defaults.rate),
-                })?;
-            let mut best = match user_replicas {
-                None => chosen,
-                Some(r) => {
-                    let at_r: Vec<_> = ex
-                        .points
-                        .iter()
-                        .filter(|p| p.candidate.replicas == r)
-                        .cloned()
-                        .collect();
-                    dse::pareto::choose(&at_r).ok_or_else(|| {
-                        anyhow::anyhow!("auto-tune: no fitting design \
-                                         point at --replicas {r}")
-                    })?
-                }
-            };
-            if args.get("backend").is_some() {
-                best.candidate.backend = backend_kind;
-            }
+            let defaults = dse::AutoTuneOptions::default();
+            let net = arch::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+            builder = builder.auto_tune(dse::AutoTuneOptions {
+                pe_budget: Some(args.get_usize(
+                    "pe-budget", 8 * dse::min_pes(&net))),
+                max_replicas: args.get_usize("max-replicas",
+                                             defaults.max_replicas),
+                timesteps: t,
+                rate: args.get_f64("rate", defaults.rate),
+            });
+        }
+        let session = builder.build()?;
+        if let Some(best) = session.tuned() {
             println!("auto-tune: factors {:?}, {} replica(s), backend \
                       {} ({:.1} simulated FPS, {:.2} W, {} LUT)",
                      best.candidate.factors, best.candidate.replicas,
                      best.candidate.backend, best.pool_fps,
                      best.power_w, best.resources.lut);
-            backend_kind = best.candidate.backend;
-            dse::build_pool_pipelines(&net, &best, t)?
-        } else {
-            (0..replicas)
-                .map(|_| {
-                    Pipeline::random(net.clone(), PipelineConfig {
-                        timesteps: t,
-                        backend: backend_kind,
-                        ..Default::default()
-                    })
-                })
-                .collect::<anyhow::Result<Vec<_>>>()?
-        };
-        let replicas = pipes.len();
-        let mut backends = Vec::with_capacity(replicas);
-        for pipe in pipes {
-            let shape = pipe.input_shape();
-            backends.push(SynthBackend { pipe, shape });
         }
-        let server = Server::with_backends(backends)
-            .with_queue(max_batch, max_wait);
-        println!("serving synthetic {} on {addr} ({replicas} replica(s), \
-                  backend={backend_kind}, newline-JSON protocol)",
-                 net.name);
-        return if replicas > 1 {
-            server.serve_pool(&addr, |a| println!("bound {a}"))
-        } else {
-            server.serve(&addr, |a| println!("bound {a}"))
-        };
+        println!("serving synthetic {} on {addr} ({} replica(s), \
+                  backend={}, newline-JSON protocol)",
+                 session.net().name, session.replicas(),
+                 session.backend());
+        return session.serve(&addr, |a| println!("bound {a}"));
     }
 
     // Artifact serving: PJRT encoder + reference logits. The runtime is
     // single-threaded (the PJRT client is not Send), so this path runs
     // one pipeline regardless of --replicas.
-    if replicas > 1 {
-        eprintln!("note: --replicas {replicas} ignored for artifact \
-                   serving (PJRT backend is single-threaded); use \
-                   --synthetic for the replica pool");
+    if args.get("replicas").is_some() {
+        eprintln!("note: --replicas ignored for artifact serving (PJRT \
+                   backend is single-threaded); use --synthetic for the \
+                   replica pool");
     }
     let dir = artifacts_dir().join(name);
     let art = Artifact::load(&dir)?;
@@ -656,15 +636,15 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     println!("PJRT platform: {}", rt.platform());
     rt.load_hlo("encoder", &art.encoder_hlo(), art.net.input)?;
     rt.load_hlo("model", &art.model_hlo(), art.net.input)?;
-    let params = art.layer_params()?;
-    let pipe = Pipeline::new(
-        art.net.clone(),
-        PipelineConfig { backend: backend_kind, ..Default::default() },
-        params)?;
+    let session = Session::builder()
+        .weights(Weights::Artifact(dir))
+        .backend(backend.unwrap_or_default())
+        .timesteps(t)
+        .build()?;
     let (h, w, c) = art.net.input;
     let backend = SimBackend {
         rt,
-        pipe,
+        session,
         enc_shape: art.encoder_out_shape(),
         input_len: h * w * c,
     };

@@ -18,8 +18,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::arch::{Layer, NetworkSpec};
-use crate::coordinator::pipeline::LayerParams;
 use crate::sim::conv_engine::ConvWeights;
+use crate::sim::engine::LayerWeights;
 use crate::util::json::Json;
 
 /// One tensor record from the manifest.
@@ -127,8 +127,9 @@ impl Artifact {
             .collect())
     }
 
-    /// Build pipeline layer params from the manifest.
-    pub fn layer_params(&self) -> Result<Vec<LayerParams>> {
+    /// Build per-layer engine weight sources from the manifest —
+    /// what `sti_snn::session::Weights::Artifact` resolves to.
+    pub fn layer_weights(&self) -> Result<Vec<LayerWeights>> {
         let mut out = Vec::new();
         for (li, layer) in self.net.layers.iter().enumerate() {
             match layer {
@@ -142,12 +143,12 @@ impl Artifact {
                         self.f32(brec)?,
                         self.vth,
                     );
-                    out.push(LayerParams::Conv(w));
+                    out.push(LayerWeights::Conv(w));
                 }
                 Layer::Fc { .. } => {
                     let wrec = self.tensor(li, "w")?;
                     let brec = self.tensor(li, "b")?;
-                    out.push(LayerParams::Fc {
+                    out.push(LayerWeights::Fc {
                         weights: self.int8(wrec)?,
                         scale: wrec.scale,
                         bias: self.f32(brec)?,
@@ -229,17 +230,17 @@ mod tests {
         let art = Artifact::load(&dir).unwrap();
         assert_eq!(art.net.name, "tiny");
         assert_eq!(art.encoder_out_shape(), (4, 4, 2));
-        let params = art.layer_params().unwrap();
+        let params = art.layer_weights().unwrap();
         assert_eq!(params.len(), 2);
         match &params[0] {
-            LayerParams::Conv(w) => {
+            LayerWeights::Conv(w) => {
                 assert!((w.scale - 0.01).abs() < 1e-9);
                 assert_eq!(w.bias, vec![0.5, -0.5]);
             }
             _ => panic!("expected conv"),
         }
         match &params[1] {
-            LayerParams::Fc { weights, scale, bias } => {
+            LayerWeights::Fc { weights, scale, bias } => {
                 assert_eq!(weights.len(), 16);
                 assert!((scale - 0.02).abs() < 1e-9);
                 assert_eq!(bias, &vec![1.0, 2.0]);

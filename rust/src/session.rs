@@ -1,0 +1,791 @@
+//! The session facade: one construction API for the whole stack.
+//!
+//! The accelerator is one parameterized machine — network spec,
+//! per-layer parallel factors, timesteps, compute backend, replica
+//! count — but it used to be assembled by hand at every call site.
+//! [`Session`] is the single front door: the CLI, the TCP server, the
+//! DSE auto-tuner, the benches and the examples all construct the
+//! simulator stack through [`Session::builder`].
+//!
+//! ```no_run
+//! use sti_snn::session::{Session, Weights};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder()
+//!     .model("scnn3")
+//!     .weights(Weights::Random { seed: 1000 })
+//!     .parallel_factors(&[4, 2])
+//!     .build()?;
+//! let shape = session.input_shape();
+//! # let frames = Vec::new();
+//! let report = session.infer_batch(&frames);
+//! println!("{:.0} FPS, {:.2} W", report.fps_steady, report.power_w);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! What the builder unifies:
+//!
+//! * **weights** — [`Weights::Random`] (deterministic, for hardware
+//!   experiments) or [`Weights::Artifact`] (trained int8 tensors from
+//!   `artifacts/<model>/`).
+//! * **design point** — `parallel_factors`, `timesteps`, `pipelined`,
+//!   compute `backend`, and energy/resource models.
+//! * **serving shape** — `replicas` (N-pipeline pool behind one
+//!   queue) and the queue's batching policy.
+//! * **auto-tuning** — `auto_tune` runs the `dse` calibrate→explore
+//!   recipe at build time and boots the winning configuration;
+//!   explicit `replicas`/`backend`/`parallel_factors` settings pin
+//!   their dimension of the search.
+//!
+//! A session offers synchronous [`Session::infer`] /
+//! [`Session::infer_batch`] (returning the unified [`Report`]) and
+//! asynchronous [`Session::submit`] through the replica pool, plus
+//! [`Session::serve`] to expose the stack over TCP (paper Fig. 10).
+
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::arch::{self, Layer, NetworkSpec};
+use crate::codec::SpikeFrame;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig,
+                                   PipelineReport};
+use crate::coordinator::replica::{PoolResult, ReplicaPool};
+use crate::dataflow::ConvLatencyParams;
+use crate::dse;
+use crate::metrics::{PerfRow, PoolMetrics};
+use crate::model::Artifact;
+use crate::server::{Backend, Server};
+use crate::sim::engine::{random_sources, LayerWeights};
+use crate::sim::{AccessCounter, BackendKind, EnergyModel, EnergyReport,
+                 ResourceModel, ResourceReport, CLK_HZ};
+
+/// Default base seed for [`Weights::Random`] — layer `i` draws from
+/// `seed + i`, matching the historical hardware-experiment wiring.
+pub const DEFAULT_WEIGHT_SEED: u64 = 1000;
+
+/// Where a session's layer weights come from.
+#[derive(Debug, Clone)]
+pub enum Weights {
+    /// Deterministic random weights (cycle and traffic counts are
+    /// weight-independent): layer `i` uses seed `seed + i`.
+    Random {
+        /// Base PRNG seed.
+        seed: u64,
+    },
+    /// Trained + quantised tensors from an artifact directory
+    /// (`net.json` + `weights.bin`, produced by `make artifacts`).
+    /// Also supplies the network spec when none is set explicitly.
+    Artifact(PathBuf),
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Weights::Random { seed: DEFAULT_WEIGHT_SEED }
+    }
+}
+
+/// One synchronous inference result.
+#[derive(Debug, Clone)]
+pub struct Inference {
+    /// Request id (pool submissions number them; direct runs use 0).
+    pub id: u64,
+    /// Classifier argmax.
+    pub class: usize,
+    /// Accumulated classifier logits.
+    pub logits: Vec<f32>,
+    /// Which replica served the request (0 for direct runs).
+    pub replica: usize,
+    /// End-to-end latency in µs (0 for direct runs).
+    pub latency_us: u64,
+}
+
+impl Inference {
+    fn from_pool(r: PoolResult) -> Result<Self> {
+        let class = r.prediction.ok_or_else(|| {
+            anyhow::anyhow!("network has no classifier head")
+        })?;
+        Ok(Self {
+            id: r.id,
+            class,
+            logits: r.logits,
+            replica: r.replica,
+            latency_us: r.latency_us,
+        })
+    }
+}
+
+/// The unified session report: cycles, memory traffic, energy,
+/// resources, and throughput of one batch — everything the paper's
+/// Table IV / Table V / Fig. 11 / Fig. 12 artifacts need, in one type.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Frames in the batch.
+    pub frames: u64,
+    /// Per-layer report labels (`conv0:Standard`, `pool1`, ...).
+    pub layer_names: Vec<String>,
+    /// Per-layer cycles for ONE frame (all timesteps).
+    pub layer_cycles: Vec<u64>,
+    /// Per-layer dynamic energy for ONE frame.
+    pub layer_energy: Vec<EnergyReport>,
+    /// Per-layer Vmem buffer bytes (0 at T = 1 — Fig. 11).
+    pub layer_vmem_bytes: Vec<usize>,
+    /// Inter-layer event-stream compression ratios.
+    pub codec_ratios: Vec<f64>,
+    /// Pipeline interval = max layer cycles (Eq. 11 asymptote).
+    pub t_max: u64,
+    /// Sum of per-layer cycles (unpipelined frame latency).
+    pub t_sum: u64,
+    /// Total cycles for the batch under the configured mode.
+    pub total_cycles: u64,
+    /// Measured spike-gated synaptic ops per frame.
+    pub ops_per_frame: u64,
+    /// Theoretical synaptic ops per frame (the paper's "MOPs").
+    pub theoretical_ops_per_frame: u64,
+    /// Aggregated memory traffic (whole batch).
+    pub counters: AccessCounter,
+    /// Design resource utilisation (Table V model).
+    pub resources: ResourceReport,
+    /// PE count of the design.
+    pub pes: usize,
+    /// Classifier argmax per frame.
+    pub predictions: Vec<usize>,
+    /// Accumulated classifier logits per frame.
+    pub logits: Vec<Vec<f32>>,
+    /// Steady-state throughput: one frame per `t_max` (Eq. 11).
+    pub fps_steady: f64,
+    /// Throughput of this finite batch (includes the pipeline fill).
+    pub fps_batch: f64,
+    /// Batch latency per frame in ms.
+    pub latency_ms_per_frame: f64,
+    /// Dynamic energy per frame in joules.
+    pub energy_per_frame_j: f64,
+    /// Average power (static + dynamic) at steady-state FPS, watts.
+    pub power_w: f64,
+    /// Throughput in GOPS at steady state (kFPS x MOPs).
+    pub gops: f64,
+    /// Efficiency, GOPS per watt.
+    pub gops_per_w: f64,
+    /// The paper's headline metric: GOPS / W / PE.
+    pub gops_per_w_per_pe: f64,
+}
+
+impl Report {
+    fn from_pipeline(rep: &PipelineReport, net: &NetworkSpec,
+                     config: &PipelineConfig) -> Self {
+        let fps_steady = if rep.t_max > 0 {
+            CLK_HZ / rep.t_max as f64
+        } else {
+            0.0
+        };
+        let energy_per_frame_j = rep.dynamic_energy_per_frame_j();
+        let power_w = config.energy.avg_power(
+            energy_per_frame_j, fps_steady, rep.pes,
+            rep.resources.bram36);
+        let theoretical = net.ops_per_frame();
+        let gops = fps_steady * theoretical as f64 / 1e9;
+        let gops_per_w = if power_w > 0.0 { gops / power_w } else { 0.0 };
+        Self {
+            frames: rep.frames,
+            layer_names: rep.layer_names.clone(),
+            layer_cycles: rep.layer_cycles.clone(),
+            layer_energy: rep.layer_energy.clone(),
+            layer_vmem_bytes: rep.layer_vmem_bytes.clone(),
+            codec_ratios: rep.codec_ratios.clone(),
+            t_max: rep.t_max,
+            t_sum: rep.t_sum,
+            total_cycles: rep.total_cycles,
+            ops_per_frame: rep.ops_per_frame,
+            theoretical_ops_per_frame: theoretical,
+            counters: rep.counters.clone(),
+            resources: rep.resources,
+            pes: rep.pes,
+            predictions: rep.predictions.clone(),
+            logits: rep.logits.clone(),
+            fps_steady,
+            fps_batch: rep.fps(),
+            latency_ms_per_frame: rep.latency_ms_per_frame(),
+            energy_per_frame_j,
+            power_w,
+            gops,
+            gops_per_w,
+            gops_per_w_per_pe: gops_per_w / rep.pes.max(1) as f64,
+        }
+    }
+
+    /// Render this report as a paper-style Table IV row.
+    pub fn perf_row(&self, name: &str) -> PerfRow {
+        PerfRow::new(name, self.t_max as f64,
+                     self.theoretical_ops_per_frame, self.power_w,
+                     self.pes.max(1))
+    }
+}
+
+/// Fluent builder for [`Session`] — see the module docs for the knob
+/// inventory. Every setter is optional; `build` validates the
+/// combination.
+#[derive(Debug, Clone, Default)]
+pub struct SessionBuilder {
+    net: Option<NetworkSpec>,
+    model: Option<String>,
+    weights: Option<Weights>,
+    backend: Option<BackendKind>,
+    timing: Option<ConvLatencyParams>,
+    timesteps: Option<usize>,
+    pipelined: Option<bool>,
+    energy: Option<EnergyModel>,
+    resources: Option<ResourceModel>,
+    parallel_factors: Option<Vec<usize>>,
+    replicas: Option<usize>,
+    auto_tune: Option<dse::AutoTuneOptions>,
+    max_batch: Option<usize>,
+    max_wait: Option<Duration>,
+}
+
+impl SessionBuilder {
+    /// Use an explicit network spec (wins over `model`).
+    pub fn network(mut self, net: NetworkSpec) -> Self {
+        self.net = Some(net);
+        self
+    }
+
+    /// Use a named built-in model (`scnn3` / `scnn5` / `vmobilenet`).
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = Some(name.to_string());
+        self
+    }
+
+    /// Weight source (default: deterministic random, seed
+    /// [`DEFAULT_WEIGHT_SEED`]).
+    pub fn weights(mut self, weights: Weights) -> Self {
+        self.weights = Some(weights);
+        self
+    }
+
+    /// Functional compute backend (default `accurate`; explicitly
+    /// setting one also pins the backend against `auto_tune`).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Conv latency-model timing parameters (default
+    /// `ConvLatencyParams::optimized()`).
+    pub fn timing(mut self, timing: ConvLatencyParams) -> Self {
+        self.timing = Some(timing);
+        self
+    }
+
+    /// Inference timesteps (default 1 — the paper's headline mode).
+    pub fn timesteps(mut self, timesteps: usize) -> Self {
+        self.timesteps = Some(timesteps.max(1));
+        self
+    }
+
+    /// Layer-wise pipelining on (Eq. 10, default) or off (serialised).
+    pub fn pipelined(mut self, pipelined: bool) -> Self {
+        self.pipelined = Some(pipelined);
+        self
+    }
+
+    /// Energy model override.
+    pub fn energy(mut self, energy: EnergyModel) -> Self {
+        self.energy = Some(energy);
+        self
+    }
+
+    /// Resource model override.
+    pub fn resources(mut self, resources: ResourceModel) -> Self {
+        self.resources = Some(resources);
+        self
+    }
+
+    /// Per-conv-layer output-channel parallel factors (validated at
+    /// build; with `auto_tune`, pins the factor dimension of the
+    /// search so the measured point matches what boots).
+    pub fn parallel_factors(mut self, factors: &[usize]) -> Self {
+        self.parallel_factors = Some(factors.to_vec());
+        self
+    }
+
+    /// Pipeline replica count for the pool / serving paths (default 1;
+    /// explicitly setting it also pins the `auto_tune` search to that
+    /// split).
+    pub fn replicas(mut self, replicas: usize) -> Self {
+        self.replicas = Some(replicas.max(1));
+        self
+    }
+
+    /// Run design-space exploration at build time and boot the winning
+    /// configuration (factors, replica count, compute backend).
+    /// Explicit `replicas` / `backend` / `parallel_factors` settings
+    /// pin their dimension of the search.
+    pub fn auto_tune(mut self, opts: dse::AutoTuneOptions) -> Self {
+        self.auto_tune = Some(opts);
+        self
+    }
+
+    /// Batching policy of the shared work queue (pool + serving).
+    pub fn queue(mut self, max_batch: usize, max_wait: Duration) -> Self {
+        self.max_batch = Some(max_batch.max(1));
+        self.max_wait = Some(max_wait);
+        self
+    }
+
+    /// Validate the configuration and construct the session.
+    pub fn build(self) -> Result<Session> {
+        // Weight source first: an artifact can supply the network.
+        let weights = self.weights.unwrap_or_default();
+        let artifact = match &weights {
+            Weights::Artifact(dir) => Some(Artifact::load(dir)?),
+            Weights::Random { .. } => None,
+        };
+
+        let explicit_net = self.net.is_some() || self.model.is_some();
+        let mut net = if let Some(n) = self.net {
+            n
+        } else if let Some(name) = &self.model {
+            arch::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown model {name} (scnn3 | scnn5 | \
+                                 vmobilenet)")
+            })?
+        } else if let Some(a) = &artifact {
+            a.net.clone()
+        } else {
+            anyhow::bail!("Session::builder(): set .network(..), \
+                           .model(..), or .weights(Weights::Artifact(..))");
+        };
+        if explicit_net {
+            if let Some(a) = &artifact {
+                // Artifact tensors are shaped for the artifact's net;
+                // a mismatched explicit spec would index them out of
+                // bounds (or silently compute garbage).
+                check_artifact_net(&net, &a.net)?;
+            }
+        }
+
+        let timesteps = self
+            .timesteps
+            .or_else(|| artifact.as_ref().map(|a| a.timesteps.max(1)))
+            .unwrap_or(1);
+        let mut backend = self.backend.unwrap_or_default();
+        let mut replicas = self.replicas.unwrap_or(1);
+
+        // Resolve the design point: auto-tune, then explicit overrides.
+        let mut tuned = None;
+        if let Some(opts) = &self.auto_tune {
+            let mut opts = opts.clone();
+            opts.timesteps = timesteps;
+            if let Some(r) = self.replicas {
+                opts.max_replicas = r;
+            }
+            let (mut best, ex) = dse::auto_tune(&net, &opts)?;
+            // Explicit replicas / parallel_factors pin their dimension
+            // of the search, so the chosen point (and its measured
+            // FPS/power) matches exactly what boots.
+            let pinned_r = self.replicas;
+            let pinned_f = self.parallel_factors.as_deref();
+            if pinned_r.is_some() || pinned_f.is_some() {
+                let pinned: Vec<dse::CostPoint> = ex
+                    .points
+                    .iter()
+                    .filter(|p| pinned_r
+                        .map_or(true, |r| p.candidate.replicas == r))
+                    .filter(|p| pinned_f
+                        .map_or(true,
+                                |f| p.candidate.factors.as_slice() == f))
+                    .cloned()
+                    .collect();
+                best = dse::pareto::choose(&pinned).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "auto-tune: no fitting design point matches the \
+                         pinned configuration (replicas {pinned_r:?}, \
+                         factors {pinned_f:?})")
+                })?;
+            }
+            if let Some(b) = self.backend {
+                // Explicit backend only swaps the host compute path —
+                // hardware metrics are backend-invariant.
+                best.candidate.backend = b;
+            }
+            backend = best.candidate.backend;
+            replicas = best.candidate.replicas;
+            net = net.try_with_parallel_factors(&best.candidate.factors)?;
+            tuned = Some(best);
+        } else if let Some(f) = &self.parallel_factors {
+            net = net.try_with_parallel_factors(f)?;
+        }
+
+        let config = PipelineConfig {
+            timesteps,
+            timing: self.timing
+                .unwrap_or_else(ConvLatencyParams::optimized),
+            pipelined: self.pipelined.unwrap_or(true),
+            energy: self.energy.unwrap_or_default(),
+            resources: self.resources.unwrap_or_default(),
+            backend,
+        };
+
+        let sources: Vec<LayerWeights> = match (&weights, &artifact) {
+            (Weights::Random { seed }, _) => random_sources(&net, *seed),
+            (Weights::Artifact(_), Some(a)) => a.layer_weights()?,
+            (Weights::Artifact(_), None) => unreachable!(),
+        };
+
+        let pipeline =
+            Pipeline::new(net.clone(), config.clone(), sources.clone())?;
+        Ok(Session {
+            net,
+            config,
+            sources,
+            replicas,
+            max_batch: self.max_batch.unwrap_or(16),
+            max_wait: self.max_wait.unwrap_or(Duration::from_millis(5)),
+            tuned,
+            pipeline,
+            pool: None,
+        })
+    }
+}
+
+/// An explicit network spec used with artifact weights must describe
+/// the artifact's network (parallel factors aside — those are a
+/// design-point knob, not a tensor shape).
+fn check_artifact_net(net: &NetworkSpec, art_net: &NetworkSpec)
+                      -> Result<()> {
+    let compatible = net.input == art_net.input
+        && net.layers.len() == art_net.layers.len()
+        && net.layers.iter().zip(&art_net.layers).all(|(l, m)| {
+            match (l, m) {
+                (Layer::Conv(x), Layer::Conv(y)) => {
+                    x.mode == y.mode
+                        && (x.in_h, x.in_w, x.ci, x.co) ==
+                           (y.in_h, y.in_w, y.ci, y.co)
+                        && (x.kh, x.kw, x.pad) == (y.kh, y.kw, y.pad)
+                        && x.encoder == y.encoder
+                }
+                (Layer::Pool { .. }, Layer::Pool { .. }) => {
+                    l.in_shape() == m.in_shape()
+                }
+                (Layer::Fc { .. }, Layer::Fc { .. }) => {
+                    l.in_shape() == m.in_shape()
+                        && l.out_shape() == m.out_shape()
+                }
+                _ => false,
+            }
+        });
+    anyhow::ensure!(
+        compatible,
+        "explicit network {:?} does not match the artifact's network \
+         {:?}: artifact tensors are shaped for the artifact's layers",
+        net.name, art_net.name);
+    Ok(())
+}
+
+/// A fully-constructed accelerator stack: network + engines +
+/// pipeline, with an optional replica pool and TCP serving on top.
+/// Build one with [`Session::builder`].
+pub struct Session {
+    net: NetworkSpec,
+    config: PipelineConfig,
+    sources: Vec<LayerWeights>,
+    replicas: usize,
+    max_batch: usize,
+    max_wait: Duration,
+    tuned: Option<dse::CostPoint>,
+    pipeline: Pipeline,
+    pool: Option<ReplicaPool>,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The (possibly factor-assigned) network this session runs.
+    pub fn net(&self) -> &NetworkSpec {
+        &self.net
+    }
+
+    /// The resolved pipeline configuration.
+    pub fn config(&self) -> &PipelineConfig {
+        &self.config
+    }
+
+    /// The resolved functional compute backend.
+    pub fn backend(&self) -> BackendKind {
+        self.config.backend
+    }
+
+    /// Configured replica count (pool / serving parallelism).
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// The design point `auto_tune` chose, when it ran.
+    pub fn tuned(&self) -> Option<&dse::CostPoint> {
+        self.tuned.as_ref()
+    }
+
+    /// Shape of the (post-encoder) spike frames this session expects.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.pipeline.input_shape()
+    }
+
+    /// Run a batch of spike frames through the primary pipeline and
+    /// return the unified [`Report`].
+    pub fn infer_batch(&mut self, frames: &[SpikeFrame]) -> Report {
+        let rep = self.pipeline.run(frames);
+        Report::from_pipeline(&rep, &self.net, &self.config)
+    }
+
+    /// Classify one frame. Routes through the replica pool when more
+    /// than one replica is configured; otherwise runs on the primary
+    /// pipeline directly.
+    pub fn infer(&mut self, frame: SpikeFrame) -> Result<Inference> {
+        if self.replicas > 1 {
+            self.start_pool()?;
+        }
+        if let Some(pool) = &self.pool {
+            return Inference::from_pool(pool.infer(frame)?);
+        }
+        let rep = self.pipeline.run(std::slice::from_ref(&frame));
+        let class = rep.predictions.first().copied().ok_or_else(|| {
+            anyhow::anyhow!("network has no classifier head")
+        })?;
+        Ok(Inference {
+            id: 0,
+            class,
+            logits: rep.logits.first().cloned().unwrap_or_default(),
+            replica: 0,
+            latency_us: 0,
+        })
+    }
+
+    /// Enqueue a frame on the replica pool (spawned on first use);
+    /// the receiver yields the result when a replica has served it.
+    /// Non-blocking — submit many, then collect.
+    pub fn submit(&mut self, frame: SpikeFrame)
+                  -> Result<Receiver<PoolResult>> {
+        self.start_pool()?;
+        Ok(self.pool.as_ref().expect("pool started").submit(frame))
+    }
+
+    /// Spawn the replica pool now (it is otherwise created lazily on
+    /// the first [`Session::submit`]) — call before timing submission
+    /// throughput so worker startup stays out of the measurement.
+    /// The pool gets `replicas` fresh pipelines of its own; the
+    /// primary pipeline stays available for [`Session::infer_batch`]
+    /// reports, so a pooled session holds `replicas + 1` engine
+    /// stacks in total.
+    pub fn start_pool(&mut self) -> Result<()> {
+        if self.pool.is_none() {
+            let pipes = self.build_pipelines(self.replicas)?;
+            self.pool = Some(ReplicaPool::new(pipes, self.max_batch,
+                                              self.max_wait));
+        }
+        Ok(())
+    }
+
+    /// Per-replica serving counters, when the pool is running.
+    pub fn pool_metrics(&self) -> Option<Arc<PoolMetrics>> {
+        self.pool.as_ref().map(|p| p.metrics())
+    }
+
+    /// Stop the replica pool (drains queued work) and drop the
+    /// session.
+    pub fn shutdown(mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+    }
+
+    /// Serve this session's stack over TCP (newline-JSON protocol,
+    /// paper Fig. 10): images are threshold-encoded to the pipeline's
+    /// post-encoder input shape and classified on the simulator.
+    /// Blocks until a `shutdown` command arrives; `on_bound` receives
+    /// the bound address (port 0 => ephemeral, for tests).
+    pub fn serve(mut self, addr: &str,
+                 on_bound: impl FnOnce(std::net::SocketAddr))
+                 -> Result<()> {
+        if let Some(pool) = self.pool.take() {
+            // The server owns its replicas; don't double-run the pool.
+            pool.shutdown();
+        }
+        let shape = self.pipeline.input_shape();
+        let extra = self.build_pipelines(self.replicas - 1)?;
+        let mut backends = Vec::with_capacity(self.replicas);
+        backends.push(FrameBackend { pipe: self.pipeline, shape });
+        for pipe in extra {
+            backends.push(FrameBackend { pipe, shape });
+        }
+        let pooled = backends.len() > 1;
+        let server = Server::with_backends(backends)
+            .with_queue(self.max_batch, self.max_wait);
+        if pooled {
+            server.serve_pool(addr, on_bound)
+        } else {
+            server.serve(addr, on_bound)
+        }
+    }
+
+    /// Move the primary pipeline out of the session (for callers that
+    /// embed it in a custom serving backend, e.g. the PJRT-reference
+    /// path). The pool, if any, is shut down.
+    pub fn into_pipeline(mut self) -> Pipeline {
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+        self.pipeline
+    }
+
+    /// Fresh pipeline replicas from this session's recipe (same net,
+    /// config, and weight sources — bit-identical behaviour).
+    fn build_pipelines(&self, n: usize) -> Result<Vec<Pipeline>> {
+        (0..n)
+            .map(|_| {
+                Pipeline::new(self.net.clone(), self.config.clone(),
+                              self.sources.clone())
+            })
+            .collect()
+    }
+}
+
+/// Serving backend over a simulator pipeline: images are
+/// threshold-encoded (at 0.5) to the pipeline's post-encoder input
+/// shape and classified end to end. `Send`, so the replica pool can
+/// spread copies across worker threads.
+struct FrameBackend {
+    pipe: Pipeline,
+    shape: (usize, usize, usize),
+}
+
+impl Backend for FrameBackend {
+    fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)> {
+        let (h, w, c) = self.shape;
+        let frame = SpikeFrame::from_f32(h, w, c, image);
+        let rep = self.pipe.run(std::slice::from_ref(&frame));
+        let class = *rep
+            .predictions
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
+        Ok((class, rep.logits.first().cloned().unwrap_or_default()))
+    }
+
+    fn input_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn frames(shape: (usize, usize, usize), n: usize, seed: u64)
+              -> Vec<SpikeFrame> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
+                                        &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn builder_requires_a_network_source() {
+        assert!(Session::builder().build().is_err());
+        assert!(Session::builder().model("no-such-net").build().is_err());
+        assert!(Session::builder().model("scnn3").build().is_ok());
+    }
+
+    #[test]
+    fn infer_batch_reports_unified_metrics() {
+        let mut s = Session::builder().model("scnn3").build().unwrap();
+        let f = frames(s.input_shape(), 2, 1);
+        let rep = s.infer_batch(&f);
+        assert_eq!(rep.frames, 2);
+        assert_eq!(rep.predictions.len(), 2);
+        assert!(rep.t_max > 0);
+        assert!(rep.fps_steady > 0.0);
+        assert!(rep.power_w > 0.0);
+        assert!(rep.gops_per_w_per_pe > 0.0);
+        // Table-IV row derives from the same numbers.
+        let row = rep.perf_row("test");
+        assert!((row.fps - rep.fps_steady).abs() / rep.fps_steady < 1e-9);
+    }
+
+    #[test]
+    fn parallel_factors_validate_at_build() {
+        assert!(Session::builder()
+            .model("scnn3")
+            .parallel_factors(&[3, 2])
+            .build()
+            .is_err());
+        let s = Session::builder()
+            .model("scnn3")
+            .parallel_factors(&[4, 2])
+            .build()
+            .unwrap();
+        assert_eq!(s.net().total_pes(), 54);
+    }
+
+    #[test]
+    fn submit_round_trips_through_the_pool() {
+        let mut s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .replicas(2)
+            .queue(4, Duration::from_millis(2))
+            .build()
+            .unwrap();
+        let f = frames(s.input_shape(), 4, 2);
+        let direct: Vec<usize> = {
+            let mut solo = Session::builder()
+                .model("scnn3")
+                .backend(BackendKind::WordParallel)
+                .build()
+                .unwrap();
+            f.iter()
+                .map(|fr| solo.infer(fr.clone()).unwrap().class)
+                .collect()
+        };
+        let rxs: Vec<_> =
+            f.iter().map(|fr| s.submit(fr.clone()).unwrap()).collect();
+        let got: Vec<usize> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().prediction.unwrap())
+            .collect();
+        assert_eq!(got, direct);
+        assert!(s.pool_metrics().is_some());
+        s.shutdown();
+    }
+
+    #[test]
+    fn serve_round_trips_over_tcp() {
+        use crate::server::Client;
+        let s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .build()
+            .unwrap();
+        let shape = s.input_shape();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            s.serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let n = shape.0 * shape.1 * shape.2;
+        let mut rng = Rng::new(5);
+        let image: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let resp = c.infer(1, &image).unwrap();
+        assert!(resp.get("class").is_some(), "{resp}");
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+}

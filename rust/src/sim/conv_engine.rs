@@ -22,7 +22,7 @@ use crate::dataflow::ConvLatencyParams;
 use super::array::PeArray;
 use super::backend::{conv_backend, BackendKind, ConvCompute};
 use super::linebuf::{padded_rows, LineBuffer};
-use super::memory::{AccessCounter, DataKind, MemLevel};
+use super::memory::{DataKind, MemLevel};
 use super::neuron::NeuronUnit;
 use super::pe::adder_tree_latency;
 
@@ -127,14 +127,9 @@ impl ConvWeights {
     }
 }
 
-/// Per-run report of the engine.
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct ConvRunReport {
-    pub cycles: u64,
-    pub ops: u64,
-    pub out_spikes: u64,
-    pub counters: AccessCounter,
-}
+/// Per-run report of the engine — the unified
+/// [`LayerStep`](super::engine::LayerStep) every layer engine shares.
+pub type ConvRunReport = super::engine::LayerStep;
 
 /// The engine itself. One instance per conv layer of the pipeline.
 pub struct ConvEngine {

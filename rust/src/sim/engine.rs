@@ -1,0 +1,438 @@
+//! The unified per-layer engine abstraction.
+//!
+//! The paper's accelerator is one parameterized machine: a multi-mode
+//! PE array whose engines are configured per layer and composed into a
+//! layer-wise pipeline (Fig. 5/9). This module is that machine's
+//! programmable interface on the simulator side:
+//!
+//! * [`LayerEngine`] — the trait every hardware layer engine
+//!   implements ([`ConvEngine`], [`PoolEngine`], [`FcEngine`], and the
+//!   weight-stationary baseline [`WsEngine`]). The coordinator's
+//!   pipeline holds `Vec<Box<dyn LayerEngine>>`, so a new layer kind
+//!   is one trait impl plus one arm in [`engine_for_layer`] — not a
+//!   cross-module edit.
+//! * [`LayerStep`] — the uniform per-frame cost report (cycles, ops,
+//!   output spikes, memory traffic) every engine produces. The conv,
+//!   FC, and pool engines all report through this one type.
+//! * [`LayerWeights`] — the per-layer weight source consumed when
+//!   engines are built from a network spec (deterministic-random or
+//!   real quantised artifact tensors).
+//! * [`build_engines`] / [`engine_for_layer`] — the single place a
+//!   [`crate::arch::Layer`] maps to its hardware engine.
+//!
+//! Construction normally happens through the `session` facade
+//! (`sti_snn::session::Session`); this layer exists so benches and
+//! tests can also drive individual engines through the exact code path
+//! the pipeline uses.
+
+use crate::arch::{Layer, NetworkSpec};
+use crate::codec::{EventCodec, SpikeFrame};
+use crate::dataflow::ConvLatencyParams;
+
+use super::backend::BackendKind;
+use super::conv_engine::{ConvEngine, ConvWeights};
+use super::fc_engine::FcEngine;
+use super::memory::AccessCounter;
+use super::pool_engine::PoolEngine;
+use super::ws_engine::WsEngine;
+
+/// Uniform per-frame cost report of one [`LayerEngine`] invocation.
+///
+/// One type for every engine kind (conv / pool / FC / WS baseline):
+/// architectural cycles, spike-gated synaptic ops, output spike count,
+/// and the per-level/per-kind memory traffic. Counters are
+/// weight- and compute-backend-independent (see `sim::backend`), so
+/// two engines configured identically produce identical `LayerStep`s.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LayerStep {
+    /// Architectural cycles of the step (all configured timesteps).
+    pub cycles: u64,
+    /// Spike-gated synaptic accumulates performed.
+    pub ops: u64,
+    /// Spikes in the output frame (0 for the classifier head).
+    pub out_spikes: u64,
+    /// Memory traffic by level and data kind.
+    pub counters: AccessCounter,
+}
+
+impl LayerStep {
+    /// Merge another step's costs into this one (multi-timestep /
+    /// multi-layer aggregation).
+    pub fn merge(&mut self, other: &LayerStep) {
+        self.cycles += other.cycles;
+        self.ops += other.ops;
+        self.out_spikes += other.out_spikes;
+        self.counters.merge(&other.counters);
+    }
+}
+
+/// What a layer engine hands to the next pipeline stage.
+pub enum LayerOutput {
+    /// A spike frame for the next engine.
+    Frame(SpikeFrame),
+    /// Terminal classifier output: argmax class + accumulated logits.
+    Classified { class: usize, logits: Vec<f32> },
+}
+
+/// One pipeline stage of the accelerator: a hardware engine that
+/// consumes a spike frame and produces the next activation (or the
+/// classification) while accounting its architectural cost.
+///
+/// Implementors: [`ConvEngine`] (OS dataflow, all three conv modes),
+/// [`PoolEngine`] (2x2 OR pooling), [`FcEngine`] (classifier head),
+/// and [`WsEngine`] (the weight-stationary Table I baseline). Engines
+/// are `Send` so replica pools can move pipelines across worker
+/// threads.
+pub trait LayerEngine: Send {
+    /// Engine kind for report labels ("conv", "pool", "fc", "ws").
+    fn kind(&self) -> &'static str;
+
+    /// Label suffix appended after the layer index (conv mode).
+    fn label_detail(&self) -> String {
+        String::new()
+    }
+
+    /// Run all configured timesteps of one frame. `off_chip_input`
+    /// marks whether the input arrives from DRAM (first pipeline
+    /// layer) or an on-chip FIFO.
+    fn process_frame(&mut self, input: &SpikeFrame, off_chip_input: bool)
+                     -> (LayerOutput, LayerStep);
+
+    /// Reset cross-frame state (membrane potentials). Engines are
+    /// frame-stateless by default.
+    fn reset(&mut self) {}
+
+    /// Architectural Vmem buffer bytes this engine provisions
+    /// (0 at T = 1 — the paper's Fig. 11 saving).
+    fn vmem_bytes(&self) -> usize {
+        0
+    }
+
+    /// Event codec of this engine's input link, when the inter-layer
+    /// stream is spike-event encoded (conv layers). The pipeline uses
+    /// it for compression-ratio accounting.
+    fn event_codec(&self) -> Option<EventCodec> {
+        None
+    }
+}
+
+impl LayerEngine for ConvEngine {
+    fn kind(&self) -> &'static str {
+        "conv"
+    }
+
+    fn label_detail(&self) -> String {
+        format!(":{:?}", self.layer.mode)
+    }
+
+    fn process_frame(&mut self, input: &SpikeFrame, off_chip_input: bool)
+                     -> (LayerOutput, LayerStep) {
+        let (out, step) = self.run_frame(input, off_chip_input);
+        (LayerOutput::Frame(out), step)
+    }
+
+    fn reset(&mut self) {
+        self.neuron.reset();
+    }
+
+    fn vmem_bytes(&self) -> usize {
+        ConvEngine::vmem_bytes(self)
+    }
+
+    fn event_codec(&self) -> Option<EventCodec> {
+        Some(EventCodec::new(self.layer.in_h, self.layer.in_w,
+                             self.layer.ci))
+    }
+}
+
+impl LayerEngine for PoolEngine {
+    fn kind(&self) -> &'static str {
+        "pool"
+    }
+
+    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
+                     -> (LayerOutput, LayerStep) {
+        // The pooling pass repeats per timestep (same OR result); the
+        // traffic is charged once — the registers hold the window.
+        let t = self.timesteps() as u64;
+        let (out, rep) = self.run(input);
+        let step = LayerStep {
+            cycles: rep.cycles * t,
+            out_spikes: out.count() as u64,
+            ..rep
+        };
+        (LayerOutput::Frame(out), step)
+    }
+}
+
+impl LayerEngine for FcEngine {
+    fn kind(&self) -> &'static str {
+        "fc"
+    }
+
+    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
+                     -> (LayerOutput, LayerStep) {
+        // At T > 1 the same final spike map replays per timestep
+        // (upstream already accumulated) — SDT readout.
+        let flat = FcEngine::flatten(input);
+        let reps: Vec<Vec<bool>> =
+            (0..self.timesteps()).map(|_| flat.clone()).collect();
+        let (class, logits, step) = self.classify_full(&reps);
+        (LayerOutput::Classified { class, logits }, step)
+    }
+}
+
+impl LayerEngine for WsEngine {
+    fn kind(&self) -> &'static str {
+        "ws"
+    }
+
+    fn label_detail(&self) -> String {
+        format!(":{:?}", self.layer().mode)
+    }
+
+    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
+                     -> (LayerOutput, LayerStep) {
+        // WS charges its own (Table I) traffic pattern regardless of
+        // where the input comes from.
+        let (out, step) = self.run_frame(input);
+        (LayerOutput::Frame(out), step)
+    }
+
+    fn reset(&mut self) {
+        WsEngine::reset(self);
+    }
+}
+
+/// Per-layer weight source for engine construction.
+///
+/// The session facade resolves its weight policy
+/// (`sti_snn::session::Weights`) into one of these per accelerated
+/// layer; artifacts produce them via
+/// [`crate::model::Artifact::layer_weights`].
+#[derive(Clone)]
+pub enum LayerWeights {
+    /// Deterministic random weights (hardware-only experiments —
+    /// cycle and traffic counts are weight-independent).
+    Random {
+        /// PRNG seed for this layer's taps.
+        seed: u64,
+    },
+    /// Real quantised conv weights from `artifacts/`.
+    Conv(ConvWeights),
+    /// Real quantised classifier weights from `artifacts/`.
+    Fc {
+        /// Row-major `[n_in][n_out]` int8 weights.
+        weights: Vec<i8>,
+        /// Dequantisation scale.
+        scale: f32,
+        /// Per-output bias.
+        bias: Vec<f32>,
+    },
+}
+
+/// Construction knobs shared by every engine builder.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Per-stage cycle costs of the conv latency model (Eq. 12).
+    pub timing: ConvLatencyParams,
+    /// Inference timesteps (T = 1 is the paper's headline mode).
+    pub timesteps: usize,
+    /// Functional compute backend (bit-exact across kinds).
+    pub backend: BackendKind,
+}
+
+/// Build the engine for one accelerated layer — the single place a
+/// layer kind maps to hardware. Pool layers take no weights; conv and
+/// FC layers require a matching [`LayerWeights`] source.
+pub fn engine_for_layer(layer: &Layer, weights: Option<LayerWeights>,
+                        cfg: &EngineConfig)
+                        -> anyhow::Result<Box<dyn LayerEngine>> {
+    match layer {
+        Layer::Conv(c) => {
+            let w = match weights {
+                Some(LayerWeights::Random { seed }) => {
+                    ConvWeights::random(c, seed)
+                }
+                Some(LayerWeights::Conv(w)) => w,
+                Some(LayerWeights::Fc { .. }) => {
+                    anyhow::bail!("expected conv weights, got fc")
+                }
+                None => anyhow::bail!("conv layer needs weights"),
+            };
+            Ok(Box::new(ConvEngine::with_backend(
+                c.clone(), w, cfg.timing, cfg.timesteps, cfg.backend)))
+        }
+        Layer::Pool { in_h, in_w, c } => {
+            anyhow::ensure!(weights.is_none(),
+                            "pool layers take no weights");
+            Ok(Box::new(PoolEngine::new(*in_h, *in_w, *c)
+                .with_timesteps(cfg.timesteps)))
+        }
+        Layer::Fc { n_in, n_out } => {
+            let eng = match weights {
+                Some(LayerWeights::Random { seed }) => {
+                    FcEngine::random(*n_in, *n_out, seed)
+                }
+                Some(LayerWeights::Fc { weights, scale, bias }) => {
+                    FcEngine::new(*n_in, *n_out, weights, scale, bias)
+                }
+                Some(LayerWeights::Conv(_)) => {
+                    anyhow::bail!("expected fc weights, got conv")
+                }
+                None => anyhow::bail!("fc layer needs weights"),
+            };
+            Ok(Box::new(eng
+                .with_backend(cfg.backend)
+                .with_timesteps(cfg.timesteps)))
+        }
+    }
+}
+
+/// Build the engine chain for every accelerated layer of `net`.
+/// `sources` supplies weights per conv/FC layer in order (encoder and
+/// pool layers take none); the count must match exactly.
+pub fn build_engines(net: &NetworkSpec, cfg: &EngineConfig,
+                     sources: Vec<LayerWeights>)
+                     -> anyhow::Result<Vec<Box<dyn LayerEngine>>> {
+    let mut srcs = sources;
+    srcs.reverse(); // pop from the front
+    let mut engines = Vec::new();
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv(c) if c.encoder => {
+                // Encoder runs off-accelerator (host / L2 artifact).
+                continue;
+            }
+            Layer::Pool { .. } => {
+                engines.push(engine_for_layer(layer, None, cfg)?);
+            }
+            _ => {
+                let w = srcs.pop().ok_or_else(|| {
+                    anyhow::anyhow!("missing weights for layer {layer:?}")
+                })?;
+                engines.push(engine_for_layer(layer, Some(w), cfg)?);
+            }
+        }
+    }
+    if !srcs.is_empty() {
+        anyhow::bail!("{} unused layer weight sources", srcs.len());
+    }
+    Ok(engines)
+}
+
+/// Deterministic per-layer random weight sources for `net`: layer `i`
+/// (over weight-taking layers, in order) gets seed `base_seed + i`.
+pub fn random_sources(net: &NetworkSpec, base_seed: u64)
+                      -> Vec<LayerWeights> {
+    let n = net
+        .layers
+        .iter()
+        .filter(|l| match l {
+            Layer::Conv(c) => !c.encoder,
+            Layer::Pool { .. } => false,
+            Layer::Fc { .. } => true,
+        })
+        .count();
+    (0..n)
+        .map(|i| LayerWeights::Random { seed: base_seed + i as u64 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::scnn3;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            timing: ConvLatencyParams::optimized(),
+            timesteps: 1,
+            backend: BackendKind::Accurate,
+        }
+    }
+
+    #[test]
+    fn build_engines_covers_all_accel_layers() {
+        let net = scnn3();
+        let engines =
+            build_engines(&net, &cfg(), random_sources(&net, 1000))
+                .unwrap();
+        // scnn3: encoder skipped; conv, pool, conv, pool, fc = 5.
+        assert_eq!(engines.len(), 5);
+        let kinds: Vec<&str> = engines.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds, vec!["conv", "pool", "conv", "pool", "fc"]);
+    }
+
+    #[test]
+    fn source_count_mismatch_is_an_error() {
+        let net = scnn3();
+        assert!(build_engines(&net, &cfg(),
+                              vec![LayerWeights::Random { seed: 1 }])
+            .is_err());
+        let too_many: Vec<LayerWeights> = (0..9)
+            .map(|s| LayerWeights::Random { seed: s })
+            .collect();
+        assert!(build_engines(&net, &cfg(), too_many).is_err());
+    }
+
+    /// Trait dispatch produces the same frames and reports as calling
+    /// the concrete engine directly.
+    #[test]
+    fn trait_dispatch_matches_concrete_conv_engine() {
+        let net = scnn3();
+        let c = net.accel_convs()[0].clone();
+        let w = ConvWeights::random(&c, 7);
+        let mut rng = Rng::new(3);
+        let input = SpikeFrame::random(c.in_h, c.in_w, c.ci, 0.2, &mut rng);
+
+        let mut direct = ConvEngine::with_backend(
+            c.clone(), w.clone(), ConvLatencyParams::optimized(), 1,
+            BackendKind::Accurate);
+        let (want_out, want_rep) = direct.run_frame(&input, true);
+
+        let mut boxed: Box<dyn LayerEngine> = Box::new(
+            ConvEngine::with_backend(c, w, ConvLatencyParams::optimized(),
+                                     1, BackendKind::Accurate));
+        let (out, step) = boxed.process_frame(&input, true);
+        match out {
+            LayerOutput::Frame(f) => assert_eq!(f, want_out),
+            _ => panic!("conv engine must emit a frame"),
+        }
+        assert_eq!(step, want_rep);
+        assert!(boxed.event_codec().is_some());
+    }
+
+    /// The WS baseline runs through the same trait surface the
+    /// pipeline uses, agreeing functionally with the OS engine while
+    /// paying psum traffic OS avoids (Table I).
+    #[test]
+    fn ws_engine_runs_through_the_trait() {
+        use crate::sim::memory::DataKind;
+        let net = scnn3();
+        let c = net.accel_convs()[0].clone();
+        let w = ConvWeights::random(&c, 9);
+        let mut rng = Rng::new(4);
+        let input = SpikeFrame::random(c.in_h, c.in_w, c.ci, 0.2, &mut rng);
+
+        let mut os: Box<dyn LayerEngine> = Box::new(ConvEngine::new(
+            c.clone(), w.clone(), ConvLatencyParams::optimized(), 1));
+        let mut ws: Box<dyn LayerEngine> =
+            Box::new(WsEngine::new(c, w, 1));
+        assert_eq!(ws.kind(), "ws");
+        let (os_out, os_step) = os.process_frame(&input, true);
+        let (ws_out, ws_step) = ws.process_frame(&input, true);
+        match (os_out, ws_out) {
+            (LayerOutput::Frame(a), LayerOutput::Frame(b)) => {
+                assert_eq!(a, b)
+            }
+            _ => panic!("conv engines must emit frames"),
+        }
+        assert_eq!(
+            os_step.counters.total_of_kind(DataKind::PartialSum), 0);
+        assert!(
+            ws_step.counters.total_of_kind(DataKind::PartialSum) > 0);
+        assert!(ws_step.cycles > os_step.cycles);
+    }
+}

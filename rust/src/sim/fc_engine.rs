@@ -16,14 +16,12 @@
 use crate::codec::SpikeFrame;
 
 use super::backend::{fc_backend, BackendKind, FcCompute};
-use super::memory::{AccessCounter, DataKind, MemLevel};
+use super::memory::{DataKind, MemLevel};
 
-#[derive(Debug, Clone, Default, PartialEq)]
-pub struct FcRunReport {
-    pub cycles: u64,
-    pub ops: u64,
-    pub counters: AccessCounter,
-}
+/// Per-run report — the unified
+/// [`LayerStep`](super::engine::LayerStep) every layer engine shares
+/// (`out_spikes` stays 0: output neurons never fire).
+pub type FcRunReport = super::engine::LayerStep;
 
 pub struct FcEngine {
     pub n_in: usize,
@@ -33,6 +31,7 @@ pub struct FcEngine {
     weights: Vec<i8>,
     pub bias: Vec<f32>,
     backend: Box<dyn FcCompute>,
+    timesteps: usize,
 }
 
 impl FcEngine {
@@ -42,7 +41,19 @@ impl FcEngine {
         assert_eq!(bias.len(), n_out);
         let backend = fc_backend(BackendKind::Accurate, n_in, n_out,
                                  &weights);
-        Self { n_in, n_out, scale, weights, bias, backend }
+        Self { n_in, n_out, scale, weights, bias, backend, timesteps: 1 }
+    }
+
+    /// Configure the SDT-readout timestep count (the final spike map
+    /// replays per timestep when the trait runs the engine).
+    pub fn with_timesteps(mut self, timesteps: usize) -> Self {
+        self.timesteps = timesteps.max(1);
+        self
+    }
+
+    /// Configured inference timesteps.
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
     }
 
     pub fn random(n_in: usize, n_out: usize, seed: u64) -> Self {

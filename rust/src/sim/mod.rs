@@ -9,11 +9,16 @@
 //! Functional behaviour (which spikes come out) is bit-exact against
 //! the L1/L2 reference semantics — validated by `rust/tests/` against
 //! vectors exported from python.
+//!
+//! Every per-layer engine implements the [`engine::LayerEngine`]
+//! trait; the coordinator's pipeline and the session facade compose
+//! engines exclusively through it.
 
 pub mod array;
 pub mod backend;
 pub mod conv_engine;
 pub mod energy;
+pub mod engine;
 pub mod fc_engine;
 pub mod fifo;
 pub mod linebuf;
@@ -27,10 +32,12 @@ pub mod ws_engine;
 pub use backend::BackendKind;
 pub use conv_engine::ConvEngine;
 pub use energy::{EnergyModel, EnergyReport};
+pub use engine::{LayerEngine, LayerOutput, LayerStep, LayerWeights};
 pub use fc_engine::FcEngine;
 pub use memory::{AccessCounter, DataKind, MemLevel};
 pub use pool_engine::PoolEngine;
 pub use resources::{ResourceModel, ResourceReport, Zcu102};
+pub use ws_engine::WsEngine;
 
 /// Design clock of the paper's implementation (Table V): 200 MHz.
 pub const CLK_HZ: f64 = 200e6;

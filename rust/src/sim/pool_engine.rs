@@ -3,25 +3,37 @@
 
 use crate::codec::SpikeFrame;
 
-use super::memory::{AccessCounter, DataKind, MemLevel};
+use super::memory::{DataKind, MemLevel};
 
-#[derive(Debug, Clone, Default)]
-pub struct PoolRunReport {
-    pub cycles: u64,
-    pub counters: AccessCounter,
-}
+/// Per-run report — the unified
+/// [`LayerStep`](super::engine::LayerStep) every layer engine shares
+/// (`ops` and `out_spikes` stay 0 here: OR gates are not synaptic ops).
+pub type PoolRunReport = super::engine::LayerStep;
 
 pub struct PoolEngine {
     pub in_h: usize,
     pub in_w: usize,
     pub c: usize,
+    timesteps: usize,
 }
 
 impl PoolEngine {
     pub fn new(in_h: usize, in_w: usize, c: usize) -> Self {
         assert!(in_h % 2 == 0 && in_w % 2 == 0,
                 "OR pooling needs even dimensions");
-        Self { in_h, in_w, c }
+        Self { in_h, in_w, c, timesteps: 1 }
+    }
+
+    /// Configure the inference timestep count (the pooling pass
+    /// repeats per timestep in the pipeline's cycle accounting).
+    pub fn with_timesteps(mut self, timesteps: usize) -> Self {
+        self.timesteps = timesteps.max(1);
+        self
+    }
+
+    /// Configured inference timesteps.
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
     }
 
     pub fn run(&self, input: &SpikeFrame) -> (SpikeFrame, PoolRunReport) {

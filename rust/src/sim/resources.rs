@@ -162,10 +162,10 @@ mod tests {
     #[test]
     fn table5_lut_calibration() {
         let m = ResourceModel::default();
-        let s3 = m.network(&scnn3().with_parallel_factors(&[4, 2]), 1);
+        let s3 = m.network(&scnn3().try_with_parallel_factors(&[4, 2]).unwrap(), 1);
         assert!((s3.lut as f64 - 3500.0).abs() / 3500.0 < 0.5,
                 "scnn3 lut {}", s3.lut);
-        let s5 = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        let s5 = m.network(&scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(), 1);
         assert!((s5.lut as f64 - 25520.0).abs() / 25520.0 < 0.3,
                 "scnn5 lut {}", s5.lut);
         let vm = m.network(&vmobilenet(), 1);
@@ -176,10 +176,10 @@ mod tests {
     #[test]
     fn table5_bram_calibration() {
         let m = ResourceModel::default();
-        let s5 = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        let s5 = m.network(&scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(), 1);
         assert!((s5.bram36 - 527.5).abs() / 527.5 < 0.15,
                 "scnn5 bram {}", s5.bram36);
-        let s3 = m.network(&scnn3().with_parallel_factors(&[4, 2]), 1);
+        let s3 = m.network(&scnn3().try_with_parallel_factors(&[4, 2]).unwrap(), 1);
         assert!(s3.bram36 > 2.0 && s3.bram36 < 20.0,
                 "scnn3 bram {}", s3.bram36);
     }
@@ -199,7 +199,7 @@ mod tests {
     fn parallelism_costs_logic_not_bram() {
         let m = ResourceModel::default();
         let base = m.network(&scnn5(), 1);
-        let par = m.network(&scnn5().with_parallel_factors(&[4, 4, 2, 1]), 1);
+        let par = m.network(&scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(), 1);
         assert!(par.lut > base.lut);
         assert!((par.bram36 - base.bram36).abs() < 1.0);
     }
@@ -208,8 +208,8 @@ mod tests {
     fn everything_fits_zcu102() {
         let m = ResourceModel::default();
         for net in [
-            scnn3().with_parallel_factors(&[4, 2]),
-            scnn5().with_parallel_factors(&[4, 4, 2, 1]),
+            scnn3().try_with_parallel_factors(&[4, 2]).unwrap(),
+            scnn5().try_with_parallel_factors(&[4, 4, 2, 1]).unwrap(),
             vmobilenet(),
         ] {
             assert!(m.network(&net, 2).fits(), "{} does not fit", net.name);

@@ -17,13 +17,27 @@ use super::memory::{AccessCounter, DataKind, MemLevel};
 
 pub struct WsEngine {
     inner: ConvEngine,
+    timesteps: usize,
 }
 
 impl WsEngine {
     pub fn new(layer: ConvLayer, weights: ConvWeights,
                timesteps: usize) -> Self {
         let timing = crate::dataflow::ConvLatencyParams::optimized();
-        Self { inner: ConvEngine::new(layer, weights, timing, timesteps) }
+        Self {
+            inner: ConvEngine::new(layer, weights, timing, timesteps),
+            timesteps: timesteps.max(1),
+        }
+    }
+
+    /// The conv layer this engine models.
+    pub fn layer(&self) -> &ConvLayer {
+        &self.inner.layer
+    }
+
+    /// Reset cross-frame membrane state (delegates to the OS core).
+    pub fn reset(&mut self) {
+        self.inner.neuron.reset();
     }
 
     /// Run one frame under WS accounting.
@@ -58,8 +72,7 @@ impl WsEngine {
     }
 
     fn timesteps(&self) -> usize {
-        // ConvEngine stores timesteps privately; reconstruct from vmem.
-        if self.inner.vmem_bytes() > 0 { 2 } else { 1 }
+        self.timesteps
     }
 }
 

@@ -76,6 +76,53 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Every flag/switch name the caller passed, in input order.
+    pub fn flag_names(&self) -> Vec<&str> {
+        self.flags
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.switches.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    /// Reject flags outside `known`, naming the nearest valid flag in
+    /// the error (`unknown flag --replica (did you mean --replicas?)`).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for name in self.flag_names() {
+            if known.iter().any(|k| *k == name) {
+                continue;
+            }
+            let nearest = known
+                .iter()
+                .map(|&k| (edit_distance(name, k), k))
+                .min()
+                .filter(|(d, k)| *d <= (k.len().max(name.len()) + 1) / 2);
+            return Err(match nearest {
+                Some((_, k)) => format!(
+                    "unknown flag --{name} (did you mean --{k}?)"),
+                None => format!("unknown flag --{name}"),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Levenshtein distance (small strings — the flag vocabulary).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -107,6 +154,33 @@ mod tests {
     fn positional_args() {
         let a = parse("run file1 file2 --x 1");
         assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn unknown_flags_suggest_the_nearest_valid_one() {
+        let known = &["backend", "replicas", "auto-tune", "max-batch"];
+        let a = parse("serve --replica 4");
+        let err = a.check_known(known).unwrap_err();
+        assert!(err.contains("--replica") && err.contains("--replicas"),
+                "{err}");
+        let a = parse("serve --auto-tun");
+        let err = a.check_known(known).unwrap_err();
+        assert!(err.contains("--auto-tune"), "{err}");
+        // Valid flags pass; hopeless typos get no bogus suggestion.
+        assert!(parse("serve --backend wp --auto-tune")
+            .check_known(known)
+            .is_ok());
+        let err = parse("serve --zzzzqqqq 1").check_known(known)
+            .unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("replica", "replicas"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

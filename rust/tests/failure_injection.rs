@@ -5,9 +5,10 @@
 use std::path::Path;
 
 use sti_snn::arch::NetworkSpec;
-use sti_snn::coordinator::pipeline::{LayerParams, Pipeline,
-                                     PipelineConfig};
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::model::Artifact;
+use sti_snn::session::{Session, Weights};
+use sti_snn::sim::engine::LayerWeights;
 use sti_snn::util::json::Json;
 
 fn write(dir: &Path, name: &str, contents: &[u8]) {
@@ -48,7 +49,7 @@ fn truncated_weights_blob_is_detected() {
     write(&dir, "net.json", NET_OK.as_bytes());
     write(&dir, "weights.bin", &[0u8; 5]); // needs 26
     let art = Artifact::load(&dir).unwrap();
-    let err = match art.layer_params() {
+    let err = match art.layer_weights() {
         Err(e) => e,
         Ok(_) => panic!("truncated blob must not load"),
     };
@@ -64,7 +65,7 @@ fn missing_tensor_for_layer_is_detected() {
     write(&dir, "net.json", net.as_bytes());
     write(&dir, "weights.bin", &[0u8; 26]);
     let art = Artifact::load(&dir).unwrap();
-    assert!(art.layer_params().is_err());
+    assert!(art.layer_weights().is_err());
 }
 
 #[test]
@@ -76,18 +77,37 @@ fn unknown_layer_kind_rejected() {
 }
 
 #[test]
-fn pipeline_rejects_wrong_param_count() {
+fn pipeline_rejects_wrong_weight_source_count() {
     let net = sti_snn::arch::scnn3();
-    // scnn3 needs 3 params (2 convs + fc); give 1.
+    // scnn3 needs 3 sources (2 convs + fc); give 1.
     let r = Pipeline::new(net, PipelineConfig::default(),
-                          vec![LayerParams::Random { seed: 1 }]);
+                          vec![LayerWeights::Random { seed: 1 }]);
     assert!(r.is_err());
     // And too many.
     let net = sti_snn::arch::scnn3();
     let r = Pipeline::new(
         net, PipelineConfig::default(),
-        (0..9).map(|s| LayerParams::Random { seed: s }).collect());
+        (0..9).map(|s| LayerWeights::Random { seed: s }).collect());
     assert!(r.is_err());
+}
+
+#[test]
+fn session_builder_surfaces_configuration_errors() {
+    // Unknown model name.
+    assert!(Session::builder().model("resnet50").build().is_err());
+    // No network source at all.
+    assert!(Session::builder().build().is_err());
+    // Missing artifact directory.
+    assert!(Session::builder()
+        .weights(Weights::Artifact("/nonexistent/xyz".into()))
+        .build()
+        .is_err());
+    // Invalid parallel factors are rejected at build, not at panic.
+    assert!(Session::builder()
+        .model("scnn3")
+        .parallel_factors(&[3, 2])
+        .build()
+        .is_err());
 }
 
 #[test]

@@ -7,9 +7,9 @@
 
 use std::path::PathBuf;
 
-use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::model::Artifact;
 use sti_snn::runtime::Runtime;
+use sti_snn::session::{Session, Weights};
 use sti_snn::util::rng::Rng;
 
 fn artifact_dir(name: &str) -> Option<PathBuf> {
@@ -38,12 +38,13 @@ fn artifact_loads_and_is_consistent() {
         let art = Artifact::load(&dir).unwrap();
         assert!(!art.tensors.is_empty(), "{name}: no tensors");
         // Every non-encoder conv/fc layer has weights + bias.
-        let params = art.layer_params().unwrap();
-        assert!(!params.is_empty(), "{name}: no layer params");
-        // Pipeline builds from the artifact.
-        let pipe = Pipeline::new(art.net.clone(),
-                                 PipelineConfig::default(), params);
-        assert!(pipe.is_ok(), "{name}: {:?}", pipe.err());
+        let sources = art.layer_weights().unwrap();
+        assert!(!sources.is_empty(), "{name}: no layer weights");
+        // The session facade builds the full stack from the artifact.
+        let session = Session::builder()
+            .weights(Weights::Artifact(dir.clone()))
+            .build();
+        assert!(session.is_ok(), "{name}: {:?}", session.err());
     }
 }
 
@@ -90,9 +91,9 @@ fn simulator_agrees_with_pjrt_reference() {
         return;
     }
     rt.load_hlo("model", &art.model_hlo(), art.net.input).unwrap();
-    let mut pipe = Pipeline::new(art.net.clone(),
-                                 PipelineConfig::default(),
-                                 art.layer_params().unwrap())
+    let mut session = Session::builder()
+        .weights(Weights::Artifact(dir.clone()))
+        .build()
         .unwrap();
 
     let (h, w, c) = art.net.input;
@@ -104,8 +105,7 @@ fn simulator_agrees_with_pjrt_reference() {
         let frame = rt
             .encode("encoder", &image, art.encoder_out_shape())
             .unwrap();
-        let sim_class = pipe.run(std::slice::from_ref(&frame))
-            .predictions[0];
+        let sim_class = session.infer(frame).unwrap().class;
         let logits = rt.logits("model", &image).unwrap();
         let ref_class = logits
             .iter()

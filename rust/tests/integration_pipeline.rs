@@ -115,7 +115,7 @@ fn scheduler_beats_manual_profiles() {
     let timing = ConvLatencyParams::optimized();
     let choice = scheduler::optimize_factors(&net, 54, &timing);
     for manual in [[1usize, 1], [2, 1], [2, 2], [4, 2], [1, 4]] {
-        let with = arch::scnn3().with_parallel_factors(&manual);
+        let with = arch::scnn3().try_with_parallel_factors(&manual).unwrap();
         let pes = with.total_pes();
         let lat = dataflow::pipeline_latency(&with, &timing, 1);
         if pes <= 54 {
@@ -162,7 +162,7 @@ fn timing_knobs_do_not_change_predictions() {
         (true, vec![4, 2]),
         (true, vec![8, 8]),
     ] {
-        let net = mini_net().with_parallel_factors(&factors);
+        let net = mini_net().try_with_parallel_factors(&factors).unwrap();
         let mut p = Pipeline::random(
             net, PipelineConfig { pipelined, ..Default::default() })
             .unwrap();

@@ -1,0 +1,374 @@
+//! API-equivalence tests for the `Session` facade.
+//!
+//! The session builder replaced four hand-rolled construction paths
+//! (CLI wiring, server backends, `dse` pool boot, bench/example
+//! setup). These tests pin the migration: a `Session`-built stack must
+//! produce **bit-identical spikes/logits and identical cycle / access
+//! / energy reports** to the pre-refactor construction path — the
+//! hard-coded engine-enum wiring reproduced here concretely — for
+//! both compute backends, with synthetic and artifact weights.
+
+use std::path::{Path, PathBuf};
+
+use sti_snn::arch::{Layer, NetBuilder, NetworkSpec};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::session::{Session, Weights};
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::fc_engine::FcEngine;
+use sti_snn::sim::pool_engine::PoolEngine;
+use sti_snn::sim::{AccessCounter, BackendKind, EnergyModel};
+use sti_snn::util::rng::Rng;
+
+/// The pre-refactor per-layer weight source (what `LayerParams` was).
+enum LegacySource {
+    Random { seed: u64 },
+    Conv(ConvWeights),
+    Fc { weights: Vec<i8>, scale: f32, bias: Vec<f32> },
+}
+
+/// The pre-refactor engine enum (what `coordinator::Pipeline` held).
+enum LegacyEngine {
+    Conv(ConvEngine),
+    Pool(PoolEngine),
+    Fc(FcEngine),
+}
+
+/// What the pre-refactor pipeline reported (the fields the migration
+/// must preserve bit-for-bit).
+struct LegacyReport {
+    predictions: Vec<usize>,
+    logits: Vec<Vec<f32>>,
+    layer_cycles: Vec<u64>,
+    t_max: u64,
+    t_sum: u64,
+    total_cycles: u64,
+    ops_per_frame: u64,
+    counters: AccessCounter,
+    energy_per_frame_j: f64,
+}
+
+/// Reproduce the pre-refactor construction + run loop exactly: build
+/// one concrete engine per accelerated layer from the enum, run frames
+/// sequentially with the old per-kind arms, apply Eq. (10) pipelining.
+fn legacy_run(net: &NetworkSpec, backend: BackendKind, timesteps: usize,
+              mut sources: Vec<LegacySource>, frames: &[SpikeFrame])
+              -> LegacyReport {
+    let timing = ConvLatencyParams::optimized();
+    let mut engines = Vec::new();
+    sources.reverse();
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv(c) if c.encoder => continue,
+            Layer::Conv(c) => {
+                let w = match sources.pop().expect("conv source") {
+                    LegacySource::Random { seed } => {
+                        ConvWeights::random(c, seed)
+                    }
+                    LegacySource::Conv(w) => w,
+                    LegacySource::Fc { .. } => panic!("want conv"),
+                };
+                engines.push(LegacyEngine::Conv(ConvEngine::with_backend(
+                    c.clone(), w, timing, timesteps, backend)));
+            }
+            Layer::Pool { in_h, in_w, c } => {
+                engines.push(LegacyEngine::Pool(PoolEngine::new(
+                    *in_h, *in_w, *c)));
+            }
+            Layer::Fc { n_in, n_out } => {
+                let eng = match sources.pop().expect("fc source") {
+                    LegacySource::Random { seed } => {
+                        FcEngine::random(*n_in, *n_out, seed)
+                    }
+                    LegacySource::Fc { weights, scale, bias } => {
+                        FcEngine::new(*n_in, *n_out, weights, scale, bias)
+                    }
+                    LegacySource::Conv(_) => panic!("want fc"),
+                };
+                engines.push(LegacyEngine::Fc(eng.with_backend(backend)));
+            }
+        }
+    }
+    assert!(sources.is_empty(), "unused legacy sources");
+
+    let energy_model = EnergyModel::default();
+    let mut layer_cycles = vec![0u64; engines.len()];
+    let mut layer_energy_j = vec![0f64; engines.len()];
+    let mut counters = AccessCounter::new();
+    let mut ops_total = 0u64;
+    let mut predictions = Vec::new();
+    let mut logits_all = Vec::new();
+    for (fi, frame) in frames.iter().enumerate() {
+        let mut act = frame.clone();
+        for (li, eng) in engines.iter_mut().enumerate() {
+            match eng {
+                LegacyEngine::Conv(ce) => {
+                    let (out, rep) = ce.run_frame(&act, li == 0);
+                    if fi == 0 {
+                        layer_cycles[li] = rep.cycles;
+                        layer_energy_j[li] = energy_model
+                            .dynamic(rep.ops, &rep.counters)
+                            .total_j();
+                    }
+                    ops_total += rep.ops;
+                    counters.merge(&rep.counters);
+                    act = out;
+                }
+                LegacyEngine::Pool(pe) => {
+                    let (out, rep) = pe.run(&act);
+                    if fi == 0 {
+                        layer_cycles[li] = rep.cycles * timesteps as u64;
+                        layer_energy_j[li] = energy_model
+                            .dynamic(0, &rep.counters)
+                            .total_j();
+                    }
+                    counters.merge(&rep.counters);
+                    act = out;
+                }
+                LegacyEngine::Fc(fc) => {
+                    let flat = FcEngine::flatten(&act);
+                    let reps: Vec<Vec<bool>> =
+                        (0..timesteps).map(|_| flat.clone()).collect();
+                    let (cls, logits, rep) = fc.classify_full(&reps);
+                    if fi == 0 {
+                        layer_cycles[li] = rep.cycles;
+                        layer_energy_j[li] = energy_model
+                            .dynamic(rep.ops, &rep.counters)
+                            .total_j();
+                    }
+                    ops_total += rep.ops;
+                    counters.merge(&rep.counters);
+                    predictions.push(cls);
+                    logits_all.push(logits);
+                }
+            }
+        }
+    }
+    let t_max = layer_cycles.iter().copied().max().unwrap_or(0);
+    let t_sum: u64 = layer_cycles.iter().sum();
+    let n = frames.len() as u64;
+    LegacyReport {
+        predictions,
+        logits: logits_all,
+        layer_cycles,
+        t_max,
+        t_sum,
+        total_cycles: n * t_max + (t_sum - t_max),
+        ops_per_frame: ops_total / n,
+        counters,
+        energy_per_frame_j: layer_energy_j.iter().sum(),
+    }
+}
+
+fn assert_equivalent(rep: &sti_snn::session::Report, want: &LegacyReport,
+                     ctx: &str) {
+    assert_eq!(rep.predictions, want.predictions, "{ctx}: predictions");
+    assert_eq!(rep.logits, want.logits, "{ctx}: logits");
+    assert_eq!(rep.layer_cycles, want.layer_cycles,
+               "{ctx}: layer cycles");
+    assert_eq!(rep.t_max, want.t_max, "{ctx}: t_max");
+    assert_eq!(rep.t_sum, want.t_sum, "{ctx}: t_sum");
+    assert_eq!(rep.total_cycles, want.total_cycles,
+               "{ctx}: total cycles");
+    assert_eq!(rep.ops_per_frame, want.ops_per_frame, "{ctx}: ops");
+    assert_eq!(rep.counters, want.counters, "{ctx}: access counters");
+    assert!((rep.energy_per_frame_j - want.energy_per_frame_j).abs()
+            <= 1e-15 * want.energy_per_frame_j.abs(),
+            "{ctx}: energy {} vs {}", rep.energy_per_frame_j,
+            want.energy_per_frame_j);
+}
+
+fn mini_net() -> NetworkSpec {
+    NetBuilder::new("mini", (12, 12, 2))
+        .encoder(4, 3)
+        .conv(8, 3)
+        .pool()
+        .conv(8, 3)
+        .pool()
+        .fc(10)
+        .build()
+}
+
+fn random_frames(shape: (usize, usize, usize), n: usize, seed: u64)
+                 -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.25,
+                                    &mut rng))
+        .collect()
+}
+
+/// Seeds matching `Weights::Random { seed: 1000 }`: layer i -> 1000+i.
+fn random_sources(net: &NetworkSpec) -> Vec<LegacySource> {
+    let n = net
+        .layers
+        .iter()
+        .filter(|l| match l {
+            Layer::Conv(c) => !c.encoder,
+            Layer::Pool { .. } => false,
+            Layer::Fc { .. } => true,
+        })
+        .count();
+    (0..n)
+        .map(|i| LegacySource::Random { seed: 1000 + i as u64 })
+        .collect()
+}
+
+/// Synthetic weights, both backends, T = 1 and T = 2: the session
+/// stack is bit-identical to the pre-refactor construction.
+#[test]
+fn session_matches_legacy_construction_synthetic() {
+    for net in [mini_net(), sti_snn::arch::scnn3()] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            for timesteps in [1usize, 2] {
+                let mut session = Session::builder()
+                    .network(net.clone())
+                    .weights(Weights::Random { seed: 1000 })
+                    .backend(backend)
+                    .timesteps(timesteps)
+                    .build()
+                    .unwrap();
+                let frames =
+                    random_frames(session.input_shape(), 3, 77);
+                let rep = session.infer_batch(&frames);
+                let want = legacy_run(&net, backend, timesteps,
+                                      random_sources(&net), &frames);
+                assert_equivalent(
+                    &rep, &want,
+                    &format!("{} {backend} T={timesteps}", net.name));
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Artifact weights (synthetic artifact written to a temp dir)
+// --------------------------------------------------------------------------
+
+/// tiny net: encoder conv (off-accelerator) + conv + pool + fc, with
+/// an int8 weight blob — the same layout `make artifacts` emits.
+fn write_tiny_artifact(dir: &Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    // conv layer 1 (non-encoder): 2 -> 2 channels, 3x3.
+    // taps: [co][ci][9] = 2*2*9 = 36 int8 bytes at offset 0.
+    // bias: 2 f32 = 8 bytes at offset 36.
+    // fc: 8 -> 2, w 16 bytes at 44, b 8 bytes at 60.
+    let mut blob: Vec<u8> = Vec::new();
+    blob.extend((0..36u8).map(|i| i.wrapping_mul(7)));
+    blob.extend(0.5f32.to_le_bytes());
+    blob.extend((-0.5f32).to_le_bytes());
+    blob.extend((0..16u8).map(|i| i.wrapping_mul(11)));
+    blob.extend(1.0f32.to_le_bytes());
+    blob.extend(2.0f32.to_le_bytes());
+    std::fs::write(dir.join("weights.bin"), &blob).unwrap();
+
+    let net_json = r#"{
+      "name": "tiny", "input": [4, 4, 1], "vth": 0.05, "timesteps": 1,
+      "layers": [
+        {"kind":"conv","in_h":4,"in_w":4,"in_c":1,"co":2,"k":3,
+         "pad":1,"encoder":true},
+        {"kind":"conv","in_h":4,"in_w":4,"in_c":2,"co":2,"k":3,
+         "pad":1,"encoder":false},
+        {"kind":"pool","in_h":4,"in_w":4,"in_c":2},
+        {"kind":"fc","in_h":2,"in_w":2,"in_c":2,"out":2}
+      ],
+      "tensors": [
+        {"layer":1,"name":"w","kind":"int8","shape":[2,2,9],
+         "scale":0.01,"offset":0,"len":36},
+        {"layer":1,"name":"b","kind":"f32","shape":[2],
+         "scale":1.0,"offset":36,"len":8},
+        {"layer":3,"name":"w","kind":"int8","shape":[8,2],
+         "scale":0.02,"offset":44,"len":16},
+        {"layer":3,"name":"b","kind":"f32","shape":[2],
+         "scale":1.0,"offset":60,"len":8}
+      ]
+    }"#;
+    std::fs::write(dir.join("net.json"), net_json).unwrap();
+}
+
+/// The legacy sources for the tiny artifact, decoded by hand exactly
+/// as the pre-refactor `Artifact::layer_params` did.
+fn tiny_artifact_sources(net: &NetworkSpec) -> Vec<LegacySource> {
+    let conv = match &net.layers[1] {
+        Layer::Conv(c) => c.clone(),
+        _ => panic!("layer 1 is the accelerated conv"),
+    };
+    let taps: Vec<i8> =
+        (0..36u8).map(|i| i.wrapping_mul(7) as i8).collect();
+    let conv_w = ConvWeights::new(&conv, taps, 0.01, vec![0.5, -0.5],
+                                  0.05);
+    let fc_w: Vec<i8> =
+        (0..16u8).map(|i| i.wrapping_mul(11) as i8).collect();
+    vec![
+        LegacySource::Conv(conv_w),
+        LegacySource::Fc {
+            weights: fc_w,
+            scale: 0.02,
+            bias: vec![1.0, 2.0],
+        },
+    ]
+}
+
+/// Artifact weights, both backends: the session stack loaded via
+/// `Weights::Artifact` matches the hand-decoded legacy construction.
+#[test]
+fn session_matches_legacy_construction_artifact() {
+    let dir: PathBuf =
+        std::env::temp_dir().join("sti_snn_prop_session_artifact");
+    write_tiny_artifact(&dir);
+    for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        let mut session = Session::builder()
+            .weights(Weights::Artifact(dir.clone()))
+            .backend(backend)
+            .build()
+            .unwrap();
+        assert_eq!(session.net().name, "tiny");
+        assert_eq!(session.input_shape(), (4, 4, 2));
+        let frames = random_frames((4, 4, 2), 4, 99);
+        let rep = session.infer_batch(&frames);
+        let want = legacy_run(session.net(), backend, 1,
+                              tiny_artifact_sources(session.net()),
+                              &frames);
+        assert_equivalent(&rep, &want, &format!("artifact {backend}"));
+    }
+}
+
+/// An explicit network that doesn't describe the artifact is rejected
+/// at build — artifact tensors must never be paired with foreign
+/// layer geometry.
+#[test]
+fn session_rejects_network_artifact_mismatch() {
+    let dir: PathBuf =
+        std::env::temp_dir().join("sti_snn_prop_session_mismatch");
+    write_tiny_artifact(&dir);
+    let err = Session::builder()
+        .network(sti_snn::arch::scnn3())
+        .weights(Weights::Artifact(dir))
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("does not match"), "{err:#}");
+}
+
+/// The two backends agree with each other through the facade too
+/// (bit-exact spikes AND identical reports) — the serving guarantee.
+#[test]
+fn session_backends_are_bit_exact_through_the_facade() {
+    let net = mini_net();
+    let mut reports = Vec::new();
+    for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        let mut session = Session::builder()
+            .network(net.clone())
+            .backend(backend)
+            .build()
+            .unwrap();
+        let frames = random_frames(session.input_shape(), 2, 55);
+        reports.push(session.infer_batch(&frames));
+    }
+    let (a, b) = (&reports[0], &reports[1]);
+    assert_eq!(a.predictions, b.predictions);
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.layer_cycles, b.layer_cycles);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.ops_per_frame, b.ops_per_frame);
+    assert_eq!(a.counters, b.counters);
+}
