@@ -56,6 +56,36 @@ fn compare(set: &mut BenchSet, name: &str, l: ConvLayer, seed: u64,
     (acc_ns, wp_ns)
 }
 
+/// Intra-frame band scaling on one layer: bit-exactness gate against
+/// the single-band run, then frames/s per band count.
+fn band_scaling(set: &mut BenchSet, name: &str, l: ConvLayer, seed: u64,
+                rate: f64, rng: &mut Rng) {
+    let w = ConvWeights::random(&l, seed);
+    let input = SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, rng);
+    let timing = ConvLatencyParams::optimized();
+    let mut base = ConvEngine::with_backend(
+        l.clone(), w.clone(), timing, 1, BackendKind::WordParallel);
+    let (o1, r1) = base.run_frame(&input, true);
+    let mut base_ns = 0.0;
+    for bands in [1usize, 2, 4] {
+        let mut eng = ConvEngine::with_backend(
+            l.clone(), w.clone(), timing, 1, BackendKind::WordParallel)
+            .with_intra_parallel(bands);
+        let (ob, rb) = eng.run_frame(&input, true);
+        assert_eq!(o1, ob, "{name}: bands={bands} diverges functionally");
+        assert_eq!(r1, rb, "{name}: bands={bands} diverges on reports");
+        let r = set.run(&format!("{name} [wp bands={bands}]"), || {
+            std::hint::black_box(eng.run_frame(&input, true));
+        });
+        if bands == 1 {
+            base_ns = r.median_ns;
+        } else {
+            println!("    -> {bands} bands: {:.2}x over single band",
+                     base_ns / r.median_ns);
+        }
+    }
+}
+
 fn main() {
     let mut set = BenchSet::new("conv engine (cycle-level sim speed)");
     let mut rng = Rng::new(1);
@@ -90,4 +120,14 @@ fn main() {
             layer(ConvMode::Depthwise, 32, 32, 14, 1), 4, 0.25, &mut rng);
     compare(&mut set, "pointwise 14x14 32->64",
             layer(ConvMode::Pointwise, 32, 64, 14, 1), 5, 0.25, &mut rng);
+
+    // CIFAR-scale synthetic layer (32x32 frame, scnn5 conv1-sized
+    // post-encoder geometry) — the acceptance workload for the
+    // zero-allocation incremental hot path, plus intra-frame band
+    // scaling on top of the word-parallel backend.
+    compare(&mut set, "standard 32x32 64->64 (cifar-scale)",
+            layer(ConvMode::Standard, 64, 64, 32, 1), 9, 0.15, &mut rng);
+    band_scaling(&mut set, "standard 32x32 64->64 (cifar-scale)",
+                 layer(ConvMode::Standard, 64, 64, 32, 1), 9, 0.15,
+                 &mut rng);
 }

@@ -4,7 +4,7 @@
 //! last so a pixel's spike vector (all C channels, channel-sorted) is
 //! contiguous — the paper's compressed & sorted representation.
 
-use super::SpikeVector;
+use super::{or_bits, SpikeVector};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -90,20 +90,121 @@ impl SpikeFrame {
     /// Extract the spike vector (all channels) at one pixel.
     pub fn vector(&self, y: usize, x: usize) -> SpikeVector {
         let mut v = SpikeVector::zeros(self.c);
-        for ch in 0..self.c {
-            if self.get(y, x, ch) {
-                v.set(ch);
-            }
-        }
+        self.vector_into(y, x, &mut v);
         v
     }
 
-    /// Write a spike vector into one pixel.
+    /// Extract one pixel's spike vector into `v`, overwriting it —
+    /// word-level (whole words shifted out of the frame's bitvec), so
+    /// row ingest into the line buffer is memcpy-shaped instead of a
+    /// bit-by-bit walk (§Perf hot path).
+    pub fn vector_into(&self, y: usize, x: usize, v: &mut SpikeVector) {
+        debug_assert_eq!(v.channels, self.c);
+        self.pixel_words(y, x, v.words_mut(), false);
+    }
+
+    /// OR one pixel's spike vector into `v` — the pooling reduce
+    /// primitive (Fig. 7b), word-level.
+    pub fn or_vector_into(&self, y: usize, x: usize, v: &mut SpikeVector) {
+        debug_assert_eq!(v.channels, self.c);
+        self.pixel_words(y, x, v.words_mut(), true);
+    }
+
+    /// Extract the pixel's `c` bits, LSB-aligned, into `dst` words
+    /// (overwrite or OR).
+    fn pixel_words(&self, y: usize, x: usize, dst: &mut [u64], or: bool) {
+        let pos = (y * self.w + x) * self.c;
+        let n = self.c;
+        let nw = n.div_ceil(64);
+        debug_assert!(dst.len() >= nw);
+        for (i, d) in dst.iter_mut().enumerate().take(nw) {
+            let bit = pos + i * 64;
+            let (word, off) = (bit / 64, bit % 64);
+            let mut w = self.bits[word] >> off;
+            if off > 0 {
+                if let Some(&hi) = self.bits.get(word + 1) {
+                    w |= hi << (64 - off);
+                }
+            }
+            let take = (n - i * 64).min(64);
+            if take < 64 {
+                w &= (1u64 << take) - 1;
+            }
+            if or {
+                *d |= w;
+            } else {
+                *d = w;
+            }
+        }
+        if !or {
+            for d in dst.iter_mut().skip(nw) {
+                *d = 0;
+            }
+        }
+    }
+
+    /// True when no channel spikes at `(y, x)` — word-level and
+    /// allocation-free (the event-codec stats hot path).
+    pub fn pixel_is_empty(&self, y: usize, x: usize) -> bool {
+        let start = (y * self.w + x) * self.c;
+        let end = start + self.c;
+        let (w0, w1) = (start / 64, (end - 1) / 64);
+        for w in w0..=w1 {
+            let mut word = self.bits[w];
+            if w == w0 {
+                word &= !0u64 << (start % 64);
+            }
+            if w == w1 {
+                let top = end - w * 64; // in 1..=64
+                if top < 64 {
+                    word &= (1u64 << top) - 1;
+                }
+            }
+            if word != 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Write (OR) a spike vector into one pixel — word-level.
     pub fn set_vector(&mut self, y: usize, x: usize, v: &SpikeVector) {
         debug_assert_eq!(v.channels, self.c);
-        for ch in v.iter_active() {
-            self.set(y, x, ch);
+        let pos = (y * self.w + x) * self.c;
+        or_bits(&mut self.bits, pos, v.words(), self.c);
+    }
+
+    /// Zero every bit in place (frame reuse across timesteps — the
+    /// zero-allocation hot path never rebuilds output frames).
+    pub fn clear(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Reshape to `(h, w, c)` and zero the contents, reusing the bit
+    /// buffer when the word count already matches (it only allocates
+    /// on a genuine shape change — i.e. never in steady state).
+    pub fn reset(&mut self, h: usize, w: usize, c: usize) {
+        let words = (h * w * c).div_ceil(64);
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        if self.bits.len() == words {
+            self.clear();
+        } else {
+            self.bits.clear();
+            self.bits.resize(words, 0);
         }
+    }
+
+    /// OR `src`'s rows into rows `[y0, y0 + src.h)` of `self` — one
+    /// word-level pass, used to merge intra-frame band outputs (bands
+    /// may share a boundary word, so each writes its own frame and the
+    /// coordinator merges deterministically).
+    pub fn or_rows_from(&mut self, src: &SpikeFrame, y0: usize) {
+        assert_eq!((self.w, self.c), (src.w, src.c), "band shape");
+        assert!(y0 + src.h <= self.h, "band rows out of range");
+        or_bits(&mut self.bits, y0 * self.w * self.c, &src.bits,
+                src.h * src.w * src.c);
     }
 
     /// Total spike count.
@@ -149,6 +250,83 @@ mod tests {
         assert_eq!(v.popcount(), 2);
         assert!(v.get(0) && v.get(69));
         assert!(f.vector(0, 0).is_empty());
+    }
+
+    /// Word-level extraction equals the bit-by-bit definition on
+    /// channel counts that straddle word boundaries at odd offsets.
+    #[test]
+    fn vector_into_matches_bitwise_walk() {
+        let mut rng = Rng::new(17);
+        for c in [1, 3, 63, 64, 65, 130] {
+            let f = SpikeFrame::random(3, 5, c, 0.4, &mut rng);
+            let mut v = SpikeVector::zeros(c);
+            for y in 0..3 {
+                for x in 0..5 {
+                    f.vector_into(y, x, &mut v);
+                    for ch in 0..c {
+                        assert_eq!(v.get(ch), f.get(y, x, ch),
+                                   "c={c} ({y},{x},{ch})");
+                    }
+                    // OR variant accumulates instead of overwriting.
+                    let before = v.popcount();
+                    f.or_vector_into(y, x, &mut v);
+                    assert_eq!(v.popcount(), before);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_is_empty_matches_vector() {
+        let mut rng = Rng::new(21);
+        for c in [1, 5, 64, 100] {
+            let f = SpikeFrame::random(4, 6, c, 0.05, &mut rng);
+            for y in 0..4 {
+                for x in 0..6 {
+                    assert_eq!(f.pixel_is_empty(y, x),
+                               f.vector(y, x).is_empty(),
+                               "c={c} ({y},{x})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_reuses_and_reshapes() {
+        let mut f = SpikeFrame::zeros(4, 4, 8);
+        f.set(1, 2, 3);
+        f.reset(4, 4, 8);
+        assert_eq!(f.count(), 0);
+        f.reset(2, 2, 3);
+        assert_eq!((f.h, f.w, f.c), (2, 2, 3));
+        f.set(1, 1, 2);
+        assert!(f.get(1, 1, 2));
+    }
+
+    #[test]
+    fn or_rows_from_places_band_rows() {
+        let mut rng = Rng::new(23);
+        let full = SpikeFrame::random(6, 4, 3, 0.5, &mut rng);
+        // Split into two bands, merge back, expect equality.
+        let mut top = SpikeFrame::zeros(2, 4, 3);
+        let mut bot = SpikeFrame::zeros(4, 4, 3);
+        for y in 0..6 {
+            for x in 0..4 {
+                for ch in 0..3 {
+                    if full.get(y, x, ch) {
+                        if y < 2 {
+                            top.set(y, x, ch);
+                        } else {
+                            bot.set(y - 2, x, ch);
+                        }
+                    }
+                }
+            }
+        }
+        let mut merged = SpikeFrame::zeros(6, 4, 3);
+        merged.or_rows_from(&top, 0);
+        merged.or_rows_from(&bot, 2);
+        assert_eq!(merged, full);
     }
 
     #[test]

@@ -93,6 +93,50 @@ impl SpikeVector {
     pub fn words(&self) -> &[u64] {
         &self.words
     }
+
+    /// Mutable raw words — the word-level ingest path
+    /// ([`SpikeFrame::vector_into`] writes whole words instead of
+    /// testing bits one by one; §Perf hot path).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Zero every bit in place (buffer reuse across frames — the
+    /// zero-allocation hot path never rebuilds vectors).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+}
+
+/// OR `nbits` bits of `src` (LSB-first words) into `dst` at bit offset
+/// `pos`; returns the offset past the written range. Target bits must
+/// currently be zero when an overwrite (rather than an OR) is
+/// intended. The single word-level bit-packing primitive shared by the
+/// frame codec and the word-parallel compute backend.
+#[inline]
+pub fn or_bits(dst: &mut [u64], mut pos: usize, src: &[u64],
+               nbits: usize) -> usize {
+    let mut remaining = nbits;
+    let mut si = 0;
+    while remaining > 0 {
+        let take = remaining.min(64);
+        let mut w = src[si];
+        if take < 64 {
+            w &= (1u64 << take) - 1;
+        }
+        let (word, off) = (pos / 64, pos % 64);
+        dst[word] |= w << off;
+        if off + take > 64 {
+            // off >= 1 here (take <= 64), so the shift is in range.
+            dst[word + 1] |= w >> (64 - off);
+        }
+        pos += take;
+        remaining -= take;
+        si += 1;
+    }
+    pos
 }
 
 /// One spike event on the inter-layer link: pixel coordinates + the
@@ -145,6 +189,27 @@ impl EventCodec {
         (usize::BITS - (self.h - 1).leading_zeros()) as u64
             + (usize::BITS - (self.w - 1).leading_zeros()) as u64
             + self.c as u64
+    }
+
+    /// Wire statistics of encoding `frame` — identical numbers to
+    /// [`EventCodec::encode`] without materialising the event list
+    /// (allocation-free; the pipeline's per-batch ratio accounting).
+    pub fn stats(&self, frame: &SpikeFrame) -> CodecStats {
+        assert_eq!((frame.h, frame.w, frame.c), (self.h, self.w, self.c));
+        let mut events = 0usize;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                if !frame.pixel_is_empty(y, x) {
+                    events += 1;
+                }
+            }
+        }
+        CodecStats {
+            events,
+            pixels: self.h * self.w,
+            encoded_bits: events as u64 * self.bits_per_event(),
+            dense_bits: (self.h * self.w * self.c) as u64,
+        }
     }
 
     /// Encode a frame into its non-empty pixel events (+ wire stats).
@@ -242,6 +307,40 @@ mod tests {
         let f = SpikeFrame::random(32, 32, 64, 0.9, &mut rng);
         let (_, stats) = codec.encode(&f);
         assert!(stats.ratio() < 1.0);
+    }
+
+    /// The allocation-free stats pass reports exactly what encode
+    /// reports.
+    #[test]
+    fn stats_match_encode() {
+        let mut rng = Rng::new(19);
+        for (c, rate) in [(3, 0.3), (64, 0.01), (70, 0.2)] {
+            let f = SpikeFrame::random(9, 7, c, rate, &mut rng);
+            let codec = EventCodec::new(9, 7, c);
+            let (_, want) = codec.encode(&f);
+            assert_eq!(codec.stats(&f), want, "c={c}");
+        }
+    }
+
+    #[test]
+    fn or_bits_packs_across_word_boundaries() {
+        // Three 40-bit chunks: bits straddle the first word boundary.
+        let mut dst = vec![0u64; 2];
+        let mut pos = 0;
+        for k in 0..3u64 {
+            let src = [0b1011 | (k << 36)];
+            pos = or_bits(&mut dst, pos, &src, 40);
+        }
+        assert_eq!(pos, 120);
+        for k in 0..3 {
+            let base = k * 40;
+            for (bit, want) in [(0, true), (1, true), (2, false),
+                                (3, true)] {
+                let p = base + bit;
+                let got = (dst[p / 64] >> (p % 64)) & 1 == 1;
+                assert_eq!(got, want, "chunk {k} bit {bit}");
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::dataflow::ConvLatencyParams;
 use crate::sim::backend::BackendKind;
 use crate::sim::energy::{EnergyModel, EnergyReport};
 use crate::sim::engine::{build_engines, random_sources, EngineConfig,
-                         LayerEngine, LayerOutput, LayerWeights};
+                         LayerEngine, LayerResult, LayerWeights};
 use crate::sim::memory::AccessCounter;
 use crate::sim::resources::{ResourceModel, ResourceReport};
 use crate::sim::{cycles_to_ms, CLK_HZ};
@@ -34,6 +34,9 @@ pub struct PipelineConfig {
     /// Functional compute backend for every engine (bit-exact across
     /// kinds; cycle / traffic reports are identical — `sim::backend`).
     pub backend: BackendKind,
+    /// Intra-frame row bands per conv engine (scoped worker threads;
+    /// host-side speed only — reports are band-invariant). Default 1.
+    pub intra_parallel: usize,
 }
 
 impl Default for PipelineConfig {
@@ -45,6 +48,7 @@ impl Default for PipelineConfig {
             energy: EnergyModel::default(),
             resources: ResourceModel::default(),
             backend: BackendKind::Accurate,
+            intra_parallel: 1,
         }
     }
 }
@@ -115,6 +119,10 @@ pub struct Pipeline {
     pub config: PipelineConfig,
     engines: Vec<Box<dyn LayerEngine>>,
     codecs: Vec<Option<EventCodec>>,
+    /// Per-layer activation buffers, reused across frames (the
+    /// zero-allocation hot path: engines write into these through
+    /// [`LayerEngine::process_frame_into`]).
+    bufs: Vec<SpikeFrame>,
 }
 
 impl Pipeline {
@@ -130,6 +138,7 @@ impl Pipeline {
             timing: config.timing,
             timesteps: config.timesteps,
             backend: config.backend,
+            intra_parallel: config.intra_parallel,
         };
         let engines = build_engines(&net, &cfg, sources)?;
         Ok(Self::from_engines(net, config, engines))
@@ -140,7 +149,9 @@ impl Pipeline {
     pub fn from_engines(net: NetworkSpec, config: PipelineConfig,
                         engines: Vec<Box<dyn LayerEngine>>) -> Self {
         let codecs = engines.iter().map(|e| e.event_codec()).collect();
-        Self { net, config, engines, codecs }
+        let bufs =
+            engines.iter().map(|_| SpikeFrame::zeros(0, 0, 0)).collect();
+        Self { net, config, engines, codecs, bufs }
     }
 
     /// Convenience: random weights everywhere (hardware experiments).
@@ -168,37 +179,42 @@ impl Pipeline {
         let mut predictions = Vec::new();
         let mut logits_all = Vec::new();
 
+        let n_engines = self.engines.len();
+        let engines = &mut self.engines;
+        let bufs = &mut self.bufs;
+        let codecs = &self.codecs;
+        let energy = &self.config.energy;
         for (fi, frame) in frames.iter().enumerate() {
-            let mut act = frame.clone();
-            for (li, eng) in self.engines.iter_mut().enumerate() {
+            for li in 0..n_engines {
+                // Zero-copy chaining: engine li reads the previous
+                // layer's reusable buffer and writes its own.
+                let (prev, cur) = bufs.split_at_mut(li);
+                let input: &SpikeFrame =
+                    if li == 0 { frame } else { &prev[li - 1] };
+                let eng = &mut engines[li];
                 if fi == 0 {
                     layer_names[li] = format!("{}{li}{}", eng.kind(),
                                               eng.label_detail());
                     // Inter-layer event stream accounting (first frame
                     // only — ratios are representative).
-                    if let Some(codec) = &self.codecs[li] {
-                        let (_, stats) = codec.encode(&act);
-                        codec_ratios.push(stats.ratio());
+                    if let Some(codec) = &codecs[li] {
+                        codec_ratios.push(codec.stats(input).ratio());
                     }
                 }
                 let off_chip = li == 0;
-                let (out, step) = eng.process_frame(&act, off_chip);
+                let (res, step) =
+                    eng.process_frame_into(input, off_chip, &mut cur[0]);
                 if fi == 0 {
                     layer_cycles[li] = step.cycles;
-                    layer_energy[li] = self
-                        .config
-                        .energy
-                        .dynamic(step.ops, &step.counters);
+                    layer_energy[li] = energy.dynamic(step.ops,
+                                                      &step.counters);
                     layer_vmem[li] = eng.vmem_bytes();
                 }
                 ops_total += step.ops;
                 counters.merge(&step.counters);
-                match out {
-                    LayerOutput::Frame(f) => act = f,
-                    LayerOutput::Classified { class, logits } => {
-                        predictions.push(class);
-                        logits_all.push(logits);
-                    }
+                if let LayerResult::Classified { class, logits } = res {
+                    predictions.push(class);
+                    logits_all.push(logits);
                 }
             }
         }
@@ -398,6 +414,53 @@ mod tests {
         assert_eq!(ra.total_cycles, rw.total_cycles);
         assert_eq!(ra.ops_per_frame, rw.ops_per_frame);
         assert_eq!(ra.counters, rw.counters);
+    }
+
+    /// Intra-frame row bands change host speed only: the whole
+    /// pipeline report is bit-identical across band counts.
+    #[test]
+    fn intra_parallel_pipeline_is_bit_exact() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut serial = Pipeline::random(net.clone(),
+                                          PipelineConfig::default())
+            .unwrap();
+        let rs = serial.run(&f);
+        for bands in [2, 4] {
+            let mut banded = Pipeline::random(
+                net.clone(),
+                PipelineConfig {
+                    intra_parallel: bands,
+                    backend: BackendKind::WordParallel,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let rb = banded.run(&f);
+            assert_eq!(rs.predictions, rb.predictions, "bands={bands}");
+            assert_eq!(rs.logits, rb.logits, "bands={bands}");
+            assert_eq!(rs.total_cycles, rb.total_cycles, "bands={bands}");
+            assert_eq!(rs.layer_cycles, rb.layer_cycles, "bands={bands}");
+            assert_eq!(rs.ops_per_frame, rb.ops_per_frame,
+                       "bands={bands}");
+            assert_eq!(rs.counters, rb.counters, "bands={bands}");
+        }
+    }
+
+    /// Reusable activation buffers do not leak state between frames:
+    /// running the same batch twice reproduces the first report.
+    #[test]
+    fn repeated_batches_are_deterministic() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut p = Pipeline::random(net, PipelineConfig::default())
+            .unwrap();
+        let r1 = p.run(&f);
+        let r2 = p.run(&f);
+        assert_eq!(r1.predictions, r2.predictions);
+        assert_eq!(r1.logits, r2.logits);
+        assert_eq!(r1.total_cycles, r2.total_cycles);
+        assert_eq!(r1.counters, r2.counters);
     }
 
     #[test]

@@ -43,6 +43,10 @@ pub struct CalibrationConfig {
     pub timesteps: usize,
     /// Backends to time on the host (counters come from the first).
     pub backends: Vec<BackendKind>,
+    /// Intra-frame row bands the probe engines run with: the fitted
+    /// host-ns/frame then reflects the serving configuration's band
+    /// count (counter scales are band-invariant).
+    pub intra_parallel: usize,
 }
 
 impl Default for CalibrationConfig {
@@ -55,6 +59,7 @@ impl Default for CalibrationConfig {
             seed: 42,
             timesteps: 1,
             backends: vec![BackendKind::Accurate, BackendKind::WordParallel],
+            intra_parallel: 1,
         }
     }
 }
@@ -215,7 +220,8 @@ pub fn calibrate(net: &NetworkSpec, timing: &ConvLatencyParams,
         for (bi, &backend) in cfg.backends.iter().enumerate() {
             let weights = ConvWeights::random(&layer, cfg.seed + i as u64);
             let mut eng = ConvEngine::with_backend(
-                layer.clone(), weights, *timing, timesteps, backend);
+                layer.clone(), weights, *timing, timesteps, backend)
+                .with_intra_parallel(cfg.intra_parallel);
             let t0 = Instant::now();
             let (_, rep) = eng.run_frame(&input, off_chip);
             host_ns[bi] += t0.elapsed().as_nanos() as f64;
@@ -354,6 +360,28 @@ mod tests {
         assert_eq!(cal.host_ns_per_frame.len(), 2);
         assert!(cal.host_ns(BackendKind::Accurate).unwrap() > 0.0);
         assert!(cal.host_ns(BackendKind::WordParallel).unwrap() > 0.0);
+    }
+
+    /// Intra-frame bands change host timing only: the fitted counter
+    /// and cycle scales are identical to the single-band fit, and the
+    /// host-ns/frame refit still records every backend.
+    #[test]
+    fn band_calibration_refits_host_time_with_invariant_scales() {
+        let timing = ConvLatencyParams::optimized();
+        let base = calibrate(&std_net(), &timing,
+                             &CalibrationConfig::default());
+        let banded = calibrate(&std_net(), &timing, &CalibrationConfig {
+            intra_parallel: 2,
+            ..Default::default()
+        });
+        assert_eq!(base.cycle_scales, banded.cycle_scales);
+        assert_eq!(base.input_dram_scale, banded.input_dram_scale);
+        assert_eq!(base.input_bram_scale, banded.input_bram_scale);
+        assert_eq!(base.weight_scale, banded.weight_scale);
+        assert_eq!(base.output_scale, banded.output_scale);
+        assert_eq!(base.op_activity, banded.op_activity);
+        assert!(banded.host_ns(BackendKind::Accurate).unwrap() > 0.0);
+        assert!(banded.host_ns(BackendKind::WordParallel).unwrap() > 0.0);
     }
 
     #[test]

@@ -97,6 +97,10 @@ pub struct AutoTuneOptions {
     pub timesteps: usize,
     /// Calibration probe firing rate.
     pub rate: f64,
+    /// Intra-frame row bands the served pipelines will run with; the
+    /// calibration probes run the same way so the fitted host-ns/frame
+    /// (and thus the chosen backend/replica split) matches what boots.
+    pub intra_parallel: usize,
 }
 
 impl Default for AutoTuneOptions {
@@ -109,6 +113,7 @@ impl Default for AutoTuneOptions {
                 .clamp(1, 8),
             timesteps: 1,
             rate: CalibrationConfig::default().rate,
+            intra_parallel: 1,
         }
     }
 }
@@ -124,6 +129,7 @@ pub fn auto_tune(net: &NetworkSpec, opts: &AutoTuneOptions)
         calibration: calibrate(net, &timing, &CalibrationConfig {
             rate: opts.rate,
             timesteps: opts.timesteps,
+            intra_parallel: opts.intra_parallel,
             ..Default::default()
         }),
         timing,

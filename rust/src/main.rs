@@ -78,6 +78,11 @@ fn usage() {
          \x20                                        --synthetic), boot\n\
          \x20                                        the winning factors/\n\
          \x20                                        replicas/backend\n\
+         \x20 --intra-parallel N   run/serve/explore intra-frame row\n\
+         \x20                                        bands per conv\n\
+         \x20                                        engine (scoped\n\
+         \x20                                        threads; bit-exact\n\
+         \x20                                        reports; default 1)\n\
          \x20 --timesteps T        all               inference timesteps\n\
          \x20                                        (default 1)\n\
          \x20 --frames N           run/table4/figs   frames per run\n\
@@ -118,11 +123,14 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
         }
         "optimize" => &["model", "timesteps", "pe-budget"],
         "explore" => &["model", "timesteps", "rate", "pe-budget",
-                       "max-replicas", "no-calibrate", "report"],
-        "run" => &["model", "timesteps", "frames", "rate", "backend"],
+                       "max-replicas", "no-calibrate", "report",
+                       "intra-parallel"],
+        "run" => &["model", "timesteps", "frames", "rate", "backend",
+                   "intra-parallel"],
         "serve" => &["model", "timesteps", "rate", "backend", "addr",
                      "replicas", "synthetic", "auto-tune", "pe-budget",
-                     "max-replicas", "max-batch", "max-wait-ms"],
+                     "max-replicas", "max-batch", "max-wait-ms",
+                     "intra-parallel"],
         _ => COMMON,
     }
 }
@@ -475,6 +483,7 @@ fn cost_model_for(args: &Args, net: &arch::NetworkSpec, timesteps: usize)
                                            &dse::CalibrationConfig {
             rate,
             timesteps,
+            intra_parallel: args.get_usize("intra-parallel", 1),
             ..Default::default()
         });
     }
@@ -519,15 +528,17 @@ fn run(args: &Args) -> anyhow::Result<()> {
     let frames = args.get_usize("frames", 4);
     let rate = args.get_f64("rate", 0.15);
     let t = args.get_usize("timesteps", 1);
+    let intra = args.get_usize("intra-parallel", 1);
     let backend = backend_for(args)?.unwrap_or_default();
     let mut session = Session::builder()
         .network(net)
         .backend(backend)
         .timesteps(t)
+        .intra_parallel(intra)
         .build()?;
     let shape = session.input_shape();
     println!("running {frames} frames of {shape:?} at rate {rate}, T={t}, \
-              backend={backend}");
+              backend={backend}, intra-parallel={intra}");
     let rep = session.infer_batch(&synth_frames(shape, frames, rate, 17));
     println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
               steady-state {:.1} FPS",
@@ -583,6 +594,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         let mut builder = Session::builder()
             .model(name)
             .timesteps(t)
+            .intra_parallel(args.get_usize("intra-parallel", 1))
             .queue(max_batch, max_wait);
         if let Some(b) = backend {
             builder = builder.backend(b);
@@ -605,6 +617,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                                              defaults.max_replicas),
                 timesteps: t,
                 rate: args.get_f64("rate", defaults.rate),
+                intra_parallel: args.get_usize("intra-parallel", 1),
             });
         }
         let session = builder.build()?;
@@ -640,6 +653,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         .weights(Weights::Artifact(dir))
         .backend(backend.unwrap_or_default())
         .timesteps(t)
+        .intra_parallel(args.get_usize("intra-parallel", 1))
         .build()?;
     let (h, w, c) = art.net.input;
     let backend = SimBackend {

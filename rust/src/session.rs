@@ -31,6 +31,8 @@
 //!   `artifacts/<model>/`).
 //! * **design point** — `parallel_factors`, `timesteps`, `pipelined`,
 //!   compute `backend`, and energy/resource models.
+//! * **host parallelism** — `intra_parallel` (row bands inside one
+//!   frame, bit-exact) alongside `replicas` (whole-frame replicas).
 //! * **serving shape** — `replicas` (N-pipeline pool behind one
 //!   queue) and the queue's batching policy.
 //! * **auto-tuning** — `auto_tune` runs the `dse` calibrate→explore
@@ -241,6 +243,7 @@ pub struct SessionBuilder {
     resources: Option<ResourceModel>,
     parallel_factors: Option<Vec<usize>>,
     replicas: Option<usize>,
+    intra_parallel: Option<usize>,
     auto_tune: Option<dse::AutoTuneOptions>,
     max_batch: Option<usize>,
     max_wait: Option<Duration>,
@@ -320,6 +323,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Intra-frame parallelism: split each conv layer's output rows
+    /// into `n` bands processed by scoped worker threads (default 1).
+    /// Host-side speed only — spikes, cycles, ops, and access
+    /// counters are architectural and band-invariant (pinned by
+    /// `tests/prop_session.rs`). Orthogonal to `replicas` (which
+    /// parallelises across frames, not within one).
+    pub fn intra_parallel(mut self, n: usize) -> Self {
+        self.intra_parallel = Some(n.max(1));
+        self
+    }
+
     /// Run design-space exploration at build time and boot the winning
     /// configuration (factors, replica count, compute backend).
     /// Explicit `replicas` / `backend` / `parallel_factors` settings
@@ -380,6 +394,9 @@ impl SessionBuilder {
         if let Some(opts) = &self.auto_tune {
             let mut opts = opts.clone();
             opts.timesteps = timesteps;
+            // Probe with the band count the session will serve with,
+            // so the fitted host-ns/frame matches what boots.
+            opts.intra_parallel = self.intra_parallel.unwrap_or(1);
             if let Some(r) = self.replicas {
                 opts.max_replicas = r;
             }
@@ -428,6 +445,7 @@ impl SessionBuilder {
             energy: self.energy.unwrap_or_default(),
             resources: self.resources.unwrap_or_default(),
             backend,
+            intra_parallel: self.intra_parallel.unwrap_or(1),
         };
 
         let sources: Vec<LayerWeights> = match (&weights, &artifact) {

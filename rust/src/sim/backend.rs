@@ -28,14 +28,30 @@
 //!   branchless and streaming — the word-level win the compressed &
 //!   sorted spike-vector layout (paper SectionIV-C) was built for.
 //!
+//! ## Incremental sliding-window protocol (§Perf)
+//!
+//! Both backends keep the decoded/packed window state **per column**:
+//! as the engine walks `ox` along an output row, [`ConvCompute::advance`]
+//! shifts out the leftmost column and appends one new `Kh x 1` column —
+//! O(Ci) incremental work per output pixel — exactly the line-buffer
+//! reuse the hardware's Fig. 7a fill pipeline performs.  The packed
+//! field string is laid out **column-major** (`pos = (c*Kh + r)*Ci +
+//! ci`), so the word-parallel slide is one whole-string shift by
+//! `Kh*Ci` bits plus one column pack.  [`ConvCompute::begin_field`] is
+//! the full-repack fallback; both paths produce bit-identical state,
+//! pinned by `tests/prop_backend.rs`.
+//!
 //! Both backends produce identical spikes, identical op counts, and the
 //! engines charge identical (architectural) cycles and memory accesses
 //! regardless of backend — pinned by `tests/prop_backend.rs`.
 
+use std::sync::Arc;
+
 use crate::arch::{ConvLayer, ConvMode};
-use crate::codec::SpikeVector;
+use crate::codec::or_bits;
 
 use super::conv_engine::ConvWeights;
+use super::linebuf::LineBuffer;
 use super::pe::Acc;
 
 /// Which functional backend an engine computes with.
@@ -77,23 +93,46 @@ impl std::fmt::Display for BackendKind {
 // Conv backends
 // ---------------------------------------------------------------------------
 
-/// Per-layer conv compute backend. The engine feeds it one receptive
-/// field at a time ([`ConvCompute::begin_field`], once per output
-/// pixel) and then asks for the psum of each output channel of the Co
-/// walk — so per-field preprocessing (event decode / word packing) is
-/// paid once and amortised over all output channels.
+/// Per-layer conv compute backend. The engine slides it along each
+/// output row ([`ConvCompute::begin_row`] + [`ConvCompute::advance`],
+/// once per output pixel) and then asks for the psums of the whole Co
+/// walk in one batched call — so per-field preprocessing is O(Ci)
+/// incremental and the window state stays register/cache-resident
+/// across all output channels.
 pub trait ConvCompute: Send {
     fn kind(&self) -> BackendKind;
 
-    /// Ingest the receptive field whose top-left input column is `ox`
-    /// within the padded rows. `rows[r]` is the full padded row of tap
-    /// row `r` (top of the field first).
-    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize);
+    /// Clone into an independent instance with the same weights
+    /// (intra-frame row bands give every band its own backend; the
+    /// word-parallel weight planes are shared read-only).
+    fn clone_box(&self) -> Box<dyn ConvCompute>;
+
+    /// Start a new output row: invalidate the incremental column
+    /// state so the next [`ConvCompute::advance`] repacks in full.
+    fn begin_row(&mut self);
+
+    /// Full-repack fallback: ingest the receptive field whose leftmost
+    /// padded input column is `ox`.
+    fn begin_field(&mut self, lb: &LineBuffer, ox: usize);
+
+    /// Incremental slide to `ox`: shift out the leftmost window column
+    /// and append column `ox + Kw - 1` — O(Ci) work. Requires the
+    /// previous call this row to have been `advance(ox - 1)` (or a
+    /// fresh row); bit-identical to `begin_field(lb, ox)`.
+    fn advance(&mut self, lb: &LineBuffer, ox: usize);
 
     /// `(psum, spike-gated ops)` of the current field for output
     /// channel `co`. `w` carries the tap-major weights (ignored by
     /// backends that pre-transformed them at construction).
     fn field_psum(&mut self, w: &ConvWeights, co: usize) -> (Acc, u64);
+
+    /// Batched Co walk: fill `out[co]` for every output channel in one
+    /// call (amortises dispatch and keeps the packed window hot).
+    fn field_psums(&mut self, w: &ConvWeights, out: &mut [(Acc, u64)]) {
+        for (co, o) in out.iter_mut().enumerate() {
+            *o = self.field_psum(w, co);
+        }
+    }
 }
 
 /// Build a conv backend for one layer.
@@ -107,18 +146,112 @@ pub fn conv_backend(kind: BackendKind, layer: &ConvLayer,
     }
 }
 
-/// The original event walk, hoisted out of the engine loop.
+/// Shift the bit string in `words` right by `s` bits (toward bit 0),
+/// zero-filling the top — the word-parallel window slide.
+#[inline]
+fn shr_bits(words: &mut [u64], s: usize) {
+    let n = words.len();
+    let (q, r) = (s / 64, s % 64);
+    debug_assert!(q <= n);
+    if r == 0 {
+        words.copy_within(q.., 0);
+    } else {
+        for i in 0..n - q {
+            let lo = words[i + q] >> r;
+            let hi = if i + q + 1 < n {
+                words[i + q + 1] << (64 - r)
+            } else {
+                0
+            };
+            words[i] = lo | hi;
+        }
+    }
+    for w in words[n - q..].iter_mut() {
+        *w = 0;
+    }
+}
+
+/// Ring of `kw` raw-word window columns (`kh * wpc` words per column)
+/// — the incremental slide state both depthwise backends share: the
+/// oldest column is evicted in place as `advance` walks the row.
+#[derive(Clone)]
+struct ColRing {
+    kh: usize,
+    kw: usize,
+    wpc: usize,
+    cols: Vec<Vec<u64>>,
+    head: usize,
+    fresh: bool,
+}
+
+impl ColRing {
+    fn new(kh: usize, kw: usize, wpc: usize) -> Self {
+        Self {
+            kh,
+            kw,
+            wpc,
+            cols: (0..kw).map(|_| vec![0u64; kh * wpc]).collect(),
+            head: 0,
+            fresh: true,
+        }
+    }
+
+    fn begin_row(&mut self) {
+        self.fresh = true;
+    }
+
+    /// Copy padded input column `x` into ring slot `slot`.
+    fn load(&mut self, lb: &LineBuffer, x: usize, slot: usize) {
+        let (kh, wpc) = (self.kh, self.wpc);
+        let col = &mut self.cols[slot];
+        for r in 0..kh {
+            col[r * wpc..(r + 1) * wpc]
+                .copy_from_slice(lb.at(r, x).words());
+        }
+    }
+
+    fn begin_field(&mut self, lb: &LineBuffer, ox: usize) {
+        self.head = 0;
+        for k in 0..self.kw {
+            self.load(lb, ox + k, k);
+        }
+    }
+
+    fn advance(&mut self, lb: &LineBuffer, ox: usize) {
+        if self.fresh || ox == 0 || self.kw == 1 {
+            self.begin_field(lb, ox);
+            self.fresh = false;
+            return;
+        }
+        let slot = self.head;
+        self.load(lb, ox + self.kw - 1, slot);
+        self.head = (self.head + 1) % self.kw;
+    }
+
+    /// Logical window column `k`'s words (0 = leftmost).
+    #[inline]
+    fn col(&self, k: usize) -> &[u64] {
+        &self.cols[(self.head + k) % self.kw]
+    }
+}
+
+/// The original event walk, hoisted out of the engine loop and kept
+/// per window column for the incremental slide.
+#[derive(Clone)]
 struct AccurateConv {
     mode: ConvMode,
     kh: usize,
     kw: usize,
     n_ci: usize,
-    /// Standard/pointwise: decoded `(tap, ci)` active list of the field.
-    active: Vec<(u16, u16)>,
-    /// Depthwise: the field's vectors copied word-wise, tap-major
-    /// (`wpc` words per tap), for per-channel bit tests.
-    tap_words: Vec<u64>,
-    wpc: usize,
+    /// Standard/pointwise: ring of `kw` decoded window columns;
+    /// `cols[(head + k) % kw]` holds logical column k's active events
+    /// as `r * kw * n_ci + ci`, so `taps_tm[entry + k * n_ci]` is the
+    /// tap weight — one add per event in the Co walk.
+    cols: Vec<Vec<u32>>,
+    head: usize,
+    fresh: bool,
+    /// Depthwise: the shared raw-word column ring.
+    ring: ColRing,
 }
 
 impl AccurateConv {
@@ -132,14 +265,36 @@ impl AccurateConv {
             _ => (layer.kh, layer.kw),
         };
         let wpc = layer.ci.div_ceil(64);
+        // A full column decodes to at most kh * n_ci events; clamp the
+        // whole product so the hint stays sane for enormous Ci.
+        let cap = (kh * n_ci).min(1 << 14);
         Self {
             mode: layer.mode,
             kh,
             kw,
             n_ci,
-            active: Vec::with_capacity(kh * kw * layer.ci.min(1 << 14)),
-            tap_words: vec![0; kh * kw * wpc],
-            wpc,
+            cols: match layer.mode {
+                ConvMode::Depthwise => Vec::new(),
+                _ => (0..kw).map(|_| Vec::with_capacity(cap)).collect(),
+            },
+            head: 0,
+            fresh: true,
+            ring: ColRing::new(kh, kw, wpc),
+        }
+    }
+
+    /// Decode padded input column `x` into event-ring slot `slot`
+    /// (standard/pointwise only).
+    fn load_col(&mut self, lb: &LineBuffer, x: usize, slot: usize) {
+        let stride = (self.kw * self.n_ci) as u32;
+        let kh = self.kh;
+        let col = &mut self.cols[slot];
+        col.clear();
+        for r in 0..kh {
+            let base = r as u32 * stride;
+            for ci in lb.at(r, x).iter_active() {
+                col.push(base + ci as u32);
+            }
         }
     }
 }
@@ -149,30 +304,39 @@ impl ConvCompute for AccurateConv {
         BackendKind::Accurate
     }
 
-    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize) {
-        match self.mode {
-            ConvMode::Standard | ConvMode::Pointwise => {
-                self.active.clear();
-                for (r, row) in rows.iter().take(self.kh).enumerate() {
-                    for c in 0..self.kw {
-                        let tap = (r * self.kw + c) as u16;
-                        for ci in row[ox + c].iter_active() {
-                            self.active.push((tap, ci as u16));
-                        }
-                    }
-                }
-            }
-            ConvMode::Depthwise => {
-                for (r, row) in rows.iter().take(self.kh).enumerate() {
-                    for c in 0..self.kw {
-                        let t = r * self.kw + c;
-                        let words = row[ox + c].words();
-                        self.tap_words[t * self.wpc..(t + 1) * self.wpc]
-                            .copy_from_slice(words);
-                    }
-                }
-            }
+    fn clone_box(&self) -> Box<dyn ConvCompute> {
+        Box::new(self.clone())
+    }
+
+    fn begin_row(&mut self) {
+        self.fresh = true;
+        self.ring.begin_row();
+    }
+
+    fn begin_field(&mut self, lb: &LineBuffer, ox: usize) {
+        if self.mode == ConvMode::Depthwise {
+            self.ring.begin_field(lb, ox);
+            return;
         }
+        self.head = 0;
+        for k in 0..self.kw {
+            self.load_col(lb, ox + k, k);
+        }
+    }
+
+    fn advance(&mut self, lb: &LineBuffer, ox: usize) {
+        if self.mode == ConvMode::Depthwise {
+            self.ring.advance(lb, ox);
+            return;
+        }
+        if self.fresh || ox == 0 || self.kw == 1 {
+            self.begin_field(lb, ox);
+            self.fresh = false;
+            return;
+        }
+        let slot = self.head;
+        self.load_col(lb, ox + self.kw - 1, slot);
+        self.head = (self.head + 1) % self.kw;
     }
 
     fn field_psum(&mut self, w: &ConvWeights, co: usize) -> (Acc, u64) {
@@ -180,24 +344,31 @@ impl ConvCompute for AccurateConv {
         match self.mode {
             ConvMode::Standard | ConvMode::Pointwise => {
                 let mut psum: Acc = 0;
-                let n_ci = self.n_ci;
-                for &(tap, ci) in &self.active {
-                    psum += taps_tm[tap as usize * n_ci + ci as usize]
-                        as Acc;
+                let mut ops = 0u64;
+                for k in 0..self.kw {
+                    let col = &self.cols[(self.head + k) % self.kw];
+                    let off = k * self.n_ci;
+                    ops += col.len() as u64;
+                    for &e in col {
+                        psum += taps_tm[e as usize + off] as Acc;
+                    }
                 }
-                (psum, self.active.len() as u64)
+                (psum, ops)
             }
             ConvMode::Depthwise => {
                 // Fig. 8c: pass the tap weight through iff the lane's
                 // channel spiked at that tap.
+                let (word, bit) = (co / 64, co % 64);
+                let wpc = self.ring.wpc;
                 let mut psum: Acc = 0;
                 let mut ops = 0u64;
-                let (word, bit) = (co / 64, co % 64);
-                for t in 0..self.kh * self.kw {
-                    if (self.tap_words[t * self.wpc + word] >> bit) & 1 == 1
-                    {
-                        psum += taps_tm[t] as Acc;
-                        ops += 1;
+                for k in 0..self.kw {
+                    let cw = self.ring.col(k);
+                    for r in 0..self.kh {
+                        if (cw[r * wpc + word] >> bit) & 1 == 1 {
+                            psum += taps_tm[r * self.kw + k] as Acc;
+                            ops += 1;
+                        }
                     }
                 }
                 (psum, ops)
@@ -207,30 +378,38 @@ impl ConvCompute for AccurateConv {
 }
 
 /// Bit-plane popcount backend.
+#[derive(Clone)]
 struct WordParallelConv {
     mode: ConvMode,
     kh: usize,
     kw: usize,
     n_ci: usize,
-    ntaps: usize,
-    /// Words of the packed `ntaps * n_ci`-bit field string
-    /// (standard/pointwise) or of the per-co tap mask (depthwise: 1).
+    /// Bits per window column in the packed field string (`kh * n_ci`;
+    /// depthwise: `kh` tap-mask bits).
+    col_bits: usize,
+    /// Words of the packed `kw * col_bits`-bit field string
+    /// (depthwise: the single tap-mask word).
     w_words: usize,
-    /// Weight bit-planes, laid out `[co][plane][word]` over the same
-    /// bit positions as the packed field string (standard/pointwise) or
-    /// over tap positions (depthwise).
-    planes: Vec<u64>,
+    /// Weight bit-planes, laid out `[co][plane][word]` over the
+    /// column-major packed positions `pos = (c*kh + r)*n_ci + ci`
+    /// (depthwise: `pos = c*kh + r`). Shared read-only across band
+    /// clones.
+    planes: Arc<Vec<u64>>,
     /// Per-co bitmask of planes with at least one set bit (lets the
     /// psum loop skip empty planes — frequent with real quantised
     /// weights whose magnitudes are small).
-    plane_nz: Vec<u8>,
-    /// Scratch: the packed field string of the current field.
+    plane_nz: Arc<Vec<u8>>,
+    /// The packed field string of the current window. Physical order
+    /// equals logical order: `advance` shifts the whole string right
+    /// by `col_bits` and packs the new column at the top slot.
     win: Vec<u64>,
-    /// Depthwise scratch: field vectors copied tap-major (wpc per tap).
-    tap_words: Vec<u64>,
-    wpc: usize,
+    /// Spike count per resident window column (front = leftmost).
+    col_counts: Vec<u64>,
     /// Active spike count of the current field (standard/pointwise).
     count: u64,
+    /// Depthwise: the shared raw-word column ring.
+    ring: ColRing,
+    fresh: bool,
 }
 
 impl WordParallelConv {
@@ -245,37 +424,40 @@ impl WordParallelConv {
         };
         let ntaps = kh * kw;
         let wpc = layer.ci.div_ceil(64);
-        let w_words = match layer.mode {
+        let (col_bits, w_words) = match layer.mode {
             // Tap mask over ntaps bits — one word covers kernels <= 8x8.
             ConvMode::Depthwise => {
                 assert!(ntaps <= 64,
                         "word-parallel depthwise supports kernels up to \
                          8x8 ({ntaps} taps)");
-                1
+                (kh, 1)
             }
-            _ => (ntaps * n_ci).div_ceil(64),
+            _ => {
+                let cb = kh * n_ci;
+                (cb, (kw * cb).div_ceil(64))
+            }
         };
         let mut planes = vec![0u64; layer.co * 8 * w_words];
         let mut plane_nz = vec![0u8; layer.co];
         for co in 0..layer.co {
             let taps_tm = weights.taps_tm(co);
             let base = co * 8 * w_words;
-            for t in 0..ntaps {
-                for ci in 0..n_ci {
-                    let byte = taps_tm[t * n_ci + ci] as u8;
-                    // Bit position inside the packed field string: the
-                    // field packs tap-major, n_ci bits per tap. For
-                    // depthwise the position is simply the tap index.
-                    let pos = if layer.mode == ConvMode::Depthwise {
-                        t
-                    } else {
-                        t * n_ci + ci
-                    };
-                    for b in 0..8 {
-                        if (byte >> b) & 1 == 1 {
-                            planes[base + b * w_words + pos / 64] |=
-                                1u64 << (pos % 64);
-                            plane_nz[co] |= 1 << b;
+            for r in 0..kh {
+                for c in 0..kw {
+                    for ci in 0..n_ci {
+                        let byte = taps_tm[(r * kw + c) * n_ci + ci] as u8;
+                        // Column-major packed position (see win docs).
+                        let pos = if layer.mode == ConvMode::Depthwise {
+                            c * kh + r
+                        } else {
+                            c * col_bits + r * n_ci + ci
+                        };
+                        for b in 0..8 {
+                            if (byte >> b) & 1 == 1 {
+                                planes[base + b * w_words + pos / 64] |=
+                                    1u64 << (pos % 64);
+                                plane_nz[co] |= 1 << b;
+                            }
                         }
                     }
                 }
@@ -286,15 +468,30 @@ impl WordParallelConv {
             kh,
             kw,
             n_ci,
-            ntaps,
+            col_bits,
             w_words,
-            planes,
-            plane_nz,
+            planes: Arc::new(planes),
+            plane_nz: Arc::new(plane_nz),
             win: vec![0; w_words],
-            tap_words: vec![0; ntaps * wpc],
-            wpc,
+            col_counts: vec![0; kw],
             count: 0,
+            ring: ColRing::new(kh, kw, wpc),
+            fresh: true,
         }
+    }
+
+    /// Pack padded input column `x` into logical column slot `k` of
+    /// the win string; returns its spike count. Target bits must be
+    /// zero.
+    fn pack_col(&mut self, lb: &LineBuffer, x: usize, k: usize) -> u64 {
+        let mut pos = k * self.col_bits;
+        let mut cnt = 0u64;
+        for r in 0..self.kh {
+            let words = lb.at(r, x).words();
+            pos = or_bits(&mut self.win, pos, words, self.n_ci);
+            cnt += words.iter().map(|w| w.count_ones() as u64).sum::<u64>();
+        }
+        cnt
     }
 
     /// Sum of shifted popcounts over the 8 two's-complement bit-planes
@@ -325,67 +522,51 @@ impl WordParallelConv {
     }
 }
 
-/// Append `nbits` bits of `src` (LSB-first words) into `dst` at bit
-/// offset `pos`; returns the new offset. `dst` must be pre-zeroed.
-#[inline]
-fn append_bits(dst: &mut [u64], mut pos: usize, src: &[u64],
-               nbits: usize) -> usize {
-    let mut remaining = nbits;
-    let mut si = 0;
-    while remaining > 0 {
-        let take = remaining.min(64);
-        let mut w = src[si];
-        if take < 64 {
-            w &= (1u64 << take) - 1;
-        }
-        let (word, off) = (pos / 64, pos % 64);
-        dst[word] |= w << off;
-        if off + take > 64 {
-            // off >= 1 here (take <= 64), so the shift is in range.
-            dst[word + 1] |= w >> (64 - off);
-        }
-        pos += take;
-        remaining -= take;
-        si += 1;
-    }
-    pos
-}
-
 impl ConvCompute for WordParallelConv {
     fn kind(&self) -> BackendKind {
         BackendKind::WordParallel
     }
 
-    fn begin_field(&mut self, rows: &[&[SpikeVector]], ox: usize) {
+    fn clone_box(&self) -> Box<dyn ConvCompute> {
+        Box::new(self.clone())
+    }
+
+    fn begin_row(&mut self) {
+        self.fresh = true;
+        self.ring.begin_row();
+    }
+
+    fn begin_field(&mut self, lb: &LineBuffer, ox: usize) {
         match self.mode {
             ConvMode::Standard | ConvMode::Pointwise => {
                 self.win.iter_mut().for_each(|w| *w = 0);
-                let mut pos = 0;
-                let mut count = 0u64;
-                for row in rows.iter().take(self.kh) {
-                    for c in 0..self.kw {
-                        let v = &row[ox + c];
-                        let words = v.words();
-                        pos = append_bits(&mut self.win, pos, words,
-                                          self.n_ci);
-                        count += words
-                            .iter()
-                            .map(|w| w.count_ones() as u64)
-                            .sum::<u64>();
-                    }
-                }
-                self.count = count;
-            }
-            ConvMode::Depthwise => {
-                for (r, row) in rows.iter().take(self.kh).enumerate() {
-                    for c in 0..self.kw {
-                        let t = r * self.kw + c;
-                        self.tap_words[t * self.wpc..(t + 1) * self.wpc]
-                            .copy_from_slice(row[ox + c].words());
-                    }
+                self.count = 0;
+                for k in 0..self.kw {
+                    let cnt = self.pack_col(lb, ox + k, k);
+                    self.col_counts[k] = cnt;
+                    self.count += cnt;
                 }
             }
+            ConvMode::Depthwise => self.ring.begin_field(lb, ox),
         }
+    }
+
+    fn advance(&mut self, lb: &LineBuffer, ox: usize) {
+        if self.mode == ConvMode::Depthwise {
+            self.ring.advance(lb, ox);
+            return;
+        }
+        if self.fresh || ox == 0 || self.kw == 1 {
+            self.begin_field(lb, ox);
+            self.fresh = false;
+            return;
+        }
+        shr_bits(&mut self.win, self.col_bits);
+        self.count -= self.col_counts[0];
+        self.col_counts.copy_within(1.., 0);
+        let cnt = self.pack_col(lb, ox + self.kw - 1, self.kw - 1);
+        self.col_counts[self.kw - 1] = cnt;
+        self.count += cnt;
     }
 
     fn field_psum(&mut self, _w: &ConvWeights, co: usize) -> (Acc, u64) {
@@ -396,14 +577,33 @@ impl ConvCompute for WordParallelConv {
             }
             ConvMode::Depthwise => {
                 let (word, bit) = (co / 64, co % 64);
+                let wpc = self.ring.wpc;
                 let mut mask = 0u64;
-                for t in 0..self.ntaps {
-                    mask |= ((self.tap_words[t * self.wpc + word] >> bit)
-                        & 1)
-                        << t;
+                for k in 0..self.kw {
+                    let cw = self.ring.col(k);
+                    for r in 0..self.kh {
+                        mask |= ((cw[r * wpc + word] >> bit) & 1)
+                            << (k * self.kh + r);
+                    }
                 }
                 let psum = self.plane_psum(&[mask], co);
                 (psum, mask.count_ones() as u64)
+            }
+        }
+    }
+
+    fn field_psums(&mut self, w: &ConvWeights, out: &mut [(Acc, u64)]) {
+        match self.mode {
+            ConvMode::Standard | ConvMode::Pointwise => {
+                // One pass over all co with the packed window hot.
+                for (co, o) in out.iter_mut().enumerate() {
+                    *o = (self.plane_psum(&self.win, co), self.count);
+                }
+            }
+            ConvMode::Depthwise => {
+                for (co, o) in out.iter_mut().enumerate() {
+                    *o = self.field_psum(w, co);
+                }
             }
         }
     }
@@ -551,24 +751,22 @@ mod tests {
     }
 
     #[test]
-    fn append_bits_packs_across_word_boundaries() {
-        // Three 40-bit chunks: bits straddle the first word boundary.
-        let mut dst = vec![0u64; 2];
-        let mut pos = 0;
-        for k in 0..3u64 {
-            let src = [0b1011 | (k << 36)];
-            pos = append_bits(&mut dst, pos, &src, 40);
+    fn shr_bits_shifts_across_word_boundaries() {
+        // 150-bit string over 3 words, bit i set iff i % 5 == 0.
+        let mut words = vec![0u64; 3];
+        for i in (0..150).step_by(5) {
+            words[i / 64] |= 1u64 << (i % 64);
         }
-        assert_eq!(pos, 120);
-        for k in 0..3 {
-            let base = k * 40;
-            for (bit, want) in [(0, true), (1, true), (2, false),
-                                (3, true)] {
-                let p = base + bit;
-                let got = (dst[p / 64] >> (p % 64)) & 1 == 1;
-                assert_eq!(got, want, "chunk {k} bit {bit}");
-            }
+        shr_bits(&mut words, 35);
+        for i in 0..150 {
+            let want = i + 35 < 150 && (i + 35) % 5 == 0;
+            let got = (words[i / 64] >> (i % 64)) & 1 == 1;
+            assert_eq!(got, want, "bit {i}");
         }
+        // Word-aligned shift path.
+        let mut words = vec![u64::MAX; 2];
+        shr_bits(&mut words, 64);
+        assert_eq!(words, vec![u64::MAX, 0]);
     }
 
     /// Bit-plane decomposition identity: for random int8 weights and a

@@ -14,6 +14,24 @@
 //! are bit-exact; cycle / op / access reports are identical by
 //! construction (they depend only on layer geometry and the spike
 //! pattern, never on the host algorithm — see `sim::backend`).
+//!
+//! ## Zero-allocation frame hot path (§Perf)
+//!
+//! All per-frame scratch — line buffer, backend window state, psum
+//! buffer, band-local output rows — lives in engine-owned per-band
+//! workspaces, and the window walk uses the backend's incremental
+//! sliding protocol (`begin_row` + `advance`: O(Ci) per output pixel).
+//! Steady-state inference through [`ConvEngine::run_frame_into`]
+//! performs zero heap allocations (pinned by `tests/alloc_budget.rs`).
+//!
+//! ## Intra-frame row parallelism
+//!
+//! [`ConvEngine::with_intra_parallel`] splits the output rows into
+//! contiguous bands processed by scoped worker threads. Each band owns
+//! its line buffer, backend clone, counter block, and output rows;
+//! results merge deterministically in band order, so spikes, cycles,
+//! ops, and access counters are bit-identical to the serial run (they
+//! are architectural quantities — only host wall-clock changes).
 
 use crate::arch::{ConvLayer, ConvMode};
 use crate::codec::SpikeFrame;
@@ -21,10 +39,11 @@ use crate::dataflow::ConvLatencyParams;
 
 use super::array::PeArray;
 use super::backend::{conv_backend, BackendKind, ConvCompute};
-use super::linebuf::{padded_rows, LineBuffer};
+use super::engine::LayerStep;
+use super::linebuf::LineBuffer;
 use super::memory::{DataKind, MemLevel};
-use super::neuron::NeuronUnit;
-use super::pe::adder_tree_latency;
+use super::neuron::{NeuronBand, NeuronUnit};
+use super::pe::{adder_tree_latency, Acc};
 
 /// int8 weights of one conv layer, laid out `[co][ci][tap]`
 /// (depthwise: `[c][0][tap]`; pointwise: `[co][ci][0]`).
@@ -131,6 +150,162 @@ impl ConvWeights {
 /// [`LayerStep`](super::engine::LayerStep) every layer engine shares.
 pub type ConvRunReport = super::engine::LayerStep;
 
+/// One intra-frame band: reusable per-band workspace covering output
+/// rows `[y0, y1)`. Every buffer the frame hot path touches lives
+/// here, so steady-state inference allocates nothing.
+struct Band {
+    y0: usize,
+    y1: usize,
+    lb: LineBuffer,
+    backend: Box<dyn ConvCompute>,
+    /// Per-co `(psum, ops)` of the current field (batched Co walk).
+    psums: Vec<(Acc, u64)>,
+    /// Per-lane op / busy-cycle totals, merged into the [`PeArray`]
+    /// after the run (bands must not touch the shared array
+    /// concurrently).
+    lane_ops: Vec<u64>,
+    lane_cycles: Vec<u64>,
+    /// Band-local output rows (multi-band runs only; the single-band
+    /// run writes the caller's frame directly).
+    out: SpikeFrame,
+    /// Report of this band's last run (filled by worker threads,
+    /// merged in band order).
+    step: LayerStep,
+}
+
+impl Band {
+    /// Zero the accumulated run state ([`Band::run`] adds into it, so
+    /// a whole frame's timesteps can run inside one thread scope).
+    fn clear_run_state(&mut self) {
+        self.step = LayerStep::default();
+        self.lane_ops.iter_mut().for_each(|v| *v = 0);
+        self.lane_cycles.iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Run `timesteps` passes over this band's rows, accumulating into
+    /// `self.step` (the band-worker body: one thread spawn covers the
+    /// whole frame, not one per timestep).
+    fn run_steps(&mut self, layer: &ConvLayer, weights: &ConvWeights,
+                 neuron: &mut NeuronBand<'_>, input: &SpikeFrame,
+                 off_chip: bool, field_cycles: u64, incremental: bool,
+                 timesteps: usize) {
+        for _ in 0..timesteps {
+            self.run(layer, weights, neuron, input, off_chip,
+                     field_cycles, incremental, None);
+        }
+    }
+
+    /// Run one timestep over output rows `[y0, y1)`: prime the band's
+    /// line buffer, slide the backend window along each row, fire
+    /// neurons, and **accumulate** every architectural cost into
+    /// `self.step` (callers zero it via [`Band::clear_run_state`]).
+    /// Writes into the caller's frame when `external_out` is given
+    /// (single-band path), otherwise into the band-local rows
+    /// (overwritten per timestep — the last timestep's spikes remain).
+    #[allow(clippy::too_many_arguments)]
+    fn run(&mut self, layer: &ConvLayer, weights: &ConvWeights,
+           neuron: &mut NeuronBand<'_>, input: &SpikeFrame,
+           off_chip: bool, field_cycles: u64, incremental: bool,
+           external_out: Option<&mut SpikeFrame>) {
+        let Band { y0, y1, lb, backend, psums, lane_ops, lane_cycles,
+                   out, step } = self;
+        let (y0, y1) = (*y0, *y1);
+        let wo = layer.out_w();
+        let (out, out_y0): (&mut SpikeFrame, usize) = match external_out {
+            Some(o) => (o, 0),
+            None => {
+                out.reset(y1 - y0, wo, layer.co);
+                (out, y0)
+            }
+        };
+
+        lb.reset();
+        // Prime the line buffer with the band's first Kh padded rows.
+        // Charging mirrors the serial row schedule exactly: band 0
+        // charges its whole prime (the serial prime); a later band
+        // charges only its last prime row — serially that is the push
+        // for output row y0 — and refills the Kh-1 overlap rows
+        // uncharged, so each padded row is charged exactly once across
+        // bands.
+        for py in y0..y0 + layer.kh {
+            let charge = y0 == 0 || py + 1 == y0 + layer.kh;
+            lb.ingest_row(input, py as isize, layer.pad,
+                          &mut step.counters, off_chip, charge);
+        }
+
+        let n_ci = weights.n_ci();
+        let groups = layer.co.div_ceil(layer.parallel);
+        // One weight-buffer read per input channel per output channel
+        // walked — charged once per field (hoisted out of the Co loop;
+        // identical totals, far fewer counter touches. §Perf).
+        let weight_reads_per_field = (n_ci * layer.co) as u64;
+
+        for oy in y0..y1 {
+            if oy > y0 {
+                // Shift one new input row in (overlapped with compute —
+                // the fill pipeline of Fig. 7a; no cycle charge here).
+                lb.ingest_row(input, (oy + layer.kh - 1) as isize,
+                              layer.pad, &mut step.counters, off_chip,
+                              true);
+            }
+            backend.begin_row();
+            for ox in 0..wo {
+                lb.count_window_read(layer.kw, &mut step.counters);
+                // One incremental slide (or full repack on the
+                // fallback path) per receptive field, shared across
+                // the whole Co walk (§Perf).
+                if incremental {
+                    backend.advance(lb, ox);
+                } else {
+                    backend.begin_field(lb, ox);
+                }
+                step.counters.read(MemLevel::Bram, DataKind::Weight,
+                                   weight_reads_per_field);
+                backend.field_psums(weights, psums);
+                // Output channels in groups of `parallel` lanes; lanes
+                // run concurrently so the group costs one lane's time.
+                for g in 0..groups {
+                    for lane in 0..layer.parallel {
+                        let co = g * layer.parallel + lane;
+                        if co >= layer.co {
+                            break;
+                        }
+                        let (psum, ops) = psums[co];
+                        step.ops += ops;
+                        lane_ops[lane] += ops;
+                        lane_cycles[lane] += field_cycles;
+                        let idx = (oy * wo + ox) * layer.co + co;
+                        if neuron.fire(idx, co, psum,
+                                       &mut step.counters) {
+                            out.set(oy - out_y0, ox, co);
+                        }
+                    }
+                    step.cycles += field_cycles;
+                }
+                step.counters.write(MemLevel::Bram, DataKind::OutputSpike,
+                                    1);
+            }
+        }
+        step.out_spikes += out.count() as u64;
+    }
+}
+
+/// Split `ho` output rows into `n` contiguous bands (clamped to
+/// `[1, ho]`; earlier bands take the remainder rows).
+fn band_ranges(ho: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.clamp(1, ho.max(1));
+    let base = ho / n;
+    let rem = ho % n;
+    let mut out = Vec::with_capacity(n);
+    let mut y = 0;
+    for b in 0..n {
+        let h = base + usize::from(b < rem);
+        out.push((y, y + h));
+        y += h;
+    }
+    out
+}
+
 /// The engine itself. One instance per conv layer of the pipeline.
 pub struct ConvEngine {
     pub layer: ConvLayer,
@@ -138,8 +313,13 @@ pub struct ConvEngine {
     pub timing: ConvLatencyParams,
     pub array: PeArray,
     pub neuron: NeuronUnit,
-    backend: Box<dyn ConvCompute>,
     timesteps: usize,
+    backend_kind: BackendKind,
+    /// Incremental sliding-window protocol on (default); off falls
+    /// back to full per-field repacking (the equivalence oracle for
+    /// `tests/prop_backend.rs`).
+    incremental: bool,
+    bands: Vec<Band>,
 }
 
 impl ConvEngine {
@@ -163,13 +343,84 @@ impl ConvEngine {
             timesteps,
         );
         let array = PeArray::for_layer(&layer);
-        let backend = conv_backend(kind, &layer, &weights);
-        Self { layer, weights, timing, array, neuron, backend, timesteps }
+        let proto = conv_backend(kind, &layer, &weights);
+        let bands = Self::build_bands(&layer, proto,
+                                      band_ranges(layer.out_h(), 1));
+        Self {
+            layer,
+            weights,
+            timing,
+            array,
+            neuron,
+            timesteps,
+            backend_kind: kind,
+            incremental: true,
+            bands,
+        }
+    }
+
+    fn build_bands(layer: &ConvLayer, proto: Box<dyn ConvCompute>,
+                   ranges: Vec<(usize, usize)>) -> Vec<Band> {
+        let wo = layer.out_w();
+        let wi_pad = layer.in_w + 2 * layer.pad;
+        let n = ranges.len();
+        let multi = n > 1;
+        // The last band consumes the prototype; earlier bands clone it
+        // (word-parallel clones share the weight planes read-only).
+        let mut proto = Some(proto);
+        let mut bands = Vec::with_capacity(n);
+        for (i, (y0, y1)) in ranges.into_iter().enumerate() {
+            let backend = if i + 1 == n {
+                proto.take().expect("prototype consumed once")
+            } else {
+                proto.as_ref().expect("prototype present").clone_box()
+            };
+            bands.push(Band {
+                y0,
+                y1,
+                lb: LineBuffer::new(layer.kh, wi_pad, layer.ci),
+                backend,
+                psums: vec![(0, 0); layer.co],
+                lane_ops: vec![0; layer.parallel],
+                lane_cycles: vec![0; layer.parallel],
+                out: if multi {
+                    SpikeFrame::zeros(y1 - y0, wo, layer.co)
+                } else {
+                    SpikeFrame::zeros(0, 0, 0)
+                },
+                step: LayerStep::default(),
+            });
+        }
+        bands
+    }
+
+    /// Split the frame into `n` row bands processed by scoped worker
+    /// threads (clamped to the output height; 1 = serial). Reports
+    /// stay bit-identical — only host wall-clock changes.
+    pub fn with_intra_parallel(mut self, n: usize) -> Self {
+        let ranges = band_ranges(self.layer.out_h(), n);
+        if ranges.len() != self.bands.len() {
+            let proto = self.bands[0].backend.clone_box();
+            self.bands = Self::build_bands(&self.layer, proto, ranges);
+        }
+        self
+    }
+
+    /// Toggle the incremental sliding-window protocol (tests pin the
+    /// incremental path bit-exact against this fallback).
+    pub fn with_incremental(mut self, on: bool) -> Self {
+        self.incremental = on;
+        self
     }
 
     /// Which functional backend this engine computes with.
     pub fn backend_kind(&self) -> BackendKind {
-        self.backend.kind()
+        self.backend_kind
+    }
+
+    /// Configured intra-frame band count.
+    pub fn intra_parallel(&self) -> usize {
+        self.bands.len()
     }
 
     /// Architectural Vmem buffer size (18-bit potentials — the BRAM18
@@ -206,94 +457,143 @@ impl ConvEngine {
         }
     }
 
-    /// Run one timestep of one frame. `off_chip_input` marks whether
-    /// the input arrives from DRAM (first layer) or an on-chip FIFO.
-    pub fn run_timestep(&mut self, input: &SpikeFrame,
-                        off_chip_input: bool) -> (SpikeFrame, ConvRunReport) {
+    /// Run one timestep of one frame into the caller-owned `out`
+    /// frame (reshaped as needed — the zero-allocation hot path).
+    /// `off_chip_input` marks whether the input arrives from DRAM
+    /// (first layer) or an on-chip FIFO.
+    pub fn run_timestep_into(&mut self, input: &SpikeFrame,
+                             off_chip_input: bool, out: &mut SpikeFrame)
+                             -> ConvRunReport {
         let l = &self.layer;
         assert_eq!((input.h, input.w, input.c), (l.in_h, l.in_w, l.ci),
                    "input shape mismatch for {:?}", l.mode);
         let (ho, wo) = (l.out_h(), l.out_w());
-        let mut out = SpikeFrame::zeros(ho, wo, l.co);
-        let mut rep = ConvRunReport::default();
-        let ops_before = self.array.total_ops();
-
-        let rows = padded_rows(input, l.pad);
-        let wi_pad = l.in_w + 2 * l.pad;
-        let mut lb = LineBuffer::new(l.kh, wi_pad, l.ci);
-        let mut row_iter = rows.into_iter();
-        // Prime the line buffer with the first Kh rows.
-        for _ in 0..l.kh {
-            lb.push_row(row_iter.next().expect("input taller than kernel"),
-                        &mut rep.counters, off_chip_input);
-        }
-
-        let groups = l.co.div_ceil(l.parallel);
-        let n_ci = self.weights.n_ci();
+        out.reset(ho, wo, l.co);
         let field_cycles = self.field_cycles();
-        // One weight-buffer read per input channel per output channel
-        // walked — charged once per field (hoisted out of the Co loop;
-        // identical totals, far fewer counter-map touches. §Perf).
-        let weight_reads_per_field = (n_ci * l.co) as u64;
+        let incremental = self.incremental;
 
-        for oy in 0..ho {
-            if oy > 0 {
-                // Shift one new input row in (overlapped with compute —
-                // the fill pipeline of Fig. 7a; no cycle charge here).
-                lb.push_row(row_iter.next().expect("row count"),
-                            &mut rep.counters, off_chip_input);
-            }
-            let full_rows = lb.resident_rows();
-            for ox in 0..wo {
-                lb.count_window_read(l.kw, &mut rep.counters);
-                // One decode / pack per receptive field, shared across
-                // the whole Co walk (§Perf).
-                self.backend.begin_field(&full_rows, ox);
-                rep.counters.read(MemLevel::Bram, DataKind::Weight,
-                                  weight_reads_per_field);
-                // Output channels in groups of `parallel` lanes; lanes
-                // run concurrently so the group costs one lane's time.
-                for g in 0..groups {
-                    for lane in 0..l.parallel {
-                        let co = g * l.parallel + lane;
-                        if co >= l.co {
-                            break;
-                        }
-                        let (psum, ops) =
-                            self.backend.field_psum(&self.weights, co);
-                        self.array.record(lane, ops, field_cycles);
-                        let idx = (oy * wo + ox) * l.co + co;
-                        if self.neuron.fire(idx, co, psum,
-                                            &mut rep.counters) {
-                            out.set(oy, ox, co);
-                        }
-                    }
-                    rep.cycles += field_cycles;
-                }
-                rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
+        let mut rep;
+        if self.bands.len() == 1 {
+            let mut nb = self.neuron.band_all();
+            let band = &mut self.bands[0];
+            band.clear_run_state();
+            band.run(&self.layer, &self.weights, &mut nb, input,
+                     off_chip_input, field_cycles, incremental,
+                     Some(out));
+            rep = std::mem::take(&mut band.step);
+        } else {
+            self.run_bands(input, off_chip_input, field_cycles,
+                           incremental, 1);
+            rep = ConvRunReport::default();
+            for band in &mut self.bands {
+                let step = std::mem::take(&mut band.step);
+                rep.merge(&step);
+                out.or_rows_from(&band.out, band.y0);
             }
         }
-        rep.ops = self.array.total_ops() - ops_before;
-        rep.out_spikes = out.count() as u64;
+        self.record_lanes();
+        rep
+    }
+
+    /// Run `timesteps` band passes inside ONE thread scope (a spawn
+    /// per band per frame, not per timestep). Bands accumulate into
+    /// their `step`s; the caller merges and collects outputs.
+    fn run_bands(&mut self, input: &SpikeFrame, off_chip_input: bool,
+                 field_cycles: u64, incremental: bool, timesteps: usize) {
+        let l = &self.layer;
+        let wo_co = l.out_w() * l.co;
+        let ranges: Vec<(usize, usize)> = self
+            .bands
+            .iter()
+            .map(|b| (b.y0 * wo_co, b.y1 * wo_co))
+            .collect();
+        let mut views = self.neuron.bands(&ranges);
+        let layer = &self.layer;
+        let weights = &self.weights;
+        for band in self.bands.iter_mut() {
+            band.clear_run_state();
+        }
+        std::thread::scope(|s| {
+            for (band, nb) in
+                self.bands.iter_mut().zip(views.iter_mut())
+            {
+                s.spawn(move || {
+                    band.run_steps(layer, weights, nb, input,
+                                   off_chip_input, field_cycles,
+                                   incremental, timesteps);
+                });
+            }
+        });
+    }
+
+    /// Merge the bands' lane bookkeeping into the shared array —
+    /// deterministic band order, identical totals to the serial
+    /// per-co recording.
+    fn record_lanes(&mut self) {
+        for b in 0..self.bands.len() {
+            for lane in 0..self.layer.parallel {
+                let (ops, cyc) = (self.bands[b].lane_ops[lane],
+                                  self.bands[b].lane_cycles[lane]);
+                self.array.record(lane, ops, cyc);
+            }
+        }
+    }
+
+    /// Run one timestep of one frame (allocating wrapper around
+    /// [`ConvEngine::run_timestep_into`]).
+    pub fn run_timestep(&mut self, input: &SpikeFrame,
+                        off_chip_input: bool) -> (SpikeFrame, ConvRunReport) {
+        let mut out = SpikeFrame::zeros(self.layer.out_h(),
+                                        self.layer.out_w(), self.layer.co);
+        let rep = self.run_timestep_into(input, off_chip_input, &mut out);
         (out, rep)
     }
 
     /// Run all `timesteps` of one frame (same input each step — direct
-    /// encoding upstream), merging reports.
+    /// encoding upstream) into the caller-owned `out` frame, merging
+    /// reports. Zero heap allocations in steady state on the serial
+    /// path; multi-band engines spawn one scoped worker per band per
+    /// frame (the whole timestep loop runs inside the worker).
+    pub fn run_frame_into(&mut self, input: &SpikeFrame,
+                          off_chip_input: bool, out: &mut SpikeFrame)
+                          -> ConvRunReport {
+        self.neuron.reset();
+        if self.bands.len() > 1 {
+            let l = &self.layer;
+            assert_eq!((input.h, input.w, input.c),
+                       (l.in_h, l.in_w, l.ci),
+                       "input shape mismatch for {:?}", l.mode);
+            out.reset(l.out_h(), l.out_w(), l.co);
+            let field_cycles = self.field_cycles();
+            let incremental = self.incremental;
+            let timesteps = self.timesteps;
+            self.run_bands(input, off_chip_input, field_cycles,
+                           incremental, timesteps);
+            let mut rep = ConvRunReport::default();
+            for band in &mut self.bands {
+                let step = std::mem::take(&mut band.step);
+                rep.merge(&step);
+                out.or_rows_from(&band.out, band.y0);
+            }
+            self.record_lanes();
+            return rep;
+        }
+        let mut merged = ConvRunReport::default();
+        for _ in 0..self.timesteps {
+            let rep = self.run_timestep_into(input, off_chip_input, out);
+            merged.merge(&rep);
+        }
+        merged
+    }
+
+    /// Run all `timesteps` of one frame (allocating wrapper around
+    /// [`ConvEngine::run_frame_into`]).
     pub fn run_frame(&mut self, input: &SpikeFrame, off_chip_input: bool)
                      -> (SpikeFrame, ConvRunReport) {
-        self.neuron.reset();
-        let mut merged = ConvRunReport::default();
-        let mut last_out = None;
-        for _ in 0..self.timesteps {
-            let (out, rep) = self.run_timestep(input, off_chip_input);
-            merged.cycles += rep.cycles;
-            merged.ops += rep.ops;
-            merged.out_spikes += rep.out_spikes;
-            merged.counters.merge(&rep.counters);
-            last_out = Some(out);
-        }
-        (last_out.expect("timesteps >= 1"), merged)
+        let mut out = SpikeFrame::zeros(self.layer.out_h(),
+                                        self.layer.out_w(), self.layer.co);
+        let rep = self.run_frame_into(input, off_chip_input, &mut out);
+        (out, rep)
     }
 }
 
@@ -447,6 +747,66 @@ mod tests {
         }
     }
 
+    /// The incremental sliding-window protocol equals the full-repack
+    /// fallback bit-for-bit: spikes AND reports, every mode x backend.
+    #[test]
+    fn incremental_window_matches_begin_field_fallback() {
+        for mode in [ConvMode::Standard, ConvMode::Depthwise,
+                     ConvMode::Pointwise] {
+            for kind in [BackendKind::Accurate, BackendKind::WordParallel] {
+                let l = layer(mode, 2);
+                let w = ConvWeights::random(&l, 41);
+                let mut rng = Rng::new(13);
+                let input = SpikeFrame::random(10, 10, 6, 0.3, &mut rng);
+                let mut inc = ConvEngine::with_backend(
+                    l.clone(), w.clone(), ConvLatencyParams::optimized(),
+                    1, kind);
+                let mut fb = ConvEngine::with_backend(
+                    l, w, ConvLatencyParams::optimized(), 1, kind)
+                    .with_incremental(false);
+                let (out_i, rep_i) = inc.run_frame(&input, true);
+                let (out_f, rep_f) = fb.run_frame(&input, true);
+                assert_eq!(out_i, out_f, "{mode:?} {kind}");
+                assert_eq!(rep_i, rep_f, "{mode:?} {kind}");
+            }
+        }
+    }
+
+    /// Intra-frame row bands are bit-exact against the serial run:
+    /// same spikes, same cycles/ops/traffic (merged deterministically),
+    /// every mode x backend x band count.
+    #[test]
+    fn intra_parallel_bands_are_bit_exact() {
+        for mode in [ConvMode::Standard, ConvMode::Depthwise,
+                     ConvMode::Pointwise] {
+            for kind in [BackendKind::Accurate, BackendKind::WordParallel] {
+                for (bands, timesteps) in [(2, 1), (4, 1), (3, 2), (16, 1)]
+                {
+                    let l = layer(mode, 2);
+                    let w = ConvWeights::random(&l, 47);
+                    let mut rng = Rng::new(15);
+                    let input =
+                        SpikeFrame::random(10, 10, 6, 0.3, &mut rng);
+                    let mut serial = ConvEngine::with_backend(
+                        l.clone(), w.clone(),
+                        ConvLatencyParams::optimized(), timesteps, kind);
+                    let mut banded = ConvEngine::with_backend(
+                        l, w, ConvLatencyParams::optimized(), timesteps,
+                        kind)
+                        .with_intra_parallel(bands);
+                    let (out_s, rep_s) = serial.run_frame(&input, true);
+                    let (out_b, rep_b) = banded.run_frame(&input, true);
+                    assert_eq!(out_s, out_b,
+                               "{mode:?} {kind} bands={bands}");
+                    assert_eq!(rep_s, rep_b,
+                               "{mode:?} {kind} bands={bands}");
+                    assert_eq!(serial.array.total_ops(),
+                               banded.array.total_ops());
+                }
+            }
+        }
+    }
+
     #[test]
     fn cycles_match_analytical_model() {
         for parallel in [1, 2, 4] {
@@ -524,7 +884,7 @@ mod tests {
     #[test]
     fn input_vector_fetched_once_per_pixel() {
         // Table III: off-chip input reads = Hi*Wi (padded rows included
-        // as zero vectors are on-chip constants; we count pushed rows).
+        // as zero vectors are on-chip constants; we count ingested rows).
         let l = layer(ConvMode::Standard, 1);
         let w = ConvWeights::random(&l, 23);
         let mut rng = Rng::new(8);
@@ -533,11 +893,42 @@ mod tests {
         let (_, rep) = eng.run_frame(&input, true);
         let dram_reads =
             rep.counters.reads_of(MemLevel::Dram, DataKind::InputSpike);
-        // Padded geometry: (Hi+2p) rows of (Wi+2p) vectors pushed, but
+        // Padded geometry: (Hi+2p) rows of (Wi+2p) vectors exist, but
         // only Kh + (Ho-1) rows enter the buffer.
-        let rows_pushed = (l_kh() + (10 - 1)) as u64;
-        assert_eq!(dram_reads, rows_pushed * 12);
+        let rows_ingested = (l_kh() + (10 - 1)) as u64;
+        assert_eq!(dram_reads, rows_ingested * 12);
         fn l_kh() -> usize { 3 }
+    }
+
+    /// Band charging: the banded run's ingest traffic equals the
+    /// serial run's exactly (each padded row charged once globally).
+    #[test]
+    fn band_ingest_traffic_matches_serial() {
+        let l = layer(ConvMode::Standard, 1);
+        let w = ConvWeights::random(&l, 27);
+        let mut rng = Rng::new(10);
+        let input = SpikeFrame::random(10, 10, 6, 0.3, &mut rng);
+        let mut serial = ConvEngine::new(
+            l.clone(), w.clone(), ConvLatencyParams::optimized(), 1);
+        let mut banded = ConvEngine::new(
+            l, w, ConvLatencyParams::optimized(), 1)
+            .with_intra_parallel(4);
+        let (_, rs) = serial.run_frame(&input, true);
+        let (_, rb) = banded.run_frame(&input, true);
+        assert_eq!(
+            rs.counters.reads_of(MemLevel::Dram, DataKind::InputSpike),
+            rb.counters.reads_of(MemLevel::Dram, DataKind::InputSpike));
+        assert_eq!(
+            rs.counters.writes_of(MemLevel::Bram, DataKind::InputSpike),
+            rb.counters.writes_of(MemLevel::Bram, DataKind::InputSpike));
+    }
+
+    #[test]
+    fn band_ranges_cover_and_clamp() {
+        assert_eq!(band_ranges(10, 1), vec![(0, 10)]);
+        assert_eq!(band_ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(band_ranges(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(band_ranges(1, 0), vec![(0, 1)]);
     }
 
     #[test]

@@ -101,12 +101,8 @@ impl EnergyModel {
             compute_pj: ops as f64 * self.pj_per_op,
             ..Default::default()
         };
-        let all = counters
-            .reads
-            .iter()
-            .chain(counters.writes.iter());
-        for (&(level, kind), &n) in all {
-            let pj = n as f64 * self.pj_at(level);
+        for (level, kind, r, w) in counters.iter() {
+            let pj = (r + w) as f64 * self.pj_at(level);
             match kind {
                 DataKind::InputSpike => rep.input_pj += pj,
                 DataKind::Weight => rep.weight_pj += pj,

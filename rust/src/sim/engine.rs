@@ -74,6 +74,15 @@ pub enum LayerOutput {
     Classified { class: usize, logits: Vec<f32> },
 }
 
+/// Outcome of a zero-copy [`LayerEngine::process_frame_into`] step.
+pub enum LayerResult {
+    /// The output spike frame was written into the caller's buffer.
+    Frame,
+    /// Terminal classifier output: argmax class + accumulated logits
+    /// (the caller's buffer is untouched).
+    Classified { class: usize, logits: Vec<f32> },
+}
+
 /// One pipeline stage of the accelerator: a hardware engine that
 /// consumes a spike frame and produces the next activation (or the
 /// classification) while accounting its architectural cost.
@@ -92,11 +101,30 @@ pub trait LayerEngine: Send {
         String::new()
     }
 
-    /// Run all configured timesteps of one frame. `off_chip_input`
-    /// marks whether the input arrives from DRAM (first pipeline
-    /// layer) or an on-chip FIFO.
+    /// Run all configured timesteps of one frame, writing the output
+    /// frame (if any) into the caller-owned `out` buffer — the
+    /// zero-allocation hot path the pipeline drives (§Perf).
+    /// `off_chip_input` marks whether the input arrives from DRAM
+    /// (first pipeline layer) or an on-chip FIFO.
+    fn process_frame_into(&mut self, input: &SpikeFrame,
+                          off_chip_input: bool, out: &mut SpikeFrame)
+                          -> (LayerResult, LayerStep);
+
+    /// Allocating convenience wrapper around
+    /// [`LayerEngine::process_frame_into`].
     fn process_frame(&mut self, input: &SpikeFrame, off_chip_input: bool)
-                     -> (LayerOutput, LayerStep);
+                     -> (LayerOutput, LayerStep) {
+        let mut out = SpikeFrame::zeros(0, 0, 0);
+        let (res, step) =
+            self.process_frame_into(input, off_chip_input, &mut out);
+        let output = match res {
+            LayerResult::Frame => LayerOutput::Frame(out),
+            LayerResult::Classified { class, logits } => {
+                LayerOutput::Classified { class, logits }
+            }
+        };
+        (output, step)
+    }
 
     /// Reset cross-frame state (membrane potentials). Engines are
     /// frame-stateless by default.
@@ -125,10 +153,11 @@ impl LayerEngine for ConvEngine {
         format!(":{:?}", self.layer.mode)
     }
 
-    fn process_frame(&mut self, input: &SpikeFrame, off_chip_input: bool)
-                     -> (LayerOutput, LayerStep) {
-        let (out, step) = self.run_frame(input, off_chip_input);
-        (LayerOutput::Frame(out), step)
+    fn process_frame_into(&mut self, input: &SpikeFrame,
+                          off_chip_input: bool, out: &mut SpikeFrame)
+                          -> (LayerResult, LayerStep) {
+        let step = self.run_frame_into(input, off_chip_input, out);
+        (LayerResult::Frame, step)
     }
 
     fn reset(&mut self) {
@@ -150,18 +179,19 @@ impl LayerEngine for PoolEngine {
         "pool"
     }
 
-    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
-                     -> (LayerOutput, LayerStep) {
+    fn process_frame_into(&mut self, input: &SpikeFrame,
+                          _off_chip_input: bool, out: &mut SpikeFrame)
+                          -> (LayerResult, LayerStep) {
         // The pooling pass repeats per timestep (same OR result); the
         // traffic is charged once — the registers hold the window.
         let t = self.timesteps() as u64;
-        let (out, rep) = self.run(input);
+        let rep = self.run_into(input, out);
         let step = LayerStep {
             cycles: rep.cycles * t,
             out_spikes: out.count() as u64,
             ..rep
         };
-        (LayerOutput::Frame(out), step)
+        (LayerResult::Frame, step)
     }
 }
 
@@ -170,15 +200,14 @@ impl LayerEngine for FcEngine {
         "fc"
     }
 
-    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
-                     -> (LayerOutput, LayerStep) {
+    fn process_frame_into(&mut self, input: &SpikeFrame,
+                          _off_chip_input: bool, _out: &mut SpikeFrame)
+                          -> (LayerResult, LayerStep) {
         // At T > 1 the same final spike map replays per timestep
-        // (upstream already accumulated) — SDT readout.
-        let flat = FcEngine::flatten(input);
-        let reps: Vec<Vec<bool>> =
-            (0..self.timesteps()).map(|_| flat.clone()).collect();
-        let (class, logits, step) = self.classify_full(&reps);
-        (LayerOutput::Classified { class, logits }, step)
+        // (upstream already accumulated) — SDT readout, flattened into
+        // engine-owned scratch.
+        let (class, logits, step) = self.classify_frame(input);
+        (LayerResult::Classified { class, logits }, step)
     }
 }
 
@@ -191,12 +220,13 @@ impl LayerEngine for WsEngine {
         format!(":{:?}", self.layer().mode)
     }
 
-    fn process_frame(&mut self, input: &SpikeFrame, _off_chip_input: bool)
-                     -> (LayerOutput, LayerStep) {
+    fn process_frame_into(&mut self, input: &SpikeFrame,
+                          _off_chip_input: bool, out: &mut SpikeFrame)
+                          -> (LayerResult, LayerStep) {
         // WS charges its own (Table I) traffic pattern regardless of
         // where the input comes from.
-        let (out, step) = self.run_frame(input);
-        (LayerOutput::Frame(out), step)
+        let step = self.run_frame_into(input, out);
+        (LayerResult::Frame, step)
     }
 
     fn reset(&mut self) {
@@ -240,6 +270,9 @@ pub struct EngineConfig {
     pub timesteps: usize,
     /// Functional compute backend (bit-exact across kinds).
     pub backend: BackendKind,
+    /// Intra-frame row bands per conv engine (host-side parallelism;
+    /// reports are band-invariant — 1 = serial).
+    pub intra_parallel: usize,
 }
 
 /// Build the engine for one accelerated layer — the single place a
@@ -260,8 +293,11 @@ pub fn engine_for_layer(layer: &Layer, weights: Option<LayerWeights>,
                 }
                 None => anyhow::bail!("conv layer needs weights"),
             };
-            Ok(Box::new(ConvEngine::with_backend(
-                c.clone(), w, cfg.timing, cfg.timesteps, cfg.backend)))
+            Ok(Box::new(
+                ConvEngine::with_backend(c.clone(), w, cfg.timing,
+                                         cfg.timesteps, cfg.backend)
+                    .with_intra_parallel(cfg.intra_parallel),
+            ))
         }
         Layer::Pool { in_h, in_w, c } => {
             anyhow::ensure!(weights.is_none(),
@@ -350,6 +386,7 @@ mod tests {
             timing: ConvLatencyParams::optimized(),
             timesteps: 1,
             backend: BackendKind::Accurate,
+            intra_parallel: 1,
         }
     }
 

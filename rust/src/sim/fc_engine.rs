@@ -32,6 +32,11 @@ pub struct FcEngine {
     pub bias: Vec<f32>,
     backend: Box<dyn FcCompute>,
     timesteps: usize,
+    /// Reusable flatten buffer (the zero-allocation serving path never
+    /// rebuilds the packed input vector; §Perf).
+    flat: Vec<bool>,
+    /// Reusable per-class accumulators.
+    acc: Vec<i64>,
 }
 
 impl FcEngine {
@@ -41,7 +46,17 @@ impl FcEngine {
         assert_eq!(bias.len(), n_out);
         let backend = fc_backend(BackendKind::Accurate, n_in, n_out,
                                  &weights);
-        Self { n_in, n_out, scale, weights, bias, backend, timesteps: 1 }
+        Self {
+            n_in,
+            n_out,
+            scale,
+            weights,
+            bias,
+            backend,
+            timesteps: 1,
+            flat: vec![false; n_in],
+            acc: vec![0; n_out],
+        }
     }
 
     /// Configure the SDT-readout timestep count (the final spike map
@@ -113,6 +128,63 @@ impl FcEngine {
         rep.counters.write(MemLevel::Bram, DataKind::OutputSpike,
                            self.n_out as u64);
         (logits, rep)
+    }
+
+    /// Classify one frame with the SDT readout (the same final spike
+    /// map replays per timestep — upstream already accumulated):
+    /// argmax class, accumulated logits, merged report. Flattens into
+    /// engine-owned scratch, so the serving hot path performs no
+    /// per-frame flatten/replay allocations (the returned logits
+    /// vector aside). Bit-identical — spikes, logits, and report — to
+    /// [`FcEngine::flatten`] + [`FcEngine::classify_full`] over
+    /// `timesteps` copies.
+    pub fn classify_frame(&mut self, frame: &SpikeFrame)
+                          -> (usize, Vec<f32>, FcRunReport) {
+        assert_eq!(frame.h * frame.w * frame.c, self.n_in);
+        let mut i = 0;
+        for y in 0..frame.h {
+            for x in 0..frame.w {
+                for ch in 0..frame.c {
+                    self.flat[i] = frame.get(y, x, ch);
+                    i += 1;
+                }
+            }
+        }
+        let (n_in, n_out, scale) = (self.n_in, self.n_out, self.scale);
+        let mut total = vec![0f32; n_out];
+        let mut rep = FcRunReport::default();
+        for _ in 0..self.timesteps {
+            for a in self.acc.iter_mut() {
+                *a = 0;
+            }
+            let active = {
+                let Self { backend, weights, flat, acc, .. } = &mut *self;
+                backend.accumulate(flat.as_slice(), weights.as_slice(),
+                                   n_out, acc.as_mut_slice())
+            };
+            rep.cycles += n_in as u64;
+            rep.ops += active * n_out as u64;
+            if active > 0 {
+                rep.counters.read(MemLevel::Bram, DataKind::Weight,
+                                  active);
+            }
+            for ((t, &a), &b) in total
+                .iter_mut()
+                .zip(self.acc.iter())
+                .zip(self.bias.iter())
+            {
+                *t += a as f32 * scale + b;
+            }
+            rep.counters.write(MemLevel::Bram, DataKind::OutputSpike,
+                               n_out as u64);
+        }
+        let arg = total
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        (arg, total, rep)
     }
 
     /// Accumulate logits across timesteps (SDT readout): returns the
@@ -195,6 +267,29 @@ mod tests {
         let flat = FcEngine::flatten(&f);
         assert!(flat[5]);
         assert_eq!(flat.iter().filter(|&&b| b).count(), 1);
+    }
+
+    /// The zero-alloc classify_frame path equals flatten +
+    /// classify_full over replayed timesteps — logits AND report.
+    #[test]
+    fn classify_frame_matches_classify_full() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(31);
+        for timesteps in [1usize, 3] {
+            let frame = SpikeFrame::random(3, 4, 5, 0.35, &mut rng);
+            let mut a = FcEngine::random(60, 7, 9)
+                .with_timesteps(timesteps);
+            let mut b = FcEngine::random(60, 7, 9)
+                .with_timesteps(timesteps);
+            let flat = FcEngine::flatten(&frame);
+            let reps: Vec<Vec<bool>> =
+                (0..timesteps).map(|_| flat.clone()).collect();
+            let (cls_a, logits_a, rep_a) = a.classify_full(&reps);
+            let (cls_b, logits_b, rep_b) = b.classify_frame(&frame);
+            assert_eq!(cls_a, cls_b, "T={timesteps}");
+            assert_eq!(logits_a, logits_b, "T={timesteps}");
+            assert_eq!(rep_a, rep_b, "T={timesteps}");
+        }
     }
 
     /// Both backends produce identical logits + identical reports on

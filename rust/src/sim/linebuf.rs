@@ -1,16 +1,24 @@
 //! Line buffer: `Kh` chained FIFOs of spike vectors (paper Fig. 7a).
 //!
-//! The FIFOs are arranged tail-to-head: pushing a new pixel's spike
-//! vector into row 0 shifts the column history upward, so after priming,
-//! reading the heads of all `Kh` rows yields the `Kh x 1` column of the
-//! current receptive field.  Each FIFO has depth `Wi` (one image row)
-//! and width `Ci` bits (one spike vector) — exactly the paper's sizing.
+//! The FIFOs are arranged tail-to-head: ingesting a new image row
+//! shifts the row history upward, so after priming, the `Kh` resident
+//! rows are the rows of the current receptive field.  Each FIFO has
+//! depth `Wi` (one padded image row) and width `Ci` bits (one spike
+//! vector) — exactly the paper's sizing.
 //!
-//! The conv engine walks receptive fields through [`LineBuffer::window`]
-//! which also counts the BRAM traffic the structure implies: each input
-//! vector is **written once** on fill (the single off-chip fetch of
-//! Table III) and **read `Kw`** times per row it participates in from
-//! on-chip FIFOs.
+//! The buffer is an engine-owned **workspace**: all `Kh x Wi` vectors
+//! are allocated once at construction and refilled in place via
+//! word-level extraction from the input frame
+//! ([`crate::codec::SpikeFrame::vector_into`]), so steady-state frame
+//! processing performs zero heap allocations (§Perf; pinned by
+//! `tests/alloc_budget.rs`).  Zero padding is materialised during
+//! ingest — there is no separately allocated padded-row copy of the
+//! input.
+//!
+//! Traffic accounting mirrors the hardware: each input vector is
+//! **written once** on fill (the single off-chip fetch of Table III)
+//! and **read `Kw`** times per row it participates in from on-chip
+//! FIFOs ([`LineBuffer::count_window_read`]).
 
 use crate::codec::{SpikeFrame, SpikeVector};
 
@@ -21,9 +29,11 @@ pub struct LineBuffer {
     pub kh: usize,
     pub wi: usize,
     pub ci: usize,
-    /// rows[r] = the r-th most recent image row (r = 0 newest).
+    /// Ring of `kh` padded rows; `rows[(head + r) % kh]` is field row
+    /// `r` (0 = top of the receptive field = oldest resident row).
     rows: Vec<Vec<SpikeVector>>,
-    /// Number of image rows pushed so far.
+    head: usize,
+    /// Number of image rows ingested since the last [`Self::reset`].
     filled: usize,
 }
 
@@ -33,7 +43,10 @@ impl LineBuffer {
             kh,
             wi,
             ci,
-            rows: (0..kh).map(|_| Vec::with_capacity(wi)).collect(),
+            rows: (0..kh)
+                .map(|_| (0..wi).map(|_| SpikeVector::zeros(ci)).collect())
+                .collect(),
+            head: 0,
             filled: 0,
         }
     }
@@ -43,24 +56,62 @@ impl LineBuffer {
         self.kh * self.wi * self.ci
     }
 
-    /// Push one full image row of spike vectors (the fill from the
-    /// previous layer / DRAM). Counts one off-chip read + one BRAM
-    /// write per vector. Rows shift tail-to-head: the oldest falls off.
-    pub fn push_row(&mut self, row: Vec<SpikeVector>,
-                    counters: &mut AccessCounter, off_chip: bool) {
-        assert_eq!(row.len(), self.wi, "row width mismatch");
-        for v in &row {
-            assert_eq!(v.channels, self.ci, "channel width mismatch");
+    /// Start a new frame: forget the resident rows (buffers stay
+    /// allocated — every vector is overwritten on ingest).
+    pub fn reset(&mut self) {
+        self.head = 0;
+        self.filled = 0;
+    }
+
+    /// Ingest one padded row: padded row index `py` maps to frame row
+    /// `py - pad` (rows and columns outside the frame are zero
+    /// vectors).  The oldest resident row is overwritten in place.
+    ///
+    /// When `charge` is set, counts one off-chip (or on-chip, per
+    /// `off_chip`) read plus one BRAM write per vector — exactly the
+    /// fill traffic the serial row schedule implies.  Intra-frame
+    /// bands re-ingest the `Kh - 1` rows they share with the previous
+    /// band with `charge = false`, so each padded row is charged once
+    /// across bands and reports stay bit-identical to the serial run.
+    pub fn ingest_row(&mut self, frame: &SpikeFrame, py: isize, pad: usize,
+                      counters: &mut AccessCounter, off_chip: bool,
+                      charge: bool) {
+        debug_assert_eq!(frame.c, self.ci, "channel width mismatch");
+        debug_assert_eq!(frame.w + 2 * pad, self.wi, "row width mismatch");
+        if charge {
+            counters.read(
+                if off_chip { MemLevel::Dram } else { MemLevel::Bram },
+                DataKind::InputSpike,
+                self.wi as u64,
+            );
+            counters.write(MemLevel::Bram, DataKind::InputSpike,
+                           self.wi as u64);
         }
-        counters.read(
-            if off_chip { MemLevel::Dram } else { MemLevel::Bram },
-            DataKind::InputSpike,
-            self.wi as u64,
-        );
-        counters.write(MemLevel::Bram, DataKind::InputSpike, self.wi as u64);
-        self.rows.rotate_right(1);
-        self.rows[0] = row;
+        let slot = if self.filled < self.kh {
+            self.filled
+        } else {
+            let s = self.head;
+            self.head = (self.head + 1) % self.kh;
+            s
+        };
         self.filled += 1;
+        let y = py - pad as isize;
+        let row = &mut self.rows[slot];
+        if y < 0 || y >= frame.h as isize {
+            for v in row.iter_mut() {
+                v.clear();
+            }
+            return;
+        }
+        let y = y as usize;
+        for (x, v) in row.iter_mut().enumerate() {
+            let fx = x as isize - pad as isize;
+            if fx < 0 || fx >= frame.w as isize {
+                v.clear();
+            } else {
+                frame.vector_into(y, fx as usize, v);
+            }
+        }
     }
 
     /// True when `Kh` rows are resident (the array can start).
@@ -68,14 +119,17 @@ impl LineBuffer {
         self.filled >= self.kh
     }
 
-    /// Borrow the `Kh` resident rows bottom-up (index 0 = top of the
-    /// receptive field) for zero-copy window slicing (§Perf hot path).
-    /// Traffic is accounted separately via [`Self::count_window_read`].
-    pub fn resident_rows(&self) -> Vec<&[SpikeVector]> {
+    /// Field row `r` (0 = top of the receptive field), full padded row.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[SpikeVector] {
         debug_assert!(self.primed());
-        (0..self.kh)
-            .map(|r| self.rows[self.kh - 1 - r].as_slice())
-            .collect()
+        &self.rows[(self.head + r) % self.kh]
+    }
+
+    /// The window vector at field row `r`, padded column `x`.
+    #[inline]
+    pub fn at(&self, r: usize, x: usize) -> &SpikeVector {
+        &self.row(r)[x]
     }
 
     /// Account the BRAM reads of one `Kh x Kw` window fetch.
@@ -84,58 +138,17 @@ impl LineBuffer {
         counters.read(MemLevel::Bram, DataKind::InputSpike,
                       (self.kh * kw) as u64);
     }
-
-    /// The `Kh x Kw` window of spike vectors whose top-left input column
-    /// is `x0` (0-based within the padded row). Counts `Kh*Kw` BRAM
-    /// reads — the on-chip reuse traffic.
-    pub fn window(&self, x0: usize, kw: usize,
-                  counters: &mut AccessCounter) -> Vec<Vec<&SpikeVector>> {
-        debug_assert!(self.primed());
-        debug_assert!(x0 + kw <= self.wi);
-        counters.read(MemLevel::Bram, DataKind::InputSpike,
-                      (self.kh * kw) as u64);
-        // rows[0] is the newest = bottom of the receptive field.
-        (0..self.kh)
-            .map(|r| {
-                let row = &self.rows[self.kh - 1 - r];
-                (x0..x0 + kw).map(|x| &row[x]).collect()
-            })
-            .collect()
-    }
-}
-
-/// Build the padded spike-vector rows of a frame (zero padding).
-pub fn padded_rows(frame: &SpikeFrame, pad: usize) -> Vec<Vec<SpikeVector>> {
-    let wi = frame.w + 2 * pad;
-    let mut rows = Vec::with_capacity(frame.h + 2 * pad);
-    let zero_row =
-        || (0..wi).map(|_| SpikeVector::zeros(frame.c)).collect::<Vec<_>>();
-    for _ in 0..pad {
-        rows.push(zero_row());
-    }
-    for y in 0..frame.h {
-        let mut row = Vec::with_capacity(wi);
-        for _ in 0..pad {
-            row.push(SpikeVector::zeros(frame.c));
-        }
-        for x in 0..frame.w {
-            row.push(frame.vector(y, x));
-        }
-        for _ in 0..pad {
-            row.push(SpikeVector::zeros(frame.c));
-        }
-        rows.push(row);
-    }
-    for _ in 0..pad {
-        rows.push(zero_row());
-    }
-    rows
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    fn ingest(lb: &mut LineBuffer, f: &SpikeFrame, py: usize, pad: usize,
+              ctr: &mut AccessCounter) {
+        lb.ingest_row(f, py as isize, pad, ctr, true, true);
+    }
 
     #[test]
     fn sizing_rule() {
@@ -147,19 +160,18 @@ mod tests {
     fn priming_and_window() {
         let mut rng = Rng::new(5);
         let f = SpikeFrame::random(4, 4, 2, 0.5, &mut rng);
-        let rows = padded_rows(&f, 0);
         let mut lb = LineBuffer::new(3, 4, 2);
         let mut ctr = AccessCounter::new();
-        lb.push_row(rows[0].clone(), &mut ctr, true);
+        ingest(&mut lb, &f, 0, 0, &mut ctr);
         assert!(!lb.primed());
-        lb.push_row(rows[1].clone(), &mut ctr, true);
-        lb.push_row(rows[2].clone(), &mut ctr, true);
+        ingest(&mut lb, &f, 1, 0, &mut ctr);
+        ingest(&mut lb, &f, 2, 0, &mut ctr);
         assert!(lb.primed());
-        let win = lb.window(1, 3, &mut ctr);
-        // Window row r must equal image row r (rows 0..2), cols 1..3.
-        for (r, wrow) in win.iter().enumerate() {
-            for (c, v) in wrow.iter().enumerate() {
-                assert_eq!(**v, f.vector(r, 1 + c), "mismatch at {r},{c}");
+        // Field row r must equal image row r (rows 0..2), cols 1..3.
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(*lb.at(r, 1 + c), f.vector(r, 1 + c),
+                           "mismatch at {r},{c}");
             }
         }
     }
@@ -168,38 +180,67 @@ mod tests {
     fn window_shifts_with_new_rows() {
         let mut rng = Rng::new(6);
         let f = SpikeFrame::random(5, 3, 1, 0.5, &mut rng);
-        let rows = padded_rows(&f, 0);
         let mut lb = LineBuffer::new(3, 3, 1);
         let mut ctr = AccessCounter::new();
-        for r in rows.iter().take(4) {
-            lb.push_row(r.clone(), &mut ctr, true);
+        for py in 0..4 {
+            ingest(&mut lb, &f, py, 0, &mut ctr);
         }
-        // After 4 pushes the window covers image rows 1..3.
-        let win = lb.window(0, 3, &mut ctr);
-        assert_eq!(*win[0][0], f.vector(1, 0));
-        assert_eq!(*win[2][2], f.vector(3, 2));
+        // After 4 ingests the window covers image rows 1..3.
+        assert_eq!(*lb.at(0, 0), f.vector(1, 0));
+        assert_eq!(*lb.at(2, 2), f.vector(3, 2));
+    }
+
+    #[test]
+    fn padding_rows_and_columns_are_zero() {
+        let mut rng = Rng::new(9);
+        let f = SpikeFrame::random(4, 4, 3, 0.9, &mut rng);
+        let mut lb = LineBuffer::new(3, 6, 3);
+        let mut ctr = AccessCounter::new();
+        // Padded rows 0..3 with pad = 1: row 0 is the zero pad row.
+        for py in 0..3 {
+            ingest(&mut lb, &f, py, 1, &mut ctr);
+        }
+        for x in 0..6 {
+            assert!(lb.at(0, x).is_empty(), "pad row not zero at {x}");
+        }
+        // Field row 1 = image row 0, shifted one column right.
+        assert!(lb.at(1, 0).is_empty());
+        assert_eq!(*lb.at(1, 1), f.vector(0, 0));
+        assert!(lb.at(1, 5).is_empty());
     }
 
     #[test]
     fn traffic_accounting() {
+        let f = SpikeFrame::zeros(3, 8, 4);
         let mut lb = LineBuffer::new(3, 8, 4);
         let mut ctr = AccessCounter::new();
-        for _ in 0..3 {
-            let row = (0..8).map(|_| SpikeVector::zeros(4)).collect();
-            lb.push_row(row, &mut ctr, true);
+        for py in 0..3 {
+            ingest(&mut lb, &f, py, 0, &mut ctr);
         }
         // 3 rows x 8 vectors: one DRAM read + one BRAM write each.
         assert_eq!(ctr.reads_of(MemLevel::Dram, DataKind::InputSpike), 24);
         assert_eq!(ctr.writes_of(MemLevel::Bram, DataKind::InputSpike), 24);
-        lb.window(0, 3, &mut ctr);
+        lb.count_window_read(3, &mut ctr);
         assert_eq!(ctr.reads_of(MemLevel::Bram, DataKind::InputSpike), 9);
+        // Uncharged ingest (band-overlap refill) moves no counters.
+        lb.ingest_row(&f, 0, 0, &mut ctr, true, false);
+        assert_eq!(ctr.reads_of(MemLevel::Dram, DataKind::InputSpike), 24);
     }
 
     #[test]
-    fn padded_rows_geometry() {
-        let f = SpikeFrame::zeros(4, 6, 3);
-        let rows = padded_rows(&f, 1);
-        assert_eq!(rows.len(), 6);
-        assert_eq!(rows[0].len(), 8);
+    fn reset_forgets_rows_without_reallocating() {
+        let mut rng = Rng::new(12);
+        let f = SpikeFrame::random(4, 4, 2, 0.5, &mut rng);
+        let mut lb = LineBuffer::new(3, 4, 2);
+        let mut ctr = AccessCounter::new();
+        for py in 0..3 {
+            ingest(&mut lb, &f, py, 0, &mut ctr);
+        }
+        lb.reset();
+        assert!(!lb.primed());
+        for py in 1..4 {
+            ingest(&mut lb, &f, py, 0, &mut ctr);
+        }
+        assert_eq!(*lb.at(0, 0), f.vector(1, 0));
     }
 }

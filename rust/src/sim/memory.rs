@@ -4,8 +4,11 @@
 //! matters is how many times each datum crosses each memory boundary.
 //! Every engine in the simulator routes its accesses through an
 //! [`AccessCounter`] so Tables I/III and Fig. 11 fall out of the run.
-
-use std::collections::BTreeMap;
+//!
+//! The counter is a fixed `[MemLevel x DataKind]` array: a counter
+//! touch in the innermost engine loop is one add into a 15-slot array
+//! instead of a `BTreeMap` entry lookup (an allocation + tree walk per
+//! touch; §Perf hot path).
 
 /// Memory level crossed by an access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -18,6 +21,21 @@ pub enum MemLevel {
     Reg,
 }
 
+impl MemLevel {
+    /// Every level, in reporting order.
+    pub const ALL: [MemLevel; 3] =
+        [MemLevel::Dram, MemLevel::Bram, MemLevel::Reg];
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            MemLevel::Dram => 0,
+            MemLevel::Bram => 1,
+            MemLevel::Reg => 2,
+        }
+    }
+}
+
 /// What kind of datum the access moved.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DataKind {
@@ -28,11 +46,47 @@ pub enum DataKind {
     OutputSpike,
 }
 
-/// Read/write counts keyed by (level, kind).
-#[derive(Debug, Clone, Default, PartialEq)]
+impl DataKind {
+    /// Every kind, in reporting order.
+    pub const ALL: [DataKind; 5] = [
+        DataKind::InputSpike,
+        DataKind::Weight,
+        DataKind::PartialSum,
+        DataKind::Vmem,
+        DataKind::OutputSpike,
+    ];
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            DataKind::InputSpike => 0,
+            DataKind::Weight => 1,
+            DataKind::PartialSum => 2,
+            DataKind::Vmem => 3,
+            DataKind::OutputSpike => 4,
+        }
+    }
+}
+
+const SLOTS: usize = MemLevel::ALL.len() * DataKind::ALL.len();
+
+#[inline]
+fn slot(level: MemLevel, kind: DataKind) -> usize {
+    level.index() * DataKind::ALL.len() + kind.index()
+}
+
+/// Read/write counts keyed by (level, kind) — fixed-slot arrays with
+/// the same accessor surface the old map-backed counter had.
+#[derive(Debug, Clone, PartialEq)]
 pub struct AccessCounter {
-    pub reads: BTreeMap<(MemLevel, DataKind), u64>,
-    pub writes: BTreeMap<(MemLevel, DataKind), u64>,
+    reads: [u64; SLOTS],
+    writes: [u64; SLOTS],
+}
+
+impl Default for AccessCounter {
+    fn default() -> Self {
+        Self { reads: [0; SLOTS], writes: [0; SLOTS] }
+    }
 }
 
 impl AccessCounter {
@@ -42,63 +96,57 @@ impl AccessCounter {
 
     #[inline]
     pub fn read(&mut self, level: MemLevel, kind: DataKind, n: u64) {
-        *self.reads.entry((level, kind)).or_insert(0) += n;
+        self.reads[slot(level, kind)] += n;
     }
 
     #[inline]
     pub fn write(&mut self, level: MemLevel, kind: DataKind, n: u64) {
-        *self.writes.entry((level, kind)).or_insert(0) += n;
+        self.writes[slot(level, kind)] += n;
     }
 
     pub fn reads_of(&self, level: MemLevel, kind: DataKind) -> u64 {
-        self.reads.get(&(level, kind)).copied().unwrap_or(0)
+        self.reads[slot(level, kind)]
     }
 
     pub fn writes_of(&self, level: MemLevel, kind: DataKind) -> u64 {
-        self.writes.get(&(level, kind)).copied().unwrap_or(0)
+        self.writes[slot(level, kind)]
     }
 
     /// Total accesses (reads + writes) of a kind across all levels.
     pub fn total_of_kind(&self, kind: DataKind) -> u64 {
-        let r: u64 = self
-            .reads
-            .iter()
-            .filter(|((_, k), _)| *k == kind)
-            .map(|(_, v)| v)
-            .sum();
-        let w: u64 = self
-            .writes
-            .iter()
-            .filter(|((_, k), _)| *k == kind)
-            .map(|(_, v)| v)
-            .sum();
-        r + w
+        MemLevel::ALL
+            .into_iter()
+            .map(|l| self.reads[slot(l, kind)] + self.writes[slot(l, kind)])
+            .sum()
     }
 
     /// Total accesses at a level.
     pub fn total_at_level(&self, level: MemLevel) -> u64 {
-        let r: u64 = self
-            .reads
-            .iter()
-            .filter(|((l, _), _)| *l == level)
-            .map(|(_, v)| v)
-            .sum();
-        let w: u64 = self
-            .writes
-            .iter()
-            .filter(|((l, _), _)| *l == level)
-            .map(|(_, v)| v)
-            .sum();
-        r + w
+        DataKind::ALL
+            .into_iter()
+            .map(|k| {
+                self.reads[slot(level, k)] + self.writes[slot(level, k)]
+            })
+            .sum()
     }
 
     pub fn merge(&mut self, other: &AccessCounter) {
-        for (k, v) in &other.reads {
-            *self.reads.entry(*k).or_insert(0) += v;
+        for i in 0..SLOTS {
+            self.reads[i] += other.reads[i];
+            self.writes[i] += other.writes[i];
         }
-        for (k, v) in &other.writes {
-            *self.writes.entry(*k).or_insert(0) += v;
-        }
+    }
+
+    /// Iterate every `(level, kind, reads, writes)` slot (zeros
+    /// included) in deterministic reporting order.
+    pub fn iter(&self)
+                -> impl Iterator<Item = (MemLevel, DataKind, u64, u64)> + '_
+    {
+        MemLevel::ALL.into_iter().flat_map(move |l| {
+            DataKind::ALL.into_iter().map(move |k| {
+                (l, k, self.reads[slot(l, k)], self.writes[slot(l, k)])
+            })
+        })
     }
 }
 
@@ -128,5 +176,20 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.reads_of(MemLevel::Reg, DataKind::PartialSum), 12);
         assert_eq!(a.writes_of(MemLevel::Bram, DataKind::InputSpike), 1);
+    }
+
+    #[test]
+    fn iter_covers_every_slot_in_order() {
+        let mut c = AccessCounter::new();
+        c.read(MemLevel::Dram, DataKind::InputSpike, 2);
+        c.write(MemLevel::Reg, DataKind::OutputSpike, 9);
+        let all: Vec<_> = c.iter().collect();
+        assert_eq!(all.len(), SLOTS);
+        assert_eq!(all[0], (MemLevel::Dram, DataKind::InputSpike, 2, 0));
+        assert_eq!(all[SLOTS - 1],
+                   (MemLevel::Reg, DataKind::OutputSpike, 0, 9));
+        let total_r: u64 = all.iter().map(|(_, _, r, _)| r).sum();
+        let total_w: u64 = all.iter().map(|(_, _, _, w)| w).sum();
+        assert_eq!((total_r, total_w), (2, 9));
     }
 }

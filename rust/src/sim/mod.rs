@@ -32,7 +32,8 @@ pub mod ws_engine;
 pub use backend::BackendKind;
 pub use conv_engine::ConvEngine;
 pub use energy::{EnergyModel, EnergyReport};
-pub use engine::{LayerEngine, LayerOutput, LayerStep, LayerWeights};
+pub use engine::{LayerEngine, LayerOutput, LayerResult, LayerStep,
+                 LayerWeights};
 pub use fc_engine::FcEngine;
 pub use memory::{AccessCounter, DataKind, MemLevel};
 pub use pool_engine::PoolEngine;

@@ -77,6 +77,90 @@ impl NeuronUnit {
             vm.iter_mut().for_each(|v| *v = 0.0);
         }
     }
+
+    /// One band view covering every neuron (the serial path).
+    pub fn band_all(&mut self) -> NeuronBand<'_> {
+        NeuronBand {
+            vth: self.vth,
+            scale: self.scale,
+            bias: &self.bias,
+            vmem: self.vmem.as_deref_mut(),
+            base: 0,
+        }
+    }
+
+    /// Split into per-band views over contiguous `[start, end)` global
+    /// neuron index ranges (ascending, disjoint, starting at 0). Each
+    /// band gets its own slice of the Vmem buffer, so intra-frame row
+    /// bands can fire neurons from scoped worker threads without
+    /// sharing mutable state.
+    pub fn bands<'a>(&'a mut self, ranges: &[(usize, usize)])
+                     -> Vec<NeuronBand<'a>> {
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut vm_rest = self.vmem.as_deref_mut();
+        let mut offset = 0usize;
+        for &(start, end) in ranges {
+            assert_eq!(start, offset, "bands must be contiguous");
+            assert!(end >= start && end <= self.n_neurons,
+                    "band out of range");
+            let vmem = match vm_rest.take() {
+                None => None,
+                Some(r) => {
+                    let (a, b) = r.split_at_mut(end - start);
+                    vm_rest = Some(b);
+                    Some(a)
+                }
+            };
+            out.push(NeuronBand {
+                vth: self.vth,
+                scale: self.scale,
+                bias: &self.bias,
+                vmem,
+                base: start,
+            });
+            offset = end;
+        }
+        out
+    }
+}
+
+/// A view over one contiguous band of a layer's neurons — the unit of
+/// intra-frame row parallelism. Bands hold disjoint Vmem slices, so
+/// scoped worker threads fire neurons concurrently while traffic is
+/// accounted per band (and merged deterministically).
+pub struct NeuronBand<'a> {
+    vth: f32,
+    scale: f32,
+    bias: &'a [f32],
+    vmem: Option<&'a mut [f32]>,
+    /// Global neuron index of this band's first Vmem slot.
+    base: usize,
+}
+
+impl NeuronBand<'_> {
+    /// Process one neuron's psum (global flat index `idx`): integrate,
+    /// compare, fire, reset — identical semantics and Vmem traffic to
+    /// [`NeuronUnit::fire`].
+    #[inline]
+    pub fn fire(&mut self, idx: usize, co: usize, psum: Acc,
+                counters: &mut AccessCounter) -> bool {
+        let current = psum as f32 * self.scale + self.bias[co];
+        match self.vmem.as_deref_mut() {
+            None => {
+                // T = 1: threshold on the live accumulator; no storage.
+                current >= self.vth
+            }
+            Some(vm) => {
+                // T > 1: read-modify-write the Vmem buffer (BRAM).
+                counters.read(MemLevel::Bram, DataKind::Vmem, 1);
+                let v = vm[idx - self.base] + current;
+                let spike = v >= self.vth;
+                vm[idx - self.base] = if spike { 0.0 } else { v };
+                counters.write(MemLevel::Bram, DataKind::Vmem, 1);
+                spike
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +205,29 @@ mod tests {
         let mut c = AccessCounter::new();
         assert!(!n.fire(0, 0, 0, &mut c));
         assert!(n.fire(1, 1, 0, &mut c)); // bias lane 1 pushes over vth
+    }
+
+    /// Band views reproduce the unit's semantics and traffic on the
+    /// T > 1 (Vmem) path, with disjoint slices per band.
+    #[test]
+    fn bands_split_vmem_and_match_unit() {
+        let mut whole = unit(2);
+        let mut split = unit(2);
+        let mut c_whole = AccessCounter::new();
+        let mut c_split = AccessCounter::new();
+        let want: Vec<bool> =
+            (0..16).map(|i| whole.fire(i, i % 4, 6, &mut c_whole)).collect();
+        let mut got = Vec::new();
+        {
+            let mut bands = split.bands(&[(0, 5), (5, 12), (12, 16)]);
+            for (b, (s, e)) in [(0, (0, 5)), (1, (5, 12)), (2, (12, 16))] {
+                for i in s..e {
+                    got.push(bands[b].fire(i, i % 4, 6, &mut c_split));
+                }
+            }
+        }
+        assert_eq!(got, want);
+        assert_eq!(c_whole, c_split);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Pooling layer engine: 2x2 stride-2 logical-OR on spike vectors,
 //! staged through the line buffer + register pair (paper Fig. 7b).
 
-use crate::codec::SpikeFrame;
+use crate::codec::{SpikeFrame, SpikeVector};
 
 use super::memory::{DataKind, MemLevel};
 
@@ -15,13 +15,16 @@ pub struct PoolEngine {
     pub in_w: usize,
     pub c: usize,
     timesteps: usize,
+    /// Reusable OR-reduce register (the Fig. 7b register pair — and
+    /// the zero-allocation hot path's only scratch).
+    acc: SpikeVector,
 }
 
 impl PoolEngine {
     pub fn new(in_h: usize, in_w: usize, c: usize) -> Self {
         assert!(in_h % 2 == 0 && in_w % 2 == 0,
                 "OR pooling needs even dimensions");
-        Self { in_h, in_w, c, timesteps: 1 }
+        Self { in_h, in_w, c, timesteps: 1, acc: SpikeVector::zeros(c) }
     }
 
     /// Configure the inference timestep count (the pooling pass
@@ -36,27 +39,39 @@ impl PoolEngine {
         self.timesteps
     }
 
-    pub fn run(&self, input: &SpikeFrame) -> (SpikeFrame, PoolRunReport) {
+    pub fn run(&mut self, input: &SpikeFrame)
+               -> (SpikeFrame, PoolRunReport) {
+        let mut out =
+            SpikeFrame::zeros(self.in_h / 2, self.in_w / 2, self.c);
+        let rep = self.run_into(input, &mut out);
+        (out, rep)
+    }
+
+    /// Pool into the caller-owned `out` frame (reshaped as needed) —
+    /// the zero-allocation hot path.
+    pub fn run_into(&mut self, input: &SpikeFrame, out: &mut SpikeFrame)
+                    -> PoolRunReport {
         assert_eq!((input.h, input.w, input.c),
                    (self.in_h, self.in_w, self.c));
         let (ho, wo) = (self.in_h / 2, self.in_w / 2);
-        let mut out = SpikeFrame::zeros(ho, wo, self.c);
+        out.reset(ho, wo, self.c);
         let mut rep = PoolRunReport::default();
         for oy in 0..ho {
             for ox in 0..wo {
-                // Fig. 7b: four vector reads, OR reduce, one write.
-                let v = input
-                    .vector(2 * oy, 2 * ox)
-                    .or(&input.vector(2 * oy, 2 * ox + 1))
-                    .or(&input.vector(2 * oy + 1, 2 * ox))
-                    .or(&input.vector(2 * oy + 1, 2 * ox + 1));
+                // Fig. 7b: four vector reads, OR reduce, one write —
+                // word-level, into the reusable register.
+                input.vector_into(2 * oy, 2 * ox, &mut self.acc);
+                input.or_vector_into(2 * oy, 2 * ox + 1, &mut self.acc);
+                input.or_vector_into(2 * oy + 1, 2 * ox, &mut self.acc);
+                input.or_vector_into(2 * oy + 1, 2 * ox + 1,
+                                     &mut self.acc);
                 rep.counters.read(MemLevel::Bram, DataKind::InputSpike, 4);
-                out.set_vector(oy, ox, &v);
+                out.set_vector(oy, ox, &self.acc);
                 rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
                 rep.cycles += 1; // one output vector per cycle
             }
         }
-        (out, rep)
+        rep
     }
 }
 

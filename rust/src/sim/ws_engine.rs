@@ -43,9 +43,20 @@ impl WsEngine {
     /// Run one frame under WS accounting.
     pub fn run_frame(&mut self, input: &SpikeFrame)
                      -> (SpikeFrame, ConvRunReport) {
+        let mut out = SpikeFrame::zeros(self.inner.layer.out_h(),
+                                        self.inner.layer.out_w(),
+                                        self.inner.layer.co);
+        let rep = self.run_frame_into(input, &mut out);
+        (out, rep)
+    }
+
+    /// Run one frame under WS accounting into the caller-owned `out`
+    /// frame (the zero-allocation trait path).
+    pub fn run_frame_into(&mut self, input: &SpikeFrame,
+                          out: &mut SpikeFrame) -> ConvRunReport {
         // Functional result: identical to OS (dataflow changes traffic,
         // not math).
-        let (out, os_rep) = self.inner.run_frame(input, true);
+        let os_rep = self.inner.run_frame_into(input, true, out);
 
         // Replace the traffic with the WS pattern from Table I.
         let l = &self.inner.layer;
@@ -63,12 +74,12 @@ impl WsEngine {
         // one extra cycle per psum access on top of the compute walk.
         let cycles = os_rep.cycles + a.partial_sums;
 
-        (out, ConvRunReport {
+        ConvRunReport {
             cycles,
             ops: os_rep.ops,
             out_spikes: os_rep.out_spikes,
             counters,
-        })
+        }
     }
 
     fn timesteps(&self) -> usize {

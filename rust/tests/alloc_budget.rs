@@ -1,0 +1,131 @@
+//! Steady-state allocation budget for the frame hot path.
+//!
+//! The §Perf contract: after a warm-up frame, conv inference through
+//! the engine-owned workspaces ([`ConvEngine::run_frame_into`])
+//! performs **zero** heap allocations per frame — for both compute
+//! backends and all three conv modes — and a whole pipeline frame
+//! stays within a small O(1) budget (classifier logits and report
+//! assembly; nothing proportional to pixels or channels).
+//!
+//! A counting global allocator pins this: any allocation (or
+//! reallocation — buffer growth counts) in the steady-state loop
+//! fails the test. Everything lives in ONE `#[test]` so no concurrent
+//! test thread pollutes the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sti_snn::arch::{ConvLayer, ConvMode};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
+use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn layer(mode: ConvMode) -> ConvLayer {
+    let (ci, co) = match mode {
+        ConvMode::Depthwise => (24, 24),
+        _ => (24, 16),
+    };
+    let k = if mode == ConvMode::Pointwise { 1 } else { 3 };
+    ConvLayer {
+        mode,
+        in_h: 12,
+        in_w: 12,
+        ci,
+        co,
+        kh: k,
+        kw: k,
+        pad: k / 2,
+        encoder: false,
+        parallel: 2,
+    }
+}
+
+#[test]
+fn steady_state_frame_hot_path_allocation_budget() {
+    // ---- conv engines: exactly zero allocations per frame ----------
+    let mut rng = Rng::new(90);
+    for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        for mode in [ConvMode::Standard, ConvMode::Depthwise,
+                     ConvMode::Pointwise] {
+            for timesteps in [1usize, 2] {
+                let l = layer(mode);
+                let w = ConvWeights::random(&l, 7);
+                let mut eng = ConvEngine::with_backend(
+                    l.clone(), w, ConvLatencyParams::optimized(),
+                    timesteps, backend);
+                let mut out = SpikeFrame::zeros(1, 1, 1);
+                // Frames spanning sparse -> dense so steady state sees
+                // MORE window events than the warm-up did (growth of
+                // any event buffer would show up as a realloc).
+                let frames: Vec<SpikeFrame> = [0.1, 0.4, 0.8, 0.25]
+                    .iter()
+                    .map(|&r| SpikeFrame::random(l.in_h, l.in_w, l.ci,
+                                                 r, &mut rng))
+                    .collect();
+                eng.run_frame_into(&frames[0], true, &mut out);
+                let before = allocs();
+                for f in &frames {
+                    eng.run_frame_into(f, true, &mut out);
+                }
+                let grew = allocs() - before;
+                assert_eq!(grew, 0,
+                           "{mode:?} {backend} T={timesteps}: {grew} \
+                            allocations in the steady-state loop");
+            }
+        }
+    }
+
+    // ---- whole pipeline: O(1) per batch, nothing per-pixel ---------
+    let net = sti_snn::arch::scnn3();
+    let mut p = Pipeline::random(
+        net,
+        PipelineConfig {
+            backend: BackendKind::WordParallel,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let shape = (28usize, 28usize, 16usize);
+    let frame =
+        vec![SpikeFrame::random(shape.0, shape.1, shape.2, 0.2, &mut rng)];
+    p.run(&frame); // warm-up: sizes every engine workspace + buffer
+    let before = allocs();
+    p.run(&frame);
+    let per_batch = allocs() - before;
+    // Report assembly + classifier logits only: far below anything
+    // proportional to the 28*28*16 pixel volume.
+    assert!(per_batch < 100,
+            "pipeline batch made {per_batch} allocations — hot path \
+             regressed");
+}

@@ -89,6 +89,44 @@ fn prop_conv_backends_identical_frames_and_reports() {
     }
 }
 
+/// The incremental sliding-window protocol (`begin_row` + `advance`)
+/// is bit-exact — frames AND full reports — against the `begin_field`
+/// full-repack fallback, across random geometries, both backends, and
+/// intra-frame band counts {1, 2, 4}.
+#[test]
+fn prop_incremental_window_matches_fallback_across_bands() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let l = random_layer(&mut rng);
+        let w = ConvWeights::random(&l, 500 + seed);
+        let rate = [0.05, 0.2, 0.5][rng.below(3)];
+        let input =
+            SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, &mut rng);
+        let timesteps = 1 + rng.below(2);
+        let timing = ConvLatencyParams::optimized();
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            let mut fallback = ConvEngine::with_backend(
+                l.clone(), w.clone(), timing, timesteps, backend)
+                .with_incremental(false);
+            let (frame_f, rep_f) = fallback.run_frame(&input, true);
+            for bands in [1usize, 2, 4] {
+                let mut inc = ConvEngine::with_backend(
+                    l.clone(), w.clone(), timing, timesteps, backend)
+                    .with_intra_parallel(bands);
+                let (frame_i, rep_i) = inc.run_frame(&input, true);
+                assert_eq!(frame_i, frame_f,
+                           "seed={seed} {:?} ci={} co={} k={} \
+                            backend={backend} bands={bands}: frames",
+                           l.mode, l.ci, l.co, l.kh);
+                assert_eq!(rep_i, rep_f,
+                           "seed={seed} {:?} ci={} co={} \
+                            backend={backend} bands={bands}: reports",
+                           l.mode, l.ci, l.co);
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_fc_backends_identical_logits_and_reports() {
     for seed in 0..CASES {

@@ -248,7 +248,7 @@ fn prop_pooling_monotone() {
                 }
             }
         }
-        let eng = PoolEngine::new(h, w, c);
+        let mut eng = PoolEngine::new(h, w, c);
         let (o1, _) = eng.run(&f1);
         let (o2, _) = eng.run(&f2);
         for y in 0..h / 2 {

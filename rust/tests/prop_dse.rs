@@ -130,6 +130,58 @@ fn prop_calibrated_predictions_track_simulator_counters() {
     }
 }
 
+/// The optimised hot path re-fits cleanly: calibrating with
+/// intra-frame bands records fresh host-ns/frame figures per backend
+/// while the architectural scales stay band-invariant, and calibrated
+/// cycle predictions still land within the 5% envelope on unseen
+/// design points.
+#[test]
+fn prop_calibration_refit_with_bands_stays_in_envelope() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(7700 + seed);
+        let l = random_layer(&mut rng);
+        let net = NetworkSpec {
+            name: "probe".into(),
+            input: (l.in_h, l.in_w, l.ci),
+            layers: vec![Layer::Conv(l.clone())],
+        };
+        let timing = ConvLatencyParams::optimized();
+        let base = dse::calibrate(&net, &timing, &CalibrationConfig {
+            seed: 9 + seed,
+            ..Default::default()
+        });
+        let banded = dse::calibrate(&net, &timing, &CalibrationConfig {
+            seed: 9 + seed,
+            intra_parallel: 2,
+            ..Default::default()
+        });
+        // Architectural fits are band-invariant; host times refit.
+        assert_eq!(base.cycle_scales, banded.cycle_scales,
+                   "seed={seed}");
+        assert_eq!(base.weight_scale, banded.weight_scale,
+                   "seed={seed}");
+        assert_eq!(base.op_activity, banded.op_activity, "seed={seed}");
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            assert!(banded.host_ns(backend).unwrap() > 0.0,
+                    "seed={seed} {backend}: host refit missing");
+        }
+        // Envelope transfer to an unseen parallel factor, banded run.
+        let mut l2 = l.clone();
+        l2.parallel = 1 << rng.below(3);
+        let input =
+            SpikeFrame::random(l2.in_h, l2.in_w, l2.ci, 0.3, &mut rng);
+        let w = ConvWeights::random(&l2, 800 + seed);
+        let mut eng = ConvEngine::with_backend(
+            l2.clone(), w, timing, 1, BackendKind::WordParallel)
+            .with_intra_parallel(2);
+        let (_, rep) = eng.run_frame(&input, true);
+        let pred = banded.predict_conv_cycles(&l2, &timing, 1);
+        assert!(rel_err(pred, rep.cycles) < TOL,
+                "seed={seed}: banded cycles pred {pred} sim {}",
+                rep.cycles);
+    }
+}
+
 /// Random small net for frontier properties (power-of-two channels so
 /// factor enumeration has depth).
 fn random_net(rng: &mut Rng) -> NetworkSpec {

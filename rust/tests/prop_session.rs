@@ -189,6 +189,17 @@ fn mini_net() -> NetworkSpec {
         .build()
 }
 
+/// Small depthwise-separable net: covers all three conv modes.
+fn mini_dsc_net() -> NetworkSpec {
+    NetBuilder::new("mini-dsc", (12, 12, 2))
+        .encoder(6, 3)
+        .dwconv(3)
+        .pwconv(8)
+        .pool()
+        .fc(10)
+        .build()
+}
+
 fn random_frames(shape: (usize, usize, usize), n: usize, seed: u64)
                  -> Vec<SpikeFrame> {
     let mut rng = Rng::new(seed);
@@ -236,6 +247,44 @@ fn session_matches_legacy_construction_synthetic() {
                 assert_equivalent(
                     &rep, &want,
                     &format!("{} {backend} T={timesteps}", net.name));
+            }
+        }
+    }
+}
+
+/// Intra-frame row bands stay bit-identical to current-main (serial,
+/// full-repack) semantics through the facade: both backends x all
+/// three conv modes (standard + DSC nets) x band counts {1, 2, 4}.
+#[test]
+fn session_intra_parallel_matches_legacy_construction() {
+    for net in [mini_net(), mini_dsc_net()] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            let frames_shape_seed = 78;
+            let want = {
+                let probe = Session::builder()
+                    .network(net.clone())
+                    .backend(backend)
+                    .build()
+                    .unwrap();
+                let frames = random_frames(probe.input_shape(), 3,
+                                           frames_shape_seed);
+                drop(probe);
+                legacy_run(&net, backend, 1, random_sources(&net),
+                           &frames)
+            };
+            for bands in [1usize, 2, 4] {
+                let mut session = Session::builder()
+                    .network(net.clone())
+                    .backend(backend)
+                    .intra_parallel(bands)
+                    .build()
+                    .unwrap();
+                let frames = random_frames(session.input_shape(), 3,
+                                           frames_shape_seed);
+                let rep = session.infer_batch(&frames);
+                assert_equivalent(
+                    &rep, &want,
+                    &format!("{} {backend} bands={bands}", net.name));
             }
         }
     }

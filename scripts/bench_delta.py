@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Advisory bench delta: compare fresh bench results against the
+committed baseline.
+
+Usage: bench_delta.py BASELINE.json FRESH.json
+
+Both files are the JSON arrays the rust bench harness
+(`util::bench::BenchSet`, via STI_SNN_BENCH_JSON) emits: a list of
+{"title", "results": [{"name", "median_ns", ...}]} sets. Entries are
+matched by result name across all sets; frames/s = 1e9 / median_ns.
+
+Always exits 0 — this is an advisory CI step (machine-to-machine
+deltas are noisy); the table is for eyeballing regressions, the
+committed baseline for tracking the optimisation history.
+"""
+
+import json
+import sys
+
+
+def flatten(path):
+    """name -> median_ns over every set in the file."""
+    with open(path) as f:
+        sets = json.load(f)
+    out = {}
+    for s in sets:
+        for r in s.get("results", []):
+            if r.get("median_ns"):
+                out[r["name"]] = float(r["median_ns"])
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return
+    base_path, fresh_path = sys.argv[1], sys.argv[2]
+    try:
+        base = flatten(base_path)
+        fresh = flatten(fresh_path)
+    except (OSError, ValueError) as e:
+        print(f"bench delta skipped: {e}")
+        return
+
+    common = [n for n in base if n in fresh]
+    print(f"bench delta vs {base_path} "
+          f"({len(common)} comparable, {len(fresh) - len(common)} new, "
+          f"{len(base) - len(common)} missing)\n")
+    print(f"{'bench':<52} {'base fr/s':>12} {'now fr/s':>12} {'delta':>8}")
+    for name in common:
+        b, n = 1e9 / base[name], 1e9 / fresh[name]
+        delta = (n - b) / b * 100.0
+        print(f"{name:<52} {b:>12.1f} {n:>12.1f} {delta:>+7.1f}%")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"{name:<52} {'-':>12} {1e9 / fresh[name]:>12.1f}      new")
+
+
+if __name__ == "__main__":
+    main()
