@@ -1,0 +1,108 @@
+//! Event-streaming benches: ingestion throughput of the windowed
+//! `codec::stream` path, wire codec speed, and the headline
+//! events-vs-dense end-to-end comparison the README's Performance
+//! table quotes.
+//!
+//! ```bash
+//! cargo bench --bench bench_stream
+//! STI_SNN_BENCH_JSON=out.json cargo bench --bench bench_stream
+//! ```
+
+use sti_snn::codec::stream::{decode_events, encode_events, synth_events,
+                             EventStream, WindowPolicy};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::session::Session;
+use sti_snn::sim::BackendKind;
+use sti_snn::util::bench::BenchSet;
+use sti_snn::util::rng::Rng;
+
+const WINDOW_US: u32 = 1000;
+
+fn main() {
+    ingest_and_wire();
+    events_vs_dense();
+}
+
+/// Pure ingestion: sorted events -> word-packed windows, no inference.
+fn ingest_and_wire() {
+    let mut set = BenchSet::new(
+        "event ingestion (sorted address events -> spike-frame windows)");
+    let (h, w, c) = (28, 28, 16); // scnn3 post-encoder shape
+    for rate in [0.05, 0.25] {
+        let events = synth_events(h, w, c, 32, rate, WINDOW_US, 7);
+        let n = events.len();
+        let r = set.run(
+            &format!("window {n} events (rate {rate}, 32 windows)"),
+            || {
+                let mut s = EventStream::new(
+                    h, w, c, WindowPolicy::TimeUs(WINDOW_US)).unwrap();
+                let mut windows = 0u64;
+                for e in &events {
+                    if s.push(*e).unwrap() {
+                        windows += 1;
+                    }
+                }
+                if s.flush().is_some() {
+                    windows += 1;
+                }
+                assert_eq!(windows, 32);
+            },
+        );
+        println!("    -> {:.1} M events/s",
+                 n as f64 / (r.median_ns / 1e9) / 1e6);
+    }
+
+    let events = synth_events(h, w, c, 32, 0.15, WINDOW_US, 9);
+    let bytes = encode_events(&events);
+    set.run(&format!("wire decode {} events", events.len()), || {
+        let decoded = decode_events(&bytes).unwrap();
+        assert_eq!(decoded.len(), events.len());
+    });
+    set.run(&format!("wire encode {} events", events.len()), || {
+        let encoded = encode_events(&events);
+        assert_eq!(encoded.len(), bytes.len());
+    });
+}
+
+/// End to end through the session: the same activity as dense frames
+/// vs as a windowed event stream (README Performance table row).
+fn events_vs_dense() {
+    let mut set = BenchSet::new(
+        "events vs dense end-to-end (scnn3, word-parallel)");
+    let mut session = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .build()
+        .unwrap();
+    let (h, w, c) = session.input_shape();
+    let n_frames = 8usize;
+
+    let mut rng = Rng::new(21);
+    let frames: Vec<SpikeFrame> = (0..n_frames)
+        .map(|_| SpikeFrame::random(h, w, c, 0.15, &mut rng))
+        .collect();
+    // The equivalent event stream: one synthetic window per frame at
+    // the same rate (statistically matched activity).
+    let events = synth_events(h, w, c, n_frames, 0.15, WINDOW_US, 21);
+
+    let r_dense = set
+        .run(&format!("dense infer_batch ({n_frames} frames)"), || {
+            let rep = session.infer_batch(&frames);
+            assert_eq!(rep.predictions.len(), n_frames);
+        })
+        .clone();
+    let r_events = set
+        .run(&format!("events infer_events ({n_frames} windows)"), || {
+            let out = session
+                .infer_events(&events, WindowPolicy::TimeUs(WINDOW_US))
+                .unwrap();
+            assert_eq!(out.windows.len(), n_frames);
+        })
+        .clone();
+
+    let fps = |ns: f64| n_frames as f64 / (ns / 1e9);
+    println!("\n    dense  {:.1} frames/s | events {:.1} windows/s \
+              (ingestion overhead {:+.1}%)",
+             fps(r_dense.median_ns), fps(r_events.median_ns),
+             (r_events.median_ns / r_dense.median_ns - 1.0) * 100.0);
+}

@@ -1,0 +1,92 @@
+//! Event-streaming demo client: the DVS-style host side of the binary
+//! events protocol (paper's event-driven single-timestep workload).
+//!
+//! Start the server first (events mode needs the synthetic simulator
+//! path; --events bounds the queue so overload sheds explicitly):
+//! ```bash
+//! cargo run --release -- serve --model scnn3 --synthetic --events \
+//!     --addr 127.0.0.1:7878
+//! ```
+//! then:
+//! ```bash
+//! cargo run --release --example events_client -- \
+//!     --addr 127.0.0.1:7878 --windows 16 --rate 0.15
+//! ```
+
+use sti_snn::codec::stream::{synth_events, WindowPolicy};
+use sti_snn::server::{Client, EventReply};
+use sti_snn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let addr = args.get_str("addr", "127.0.0.1:7878");
+    let windows = args.get_usize("windows", 16);
+    let rate = args.get_f64("rate", 0.15);
+    let window_us = args.get_u64("window-us", 1000) as u32;
+
+    let mut client = Client::connect(addr)?;
+    let (h, w, c) = client
+        .start_events(WindowPolicy::TimeUs(window_us))?;
+    println!("events mode: server windows into ({h}, {w}, {c})");
+
+    let events = synth_events(h, w, c, windows, rate, window_us, 1);
+    println!("streaming {} events ({windows} windows of {window_us} µs \
+              at rate {rate})",
+             events.len());
+
+    fn show(r: &EventReply) {
+        match r {
+            EventReply::Window { window_id, class, latency_us,
+                                 replica, .. } => {
+                println!("  window {window_id:>4}: class {class} \
+                          ({latency_us} µs, replica {replica})");
+            }
+            EventReply::Shed { window_id } => {
+                println!("  window {window_id:>4}: shed (queue full)");
+            }
+            EventReply::Error { window_id, msg } => {
+                println!("  window {window_id:>4}: error: {msg}");
+            }
+            EventReply::Summary(_) => unreachable!("finish keeps it"),
+        }
+    }
+
+    // Stream window by window, draining replies past a bounded
+    // in-flight depth — the server drops clients that never read
+    // (its reply channel stalls once both TCP buffers fill), so a
+    // load tester must consume as it produces.
+    const MAX_IN_FLIGHT: usize = 8;
+    let t0 = std::time::Instant::now();
+    let mut outstanding = 0usize;
+    let mut sent = 0usize;
+    for wi in 0..windows {
+        let end_t = (wi as u32 + 1).saturating_mul(window_us);
+        let end = events[sent..]
+            .iter()
+            .position(|e| e.t >= end_t)
+            .map_or(events.len(), |p| sent + p);
+        let batch = &events[sent..end];
+        sent = end;
+        if batch.is_empty() {
+            continue; // window had no activity: the server never sees it
+        }
+        client.send_events(batch)?;
+        // All but the newest (still-open) window are complete
+        // server-side, so a reply is guaranteed once the depth is hit.
+        if outstanding == MAX_IN_FLIGHT {
+            show(&client.read_event_reply()?);
+        } else {
+            outstanding += 1;
+        }
+    }
+    let (replies, summary) = client.finish_events()?;
+    let dt = t0.elapsed().as_secs_f64();
+    for r in &replies {
+        show(r);
+    }
+    println!("{} events -> {} windows: {} served, {} shed, {:.1} \
+              windows/s end-to-end",
+             summary.events, summary.windows, summary.served,
+             summary.shed, summary.windows as f64 / dt.max(1e-9));
+    Ok(())
+}

@@ -158,6 +158,21 @@ impl NetworkSpec {
             .sum()
     }
 
+    /// `(H, W, C)` of the frames the accelerator ingests: the input
+    /// shape of the first non-encoder layer (i.e. post-encoder), or
+    /// the network input when nothing is accelerated. The single home
+    /// of this walk — the pipeline, the session, and the CLI event
+    /// generator all derive their frame shapes from it.
+    pub fn accel_input_shape(&self) -> (usize, usize, usize) {
+        for l in &self.layers {
+            match l {
+                Layer::Conv(c) if c.encoder => continue,
+                other => return other.in_shape(),
+            }
+        }
+        self.input
+    }
+
     /// Conv layers that run on the accelerator (encoder excluded),
     /// in order — the unit of per-layer parallel-factor assignment.
     pub fn accel_convs(&self) -> Vec<&ConvLayer> {

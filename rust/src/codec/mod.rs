@@ -10,10 +10,18 @@
 //! the raw channel vector — and only non-empty pixels are transmitted.
 //! `EventCodec` implements that encoding, its decoder, and the
 //! bits-on-the-wire accounting used by the interconnect energy model.
+//!
+//! The [`stream`] submodule extends the same representation to the
+//! *ingestion* boundary: sorted DVS-style address events are
+//! accumulated straight into word-packed [`SpikeFrame`] windows
+//! ([`stream::EventStream`]) — the event-driven serving path that
+//! never materialises a dense `f32` image.
 
 pub mod frame;
+pub mod stream;
 
 pub use frame::SpikeFrame;
+pub use stream::{DvsEvent, EventStream, WindowPolicy};
 
 /// Bit-packed spike vector: one pixel, `C` channels, channel-sorted.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]

@@ -1,0 +1,572 @@
+//! Streaming event-driven ingestion: sorted address events in,
+//! single-timestep [`SpikeFrame`] windows out.
+//!
+//! The paper's headline claim is *event-driven, single-timestep*
+//! inference over the compressed & sorted spike representation
+//! (SectionIV-C / SectionIV-E.1) — yet a dense-image serving path has to
+//! rate-encode host-side and reconstruct exactly the representation
+//! the sensor already produced. This module is the native path: a
+//! DVS-style address-event stream `(x, y, c, t)` is accumulated
+//! straight into the word-packed [`SpikeFrame`] (single-bit word-level
+//! ORs and [`SpikeFrame::set_vector`] for whole-pixel vectors — no
+//! dense `f32` decode, no rate encoding) and windowed into
+//! single-timestep frames by event count or time horizon.
+//!
+//! [`EventStream`] is double-buffered and **zero-allocation in steady
+//! state**: the accumulating frame and the completed window are two
+//! preallocated [`SpikeFrame`]s that swap roles at each window
+//! boundary, so a million-event stream touches the allocator exactly
+//! twice (at construction).
+//!
+//! # Event wire/file format
+//!
+//! One event is a fixed 12-byte little-endian record — the unit of the
+//! server's `mode: "events"` binary protocol (`server` module docs)
+//! and of the `.aer` files `gen-events` writes and `run --events`
+//! reads:
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  x            u16 LE, column in [0, W)
+//!      2     2  y            u16 LE, row in [0, H)
+//!      4     2  c            u16 LE, channel in [0, C)
+//!      6     2  reserved     u16 LE, must be 0 (polarity/flags later)
+//!      8     4  t            u32 LE, timestamp in microseconds
+//! ```
+//!
+//! Records must be sorted by non-decreasing `t` — the same "sorted"
+//! property the PE weight-fetch sequencer relies on for channels
+//! applies to the stream in time.
+//!
+//! ```
+//! use sti_snn::codec::stream::{DvsEvent, EventStream, WindowPolicy};
+//!
+//! let mut s = EventStream::new(4, 4, 2, WindowPolicy::Count(3)).unwrap();
+//! for (i, (x, y, c)) in [(0, 0, 0), (1, 2, 1), (3, 3, 0)].iter()
+//!     .enumerate()
+//! {
+//!     let done = s
+//!         .push(DvsEvent { x: *x, y: *y, c: *c, t: i as u32 })
+//!         .unwrap();
+//!     if done {
+//!         // Third event completes the window: 3 spikes, bit-packed.
+//!         assert_eq!(s.window().count(), 3);
+//!         assert!(s.window().get(2, 1, 1));
+//!     }
+//! }
+//! assert_eq!(s.stats().windows, 1);
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::{SpikeFrame, SpikeVector};
+use crate::util::rng::Rng;
+
+/// One DVS-style address event: a single spike at `(y, x, c)` at time
+/// `t` (microseconds). See the module docs for the 12-byte wire record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DvsEvent {
+    /// Column, `[0, W)`.
+    pub x: u16,
+    /// Row, `[0, H)`.
+    pub y: u16,
+    /// Channel (polarity for 2-channel DVS input), `[0, C)`.
+    pub c: u16,
+    /// Timestamp in microseconds; streams require non-decreasing `t`.
+    pub t: u32,
+}
+
+impl DvsEvent {
+    /// Size of one little-endian wire record (module docs).
+    pub const WIRE_BYTES: usize = 12;
+
+    /// Append this event's 12-byte wire record to `out`.
+    pub fn write_wire(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.x.to_le_bytes());
+        out.extend_from_slice(&self.y.to_le_bytes());
+        out.extend_from_slice(&self.c.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.t.to_le_bytes());
+    }
+
+    /// Parse one wire record (caller supplies exactly
+    /// [`DvsEvent::WIRE_BYTES`] bytes).
+    pub fn from_wire(b: &[u8]) -> Result<DvsEvent> {
+        if b.len() != Self::WIRE_BYTES {
+            bail!("event record is {} bytes, expected {}", b.len(),
+                  Self::WIRE_BYTES);
+        }
+        let u16_at = |i: usize| u16::from_le_bytes([b[i], b[i + 1]]);
+        if u16_at(6) != 0 {
+            bail!("event record reserved field is non-zero");
+        }
+        Ok(DvsEvent {
+            x: u16_at(0),
+            y: u16_at(2),
+            c: u16_at(4),
+            t: u32::from_le_bytes([b[8], b[9], b[10], b[11]]),
+        })
+    }
+}
+
+/// Encode a sorted event slice into its concatenated wire records
+/// (the payload format of one binary event batch / an `.aer` file).
+pub fn encode_events(events: &[DvsEvent]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(events.len() * DvsEvent::WIRE_BYTES);
+    for e in events {
+        e.write_wire(&mut out);
+    }
+    out
+}
+
+/// Decode concatenated wire records (must be a whole number of
+/// 12-byte events).
+pub fn decode_events(bytes: &[u8]) -> Result<Vec<DvsEvent>> {
+    if bytes.len() % DvsEvent::WIRE_BYTES != 0 {
+        bail!("event payload of {} bytes is not a multiple of {}",
+              bytes.len(), DvsEvent::WIRE_BYTES);
+    }
+    bytes
+        .chunks_exact(DvsEvent::WIRE_BYTES)
+        .map(DvsEvent::from_wire)
+        .collect()
+}
+
+/// When a window of events closes and becomes one single-timestep
+/// frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowPolicy {
+    /// Close once the window holds at least `n` events (n > 0).
+    /// Single-event pushes close at exactly `n`; a multi-channel
+    /// [`EventStream::push_vector`] counts all its active channels at
+    /// once and can overshoot. Duplicate events (same pixel +
+    /// channel) still count toward `n`.
+    Count(usize),
+    /// Time horizon: a window opens at its first event's timestamp
+    /// `t0` and covers `[t0, t0 + horizon_us)`; the first event at or
+    /// past the horizon closes it and opens the next window. Windows
+    /// with no events are never emitted — a gap longer than the
+    /// horizon simply delays the next window's start.
+    TimeUs(u32),
+}
+
+impl WindowPolicy {
+    /// Parse the CLI/wire syntax: `count:N` or `us:N`.
+    pub fn parse(s: &str) -> Option<WindowPolicy> {
+        let (kind, n) = s.split_once(':')?;
+        match kind {
+            "count" => n.parse().ok().filter(|&n| n > 0)
+                .map(WindowPolicy::Count),
+            "us" => n.parse().ok().filter(|&n| n > 0)
+                .map(WindowPolicy::TimeUs),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WindowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowPolicy::Count(n) => write!(f, "count:{n}"),
+            WindowPolicy::TimeUs(us) => write!(f, "us:{us}"),
+        }
+    }
+}
+
+/// Ingestion counters of one [`EventStream`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Events accepted (single events; a pushed vector counts its
+    /// active channels).
+    pub events: u64,
+    /// Windows completed (including any final partial window flushed).
+    pub windows: u64,
+}
+
+/// Accumulates sorted address events into word-packed single-timestep
+/// [`SpikeFrame`] windows — the module-level docs describe the policy
+/// semantics and the zero-allocation double-buffering.
+#[derive(Debug, Clone)]
+pub struct EventStream {
+    h: usize,
+    w: usize,
+    c: usize,
+    policy: WindowPolicy,
+    /// The window currently accumulating.
+    frame: SpikeFrame,
+    /// The last completed window ([`EventStream::window`]).
+    ready: SpikeFrame,
+    /// Events in the accumulating window (0 = window not yet open).
+    in_window: usize,
+    /// First event timestamp of the accumulating window.
+    window_start: u32,
+    /// Last accepted timestamp (sortedness check).
+    last_t: u32,
+    stats: StreamStats,
+}
+
+impl EventStream {
+    /// A stream producing `(h, w, c)` frames under `policy`.
+    pub fn new(h: usize, w: usize, c: usize, policy: WindowPolicy)
+               -> Result<Self> {
+        if h == 0 || w == 0 || c == 0 {
+            bail!("event stream shape ({h}, {w}, {c}) has a zero \
+                   dimension");
+        }
+        match policy {
+            WindowPolicy::Count(0) => bail!("count window must be > 0"),
+            WindowPolicy::TimeUs(0) => bail!("time window must be > 0"),
+            _ => {}
+        }
+        Ok(Self {
+            h,
+            w,
+            c,
+            policy,
+            frame: SpikeFrame::zeros(h, w, c),
+            ready: SpikeFrame::zeros(h, w, c),
+            in_window: 0,
+            window_start: 0,
+            last_t: 0,
+            stats: StreamStats::default(),
+        })
+    }
+
+    /// Frame shape `(h, w, c)` this stream produces.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    pub fn policy(&self) -> WindowPolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// Events in the currently-open (not yet emitted) window.
+    pub fn pending_events(&self) -> usize {
+        self.in_window
+    }
+
+    /// Validate coordinates + timestamp order, close a time window the
+    /// event falls past, and account the window bookkeeping. Returns
+    /// true when the *previous* window was closed (time policy).
+    fn admit(&mut self, x: u16, y: u16, t: u32) -> Result<bool> {
+        // Channel range is checked by the callers (it differs between
+        // single events and whole vectors).
+        if (y as usize) >= self.h || (x as usize) >= self.w {
+            bail!("event ({x}, {y}) outside frame {}x{}", self.w, self.h);
+        }
+        if t < self.last_t {
+            bail!("unsorted event stream: t {t} after {}", self.last_t);
+        }
+        self.last_t = t;
+        let mut closed = false;
+        if let WindowPolicy::TimeUs(horizon) = self.policy {
+            if self.in_window > 0
+                && t as u64 >= self.window_start as u64 + horizon as u64
+            {
+                self.emit();
+                closed = true;
+            }
+        }
+        if self.in_window == 0 {
+            self.window_start = t;
+        }
+        Ok(closed)
+    }
+
+    /// Swap the accumulating frame into the ready slot and reset.
+    fn emit(&mut self) {
+        std::mem::swap(&mut self.frame, &mut self.ready);
+        self.frame.clear();
+        self.in_window = 0;
+        self.stats.windows += 1;
+    }
+
+    /// Push one event. `Ok(true)` means a window just completed — read
+    /// it with [`EventStream::window`] before the next push overwrites
+    /// it (under [`WindowPolicy::TimeUs`] the completed window does
+    /// NOT contain this event; it opened the next one).
+    pub fn push(&mut self, ev: DvsEvent) -> Result<bool> {
+        if ev.c as usize >= self.c {
+            bail!("event channel {} outside C={}", ev.c, self.c);
+        }
+        let closed = self.admit(ev.x, ev.y, ev.t)?;
+        self.frame.set(ev.y as usize, ev.x as usize, ev.c as usize);
+        self.in_window += 1;
+        self.stats.events += 1;
+        Ok(closed || self.count_done())
+    }
+
+    /// Push one whole-pixel spike vector (the inter-layer event
+    /// encoding of SectionIV-E.1: coordinates + channel vector) through
+    /// the word-level [`SpikeFrame::set_vector`] path. Counts its
+    /// active channels as events; an empty vector is rejected.
+    pub fn push_vector(&mut self, x: u16, y: u16, v: &SpikeVector, t: u32)
+                       -> Result<bool> {
+        if v.channels != self.c {
+            bail!("vector of {} channels pushed into C={}", v.channels,
+                  self.c);
+        }
+        let spikes = v.popcount();
+        if spikes == 0 {
+            bail!("empty spike vector at ({x}, {y})");
+        }
+        let closed = self.admit(x, y, t)?;
+        self.frame.set_vector(y as usize, x as usize, v);
+        self.in_window += spikes;
+        self.stats.events += spikes as u64;
+        Ok(closed || self.count_done())
+    }
+
+    fn count_done(&mut self) -> bool {
+        if let WindowPolicy::Count(n) = self.policy {
+            if self.in_window >= n {
+                self.emit();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The last completed window. Valid after a `push` returned true
+    /// or a [`EventStream::flush`] returned `Some`; overwritten when
+    /// the next window completes.
+    pub fn window(&self) -> &SpikeFrame {
+        &self.ready
+    }
+
+    /// Close the open partial window, if any (end of stream).
+    pub fn flush(&mut self) -> Option<&SpikeFrame> {
+        if self.in_window == 0 {
+            return None;
+        }
+        self.emit();
+        Some(&self.ready)
+    }
+}
+
+/// Decompose a dense frame into its sorted single-spike events, all
+/// stamped `t` (raster-scan pixel order, channel-sorted within each
+/// pixel — the stream-side mirror of [`super::EventCodec::encode`]).
+pub fn frame_events(frame: &SpikeFrame, t: u32) -> Vec<DvsEvent> {
+    let mut out = Vec::with_capacity(frame.count());
+    for y in 0..frame.h {
+        for x in 0..frame.w {
+            for ch in 0..frame.c {
+                if frame.get(y, x, ch) {
+                    out.push(DvsEvent {
+                        x: x as u16,
+                        y: y as u16,
+                        c: ch as u16,
+                        t,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Synthetic DVS-like workload generator (load testing / benches):
+/// `windows` windows of Bernoulli(`rate`) activity over an `(h, w, c)`
+/// sensor, each spanning `window_us` microseconds, timestamps jittered
+/// uniformly inside the window and sorted. The first event of every
+/// window is pinned to the window's base timestamp, so streaming with
+/// `WindowPolicy::TimeUs(window_us)` reproduces the generator's
+/// windows exactly — the property the events==dense tests and the
+/// serving benches rely on.
+pub fn synth_events(h: usize, w: usize, c: usize, windows: usize,
+                    rate: f64, window_us: u32, seed: u64)
+                    -> Vec<DvsEvent> {
+    assert!(window_us > 0, "window_us must be > 0");
+    // Timestamps are u32 µs on the wire: the whole stream must fit.
+    assert!(windows as u64 * window_us as u64 <= u32::MAX as u64,
+            "windows ({windows}) x window_us ({window_us}) overflows \
+             the u32 µs timestamp space");
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for wi in 0..windows {
+        let base = wi as u32 * window_us;
+        let start = out.len();
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    if rng.bernoulli(rate) {
+                        let jitter =
+                            rng.below(window_us as usize) as u32;
+                        out.push(DvsEvent {
+                            x: x as u16,
+                            y: y as u16,
+                            c: ch as u16,
+                            t: base + jitter,
+                        });
+                    }
+                }
+            }
+        }
+        let win = &mut out[start..];
+        win.sort_by_key(|e| e.t);
+        if let Some(first) = win.first_mut() {
+            first.t = base;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(x: u16, y: u16, c: u16, t: u32) -> DvsEvent {
+        DvsEvent { x, y, c, t }
+    }
+
+    #[test]
+    fn count_windows_close_exactly() {
+        let mut s = EventStream::new(4, 4, 3, WindowPolicy::Count(2))
+            .unwrap();
+        assert!(!s.push(ev(0, 0, 0, 5)).unwrap());
+        assert!(s.push(ev(1, 1, 2, 5)).unwrap());
+        let w = s.window();
+        assert_eq!(w.count(), 2);
+        assert!(w.get(0, 0, 0) && w.get(1, 1, 2));
+        // Next window starts clean.
+        assert!(!s.push(ev(2, 2, 1, 6)).unwrap());
+        assert_eq!(s.pending_events(), 1);
+        let f = s.flush().unwrap();
+        assert_eq!(f.count(), 1);
+        assert!(f.get(2, 2, 1));
+        assert_eq!(s.stats(), StreamStats { events: 3, windows: 2 });
+        assert!(s.flush().is_none());
+    }
+
+    #[test]
+    fn time_windows_split_on_horizon() {
+        let mut s = EventStream::new(4, 4, 1, WindowPolicy::TimeUs(100))
+            .unwrap();
+        assert!(!s.push(ev(0, 0, 0, 1000)).unwrap());
+        assert!(!s.push(ev(1, 0, 0, 1099)).unwrap()); // inside [1000,1100)
+        // 1100 is past the horizon: closes window 1, opens window 2.
+        assert!(s.push(ev(2, 0, 0, 1100)).unwrap());
+        assert_eq!(s.window().count(), 2);
+        assert!(!s.window().get(0, 2, 0), "closing event not in window");
+        // A long gap delays the next window rather than emitting empties.
+        assert!(s.push(ev(3, 0, 0, 9999)).unwrap());
+        assert_eq!(s.window().count(), 1);
+        assert!(s.window().get(0, 2, 0));
+        assert_eq!(s.flush().unwrap().count(), 1);
+        assert_eq!(s.stats().windows, 3);
+    }
+
+    #[test]
+    fn rejects_unsorted_and_out_of_range() {
+        let mut s = EventStream::new(4, 6, 2, WindowPolicy::Count(10))
+            .unwrap();
+        s.push(ev(0, 0, 0, 100)).unwrap();
+        assert!(s.push(ev(0, 0, 0, 99)).is_err(), "unsorted t");
+        assert!(s.push(ev(6, 0, 0, 100)).is_err(), "x out of range");
+        assert!(s.push(ev(0, 4, 0, 100)).is_err(), "y out of range");
+        assert!(s.push(ev(0, 0, 2, 100)).is_err(), "c out of range");
+        // Equal timestamps are fine (sorted = non-decreasing).
+        assert!(s.push(ev(1, 1, 1, 100)).is_ok());
+    }
+
+    #[test]
+    fn zero_shapes_and_policies_rejected() {
+        assert!(EventStream::new(0, 4, 1, WindowPolicy::Count(1)).is_err());
+        assert!(EventStream::new(4, 4, 1, WindowPolicy::Count(0)).is_err());
+        assert!(EventStream::new(4, 4, 1, WindowPolicy::TimeUs(0)).is_err());
+    }
+
+    #[test]
+    fn vector_push_uses_whole_pixel() {
+        let mut s = EventStream::new(2, 2, 70, WindowPolicy::Count(3))
+            .unwrap();
+        let mut v = SpikeVector::zeros(70);
+        v.set(0);
+        v.set(69);
+        assert!(!s.push_vector(1, 0, &v, 10).unwrap());
+        assert_eq!(s.pending_events(), 2);
+        assert!(s.push(ev(0, 0, 5, 11)).unwrap());
+        let w = s.window();
+        assert!(w.get(0, 1, 0) && w.get(0, 1, 69) && w.get(0, 0, 5));
+        // Mismatched width and empty vectors are protocol errors.
+        assert!(s.push_vector(0, 0, &SpikeVector::zeros(8), 12).is_err());
+        assert!(s.push_vector(0, 0, &SpikeVector::zeros(70), 12).is_err());
+    }
+
+    #[test]
+    fn frame_events_roundtrip_through_stream() {
+        let mut rng = Rng::new(33);
+        let f = SpikeFrame::random(9, 7, 20, 0.15, &mut rng);
+        let events = frame_events(&f, 42);
+        assert_eq!(events.len(), f.count());
+        let mut s =
+            EventStream::new(9, 7, 20, WindowPolicy::Count(events.len()))
+                .unwrap();
+        let mut done = false;
+        for e in &events {
+            done = s.push(*e).unwrap();
+        }
+        assert!(done);
+        assert_eq!(*s.window(), f);
+    }
+
+    #[test]
+    fn synth_time_streaming_reproduces_generator_windows() {
+        let (h, w, c, n, us) = (8, 8, 2, 5, 1000u32);
+        let events = synth_events(h, w, c, n, 0.2, us, 7);
+        assert!(!events.is_empty());
+        // Sorted overall (windows are consecutive time ranges).
+        assert!(events.windows(2).all(|p| p[0].t <= p[1].t));
+        let mut s =
+            EventStream::new(h, w, c, WindowPolicy::TimeUs(us)).unwrap();
+        let mut windows = 0;
+        let mut spikes = 0;
+        for e in &events {
+            if s.push(*e).unwrap() {
+                windows += 1;
+                spikes += s.window().count();
+            }
+        }
+        if let Some(f) = s.flush() {
+            windows += 1;
+            spikes += f.count();
+        }
+        assert_eq!(windows, n, "one stream window per generator window");
+        // Spikes <= events (duplicates OR into the same bit).
+        assert!(spikes as u64 <= s.stats().events);
+        assert_eq!(s.stats().events, events.len() as u64);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let events = synth_events(16, 16, 2, 2, 0.1, 500, 3);
+        let bytes = encode_events(&events);
+        assert_eq!(bytes.len(), events.len() * DvsEvent::WIRE_BYTES);
+        assert_eq!(decode_events(&bytes).unwrap(), events);
+        // Truncated payloads and reserved-field garbage are rejected.
+        assert!(decode_events(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[6] = 1;
+        assert!(decode_events(&bad).is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(WindowPolicy::parse("count:64"),
+                   Some(WindowPolicy::Count(64)));
+        assert_eq!(WindowPolicy::parse("us:1000"),
+                   Some(WindowPolicy::TimeUs(1000)));
+        assert_eq!(WindowPolicy::parse("count:0"), None);
+        assert_eq!(WindowPolicy::parse("ms:5"), None);
+        assert_eq!(WindowPolicy::parse("count"), None);
+        for p in [WindowPolicy::Count(8), WindowPolicy::TimeUs(250)] {
+            assert_eq!(WindowPolicy::parse(&p.to_string()), Some(p));
+        }
+    }
+}

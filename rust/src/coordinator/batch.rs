@@ -24,28 +24,54 @@ pub struct Request {
     pub enqueued_at: Instant,
 }
 
-/// Thread-safe batching queue with a max-batch / max-wait policy.
+/// Thread-safe batching queue with a max-batch / max-wait policy and
+/// an optional depth bound (the serving backpressure primitive:
+/// [`Batcher::try_push`] refuses work past `capacity` so callers can
+/// shed explicitly instead of queueing unboundedly).
 pub struct Batcher<T> {
     inner: Mutex<VecDeque<T>>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Depth bound enforced by [`Batcher::try_push`] (0 = unbounded).
+    pub capacity: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self::with_capacity(max_batch, max_wait, 0)
+    }
+
+    /// A queue that [`Batcher::try_push`] bounds at `capacity` items
+    /// (0 = unbounded; [`Batcher::push`] always accepts either way).
+    pub fn with_capacity(max_batch: usize, max_wait: Duration,
+                         capacity: usize) -> Self {
         assert!(max_batch > 0);
         Self {
             inner: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             max_batch,
             max_wait,
+            capacity,
         }
     }
 
     pub fn push(&self, item: T) {
         self.inner.lock().unwrap().push_back(item);
         self.cv.notify_one();
+    }
+
+    /// Push unless the queue already holds `capacity` items; the item
+    /// comes back in `Err` so the caller can shed it explicitly.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if self.capacity > 0 && q.len() >= self.capacity {
+            return Err(item);
+        }
+        q.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -149,6 +175,27 @@ mod tests {
         assert_eq!(b.try_batch(), vec![0, 1]);
         assert_eq!(b.drain_all(), vec![2, 3, 4]);
         assert!(b.is_empty());
+    }
+
+    /// Bounded queues refuse (and hand back) work past capacity; a
+    /// drain frees slots again.
+    #[test]
+    fn try_push_sheds_past_capacity() {
+        let b: Batcher<u32> =
+            Batcher::with_capacity(4, Duration::from_millis(1), 2);
+        assert!(b.try_push(1).is_ok());
+        assert!(b.try_push(2).is_ok());
+        assert_eq!(b.try_push(3), Err(3), "full queue returns the item");
+        // push() stays unbounded for callers without a shed path.
+        b.push(4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.try_batch(), vec![1, 2, 4]);
+        assert!(b.try_push(5).is_ok());
+        // capacity 0 = unbounded try_push.
+        let u: Batcher<u32> = Batcher::new(4, Duration::from_millis(1));
+        for i in 0..100 {
+            assert!(u.try_push(i).is_ok());
+        }
     }
 
     /// Two consumers on one queue see disjoint items covering the whole

@@ -11,7 +11,7 @@
 //! the pipeline overlap in the cycle accounting, which the integration
 //! tests cross-check against `dataflow::pipeline_latency`.
 
-use crate::arch::{Layer, NetworkSpec};
+use crate::arch::NetworkSpec;
 use crate::codec::{EventCodec, SpikeFrame};
 use crate::dataflow::ConvLatencyParams;
 use crate::sim::backend::BackendKind;
@@ -253,19 +253,10 @@ impl Pipeline {
         }
     }
 
-    /// Shape of the frames this pipeline expects (post-encoder).
+    /// Shape of the frames this pipeline expects (post-encoder;
+    /// delegates to [`NetworkSpec::accel_input_shape`]).
     pub fn input_shape(&self) -> (usize, usize, usize) {
-        for l in &self.net.layers {
-            match l {
-                Layer::Conv(c) if c.encoder => {
-                    // Post-encoder shape, possibly after a pool that
-                    // follows the encoder — find the first accel layer.
-                    continue;
-                }
-                other => return other.in_shape(),
-            }
-        }
-        self.net.input
+        self.net.accel_input_shape()
     }
 }
 

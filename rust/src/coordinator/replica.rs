@@ -62,8 +62,18 @@ impl ReplicaPool {
     /// latency — workers re-check the stop flag on every timeout).
     pub fn new(pipelines: Vec<Pipeline>, max_batch: usize,
                max_wait: Duration) -> Self {
+        Self::with_capacity(pipelines, max_batch, max_wait, 0)
+    }
+
+    /// Like [`ReplicaPool::new`], with the shared queue bounded at
+    /// `capacity` items (0 = unbounded). A bounded pool lets
+    /// [`ReplicaPool::try_submit`] shed work explicitly instead of
+    /// queueing without limit — the event-streaming backpressure path.
+    pub fn with_capacity(pipelines: Vec<Pipeline>, max_batch: usize,
+                         max_wait: Duration, capacity: usize) -> Self {
         assert!(!pipelines.is_empty(), "pool needs at least one replica");
-        let queue = Arc::new(Batcher::new(max_batch, max_wait));
+        let queue =
+            Arc::new(Batcher::with_capacity(max_batch, max_wait, capacity));
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(PoolMetrics::new(pipelines.len()));
         let workers = pipelines
@@ -122,6 +132,24 @@ impl ReplicaPool {
             reply: tx,
         });
         rx
+    }
+
+    /// Enqueue a frame unless the bounded queue is full, in which case
+    /// the frame comes back in `Err` for the caller to shed or retry
+    /// (always accepts on pools built with capacity 0).
+    pub fn try_submit(&self, frame: SpikeFrame)
+                      -> Result<Receiver<PoolResult>, SpikeFrame> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        match self.queue.try_push(PoolJob {
+            id,
+            frame,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }) {
+            Ok(()) => Ok(rx),
+            Err(job) => Err(job.frame),
+        }
     }
 
     /// Blocking convenience: submit one frame and wait for its result.
@@ -271,6 +299,34 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().is_ok(), "queued job dropped at shutdown");
         }
+    }
+
+    /// A bounded pool sheds (returns) frames past capacity instead of
+    /// queueing them; submitted work still completes normally.
+    #[test]
+    fn bounded_pool_sheds_past_capacity() {
+        let pool = ReplicaPool::with_capacity(pipes(1), 1,
+                                              Duration::from_millis(1), 2);
+        let fs = frames(8, 9);
+        let mut rxs = Vec::new();
+        let mut shed = 0;
+        for f in fs {
+            match pool.try_submit(f) {
+                Ok(rx) => rxs.push(rx),
+                Err(back) => {
+                    assert_eq!((back.h, back.w, back.c), (10, 10, 4));
+                    shed += 1;
+                }
+            }
+        }
+        // Depth 2 + whatever the worker drained: at least one of the 8
+        // burst frames must have been shed, and none may hang.
+        assert!(shed >= 1, "burst past a depth-2 queue must shed");
+        for rx in rxs {
+            assert!(rx.recv().unwrap().prediction.is_some());
+        }
+        assert_eq!(pool.metrics().totals().requests, (8 - shed) as u64);
+        pool.shutdown();
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //! * [`session`] — the `Session` facade: one builder for sim, serving,
 //!   DSE auto-tuning, benches, and examples; unified `Report`.
 //! * [`arch`] — network/layer hardware description shared with python.
-//! * [`codec`] — compressed & sorted spike vectors + event encoding.
+//! * [`codec`] — compressed & sorted spike vectors + event encoding;
+//!   [`codec::stream`] windows sorted DVS-style address events into
+//!   single-timestep frames (the event-driven ingestion path).
 //! * [`dataflow`] — analytical access-count (Tables I/III) and latency
 //!   (Eq. 10-12) models.
 //! * [`sim`] — cycle-level simulator of the accelerator (PE array, line
@@ -34,9 +36,12 @@
 //! * [`model`] — artifact loading (net.json + int8 weights) into
 //!   `LayerWeights` engine sources.
 //! * [`server`] — TCP host interface (paper Fig. 10), single-pipeline
-//!   or replica-pool mode; `Session::serve` fronts it.
+//!   or replica-pool mode; dense newline-JSON plus the length-prefixed
+//!   binary events protocol with explicit backpressure;
+//!   `Session::serve` fronts it.
 //! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting plus
-//!   per-replica serving counters.
+//!   per-replica serving counters and the latency reservoir behind
+//!   the served p50/p95/p99 numbers.
 
 pub mod arch;
 pub mod codec;

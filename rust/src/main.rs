@@ -15,13 +15,21 @@
 //!   fig12    — SCNN5 delay/power/LUT/FF before/after parallelism
 //!   optimize — parallel-factor scheduler for a PE budget
 //!   explore  — design-space exploration (Pareto frontier + report)
-//!   run      — run frames through a model's pipeline (sim)
+//!   run      — run frames through a model's pipeline (sim); with
+//!              --events, stream a DVS-style event file (or synth)
+//!              through the windowed ingestion path
 //!   serve    — TCP inference server (artifacts required; --synthetic
-//!              and --auto-tune need none)
+//!              and --auto-tune need none); --events bounds the queue
+//!              for event-streaming backpressure
+//!   gen-events — write a synthetic DVS-like .aer event file for load
+//!              testing the events paths
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use anyhow::Context as _;
 
 use sti_snn::arch;
+use sti_snn::codec::stream::{self, DvsEvent, WindowPolicy};
 use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::scheduler;
 use sti_snn::dataflow::{self, ConvLatencyParams};
@@ -53,6 +61,7 @@ fn usage() {
          \x20          frontier, write a JSON report\n\
          \x20 run      run frames through a model's pipeline (sim)\n\
          \x20 serve    TCP inference server\n\
+         \x20 gen-events  write a synthetic DVS-like event file\n\
          \x20 help     this text\n\
          \n\
          session flags (the one construction surface — every flag maps\n\
@@ -88,6 +97,40 @@ fn usage() {
          \x20 --frames N           run/table4/figs   frames per run\n\
          \x20 --rate R             run/table4/figs   synthetic input\n\
          \x20                                        firing rate\n\
+         \n\
+         event-streaming flags (the paper's native workload shape —\n\
+         sorted (x, y, c, t) address events windowed into\n\
+         single-timestep frames; 12-byte LE records, see\n\
+         docs/ARCHITECTURE.md):\n\
+         \x20 --events PATH|synth  run               stream an .aer\n\
+         \x20                                        event file (or a\n\
+         \x20                                        synthetic stream)\n\
+         \x20                                        through the\n\
+         \x20                                        windowed ingestion\n\
+         \x20                                        path\n\
+         \x20 --events             serve             announce events\n\
+         \x20                                        mode and bound the\n\
+         \x20                                        queue (--queue-cap,\n\
+         \x20                                        default 64) so\n\
+         \x20                                        overload sheds\n\
+         \x20                                        explicitly; needs\n\
+         \x20                                        --synthetic or\n\
+         \x20                                        --auto-tune (the\n\
+         \x20                                        artifact backend\n\
+         \x20                                        is dense-only)\n\
+         \x20 --window P           run               window policy:\n\
+         \x20                                        count:N or us:N\n\
+         \x20                                        (default us:1000;\n\
+         \x20                                        serve clients pick\n\
+         \x20                                        theirs per\n\
+         \x20                                        connection)\n\
+         \x20 --windows N          run/gen-events    synthetic windows\n\
+         \x20 --queue-cap N        serve             queue depth bound\n\
+         \x20                                        (0 = unbounded)\n\
+         \n\
+         gen-events flags:\n\
+         \x20 --out PATH           output file (default events.aer)\n\
+         \x20 --model M --windows N --rate R --window-us US --seed S\n\
          \n\
          explore flags:\n\
          \x20 --pe-budget N        total PE budget across replicas\n\
@@ -126,18 +169,20 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
                        "max-replicas", "no-calibrate", "report",
                        "intra-parallel"],
         "run" => &["model", "timesteps", "frames", "rate", "backend",
-                   "intra-parallel"],
+                   "intra-parallel", "events", "window", "windows"],
         "serve" => &["model", "timesteps", "rate", "backend", "addr",
                      "replicas", "synthetic", "auto-tune", "pe-budget",
                      "max-replicas", "max-batch", "max-wait-ms",
-                     "intra-parallel"],
+                     "intra-parallel", "events", "queue-cap"],
+        "gen-events" => &["model", "out", "windows", "rate", "window-us",
+                          "seed"],
         _ => COMMON,
     }
 }
 
 const SUBCOMMANDS: &[&str] = &["table1", "table3", "table4", "table5",
                                "fig11", "fig12", "optimize", "explore",
-                               "run", "serve"];
+                               "run", "serve", "gen-events"];
 
 fn main() {
     let args = Args::from_env();
@@ -175,6 +220,7 @@ fn main() {
         "explore" => explore(&args),
         "run" => run(&args),
         "serve" => serve(&args),
+        "gen-events" => gen_events(&args),
         _ => unreachable!("subcommand validated above"),
     };
     if let Err(e) = result {
@@ -523,6 +569,62 @@ fn explore(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Wire timestamps are u32 µs: reject --windows x --window-us combos
+/// that would wrap (and so emit an unsorted, unreplayable stream).
+fn check_timestamp_space(windows: usize, window_us: u32)
+                         -> anyhow::Result<()> {
+    anyhow::ensure!(
+        windows as u64 * window_us as u64 <= u32::MAX as u64,
+        "--windows {windows} x --window-us {window_us} exceeds the u32 \
+         microsecond timestamp space ({} µs)", u32::MAX);
+    Ok(())
+}
+
+/// Window policy from `--window` (default one window per 1000 µs).
+fn window_for(args: &Args) -> anyhow::Result<WindowPolicy> {
+    let s = args.get_str("window", "us:1000");
+    WindowPolicy::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("bad --window {s:?} (count:N or us:N)")
+    })
+}
+
+/// `run --events PATH|synth`: stream sorted address events through the
+/// windowed ingestion path and classify window by window.
+fn run_events(args: &Args, session: &mut Session, src: &str)
+              -> anyhow::Result<()> {
+    let (h, w, c) = session.input_shape();
+    let window = window_for(args)?;
+    let events: Vec<DvsEvent> = if src == "synth" {
+        let windows = args.get_usize("windows", 4);
+        let rate = args.get_f64("rate", 0.15);
+        let us = match window {
+            WindowPolicy::TimeUs(us) => us,
+            WindowPolicy::Count(_) => 1000,
+        };
+        check_timestamp_space(windows, us)?;
+        stream::synth_events(h, w, c, windows, rate, us, 17)
+    } else {
+        let bytes = std::fs::read(src)
+            .with_context(|| format!("read event file {src}"))?;
+        stream::decode_events(&bytes)?
+    };
+    println!("streaming {} events into ({h}, {w}, {c}) windows \
+              ({window}, backend={})",
+             events.len(), session.backend());
+    let t0 = Instant::now();
+    let out = session.infer_events(&events, window)?;
+    let host_s = t0.elapsed().as_secs_f64().max(1e-9);
+    println!("{} windows from {} events; host {:.1} k events/s, \
+              {:.1} windows/s",
+             out.stats.windows, out.stats.events,
+             out.stats.events as f64 / host_s / 1e3,
+             out.stats.windows as f64 / host_s);
+    for (i, inf) in out.windows.iter().enumerate() {
+        println!("  window {i:>4}: class {}", inf.class);
+    }
+    Ok(())
+}
+
 fn run(args: &Args) -> anyhow::Result<()> {
     let net = net_for(args)?;
     let frames = args.get_usize("frames", 4);
@@ -536,6 +638,17 @@ fn run(args: &Args) -> anyhow::Result<()> {
         .timesteps(t)
         .intra_parallel(intra)
         .build()?;
+    if args.has("events") {
+        // `--events` immediately followed by another --flag parses as
+        // a bare switch; never silently fall through to the dense path
+        // the user explicitly asked to leave.
+        anyhow::bail!("run --events needs a value: a .aer file path, \
+                       or `synth`");
+    }
+    if let Some(src) = args.get("events") {
+        let src = src.to_string();
+        return run_events(args, &mut session, &src);
+    }
     let shape = session.input_shape();
     println!("running {frames} frames of {shape:?} at rate {rate}, T={t}, \
               backend={backend}, intra-parallel={intra}");
@@ -551,6 +664,37 @@ fn run(args: &Args) -> anyhow::Result<()> {
     for (n, c) in rep.layer_names.iter().zip(&rep.layer_cycles) {
         println!("  {n:<20} {c:>12} cycles");
     }
+    Ok(())
+}
+
+/// `gen-events`: write a synthetic DVS-like event file (concatenated
+/// 12-byte LE records, sorted by timestamp — `codec::stream` docs)
+/// sized for a model's post-encoder input, for load-testing
+/// `run --events` and the server's events mode.
+fn gen_events(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_str("model", "scnn3");
+    let net = arch::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let (h, w, c) = net.accel_input_shape();
+    let windows = args.get_usize("windows", 16);
+    let rate = args.get_f64("rate", 0.15);
+    let window_us_raw = args.get_u64("window-us", 1000);
+    anyhow::ensure!(window_us_raw > 0 && window_us_raw <= u32::MAX as u64,
+                    "--window-us must be in 1..={}", u32::MAX);
+    let window_us = window_us_raw as u32;
+    check_timestamp_space(windows, window_us)?;
+    let seed = args.get_u64("seed", 17);
+    let out = args.get_str("out", "events.aer");
+    let events = stream::synth_events(h, w, c, windows, rate, window_us,
+                                      seed);
+    std::fs::write(out, stream::encode_events(&events))
+        .with_context(|| format!("write {out}"))?;
+    println!("{}: {} events over {windows} windows of {window_us} µs \
+              for {} ({h}x{w}x{c}), {} bytes",
+             out, events.len(), net.name,
+             events.len() * DvsEvent::WIRE_BYTES);
+    println!("replay: sti-snn run --model {name} --events {out} \
+              --window us:{window_us}");
     Ok(())
 }
 
@@ -585,6 +729,24 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5));
     let t = args.get_usize("timesteps", 1);
 
+    // Accept `--events` with or without an (ignored) value — the CLI
+    // parser turns `--events X` into a valued flag, and silently
+    // dropping the intent would disable the bounded queue + the
+    // artifact-backend guard below.
+    let events = args.has("events") || args.get("events").is_some();
+    // --events implies a bounded queue so overload sheds explicitly;
+    // --queue-cap overrides (0 = unbounded).
+    let queue_cap =
+        args.get_usize("queue-cap", if events { 64 } else { 0 });
+    if events && !(args.has("synthetic") || args.has("auto-tune")) {
+        // Never silently swap trained artifacts for random weights:
+        // the artifact/PJRT backend is dense-only, so events serving
+        // must be asked for together with the simulator path.
+        anyhow::bail!("serve --events requires --synthetic (or \
+                       --auto-tune): the artifact/PJRT backend is \
+                       dense-only");
+    }
+
     if args.has("synthetic") || args.has("auto-tune") {
         // Simulator-only serving: no artifacts, no XLA; one pipeline
         // replica per worker thread drains the shared queue. The
@@ -595,7 +757,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             .model(name)
             .timesteps(t)
             .intra_parallel(args.get_usize("intra-parallel", 1))
-            .queue(max_batch, max_wait);
+            .queue(max_batch, max_wait)
+            .queue_capacity(queue_cap);
         if let Some(b) = backend {
             builder = builder.backend(b);
         }
@@ -628,10 +791,17 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                      best.candidate.backend, best.pool_fps,
                      best.power_w, best.resources.lut);
         }
+        let (h, w, c) = session.input_shape();
         println!("serving synthetic {} on {addr} ({} replica(s), \
-                  backend={}, newline-JSON protocol)",
+                  backend={}, newline-JSON + binary events protocols)",
                  session.net().name, session.replicas(),
                  session.backend());
+        println!("events mode: ({h}, {w}, {c}) frames, queue capacity \
+                  {} ({}); clients opt in with \
+                  {{\"cmd\": \"events\", \"window\": \"us:1000\"}}",
+                 queue_cap,
+                 if queue_cap == 0 { "unbounded" } else { "sheds when \
+                  full" });
         return session.serve(&addr, |a| println!("bound {a}"));
     }
 

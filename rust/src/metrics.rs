@@ -7,10 +7,31 @@
 //! * `Efficiency = GOPS / W`.
 //! * `Efficiency/PE = GOPS / W / PE` — the headline 0.14 (SCNN5) and
 //!   0.19 (SCNN3) GOPS/W/PE numbers.
+//!
+//! Serving latency is tracked two ways: per-replica saturating sums
+//! (cheap aggregate bookkeeping that can never wrap) and a pool-wide
+//! fixed-size [`LatencyReservoir`] holding the most recent request
+//! latencies, from which [`LatencySummary`] derives mean and
+//! p50/p95/p99 percentiles — the numbers the server's `stats` command
+//! reports.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sim::CLK_HZ;
+
+/// Lock-free saturating add on an atomic counter (latency sums must
+/// clamp at `u64::MAX` instead of wrapping back to small values).
+fn saturating_fetch_add(a: &AtomicU64, v: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed,
+                                      Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
 
 /// One Table-IV row.
 #[derive(Debug, Clone, PartialEq)]
@@ -80,9 +101,11 @@ pub struct ReplicaMetrics {
     pub requests: AtomicU64,
     /// Requests that failed in this replica's backend.
     pub errors: AtomicU64,
-    /// Microseconds the replica spent inside the backend.
+    /// Microseconds the replica spent inside the backend (saturating).
     pub busy_us: AtomicU64,
     /// Sum of end-to-end request latencies (queue wait + compute), µs.
+    /// Saturates at `u64::MAX` instead of wrapping; for mean and
+    /// percentile latency use [`PoolMetrics::latency_summary`].
     pub latency_us: AtomicU64,
 }
 
@@ -95,11 +118,102 @@ pub struct ReplicaSnapshot {
     pub latency_us: u64,
 }
 
+/// Fixed-size ring of the most recent request latencies (lock-free:
+/// one atomic slot per sample plus a running write index). Bounded
+/// memory no matter how long the server runs, and the source of the
+/// mean/percentile numbers in [`LatencySummary`] — replacing the old
+/// monotonically-growing latency sum that wrapped after ~584k years of
+/// µs... or after one bad clock step.
+#[derive(Debug)]
+pub struct LatencyReservoir {
+    slots: Vec<AtomicU64>,
+    /// Total samples ever recorded; `% slots.len()` is the write index.
+    count: AtomicU64,
+}
+
+/// Default reservoir capacity (samples) used by [`PoolMetrics`].
+pub const LATENCY_RESERVOIR_CAP: usize = 1024;
+
+impl LatencyReservoir {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            slots: (0..cap.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one request latency (µs; clamped to `u64::MAX - 1`).
+    /// Overwrites the oldest sample once the ring is full — the
+    /// summary reflects recent traffic.
+    pub fn record(&self, latency_us: u64) {
+        let i = self.count.fetch_add(1, Ordering::Relaxed) as usize
+            % self.slots.len();
+        // Samples are stored value+1 so 0 stays the "never written"
+        // sentinel: a slot claimed by a concurrent writer that has not
+        // stored yet still reads as empty (or as its previous valid
+        // sample), never as a spurious 0 µs measurement.
+        self.slots[i].store(latency_us.saturating_add(1),
+                            Ordering::Relaxed);
+    }
+
+    /// Samples ever recorded (not capped at the ring size).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean + nearest-rank percentiles over the resident window.
+    pub fn summary(&self) -> LatencySummary {
+        let count = self.count();
+        let mut v: Vec<u64> = self.slots
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .filter(|&s| s != 0)
+            .map(|s| s - 1)
+            .collect();
+        let resident = v.len();
+        if resident == 0 {
+            return LatencySummary::default();
+        }
+        v.sort_unstable();
+        // Nearest-rank: percentile q is the ceil(q*n)-th smallest.
+        let rank = |q: f64| {
+            let k = (q * resident as f64).ceil() as usize;
+            v[k.clamp(1, resident) - 1]
+        };
+        let sum: u128 = v.iter().map(|&x| x as u128).sum();
+        LatencySummary {
+            count,
+            window: resident as u64,
+            mean_us: (sum / resident as u128) as u64,
+            p50_us: rank(0.50),
+            p95_us: rank(0.95),
+            p99_us: rank(0.99),
+            max_us: v[resident - 1],
+        }
+    }
+}
+
+/// Snapshot of the latency reservoir: mean + nearest-rank percentiles
+/// over the most recent [`LatencySummary::window`] requests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencySummary {
+    /// Requests ever recorded.
+    pub count: u64,
+    /// Samples the statistics below are computed over (ring residency).
+    pub window: u64,
+    pub mean_us: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
 /// Aggregated metrics of an N-replica serving pool. Writers update
 /// their own replica's atomics; readers snapshot without locking.
 #[derive(Debug)]
 pub struct PoolMetrics {
     replicas: Vec<ReplicaMetrics>,
+    latency: LatencyReservoir,
 }
 
 impl PoolMetrics {
@@ -108,6 +222,7 @@ impl PoolMetrics {
             replicas: (0..replicas.max(1))
                 .map(|_| ReplicaMetrics::default())
                 .collect(),
+            latency: LatencyReservoir::new(LATENCY_RESERVOIR_CAP),
         }
     }
 
@@ -119,8 +234,14 @@ impl PoolMetrics {
     pub fn record(&self, i: usize, latency_us: u64, busy_us: u64) {
         let r = &self.replicas[i];
         r.requests.fetch_add(1, Ordering::Relaxed);
-        r.latency_us.fetch_add(latency_us, Ordering::Relaxed);
-        r.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+        saturating_fetch_add(&r.latency_us, latency_us);
+        saturating_fetch_add(&r.busy_us, busy_us);
+        self.latency.record(latency_us);
+    }
+
+    /// Pool-wide mean + percentile latency over recent requests.
+    pub fn latency_summary(&self) -> LatencySummary {
+        self.latency.summary()
     }
 
     /// Record a failed request on replica `i`.
@@ -144,14 +265,14 @@ impl PoolMetrics {
         (0..self.replicas.len()).map(|i| self.replica(i)).collect()
     }
 
-    /// Pool-wide totals (sum over replicas).
+    /// Pool-wide totals (sum over replicas; time sums saturate).
     pub fn totals(&self) -> ReplicaSnapshot {
         let mut t = ReplicaSnapshot::default();
         for s in self.per_replica() {
             t.requests += s.requests;
             t.errors += s.errors;
-            t.busy_us += s.busy_us;
-            t.latency_us += s.latency_us;
+            t.busy_us = t.busy_us.saturating_add(s.busy_us);
+            t.latency_us = t.latency_us.saturating_add(s.latency_us);
         }
         t
     }
@@ -245,6 +366,63 @@ mod tests {
         for i in 0..4 {
             assert_eq!(m.replica(i).requests, 100);
         }
+    }
+
+    /// Satellite fix: latency aggregates saturate instead of wrapping,
+    /// and mean/percentiles come from the reservoir.
+    #[test]
+    fn latency_sums_saturate_instead_of_wrapping() {
+        let m = PoolMetrics::new(1);
+        m.record(0, u64::MAX - 10, u64::MAX - 10);
+        m.record(0, 100, 100);
+        let t = m.totals();
+        assert_eq!(t.latency_us, u64::MAX, "sum clamped, not wrapped");
+        assert_eq!(t.busy_us, u64::MAX);
+        assert_eq!(t.requests, 2);
+    }
+
+    #[test]
+    fn latency_reservoir_percentiles_nearest_rank() {
+        let r = LatencyReservoir::new(256);
+        // 1..=100 µs in shuffled-ish order: percentiles are exact.
+        for i in (1..=100u64).rev() {
+            r.record(i);
+        }
+        let s = r.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.window, 100);
+        assert_eq!(s.mean_us, 50); // 5050/100 truncated
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p95_us, 95);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+    }
+
+    #[test]
+    fn latency_reservoir_keeps_recent_window() {
+        let r = LatencyReservoir::new(4);
+        for v in [1000, 1000, 1000, 1000, 1, 2, 3, 4] {
+            r.record(v);
+        }
+        let s = r.summary();
+        // The four old 1000s were overwritten by the recent 1..4.
+        assert_eq!(s.count, 8);
+        assert_eq!(s.window, 4);
+        assert_eq!(s.max_us, 4);
+        assert_eq!(s.p50_us, 2);
+        let empty = LatencyReservoir::new(8).summary();
+        assert_eq!(empty, LatencySummary::default());
+    }
+
+    #[test]
+    fn pool_metrics_expose_latency_summary() {
+        let m = PoolMetrics::new(2);
+        m.record(0, 10, 5);
+        m.record(1, 30, 5);
+        let s = m.latency_summary();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.mean_us, 20);
+        assert_eq!(s.max_us, 30);
     }
 
     #[test]

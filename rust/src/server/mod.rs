@@ -1,17 +1,84 @@
 //! TCP host interface (paper Fig. 10: the Vitis TCP server that takes
 //! images + control from the host and returns results).
 //!
-//! Protocol: newline-delimited JSON over TCP.
+//! # Dense protocol (newline-delimited JSON)
 //!
 //! Request:  `{"id": 1, "image": [f32...]}`  (H*W*C floats, row-major
 //!           channel-last, matching the artifact's input shape) or
-//!           `{"cmd": "stats"}` / `{"cmd": "shutdown"}`.
+//!           `{"cmd": "stats"}` / `{"cmd": "shutdown"}` /
+//!           `{"cmd": "events", ...}` (below).
 //! Response: `{"id": 1, "class": 3, "logits": [...], "latency_us": 42,
 //!           "replica": 0}` or `{"stats": {...}}`.
 //!
-//! Architecture: connection threads only parse/serialise; inference
-//! jobs flow into a shared [`Batcher`] queue drained by the backend
-//! worker(s).
+//! # Event protocol (`mode: "events"`, length-prefixed binary)
+//!
+//! The native path for the paper's event-driven single-timestep
+//! claim: DVS-style address events stream in, are windowed into
+//! word-packed spike frames by [`EventStream`], and enter the pipeline
+//! without ever materialising a dense `f32` image. A connection opts
+//! in with one JSON line:
+//!
+//! ```text
+//! {"cmd": "events", "window": "count:64" | "us:1000"}
+//! ```
+//!
+//! and receives `{"ok": true, "h": H, "w": W, "c": C,
+//! "record_bytes": 12, "max_batch_bytes": N}` (or `{"error": ...}` if
+//! the backend is dense-only). From then on the connection is binary,
+//! both directions framed as `u32 LE payload length` + payload.
+//!
+//! **Client -> server** payloads are concatenated 12-byte event
+//! records (layout in [`crate::codec::stream`]: `x u16, y u16, c u16,
+//! reserved u16 = 0, t u32`, all LE, sorted by `t`). A zero-length
+//! frame ends the stream: the server flushes the open window, answers
+//! everything in flight, sends the summary, and closes.
+//!
+//! **Server -> client** payloads start with a status byte:
+//!
+//! ```text
+//! status 0 (window classified)
+//!      0  u8   status = 0
+//!      1  u8   replica that served the window
+//!      2  u16  reserved = 0
+//!      4  u32  window id (per-connection sequence number)
+//!      8  u32  class (argmax)
+//!     12  u64  end-to-end latency, µs
+//!     20  u32  logit count N
+//!     24  f32 x N logits
+//! status 1 (window shed — queue full, explicit backpressure)
+//!      0  u8   status = 1     1 u8 = 0     2 u16 = 0
+//!      4  u32  window id
+//! status 2 (error)
+//!      0  u8   status = 2     1 u8 = 0     2 u16 = 0
+//!      4  u32  window id
+//!      8  u32  UTF-8 message length M
+//!     12  u8 x M message
+//! status 3 (stream summary, last frame before close)
+//!      0  u8   status = 3     1 u8 = 0     2 u16 = 0
+//!      4  u64  events ingested
+//!     12  u64  windows formed
+//!     20  u64  windows served
+//!     28  u64  windows shed (refused: queue full, or shutdown race)
+//! ```
+//!
+//! `served + shed == windows` always; a window refused because the
+//! server was shutting down counts as shed and its reply is an error
+//! frame naming the cause.
+//!
+//! Classified-window (and timeout) replies are written in window
+//! order among *accepted* windows; shed and stream-error frames are
+//! written immediately at ingest time, so a shed for window N can
+//! arrive before the classification of window N-1 — match replies by
+//! their window id, not by arrival position. Backpressure is
+//! explicit: the shared queue is bounded (`with_queue_capacity`), and
+//! a window that finds it full is answered with a shed frame instead
+//! of queueing unboundedly — the client decides whether to re-send or
+//! drop.
+//!
+//! # Architecture
+//!
+//! Connection threads only parse/serialise; inference jobs flow into a
+//! shared [`Batcher`] queue drained by the backend worker(s).
 //!
 //! * [`Server::serve`] — single-pipeline mode: the accept thread owns
 //!   the backend exclusively, matching the physical reality of one
@@ -21,21 +88,25 @@
 //!   replicas each drain the shared queue on their own thread, so
 //!   request throughput scales with host cores. Per-replica counters
 //!   aggregate in [`crate::metrics::PoolMetrics`] and are reported by
-//!   the `stats` command.
+//!   the `stats` command, including mean/p50/p95/p99 latency from the
+//!   fixed-size reservoir.
 //!
 //! std::net + threads; tokio is not vendored in this environment.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::codec::stream::{DvsEvent, EventStream, WindowPolicy};
+use crate::codec::SpikeFrame;
 use crate::coordinator::batch::Batcher;
-use crate::metrics::PoolMetrics;
+use crate::metrics::{LatencySummary, PoolMetrics};
 use crate::util::json::Json;
 
 /// Inference backend the server fronts: image in, (class, logits) out.
@@ -44,15 +115,33 @@ use crate::util::json::Json;
 pub trait Backend {
     fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)>;
     fn input_len(&self) -> usize;
+
+    /// Spike-frame inference for the event-driven serving path.
+    /// Backends that only accept dense images keep this default;
+    /// events-mode connections are then rejected at negotiation
+    /// (because [`Backend::frame_shape`] returns `None`).
+    fn infer_frame(&mut self, _frame: &SpikeFrame)
+                   -> Result<(usize, Vec<f32>)> {
+        anyhow::bail!("backend does not accept spike frames")
+    }
+
+    /// `(H, W, C)` of the spike frames [`Backend::infer_frame`]
+    /// accepts; `None` (the default) disables events mode.
+    fn frame_shape(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
 }
 
 /// Serving statistics. Request/latency aggregates are derived from the
 /// per-replica [`PoolMetrics`] (single source of truth); the only
-/// separate counter is for protocol errors that never reach a replica.
+/// separate counters are for protocol errors that never reach a
+/// replica and events-mode windows shed under backpressure.
 #[derive(Debug)]
 pub struct ServerStats {
     /// Bad JSON / bad request shape, counted before replica dispatch.
     pub protocol_errors: AtomicU64,
+    /// Events-mode windows refused because the bounded queue was full.
+    pub shed: AtomicU64,
     /// Per-replica counters (one entry in single-pipeline mode).
     pub pool: PoolMetrics,
 }
@@ -61,6 +150,7 @@ impl ServerStats {
     fn new(replicas: usize) -> Self {
         Self {
             protocol_errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             pool: PoolMetrics::new(replicas),
         }
     }
@@ -75,8 +165,21 @@ impl ServerStats {
             + self.protocol_errors.load(Ordering::SeqCst)
     }
 
+    /// Windows shed under events-mode backpressure.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::SeqCst)
+    }
+
+    /// Saturating sum of end-to-end latencies across replicas. Prefer
+    /// [`ServerStats::latency`] — mean + percentiles from a bounded
+    /// reservoir — for anything beyond a monotone load indicator.
     pub fn total_latency_us(&self) -> u64 {
         self.pool.totals().latency_us
+    }
+
+    /// Mean + p50/p95/p99/max latency over recent requests.
+    pub fn latency(&self) -> LatencySummary {
+        self.pool.latency_summary()
     }
 }
 
@@ -85,12 +188,38 @@ impl ServerStats {
 /// overload; the error message names both causes).
 const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Largest accepted binary frame in either direction (events batches
+/// and replies); a length prefix past this is a protocol error.
+const MAX_EVENT_BATCH_BYTES: u32 = 1 << 20;
+
+/// Events-mode reply status bytes (module docs).
+const EV_OK: u8 = 0;
+const EV_SHED: u8 = 1;
+const EV_ERR: u8 = 2;
+const EV_SUMMARY: u8 = 3;
+
+/// What a job carries to the backend: a dense image (JSON protocol)
+/// or an already-windowed spike frame (events protocol).
+enum JobPayload {
+    Dense(Vec<f32>),
+    Frame(SpikeFrame),
+}
+
 /// An inference job travelling from a connection thread to a backend.
 struct Job {
     id: f64,
-    image: Vec<f32>,
+    payload: JobPayload,
     enqueued_at: Instant,
-    reply: Sender<Json>,
+    reply: Sender<JobReply>,
+}
+
+/// Protocol-agnostic job outcome; the JSON and events connection loops
+/// each format it for their wire.
+struct JobReply {
+    id: f64,
+    replica: usize,
+    latency_us: u64,
+    result: std::result::Result<(usize, Vec<f32>), String>,
 }
 
 pub struct Server<B: Backend> {
@@ -99,6 +228,7 @@ pub struct Server<B: Backend> {
     shutdown: Arc<AtomicBool>,
     max_batch: usize,
     max_wait: Duration,
+    queue_cap: usize,
 }
 
 impl<B: Backend> Server<B> {
@@ -118,6 +248,7 @@ impl<B: Backend> Server<B> {
             shutdown: Arc::new(AtomicBool::new(false)),
             max_batch: 16,
             max_wait: Duration::from_millis(5),
+            queue_cap: 0,
         }
     }
 
@@ -127,6 +258,15 @@ impl<B: Backend> Server<B> {
         assert!(max_batch > 0);
         self.max_batch = max_batch;
         self.max_wait = max_wait;
+        self
+    }
+
+    /// Bound the shared queue's depth (0 = unbounded, the default).
+    /// Events-mode windows that find the queue full are answered with
+    /// an explicit shed frame instead of queueing; the dense JSON path
+    /// still always queues (its clients block per request anyway).
+    pub fn with_queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
         self
     }
 
@@ -159,15 +299,17 @@ impl<B: Backend> Server<B> {
     pub fn serve(mut self, addr: &str,
                  on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
         let listener = self.bind(addr, on_bound)?;
-        let queue: Arc<Batcher<Job>> =
-            Arc::new(Batcher::new(self.max_batch, self.max_wait));
+        let queue: Arc<Batcher<Job>> = Arc::new(Batcher::with_capacity(
+            self.max_batch, self.max_wait, self.queue_cap));
+        let conn = ConnInfo {
+            input_len: self.backends[0].input_len(),
+            frame_shape: self.backends[0].frame_shape(),
+        };
         let mut handles = Vec::new();
 
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
-                               &self.shutdown,
-                               self.backends[0].input_len(),
-                               &mut handles)?;
+                               &self.shutdown, conn, &mut handles)?;
             // Drain inference jobs on this (backend-owning) thread.
             let batch = queue.try_batch();
             if batch.is_empty() {
@@ -202,9 +344,12 @@ impl<B: Backend + Send + 'static> Server<B> {
                       on_bound: impl FnOnce(std::net::SocketAddr))
                       -> Result<()> {
         let listener = self.bind(addr, on_bound)?;
-        let queue: Arc<Batcher<Job>> =
-            Arc::new(Batcher::new(self.max_batch, self.max_wait));
-        let input_len = self.backends[0].input_len();
+        let queue: Arc<Batcher<Job>> = Arc::new(Batcher::with_capacity(
+            self.max_batch, self.max_wait, self.queue_cap));
+        let conn = ConnInfo {
+            input_len: self.backends[0].input_len(),
+            frame_shape: self.backends[0].frame_shape(),
+        };
 
         let mut workers = Vec::new();
         for (idx, mut backend) in self.backends.drain(..).enumerate() {
@@ -230,7 +375,7 @@ impl<B: Backend + Send + 'static> Server<B> {
         let mut handles = Vec::new();
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
-                               &self.shutdown, input_len, &mut handles)?;
+                               &self.shutdown, conn, &mut handles)?;
             std::thread::sleep(Duration::from_millis(1));
         }
         for w in workers {
@@ -247,11 +392,18 @@ impl<B: Backend + Send + 'static> Server<B> {
     }
 }
 
+/// What a connection thread needs to know about the backend.
+#[derive(Clone, Copy)]
+struct ConnInfo {
+    input_len: usize,
+    frame_shape: Option<(usize, usize, usize)>,
+}
+
 /// Accept pending connections (non-blocking listener).
 fn accept_connections(
     listener: &TcpListener, queue: &Arc<Batcher<Job>>,
     stats: &Arc<ServerStats>, shutdown: &Arc<AtomicBool>,
-    input_len: usize,
+    conn: ConnInfo,
     handles: &mut Vec<std::thread::JoinHandle<()>>) -> Result<()> {
     loop {
         match listener.accept() {
@@ -260,8 +412,7 @@ fn accept_connections(
                 let stats = stats.clone();
                 let shutdown = shutdown.clone();
                 handles.push(std::thread::spawn(move || {
-                    let _ = conn_loop(stream, queue, stats, shutdown,
-                                      input_len);
+                    let _ = conn_loop(stream, queue, stats, shutdown, conn);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -276,38 +427,55 @@ fn accept_connections(
 fn handle_job<B: Backend>(backend: &mut B, replica: usize, job: Job,
                           stats: &ServerStats) {
     let t0 = Instant::now();
-    let reply = match backend.infer(&job.image) {
-        Ok((class, logits)) => {
-            let busy_us = t0.elapsed().as_micros() as u64;
-            let us = job.enqueued_at.elapsed().as_micros() as u64;
-            stats.pool.record(replica, us, busy_us);
-            Json::obj(vec![
-                ("id", Json::num(job.id)),
-                ("class", Json::num(class as f64)),
-                ("logits",
-                 Json::Arr(logits
-                     .iter()
-                     .map(|&l| Json::num(l as f64))
-                     .collect())),
-                ("latency_us", Json::num(us as f64)),
-                ("replica", Json::num(replica as f64)),
-            ])
+    let result = match &job.payload {
+        JobPayload::Dense(image) => backend.infer(image),
+        JobPayload::Frame(frame) => backend.infer_frame(frame),
+    };
+    let busy_us = t0.elapsed().as_micros() as u64;
+    let latency_us = job.enqueued_at.elapsed().as_micros() as u64;
+    let result = match result {
+        Ok(ok) => {
+            stats.pool.record(replica, latency_us, busy_us);
+            Ok(ok)
         }
         Err(e) => {
             stats.pool.record_error(replica);
-            Json::obj(vec![("error", Json::str(&e.to_string()))])
+            Err(e.to_string())
         }
     };
-    let _ = job.reply.send(reply);
+    let _ = job.reply.send(JobReply {
+        id: job.id,
+        replica,
+        latency_us,
+        result,
+    });
 }
 
 /// Error out whatever is still queued at shutdown.
 fn reject_pending(queue: &Batcher<Job>) {
     for job in queue.drain_all() {
-        let _ = job.reply.send(Json::obj(vec![(
-            "error",
-            Json::str("server shutting down"),
-        )]));
+        let _ = job.reply.send(JobReply {
+            id: job.id,
+            replica: 0,
+            latency_us: 0,
+            result: Err("server shutting down".to_string()),
+        });
+    }
+}
+
+/// Format a reply for the JSON protocol.
+fn json_reply(r: &JobReply) -> Json {
+    match &r.result {
+        Ok((class, logits)) => Json::obj(vec![
+            ("id", Json::num(r.id)),
+            ("class", Json::num(*class as f64)),
+            ("logits",
+             Json::Arr(logits.iter().map(|&l| Json::num(l as f64))
+                 .collect())),
+            ("latency_us", Json::num(r.latency_us as f64)),
+            ("replica", Json::num(r.replica as f64)),
+        ]),
+        Err(e) => Json::obj(vec![("error", Json::str(e))]),
     }
 }
 
@@ -325,22 +493,35 @@ fn stats_json(stats: &ServerStats) -> Json {
             ])
         })
         .collect();
+    let lat = stats.latency();
     Json::obj(vec![(
         "stats",
         Json::obj(vec![
             ("requests", Json::num(stats.requests() as f64)),
             ("errors", Json::num(stats.errors() as f64)),
+            ("shed", Json::num(stats.shed() as f64)),
             ("total_latency_us",
              Json::num(stats.total_latency_us() as f64)),
+            ("latency",
+             Json::obj(vec![
+                 ("window", Json::num(lat.window as f64)),
+                 ("mean_us", Json::num(lat.mean_us as f64)),
+                 ("p50_us", Json::num(lat.p50_us as f64)),
+                 ("p95_us", Json::num(lat.p95_us as f64)),
+                 ("p99_us", Json::num(lat.p99_us as f64)),
+                 ("max_us", Json::num(lat.max_us as f64)),
+             ])),
             ("replicas", Json::Arr(per)),
         ]),
     )])
 }
 
-/// Per-connection loop: parse lines, ship jobs, write replies.
+/// Per-connection loop: parse lines, ship jobs, write replies. An
+/// `events` command hands the connection over to the binary
+/// `events_loop`.
 fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
              stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
-             input_len: usize) -> Result<()> {
+             conn: ConnInfo) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -361,13 +542,52 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
                             return Ok(());
                         }
                         "stats" => stats_json(&stats),
+                        "events" => {
+                            let window = req
+                                .get("window")
+                                .and_then(|w| w.as_str())
+                                .unwrap_or("us:1000");
+                            match (conn.frame_shape,
+                                   WindowPolicy::parse(window)) {
+                                (None, _) => Json::obj(vec![(
+                                    "error",
+                                    Json::str("backend does not accept \
+                                               spike events"),
+                                )]),
+                                (_, None) => Json::obj(vec![(
+                                    "error",
+                                    Json::str(&format!(
+                                        "bad window {window:?} (count:N \
+                                         or us:N)")),
+                                )]),
+                                (Some(shape), Some(policy)) => {
+                                    let (h, w, c) = shape;
+                                    let r = Json::obj(vec![
+                                        ("ok", Json::Bool(true)),
+                                        ("h", Json::num(h as f64)),
+                                        ("w", Json::num(w as f64)),
+                                        ("c", Json::num(c as f64)),
+                                        ("record_bytes",
+                                         Json::num(
+                                             DvsEvent::WIRE_BYTES as f64)),
+                                        ("max_batch_bytes",
+                                         Json::num(
+                                             MAX_EVENT_BATCH_BYTES as f64)),
+                                    ]);
+                                    writeln!(out, "{r}")?;
+                                    return events_loop(
+                                        &mut reader, &mut out, &queue,
+                                        &stats, &shutdown, shape, policy);
+                                }
+                            }
+                        }
                         other => Json::obj(vec![(
                             "error",
                             Json::str(&format!("unknown cmd {other}")),
                         )]),
                     }
                 } else {
-                    match parse_infer(&req, input_len) {
+                    match parse_infer(&req, conn.input_len) {
                         Err(msg) => {
                             stats.protocol_errors
                                 .fetch_add(1, Ordering::SeqCst);
@@ -383,19 +603,19 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
                                 let (tx, rx) = channel();
                                 queue.push(Job {
                                     id,
-                                    image,
+                                    payload: JobPayload::Dense(image),
                                     enqueued_at: Instant::now(),
                                     reply: tx,
                                 });
-                                rx.recv_timeout(REPLY_TIMEOUT)
-                                    .unwrap_or_else(|_| {
-                                        Json::obj(vec![(
-                                            "error",
-                                            Json::str("request timed out \
-                                                       (overloaded or \
-                                                       shutting down)"),
-                                        )])
-                                    })
+                                match rx.recv_timeout(REPLY_TIMEOUT) {
+                                    Ok(r) => json_reply(&r),
+                                    Err(_) => Json::obj(vec![(
+                                        "error",
+                                        Json::str("request timed out \
+                                                   (overloaded or \
+                                                   shutting down)"),
+                                    )]),
+                                }
                             }
                         }
                     }
@@ -403,6 +623,264 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
             }
         };
         writeln!(out, "{reply}")?;
+    }
+}
+
+/// Write one length-prefixed binary frame.
+fn write_frame(out: &mut impl Write, payload: &[u8])
+               -> std::io::Result<()> {
+    out.write_all(&(payload.len() as u32).to_le_bytes())?;
+    out.write_all(payload)
+}
+
+/// 4-byte status header shared by every events-mode reply.
+fn ev_header(status: u8, replica: u8) -> Vec<u8> {
+    vec![status, replica, 0, 0]
+}
+
+fn ev_ok_payload(window_id: u32, r: &JobReply, class: usize,
+                 logits: &[f32]) -> Vec<u8> {
+    let mut p = ev_header(EV_OK, r.replica as u8);
+    p.extend_from_slice(&window_id.to_le_bytes());
+    p.extend_from_slice(&(class as u32).to_le_bytes());
+    p.extend_from_slice(&r.latency_us.to_le_bytes());
+    p.extend_from_slice(&(logits.len() as u32).to_le_bytes());
+    for l in logits {
+        p.extend_from_slice(&l.to_le_bytes());
+    }
+    p
+}
+
+fn ev_err_payload(window_id: u32, msg: &str) -> Vec<u8> {
+    let mut p = ev_header(EV_ERR, 0);
+    p.extend_from_slice(&window_id.to_le_bytes());
+    p.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    p.extend_from_slice(msg.as_bytes());
+    p
+}
+
+fn ev_reply_payload(window_id: u32, r: &JobReply) -> Vec<u8> {
+    match &r.result {
+        Ok((class, logits)) => ev_ok_payload(window_id, r, *class, logits),
+        Err(e) => ev_err_payload(window_id, e),
+    }
+}
+
+/// How often the events loop wakes from a quiet socket to stream back
+/// finished replies (a blocking read would otherwise delay them until
+/// the client's next batch).
+const EVENTS_IDLE_POLL: Duration = Duration::from_millis(10);
+
+/// How long an events-mode reply write may stall before the server
+/// drops the connection (a client that never reads replies would
+/// otherwise deadlock the connection thread once both TCP buffers
+/// fill).
+const EVENTS_WRITE_STALL: Duration = Duration::from_secs(5);
+
+/// Read exactly `buf.len()` bytes, invoking `on_idle` on every read
+/// timeout so the caller can stream back finished replies while the
+/// client is quiet. `Ok(false)` = clean EOF before the first byte;
+/// EOF mid-buffer is an `UnexpectedEof` error.
+fn read_full(reader: &mut BufReader<TcpStream>, buf: &mut [u8],
+             mut on_idle: impl FnMut() -> std::io::Result<()>)
+             -> std::io::Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match reader.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(false);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "client closed mid-frame"));
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                on_idle()?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// One idle-poll tick of the events loop: bail out on server shutdown
+/// (so the accept thread's join never waits on a quiet connection),
+/// otherwise stream back finished replies.
+fn idle_tick(shutdown: &AtomicBool,
+             pending: &mut VecDeque<(u32, Receiver<JobReply>)>,
+             out: &mut TcpStream) -> std::io::Result<()> {
+    if shutdown.load(Ordering::SeqCst) {
+        return Err(std::io::Error::new(std::io::ErrorKind::Other,
+                                       "server shutting down"));
+    }
+    drain_ready(pending, out)
+}
+
+/// Write every reply whose job already finished, preserving window
+/// order among accepted windows.
+fn drain_ready(pending: &mut VecDeque<(u32, Receiver<JobReply>)>,
+               out: &mut TcpStream) -> std::io::Result<()> {
+    loop {
+        let ready = match pending.front() {
+            Some((_, rx)) => match rx.try_recv() {
+                Ok(r) => Some(Ok(r)),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => Some(Err(())),
+            },
+            None => None,
+        };
+        let Some(res) = ready else { return Ok(()) };
+        let (wid, _rx) = pending.pop_front().expect("front checked");
+        let payload = match res {
+            Ok(r) => ev_reply_payload(wid, &r),
+            Err(()) => ev_err_payload(wid, "server shutting down"),
+        };
+        write_frame(out, &payload)?;
+    }
+}
+
+/// The binary events-mode connection loop (protocol in module docs):
+/// read event batches, window them through [`EventStream`], submit
+/// completed windows with backpressure, and stream replies back as
+/// they finish (in window order among accepted windows; the socket is
+/// polled with [`EVENTS_IDLE_POLL`] so replies flow even while the
+/// client is quiet).
+fn events_loop(reader: &mut BufReader<TcpStream>, out: &mut TcpStream,
+               queue: &Arc<Batcher<Job>>, stats: &Arc<ServerStats>,
+               shutdown: &Arc<AtomicBool>,
+               shape: (usize, usize, usize), policy: WindowPolicy)
+               -> Result<()> {
+    let mut stream = EventStream::new(shape.0, shape.1, shape.2, policy)?;
+    reader.get_ref().set_read_timeout(Some(EVENTS_IDLE_POLL))?;
+    // A client that streams events without ever reading replies would
+    // eventually wedge this thread in write_frame (both TCP buffers
+    // full) while the client blocks writing — a mutual deadlock. A
+    // write timeout converts that into a dropped connection instead:
+    // clients must drain replies at least every few seconds.
+    out.set_write_timeout(Some(EVENTS_WRITE_STALL))?;
+    let mut pending: VecDeque<(u32, Receiver<JobReply>)> = VecDeque::new();
+    let mut next_window = 0u32;
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    let mut len4 = [0u8; 4];
+    let mut buf: Vec<u8> = Vec::new();
+
+    // Submit one completed window (or shed it) and report the outcome
+    // frames this can already write.
+    let submit = |frame: SpikeFrame, wid: u32,
+                  pending: &mut VecDeque<(u32, Receiver<JobReply>)>,
+                  served: &mut u64, shed: &mut u64,
+                  out: &mut TcpStream|
+     -> std::io::Result<()> {
+        if shutdown.load(Ordering::SeqCst) {
+            // Refused, not served: count as shed so the summary
+            // invariant served + shed == windows holds (the reply is
+            // an error frame naming the real cause).
+            *shed += 1;
+            return write_frame(
+                out, &ev_err_payload(wid, "server shutting down"));
+        }
+        let (tx, rx) = channel();
+        let job = Job {
+            id: wid as f64,
+            payload: JobPayload::Frame(frame),
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        match queue.try_push(job) {
+            Ok(()) => {
+                *served += 1;
+                pending.push_back((wid, rx));
+                Ok(())
+            }
+            Err(_) => {
+                *shed += 1;
+                stats.shed.fetch_add(1, Ordering::SeqCst);
+                let mut p = ev_header(EV_SHED, 0);
+                p.extend_from_slice(&wid.to_le_bytes());
+                write_frame(out, &p)
+            }
+        }
+    };
+
+    loop {
+        match read_full(reader, &mut len4,
+                        || idle_tick(shutdown, &mut pending, out)) {
+            Ok(true) => {}
+            // Client closed (or broke) mid-stream, or the server is
+            // shutting down: stop; nobody is left to answer.
+            Ok(false) | Err(_) => return Ok(()),
+        }
+        let len = u32::from_le_bytes(len4);
+        if len == 0 {
+            // End of stream: flush the open window, answer everything
+            // in flight (in order), then the summary, then close.
+            if let Some(f) = stream.flush() {
+                let frame = f.clone();
+                let wid = next_window;
+                next_window += 1;
+                submit(frame, wid, &mut pending, &mut served, &mut shed,
+                       out)?;
+            }
+            while let Some((wid, rx)) = pending.pop_front() {
+                let payload = match rx.recv_timeout(REPLY_TIMEOUT) {
+                    Ok(r) => ev_reply_payload(wid, &r),
+                    Err(_) => ev_err_payload(
+                        wid,
+                        "request timed out (overloaded or shutting down)"),
+                };
+                write_frame(out, &payload)?;
+            }
+            let st = stream.stats();
+            let mut p = ev_header(EV_SUMMARY, 0);
+            p.extend_from_slice(&st.events.to_le_bytes());
+            p.extend_from_slice(&st.windows.to_le_bytes());
+            p.extend_from_slice(&served.to_le_bytes());
+            p.extend_from_slice(&shed.to_le_bytes());
+            write_frame(out, &p)?;
+            return Ok(());
+        }
+        if len > MAX_EVENT_BATCH_BYTES
+            || len as usize % DvsEvent::WIRE_BYTES != 0
+        {
+            stats.protocol_errors.fetch_add(1, Ordering::SeqCst);
+            write_frame(out, &ev_err_payload(
+                next_window,
+                &format!("bad event batch length {len}")))?;
+            return Ok(()); // framing is broken; close
+        }
+        buf.resize(len as usize, 0);
+        if !read_full(reader, &mut buf,
+                      || idle_tick(shutdown, &mut pending, out))? {
+            return Ok(()); // client closed between header and payload
+        }
+        for rec in buf.chunks_exact(DvsEvent::WIRE_BYTES) {
+            let pushed = DvsEvent::from_wire(rec)
+                .and_then(|ev| stream.push(ev));
+            match pushed {
+                Ok(false) => {}
+                Ok(true) => {
+                    let frame = stream.window().clone();
+                    let wid = next_window;
+                    next_window += 1;
+                    submit(frame, wid, &mut pending, &mut served,
+                           &mut shed, out)?;
+                }
+                Err(e) => {
+                    stats.protocol_errors.fetch_add(1, Ordering::SeqCst);
+                    write_frame(out, &ev_err_payload(
+                        next_window, &e.to_string()))?;
+                    return Ok(()); // stream contract broken; close
+                }
+            }
+        }
+        // Stream back whatever already finished before the next read
+        // (the idle poll handles the quiet-client case).
+        drain_ready(&mut pending, out)?;
     }
 }
 
@@ -423,7 +901,89 @@ fn parse_infer(req: &Json, input_len: usize)
     Ok((id, image))
 }
 
-/// Simple blocking client (used by examples + tests).
+/// One parsed events-mode reply on the client side.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventReply {
+    /// A window was classified.
+    Window {
+        window_id: u32,
+        replica: usize,
+        class: usize,
+        logits: Vec<f32>,
+        latency_us: u64,
+    },
+    /// The window was shed under backpressure (queue full).
+    Shed { window_id: u32 },
+    /// The window (or the stream) errored.
+    Error { window_id: u32, msg: String },
+    /// End-of-stream summary.
+    Summary(EventSummary),
+}
+
+/// The events-mode end-of-stream summary frame.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventSummary {
+    pub events: u64,
+    pub windows: u64,
+    pub served: u64,
+    pub shed: u64,
+}
+
+fn le_u32(b: &[u8], at: usize) -> Result<u32> {
+    anyhow::ensure!(b.len() >= at + 4, "short reply frame");
+    Ok(u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]]))
+}
+
+fn le_u64(b: &[u8], at: usize) -> Result<u64> {
+    anyhow::ensure!(b.len() >= at + 8, "short reply frame");
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&b[at..at + 8]);
+    Ok(u64::from_le_bytes(w))
+}
+
+fn parse_event_reply(p: &[u8]) -> Result<EventReply> {
+    anyhow::ensure!(p.len() >= 4, "reply frame under 4 bytes");
+    match p[0] {
+        EV_OK => {
+            let n = le_u32(p, 20)? as usize;
+            anyhow::ensure!(p.len() >= 24 + n * 4, "short logits");
+            let logits = (0..n)
+                .map(|i| {
+                    let at = 24 + i * 4;
+                    f32::from_le_bytes([p[at], p[at + 1], p[at + 2],
+                                        p[at + 3]])
+                })
+                .collect();
+            Ok(EventReply::Window {
+                window_id: le_u32(p, 4)?,
+                replica: p[1] as usize,
+                class: le_u32(p, 8)? as usize,
+                latency_us: le_u64(p, 12)?,
+                logits,
+            })
+        }
+        EV_SHED => Ok(EventReply::Shed { window_id: le_u32(p, 4)? }),
+        EV_ERR => {
+            let m = le_u32(p, 8)? as usize;
+            anyhow::ensure!(p.len() >= 12 + m, "short error message");
+            Ok(EventReply::Error {
+                window_id: le_u32(p, 4)?,
+                msg: String::from_utf8_lossy(&p[12..12 + m]).into_owned(),
+            })
+        }
+        EV_SUMMARY => Ok(EventReply::Summary(EventSummary {
+            events: le_u64(p, 4)?,
+            windows: le_u64(p, 12)?,
+            served: le_u64(p, 20)?,
+            shed: le_u64(p, 28)?,
+        })),
+        other => anyhow::bail!("unknown reply status {other}"),
+    }
+}
+
+/// Simple blocking client (used by examples + tests). Speaks both the
+/// JSON protocol ([`Client::infer`]) and, after
+/// [`Client::start_events`], the binary events protocol.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
@@ -452,6 +1012,67 @@ impl Client {
         self.request(&req)
     }
 
+    /// Switch this connection to the binary events protocol; returns
+    /// the `(h, w, c)` frame shape the server will window into.
+    pub fn start_events(&mut self, window: WindowPolicy)
+                        -> Result<(usize, usize, usize)> {
+        let req = Json::obj(vec![
+            ("cmd", Json::str("events")),
+            ("window", Json::str(&window.to_string())),
+        ]);
+        let resp = self.request(&req)?;
+        if let Some(err) = resp.get("error").and_then(|e| e.as_str()) {
+            anyhow::bail!("events mode refused: {err}");
+        }
+        let dim = |k: &str| {
+            resp.get(k).and_then(|v| v.as_usize()).ok_or_else(|| {
+                anyhow::anyhow!("events handshake missing {k}: {resp}")
+            })
+        };
+        Ok((dim("h")?, dim("w")?, dim("c")?))
+    }
+
+    /// Send a batch of sorted events, automatically split into
+    /// length-prefixed frames no larger than the server's
+    /// `max_batch_bytes` limit (windowing is batch-boundary-agnostic,
+    /// so the split is invisible to the server).
+    pub fn send_events(&mut self, events: &[DvsEvent]) -> Result<()> {
+        let per_frame =
+            MAX_EVENT_BATCH_BYTES as usize / DvsEvent::WIRE_BYTES;
+        for chunk in events.chunks(per_frame.max(1)) {
+            let payload = crate::codec::stream::encode_events(chunk);
+            write_frame(&mut self.stream, &payload)?;
+        }
+        Ok(())
+    }
+
+    /// Read the next events-mode reply frame.
+    pub fn read_event_reply(&mut self) -> Result<EventReply> {
+        let mut len4 = [0u8; 4];
+        self.reader.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4);
+        anyhow::ensure!(len <= MAX_EVENT_BATCH_BYTES,
+                        "oversized reply frame ({len} bytes)");
+        let mut buf = vec![0u8; len as usize];
+        self.reader.read_exact(&mut buf)?;
+        parse_event_reply(&buf)
+    }
+
+    /// End the event stream: the server flushes, answers every window
+    /// still in flight, and closes with a summary. Returns all replies
+    /// received from now on plus the summary.
+    pub fn finish_events(&mut self)
+                         -> Result<(Vec<EventReply>, EventSummary)> {
+        write_frame(&mut self.stream, &[])?;
+        let mut replies = Vec::new();
+        loop {
+            match self.read_event_reply()? {
+                EventReply::Summary(s) => return Ok((replies, s)),
+                r => replies.push(r),
+            }
+        }
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
         Ok(())
@@ -461,6 +1082,7 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codec::stream::synth_events;
 
     /// Toy backend: class = argmax of the 4-pixel image.
     struct Toy;
@@ -478,6 +1100,36 @@ mod tests {
 
         fn input_len(&self) -> usize {
             4
+        }
+    }
+
+    /// Frame-capable toy: class = spike count % 10, one logit = count.
+    /// `delay_ms` simulates a slow accelerator for backpressure tests.
+    struct FrameToy {
+        shape: (usize, usize, usize),
+        delay_ms: u64,
+    }
+
+    impl Backend for FrameToy {
+        fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)> {
+            Ok((0, image.to_vec()))
+        }
+
+        fn input_len(&self) -> usize {
+            self.shape.0 * self.shape.1 * self.shape.2
+        }
+
+        fn infer_frame(&mut self, frame: &SpikeFrame)
+                       -> Result<(usize, Vec<f32>)> {
+            if self.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.delay_ms));
+            }
+            let count = frame.count();
+            Ok((count % 10, vec![count as f32]))
+        }
+
+        fn frame_shape(&self) -> Option<(usize, usize, usize)> {
+            Some(self.shape)
         }
     }
 
@@ -499,13 +1151,25 @@ mod tests {
         let resp = c.infer(8, &[0.1]).unwrap();
         assert!(resp.get("error").is_some());
 
-        // Stats reflect the traffic.
+        // Stats reflect the traffic, including the latency summary.
         let resp = c
             .request(&Json::obj(vec![("cmd", Json::str("stats"))]))
             .unwrap();
         let stats = resp.get("stats").unwrap();
         assert_eq!(stats.get("requests").unwrap().as_usize(), Some(1));
         assert_eq!(stats.get("errors").unwrap().as_usize(), Some(1));
+        let lat = stats.get("latency").expect("latency summary");
+        assert_eq!(lat.get("window").unwrap().as_usize(), Some(1));
+        assert!(lat.get("p99_us").unwrap().as_f64().unwrap()
+                >= lat.get("p50_us").unwrap().as_f64().unwrap());
+
+        // Dense-only backend refuses events mode. Scoped so the client
+        // drops (and its connection thread exits) before shutdown
+        // joins the connection threads.
+        {
+            let mut c2 = Client::connect(&addr.to_string()).unwrap();
+            assert!(c2.start_events(WindowPolicy::Count(4)).is_err());
+        }
 
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
@@ -587,6 +1251,7 @@ mod tests {
         assert_eq!(totals.requests, 32);
         assert_eq!(stats.requests(), 32);
         assert_eq!(stats.pool.per_replica().len(), 4);
+        assert_eq!(stats.latency().count, 32);
 
         let mut c = Client::connect(&addr).unwrap();
         let resp = c
@@ -598,6 +1263,166 @@ mod tests {
             .and_then(|r| r.as_arr())
             .expect("per-replica stats present");
         assert_eq!(replicas.len(), 4);
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// Events mode end to end over the single-pipeline server: binary
+    /// handshake, count-windowed ingestion, ordered replies, summary.
+    #[test]
+    fn events_mode_end_to_end() {
+        let server = Server::new(FrameToy { shape: (4, 4, 2),
+                                            delay_ms: 0 });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        let shape = c.start_events(WindowPolicy::Count(5)).unwrap();
+        assert_eq!(shape, (4, 4, 2));
+        // 12 distinct events -> windows of 5/5, then a flushed 2.
+        let events: Vec<DvsEvent> = (0..12u32)
+            .map(|i| DvsEvent {
+                x: (i % 4) as u16,
+                y: (i / 4 % 4) as u16,
+                c: (i % 2) as u16,
+                t: i,
+            })
+            .collect();
+        c.send_events(&events[..7]).unwrap();
+        c.send_events(&events[7..]).unwrap();
+        let (replies, summary) = c.finish_events().unwrap();
+        assert_eq!(summary.windows, 3);
+        assert_eq!(summary.served, 3);
+        assert_eq!(summary.shed, 0);
+        assert_eq!(summary.events, 12);
+        let classes: Vec<(u32, usize)> = replies
+            .iter()
+            .map(|r| match r {
+                EventReply::Window { window_id, class, logits, .. } => {
+                    assert_eq!(logits.len(), 1);
+                    (*window_id, *class)
+                }
+                other => panic!("unexpected reply {other:?}"),
+            })
+            .collect();
+        // Windows arrive in order; distinct events -> count = class.
+        assert_eq!(classes, vec![(0, 5), (1, 5), (2, 2)]);
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// Request/response usage: a finished reply streams back while the
+    /// client sends nothing further (the idle poll, not the next
+    /// batch, delivers it).
+    #[test]
+    fn events_reply_streams_while_client_idle() {
+        let server = Server::new(FrameToy { shape: (4, 4, 2),
+                                            delay_ms: 0 });
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.start_events(WindowPolicy::Count(3)).unwrap();
+        let evs = [
+            DvsEvent { x: 0, y: 0, c: 0, t: 0 },
+            DvsEvent { x: 1, y: 1, c: 1, t: 1 },
+            DvsEvent { x: 2, y: 2, c: 0, t: 2 },
+        ];
+        c.send_events(&evs).unwrap();
+        // No flush, no further input: the reply must still arrive.
+        match c.read_event_reply().unwrap() {
+            EventReply::Window { window_id, class, .. } => {
+                assert_eq!(window_id, 0);
+                assert_eq!(class, 3);
+            }
+            other => panic!("expected window reply, got {other:?}"),
+        }
+        let (rest, summary) = c.finish_events().unwrap();
+        assert!(rest.is_empty());
+        assert_eq!(summary.served, 1);
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// A bounded queue + a slow backend: some windows are shed with an
+    /// explicit reply, none hang, and the stats count the shed.
+    #[test]
+    fn events_backpressure_sheds_explicitly() {
+        let server = Server::new(FrameToy { shape: (8, 8, 2),
+                                            delay_ms: 40 })
+            .with_queue(1, Duration::from_millis(1))
+            .with_queue_capacity(1);
+        let stats = server.stats();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.start_events(WindowPolicy::TimeUs(1000)).unwrap();
+        // 10 synthetic windows fired as fast as the socket takes them;
+        // with 40 ms per inference and queue depth 1, most must shed.
+        let events = synth_events(8, 8, 2, 10, 0.3, 1000, 5);
+        c.send_events(&events).unwrap();
+        let (replies, summary) = c.finish_events().unwrap();
+        assert_eq!(summary.windows, 10);
+        assert_eq!(summary.served + summary.shed, 10);
+        assert!(summary.shed >= 1, "expected shedding, got {summary:?}");
+        assert!(summary.served >= 1, "some window must still serve");
+        assert_eq!(stats.shed(), summary.shed);
+        let shed_replies = replies
+            .iter()
+            .filter(|r| matches!(r, EventReply::Shed { .. }))
+            .count() as u64;
+        // Shed frames may arrive before finish_events' reading starts
+        // only on this connection, so all of them are in `replies`.
+        assert_eq!(shed_replies, summary.shed);
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// Protocol violations (unsorted events) get an error reply and a
+    /// protocol_errors tick instead of a hang.
+    #[test]
+    fn events_protocol_violation_errors_out() {
+        let server = Server::new(FrameToy { shape: (4, 4, 2),
+                                            delay_ms: 0 });
+        let stats = server.stats();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.start_events(WindowPolicy::Count(100)).unwrap();
+        let unsorted = vec![
+            DvsEvent { x: 0, y: 0, c: 0, t: 10 },
+            DvsEvent { x: 1, y: 1, c: 1, t: 5 },
+        ];
+        c.send_events(&unsorted).unwrap();
+        match c.read_event_reply().unwrap() {
+            EventReply::Error { msg, .. } => {
+                assert!(msg.contains("unsorted"), "{msg}");
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        assert_eq!(stats.protocol_errors.load(Ordering::SeqCst), 1);
+
+        let mut c = Client::connect(&addr).unwrap();
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
     }

@@ -7,8 +7,10 @@
 //! DSE auto-tuner, the benches and the examples all construct the
 //! simulator stack through [`Session::builder`].
 //!
-//! ```no_run
+//! ```
+//! use sti_snn::codec::SpikeFrame;
 //! use sti_snn::session::{Session, Weights};
+//! use sti_snn::util::rng::Rng;
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let mut session = Session::builder()
@@ -16,10 +18,32 @@
 //!     .weights(Weights::Random { seed: 1000 })
 //!     .parallel_factors(&[4, 2])
 //!     .build()?;
-//! let shape = session.input_shape();
-//! # let frames = Vec::new();
+//! let (h, w, c) = session.input_shape();
+//! let mut rng = Rng::new(7);
+//! let frames = vec![SpikeFrame::random(h, w, c, 0.2, &mut rng)];
 //! let report = session.infer_batch(&frames);
+//! assert_eq!(report.predictions.len(), 1);
 //! println!("{:.0} FPS, {:.2} W", report.fps_steady, report.power_w);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Event-driven ingestion — the paper's native workload shape — skips
+//! the dense image entirely: sorted DVS-style address events are
+//! windowed into single-timestep frames by [`crate::codec::stream`]
+//! and classified per window:
+//!
+//! ```
+//! use sti_snn::codec::stream::{synth_events, WindowPolicy};
+//! use sti_snn::session::Session;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = Session::builder().model("scnn3").build()?;
+//! let (h, w, c) = session.input_shape();
+//! let events = synth_events(h, w, c, 2, 0.05, 1000, 7);
+//! let out = session.infer_events(&events,
+//!                                WindowPolicy::TimeUs(1000))?;
+//! assert_eq!(out.windows.len(), 2);
 //! # Ok(())
 //! # }
 //! ```
@@ -34,7 +58,8 @@
 //! * **host parallelism** — `intra_parallel` (row bands inside one
 //!   frame, bit-exact) alongside `replicas` (whole-frame replicas).
 //! * **serving shape** — `replicas` (N-pipeline pool behind one
-//!   queue) and the queue's batching policy.
+//!   queue), the queue's batching policy, and `queue_capacity` (the
+//!   bound behind event-streaming backpressure).
 //! * **auto-tuning** — `auto_tune` runs the `dse` calibrate→explore
 //!   recipe at build time and boots the winning configuration;
 //!   explicit `replicas`/`backend`/`parallel_factors` settings pin
@@ -42,8 +67,12 @@
 //!
 //! A session offers synchronous [`Session::infer`] /
 //! [`Session::infer_batch`] (returning the unified [`Report`]) and
-//! asynchronous [`Session::submit`] through the replica pool, plus
-//! [`Session::serve`] to expose the stack over TCP (paper Fig. 10).
+//! asynchronous [`Session::submit`] through the replica pool; event
+//! workloads enter through [`Session::infer_events`] (synchronous) or
+//! [`Session::submit_events`] (pooled, with explicit backpressure via
+//! `queue_capacity`); and [`Session::serve`] exposes the stack over
+//! TCP (paper Fig. 10) in both the dense JSON and the binary events
+//! protocol.
 
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
@@ -53,6 +82,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::arch::{self, Layer, NetworkSpec};
+use crate::codec::stream::{DvsEvent, EventStream, StreamStats,
+                           WindowPolicy};
 use crate::codec::SpikeFrame;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig,
                                    PipelineReport};
@@ -119,6 +150,30 @@ impl Inference {
             latency_us: r.latency_us,
         })
     }
+}
+
+/// Result of [`Session::infer_events`]: per-window classifications in
+/// window order, plus the ingestion counters.
+#[derive(Debug)]
+pub struct EventInference {
+    /// One [`Inference`] per completed window (including the flushed
+    /// trailing partial window, if any).
+    pub windows: Vec<Inference>,
+    /// Events accepted / windows formed by the stream.
+    pub stats: StreamStats,
+}
+
+/// Result of [`Session::submit_events`]: receivers for the windows
+/// accepted by the pool, in window order, plus backpressure accounting.
+#[derive(Debug, Default)]
+pub struct EventSubmission {
+    /// One receiver per window the pool accepted.
+    pub receivers: Vec<Receiver<PoolResult>>,
+    /// Windows shed because the bounded queue was full
+    /// ([`SessionBuilder::queue_capacity`]).
+    pub shed: u64,
+    /// Events accepted / windows formed by the stream.
+    pub stats: StreamStats,
 }
 
 /// The unified session report: cycles, memory traffic, energy,
@@ -247,6 +302,7 @@ pub struct SessionBuilder {
     auto_tune: Option<dse::AutoTuneOptions>,
     max_batch: Option<usize>,
     max_wait: Option<Duration>,
+    queue_cap: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -347,6 +403,16 @@ impl SessionBuilder {
     pub fn queue(mut self, max_batch: usize, max_wait: Duration) -> Self {
         self.max_batch = Some(max_batch.max(1));
         self.max_wait = Some(max_wait);
+        self
+    }
+
+    /// Bound the shared work queue's depth (pool + serving; 0 =
+    /// unbounded, the default). With a bound, event-streaming paths
+    /// ([`Session::submit_events`], the server's events mode) shed
+    /// windows explicitly when the queue is full instead of queueing
+    /// without limit.
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
         self
     }
 
@@ -463,6 +529,7 @@ impl SessionBuilder {
             replicas,
             max_batch: self.max_batch.unwrap_or(16),
             max_wait: self.max_wait.unwrap_or(Duration::from_millis(5)),
+            queue_cap: self.queue_cap.unwrap_or(0),
             tuned,
             pipeline,
             pool: None,
@@ -514,6 +581,7 @@ pub struct Session {
     replicas: usize,
     max_batch: usize,
     max_wait: Duration,
+    queue_cap: usize,
     tuned: Option<dse::CostPoint>,
     pipeline: Pipeline,
     pool: Option<ReplicaPool>,
@@ -594,6 +662,67 @@ impl Session {
         Ok(self.pool.as_ref().expect("pool started").submit(frame))
     }
 
+    /// An [`EventStream`] shaped for this session's input: sorted
+    /// address events in, single-timestep spike frames out.
+    pub fn event_stream(&self, policy: WindowPolicy)
+                        -> Result<EventStream> {
+        let (h, w, c) = self.input_shape();
+        EventStream::new(h, w, c, policy)
+    }
+
+    /// Classify a sorted event batch window by window (synchronous;
+    /// routes through the pool when >1 replica is configured). The
+    /// trailing partial window is flushed — streaming callers that
+    /// want open windows to stay open should drive an
+    /// [`Session::event_stream`] themselves.
+    pub fn infer_events(&mut self, events: &[DvsEvent],
+                        policy: WindowPolicy) -> Result<EventInference> {
+        let mut stream = self.event_stream(policy)?;
+        let mut windows = Vec::new();
+        for ev in events {
+            if stream.push(*ev)? {
+                windows.push(self.infer(stream.window().clone())?);
+            }
+        }
+        if let Some(f) = stream.flush() {
+            let frame = f.clone();
+            windows.push(self.infer(frame)?);
+        }
+        Ok(EventInference { windows, stats: stream.stats() })
+    }
+
+    /// Stream a sorted event batch into the replica pool: windows are
+    /// submitted as they complete (non-blocking), with explicit
+    /// backpressure when [`SessionBuilder::queue_capacity`] bounds the
+    /// queue — full-queue windows are counted in
+    /// [`EventSubmission::shed`] rather than queued without limit.
+    /// The trailing partial window is flushed.
+    pub fn submit_events(&mut self, events: &[DvsEvent],
+                         policy: WindowPolicy)
+                         -> Result<EventSubmission> {
+        self.start_pool()?;
+        let mut stream = self.event_stream(policy)?;
+        let pool = self.pool.as_ref().expect("pool started");
+        let mut sub = EventSubmission::default();
+        let submit = |frame: SpikeFrame, sub: &mut EventSubmission| {
+            match pool.try_submit(frame) {
+                Ok(rx) => sub.receivers.push(rx),
+                Err(_) => sub.shed += 1,
+            }
+        };
+        for ev in events {
+            if stream.push(*ev)? {
+                submit(stream.window().clone(), &mut sub);
+            }
+        }
+        if let Some(f) = stream.flush() {
+            let frame = f.clone();
+            submit(frame, &mut sub);
+        }
+        sub.stats = stream.stats();
+        Ok(sub)
+    }
+
     /// Spawn the replica pool now (it is otherwise created lazily on
     /// the first [`Session::submit`]) — call before timing submission
     /// throughput so worker startup stays out of the measurement.
@@ -604,8 +733,8 @@ impl Session {
     pub fn start_pool(&mut self) -> Result<()> {
         if self.pool.is_none() {
             let pipes = self.build_pipelines(self.replicas)?;
-            self.pool = Some(ReplicaPool::new(pipes, self.max_batch,
-                                              self.max_wait));
+            self.pool = Some(ReplicaPool::with_capacity(
+                pipes, self.max_batch, self.max_wait, self.queue_cap));
         }
         Ok(())
     }
@@ -623,11 +752,15 @@ impl Session {
         }
     }
 
-    /// Serve this session's stack over TCP (newline-JSON protocol,
-    /// paper Fig. 10): images are threshold-encoded to the pipeline's
-    /// post-encoder input shape and classified on the simulator.
-    /// Blocks until a `shutdown` command arrives; `on_bound` receives
-    /// the bound address (port 0 => ephemeral, for tests).
+    /// Serve this session's stack over TCP (paper Fig. 10). Two
+    /// protocols on one port: newline-JSON dense images
+    /// (threshold-encoded to the pipeline's post-encoder input shape)
+    /// and, per connection via `{"cmd": "events"}`, the binary
+    /// event-streaming protocol that feeds [`EventStream`] windows
+    /// straight to the pipeline (see the `server` module docs for the
+    /// byte layout). Blocks until a `shutdown` command arrives;
+    /// `on_bound` receives the bound address (port 0 => ephemeral,
+    /// for tests).
     pub fn serve(mut self, addr: &str,
                  on_bound: impl FnOnce(std::net::SocketAddr))
                  -> Result<()> {
@@ -644,7 +777,8 @@ impl Session {
         }
         let pooled = backends.len() > 1;
         let server = Server::with_backends(backends)
-            .with_queue(self.max_batch, self.max_wait);
+            .with_queue(self.max_batch, self.max_wait)
+            .with_queue_capacity(self.queue_cap);
         if pooled {
             server.serve_pool(addr, on_bound)
         } else {
@@ -674,10 +808,11 @@ impl Session {
     }
 }
 
-/// Serving backend over a simulator pipeline: images are
+/// Serving backend over a simulator pipeline. Dense images are
 /// threshold-encoded (at 0.5) to the pipeline's post-encoder input
-/// shape and classified end to end. `Send`, so the replica pool can
-/// spread copies across worker threads.
+/// shape; spike frames from the events protocol enter as-is — no
+/// dense decode anywhere on that path. `Send`, so the replica pool
+/// can spread copies across worker threads.
 struct FrameBackend {
     pipe: Pipeline,
     shape: (usize, usize, usize),
@@ -687,7 +822,20 @@ impl Backend for FrameBackend {
     fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)> {
         let (h, w, c) = self.shape;
         let frame = SpikeFrame::from_f32(h, w, c, image);
-        let rep = self.pipe.run(std::slice::from_ref(&frame));
+        self.infer_frame(&frame)
+    }
+
+    fn input_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    fn infer_frame(&mut self, frame: &SpikeFrame)
+                   -> Result<(usize, Vec<f32>)> {
+        anyhow::ensure!(
+            (frame.h, frame.w, frame.c) == self.shape,
+            "frame shape ({}, {}, {}) != session input {:?}",
+            frame.h, frame.w, frame.c, self.shape);
+        let rep = self.pipe.run(std::slice::from_ref(frame));
         let class = *rep
             .predictions
             .first()
@@ -695,8 +843,8 @@ impl Backend for FrameBackend {
         Ok((class, rep.logits.first().cloned().unwrap_or_default()))
     }
 
-    fn input_len(&self) -> usize {
-        self.shape.0 * self.shape.1 * self.shape.2
+    fn frame_shape(&self) -> Option<(usize, usize, usize)> {
+        Some(self.shape)
     }
 }
 
@@ -780,6 +928,66 @@ mod tests {
             .collect();
         assert_eq!(got, direct);
         assert!(s.pool_metrics().is_some());
+        s.shutdown();
+    }
+
+    /// Event windows classify identically to the same frames fed
+    /// densely — the session-level face of the events==dense property
+    /// (the full report-pinning version lives in tests/prop_stream.rs).
+    #[test]
+    fn infer_events_matches_dense_windows() {
+        use crate::codec::stream::frame_events;
+        let mut s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .build()
+            .unwrap();
+        let shape = s.input_shape();
+        let fs = frames(shape, 3, 9);
+        let want: Vec<usize> = fs
+            .iter()
+            .map(|f| s.infer(f.clone()).unwrap().class)
+            .collect();
+        // One window per frame: all of a frame's events share one
+        // timestamp, one window per 1000 µs.
+        let events: Vec<_> = fs
+            .iter()
+            .enumerate()
+            .flat_map(|(i, f)| frame_events(f, i as u32 * 1000))
+            .collect();
+        let out = s
+            .infer_events(&events, WindowPolicy::TimeUs(1000))
+            .unwrap();
+        let got: Vec<usize> =
+            out.windows.iter().map(|i| i.class).collect();
+        assert_eq!(got, want);
+        assert_eq!(out.stats.windows, 3);
+        assert_eq!(out.stats.events, events.len() as u64);
+    }
+
+    /// submit_events routes windows through the pool; a bounded queue
+    /// sheds explicitly rather than queueing without limit.
+    #[test]
+    fn submit_events_round_trips_and_bounds() {
+        use crate::codec::stream::synth_events;
+        let mut s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .replicas(2)
+            .queue(4, Duration::from_millis(2))
+            .build()
+            .unwrap();
+        let (h, w, c) = s.input_shape();
+        let events = synth_events(h, w, c, 4, 0.1, 1000, 11);
+        let sub = s
+            .submit_events(&events, WindowPolicy::TimeUs(1000))
+            .unwrap();
+        assert_eq!(sub.shed, 0, "unbounded queue never sheds");
+        assert_eq!(sub.receivers.len(), 4);
+        for rx in &sub.receivers {
+            assert!(rx.recv().unwrap().prediction.is_some());
+        }
+        assert_eq!(sub.stats.windows, 4);
         s.shutdown();
     }
 

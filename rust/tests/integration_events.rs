@@ -1,0 +1,163 @@
+//! End-to-end events-mode serving: client -> binary wire protocol ->
+//! `EventStream` windowing -> pipeline -> logits, over a real TCP
+//! socket through `Session::serve`.
+//!
+//! The dense JSON protocol and the events protocol share one port and
+//! one backend; a window streamed as events must classify exactly like
+//! the same frame sent densely.
+
+use std::time::Duration;
+
+use sti_snn::codec::stream::{frame_events, DvsEvent, WindowPolicy};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::server::{Client, EventReply};
+use sti_snn::session::Session;
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+const WINDOW_US: u32 = 1000;
+
+fn frames(shape: (usize, usize, usize), n: usize, seed: u64)
+          -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.15,
+                                    &mut rng))
+        .collect()
+}
+
+/// Frame i's events at timestamp i*WINDOW_US (frame == window).
+fn events_of(fs: &[SpikeFrame]) -> Vec<DvsEvent> {
+    fs.iter()
+        .enumerate()
+        .flat_map(|(i, f)| frame_events(f, i as u32 * WINDOW_US))
+        .collect()
+}
+
+#[test]
+fn events_mode_classifies_like_dense_over_tcp() {
+    // Reference results from a local session with the same recipe.
+    let build = || {
+        Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .queue(4, Duration::from_millis(2))
+            .build()
+            .unwrap()
+    };
+    let mut reference = build();
+    let shape = reference.input_shape();
+    let fs = frames(shape, 3, 42);
+    let want: Vec<(usize, Vec<f32>)> = fs
+        .iter()
+        .map(|f| {
+            let inf = reference.infer(f.clone()).unwrap();
+            (inf.class, inf.logits)
+        })
+        .collect();
+
+    // Serve an identical session over TCP.
+    let server_session = build();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server_session.serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    // Dense JSON request first: the two protocols share the port.
+    // Scoped so the client's connection thread exits before the
+    // server's shutdown join.
+    {
+        let mut dense = Client::connect(&addr).unwrap();
+        let resp = dense.infer(1, &fs[0].to_f32()).unwrap();
+        assert_eq!(resp.get("class").unwrap().as_usize(),
+                   Some(want[0].0), "dense protocol baseline");
+    }
+
+    // Events mode: handshake, stream, collect.
+    let mut c = Client::connect(&addr).unwrap();
+    let got_shape = c
+        .start_events(WindowPolicy::TimeUs(WINDOW_US))
+        .unwrap();
+    assert_eq!(got_shape, shape, "handshake reports the frame shape");
+    let events = events_of(&fs);
+    // Split the stream across batches mid-window to exercise framing.
+    let cut = events.len() / 3 + 1;
+    c.send_events(&events[..cut]).unwrap();
+    c.send_events(&events[cut..]).unwrap();
+    let (replies, summary) = c.finish_events().unwrap();
+
+    assert_eq!(summary.windows, fs.len() as u64);
+    assert_eq!(summary.served, fs.len() as u64);
+    assert_eq!(summary.shed, 0);
+    assert_eq!(summary.events, events.len() as u64);
+
+    let got: Vec<(u32, usize, Vec<f32>)> = replies
+        .into_iter()
+        .map(|r| match r {
+            EventReply::Window { window_id, class, logits, .. } => {
+                (window_id, class, logits)
+            }
+            other => panic!("unexpected reply {other:?}"),
+        })
+        .collect();
+    assert_eq!(got.len(), fs.len());
+    for (i, (wid, class, logits)) in got.iter().enumerate() {
+        assert_eq!(*wid, i as u32, "window order preserved");
+        assert_eq!(*class, want[i].0, "window {i}: class == dense");
+        assert_eq!(*logits, want[i].1, "window {i}: logits == dense");
+    }
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+}
+
+/// The replica-pool server path speaks events too (N > 1 replicas
+/// behind one port), and results stay identical to a single pipeline.
+#[test]
+fn events_mode_through_replica_pool() {
+    let mut reference = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .build()
+        .unwrap();
+    let shape = reference.input_shape();
+    let fs = frames(shape, 4, 7);
+    let want: Vec<usize> = fs
+        .iter()
+        .map(|f| reference.infer(f.clone()).unwrap().class)
+        .collect();
+
+    let server_session = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .replicas(2)
+        .queue(2, Duration::from_millis(2))
+        .build()
+        .unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        server_session.serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.start_events(WindowPolicy::TimeUs(WINDOW_US)).unwrap();
+    c.send_events(&events_of(&fs)).unwrap();
+    let (replies, summary) = c.finish_events().unwrap();
+    assert_eq!(summary.served, fs.len() as u64);
+    assert_eq!(summary.shed, 0);
+    let got: Vec<usize> = replies
+        .iter()
+        .map(|r| match r {
+            EventReply::Window { class, .. } => *class,
+            other => panic!("unexpected reply {other:?}"),
+        })
+        .collect();
+    assert_eq!(got, want, "pool replicas answer like one pipeline");
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.shutdown().unwrap();
+    h.join().unwrap().unwrap();
+}

@@ -1,0 +1,176 @@
+//! Events == dense equivalence for the streaming ingestion path.
+//!
+//! The paper's pipeline consumes the compressed & sorted spike
+//! representation; `codec::stream` builds it straight from sorted
+//! address events. These tests pin the contract that makes the
+//! event-driven serving path trustworthy: windows ingested event by
+//! event are **bit-identical** to the dense `SpikeFrame`s they encode,
+//! and therefore produce bit-identical spikes/logits and identical
+//! cycle / access / energy reports — for both compute backends, on a
+//! standard-conv net (scnn3) and the depthwise-separable vMobileNet.
+
+use sti_snn::arch;
+use sti_snn::codec::stream::{frame_events, DvsEvent, EventStream,
+                             WindowPolicy};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::session::{Report, Session};
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+const WINDOW_US: u32 = 1000;
+
+fn dense_frames(shape: (usize, usize, usize), n: usize, seed: u64)
+                -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.15,
+                                    &mut rng))
+        .collect()
+}
+
+/// Decompose dense frames into a sorted event stream: frame `i`'s
+/// events live in `[i*WINDOW_US, (i+1)*WINDOW_US)` with jittered
+/// timestamps (first event pinned to the window base so time-policy
+/// streaming reproduces the frame boundaries exactly).
+fn jittered_events(frames: &[SpikeFrame], seed: u64) -> Vec<DvsEvent> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    for (i, f) in frames.iter().enumerate() {
+        let base = i as u32 * WINDOW_US;
+        let mut evs = frame_events(f, base);
+        for e in evs.iter_mut() {
+            e.t = base + rng.below(WINDOW_US as usize) as u32;
+        }
+        evs.sort_by_key(|e| e.t);
+        if let Some(first) = evs.first_mut() {
+            first.t = base;
+        }
+        out.extend(evs);
+    }
+    out
+}
+
+/// Stream events through an `EventStream` and collect the windows.
+fn windows_of(events: &[DvsEvent], shape: (usize, usize, usize))
+              -> Vec<SpikeFrame> {
+    let mut s = EventStream::new(shape.0, shape.1, shape.2,
+                                 WindowPolicy::TimeUs(WINDOW_US))
+        .unwrap();
+    let mut out = Vec::new();
+    for e in events {
+        if s.push(*e).unwrap() {
+            out.push(s.window().clone());
+        }
+    }
+    if let Some(f) = s.flush() {
+        out.push(f.clone());
+    }
+    out
+}
+
+fn session_for(net: arch::NetworkSpec, backend: BackendKind) -> Session {
+    Session::builder()
+        .network(net)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+/// Every architectural number the dense path reports, the events path
+/// must reproduce exactly.
+fn assert_reports_identical(dense: &Report, events: &Report,
+                            ctx: &str) {
+    assert_eq!(dense.predictions, events.predictions, "{ctx}: class");
+    assert_eq!(dense.logits, events.logits, "{ctx}: logits");
+    assert_eq!(dense.layer_cycles, events.layer_cycles,
+               "{ctx}: layer cycles");
+    assert_eq!(dense.t_max, events.t_max, "{ctx}: t_max");
+    assert_eq!(dense.t_sum, events.t_sum, "{ctx}: t_sum");
+    assert_eq!(dense.total_cycles, events.total_cycles,
+               "{ctx}: total cycles");
+    assert_eq!(dense.ops_per_frame, events.ops_per_frame, "{ctx}: ops");
+    assert_eq!(dense.counters, events.counters, "{ctx}: access counters");
+    assert_eq!(dense.layer_energy, events.layer_energy, "{ctx}: energy");
+    assert_eq!(dense.codec_ratios, events.codec_ratios,
+               "{ctx}: codec ratios");
+    assert_eq!(dense.energy_per_frame_j, events.energy_per_frame_j,
+               "{ctx}: energy/frame");
+}
+
+/// The core property: streaming-ingested windows are bit-identical to
+/// the dense frames they encode, and the full pipeline report (spikes,
+/// logits, cycles, traffic, energy) is identical through either path —
+/// both backends x standard/DSC nets.
+#[test]
+fn event_windows_match_dense_path_bit_exact() {
+    for (name, net_fn) in [
+        ("scnn3", arch::scnn3 as fn() -> arch::NetworkSpec),
+        ("vmobilenet", arch::vmobilenet as fn() -> arch::NetworkSpec),
+    ] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel]
+        {
+            let ctx = format!("{name}/{backend}");
+            let mut dense_sess = session_for(net_fn(), backend);
+            let shape = dense_sess.input_shape();
+            let frames = dense_frames(shape, 2, 0xD15);
+            let events = jittered_events(&frames, 0xA5);
+
+            // 1. Windowing fidelity: the streamed windows ARE the
+            //    dense frames, bit for bit.
+            let windows = windows_of(&events, shape);
+            assert_eq!(windows.len(), frames.len(), "{ctx}: windows");
+            for (w, f) in windows.iter().zip(&frames) {
+                assert_eq!(w, f, "{ctx}: window bits");
+            }
+
+            // 2. Report equivalence end to end: same architectural
+            //    numbers whether frames arrived dense or as events.
+            let dense_rep = dense_sess.infer_batch(&frames);
+            let mut event_sess = session_for(net_fn(), backend);
+            let event_rep = event_sess.infer_batch(&windows);
+            assert_reports_identical(&dense_rep, &event_rep, &ctx);
+
+            // 3. The session-level API agrees with the manual stream.
+            let mut api_sess = session_for(net_fn(), backend);
+            let out = api_sess
+                .infer_events(&events, WindowPolicy::TimeUs(WINDOW_US))
+                .unwrap();
+            assert_eq!(out.stats.windows, frames.len() as u64, "{ctx}");
+            assert_eq!(out.stats.events, events.len() as u64, "{ctx}");
+            let api_classes: Vec<usize> =
+                out.windows.iter().map(|i| i.class).collect();
+            assert_eq!(api_classes, dense_rep.predictions,
+                       "{ctx}: infer_events classes");
+            for (inf, logits) in out.windows.iter()
+                .zip(&dense_rep.logits)
+            {
+                assert_eq!(&inf.logits, logits,
+                           "{ctx}: infer_events logits");
+            }
+        }
+    }
+}
+
+/// Count-policy windowing also reproduces frames exactly when the
+/// count matches each frame's event count (per-frame flush semantics).
+#[test]
+fn count_policy_reproduces_frames() {
+    let net = arch::scnn3();
+    let mut sess = session_for(net, BackendKind::WordParallel);
+    let shape = sess.input_shape();
+    let frames = dense_frames(shape, 1, 0xC0);
+    let events = frame_events(&frames[0], 0);
+    let mut s = EventStream::new(shape.0, shape.1, shape.2,
+                                 WindowPolicy::Count(events.len()))
+        .unwrap();
+    let mut done = false;
+    for e in &events {
+        done = s.push(*e).unwrap();
+    }
+    assert!(done);
+    assert_eq!(*s.window(), frames[0]);
+    let dense = sess.infer(frames[0].clone()).unwrap();
+    let via_events = sess.infer(s.window().clone()).unwrap();
+    assert_eq!(dense.class, via_events.class);
+    assert_eq!(dense.logits, via_events.logits);
+}

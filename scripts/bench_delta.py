@@ -12,6 +12,25 @@ matched by result name across all sets; frames/s = 1e9 / median_ns.
 Always exits 0 — this is an advisory CI step (machine-to-machine
 deltas are noisy); the table is for eyeballing regressions, the
 committed baseline for tracking the optimisation history.
+
+Refreshing the committed baseline (BENCH_sim.json at the repo root)
+---------------------------------------------------------------------
+The baseline must describe the CURRENT main, not a historical one —
+a stale baseline makes this step report the same "improvement"
+forever, which hides real regressions. Refresh it whenever a PR
+intentionally moves hot-path performance:
+
+    rm -f BENCH_sim.json          # BenchSet::write_json appends
+    STI_SNN_BENCH_JSON=$PWD/BENCH_sim.json \
+        cargo bench --bench bench_sim_engine
+
+Run on a quiet machine (no STI_SNN_BENCH_SMOKE — smoke runs are
+single-iteration and too noisy to be a baseline), eyeball the printed
+table against the previous baseline, note the provenance (which
+change, which box) in the set's "title" field, and commit the file in
+the same PR that moved the numbers. CI compares every push against it
+(build-test-bench job, "Bench delta vs committed baseline" step) but
+never gates on it.
 """
 
 import json
