@@ -24,10 +24,11 @@ fn frames(n: usize) -> Vec<SpikeFrame> {
 }
 
 /// Build the session, push every frame through its replica pool;
-/// returns (requests/s, per-request mean ns) and the predictions for
-/// cross-checking.
+/// returns (requests/s, per-request mean ns), the predictions for
+/// cross-checking, and the per-request end-to-end latencies (µs,
+/// queue wait + compute) for percentile reporting.
 fn pool_run(builder: SessionBuilder, fs: &[SpikeFrame])
-            -> (f64, f64, Vec<usize>, Session) {
+            -> (f64, f64, Vec<usize>, Vec<u64>, Session) {
     let mut session = builder.build().expect("session builds");
     session.start_pool().expect("pool starts");
     let t0 = Instant::now();
@@ -35,13 +36,28 @@ fn pool_run(builder: SessionBuilder, fs: &[SpikeFrame])
         .iter()
         .map(|f| session.submit(f.clone()).unwrap())
         .collect();
-    let preds: Vec<usize> = rxs
-        .into_iter()
-        .map(|rx| rx.recv().unwrap().prediction.unwrap())
-        .collect();
+    let mut preds = Vec::with_capacity(fs.len());
+    let mut lat_us = Vec::with_capacity(fs.len());
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        preds.push(r.prediction.unwrap());
+        lat_us.push(r.latency_us);
+    }
     let dt = t0.elapsed();
     let rps = fs.len() as f64 / dt.as_secs_f64();
-    (rps, dt.as_nanos() as f64 / fs.len() as f64, preds, session)
+    (rps, dt.as_nanos() as f64 / fs.len() as f64, preds, lat_us, session)
+}
+
+/// Print p50/p95/p99 of a per-request latency sample (µs).
+fn print_percentiles(label: &str, lat_us: &mut [u64]) {
+    lat_us.sort_unstable();
+    let pct = |p: f64| {
+        lat_us[((lat_us.len() - 1) as f64 * p).round() as usize]
+    };
+    println!("    -> {label} latency p50 {} / p95 {} / p99 {}",
+             fmt_ns(pct(0.50) as f64 * 1e3),
+             fmt_ns(pct(0.95) as f64 * 1e3),
+             fmt_ns(pct(0.99) as f64 * 1e3));
 }
 
 fn builder(replicas: usize, backend: BackendKind) -> SessionBuilder {
@@ -63,7 +79,7 @@ fn main() {
         "replica-pool serving (scnn3, word-parallel backend)");
     let fs = frames(n_requests);
 
-    let (rps1, ns1, preds1, s) =
+    let (rps1, ns1, preds1, mut lat1, s) =
         pool_run(builder(1, BackendKind::WordParallel), &fs);
     s.shutdown();
     set.add(BenchResult {
@@ -74,8 +90,30 @@ fn main() {
         min_ns: ns1,
     });
     println!("pool N=1: {rps1:.1} req/s ({}/req)", fmt_ns(ns1));
+    print_percentiles("pool N=1", &mut lat1);
 
-    let (rps_n, ns_n, preds_n, s) =
+    // The same pool on the serial layer schedule — the inter-layer
+    // row-streaming comparison (reports are bit-identical; only the
+    // execution schedule differs).
+    let (rps_ser, ns_ser, preds_ser, mut lat_ser, s) = pool_run(
+        builder(1, BackendKind::WordParallel).pipelined(false), &fs);
+    s.shutdown();
+    set.add(BenchResult {
+        name: "pool N=1 [serial schedule]".into(),
+        iters: n_requests,
+        mean_ns: ns_ser,
+        median_ns: ns_ser,
+        min_ns: ns_ser,
+    });
+    assert_eq!(preds1, preds_ser, "serial schedule changed predictions");
+    println!("pool N=1 serial schedule: {rps_ser:.1} req/s ({}/req)",
+             fmt_ns(ns_ser));
+    print_percentiles("pool N=1 serial", &mut lat_ser);
+    println!("    -> inter-layer row streaming {:.2}x over the serial \
+              schedule (layer workers need spare host cores; expect \
+              ~1x on a single-core host)", rps1 / rps_ser);
+
+    let (rps_n, ns_n, preds_n, mut lat_n, s) =
         pool_run(builder(big, BackendKind::WordParallel), &fs);
     s.shutdown();
     set.add(BenchResult {
@@ -86,13 +124,14 @@ fn main() {
         min_ns: ns_n,
     });
     println!("pool N={big}: {rps_n:.1} req/s ({}/req)", fmt_ns(ns_n));
+    print_percentiles(&format!("pool N={big}"), &mut lat_n);
     assert_eq!(preds1, preds_n, "replica pool changed predictions");
     println!("    -> throughput scaling {:.2}x with {big} replicas on \
               {cores} host cores", rps_n / rps1);
 
     // Reference: the accurate backend at N=1, to show the combined
     // word-parallel + replica win end to end.
-    let (rps_acc, ns_acc, preds_acc, s) =
+    let (rps_acc, ns_acc, preds_acc, _lat_acc, s) =
         pool_run(builder(1, BackendKind::Accurate), &fs);
     s.shutdown();
     set.add(BenchResult {
@@ -119,7 +158,7 @@ fn main() {
             ..Default::default()
         })
         .queue(4, Duration::from_millis(2));
-    let (rps_tuned, ns_tuned, preds_tuned, s) =
+    let (rps_tuned, ns_tuned, preds_tuned, mut lat_tuned, s) =
         pool_run(tuned_builder, &fs);
     let best = s.tuned().expect("auto-tuned session").clone();
     s.shutdown();
@@ -137,6 +176,7 @@ fn main() {
               {rps_tuned:.1} req/s ({}/req)",
              best.candidate.factors, best.candidate.replicas,
              best.candidate.backend, fmt_ns(ns_tuned));
+    print_percentiles("pool auto-tuned", &mut lat_tuned);
     let ratio = rps_tuned / rps_acc;
     println!("    -> auto-tuned vs default serve configuration: \
               {ratio:.2}x");

@@ -11,6 +11,7 @@
 
 use sti_snn::arch::{ConvLayer, ConvMode};
 use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::dataflow::ConvLatencyParams;
 use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
 use sti_snn::sim::BackendKind;
@@ -130,4 +131,52 @@ fn main() {
     band_scaling(&mut set, "standard 32x32 64->64 (cifar-scale)",
                  layer(ConvMode::Standard, 64, 64, 32, 1), 9, 0.15,
                  &mut rng);
+
+    pipeline_streaming(&mut rng);
+}
+
+/// Whole-pipeline wall latency on scnn5: the streamed inter-layer
+/// schedule (per-layer workers + bounded row channels) vs the serial
+/// layer loop. Reports are bit-identical by construction (pinned in
+/// tests/stream_exec.rs); the gate here re-checks predictions before
+/// timing. The speedup needs spare host cores — on a single-core host
+/// expect ~1x.
+fn pipeline_streaming(rng: &mut Rng) {
+    let mut set = BenchSet::new(
+        "inter-layer row streaming (scnn5 pipeline, word-parallel)");
+    let net = sti_snn::arch::scnn5();
+    let config = |pipelined: bool| PipelineConfig {
+        backend: BackendKind::WordParallel,
+        pipelined,
+        ..Default::default()
+    };
+    let mut streamed =
+        Pipeline::random(net.clone(), config(true)).unwrap();
+    let mut serial = Pipeline::random(net, config(false)).unwrap();
+    let shape = streamed.input_shape();
+    let frames: Vec<SpikeFrame> = (0..4)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.15, rng))
+        .collect();
+    let rp = streamed.run(&frames);
+    let rs = serial.run(&frames);
+    assert_eq!(rp.predictions, rs.predictions,
+               "schedules diverge on predictions");
+    assert_eq!(rp.layer_cycles, rs.layer_cycles,
+               "schedules diverge on cycle reports");
+
+    let r_streamed = set
+        .run("scnn5 4-frame batch [streamed]", || {
+            std::hint::black_box(streamed.run(&frames));
+        })
+        .clone();
+    let r_serial = set
+        .run("scnn5 4-frame batch [serial]", || {
+            std::hint::black_box(serial.run(&frames));
+        })
+        .clone();
+    println!("    -> streamed {:.2}x over serial ({} host cores)",
+             r_serial.median_ns / r_streamed.median_ns,
+             std::thread::available_parallelism()
+                 .map(|c| c.get())
+                 .unwrap_or(1));
 }

@@ -8,12 +8,14 @@
 //! STI_SNN_BENCH_JSON=out.json cargo bench --bench bench_stream
 //! ```
 
+use std::time::Instant;
+
 use sti_snn::codec::stream::{decode_events, encode_events, synth_events,
                              EventStream, WindowPolicy};
 use sti_snn::codec::SpikeFrame;
 use sti_snn::session::Session;
 use sti_snn::sim::BackendKind;
-use sti_snn::util::bench::BenchSet;
+use sti_snn::util::bench::{fmt_ns, smoke_mode, BenchResult, BenchSet};
 use sti_snn::util::rng::Rng;
 
 const WINDOW_US: u32 = 1000;
@@ -21,6 +23,7 @@ const WINDOW_US: u32 = 1000;
 fn main() {
     ingest_and_wire();
     events_vs_dense();
+    window_latency_percentiles();
 }
 
 /// Pure ingestion: sorted events -> word-packed windows, no inference.
@@ -105,4 +108,65 @@ fn events_vs_dense() {
               (ingestion overhead {:+.1}%)",
              fps(r_dense.median_ns), fps(r_events.median_ns),
              (r_events.median_ns / r_dense.median_ns - 1.0) * 100.0);
+}
+
+/// Per-window end-to-end latency distribution (ingest one window,
+/// classify it), streamed inter-layer schedule vs the serial layer
+/// loop. Predictions are cross-checked — the schedules are bit-exact;
+/// only wall-clock moves, and only when spare host cores exist.
+fn window_latency_percentiles() {
+    let mut set = BenchSet::new(
+        "per-window latency, streamed vs serial (scnn3, word-parallel)");
+    let n_windows = if smoke_mode() { 4 } else { 32 };
+    let mut all_classes: Vec<Vec<usize>> = Vec::new();
+    for (label, pipelined) in [("streamed", true), ("serial", false)] {
+        let mut session = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .pipelined(pipelined)
+            .build()
+            .unwrap();
+        let (h, w, c) = session.input_shape();
+        let events = synth_events(h, w, c, n_windows, 0.15, WINDOW_US, 33);
+        let mut stream = session
+            .event_stream(WindowPolicy::TimeUs(WINDOW_US))
+            .unwrap();
+        let mut lat_ns: Vec<f64> = Vec::new();
+        let mut classes = Vec::new();
+        let mut classify = |session: &mut Session, frame: SpikeFrame| {
+            let t = Instant::now();
+            let inf = session.infer(frame).unwrap();
+            lat_ns.push(t.elapsed().as_nanos() as f64);
+            classes.push(inf.class);
+        };
+        for e in &events {
+            if stream.push(*e).unwrap() {
+                let frame = stream.window().clone();
+                classify(&mut session, frame);
+            }
+        }
+        if let Some(f) = stream.flush() {
+            let frame = f.clone();
+            classify(&mut session, frame);
+        }
+        drop(classify);
+        lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            lat_ns[((lat_ns.len() - 1) as f64 * p).round() as usize]
+        };
+        println!("window latency [{label}]: p50 {} / p95 {} / p99 {} \
+                  ({} windows)",
+                 fmt_ns(pct(0.50)), fmt_ns(pct(0.95)), fmt_ns(pct(0.99)),
+                 lat_ns.len());
+        set.add(BenchResult {
+            name: format!("window latency [{label}]"),
+            iters: lat_ns.len(),
+            mean_ns: lat_ns.iter().sum::<f64>() / lat_ns.len() as f64,
+            median_ns: pct(0.50),
+            min_ns: lat_ns[0],
+        });
+        all_classes.push(classes);
+    }
+    assert_eq!(all_classes[0], all_classes[1],
+               "streamed and serial schedules diverged on predictions");
 }

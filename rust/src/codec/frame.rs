@@ -207,6 +207,53 @@ impl SpikeFrame {
                 src.h * src.w * src.c);
     }
 
+    /// Number of `u64` words that carry one row's `w * c` bits
+    /// LSB-aligned — the sizing contract for the row buffers that
+    /// [`SpikeFrame::row_words_into`] fills (inter-layer streaming
+    /// channels size their recycled buffers with this).
+    pub fn row_words(&self) -> usize {
+        (self.w * self.c).div_ceil(64)
+    }
+
+    /// Extract row `y`'s `w * c` bits, LSB-aligned, into `dst`,
+    /// overwriting the first [`SpikeFrame::row_words`] words —
+    /// allocation-free. The producer side of the streamed inter-layer
+    /// row channels (a row is not word-aligned inside the flat bit
+    /// buffer, so this is a shifted word walk like `pixel_words`).
+    pub fn row_words_into(&self, y: usize, dst: &mut [u64]) {
+        let n = self.w * self.c;
+        let pos = y * n;
+        let nw = n.div_ceil(64);
+        debug_assert!(y < self.h);
+        debug_assert!(dst.len() >= nw);
+        for (i, d) in dst.iter_mut().enumerate().take(nw) {
+            let bit = pos + i * 64;
+            let (word, off) = (bit / 64, bit % 64);
+            let mut w = self.bits[word] >> off;
+            if off > 0 {
+                if let Some(&hi) = self.bits.get(word + 1) {
+                    w |= hi << (64 - off);
+                }
+            }
+            let take = (n - i * 64).min(64);
+            if take < 64 {
+                w &= (1u64 << take) - 1;
+            }
+            *d = w;
+        }
+    }
+
+    /// OR an LSB-aligned row payload (as produced by
+    /// [`SpikeFrame::row_words_into`]) into row `y` — the consumer side
+    /// of the streamed row channels, staging received rows into the
+    /// next layer's input frame.
+    pub fn or_row_words(&mut self, y: usize, src: &[u64]) {
+        let n = self.w * self.c;
+        debug_assert!(y < self.h);
+        debug_assert!(src.len() >= n.div_ceil(64));
+        or_bits(&mut self.bits, y * n, src, n);
+    }
+
     /// Total spike count.
     pub fn count(&self) -> usize {
         self.bits.iter().map(|w| w.count_ones() as usize).sum()
@@ -231,6 +278,22 @@ mod tests {
         assert!(f.get(0, 0, 0) && f.get(3, 4, 2) && f.get(1, 2, 1));
         assert!(!f.get(0, 0, 1));
         assert_eq!(f.count(), 3);
+    }
+
+    #[test]
+    fn row_words_roundtrip_every_row() {
+        // Odd w*c so rows straddle word boundaries at every offset.
+        let mut rng = Rng::new(41);
+        for (w, c) in [(5usize, 3usize), (7, 9), (3, 64), (4, 33)] {
+            let src = SpikeFrame::random(6, w, c, 0.4, &mut rng);
+            let mut buf = vec![0u64; src.row_words()];
+            let mut dst = SpikeFrame::zeros(6, w, c);
+            for y in 0..src.h {
+                src.row_words_into(y, &mut buf);
+                dst.or_row_words(y, &buf);
+            }
+            assert_eq!(dst, src, "w={w} c={c}");
+        }
     }
 
     #[test]

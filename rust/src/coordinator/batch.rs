@@ -3,7 +3,9 @@
 //!
 //! The TCP server and the replica pool enqueue work items; consumer
 //! threads drain them in batches (larger batches amortise the pipeline
-//! fill, Eq. 11). The queue is generic over the item type so the same
+//! fill, Eq. 11 — and, on the streamed executor, keep several frames
+//! in flight across the per-layer workers of one `Pipeline::run`
+//! call). The queue is generic over the item type so the same
 //! structure backs both the simulator-facing [`Request`] queue and the
 //! server's in-flight job queue. Multiple consumers may drain one
 //! queue concurrently — that is exactly how the replica pool shares

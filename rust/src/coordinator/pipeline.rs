@@ -6,10 +6,17 @@
 //! timing of Eq. (10): after the pipe fills, a new frame completes
 //! every `T_max` (bottleneck layer) cycles.
 //!
-//! The simulator runs layers *functionally in sequence* per frame (the
-//! result is identical — the handshake only affects timing) and applies
-//! the pipeline overlap in the cycle accounting, which the integration
-//! tests cross-check against `dataflow::pipeline_latency`.
+//! With `pipelined` on the executor *runs* that schedule: one worker
+//! thread per layer, connected by bounded row channels
+//! (`sim::fifo::row_channel`) carrying word-packed completed output
+//! rows into the next layer's staged input — a frame flows through all
+//! layers concurrently, exactly as Fig. 9 overlaps them in time. The
+//! serial schedule remains (`pipelined: false`, or single-layer nets)
+//! and both produce bit-identical reports: every cycle/op/traffic
+//! charge goes through the same engine code, only interleaved
+//! differently in wall-clock time, and the totals are order-independent
+//! sums. The integration tests cross-check the cycle accounting
+//! against `dataflow::pipeline_latency` (Eq. 10).
 
 use crate::arch::NetworkSpec;
 use crate::codec::{EventCodec, SpikeFrame};
@@ -18,6 +25,7 @@ use crate::sim::backend::BackendKind;
 use crate::sim::energy::{EnergyModel, EnergyReport};
 use crate::sim::engine::{build_engines, random_sources, EngineConfig,
                          LayerEngine, LayerResult, LayerWeights};
+use crate::sim::fifo::{row_channel, RowReceiver, RowSender};
 use crate::sim::memory::AccessCounter;
 use crate::sim::resources::{ResourceModel, ResourceReport};
 use crate::sim::{cycles_to_ms, CLK_HZ};
@@ -28,7 +36,15 @@ pub struct PipelineConfig {
     pub timesteps: usize,
     pub timing: ConvLatencyParams,
     /// Layer-wise pipelining on (Eq. 10) or off (frames serialised).
+    /// The single knob: it selects both the cycle-accounting formula
+    /// AND the execution schedule (streamed per-layer workers vs the
+    /// serial layer loop). Reports are bit-identical either way.
     pub pipelined: bool,
+    /// Depth (rows in flight) of each inter-layer row channel when the
+    /// streamed schedule runs. Any value >= 1 is deadlock-free; deeper
+    /// channels absorb burstier producers. Host-side only — no effect
+    /// on any architectural report.
+    pub channel_capacity: usize,
     pub energy: EnergyModel,
     pub resources: ResourceModel,
     /// Functional compute backend for every engine (bit-exact across
@@ -45,6 +61,7 @@ impl Default for PipelineConfig {
             timesteps: 1,
             timing: ConvLatencyParams::optimized(),
             pipelined: true,
+            channel_capacity: 4,
             energy: EnergyModel::default(),
             resources: ResourceModel::default(),
             backend: BackendKind::Accurate,
@@ -123,6 +140,10 @@ pub struct Pipeline {
     /// zero-allocation hot path: engines write into these through
     /// [`LayerEngine::process_frame_into`]).
     bufs: Vec<SpikeFrame>,
+    /// Per-worker staged input frames for the streamed schedule
+    /// (worker `i > 0` assembles layer `i-1`'s output rows here as
+    /// they arrive off the row channel). Reused across batches.
+    stage_bufs: Vec<SpikeFrame>,
 }
 
 impl Pipeline {
@@ -149,9 +170,11 @@ impl Pipeline {
     pub fn from_engines(net: NetworkSpec, config: PipelineConfig,
                         engines: Vec<Box<dyn LayerEngine>>) -> Self {
         let codecs = engines.iter().map(|e| e.event_codec()).collect();
-        let bufs =
+        let bufs: Vec<_> =
             engines.iter().map(|_| SpikeFrame::zeros(0, 0, 0)).collect();
-        Self { net, config, engines, codecs, bufs }
+        let stage_bufs =
+            engines.iter().map(|_| SpikeFrame::zeros(0, 0, 0)).collect();
+        Self { net, config, engines, codecs, bufs, stage_bufs }
     }
 
     /// Convenience: random weights everywhere (hardware experiments).
@@ -166,8 +189,31 @@ impl Pipeline {
     /// Frames enter at the first accelerated layer: for nets with an
     /// encoder conv, the caller supplies the encoder's output spikes
     /// (from the PJRT runtime or a synthetic generator).
+    ///
+    /// With `pipelined` on (and more than one layer) the batch runs on
+    /// the streamed schedule — one worker per layer, bounded row
+    /// channels between them; otherwise layers run serially per frame.
+    /// Both schedules produce bit-identical reports.
     pub fn run(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
         assert!(!frames.is_empty(), "empty batch");
+        // Streamed execution needs every non-terminal layer to expose
+        // an output frame shape (the classifier head needs none — it
+        // is last).
+        let n = self.engines.len();
+        let streamable = self.config.pipelined
+            && n > 1
+            && self.engines[..n - 1].iter().all(|e| e.out_shape().is_some());
+        if streamable {
+            self.run_streamed(frames)
+        } else {
+            self.run_serial(frames)
+        }
+    }
+
+    /// The serial schedule: per frame, layers run one after another
+    /// through the reusable activation buffers. This is the
+    /// zero-allocation reference path (`tests/alloc_budget.rs`).
+    fn run_serial(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
         let mut layer_cycles = vec![0u64; self.engines.len()];
         let mut layer_names = vec![String::new(); self.engines.len()];
         let mut layer_energy = vec![EnergyReport::default();
@@ -219,9 +265,116 @@ impl Pipeline {
             }
         }
 
+        self.finish_report(frames.len() as u64, layer_cycles, layer_names,
+                           ops_total, counters, layer_energy, layer_vmem,
+                           codec_ratios, predictions, logits_all)
+    }
+
+    /// The streamed schedule (the executed Fig. 9): one scoped worker
+    /// thread per layer; worker `i` forwards each completed output row
+    /// over a bounded [`row_channel`] and worker `i+1` stages arrived
+    /// rows into its input frame, starting its own output rows as soon
+    /// as a kernel-height window is resident — `Kh`-row latency per
+    /// link, the overlap Eq. (10) models. Composes with intra-frame
+    /// bands (`intra_parallel`): bands run inside a layer worker, so
+    /// parallelism is rows x layers.
+    ///
+    /// Bit-exactness: every charge flows through the same engine row
+    /// routines as the serial schedule; per-layer tallies are merged
+    /// in layer order after the scope joins, so all report fields are
+    /// identical to [`Pipeline::run_serial`].
+    fn run_streamed(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
+        let n_engines = self.engines.len();
+        let out_shapes: Vec<Option<(usize, usize, usize)>> =
+            self.engines.iter().map(|e| e.out_shape()).collect();
+
+        // Link i carries engine i's output rows to engine i+1. The
+        // bound is enforced by `capacity` circulating row buffers.
+        let cap = self.config.channel_capacity.max(1);
+        let mut rxs: Vec<Option<RowReceiver>> = vec![None];
+        let mut txs: Vec<Option<RowSender>> =
+            Vec::with_capacity(n_engines);
+        for shape in out_shapes.iter().take(n_engines - 1) {
+            let (_, w, c) = shape.expect("checked streamable");
+            let (tx, rx) = row_channel(cap, (w * c).div_ceil(64));
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+        txs.push(None);
+
+        let engines = &mut self.engines;
+        let bufs = &mut self.bufs;
+        let stage_bufs = &mut self.stage_bufs;
+        let codecs = &self.codecs;
+        let energy = &self.config.energy;
+
+        let tallies: Vec<LayerTally> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n_engines);
+            let mut rx_iter = rxs.into_iter();
+            let mut tx_iter = txs.into_iter();
+            let workers = engines
+                .iter_mut()
+                .zip(bufs.iter_mut())
+                .zip(stage_bufs.iter_mut())
+                .zip(codecs.iter());
+            for (li, (((eng, out), stage), codec)) in workers.enumerate() {
+                let rx = rx_iter.next().expect("one rx slot per worker");
+                let tx = tx_iter.next().expect("one tx slot per worker");
+                let in_shape =
+                    if li == 0 { None } else { out_shapes[li - 1] };
+                handles.push(s.spawn(move || {
+                    stream_worker(li, eng.as_mut(), out, stage,
+                                  codec.as_ref(), rx, tx, in_shape,
+                                  frames, energy)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("layer worker panicked"))
+                .collect()
+        });
+
+        let mut layer_cycles = Vec::with_capacity(n_engines);
+        let mut layer_names = Vec::with_capacity(n_engines);
+        let mut layer_energy = Vec::with_capacity(n_engines);
+        let mut layer_vmem = Vec::with_capacity(n_engines);
+        let mut counters = AccessCounter::new();
+        let mut ops_total = 0u64;
+        let mut codec_ratios = Vec::new();
+        let mut predictions = Vec::new();
+        let mut logits_all = Vec::new();
+        for t in tallies {
+            layer_cycles.push(t.cycles);
+            layer_names.push(t.name);
+            layer_energy.push(t.energy);
+            layer_vmem.push(t.vmem);
+            if let Some(r) = t.codec_ratio {
+                codec_ratios.push(r);
+            }
+            ops_total += t.ops;
+            counters.merge(&t.counters);
+            for (class, logits) in t.classified {
+                predictions.push(class);
+                logits_all.push(logits);
+            }
+        }
+        self.finish_report(frames.len() as u64, layer_cycles, layer_names,
+                           ops_total, counters, layer_energy, layer_vmem,
+                           codec_ratios, predictions, logits_all)
+    }
+
+    /// Fold per-layer tallies into the batch report (shared by both
+    /// schedules — the Eq. (10) cycle model lives here).
+    #[allow(clippy::too_many_arguments)]
+    fn finish_report(&self, n: u64, layer_cycles: Vec<u64>,
+                     layer_names: Vec<String>, ops_total: u64,
+                     counters: AccessCounter,
+                     layer_energy: Vec<EnergyReport>,
+                     layer_vmem: Vec<usize>, codec_ratios: Vec<f64>,
+                     predictions: Vec<usize>, logits: Vec<Vec<f32>>)
+                     -> PipelineReport {
         let t_max = layer_cycles.iter().copied().max().unwrap_or(0);
         let t_sum: u64 = layer_cycles.iter().sum();
-        let n = frames.len() as u64;
         // Eq. (10) when pipelined; pure serialisation otherwise.
         let total_cycles = if self.config.pipelined {
             n * t_max + (t_sum - t_max)
@@ -247,7 +400,7 @@ impl Pipeline {
             layer_vmem_bytes: layer_vmem,
             codec_ratios,
             predictions,
-            logits: logits_all,
+            logits,
             resources,
             pes: self.net.total_pes(),
         }
@@ -257,6 +410,113 @@ impl Pipeline {
     /// delegates to [`NetworkSpec::accel_input_shape`]).
     pub fn input_shape(&self) -> (usize, usize, usize) {
         self.net.accel_input_shape()
+    }
+}
+
+/// Everything one layer worker accumulates over a batch — merged into
+/// the report in layer order after the scope joins, making the
+/// streamed report deterministic and identical to the serial one.
+struct LayerTally {
+    name: String,
+    /// One-frame cycles (frame 0 — identical every frame).
+    cycles: u64,
+    energy: EnergyReport,
+    vmem: usize,
+    codec_ratio: Option<f64>,
+    ops: u64,
+    counters: AccessCounter,
+    /// Classifier outputs in frame order (classifier layers only).
+    classified: Vec<(usize, Vec<f32>)>,
+}
+
+/// Body of one layer worker thread of the streamed schedule.
+///
+/// Per frame: receive input rows (worker 0 reads the batch frame
+/// directly; later workers stage rows arriving off `rx`), hand each to
+/// the engine's row entry point, and forward every completed output
+/// row over `tx`. A buffer is recycled *before* the row is processed,
+/// so the consumer never holds more than one in-flight buffer — with
+/// the acyclic worker chain that makes any channel capacity >= 1
+/// deadlock-free.
+#[allow(clippy::too_many_arguments)]
+fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
+                 out: &mut SpikeFrame, stage: &mut SpikeFrame,
+                 codec: Option<&EventCodec>, rx: Option<RowReceiver>,
+                 tx: Option<RowSender>,
+                 in_shape: Option<(usize, usize, usize)>,
+                 frames: &[SpikeFrame], energy: &EnergyModel)
+                 -> LayerTally {
+    let mut tally = LayerTally {
+        name: format!("{}{li}{}", eng.kind(), eng.label_detail()),
+        cycles: 0,
+        energy: EnergyReport::default(),
+        vmem: 0,
+        codec_ratio: None,
+        ops: 0,
+        counters: AccessCounter::new(),
+        classified: Vec::new(),
+    };
+    for (fi, frame) in frames.iter().enumerate() {
+        if let Some((h, w, c)) = eng.out_shape() {
+            out.reset(h, w, c);
+        }
+        eng.begin_frame(li == 0);
+        let mut sent = 0usize;
+        if let Some(rx) = &rx {
+            let (h, w, c) = in_shape.expect("upstream shape known");
+            stage.reset(h, w, c);
+            for y in 0..h {
+                let buf =
+                    rx.recv().expect("upstream worker hung up mid-frame");
+                stage.or_row_words(y, &buf);
+                // Recycle before computing: progress at any capacity.
+                rx.recycle(buf);
+                let done = eng.process_row_into(stage, y, out);
+                forward_rows(&tx, out, &mut sent, done);
+            }
+        } else {
+            for y in 0..frame.h {
+                let done = eng.process_row_into(frame, y, out);
+                forward_rows(&tx, out, &mut sent, done);
+            }
+        }
+        let input: &SpikeFrame =
+            if rx.is_some() { &*stage } else { frame };
+        if fi == 0 {
+            // Inter-layer event stream accounting (first frame only —
+            // ratios are representative). The serial schedule computes
+            // this on the same fully-assembled input frame.
+            if let Some(codec) = codec {
+                tally.codec_ratio = Some(codec.stats(input).ratio());
+            }
+        }
+        let (res, step) = eng.finish_frame(input, out);
+        forward_rows(&tx, out, &mut sent, out.h);
+        if fi == 0 {
+            tally.cycles = step.cycles;
+            tally.energy = energy.dynamic(step.ops, &step.counters);
+            tally.vmem = eng.vmem_bytes();
+        }
+        tally.ops += step.ops;
+        tally.counters.merge(&step.counters);
+        if let LayerResult::Classified { class, logits } = res {
+            tally.classified.push((class, logits));
+        }
+    }
+    tally
+}
+
+/// Forward output rows `[*sent, done)` downstream as word-packed row
+/// payloads, blocking on channel backpressure.
+fn forward_rows(tx: &Option<RowSender>, out: &SpikeFrame,
+                sent: &mut usize, done: usize) {
+    let Some(tx) = tx else { return };
+    let done = done.min(out.h);
+    while *sent < done {
+        let mut buf = tx.acquire().expect("downstream worker hung up");
+        out.row_words_into(*sent, &mut buf);
+        tx.send(buf);
+        *sent += 1;
     }
 }
 

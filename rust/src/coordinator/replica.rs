@@ -11,6 +11,15 @@
 //! identical to a single pipeline (pinned by tests — the pipeline is
 //! stateless across frames).
 //!
+//! Each replica executes whatever layer schedule its
+//! [`PipelineConfig`](super::pipeline::PipelineConfig) selects: with
+//! `pipelined` (the default) every
+//! request runs on the streamed per-layer-worker executor inside its
+//! replica thread — the inter-layer row streaming propagates here
+//! automatically through `Pipeline::run`, composing replicas (across
+//! frames) x layer workers (within a frame) x row bands (within a
+//! layer).
+//!
 //! Per-replica counters aggregate in [`crate::metrics::PoolMetrics`].
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

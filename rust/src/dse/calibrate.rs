@@ -47,6 +47,12 @@ pub struct CalibrationConfig {
     /// host-ns/frame then reflects the serving configuration's band
     /// count (counter scales are band-invariant).
     pub intra_parallel: usize,
+    /// Whether the serving pipeline streams layers concurrently
+    /// (inter-layer workers). Pipelined, the steady-state host cost of
+    /// a frame is the *bottleneck* layer's time (workers overlap), so
+    /// the fit takes the max over probed layers; serial, it is the
+    /// sum. Counter scales are schedule-invariant.
+    pub pipelined: bool,
 }
 
 impl Default for CalibrationConfig {
@@ -60,6 +66,7 @@ impl Default for CalibrationConfig {
             timesteps: 1,
             backends: vec![BackendKind::Accurate, BackendKind::WordParallel],
             intra_parallel: 1,
+            pipelined: true,
         }
     }
 }
@@ -208,7 +215,8 @@ pub fn calibrate(net: &NetworkSpec, timing: &ConvLatencyParams,
     let (mut sim_weight, mut ana_weight) = (0.0f64, 0.0f64);
     let (mut sim_vmem, mut ana_vmem) = (0.0f64, 0.0f64);
     let (mut sim_out, mut ana_out) = (0.0f64, 0.0f64);
-    let mut host_ns = vec![0.0f64; cfg.backends.len()];
+    let mut host_sum = vec![0.0f64; cfg.backends.len()];
+    let mut host_max = vec![0.0f64; cfg.backends.len()];
     let mut probes = 0usize;
 
     for (i, c) in convs.iter().enumerate() {
@@ -224,7 +232,9 @@ pub fn calibrate(net: &NetworkSpec, timing: &ConvLatencyParams,
                 .with_intra_parallel(cfg.intra_parallel);
             let t0 = Instant::now();
             let (_, rep) = eng.run_frame(&input, off_chip);
-            host_ns[bi] += t0.elapsed().as_nanos() as f64;
+            let ns = t0.elapsed().as_nanos() as f64;
+            host_sum[bi] += ns;
+            host_max[bi] = host_max[bi].max(ns);
             if bi > 0 {
                 continue; // counters are backend-invariant (pinned)
             }
@@ -279,12 +289,13 @@ pub fn calibrate(net: &NetworkSpec, timing: &ConvLatencyParams,
         vmem_scale: ratio(sim_vmem, ana_vmem),
         output_scale: ratio(sim_out, ana_out),
         op_activity: ratio(sim_ops, ana_ops),
-        // Summed across layers: the host cost of pushing one frame
-        // through every accelerated conv of the pipeline.
+        // Pipelined serving overlaps layer workers, so the steady
+        // state is bottleneck-bound: fit the max over probed layers.
+        // Serial serving pays every layer in turn: fit the sum.
         host_ns_per_frame: cfg
             .backends
             .iter()
-            .zip(&host_ns)
+            .zip(if cfg.pipelined { &host_max } else { &host_sum })
             .map(|(&b, &ns)| (b, ns))
             .collect(),
     }

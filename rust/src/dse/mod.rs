@@ -101,6 +101,11 @@ pub struct AutoTuneOptions {
     /// calibration probes run the same way so the fitted host-ns/frame
     /// (and thus the chosen backend/replica split) matches what boots.
     pub intra_parallel: usize,
+    /// Whether the served pipelines stream layers concurrently
+    /// (`PipelineConfig::pipelined`, the default). Drives how the
+    /// host-ns/frame fit aggregates per-layer probe times: bottleneck
+    /// max when pipelined, sum when serial.
+    pub pipelined: bool,
 }
 
 impl Default for AutoTuneOptions {
@@ -114,6 +119,7 @@ impl Default for AutoTuneOptions {
             timesteps: 1,
             rate: CalibrationConfig::default().rate,
             intra_parallel: 1,
+            pipelined: true,
         }
     }
 }
@@ -130,6 +136,7 @@ pub fn auto_tune(net: &NetworkSpec, opts: &AutoTuneOptions)
             rate: opts.rate,
             timesteps: opts.timesteps,
             intra_parallel: opts.intra_parallel,
+            pipelined: opts.pipelined,
             ..Default::default()
         }),
         timing,

@@ -92,6 +92,15 @@ fn usage() {
          \x20                                        engine (scoped\n\
          \x20                                        threads; bit-exact\n\
          \x20                                        reports; default 1)\n\
+         \x20 --no-pipelined       run/serve/explore serial layer\n\
+         \x20                                        schedule: run each\n\
+         \x20                                        layer to completion\n\
+         \x20                                        instead of\n\
+         \x20                                        streaming rows\n\
+         \x20                                        between layer\n\
+         \x20                                        workers (bit-exact\n\
+         \x20                                        reports; default\n\
+         \x20                                        is pipelined)\n\
          \x20 --timesteps T        all               inference timesteps\n\
          \x20                                        (default 1)\n\
          \x20 --frames N           run/table4/figs   frames per run\n\
@@ -167,13 +176,15 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
         "optimize" => &["model", "timesteps", "pe-budget"],
         "explore" => &["model", "timesteps", "rate", "pe-budget",
                        "max-replicas", "no-calibrate", "report",
-                       "intra-parallel"],
+                       "intra-parallel", "no-pipelined"],
         "run" => &["model", "timesteps", "frames", "rate", "backend",
-                   "intra-parallel", "events", "window", "windows"],
+                   "intra-parallel", "no-pipelined", "events", "window",
+                   "windows"],
         "serve" => &["model", "timesteps", "rate", "backend", "addr",
                      "replicas", "synthetic", "auto-tune", "pe-budget",
                      "max-replicas", "max-batch", "max-wait-ms",
-                     "intra-parallel", "events", "queue-cap"],
+                     "intra-parallel", "no-pipelined", "events",
+                     "queue-cap"],
         "gen-events" => &["model", "out", "windows", "rate", "window-us",
                           "seed"],
         _ => COMMON,
@@ -530,6 +541,7 @@ fn cost_model_for(args: &Args, net: &arch::NetworkSpec, timesteps: usize)
             rate,
             timesteps,
             intra_parallel: args.get_usize("intra-parallel", 1),
+            pipelined: !args.has("no-pipelined"),
             ..Default::default()
         });
     }
@@ -637,6 +649,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         .backend(backend)
         .timesteps(t)
         .intra_parallel(intra)
+        .pipelined(!args.has("no-pipelined"))
         .build()?;
     if args.has("events") {
         // `--events` immediately followed by another --flag parses as
@@ -757,6 +770,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             .model(name)
             .timesteps(t)
             .intra_parallel(args.get_usize("intra-parallel", 1))
+            .pipelined(!args.has("no-pipelined"))
             .queue(max_batch, max_wait)
             .queue_capacity(queue_cap);
         if let Some(b) = backend {
@@ -781,6 +795,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                 timesteps: t,
                 rate: args.get_f64("rate", defaults.rate),
                 intra_parallel: args.get_usize("intra-parallel", 1),
+                pipelined: !args.has("no-pipelined"),
             });
         }
         let session = builder.build()?;

@@ -345,7 +345,14 @@ impl SessionBuilder {
         self
     }
 
-    /// Layer-wise pipelining on (Eq. 10, default) or off (serialised).
+    /// Layer-wise pipelining on (default) or off. The single knob for
+    /// inter-layer parallelism: it selects both the Eq. (10) cycle
+    /// accounting AND the execution schedule — on, frames stream
+    /// through one worker per layer connected by bounded row channels;
+    /// off, layers run serially per frame. Reports are bit-identical
+    /// either way (pinned by `tests/prop_session.rs`); only host
+    /// wall-clock changes. Composes with [`SessionBuilder::intra_parallel`]
+    /// (bands within a layer worker) for rows x layers parallelism.
     pub fn pipelined(mut self, pipelined: bool) -> Self {
         self.pipelined = Some(pipelined);
         self
@@ -460,9 +467,11 @@ impl SessionBuilder {
         if let Some(opts) = &self.auto_tune {
             let mut opts = opts.clone();
             opts.timesteps = timesteps;
-            // Probe with the band count the session will serve with,
-            // so the fitted host-ns/frame matches what boots.
+            // Probe with the band count and pipelining mode the
+            // session will serve with, so the fitted host-ns/frame
+            // matches what boots.
             opts.intra_parallel = self.intra_parallel.unwrap_or(1);
+            opts.pipelined = self.pipelined.unwrap_or(true);
             if let Some(r) = self.replicas {
                 opts.max_replicas = r;
             }
@@ -512,6 +521,7 @@ impl SessionBuilder {
             resources: self.resources.unwrap_or_default(),
             backend,
             intra_parallel: self.intra_parallel.unwrap_or(1),
+            ..PipelineConfig::default()
         };
 
         let sources: Vec<LayerWeights> = match (&weights, &artifact) {

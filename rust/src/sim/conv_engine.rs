@@ -206,32 +206,61 @@ impl Band {
     fn run(&mut self, layer: &ConvLayer, weights: &ConvWeights,
            neuron: &mut NeuronBand<'_>, input: &SpikeFrame,
            off_chip: bool, field_cycles: u64, incremental: bool,
-           external_out: Option<&mut SpikeFrame>) {
-        let Band { y0, y1, lb, backend, psums, lane_ops, lane_cycles,
-                   out, step } = self;
-        let (y0, y1) = (*y0, *y1);
-        let wo = layer.out_w();
-        let (out, out_y0): (&mut SpikeFrame, usize) = match external_out {
-            Some(o) => (o, 0),
-            None => {
-                out.reset(y1 - y0, wo, layer.co);
-                (out, y0)
-            }
+           mut external_out: Option<&mut SpikeFrame>) {
+        if external_out.is_none() {
+            self.out.reset(self.y1 - self.y0, layer.out_w(), layer.co);
+        }
+        self.prime(layer, input, off_chip);
+        for oy in self.y0..self.y1 {
+            self.compute_row(layer, weights, neuron, input, off_chip,
+                             field_cycles, incremental, oy,
+                             external_out.as_deref_mut());
+        }
+        let spikes = match &external_out {
+            Some(o) => o.count(),
+            None => self.out.count(),
         };
+        self.step.out_spikes += spikes as u64;
+    }
 
+    /// Prime the band's line buffer: reset + the first Kh padded rows.
+    /// Charging mirrors the serial row schedule exactly: band 0
+    /// charges its whole prime (the serial prime); a later band
+    /// charges only its last prime row — serially that is the push
+    /// for output row y0 — and refills the Kh-1 overlap rows
+    /// uncharged, so each padded row is charged exactly once across
+    /// bands.
+    fn prime(&mut self, layer: &ConvLayer, input: &SpikeFrame,
+             off_chip: bool) {
+        let Band { y0, lb, step, .. } = self;
+        let y0 = *y0;
         lb.reset();
-        // Prime the line buffer with the band's first Kh padded rows.
-        // Charging mirrors the serial row schedule exactly: band 0
-        // charges its whole prime (the serial prime); a later band
-        // charges only its last prime row — serially that is the push
-        // for output row y0 — and refills the Kh-1 overlap rows
-        // uncharged, so each padded row is charged exactly once across
-        // bands.
         for py in y0..y0 + layer.kh {
             let charge = y0 == 0 || py + 1 == y0 + layer.kh;
             lb.ingest_row(input, py as isize, layer.pad,
                           &mut step.counters, off_chip, charge);
         }
+    }
+
+    /// Compute one output row `oy` of the band — ingest the row's new
+    /// input row (when past the primed window), slide the backend
+    /// window along the row, fire neurons, accumulate every
+    /// architectural cost into `self.step`. The loop body of
+    /// [`Band::run`], also driven row-at-a-time by the inter-layer
+    /// streaming executor (identical charge order either way).
+    #[allow(clippy::too_many_arguments)]
+    fn compute_row(&mut self, layer: &ConvLayer, weights: &ConvWeights,
+                   neuron: &mut NeuronBand<'_>, input: &SpikeFrame,
+                   off_chip: bool, field_cycles: u64, incremental: bool,
+                   oy: usize, external_out: Option<&mut SpikeFrame>) {
+        let Band { y0, lb, backend, psums, lane_ops, lane_cycles,
+                   out, step, .. } = self;
+        let y0 = *y0;
+        let wo = layer.out_w();
+        let (out, out_y0): (&mut SpikeFrame, usize) = match external_out {
+            Some(o) => (o, 0),
+            None => (out, y0),
+        };
 
         let n_ci = weights.n_ci();
         let groups = layer.co.div_ceil(layer.parallel);
@@ -240,53 +269,50 @@ impl Band {
         // identical totals, far fewer counter touches. §Perf).
         let weight_reads_per_field = (n_ci * layer.co) as u64;
 
-        for oy in y0..y1 {
-            if oy > y0 {
-                // Shift one new input row in (overlapped with compute —
-                // the fill pipeline of Fig. 7a; no cycle charge here).
-                lb.ingest_row(input, (oy + layer.kh - 1) as isize,
-                              layer.pad, &mut step.counters, off_chip,
-                              true);
-            }
-            backend.begin_row();
-            for ox in 0..wo {
-                lb.count_window_read(layer.kw, &mut step.counters);
-                // One incremental slide (or full repack on the
-                // fallback path) per receptive field, shared across
-                // the whole Co walk (§Perf).
-                if incremental {
-                    backend.advance(lb, ox);
-                } else {
-                    backend.begin_field(lb, ox);
-                }
-                step.counters.read(MemLevel::Bram, DataKind::Weight,
-                                   weight_reads_per_field);
-                backend.field_psums(weights, psums);
-                // Output channels in groups of `parallel` lanes; lanes
-                // run concurrently so the group costs one lane's time.
-                for g in 0..groups {
-                    for lane in 0..layer.parallel {
-                        let co = g * layer.parallel + lane;
-                        if co >= layer.co {
-                            break;
-                        }
-                        let (psum, ops) = psums[co];
-                        step.ops += ops;
-                        lane_ops[lane] += ops;
-                        lane_cycles[lane] += field_cycles;
-                        let idx = (oy * wo + ox) * layer.co + co;
-                        if neuron.fire(idx, co, psum,
-                                       &mut step.counters) {
-                            out.set(oy - out_y0, ox, co);
-                        }
-                    }
-                    step.cycles += field_cycles;
-                }
-                step.counters.write(MemLevel::Bram, DataKind::OutputSpike,
-                                    1);
-            }
+        if oy > y0 {
+            // Shift one new input row in (overlapped with compute —
+            // the fill pipeline of Fig. 7a; no cycle charge here).
+            lb.ingest_row(input, (oy + layer.kh - 1) as isize,
+                          layer.pad, &mut step.counters, off_chip,
+                          true);
         }
-        step.out_spikes += out.count() as u64;
+        backend.begin_row();
+        for ox in 0..wo {
+            lb.count_window_read(layer.kw, &mut step.counters);
+            // One incremental slide (or full repack on the
+            // fallback path) per receptive field, shared across
+            // the whole Co walk (§Perf).
+            if incremental {
+                backend.advance(lb, ox);
+            } else {
+                backend.begin_field(lb, ox);
+            }
+            step.counters.read(MemLevel::Bram, DataKind::Weight,
+                               weight_reads_per_field);
+            backend.field_psums(weights, psums);
+            // Output channels in groups of `parallel` lanes; lanes
+            // run concurrently so the group costs one lane's time.
+            for g in 0..groups {
+                for lane in 0..layer.parallel {
+                    let co = g * layer.parallel + lane;
+                    if co >= layer.co {
+                        break;
+                    }
+                    let (psum, ops) = psums[co];
+                    step.ops += ops;
+                    lane_ops[lane] += ops;
+                    lane_cycles[lane] += field_cycles;
+                    let idx = (oy * wo + ox) * layer.co + co;
+                    if neuron.fire(idx, co, psum,
+                                   &mut step.counters) {
+                        out.set(oy - out_y0, ox, co);
+                    }
+                }
+                step.cycles += field_cycles;
+            }
+            step.counters.write(MemLevel::Bram, DataKind::OutputSpike,
+                                1);
+        }
     }
 }
 
@@ -306,6 +332,21 @@ fn band_ranges(ho: usize, n: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Row-granular streaming progress — the inter-layer pipeline
+/// executor drives [`ConvEngine::stream_begin`] /
+/// [`ConvEngine::stream_row`] / [`ConvEngine::stream_finish`].
+#[derive(Default)]
+struct StreamState {
+    /// Whether this streamed frame's input arrives from DRAM.
+    off_chip: bool,
+    /// Line buffer primed (single-band row mode).
+    primed: bool,
+    /// Completed output-row prefix (single-band row mode).
+    next_oy: usize,
+    /// Next band to run (multi-band mode).
+    next_band: usize,
+}
+
 /// The engine itself. One instance per conv layer of the pipeline.
 pub struct ConvEngine {
     pub layer: ConvLayer,
@@ -320,6 +361,7 @@ pub struct ConvEngine {
     /// `tests/prop_backend.rs`).
     incremental: bool,
     bands: Vec<Band>,
+    stream: StreamState,
 }
 
 impl ConvEngine {
@@ -356,6 +398,7 @@ impl ConvEngine {
             backend_kind: kind,
             incremental: true,
             bands,
+            stream: StreamState::default(),
         }
     }
 
@@ -594,6 +637,139 @@ impl ConvEngine {
                                         self.layer.out_w(), self.layer.co);
         let rep = self.run_frame_into(input, off_chip_input, &mut out);
         (out, rep)
+    }
+
+    // ---- row-granular streaming (inter-layer pipeline executor) ----
+    //
+    // Three modes, picked by configuration:
+    // * T = 1, one band — true row streaming: output row `oy` is
+    //   computed the moment input row `oy + Kh - 1 - pad` lands
+    //   (paper SectionIV-E: the next layer starts once Kh rows are
+    //   buffered). Writes the executor's `out` frame directly.
+    // * T = 1, multi band — band streaming: each intra-frame band runs
+    //   as soon as its input rows are all in, emitting `[y0, y1)` at
+    //   once (the PR-4 band charge rule keeps reports bit-identical).
+    // * T > 1 — whole-frame fallback in `stream_finish`: every
+    //   timestep re-reads the full input, so there is nothing to
+    //   overlap at row granularity.
+    //
+    // Every charge (line-buffer ingest, window reads, weight reads,
+    // fires, cycle adds) happens through the same `Band::prime` /
+    // `Band::compute_row` bodies the serial schedule runs, only
+    // interleaved differently in time — counters and cycles are
+    // order-independent sums, so streamed reports are bit-identical.
+
+    /// Arm a new streamed frame.
+    pub(crate) fn stream_begin(&mut self, off_chip: bool) {
+        self.neuron.reset();
+        for band in self.bands.iter_mut() {
+            band.clear_run_state();
+        }
+        self.stream = StreamState { off_chip, ..StreamState::default() };
+    }
+
+    /// Input rows `0..=y` are valid; compute whatever became ready
+    /// into `out` (already reset to the output shape by the caller).
+    /// Returns the completed output-row prefix.
+    pub(crate) fn stream_row(&mut self, input: &SpikeFrame, y: usize,
+                             out: &mut SpikeFrame) -> usize {
+        let l = &self.layer;
+        assert_eq!((input.h, input.w, input.c), (l.in_h, l.in_w, l.ci),
+                   "input shape mismatch for {:?}", l.mode);
+        if self.timesteps > 1 {
+            return 0; // frame mode: all work happens in stream_finish
+        }
+        let last = y + 1 == l.in_h;
+        let field_cycles = self.field_cycles();
+        let incremental = self.incremental;
+        let ho = l.out_h();
+        let Self { layer, weights, neuron, bands, stream, .. } = self;
+
+        if bands.len() > 1 {
+            // Band mode: run each band once its input rows are all in.
+            let wo_co = layer.out_w() * layer.co;
+            while stream.next_band < bands.len() {
+                let band = &mut bands[stream.next_band];
+                // Highest padded row the band ingests; its input row is
+                // `need - pad` (past-the-frame rows are zero padding,
+                // complete only once the whole frame is in).
+                let need = band.y1 - 1 + layer.kh - 1;
+                let ready = last
+                    || (need >= layer.pad
+                        && need - layer.pad <= y
+                        && need - layer.pad < layer.in_h)
+                    || need < layer.pad;
+                if !ready {
+                    break;
+                }
+                let mut nb =
+                    neuron.band(band.y0 * wo_co, band.y1 * wo_co);
+                band.run(layer, weights, &mut nb, input,
+                         stream.off_chip, field_cycles, incremental,
+                         None);
+                out.or_rows_from(&band.out, band.y0);
+                stream.next_band += 1;
+            }
+            return match stream.next_band {
+                0 => 0,
+                n => bands[n - 1].y1,
+            };
+        }
+
+        // Row mode: the single band writes the executor's frame
+        // directly. Output row `oy` needs input rows up to
+        // `oy + kh - 1 - pad`; the last input row releases the
+        // remaining (bottom-padding) rows.
+        let ready = if last {
+            ho
+        } else {
+            (y + layer.pad + 2).saturating_sub(layer.kh).min(ho)
+        };
+        if stream.next_oy >= ready {
+            return stream.next_oy;
+        }
+        let band = &mut bands[0];
+        if !stream.primed {
+            band.prime(layer, input, stream.off_chip);
+            stream.primed = true;
+        }
+        let mut nb = neuron.band_all();
+        for oy in stream.next_oy..ready {
+            band.compute_row(layer, weights, &mut nb, input,
+                             stream.off_chip, field_cycles, incremental,
+                             oy, Some(&mut *out));
+        }
+        stream.next_oy = ready;
+        ready
+    }
+
+    /// Every input row has been presented; complete the frame and
+    /// return the merged report — bit-identical to
+    /// [`ConvEngine::run_frame_into`] on the same input.
+    pub(crate) fn stream_finish(&mut self, input: &SpikeFrame,
+                                out: &mut SpikeFrame) -> ConvRunReport {
+        if self.timesteps > 1 {
+            // Frame fallback: the timestep replay loop re-reads the
+            // fully staged input (resets `out` itself).
+            return self.run_frame_into(input, self.stream.off_chip, out);
+        }
+        // Defensive tail: complete any remainder as if the last input
+        // row just landed (no-op when the executor presented them all).
+        self.stream_row(input, self.layer.in_h - 1, out);
+        let mut rep = ConvRunReport::default();
+        if self.bands.len() > 1 {
+            for band in &mut self.bands {
+                rep.merge(&std::mem::take(&mut band.step));
+            }
+        } else {
+            let band = &mut self.bands[0];
+            // Spike count once per frame, after the last row — the
+            // same point the serial schedule charges it.
+            band.step.out_spikes += out.count() as u64;
+            rep = std::mem::take(&mut band.step);
+        }
+        self.record_lanes();
+        rep
     }
 }
 

@@ -101,14 +101,55 @@ pub trait LayerEngine: Send {
         String::new()
     }
 
+    /// Output frame shape `(h, w, c)`; `None` for classifier heads
+    /// whose result is logits, not a frame. The streamed executor
+    /// sizes inter-layer row channels and staging buffers from this.
+    fn out_shape(&self) -> Option<(usize, usize, usize)>;
+
+    /// Row-granular entry point, part 1: arm the engine for a new
+    /// streamed frame. `off_chip_input` marks whether the input
+    /// arrives from DRAM (first pipeline layer) or an on-chip FIFO.
+    /// The caller has already `reset` the `out` buffer it will pass to
+    /// [`LayerEngine::process_row_into`] to [`LayerEngine::out_shape`].
+    fn begin_frame(&mut self, off_chip_input: bool);
+
+    /// Row-granular entry point, part 2: input rows `0..=y` of
+    /// `input` are now valid; compute every output row that became
+    /// ready and write it into `out`. Returns the completed-output-row
+    /// prefix length (monotone non-decreasing across calls) so the
+    /// streamed executor knows which rows it may forward downstream.
+    /// Engines that only compute at frame granularity return 0 and do
+    /// all the work in [`LayerEngine::finish_frame`].
+    fn process_row_into(&mut self, input: &SpikeFrame, y: usize,
+                        out: &mut SpikeFrame) -> usize;
+
+    /// Row-granular entry point, part 3: every input row has been
+    /// presented; complete the frame (remaining rows, timestep
+    /// replays, classifier readout) and return the result plus the
+    /// full architectural cost of the frame — bit-identical to what
+    /// [`LayerEngine::process_frame_into`] reports for the same input.
+    fn finish_frame(&mut self, input: &SpikeFrame, out: &mut SpikeFrame)
+                    -> (LayerResult, LayerStep);
+
     /// Run all configured timesteps of one frame, writing the output
     /// frame (if any) into the caller-owned `out` buffer — the
-    /// zero-allocation hot path the pipeline drives (§Perf).
-    /// `off_chip_input` marks whether the input arrives from DRAM
-    /// (first pipeline layer) or an on-chip FIFO.
+    /// zero-allocation hot path the serial pipeline drives (§Perf).
+    ///
+    /// Provided as a trivial driver loop over the row-granular entry
+    /// points; engines with a faster whole-frame schedule (the conv
+    /// engine's intra-frame band threads) override it.
     fn process_frame_into(&mut self, input: &SpikeFrame,
                           off_chip_input: bool, out: &mut SpikeFrame)
-                          -> (LayerResult, LayerStep);
+                          -> (LayerResult, LayerStep) {
+        if let Some((h, w, c)) = self.out_shape() {
+            out.reset(h, w, c);
+        }
+        self.begin_frame(off_chip_input);
+        for y in 0..input.h {
+            self.process_row_into(input, y, out);
+        }
+        self.finish_frame(input, out)
+    }
 
     /// Allocating convenience wrapper around
     /// [`LayerEngine::process_frame_into`].
@@ -153,6 +194,26 @@ impl LayerEngine for ConvEngine {
         format!(":{:?}", self.layer.mode)
     }
 
+    fn out_shape(&self) -> Option<(usize, usize, usize)> {
+        Some((self.layer.out_h(), self.layer.out_w(), self.layer.co))
+    }
+
+    fn begin_frame(&mut self, off_chip_input: bool) {
+        self.stream_begin(off_chip_input);
+    }
+
+    fn process_row_into(&mut self, input: &SpikeFrame, y: usize,
+                        out: &mut SpikeFrame) -> usize {
+        self.stream_row(input, y, out)
+    }
+
+    fn finish_frame(&mut self, input: &SpikeFrame, out: &mut SpikeFrame)
+                    -> (LayerResult, LayerStep) {
+        (LayerResult::Frame, self.stream_finish(input, out))
+    }
+
+    /// Whole-frame override: the engine-owned schedule (one pass, or
+    /// scoped threads across intra-frame bands) — not the row loop.
     fn process_frame_into(&mut self, input: &SpikeFrame,
                           off_chip_input: bool, out: &mut SpikeFrame)
                           -> (LayerResult, LayerStep) {
@@ -179,19 +240,26 @@ impl LayerEngine for PoolEngine {
         "pool"
     }
 
-    fn process_frame_into(&mut self, input: &SpikeFrame,
-                          _off_chip_input: bool, out: &mut SpikeFrame)
-                          -> (LayerResult, LayerStep) {
+    fn out_shape(&self) -> Option<(usize, usize, usize)> {
+        Some((self.in_h / 2, self.in_w / 2, self.c))
+    }
+
+    fn begin_frame(&mut self, _off_chip_input: bool) {
+        self.stream_begin();
+    }
+
+    fn process_row_into(&mut self, input: &SpikeFrame, y: usize,
+                        out: &mut SpikeFrame) -> usize {
+        // Every odd input row completes one pooled output row; the
+        // charge order per row matches the whole-frame pass exactly.
+        self.stream_row(input, y, out)
+    }
+
+    fn finish_frame(&mut self, _input: &SpikeFrame, out: &mut SpikeFrame)
+                    -> (LayerResult, LayerStep) {
         // The pooling pass repeats per timestep (same OR result); the
         // traffic is charged once — the registers hold the window.
-        let t = self.timesteps() as u64;
-        let rep = self.run_into(input, out);
-        let step = LayerStep {
-            cycles: rep.cycles * t,
-            out_spikes: out.count() as u64,
-            ..rep
-        };
-        (LayerResult::Frame, step)
+        (LayerResult::Frame, self.stream_finish(out))
     }
 }
 
@@ -200,13 +268,26 @@ impl LayerEngine for FcEngine {
         "fc"
     }
 
-    fn process_frame_into(&mut self, input: &SpikeFrame,
-                          _off_chip_input: bool, _out: &mut SpikeFrame)
-                          -> (LayerResult, LayerStep) {
+    fn out_shape(&self) -> Option<(usize, usize, usize)> {
+        None // classifier head: logits, not a frame
+    }
+
+    fn begin_frame(&mut self, _off_chip_input: bool) {}
+
+    fn process_row_into(&mut self, input: &SpikeFrame, y: usize,
+                        _out: &mut SpikeFrame) -> usize {
+        // Consume upstream rows as they land: stage into the
+        // engine-owned flatten scratch; no output rows to report.
+        self.stage_row(input, y);
+        0
+    }
+
+    fn finish_frame(&mut self, _input: &SpikeFrame, _out: &mut SpikeFrame)
+                    -> (LayerResult, LayerStep) {
         // At T > 1 the same final spike map replays per timestep
-        // (upstream already accumulated) — SDT readout, flattened into
-        // engine-owned scratch.
-        let (class, logits, step) = self.classify_frame(input);
+        // (upstream already accumulated) — SDT readout over the staged
+        // scratch.
+        let (class, logits, step) = self.classify_flat();
         (LayerResult::Classified { class, logits }, step)
     }
 }
@@ -220,9 +301,23 @@ impl LayerEngine for WsEngine {
         format!(":{:?}", self.layer().mode)
     }
 
-    fn process_frame_into(&mut self, input: &SpikeFrame,
-                          _off_chip_input: bool, out: &mut SpikeFrame)
-                          -> (LayerResult, LayerStep) {
+    fn out_shape(&self) -> Option<(usize, usize, usize)> {
+        let l = self.layer();
+        Some((l.out_h(), l.out_w(), l.co))
+    }
+
+    fn begin_frame(&mut self, _off_chip_input: bool) {}
+
+    fn process_row_into(&mut self, _input: &SpikeFrame, _y: usize,
+                        _out: &mut SpikeFrame) -> usize {
+        // The WS baseline computes at frame granularity (its Table I
+        // access pattern is a whole-frame rewrite); rows pass through
+        // and the work happens in `finish_frame`.
+        0
+    }
+
+    fn finish_frame(&mut self, input: &SpikeFrame, out: &mut SpikeFrame)
+                    -> (LayerResult, LayerStep) {
         // WS charges its own (Table I) traffic pattern regardless of
         // where the input comes from.
         let step = self.run_frame_into(input, out);

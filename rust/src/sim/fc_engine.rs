@@ -140,16 +140,31 @@ impl FcEngine {
     /// `timesteps` copies.
     pub fn classify_frame(&mut self, frame: &SpikeFrame)
                           -> (usize, Vec<f32>, FcRunReport) {
-        assert_eq!(frame.h * frame.w * frame.c, self.n_in);
-        let mut i = 0;
         for y in 0..frame.h {
-            for x in 0..frame.w {
-                for ch in 0..frame.c {
-                    self.flat[i] = frame.get(y, x, ch);
-                    i += 1;
-                }
+            self.stage_row(frame, y);
+        }
+        self.classify_flat()
+    }
+
+    /// Row-granular streaming: stage input row `y` into the
+    /// engine-owned flatten scratch (channel-last order, matching
+    /// [`FcEngine::flatten`]). The inter-layer streaming executor
+    /// calls this as upstream rows land, then
+    /// [`FcEngine::classify_flat`] once the frame is complete.
+    pub fn stage_row(&mut self, frame: &SpikeFrame, y: usize) {
+        assert_eq!(frame.h * frame.w * frame.c, self.n_in);
+        let mut i = y * frame.w * frame.c;
+        for x in 0..frame.w {
+            for ch in 0..frame.c {
+                self.flat[i] = frame.get(y, x, ch);
+                i += 1;
             }
         }
+    }
+
+    /// Classify the staged flatten scratch — the SDT-readout tail of
+    /// [`FcEngine::classify_frame`], exposed for the streaming path.
+    pub fn classify_flat(&mut self) -> (usize, Vec<f32>, FcRunReport) {
         let (n_in, n_out, scale) = (self.n_in, self.n_out, self.scale);
         let mut total = vec![0f32; n_out];
         let mut rep = FcRunReport::default();

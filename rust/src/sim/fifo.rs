@@ -1,10 +1,26 @@
-//! Hardware FIFO model with capacity, backpressure, and occupancy stats.
+//! Hardware FIFO model with capacity, backpressure, and occupancy stats
+//! — plus the host-side bounded SPSC row channel the streamed
+//! inter-layer executor runs on.
 //!
-//! Used for the line buffer rows (Fig. 7a) and the inter-layer buffers
-//! of the streaming pipeline (SectionIV-E.1). `push` fails when full — the
-//! "request-response" handshake turns that into upstream stall cycles.
+//! [`Fifo`] is used for the line buffer rows (Fig. 7a) and the
+//! inter-layer buffers of the streaming pipeline (SectionIV-E.1).
+//! `push` fails when full — the "request-response" handshake turns
+//! that into upstream stall cycles.
+//!
+//! [`row_channel`] is the executed counterpart: a bounded channel of
+//! word-packed output rows between two layer workers. It is built from
+//! two unbounded `mpsc` legs — a data leg and a recycle leg pre-filled
+//! with `capacity` row buffers — so the bound is enforced by the
+//! circulating buffer count: a producer must receive a recycled buffer
+//! before it can send again. That makes the steady state
+//! allocation-free and the acyclic worker topology deadlock-free for
+//! any capacity >= 1 (a blocked producer always has a consumer that
+//! recycles; nothing waits on the producer to drain first).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct Fifo<T> {
@@ -91,9 +107,170 @@ impl<T> Fifo<T> {
     }
 }
 
+/// Shared occupancy/backpressure counters of one [`row_channel`] —
+/// the atomic analogue of [`FifoStats`], readable while the workers
+/// run and after the scope joins.
+#[derive(Debug, Default)]
+pub struct RowChannelStats {
+    /// Rows sent downstream.
+    pub sends: AtomicU64,
+    /// Rows received by the consumer.
+    pub recvs: AtomicU64,
+    /// Times the producer found no recycled buffer and had to block —
+    /// downstream backpressure (the executed analogue of
+    /// `FifoStats::full_rejects`).
+    pub backpressure_waits: AtomicU64,
+    /// High-water mark of rows in flight (<= capacity by construction).
+    pub max_occupancy: AtomicU64,
+    in_flight: AtomicU64,
+}
+
+impl RowChannelStats {
+    pub fn sends(&self) -> u64 {
+        self.sends.load(Ordering::Relaxed)
+    }
+
+    pub fn backpressure_waits(&self) -> u64 {
+        self.backpressure_waits.load(Ordering::Relaxed)
+    }
+
+    pub fn max_occupancy(&self) -> u64 {
+        self.max_occupancy.load(Ordering::Relaxed)
+    }
+}
+
+/// Producer half of a [`row_channel`].
+pub struct RowSender {
+    data: Sender<Vec<u64>>,
+    recycle: Receiver<Vec<u64>>,
+    stats: Arc<RowChannelStats>,
+}
+
+impl RowSender {
+    /// Take a free row buffer, blocking (and counting backpressure)
+    /// until the consumer recycles one. `None` when the consumer is
+    /// gone (it panicked — the thread scope will propagate).
+    pub fn acquire(&self) -> Option<Vec<u64>> {
+        match self.recycle.try_recv() {
+            Ok(buf) => Some(buf),
+            Err(TryRecvError::Empty) => {
+                self.stats
+                    .backpressure_waits
+                    .fetch_add(1, Ordering::Relaxed);
+                self.recycle.recv().ok()
+            }
+            Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Send one filled row buffer downstream.
+    pub fn send(&self, buf: Vec<u64>) -> bool {
+        let occ = self.stats.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.stats.max_occupancy.fetch_max(occ, Ordering::Relaxed);
+        self.stats.sends.fetch_add(1, Ordering::Relaxed);
+        self.data.send(buf).is_ok()
+    }
+
+    pub fn stats(&self) -> Arc<RowChannelStats> {
+        self.stats.clone()
+    }
+}
+
+/// Consumer half of a [`row_channel`].
+pub struct RowReceiver {
+    data: Receiver<Vec<u64>>,
+    recycle: Sender<Vec<u64>>,
+    stats: Arc<RowChannelStats>,
+}
+
+impl RowReceiver {
+    /// Receive the next row, blocking until the producer sends one.
+    /// `None` when the producer is gone.
+    pub fn recv(&self) -> Option<Vec<u64>> {
+        let buf = self.data.recv().ok()?;
+        self.stats.recvs.fetch_add(1, Ordering::Relaxed);
+        self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        Some(buf)
+    }
+
+    /// Hand a consumed buffer back to the producer.
+    pub fn recycle(&self, buf: Vec<u64>) {
+        // A gone producer just drops the buffer — not an error at
+        // end-of-stream.
+        let _ = self.recycle.send(buf);
+    }
+
+    pub fn stats(&self) -> Arc<RowChannelStats> {
+        self.stats.clone()
+    }
+}
+
+/// Build a bounded SPSC row channel: `capacity` circulating buffers
+/// of `words` zeroed `u64`s each (see [`crate::codec::SpikeFrame::row_words`]).
+pub fn row_channel(capacity: usize, words: usize)
+                   -> (RowSender, RowReceiver) {
+    let capacity = capacity.max(1);
+    let (data_tx, data_rx) = channel();
+    let (recycle_tx, recycle_rx) = channel();
+    for _ in 0..capacity {
+        recycle_tx
+            .send(vec![0u64; words])
+            .expect("receiver held locally");
+    }
+    let stats = Arc::new(RowChannelStats::default());
+    (
+        RowSender { data: data_tx, recycle: recycle_rx,
+                    stats: stats.clone() },
+        RowReceiver { data: data_rx, recycle: recycle_tx, stats },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn row_channel_bounds_in_flight_rows() {
+        let (tx, rx) = row_channel(2, 1);
+        // Producer thread pushes 8 rows through a depth-2 channel.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..8u64 {
+                    let mut buf = tx.acquire().unwrap();
+                    buf[0] = i;
+                    assert!(tx.send(buf));
+                }
+            });
+            for want in 0..8u64 {
+                let buf = rx.recv().unwrap();
+                assert_eq!(buf[0], want);
+                rx.recycle(buf);
+            }
+        });
+        let stats = rx.stats();
+        assert_eq!(stats.sends(), 8);
+        assert_eq!(stats.recvs.load(Ordering::Relaxed), 8);
+        assert!(stats.max_occupancy() <= 2,
+                "bound violated: {}", stats.max_occupancy());
+    }
+
+    #[test]
+    fn row_channel_capacity_one_makes_progress() {
+        let (tx, rx) = row_channel(1, 4);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..100 {
+                    let buf = tx.acquire().unwrap();
+                    tx.send(buf);
+                }
+            });
+            for _ in 0..100 {
+                let buf = rx.recv().unwrap();
+                rx.recycle(buf);
+            }
+        });
+        assert_eq!(rx.stats().sends(), 100);
+    }
 
     #[test]
     fn fifo_order() {

@@ -89,6 +89,22 @@ impl NeuronUnit {
         }
     }
 
+    /// One band view over global neuron indices `[start, end)` — the
+    /// streaming executor's per-band view when bands run one at a time
+    /// inside a layer worker (no concurrent split needed, so ranges
+    /// need not tile the layer the way [`NeuronUnit::bands`] requires).
+    pub fn band(&mut self, start: usize, end: usize) -> NeuronBand<'_> {
+        assert!(start <= end && end <= self.n_neurons,
+                "band out of range");
+        NeuronBand {
+            vth: self.vth,
+            scale: self.scale,
+            bias: &self.bias,
+            vmem: self.vmem.as_deref_mut().map(|v| &mut v[start..end]),
+            base: start,
+        }
+    }
+
     /// Split into per-band views over contiguous `[start, end)` global
     /// neuron index ranges (ascending, disjoint, starting at 0). Each
     /// band gets its own slice of the Vmem buffer, so intra-frame row

@@ -18,13 +18,22 @@ pub struct PoolEngine {
     /// Reusable OR-reduce register (the Fig. 7b register pair — and
     /// the zero-allocation hot path's only scratch).
     acc: SpikeVector,
+    /// Streamed-frame cost accumulator (row-granular entry points).
+    step: PoolRunReport,
 }
 
 impl PoolEngine {
     pub fn new(in_h: usize, in_w: usize, c: usize) -> Self {
         assert!(in_h % 2 == 0 && in_w % 2 == 0,
                 "OR pooling needs even dimensions");
-        Self { in_h, in_w, c, timesteps: 1, acc: SpikeVector::zeros(c) }
+        Self {
+            in_h,
+            in_w,
+            c,
+            timesteps: 1,
+            acc: SpikeVector::zeros(c),
+            step: PoolRunReport::default(),
+        }
     }
 
     /// Configure the inference timestep count (the pooling pass
@@ -57,20 +66,57 @@ impl PoolEngine {
         out.reset(ho, wo, self.c);
         let mut rep = PoolRunReport::default();
         for oy in 0..ho {
-            for ox in 0..wo {
-                // Fig. 7b: four vector reads, OR reduce, one write —
-                // word-level, into the reusable register.
-                input.vector_into(2 * oy, 2 * ox, &mut self.acc);
-                input.or_vector_into(2 * oy, 2 * ox + 1, &mut self.acc);
-                input.or_vector_into(2 * oy + 1, 2 * ox, &mut self.acc);
-                input.or_vector_into(2 * oy + 1, 2 * ox + 1,
-                                     &mut self.acc);
-                rep.counters.read(MemLevel::Bram, DataKind::InputSpike, 4);
-                out.set_vector(oy, ox, &self.acc);
-                rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
-                rep.cycles += 1; // one output vector per cycle
-            }
+            Self::pool_row(&mut self.acc, wo, input, oy, out, &mut rep);
         }
+        rep
+    }
+
+    /// One output row of the 2x2 OR pool — shared by the whole-frame
+    /// pass and the row-granular streaming path (identical charge
+    /// order, so the streamed report is bit-identical).
+    fn pool_row(acc: &mut SpikeVector, wo: usize, input: &SpikeFrame,
+                oy: usize, out: &mut SpikeFrame,
+                rep: &mut PoolRunReport) {
+        for ox in 0..wo {
+            // Fig. 7b: four vector reads, OR reduce, one write —
+            // word-level, into the reusable register.
+            input.vector_into(2 * oy, 2 * ox, acc);
+            input.or_vector_into(2 * oy, 2 * ox + 1, acc);
+            input.or_vector_into(2 * oy + 1, 2 * ox, acc);
+            input.or_vector_into(2 * oy + 1, 2 * ox + 1, acc);
+            rep.counters.read(MemLevel::Bram, DataKind::InputSpike, 4);
+            out.set_vector(oy, ox, acc);
+            rep.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
+            rep.cycles += 1; // one output vector per cycle
+        }
+    }
+
+    /// Row-granular streaming, part 1: arm a new frame.
+    pub(crate) fn stream_begin(&mut self) {
+        self.step = PoolRunReport::default();
+    }
+
+    /// Row-granular streaming, part 2: input row `y` is in; every odd
+    /// row completes one output row. Returns the completed output-row
+    /// prefix.
+    pub(crate) fn stream_row(&mut self, input: &SpikeFrame, y: usize,
+                             out: &mut SpikeFrame) -> usize {
+        assert_eq!((input.h, input.w, input.c),
+                   (self.in_h, self.in_w, self.c));
+        if y % 2 == 1 {
+            Self::pool_row(&mut self.acc, self.in_w / 2, input, y / 2,
+                           out, &mut self.step);
+        }
+        (y + 1) / 2
+    }
+
+    /// Row-granular streaming, part 3: the timestep replay multiplier
+    /// and spike count, exactly as the whole-frame path reports them.
+    pub(crate) fn stream_finish(&mut self, out: &SpikeFrame)
+                                -> PoolRunReport {
+        let mut rep = std::mem::take(&mut self.step);
+        rep.cycles *= self.timesteps as u64;
+        rep.out_spikes = out.count() as u64;
         rep
     }
 }

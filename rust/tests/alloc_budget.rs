@@ -112,6 +112,11 @@ fn steady_state_frame_hot_path_allocation_budget() {
         net,
         PipelineConfig {
             backend: BackendKind::WordParallel,
+            // The zero-allocation contract is the serial schedule's:
+            // the streamed executor spawns per-layer workers and row
+            // channels per batch by design (still O(layers), never
+            // per-pixel — but not zero).
+            pipelined: false,
             ..Default::default()
         },
     )

@@ -183,3 +183,55 @@ fn deployed_models_are_backend_invariant() {
         assert_eq!(ra.layer_energy, rw.layer_energy, "{}", net.name);
     }
 }
+
+/// The streamed inter-layer schedule is itself backend-invariant AND
+/// bit-identical to the serial layer loop on a deployed geometry:
+/// per-layer cycles, traffic, energy, predictions and logits all
+/// match; only the batch total differs (Eq. (10) vs N x t_sum).
+#[test]
+fn deployed_model_streamed_schedule_is_bit_exact_vs_serial() {
+    use sti_snn::arch;
+    let net = arch::scnn3();
+    for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        let mut serial = Pipeline::random(
+            net.clone(),
+            PipelineConfig {
+                pipelined: false,
+                backend,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut streamed = Pipeline::random(
+            net.clone(),
+            PipelineConfig {
+                pipelined: true,
+                channel_capacity: 2,
+                backend,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let shape = serial.input_shape();
+        let mut rng = Rng::new(77);
+        let frames: Vec<SpikeFrame> = (0..3)
+            .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
+                                        &mut rng))
+            .collect();
+        let rs = serial.run(&frames);
+        let rp = streamed.run(&frames);
+        assert_eq!(rp.predictions, rs.predictions, "{backend}");
+        assert_eq!(rp.logits, rs.logits, "{backend}");
+        assert_eq!(rp.layer_cycles, rs.layer_cycles, "{backend}");
+        assert_eq!(rp.t_max, rs.t_max, "{backend}");
+        assert_eq!(rp.t_sum, rs.t_sum, "{backend}");
+        assert_eq!(rp.ops_per_frame, rs.ops_per_frame, "{backend}");
+        assert_eq!(rp.counters, rs.counters, "{backend}");
+        assert_eq!(rp.layer_energy, rs.layer_energy, "{backend}");
+        assert_eq!(rp.codec_ratios, rs.codec_ratios, "{backend}");
+        let n = frames.len() as u64;
+        assert_eq!(rs.total_cycles, n * rs.t_sum, "{backend}");
+        assert_eq!(rp.total_cycles,
+                   n * rp.t_max + (rp.t_sum - rp.t_max), "{backend}");
+    }
+}

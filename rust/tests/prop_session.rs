@@ -421,3 +421,59 @@ fn session_backends_are_bit_exact_through_the_facade() {
     assert_eq!(a.ops_per_frame, b.ops_per_frame);
     assert_eq!(a.counters, b.counters);
 }
+
+/// The streamed per-layer-worker schedule (`pipelined(true)`, the
+/// default) and the serial layer loop (`pipelined(false)`) produce
+/// bit-identical architectural reports through the facade — only
+/// `total_cycles` differs, and only by the documented accounting
+/// (Eq. (10) streamed, N x t_sum serial) — across backends x conv
+/// modes (standard + DSC nets) x intra-frame band counts {1, 2, 4}.
+#[test]
+fn session_streamed_schedule_matches_serial_bit_exact() {
+    for net in [mini_net(), mini_dsc_net()] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+            for bands in [1usize, 2, 4] {
+                let build = |pipelined: bool| {
+                    Session::builder()
+                        .network(net.clone())
+                        .backend(backend)
+                        .intra_parallel(bands)
+                        .pipelined(pipelined)
+                        .build()
+                        .unwrap()
+                };
+                let mut serial = build(false);
+                let mut streamed = build(true);
+                let frames = random_frames(serial.input_shape(), 3, 81);
+                let rs = serial.infer_batch(&frames);
+                let rp = streamed.infer_batch(&frames);
+                let ctx = format!("{} {backend} bands={bands}",
+                                  net.name);
+                assert_eq!(rp.predictions, rs.predictions,
+                           "{ctx}: predictions");
+                assert_eq!(rp.logits, rs.logits, "{ctx}: logits");
+                assert_eq!(rp.layer_names, rs.layer_names,
+                           "{ctx}: layer names");
+                assert_eq!(rp.layer_cycles, rs.layer_cycles,
+                           "{ctx}: layer cycles");
+                assert_eq!(rp.layer_energy, rs.layer_energy,
+                           "{ctx}: energy");
+                assert_eq!(rp.layer_vmem_bytes, rs.layer_vmem_bytes,
+                           "{ctx}: vmem");
+                assert_eq!(rp.codec_ratios, rs.codec_ratios,
+                           "{ctx}: codec ratios");
+                assert_eq!(rp.t_max, rs.t_max, "{ctx}: t_max");
+                assert_eq!(rp.t_sum, rs.t_sum, "{ctx}: t_sum");
+                assert_eq!(rp.ops_per_frame, rs.ops_per_frame,
+                           "{ctx}: ops");
+                assert_eq!(rp.counters, rs.counters, "{ctx}: counters");
+                let n = frames.len() as u64;
+                assert_eq!(rs.total_cycles, n * rs.t_sum,
+                           "{ctx}: serial total");
+                assert_eq!(rp.total_cycles,
+                           n * rp.t_max + (rp.t_sum - rp.t_max),
+                           "{ctx}: streamed total (Eq. 10)");
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration tests for the streamed inter-layer executor: per-layer
+//! workers connected by bounded row channels (`coordinator::pipeline`).
+//!
+//! The contract under test is twofold:
+//!
+//! 1. **Bit-exactness** — the streamed schedule must reproduce every
+//!    architectural report of the serial layer loop (per-layer cycles,
+//!    ops, access traffic, energy, Vmem, compression ratios,
+//!    predictions, logits). Only `total_cycles` may differ, and only
+//!    by the documented accounting: Eq. (10) when pipelined, N x t_sum
+//!    when serial.
+//! 2. **Progress** — any channel capacity >= 1 completes (the recycle
+//!    leg guarantees the consumer never holds more than one buffer, so
+//!    a blocked producer always unblocks).
+//!
+//! A stress loop sweeps channel capacities around the interesting
+//! boundaries (1 row in flight, ~Kh rows, more rows than the frame
+//! has) x timesteps x intra-frame band counts. `STI_SNN_STRESS_ITERS`
+//! scales the iteration count for CI soak runs (default 1).
+
+use sti_snn::arch::{NetBuilder, NetworkSpec};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig,
+                                     PipelineReport};
+use sti_snn::dataflow::PipelineLatency;
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+fn mini_net() -> NetworkSpec {
+    NetBuilder::new("mini", (12, 12, 2))
+        .encoder(4, 3)
+        .conv(8, 3)
+        .pool()
+        .conv(8, 3)
+        .pool()
+        .fc(10)
+        .build()
+}
+
+fn random_frames(shape: (usize, usize, usize), n: usize, seed: u64)
+                 -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.25,
+                                    &mut rng))
+        .collect()
+}
+
+fn run_with(net: &NetworkSpec, config: PipelineConfig,
+            frames: &[SpikeFrame]) -> PipelineReport {
+    let mut p = Pipeline::random(net.clone(), config).unwrap();
+    p.run(frames)
+}
+
+/// Everything except the batch total (and its derived figures) must be
+/// bit-identical between the two schedules.
+fn assert_reports_match(a: &PipelineReport, b: &PipelineReport,
+                        ctx: &str) {
+    assert_eq!(a.predictions, b.predictions, "{ctx}: predictions");
+    assert_eq!(a.logits, b.logits, "{ctx}: logits");
+    assert_eq!(a.layer_names, b.layer_names, "{ctx}: layer names");
+    assert_eq!(a.layer_cycles, b.layer_cycles, "{ctx}: layer cycles");
+    assert_eq!(a.t_max, b.t_max, "{ctx}: t_max");
+    assert_eq!(a.t_sum, b.t_sum, "{ctx}: t_sum");
+    assert_eq!(a.ops_per_frame, b.ops_per_frame, "{ctx}: ops");
+    assert_eq!(a.counters, b.counters, "{ctx}: access counters");
+    assert_eq!(a.layer_energy, b.layer_energy, "{ctx}: energy");
+    assert_eq!(a.layer_vmem_bytes, b.layer_vmem_bytes, "{ctx}: vmem");
+    assert_eq!(a.codec_ratios, b.codec_ratios, "{ctx}: codec ratios");
+}
+
+/// Streamed cycle accounting is exactly `dataflow`'s Eq. (10) model
+/// applied to the measured per-layer cycles; the serial schedule pays
+/// the full sum per frame.
+#[test]
+fn streamed_total_cycles_follow_eq_10() {
+    let net = sti_snn::arch::scnn3();
+    let n_frames = 4u64;
+    let mut p =
+        Pipeline::random(net.clone(), PipelineConfig::default()).unwrap();
+    let shape = p.input_shape();
+    let frames = random_frames(shape, n_frames as usize, 5);
+    let rep = p.run(&frames);
+    let model = PipelineLatency {
+        per_layer: rep.layer_cycles.clone(),
+        t_max: rep.t_max,
+        t_sum: rep.t_sum,
+    };
+    assert_eq!(rep.t_max,
+               rep.layer_cycles.iter().copied().max().unwrap());
+    assert_eq!(rep.t_sum, rep.layer_cycles.iter().sum::<u64>());
+    assert_eq!(rep.total_cycles, model.total_cycles(n_frames),
+               "streamed batch must follow Eq. (10)");
+
+    let serial = run_with(&net,
+                          PipelineConfig {
+                              pipelined: false,
+                              ..Default::default()
+                          },
+                          &frames);
+    assert_reports_match(&rep, &serial, "eq10 scnn3");
+    assert_eq!(serial.total_cycles,
+               model.unpipelined_cycles(n_frames),
+               "serial batch pays the full per-frame sum");
+}
+
+/// The stress sweep: channel capacities {1, Kh, > rows} x timesteps
+/// {1, 2} x intra-frame bands {1, 2, 4} x both backends, every
+/// combination bit-identical to the serial schedule and free of
+/// deadlock. `STI_SNN_STRESS_ITERS` repeats the sweep with fresh
+/// random frames (CI soak).
+#[test]
+fn streamed_is_bit_exact_at_every_channel_capacity() {
+    let iters: u64 = std::env::var("STI_SNN_STRESS_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let net = mini_net();
+    for it in 0..iters {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel]
+        {
+            for timesteps in [1usize, 2] {
+                let shape = Pipeline::random(net.clone(),
+                                             PipelineConfig::default())
+                    .unwrap()
+                    .input_shape();
+                let frames = random_frames(shape, 3, 900 + it);
+                let serial = run_with(&net,
+                                      PipelineConfig {
+                                          pipelined: false,
+                                          backend,
+                                          timesteps,
+                                          ..Default::default()
+                                      },
+                                      &frames);
+                // 1 = tightest possible backpressure; 3 = one kernel
+                // height of context; 64 = deeper than any row count in
+                // the net (channels never block).
+                for cap in [1usize, 3, 64] {
+                    for bands in [1usize, 2, 4] {
+                        let streamed = run_with(
+                            &net,
+                            PipelineConfig {
+                                pipelined: true,
+                                channel_capacity: cap,
+                                backend,
+                                timesteps,
+                                intra_parallel: bands,
+                                ..Default::default()
+                            },
+                            &frames,
+                        );
+                        assert_reports_match(
+                            &streamed, &serial,
+                            &format!("it={it} {backend} T={timesteps} \
+                                      cap={cap} bands={bands}"));
+                    }
+                }
+            }
+        }
+    }
+}
