@@ -113,6 +113,19 @@ fn main() {
               schedule (layer workers need spare host cores; expect \
               ~1x on a single-core host)", rps1 / rps_ser);
 
+    // Row-channel accounting of one streamed batch on the primary
+    // pipeline: how hard each inter-layer link worked.
+    let mut probe = builder(1, BackendKind::WordParallel)
+        .build()
+        .expect("session builds");
+    let rep = probe.infer_batch(&fs);
+    for (i, s) in rep.channel_stats.iter().enumerate() {
+        println!("    link {i}: {} rows, {} backpressure wait(s), max \
+                  occupancy {}",
+                 s.sends, s.backpressure_waits, s.max_occupancy);
+    }
+    drop(probe);
+
     let (rps_n, ns_n, preds_n, mut lat_n, s) =
         pool_run(builder(big, BackendKind::WordParallel), &fs);
     s.shutdown();

@@ -108,6 +108,15 @@ fn events_vs_dense() {
               (ingestion overhead {:+.1}%)",
              fps(r_dense.median_ns), fps(r_events.median_ns),
              (r_events.median_ns / r_dense.median_ns - 1.0) * 100.0);
+
+    // Streamed-schedule row-channel accounting for one batch: sends,
+    // backpressure waits, and peak occupancy per inter-layer link.
+    let rep = session.infer_batch(&frames);
+    for (i, s) in rep.channel_stats.iter().enumerate() {
+        println!("    link {i}: {} rows, {} backpressure wait(s), max \
+                  occupancy {}",
+                 s.sends, s.backpressure_waits, s.max_occupancy);
+    }
 }
 
 /// Per-window end-to-end latency distribution (ingest one window,

@@ -18,6 +18,8 @@
 //! sums. The integration tests cross-check the cycle accounting
 //! against `dataflow::pipeline_latency` (Eq. 10).
 
+use std::sync::Arc;
+
 use crate::arch::NetworkSpec;
 use crate::codec::{EventCodec, SpikeFrame};
 use crate::dataflow::ConvLatencyParams;
@@ -25,10 +27,12 @@ use crate::sim::backend::BackendKind;
 use crate::sim::energy::{EnergyModel, EnergyReport};
 use crate::sim::engine::{build_engines, random_sources, EngineConfig,
                          LayerEngine, LayerResult, LayerWeights};
-use crate::sim::fifo::{row_channel, RowReceiver, RowSender};
+use crate::sim::fifo::{row_channel, ChannelSnapshot, RowReceiver,
+                       RowSender};
 use crate::sim::memory::AccessCounter;
 use crate::sim::resources::{ResourceModel, ResourceReport};
 use crate::sim::{cycles_to_ms, CLK_HZ};
+use crate::telemetry::TraceSink;
 
 /// Pipeline construction options.
 #[derive(Clone)]
@@ -53,6 +57,11 @@ pub struct PipelineConfig {
     /// Intra-frame row bands per conv engine (scoped worker threads;
     /// host-side speed only — reports are band-invariant). Default 1.
     pub intra_parallel: usize,
+    /// Telemetry span recorder shared with every engine, worker, and
+    /// row channel (None = tracing off, the default). Purely
+    /// observational — `tests/prop_telemetry.rs` pins that every
+    /// architectural report field is identical with tracing on.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for PipelineConfig {
@@ -66,6 +75,7 @@ impl Default for PipelineConfig {
             resources: ResourceModel::default(),
             backend: BackendKind::Accurate,
             intra_parallel: 1,
+            trace: None,
         }
     }
 }
@@ -102,6 +112,12 @@ pub struct PipelineReport {
     pub resources: ResourceReport,
     /// PE count of the design.
     pub pes: usize,
+    /// Per-link row-channel counters of the streamed schedule (link
+    /// `i` connects layer `i` to `i+1`; empty on the serial
+    /// schedule). Host-timing-dependent observability data — NOT an
+    /// architectural quantity, and excluded from every bit-exactness
+    /// comparison.
+    pub channel_stats: Vec<ChannelSnapshot>,
 }
 
 impl PipelineReport {
@@ -168,7 +184,10 @@ impl Pipeline {
     /// Assemble a pipeline from pre-built engines (the trait-level
     /// constructor: any [`LayerEngine`] impls, in layer order).
     pub fn from_engines(net: NetworkSpec, config: PipelineConfig,
-                        engines: Vec<Box<dyn LayerEngine>>) -> Self {
+                        mut engines: Vec<Box<dyn LayerEngine>>) -> Self {
+        for eng in engines.iter_mut() {
+            eng.set_trace(config.trace.clone());
+        }
         let codecs = engines.iter().map(|e| e.event_codec()).collect();
         let bufs: Vec<_> =
             engines.iter().map(|_| SpikeFrame::zeros(0, 0, 0)).collect();
@@ -230,7 +249,9 @@ impl Pipeline {
         let bufs = &mut self.bufs;
         let codecs = &self.codecs;
         let energy = &self.config.energy;
+        let trace = self.config.trace.as_deref();
         for (fi, frame) in frames.iter().enumerate() {
+            let frame_t0 = trace.map(|t| t.start());
             for li in 0..n_engines {
                 // Zero-copy chaining: engine li reads the previous
                 // layer's reusable buffer and writes its own.
@@ -248,8 +269,14 @@ impl Pipeline {
                     }
                 }
                 let off_chip = li == 0;
+                let layer_t0 = trace.map(|t| t.start());
                 let (res, step) =
                     eng.process_frame_into(input, off_chip, &mut cur[0]);
+                if let (Some(tr), Some(t0)) = (trace, layer_t0) {
+                    tr.record("layer", "serial", t0,
+                              [("layer", li as u64),
+                               ("frame", fi as u64)]);
+                }
                 if fi == 0 {
                     layer_cycles[li] = step.cycles;
                     layer_energy[li] = energy.dynamic(step.ops,
@@ -263,11 +290,16 @@ impl Pipeline {
                     logits_all.push(logits);
                 }
             }
+            if let (Some(tr), Some(t0)) = (trace, frame_t0) {
+                tr.record("frame", "serial", t0,
+                          [("frame", fi as u64), ("", 0)]);
+            }
         }
 
         self.finish_report(frames.len() as u64, layer_cycles, layer_names,
                            ops_total, counters, layer_energy, layer_vmem,
-                           codec_ratios, predictions, logits_all)
+                           codec_ratios, predictions, logits_all,
+                           Vec::new())
     }
 
     /// The streamed schedule (the executed Fig. 9): one scoped worker
@@ -291,12 +323,18 @@ impl Pipeline {
         // Link i carries engine i's output rows to engine i+1. The
         // bound is enforced by `capacity` circulating row buffers.
         let cap = self.config.channel_capacity.max(1);
+        let trace = &self.config.trace;
         let mut rxs: Vec<Option<RowReceiver>> = vec![None];
         let mut txs: Vec<Option<RowSender>> =
             Vec::with_capacity(n_engines);
-        for shape in out_shapes.iter().take(n_engines - 1) {
+        let mut link_stats = Vec::with_capacity(n_engines - 1);
+        for (li, shape) in
+            out_shapes.iter().take(n_engines - 1).enumerate()
+        {
             let (_, w, c) = shape.expect("checked streamable");
-            let (tx, rx) = row_channel(cap, (w * c).div_ceil(64));
+            let (mut tx, rx) = row_channel(cap, (w * c).div_ceil(64));
+            tx.set_trace(trace.clone(), li as u64);
+            link_stats.push(tx.stats());
             txs.push(Some(tx));
             rxs.push(Some(rx));
         }
@@ -322,10 +360,11 @@ impl Pipeline {
                 let tx = tx_iter.next().expect("one tx slot per worker");
                 let in_shape =
                     if li == 0 { None } else { out_shapes[li - 1] };
+                let trace = trace.clone();
                 handles.push(s.spawn(move || {
                     stream_worker(li, eng.as_mut(), out, stage,
                                   codec.as_ref(), rx, tx, in_shape,
-                                  frames, energy)
+                                  frames, energy, trace)
                 }));
             }
             handles
@@ -333,6 +372,10 @@ impl Pipeline {
                 .map(|h| h.join().expect("layer worker panicked"))
                 .collect()
         });
+        // Satellite: surface the per-link channel counters instead of
+        // dropping them with the senders.
+        let channel_stats: Vec<ChannelSnapshot> =
+            link_stats.iter().map(|s| s.snapshot()).collect();
 
         let mut layer_cycles = Vec::with_capacity(n_engines);
         let mut layer_names = Vec::with_capacity(n_engines);
@@ -360,7 +403,8 @@ impl Pipeline {
         }
         self.finish_report(frames.len() as u64, layer_cycles, layer_names,
                            ops_total, counters, layer_energy, layer_vmem,
-                           codec_ratios, predictions, logits_all)
+                           codec_ratios, predictions, logits_all,
+                           channel_stats)
     }
 
     /// Fold per-layer tallies into the batch report (shared by both
@@ -371,7 +415,8 @@ impl Pipeline {
                      counters: AccessCounter,
                      layer_energy: Vec<EnergyReport>,
                      layer_vmem: Vec<usize>, codec_ratios: Vec<f64>,
-                     predictions: Vec<usize>, logits: Vec<Vec<f32>>)
+                     predictions: Vec<usize>, logits: Vec<Vec<f32>>,
+                     channel_stats: Vec<ChannelSnapshot>)
                      -> PipelineReport {
         let t_max = layer_cycles.iter().copied().max().unwrap_or(0);
         let t_sum: u64 = layer_cycles.iter().sum();
@@ -403,6 +448,7 @@ impl Pipeline {
             logits,
             resources,
             pes: self.net.total_pes(),
+            channel_stats,
         }
     }
 
@@ -444,7 +490,8 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
                  codec: Option<&EventCodec>, rx: Option<RowReceiver>,
                  tx: Option<RowSender>,
                  in_shape: Option<(usize, usize, usize)>,
-                 frames: &[SpikeFrame], energy: &EnergyModel)
+                 frames: &[SpikeFrame], energy: &EnergyModel,
+                 trace: Option<Arc<TraceSink>>)
                  -> LayerTally {
     let mut tally = LayerTally {
         name: format!("{}{li}{}", eng.kind(), eng.label_detail()),
@@ -457,6 +504,10 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
         classified: Vec::new(),
     };
     for (fi, frame) in frames.iter().enumerate() {
+        // One span per (layer, frame) on this worker's own thread
+        // track — the inter-layer overlap is directly visible as
+        // overlapping spans across tracks in the exported trace.
+        let t0 = trace.as_ref().map(|t| t.start());
         if let Some((h, w, c)) = eng.out_shape() {
             out.reset(h, w, c);
         }
@@ -501,6 +552,10 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
         tally.counters.merge(&step.counters);
         if let LayerResult::Classified { class, logits } = res {
             tally.classified.push((class, logits));
+        }
+        if let (Some(tr), Some(t0)) = (trace.as_ref(), t0) {
+            tr.record("stream.layer", "stream", t0,
+                      [("layer", li as u64), ("frame", fi as u64)]);
         }
     }
     tally
@@ -712,6 +767,69 @@ mod tests {
         assert_eq!(r1.logits, r2.logits);
         assert_eq!(r1.total_cycles, r2.total_cycles);
         assert_eq!(r1.counters, r2.counters);
+    }
+
+    /// Satellite: the streamed schedule surfaces one channel-stat
+    /// snapshot per inter-layer link (every row was sent), and the
+    /// serial schedule reports none.
+    #[test]
+    fn streamed_schedule_reports_channel_stats() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut p = Pipeline::random(net.clone(),
+                                     PipelineConfig::default()).unwrap();
+        let rep = p.run(&f);
+        // 5 engines => 4 links.
+        assert_eq!(rep.channel_stats.len(), 4);
+        for (li, cs) in rep.channel_stats.iter().enumerate() {
+            assert!(cs.sends > 0, "link {li} sent nothing");
+            assert_eq!(cs.sends, cs.recvs, "link {li} lost rows");
+            assert!(cs.max_occupancy <= 4, "link {li} over capacity");
+        }
+        let mut serial = Pipeline::random(
+            net,
+            PipelineConfig { pipelined: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(serial.run(&f).channel_stats.is_empty());
+    }
+
+    /// Tracing records worker spans per (layer, frame) on both
+    /// schedules without touching any architectural report field.
+    #[test]
+    fn trace_sink_records_spans_reports_unchanged() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut plain = Pipeline::random(net.clone(),
+                                         PipelineConfig::default())
+            .unwrap();
+        let want = plain.run(&f);
+
+        let sink = Arc::new(crate::telemetry::TraceSink::new(1 << 14));
+        let mut traced = Pipeline::random(
+            net,
+            PipelineConfig { trace: Some(sink.clone()),
+                             ..Default::default() },
+        )
+        .unwrap();
+        let got = traced.run(&f);
+        assert_eq!(want.predictions, got.predictions);
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.total_cycles, got.total_cycles);
+        assert_eq!(want.counters, got.counters);
+
+        let evs = sink.events();
+        assert!(!evs.is_empty());
+        // Every (layer, frame) pair got a streamed worker span.
+        for li in 0..5u64 {
+            for fi in 0..2u64 {
+                assert!(evs.iter().any(|e| e.name == "stream.layer"
+                            && e.args == [("layer", li), ("frame", fi)]),
+                        "missing span layer={li} frame={fi}");
+            }
+        }
+        // Conv band spans rode along from inside the engines.
+        assert!(evs.iter().any(|e| e.name == "conv.row"));
     }
 
     #[test]

@@ -42,6 +42,11 @@
 //! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting plus
 //!   per-replica serving counters and the latency reservoir behind
 //!   the served p50/p95/p99 numbers.
+//! * [`telemetry`] — host-side observability: allocation-bounded
+//!   trace spans with Chrome trace-event export (`run --trace`), the
+//!   Prometheus-style metrics registry behind the server `metrics`
+//!   command, and rolling workload observers (per-layer spike
+//!   density, inter-arrival) feeding future online re-tuning.
 
 pub mod arch;
 pub mod codec;
@@ -54,6 +59,7 @@ pub mod runtime;
 pub mod server;
 pub mod session;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub use session::{Session, SessionBuilder, Weights};

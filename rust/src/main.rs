@@ -24,6 +24,7 @@
 //!   gen-events — write a synthetic DVS-like .aer event file for load
 //!              testing the events paths
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Context as _;
@@ -41,6 +42,7 @@ use sti_snn::server::{Backend, Server};
 use sti_snn::session::{Session, Weights};
 use sti_snn::sim::{cycles_to_ms, BackendKind, EnergyModel,
                    ResourceModel};
+use sti_snn::telemetry::{TraceSink, DEFAULT_TRACE_CAPACITY};
 use sti_snn::util::cli::Args;
 use sti_snn::util::rng::Rng;
 
@@ -106,6 +108,14 @@ fn usage() {
          \x20 --frames N           run/table4/figs   frames per run\n\
          \x20 --rate R             run/table4/figs   synthetic input\n\
          \x20                                        firing rate\n\
+         \x20 --trace PATH         run               record frame/layer/\n\
+         \x20                                        band/backpressure\n\
+         \x20                                        spans and write a\n\
+         \x20                                        Chrome trace-event\n\
+         \x20                                        JSON (open in\n\
+         \x20                                        ui.perfetto.dev);\n\
+         \x20                                        reports stay\n\
+         \x20                                        bit-identical\n\
          \n\
          event-streaming flags (the paper's native workload shape —\n\
          sorted (x, y, c, t) address events windowed into\n\
@@ -160,6 +170,11 @@ fn usage() {
          \x20 --max-replicas N     auto-tune replica cap (as explore)\n\
          \x20 --max-batch N        queue drain batch size (default 16)\n\
          \x20 --max-wait-ms MS     queue wait for first item (default 5)\n\
+         \x20 (live metrics: send {{\"cmd\": \"metrics\"}} to a running\n\
+         \x20 server for a Prometheus-style exposition — latency\n\
+         \x20 quantiles, shed count, queue depth, per-layer observed\n\
+         \x20 spike density; `{{\"cmd\": \"stats\"}}` returns the same\n\
+         \x20 core counters as one JSON object)\n\
          \n\
          unknown flags are rejected with a nearest-flag suggestion."
     );
@@ -179,7 +194,7 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
                        "intra-parallel", "no-pipelined"],
         "run" => &["model", "timesteps", "frames", "rate", "backend",
                    "intra-parallel", "no-pipelined", "events", "window",
-                   "windows"],
+                   "windows", "trace"],
         "serve" => &["model", "timesteps", "rate", "backend", "addr",
                      "replicas", "synthetic", "auto-tune", "pe-budget",
                      "max-replicas", "max-batch", "max-wait-ms",
@@ -644,13 +659,20 @@ fn run(args: &Args) -> anyhow::Result<()> {
     let t = args.get_usize("timesteps", 1);
     let intra = args.get_usize("intra-parallel", 1);
     let backend = backend_for(args)?.unwrap_or_default();
-    let mut session = Session::builder()
+    let trace_path = args.get("trace").map(|p| p.to_string());
+    let sink = trace_path
+        .as_ref()
+        .map(|_| Arc::new(TraceSink::new(DEFAULT_TRACE_CAPACITY)));
+    let mut builder = Session::builder()
         .network(net)
         .backend(backend)
         .timesteps(t)
         .intra_parallel(intra)
-        .pipelined(!args.has("no-pipelined"))
-        .build()?;
+        .pipelined(!args.has("no-pipelined"));
+    if let Some(s) = &sink {
+        builder = builder.trace(s.clone());
+    }
+    let mut session = builder.build()?;
     if args.has("events") {
         // `--events` immediately followed by another --flag parses as
         // a bare switch; never silently fall through to the dense path
@@ -660,22 +682,38 @@ fn run(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(src) = args.get("events") {
         let src = src.to_string();
-        return run_events(args, &mut session, &src);
+        run_events(args, &mut session, &src)?;
+    } else {
+        let shape = session.input_shape();
+        println!("running {frames} frames of {shape:?} at rate {rate}, \
+                  T={t}, backend={backend}, intra-parallel={intra}");
+        let rep =
+            session.infer_batch(&synth_frames(shape, frames, rate, 17));
+        println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
+                  steady-state {:.1} FPS",
+                 rep.t_max, cycles_to_ms(rep.t_max), rep.t_sum,
+                 rep.fps_steady);
+        println!("ops/frame {:.2} M; dyn energy {:.1} uJ/frame",
+                 rep.ops_per_frame as f64 / 1e6,
+                 rep.energy_per_frame_j * 1e6);
+        println!("predictions: {:?}", rep.predictions);
+        for (n, c) in rep.layer_names.iter().zip(&rep.layer_cycles) {
+            println!("  {n:<20} {c:>12} cycles");
+        }
+        // Streamed-schedule row-channel accounting (host-side):
+        // link i connects layer i to layer i+1.
+        for (i, s) in rep.channel_stats.iter().enumerate() {
+            println!("  link {i}: {} rows sent, {} backpressure \
+                      wait(s), max occupancy {}",
+                     s.sends, s.backpressure_waits, s.max_occupancy);
+        }
     }
-    let shape = session.input_shape();
-    println!("running {frames} frames of {shape:?} at rate {rate}, T={t}, \
-              backend={backend}, intra-parallel={intra}");
-    let rep = session.infer_batch(&synth_frames(shape, frames, rate, 17));
-    println!("t_max {} cycles ({:.3} ms); t_sum {} cycles; \
-              steady-state {:.1} FPS",
-             rep.t_max, cycles_to_ms(rep.t_max), rep.t_sum,
-             rep.fps_steady);
-    println!("ops/frame {:.2} M; dyn energy {:.1} uJ/frame",
-             rep.ops_per_frame as f64 / 1e6,
-             rep.energy_per_frame_j * 1e6);
-    println!("predictions: {:?}", rep.predictions);
-    for (n, c) in rep.layer_names.iter().zip(&rep.layer_cycles) {
-        println!("  {n:<20} {c:>12} cycles");
+    if let (Some(path), Some(sink)) = (&trace_path, &sink) {
+        std::fs::write(path, sink.to_chrome_json())
+            .with_context(|| format!("write trace {path}"))?;
+        println!("trace: {} span(s) recorded ({} dropped) -> {path} \
+                  (load in ui.perfetto.dev or chrome://tracing)",
+                 sink.len(), sink.dropped());
     }
     Ok(())
 }

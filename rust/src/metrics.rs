@@ -414,6 +414,61 @@ mod tests {
         assert_eq!(empty, LatencySummary::default());
     }
 
+    /// Edge cases around the reservoir boundaries: a lone sample is
+    /// every percentile, filling exactly to capacity keeps all
+    /// samples, and one more wraps onto the oldest slot only.
+    #[test]
+    fn latency_reservoir_single_sample_and_exact_capacity_wrap() {
+        let r = LatencyReservoir::new(8);
+        r.record(7);
+        let s = r.summary();
+        assert_eq!((s.count, s.window), (1, 1));
+        assert_eq!((s.mean_us, s.p50_us, s.p95_us, s.p99_us, s.max_us),
+                   (7, 7, 7, 7, 7));
+
+        // Exactly capacity: nothing overwritten yet.
+        let r = LatencyReservoir::new(4);
+        for v in [10, 20, 30, 40] {
+            r.record(v);
+        }
+        let s = r.summary();
+        assert_eq!((s.count, s.window), (4, 4));
+        assert_eq!((s.p50_us, s.max_us), (20, 40));
+        // One past capacity wraps onto the oldest sample (10).
+        r.record(50);
+        let s = r.summary();
+        assert_eq!((s.count, s.window), (5, 4));
+        assert_eq!((s.p50_us, s.max_us), (30, 50));
+    }
+
+    /// Values at the top of the u64 range: `record` clamps at
+    /// `u64::MAX - 1` (the +1 storage sentinel must not wrap to the
+    /// "empty" 0), and the u128 mean cannot overflow.
+    #[test]
+    fn latency_reservoir_saturates_near_u64_max() {
+        let r = LatencyReservoir::new(4);
+        r.record(u64::MAX);
+        r.record(u64::MAX - 1);
+        let s = r.summary();
+        assert_eq!(s.window, 2);
+        assert_eq!(s.max_us, u64::MAX - 1, "clamped by the sentinel");
+        assert_eq!(s.p99_us, u64::MAX - 1);
+        assert_eq!(s.mean_us, u64::MAX - 1, "mean summed in u128");
+    }
+
+    /// A zero-capacity request still yields a usable (1-slot) ring,
+    /// and an empty ring summarises to the default.
+    #[test]
+    fn latency_reservoir_zero_capacity_and_empty() {
+        let r = LatencyReservoir::new(0);
+        assert_eq!(r.summary(), LatencySummary::default());
+        r.record(5);
+        r.record(9);
+        let s = r.summary();
+        assert_eq!((s.count, s.window), (2, 1));
+        assert_eq!(s.max_us, 9, "1-slot ring keeps the latest");
+    }
+
     #[test]
     fn pool_metrics_expose_latency_summary() {
         let m = PoolMetrics::new(2);

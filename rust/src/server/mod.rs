@@ -5,10 +5,38 @@
 //!
 //! Request:  `{"id": 1, "image": [f32...]}`  (H*W*C floats, row-major
 //!           channel-last, matching the artifact's input shape) or
-//!           `{"cmd": "stats"}` / `{"cmd": "shutdown"}` /
-//!           `{"cmd": "events", ...}` (below).
+//!           `{"cmd": "stats"}` / `{"cmd": "metrics"}` /
+//!           `{"cmd": "shutdown"}` / `{"cmd": "events", ...}` (below).
 //! Response: `{"id": 1, "class": 3, "logits": [...], "latency_us": 42,
 //!           "replica": 0}` or `{"stats": {...}}`.
+//!
+//! ## `stats` reply schema
+//!
+//! One JSON line, `{"stats": {...}}` with:
+//!
+//! ```text
+//! requests        u64   requests served across all replicas
+//! errors          u64   backend errors + protocol errors
+//! shed            u64   events-mode windows refused (queue full)
+//! queue_depth     u64   jobs waiting in the shared queue right now
+//! queue_capacity  u64   configured queue bound (0 = unbounded)
+//! total_latency_us u64  saturating sum of end-to-end latencies
+//! latency         obj   {window, mean_us, p50_us, p95_us, p99_us,
+//!                        max_us} over the sliding reservoir
+//! replicas        arr   one {requests, errors, busy_us, latency_us}
+//!                       object per replica, in replica order
+//! ```
+//!
+//! ## `metrics` command
+//!
+//! `{"cmd": "metrics"}` switches the reply (for that request only) to
+//! a multi-line Prometheus-style text exposition, terminated by a
+//! `# EOF` line: request/error/shed totals, latency quantiles
+//! (`sti_latency_us{quantile="..."}`), queue depth/capacity,
+//! per-replica counters, and — when the serving session attached a
+//! workload observer — per-layer observed spike density and arrival
+//! rate. Metric names are tabled in `docs/ARCHITECTURE.md`
+//! (Observability).
 //!
 //! # Event protocol (`mode: "events"`, length-prefixed binary)
 //!
@@ -107,6 +135,7 @@ use crate::codec::stream::{DvsEvent, EventStream, WindowPolicy};
 use crate::codec::SpikeFrame;
 use crate::coordinator::batch::Batcher;
 use crate::metrics::{LatencySummary, PoolMetrics};
+use crate::telemetry::{MetricsRegistry, WorkloadObserver};
 use crate::util::json::Json;
 
 /// Inference backend the server fronts: image in, (class, logits) out.
@@ -229,6 +258,7 @@ pub struct Server<B: Backend> {
     max_batch: usize,
     max_wait: Duration,
     queue_cap: usize,
+    workload: Option<Arc<WorkloadObserver>>,
 }
 
 impl<B: Backend> Server<B> {
@@ -249,6 +279,7 @@ impl<B: Backend> Server<B> {
             max_batch: 16,
             max_wait: Duration::from_millis(5),
             queue_cap: 0,
+            workload: None,
         }
     }
 
@@ -267,6 +298,15 @@ impl<B: Backend> Server<B> {
     /// still always queues (its clients block per request anyway).
     pub fn with_queue_capacity(mut self, cap: usize) -> Self {
         self.queue_cap = cap;
+        self
+    }
+
+    /// Attach a workload observer: its per-layer density and arrival
+    /// statistics join the `metrics` exposition. The serving session
+    /// wires the same observer into its backends so the numbers track
+    /// actual served traffic.
+    pub fn with_workload(mut self, obs: Arc<WorkloadObserver>) -> Self {
+        self.workload = Some(obs);
         self
     }
 
@@ -309,7 +349,8 @@ impl<B: Backend> Server<B> {
 
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
-                               &self.shutdown, conn, &mut handles)?;
+                               &self.shutdown, conn, &self.workload,
+                               &mut handles)?;
             // Drain inference jobs on this (backend-owning) thread.
             let batch = queue.try_batch();
             if batch.is_empty() {
@@ -375,7 +416,8 @@ impl<B: Backend + Send + 'static> Server<B> {
         let mut handles = Vec::new();
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
-                               &self.shutdown, conn, &mut handles)?;
+                               &self.shutdown, conn, &self.workload,
+                               &mut handles)?;
             std::thread::sleep(Duration::from_millis(1));
         }
         for w in workers {
@@ -403,7 +445,7 @@ struct ConnInfo {
 fn accept_connections(
     listener: &TcpListener, queue: &Arc<Batcher<Job>>,
     stats: &Arc<ServerStats>, shutdown: &Arc<AtomicBool>,
-    conn: ConnInfo,
+    conn: ConnInfo, workload: &Option<Arc<WorkloadObserver>>,
     handles: &mut Vec<std::thread::JoinHandle<()>>) -> Result<()> {
     loop {
         match listener.accept() {
@@ -411,8 +453,10 @@ fn accept_connections(
                 let queue = queue.clone();
                 let stats = stats.clone();
                 let shutdown = shutdown.clone();
+                let workload = workload.clone();
                 handles.push(std::thread::spawn(move || {
-                    let _ = conn_loop(stream, queue, stats, shutdown, conn);
+                    let _ = conn_loop(stream, queue, stats, shutdown, conn,
+                                      workload);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -479,7 +523,8 @@ fn json_reply(r: &JobReply) -> Json {
     }
 }
 
-fn stats_json(stats: &ServerStats) -> Json {
+fn stats_json(stats: &ServerStats, queue_depth: usize,
+              queue_capacity: usize) -> Json {
     let per: Vec<Json> = stats
         .pool
         .per_replica()
@@ -500,6 +545,8 @@ fn stats_json(stats: &ServerStats) -> Json {
             ("requests", Json::num(stats.requests() as f64)),
             ("errors", Json::num(stats.errors() as f64)),
             ("shed", Json::num(stats.shed() as f64)),
+            ("queue_depth", Json::num(queue_depth as f64)),
+            ("queue_capacity", Json::num(queue_capacity as f64)),
             ("total_latency_us",
              Json::num(stats.total_latency_us() as f64)),
             ("latency",
@@ -516,12 +563,89 @@ fn stats_json(stats: &ServerStats) -> Json {
     )])
 }
 
+/// Render the `metrics` command reply: the serving counters, latency
+/// quantiles, queue state, per-replica counters, and (when attached)
+/// workload-observer statistics as Prometheus-style text. The
+/// exposition's own `# EOF` line doubles as the wire terminator.
+fn metrics_text(stats: &ServerStats, queue_depth: usize,
+                queue_capacity: usize,
+                workload: Option<&WorkloadObserver>) -> String {
+    let mut reg = MetricsRegistry::new();
+    reg.counter("sti_requests_total", "requests served across replicas")
+        .sample(stats.requests() as f64);
+    reg.counter("sti_errors_total",
+                "backend errors plus protocol errors")
+        .sample(stats.errors() as f64);
+    reg.counter("sti_shed_total",
+                "events-mode windows refused under backpressure")
+        .sample(stats.shed() as f64);
+    reg.gauge("sti_queue_depth", "jobs waiting in the shared queue")
+        .sample(queue_depth as f64);
+    reg.gauge("sti_queue_capacity",
+              "configured queue bound (0 = unbounded)")
+        .sample(queue_capacity as f64);
+
+    let lat = stats.latency();
+    if lat.window > 0 {
+        reg.gauge("sti_latency_us",
+                  "end-to-end latency quantiles over the sliding \
+                   reservoir")
+            .sample_with(&[("quantile", "0.5")], lat.p50_us as f64)
+            .sample_with(&[("quantile", "0.95")], lat.p95_us as f64)
+            .sample_with(&[("quantile", "0.99")], lat.p99_us as f64);
+        reg.gauge("sti_latency_mean_us", "mean latency over the window")
+            .sample(lat.mean_us as f64);
+        reg.gauge("sti_latency_max_us", "max latency over the window")
+            .sample(lat.max_us as f64);
+    }
+
+    let per = stats.pool.per_replica();
+    let replica_requests =
+        reg.counter("sti_replica_requests_total",
+                    "requests served, per replica");
+    for (i, s) in per.iter().enumerate() {
+        let idx = i.to_string();
+        replica_requests
+            .sample_with(&[("replica", &idx)], s.requests as f64);
+    }
+    let replica_busy =
+        reg.counter("sti_replica_busy_us_total",
+                    "cumulative backend compute time, per replica");
+    for (i, s) in per.iter().enumerate() {
+        let idx = i.to_string();
+        replica_busy.sample_with(&[("replica", &idx)], s.busy_us as f64);
+    }
+
+    if let Some(obs) = workload {
+        let snap = obs.snapshot();
+        reg.counter("sti_frames_observed_total",
+                    "frames seen by the workload observer")
+            .sample(snap.frames as f64);
+        if snap.interarrival_ewma_us > 0.0 {
+            reg.gauge("sti_arrival_interval_us",
+                      "EWMA inter-arrival time between batches")
+                .sample(snap.interarrival_ewma_us);
+            reg.gauge("sti_arrival_rate_fps",
+                      "EWMA batch arrival rate")
+                .sample(snap.rate_fps);
+        }
+        let density =
+            reg.gauge("sti_layer_spike_density",
+                      "EWMA observed output spike density, per layer");
+        for l in &snap.layers {
+            density.sample_with(&[("layer", &l.name)], l.density_ewma);
+        }
+    }
+    reg.render()
+}
+
 /// Per-connection loop: parse lines, ship jobs, write replies. An
 /// `events` command hands the connection over to the binary
 /// `events_loop`.
 fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
              stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
-             conn: ConnInfo) -> Result<()> {
+             conn: ConnInfo, workload: Option<Arc<WorkloadObserver>>)
+             -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -541,7 +665,15 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
                             writeln!(out, "{r}")?;
                             return Ok(());
                         }
-                        "stats" => stats_json(&stats),
+                        "stats" => stats_json(&stats, queue.len(),
+                                              queue.capacity),
+                        "metrics" => {
+                            let text = metrics_text(
+                                &stats, queue.len(), queue.capacity,
+                                workload.as_deref());
+                            out.write_all(text.as_bytes())?;
+                            continue;
+                        }
                         "events" => {
                             let window = req
                                 .get("window")
@@ -1073,6 +1205,27 @@ impl Client {
         }
     }
 
+    /// Fetch the Prometheus-style metrics exposition: sends
+    /// `{"cmd": "metrics"}` and reads lines up to and including the
+    /// `# EOF` terminator. Returns the full text (terminator
+    /// included, as Prometheus expects).
+    pub fn metrics(&mut self) -> Result<String> {
+        writeln!(self.stream,
+                 "{}", Json::obj(vec![("cmd", Json::str("metrics"))]))?;
+        let mut text = String::new();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("connection closed before # EOF");
+            }
+            text.push_str(&line);
+            if line.trim_end() == "# EOF" {
+                return Ok(text);
+            }
+        }
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.request(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
         Ok(())
@@ -1162,6 +1315,10 @@ mod tests {
         assert_eq!(lat.get("window").unwrap().as_usize(), Some(1));
         assert!(lat.get("p99_us").unwrap().as_f64().unwrap()
                 >= lat.get("p50_us").unwrap().as_f64().unwrap());
+        // One reply covers the whole schema: queue state included.
+        assert_eq!(stats.get("queue_depth").unwrap().as_usize(), Some(0));
+        assert_eq!(stats.get("queue_capacity").unwrap().as_usize(),
+                   Some(0));
 
         // Dense-only backend refuses events mode. Scoped so the client
         // drops (and its connection thread exits) before shutdown
@@ -1263,6 +1420,44 @@ mod tests {
             .and_then(|r| r.as_arr())
             .expect("per-replica stats present");
         assert_eq!(replicas.len(), 4);
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// The `metrics` command renders a Prometheus-style exposition
+    /// with serving counters, latency quantiles, queue state, and —
+    /// with an observer attached — per-layer workload statistics.
+    #[test]
+    fn metrics_command_renders_prometheus_text() {
+        let obs = Arc::new(WorkloadObserver::new());
+        obs.observe(&["conv0".to_string(), "pool1".to_string()],
+                    &[0.25, 0.5], 2);
+        let server = Server::new(Toy)
+            .with_queue_capacity(8)
+            .with_workload(obs);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        let _ = c.infer(1, &[0.4, 0.1, 0.2, 0.3]).unwrap();
+        let text = c.metrics().unwrap();
+        assert!(text.contains("sti_requests_total 1"), "{text}");
+        assert!(text.contains("sti_queue_capacity 8"), "{text}");
+        assert!(text.contains("# TYPE sti_latency_us gauge"), "{text}");
+        assert!(text.contains("sti_latency_us{quantile=\"0.99\"}"),
+                "{text}");
+        assert!(text.contains("sti_layer_spike_density{layer=\"conv0\"} \
+                               0.25"),
+                "{text}");
+        assert!(text.contains("sti_frames_observed_total 2"), "{text}");
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        // The connection still speaks JSON after a metrics reply.
+        let resp = c.infer(2, &[0.9, 0.1, 0.2, 0.3]).unwrap();
+        assert_eq!(resp.get("class").unwrap().as_usize(), Some(0));
+
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
     }

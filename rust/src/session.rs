@@ -90,10 +90,12 @@ use crate::coordinator::pipeline::{Pipeline, PipelineConfig,
 use crate::coordinator::replica::{PoolResult, ReplicaPool};
 use crate::dataflow::ConvLatencyParams;
 use crate::dse;
-use crate::metrics::{PerfRow, PoolMetrics};
+use crate::metrics::{LatencySummary, PerfRow, PoolMetrics};
 use crate::model::Artifact;
 use crate::server::{Backend, Server};
 use crate::sim::engine::{random_sources, LayerWeights};
+use crate::sim::fifo::ChannelSnapshot;
+use crate::telemetry::{TraceSink, WorkloadObserver, WorkloadSnapshot};
 use crate::sim::{AccessCounter, BackendKind, EnergyModel, EnergyReport,
                  ResourceModel, ResourceReport, CLK_HZ};
 
@@ -229,6 +231,11 @@ pub struct Report {
     pub gops_per_w: f64,
     /// The paper's headline metric: GOPS / W / PE.
     pub gops_per_w_per_pe: f64,
+    /// Per-link row-channel counters from the streamed schedule (link
+    /// `i` connects layer `i` to `i + 1`; empty on the serial
+    /// schedule). Host-timing-dependent — excluded from bit-exact
+    /// report comparisons.
+    pub channel_stats: Vec<ChannelSnapshot>,
 }
 
 impl Report {
@@ -271,6 +278,7 @@ impl Report {
             gops,
             gops_per_w,
             gops_per_w_per_pe: gops_per_w / rep.pes.max(1) as f64,
+            channel_stats: rep.channel_stats.clone(),
         }
     }
 
@@ -303,6 +311,7 @@ pub struct SessionBuilder {
     max_batch: Option<usize>,
     max_wait: Option<Duration>,
     queue_cap: Option<usize>,
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl SessionBuilder {
@@ -410,6 +419,17 @@ impl SessionBuilder {
     pub fn queue(mut self, max_batch: usize, max_wait: Duration) -> Self {
         self.max_batch = Some(max_batch.max(1));
         self.max_wait = Some(max_wait);
+        self
+    }
+
+    /// Attach a [`TraceSink`]: every pipeline built from this session
+    /// (the primary, pool replicas, and serving backends) records
+    /// frame / layer / band / backpressure spans into it. Export with
+    /// [`TraceSink::to_chrome_json`]. Tracing never changes the
+    /// architectural report (pinned by `tests/prop_telemetry.rs`);
+    /// without a sink the span sites are a single `Option` check.
+    pub fn trace(mut self, sink: Arc<TraceSink>) -> Self {
+        self.trace = Some(sink);
         self
     }
 
@@ -521,6 +541,7 @@ impl SessionBuilder {
             resources: self.resources.unwrap_or_default(),
             backend,
             intra_parallel: self.intra_parallel.unwrap_or(1),
+            trace: self.trace.clone(),
             ..PipelineConfig::default()
         };
 
@@ -543,8 +564,25 @@ impl SessionBuilder {
             tuned,
             pipeline,
             pool: None,
+            observer: Arc::new(WorkloadObserver::new()),
         })
     }
+}
+
+/// One coherent snapshot of a session's runtime telemetry — see
+/// [`Session::telemetry`]. Everything here is host-side observation;
+/// none of it feeds back into the architectural model.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetrySnapshot {
+    /// Rolling per-layer spike density and arrival-rate statistics
+    /// from the observed workload (ROADMAP item 5 feedstock).
+    pub workload: WorkloadSnapshot,
+    /// Latency percentiles over the pool's sliding reservoir, when
+    /// the replica pool is running.
+    pub latency: Option<LatencySummary>,
+    /// Frames waiting in the shared work queue, when the pool is
+    /// running.
+    pub queue_depth: Option<usize>,
 }
 
 /// An explicit network spec used with artifact weights must describe
@@ -595,6 +633,7 @@ pub struct Session {
     tuned: Option<dse::CostPoint>,
     pipeline: Pipeline,
     pool: Option<ReplicaPool>,
+    observer: Arc<WorkloadObserver>,
 }
 
 impl Session {
@@ -637,6 +676,8 @@ impl Session {
     /// return the unified [`Report`].
     pub fn infer_batch(&mut self, frames: &[SpikeFrame]) -> Report {
         let rep = self.pipeline.run(frames);
+        self.observer
+            .observe(&rep.layer_names, &rep.codec_ratios, rep.frames);
         Report::from_pipeline(&rep, &self.net, &self.config)
     }
 
@@ -651,6 +692,8 @@ impl Session {
             return Inference::from_pool(pool.infer(frame)?);
         }
         let rep = self.pipeline.run(std::slice::from_ref(&frame));
+        self.observer
+            .observe(&rep.layer_names, &rep.codec_ratios, rep.frames);
         let class = rep.predictions.first().copied().ok_or_else(|| {
             anyhow::anyhow!("network has no classifier head")
         })?;
@@ -754,6 +797,27 @@ impl Session {
         self.pool.as_ref().map(|p| p.metrics())
     }
 
+    /// The session's workload observer: rolling per-layer spike
+    /// density and inter-arrival statistics recorded on every direct
+    /// and served inference.
+    pub fn workload(&self) -> &Arc<WorkloadObserver> {
+        &self.observer
+    }
+
+    /// One coherent telemetry snapshot: observed workload statistics
+    /// plus, when the replica pool is running, latency percentiles
+    /// and the current work-queue depth.
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            workload: self.observer.snapshot(),
+            latency: self
+                .pool
+                .as_ref()
+                .map(|p| p.metrics().latency_summary()),
+            queue_depth: self.pool.as_ref().map(|p| p.queue_len()),
+        }
+    }
+
     /// Stop the replica pool (drains queued work) and drop the
     /// session.
     pub fn shutdown(mut self) {
@@ -780,15 +844,25 @@ impl Session {
         }
         let shape = self.pipeline.input_shape();
         let extra = self.build_pipelines(self.replicas - 1)?;
+        let obs = self.observer;
         let mut backends = Vec::with_capacity(self.replicas);
-        backends.push(FrameBackend { pipe: self.pipeline, shape });
+        backends.push(FrameBackend {
+            pipe: self.pipeline,
+            shape,
+            observer: obs.clone(),
+        });
         for pipe in extra {
-            backends.push(FrameBackend { pipe, shape });
+            backends.push(FrameBackend {
+                pipe,
+                shape,
+                observer: obs.clone(),
+            });
         }
         let pooled = backends.len() > 1;
         let server = Server::with_backends(backends)
             .with_queue(self.max_batch, self.max_wait)
-            .with_queue_capacity(self.queue_cap);
+            .with_queue_capacity(self.queue_cap)
+            .with_workload(obs);
         if pooled {
             server.serve_pool(addr, on_bound)
         } else {
@@ -826,6 +900,7 @@ impl Session {
 struct FrameBackend {
     pipe: Pipeline,
     shape: (usize, usize, usize),
+    observer: Arc<WorkloadObserver>,
 }
 
 impl Backend for FrameBackend {
@@ -846,6 +921,8 @@ impl Backend for FrameBackend {
             "frame shape ({}, {}, {}) != session input {:?}",
             frame.h, frame.w, frame.c, self.shape);
         let rep = self.pipe.run(std::slice::from_ref(frame));
+        self.observer
+            .observe(&rep.layer_names, &rep.codec_ratios, rep.frames);
         let class = *rep
             .predictions
             .first()
@@ -999,6 +1076,24 @@ mod tests {
         }
         assert_eq!(sub.stats.windows, 4);
         s.shutdown();
+    }
+
+    /// The telemetry snapshot tracks observed frames and per-layer
+    /// density, and the streamed schedule surfaces its row-channel
+    /// counters in the unified report.
+    #[test]
+    fn telemetry_snapshot_tracks_observed_workload() {
+        let mut s = Session::builder().model("scnn3").build().unwrap();
+        let f = frames(s.input_shape(), 2, 3);
+        let rep = s.infer_batch(&f);
+        // Default schedule is pipelined => one link per layer pair.
+        assert_eq!(rep.channel_stats.len(), rep.layer_names.len() - 1);
+        assert!(rep.channel_stats.iter().all(|c| c.sends == c.recvs));
+        let t = s.telemetry();
+        assert_eq!(t.workload.frames, 2);
+        assert!(!t.workload.layers.is_empty());
+        assert!(t.latency.is_none(), "no pool => no latency summary");
+        assert!(t.queue_depth.is_none());
     }
 
     #[test]

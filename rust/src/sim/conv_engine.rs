@@ -33,9 +33,12 @@
 //! ops, and access counters are bit-identical to the serial run (they
 //! are architectural quantities — only host wall-clock changes).
 
+use std::sync::Arc;
+
 use crate::arch::{ConvLayer, ConvMode};
 use crate::codec::SpikeFrame;
 use crate::dataflow::ConvLatencyParams;
+use crate::telemetry::TraceSink;
 
 use super::array::PeArray;
 use super::backend::{conv_backend, BackendKind, ConvCompute};
@@ -171,6 +174,9 @@ struct Band {
     /// Report of this band's last run (filled by worker threads,
     /// merged in band order).
     step: LayerStep,
+    /// Telemetry span recorder (None = tracing off, the default;
+    /// spans record host wall-clock only — `step` never changes).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl Band {
@@ -232,13 +238,18 @@ impl Band {
     /// bands.
     fn prime(&mut self, layer: &ConvLayer, input: &SpikeFrame,
              off_chip: bool) {
-        let Band { y0, lb, step, .. } = self;
+        let Band { y0, lb, step, trace, .. } = self;
+        let t0 = trace.as_ref().map(|t| t.start());
         let y0 = *y0;
         lb.reset();
         for py in y0..y0 + layer.kh {
             let charge = y0 == 0 || py + 1 == y0 + layer.kh;
             lb.ingest_row(input, py as isize, layer.pad,
                           &mut step.counters, off_chip, charge);
+        }
+        if let (Some(tr), Some(t0)) = (trace.as_ref(), t0) {
+            tr.record("conv.prime", "band", t0,
+                      [("y0", y0 as u64), ("", 0)]);
         }
     }
 
@@ -254,7 +265,8 @@ impl Band {
                    off_chip: bool, field_cycles: u64, incremental: bool,
                    oy: usize, external_out: Option<&mut SpikeFrame>) {
         let Band { y0, lb, backend, psums, lane_ops, lane_cycles,
-                   out, step, .. } = self;
+                   out, step, trace, .. } = self;
+        let t0 = trace.as_ref().map(|t| t.start());
         let y0 = *y0;
         let wo = layer.out_w();
         let (out, out_y0): (&mut SpikeFrame, usize) = match external_out {
@@ -313,6 +325,10 @@ impl Band {
             step.counters.write(MemLevel::Bram, DataKind::OutputSpike,
                                 1);
         }
+        if let (Some(tr), Some(t0)) = (trace.as_ref(), t0) {
+            tr.record("conv.row", "band", t0,
+                      [("oy", oy as u64), ("", 0)]);
+        }
     }
 }
 
@@ -362,6 +378,8 @@ pub struct ConvEngine {
     incremental: bool,
     bands: Vec<Band>,
     stream: StreamState,
+    /// Telemetry span recorder, mirrored into every band (None = off).
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl ConvEngine {
@@ -399,6 +417,7 @@ impl ConvEngine {
             incremental: true,
             bands,
             stream: StreamState::default(),
+            trace: None,
         }
     }
 
@@ -432,6 +451,7 @@ impl ConvEngine {
                     SpikeFrame::zeros(0, 0, 0)
                 },
                 step: LayerStep::default(),
+                trace: None,
             });
         }
         bands
@@ -445,8 +465,22 @@ impl ConvEngine {
         if ranges.len() != self.bands.len() {
             let proto = self.bands[0].backend.clone_box();
             self.bands = Self::build_bands(&self.layer, proto, ranges);
+            let trace = self.trace.clone();
+            self.set_trace_sink(trace);
         }
         self
+    }
+
+    /// Install (or clear) the telemetry span recorder on the engine
+    /// and every band worker — band `prime` / row computations record
+    /// `conv.prime` / `conv.row` spans while it is set. Purely
+    /// observational: reports and spikes are unchanged.
+    pub(crate) fn set_trace_sink(&mut self,
+                                 trace: Option<Arc<TraceSink>>) {
+        for band in self.bands.iter_mut() {
+            band.trace = trace.clone();
+        }
+        self.trace = trace;
     }
 
     /// Toggle the incremental sliding-window protocol (tests pin the

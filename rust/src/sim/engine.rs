@@ -25,9 +25,12 @@
 //! tests can also drive individual engines through the exact code path
 //! the pipeline uses.
 
+use std::sync::Arc;
+
 use crate::arch::{Layer, NetworkSpec};
 use crate::codec::{EventCodec, SpikeFrame};
 use crate::dataflow::ConvLatencyParams;
+use crate::telemetry::TraceSink;
 
 use super::backend::BackendKind;
 use super::conv_engine::{ConvEngine, ConvWeights};
@@ -183,6 +186,12 @@ pub trait LayerEngine: Send {
     fn event_codec(&self) -> Option<EventCodec> {
         None
     }
+
+    /// Install (or clear, with `None`) the telemetry span recorder.
+    /// Engines with internal span sites override this (the conv
+    /// engine records band prime/row spans); the default is a no-op —
+    /// tracing never changes what an engine computes or reports.
+    fn set_trace(&mut self, _trace: Option<Arc<TraceSink>>) {}
 }
 
 impl LayerEngine for ConvEngine {
@@ -232,6 +241,10 @@ impl LayerEngine for ConvEngine {
     fn event_codec(&self) -> Option<EventCodec> {
         Some(EventCodec::new(self.layer.in_h, self.layer.in_w,
                              self.layer.ci))
+    }
+
+    fn set_trace(&mut self, trace: Option<Arc<TraceSink>>) {
+        self.set_trace_sink(trace);
     }
 }
 

@@ -22,6 +22,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
+use crate::telemetry::TraceSink;
+
 #[derive(Debug, Clone)]
 pub struct Fifo<T> {
     capacity: usize,
@@ -137,6 +139,29 @@ impl RowChannelStats {
     pub fn max_occupancy(&self) -> u64 {
         self.max_occupancy.load(Ordering::Relaxed)
     }
+
+    /// Plain-data copy of the counters (what pipeline reports carry).
+    pub fn snapshot(&self) -> ChannelSnapshot {
+        ChannelSnapshot {
+            sends: self.sends(),
+            recvs: self.recvs.load(Ordering::Relaxed),
+            backpressure_waits: self.backpressure_waits(),
+            max_occupancy: self.max_occupancy(),
+        }
+    }
+}
+
+/// Plain-data snapshot of one row channel's counters, taken after the
+/// worker scope joins. Host-timing-dependent (how often the producer
+/// blocked depends on thread scheduling), so it rides on reports
+/// *next to* the architectural fields, never inside the bit-exact
+/// comparisons.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChannelSnapshot {
+    pub sends: u64,
+    pub recvs: u64,
+    pub backpressure_waits: u64,
+    pub max_occupancy: u64,
 }
 
 /// Producer half of a [`row_channel`].
@@ -144,9 +169,21 @@ pub struct RowSender {
     data: Sender<Vec<u64>>,
     recycle: Receiver<Vec<u64>>,
     stats: Arc<RowChannelStats>,
+    /// Span recorder for blocking waits (None = no tracing).
+    trace: Option<Arc<TraceSink>>,
+    /// Channel id carried on wait spans (producer layer index).
+    link: u64,
 }
 
 impl RowSender {
+    /// Record blocking `acquire` waits as `channel.wait` spans on
+    /// `trace`, tagged with channel id `link`.
+    pub fn set_trace(&mut self, trace: Option<Arc<TraceSink>>,
+                     link: u64) {
+        self.trace = trace;
+        self.link = link;
+    }
+
     /// Take a free row buffer, blocking (and counting backpressure)
     /// until the consumer recycles one. `None` when the consumer is
     /// gone (it panicked — the thread scope will propagate).
@@ -157,7 +194,15 @@ impl RowSender {
                 self.stats
                     .backpressure_waits
                     .fetch_add(1, Ordering::Relaxed);
-                self.recycle.recv().ok()
+                // Only the genuinely blocking path records a span —
+                // the fast path above stays a single try_recv.
+                let t0 = self.trace.as_ref().map(|t| t.start());
+                let buf = self.recycle.recv().ok();
+                if let (Some(tr), Some(t0)) = (&self.trace, t0) {
+                    tr.record("channel.wait", "backpressure", t0,
+                              [("link", self.link), ("", 0)]);
+                }
+                buf
             }
             Err(TryRecvError::Disconnected) => None,
         }
@@ -220,7 +265,7 @@ pub fn row_channel(capacity: usize, words: usize)
     let stats = Arc::new(RowChannelStats::default());
     (
         RowSender { data: data_tx, recycle: recycle_rx,
-                    stats: stats.clone() },
+                    stats: stats.clone(), trace: None, link: 0 },
         RowReceiver { data: data_rx, recycle: recycle_tx, stats },
     )
 }
@@ -270,6 +315,39 @@ mod tests {
             }
         });
         assert_eq!(rx.stats().sends(), 100);
+    }
+
+    /// Snapshots are plain copies of the live counters, and a traced
+    /// sender records its blocking waits as backpressure spans.
+    #[test]
+    fn row_channel_snapshot_and_wait_spans() {
+        let sink = Arc::new(TraceSink::new(64));
+        let (mut tx, rx) = row_channel(1, 1);
+        tx.set_trace(Some(sink.clone()), 3);
+        // Fill the single slot, then acquire again from another
+        // thread: it must block until the consumer recycles.
+        let buf = tx.acquire().unwrap();
+        assert!(tx.send(buf));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let buf = tx.acquire().unwrap();
+                tx.send(buf);
+            });
+            let buf = rx.recv().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            rx.recycle(buf);
+            rx.recv().unwrap();
+        });
+        let snap = rx.stats().snapshot();
+        assert_eq!(snap.sends, 2);
+        assert_eq!(snap.recvs, 2);
+        assert!(snap.backpressure_waits >= 1);
+        assert!(snap.max_occupancy <= 1);
+        let evs = sink.events();
+        assert!(evs.iter().any(|e| e.name == "channel.wait"
+                    && e.cat == "backpressure"
+                    && e.args[0] == ("link", 3)),
+                "blocking acquire must leave a wait span: {evs:?}");
     }
 
     #[test]

@@ -1,0 +1,30 @@
+//! Observability for the running stack: trace spans, a metrics
+//! registry, and workload observers.
+//!
+//! The simulator's *architectural* instrumentation (cycle counts,
+//! access counters, energy) describes what the modelled FPGA does;
+//! this module observes what the *host* system is doing while it
+//! runs:
+//!
+//! * [`trace`] — [`TraceSink`]: an allocation-bounded span recorder
+//!   shared across the pipeline schedules, conv row bands, per-layer
+//!   stream workers, and row-channel backpressure waits; exports
+//!   Chrome trace-event JSON (`run --trace out.json`, view in
+//!   Perfetto). Disabled tracing is a per-site `Option` check — the
+//!   zero-allocation hot path and every architectural report stay
+//!   bit-identical (pinned by `tests/prop_telemetry.rs`).
+//! * [`registry`] — [`MetricsRegistry`]: named counters/gauges
+//!   rendered as Prometheus text exposition, the payload of the
+//!   server's `metrics` command.
+//! * [`workload`] — [`WorkloadObserver`]: rolling per-layer spike
+//!   density and frame inter-arrival EWMAs measured on the serving
+//!   path — the inputs ROADMAP item 5's online DSE re-tuning
+//!   consumes, surfaced via `Session::telemetry()` and `metrics`.
+
+pub mod registry;
+pub mod trace;
+pub mod workload;
+
+pub use registry::{Metric, MetricKind, MetricsRegistry, Sample};
+pub use trace::{TraceEvent, TraceSink, DEFAULT_TRACE_CAPACITY};
+pub use workload::{LayerWorkload, WorkloadObserver, WorkloadSnapshot};

@@ -1,0 +1,201 @@
+//! Named-metric registry with Prometheus text exposition.
+//!
+//! The server's `metrics` command (and anything else that wants a
+//! scrape-able view of the stack) assembles a [`MetricsRegistry`]
+//! from whatever live sources it holds — `ServerStats`,
+//! `PoolMetrics`, queue depth, the [`workload
+//! observer`](super::workload::WorkloadObserver) — and renders it as
+//! the Prometheus text format: `# HELP` / `# TYPE` comment lines
+//! followed by `name{label="v"} value` samples, terminated by a
+//! `# EOF` line so line-oriented clients know where the reply ends.
+//! The registry is a plain value built per scrape; the live counters
+//! stay where they are.
+
+use std::fmt::Write as _;
+
+/// Prometheus metric kind (what `# TYPE` advertises).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+}
+
+/// One sample of a metric: optional labels plus the value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One named metric family and its samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub help: String,
+    pub kind: MetricKind,
+    pub samples: Vec<Sample>,
+}
+
+impl Metric {
+    /// Add an unlabelled sample.
+    pub fn sample(&mut self, value: f64) -> &mut Self {
+        self.samples.push(Sample { labels: Vec::new(), value });
+        self
+    }
+
+    /// Add a labelled sample.
+    pub fn sample_with(&mut self, labels: &[(&str, &str)], value: f64)
+                       -> &mut Self {
+        self.samples.push(Sample {
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            value,
+        });
+        self
+    }
+}
+
+/// An ordered collection of metric families, rendered in insertion
+/// order (stable scrape output).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    metrics: Vec<Metric>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a counter family; sample it via the returned handle.
+    pub fn counter(&mut self, name: &str, help: &str) -> &mut Metric {
+        self.family(name, help, MetricKind::Counter)
+    }
+
+    /// Register a gauge family; sample it via the returned handle.
+    pub fn gauge(&mut self, name: &str, help: &str) -> &mut Metric {
+        self.family(name, help, MetricKind::Gauge)
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: MetricKind)
+              -> &mut Metric {
+        self.metrics.push(Metric {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        self.metrics.last_mut().unwrap()
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Render the Prometheus text exposition, `# EOF`-terminated.
+    /// Families with no samples are skipped (a source that was not
+    /// wired simply does not appear).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for m in &self.metrics {
+            if m.samples.is_empty() {
+                continue;
+            }
+            let kind = match m.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+            };
+            let _ = writeln!(out, "# HELP {} {}", m.name, m.help);
+            let _ = writeln!(out, "# TYPE {} {}", m.name, kind);
+            for s in &m.samples {
+                out.push_str(&m.name);
+                if !s.labels.is_empty() {
+                    out.push('{');
+                    for (i, (k, v)) in s.labels.iter().enumerate() {
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        let _ = write!(out, "{k}=\"{}\"",
+                                       escape_label(v));
+                    }
+                    out.push('}');
+                }
+                let _ = writeln!(out, " {}", fmt_value(s.value));
+            }
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+/// Prometheus label-value escaping: backslash, quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+/// Integers print without a trailing `.0`; everything else as plain
+/// decimal (the util::json::Json display convention).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_help_type_samples_and_eof() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("sti_requests_total", "Requests served.")
+            .sample(42.0);
+        reg.gauge("sti_layer_spike_density", "Observed density.")
+            .sample_with(&[("layer", "conv0")], 0.25)
+            .sample_with(&[("layer", "fc")], 0.5);
+        let text = reg.render();
+        assert!(text.contains(
+            "# HELP sti_requests_total Requests served.\n"));
+        assert!(text.contains("# TYPE sti_requests_total counter\n"));
+        assert!(text.contains("\nsti_requests_total 42\n"));
+        assert!(text.contains(
+            "sti_layer_spike_density{layer=\"conv0\"} 0.25\n"));
+        assert!(text.contains(
+            "sti_layer_spike_density{layer=\"fc\"} 0.5\n"));
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn empty_families_are_skipped_and_labels_escaped() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("sti_never_sampled", "No samples.");
+        reg.gauge("g", "h").sample_with(&[("l", "a\"b\\c")], 1.0);
+        let text = reg.render();
+        assert!(!text.contains("sti_never_sampled"));
+        assert!(text.contains("g{l=\"a\\\"b\\\\c\"} 1\n"));
+        assert_eq!(MetricsRegistry::new().render(), "# EOF\n");
+    }
+
+    #[test]
+    fn multi_label_samples_and_float_formatting() {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge("lat", "Latency.")
+            .sample_with(&[("quantile", "0.5"), ("unit", "us")], 12.5);
+        let text = reg.render();
+        assert!(text.contains(
+            "lat{quantile=\"0.5\",unit=\"us\"} 12.5\n"));
+    }
+}

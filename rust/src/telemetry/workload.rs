@@ -1,0 +1,225 @@
+//! Rolling workload statistics observed on the serving path.
+//!
+//! ROADMAP item 5 (online DSE re-tuning) needs the *measured*
+//! workload, not the configured one: how sparse the traffic actually
+//! is per layer, and how fast frames actually arrive. A
+//! [`WorkloadObserver`] sits on the inference path (one `Arc` shared
+//! by every pipeline replica and the server), folds each completed
+//! frame's per-layer codec ratios into exponential moving averages,
+//! and tracks frame inter-arrival times. [`WorkloadObserver::snapshot`]
+//! is the read side — the `metrics` server command and
+//! `Session::telemetry()` both render it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// EWMA smoothing factor: each new frame contributes 20%, so the
+/// averages track the recent few dozen frames of traffic.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Rolling statistics of one layer's observed traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerWorkload {
+    pub name: String,
+    /// EWMA of the layer's codec compression ratio — the
+    /// compressed/dense size ratio of its output spikes, the
+    /// simulator's measured spike-density proxy (sparser traffic =>
+    /// smaller ratio; see `codec`).
+    pub density_ewma: f64,
+    /// Frames folded into the average.
+    pub frames: u64,
+}
+
+/// Read-side snapshot of everything the observer tracks.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadSnapshot {
+    /// Frames observed since construction.
+    pub frames: u64,
+    /// EWMA of the gap between consecutive frame arrivals, µs
+    /// (0 until two frames have arrived).
+    pub interarrival_ewma_us: f64,
+    /// Observed arrival rate derived from the inter-arrival EWMA,
+    /// frames/s (0 until two frames have arrived).
+    pub rate_fps: f64,
+    pub layers: Vec<LayerWorkload>,
+}
+
+struct Inner {
+    layers: Vec<LayerWorkload>,
+    interarrival_ewma_us: f64,
+}
+
+/// Shared accumulator of measured workload: per-layer spike-density
+/// EWMAs plus frame inter-arrival statistics. Writers call
+/// [`WorkloadObserver::observe`] per completed frame batch; readers
+/// call [`WorkloadObserver::snapshot`] any time without disturbing
+/// the averages.
+#[derive(Debug)]
+pub struct WorkloadObserver {
+    epoch: Instant,
+    frames: AtomicU64,
+    /// Last arrival, µs since epoch, stored value+1 so 0 stays the
+    /// "no frame yet" sentinel (the latency-reservoir idiom).
+    last_arrival_us: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for WorkloadObserver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkloadObserver {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            frames: AtomicU64::new(0),
+            last_arrival_us: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                layers: Vec::new(),
+                interarrival_ewma_us: 0.0,
+            }),
+        }
+    }
+
+    /// Fold one completed run into the rolling averages:
+    /// `layer_names` / `codec_ratios` come straight from a pipeline
+    /// report (parallel slices, one entry per layer), `frames` is how
+    /// many frames that run covered. Also timestamps the arrival for
+    /// the inter-arrival EWMA.
+    pub fn observe(&self, layer_names: &[String], codec_ratios: &[f64],
+                   frames: u64) {
+        if frames == 0 {
+            return;
+        }
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let prev = self
+            .last_arrival_us
+            .swap(now_us.saturating_add(1), Ordering::Relaxed);
+        self.frames.fetch_add(frames, Ordering::Relaxed);
+
+        let mut inner = self.inner.lock().unwrap();
+        if prev != 0 {
+            let gap = now_us.saturating_sub(prev - 1) as f64;
+            inner.interarrival_ewma_us = if inner.interarrival_ewma_us
+                == 0.0
+            {
+                gap
+            } else {
+                EWMA_ALPHA * gap
+                    + (1.0 - EWMA_ALPHA) * inner.interarrival_ewma_us
+            };
+        }
+        for (li, (name, &ratio)) in
+            layer_names.iter().zip(codec_ratios).enumerate()
+        {
+            if inner.layers.len() <= li {
+                inner.layers.push(LayerWorkload {
+                    name: name.clone(),
+                    density_ewma: ratio,
+                    frames: 0,
+                });
+            }
+            let l = &mut inner.layers[li];
+            if l.frames > 0 {
+                l.density_ewma = EWMA_ALPHA * ratio
+                    + (1.0 - EWMA_ALPHA) * l.density_ewma;
+            } else {
+                l.density_ewma = ratio;
+            }
+            l.frames += frames;
+        }
+    }
+
+    /// Frames observed since construction.
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every rolling statistic (cheap; clones the per-layer
+    /// vector under the lock).
+    pub fn snapshot(&self) -> WorkloadSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let ia = inner.interarrival_ewma_us;
+        WorkloadSnapshot {
+            frames: self.frames(),
+            interarrival_ewma_us: ia,
+            rate_fps: if ia > 0.0 { 1e6 / ia } else { 0.0 },
+            layers: inner.layers.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("l{i}")).collect()
+    }
+
+    #[test]
+    fn folds_layer_densities_with_ewma() {
+        let obs = WorkloadObserver::new();
+        let ns = names(2);
+        obs.observe(&ns, &[0.5, 0.1], 1);
+        obs.observe(&ns, &[1.0, 0.1], 1);
+        let s = obs.snapshot();
+        assert_eq!(s.frames, 2);
+        assert_eq!(s.layers.len(), 2);
+        assert_eq!(s.layers[0].name, "l0");
+        // First sample seeds the EWMA; second folds at alpha=0.2.
+        assert!((s.layers[0].density_ewma - 0.6).abs() < 1e-9);
+        assert!((s.layers[1].density_ewma - 0.1).abs() < 1e-9);
+        assert_eq!(s.layers[0].frames, 2);
+    }
+
+    #[test]
+    fn empty_and_zero_frame_observations_are_inert() {
+        let obs = WorkloadObserver::new();
+        obs.observe(&names(3), &[0.1, 0.2, 0.3], 0);
+        let s = obs.snapshot();
+        assert_eq!(s, WorkloadSnapshot::default());
+        assert_eq!(s.rate_fps, 0.0);
+    }
+
+    #[test]
+    fn interarrival_needs_two_arrivals() {
+        let obs = WorkloadObserver::new();
+        let ns = names(1);
+        obs.observe(&ns, &[0.5], 1);
+        assert_eq!(obs.snapshot().interarrival_ewma_us, 0.0);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        obs.observe(&ns, &[0.5], 1);
+        let s = obs.snapshot();
+        assert!(s.interarrival_ewma_us >= 1000.0,
+                "slept 2ms between arrivals: {s:?}");
+        assert!(s.rate_fps > 0.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let obs = Arc::new(WorkloadObserver::new());
+        let ns = Arc::new(names(2));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (o, n) = (obs.clone(), ns.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        o.observe(&n, &[0.25, 0.75], 1);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = obs.snapshot();
+        assert_eq!(s.frames, 200);
+        assert!((s.layers[0].density_ewma - 0.25).abs() < 1e-9);
+        assert!((s.layers[1].density_ewma - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON produced by `sti-snn run --trace`.
+
+Usage: check_trace.py TRACE.json [MIN_LAYERS]
+
+Checks that the file parses as JSON, that `traceEvents` is a non-empty
+array of complete ("ph": "X") events each carrying name/cat/ts/dur,
+and that at least MIN_LAYERS distinct layer indices appear among the
+layer spans (`layer` / `stream.layer`) — i.e. every layer of the net
+actually emitted a span. Exits non-zero with a message on any failure
+so CI can gate on it.
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        fail("usage: check_trace.py TRACE.json [MIN_LAYERS]")
+    path = sys.argv[1]
+    min_layers = int(sys.argv[2]) if len(sys.argv) > 2 else 1
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+
+    layers = set()
+    cats = set()
+    for i, ev in enumerate(events):
+        for key in ("name", "cat", "ph", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                fail(f"event {i} missing {key!r}: {ev}")
+        if ev["ph"] != "X":
+            fail(f"event {i}: expected complete event ph=X, got "
+                 f"{ev['ph']!r}")
+        cats.add(ev["cat"])
+        if ev["name"] in ("layer", "stream.layer"):
+            layers.add(ev.get("args", {}).get("layer"))
+
+    if len(layers) < min_layers:
+        fail(f"{path}: {len(layers)} distinct layer span(s), "
+             f"expected >= {min_layers} (layers seen: {sorted(layers)})")
+
+    print(f"check_trace: OK: {len(events)} events, "
+          f"{len(layers)} layer(s), categories {sorted(cats)}, "
+          f"{trace.get('otherData', {}).get('dropped', 0)} dropped")
+
+
+if __name__ == "__main__":
+    main()
