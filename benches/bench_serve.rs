@@ -9,6 +9,7 @@
 
 use std::time::{Duration, Instant};
 
+use sti_snn::autotune::RetunePolicy;
 use sti_snn::codec::SpikeFrame;
 use sti_snn::dse::AutoTuneOptions;
 use sti_snn::session::{Session, SessionBuilder};
@@ -198,4 +199,77 @@ fn main() {
                 "auto-tuned configuration slower than the default \
                  ({ratio:.2}x)");
     }
+
+    // Retune under load: boot deliberately weak (accurate x 1) with
+    // the online tuner running, keep the pool loaded until the
+    // controller hot-swaps a generation, then compare request p99
+    // around the swap window against the post-swap steady state —
+    // what the zero-downtime handover costs the tail.
+    let mut session = builder(1, BackendKind::Accurate)
+        .online_tune(RetunePolicy {
+            interval: Duration::from_millis(50),
+            min_frames: 8,
+            hysteresis: 0.01,
+            cooldown: Duration::ZERO,
+            max_density_spread: 10.0,
+            headroom: 1.25,
+        })
+        .build()
+        .expect("session builds");
+    session.start_pool().expect("pool starts");
+    let log = session.retune_log().expect("online tuner running");
+    let deadline = Instant::now()
+        + Duration::from_secs(if smoke_mode() { 45 } else { 120 });
+    let mut rng = Rng::new(43);
+    let mut swap_window_lat: Vec<u64> = Vec::new();
+    while log.retunes() == 0 && Instant::now() < deadline {
+        let rxs: Vec<_> = (0..4)
+            .map(|_| {
+                let f = SpikeFrame::random(28, 28, 16, 0.2, &mut rng);
+                session.submit(f).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            let _ = r.prediction.expect("frame served across the swap");
+            swap_window_lat.push(r.latency_us);
+        }
+    }
+    if log.retunes() == 0 {
+        println!("pool online-tune: no swap before the deadline (slow \
+                  host) — skipping the retune-under-load row");
+    } else {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = fs
+            .iter()
+            .map(|f| session.submit(f.clone()).unwrap())
+            .collect();
+        let mut preds_post = Vec::with_capacity(fs.len());
+        let mut lat_post = Vec::with_capacity(fs.len());
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            preds_post.push(r.prediction.unwrap());
+            lat_post.push(r.latency_us);
+        }
+        let ns_post =
+            t0.elapsed().as_nanos() as f64 / fs.len() as f64;
+        set.add(BenchResult {
+            name: format!("pool online-retuned (generation {})",
+                          log.generation()),
+            iters: n_requests,
+            mean_ns: ns_post,
+            median_ns: ns_post,
+            min_ns: ns_post,
+        });
+        assert_eq!(preds1, preds_post,
+                   "online retune changed predictions");
+        let s = log.summary();
+        println!("pool online-tune: swapped to generation {} after {} \
+                  evaluation(s), predicted gain {:+.1}%",
+                 s.generation, s.evaluations,
+                 s.last_gain.unwrap_or(0.0) * 100.0);
+        print_percentiles("retune swap window", &mut swap_window_lat);
+        print_percentiles("post-swap steady", &mut lat_post);
+    }
+    session.shutdown();
 }

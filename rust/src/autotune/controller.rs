@@ -1,0 +1,512 @@
+//! The online tuner: a background controller that closes the
+//! observe → re-evaluate → decide → swap loop over a live
+//! [`ReplicaPool`].
+//!
+//! The controller owns nothing it serves with: the pool keeps serving
+//! while the controller sleeps, plans, and decides; only a go-decision
+//! touches it, through the pool's zero-downtime generation swap. Every
+//! swap is recorded as a [`RetuneEvent`] in the shared [`RetuneLog`],
+//! which also keeps the boot calibration + reference density — the
+//! exact inputs needed to reproduce any logged decision offline
+//! (`tests/online_tune.rs` replays them through
+//! [`super::measure::plan`] and asserts the same choice).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::arch::NetworkSpec;
+use crate::codec::SpikeFrame;
+use crate::coordinator::pipeline::{Pipeline, PipelineConfig};
+use crate::coordinator::replica::ReplicaPool;
+use crate::dataflow::ConvLatencyParams;
+use crate::dse::{calibrate, AutoTuneOptions, Calibration,
+                 CalibrationConfig, Candidate};
+use crate::sim::engine::LayerWeights;
+use crate::telemetry::{WorkloadObserver, WorkloadSnapshot};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::measure::{effective_fps, plan, MeasuredWorkload};
+use super::policy::{Decision, Observation, PolicyState, RetunePolicy};
+
+/// Everything needed to build a fresh replica set for any candidate:
+/// the un-pinned network, the serving pipeline config, and the weight
+/// sources. Factors and backend are the candidate's; everything else
+/// (weights, timesteps, schedule, tracing) is carried over, so a swap
+/// changes the design point and nothing else — predictions stay
+/// bit-identical by the backend/factor-invariance contract.
+#[derive(Clone)]
+pub struct PoolRecipe {
+    pub base_net: NetworkSpec,
+    pub config: PipelineConfig,
+    pub sources: Vec<LayerWeights>,
+}
+
+impl PoolRecipe {
+    /// Build `candidate.replicas` pipelines at the candidate's factors
+    /// and backend.
+    pub fn build(&self, candidate: &Candidate)
+                 -> anyhow::Result<Vec<Pipeline>> {
+        let net = self
+            .base_net
+            .clone()
+            .try_with_parallel_factors(&candidate.factors)?;
+        let mut config = self.config.clone();
+        config.backend = candidate.backend;
+        (0..candidate.replicas.max(1))
+            .map(|_| {
+                Pipeline::new(net.clone(), config.clone(),
+                              self.sources.clone())
+            })
+            .collect()
+    }
+
+    /// The boot probe's density in the observer's units: run one
+    /// synthetic frame at the calibration firing rate through this
+    /// recipe and average its per-layer codec ratios. This anchors the
+    /// measured-density ratio of
+    /// [`super::measure::measured_calibration`] — both sides of the
+    /// ratio are codec ratios, so the units cancel. Deterministic
+    /// (fixed seed, architectural counters).
+    pub fn reference_density(&self, rate: f64) -> anyhow::Result<f64> {
+        let mut pipe = Pipeline::new(self.base_net.clone(),
+                                     self.config.clone(),
+                                     self.sources.clone())?;
+        let (h, w, c) = pipe.input_shape();
+        let mut rng = Rng::new(CalibrationConfig::default().seed);
+        let frame = SpikeFrame::random(h, w, c, rate, &mut rng);
+        let rep = pipe.run(std::slice::from_ref(&frame));
+        if rep.codec_ratios.is_empty() {
+            return Ok(0.0);
+        }
+        Ok(rep.codec_ratios.iter().sum::<f64>()
+           / rep.codec_ratios.len() as f64)
+    }
+}
+
+/// One completed generation swap, with everything needed to audit it.
+#[derive(Debug, Clone)]
+pub struct RetuneEvent {
+    /// µs since the controller started.
+    pub at_us: u64,
+    /// Pool generation index after the swap.
+    pub generation: u64,
+    /// The configuration that was serving.
+    pub from: Candidate,
+    /// The configuration now serving.
+    pub to: Candidate,
+    /// Relative throughput gain the policy cleared.
+    pub predicted_gain: f64,
+    /// In-flight jobs the old generation drained during the swap.
+    pub drained: usize,
+    /// The reduced workload the decision was made on.
+    pub measured: MeasuredWorkload,
+    /// The full observer snapshot behind it (replay input).
+    pub snapshot: WorkloadSnapshot,
+}
+
+fn candidate_json(c: &Candidate) -> Json {
+    Json::obj(vec![
+        ("factors",
+         Json::Arr(c.factors.iter().map(|&f| Json::num(f as f64))
+                   .collect())),
+        ("replicas", Json::num(c.replicas as f64)),
+        ("backend", Json::str(c.backend.name())),
+    ])
+}
+
+impl RetuneEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_us", Json::num(self.at_us as f64)),
+            ("generation", Json::num(self.generation as f64)),
+            ("from", candidate_json(&self.from)),
+            ("to", candidate_json(&self.to)),
+            ("predicted_gain", Json::num(self.predicted_gain)),
+            ("drained", Json::num(self.drained as f64)),
+            ("measured_frames", Json::num(self.measured.frames as f64)),
+            ("measured_rate_fps", Json::num(self.measured.rate_fps)),
+            ("measured_mean_density",
+             Json::num(self.measured.mean_density)),
+            ("measured_density_spread",
+             Json::num(self.measured.density_spread)),
+        ])
+    }
+}
+
+/// Compact retune counters for `Session::telemetry()` and the metrics
+/// endpoint.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RetuneSummary {
+    /// Completed generation swaps.
+    pub retunes: u64,
+    /// Current pool generation (0 = boot).
+    pub generation: u64,
+    /// Re-planning passes the controller has run (swapped or held).
+    pub evaluations: u64,
+    /// Predicted gain of the most recent swap, if any.
+    pub last_gain: Option<f64>,
+}
+
+/// The boot-time model anchor recorded for offline replay.
+#[derive(Debug, Clone)]
+pub struct RetuneBaseline {
+    pub calibration: Calibration,
+    pub reference_density: f64,
+}
+
+/// Shared, thread-safe record of everything the controller did.
+/// Events are capped (oldest dropped) so a long-lived server cannot
+/// grow without bound; the counters never reset.
+#[derive(Default)]
+pub struct RetuneLog {
+    retunes: AtomicU64,
+    generation: AtomicU64,
+    evaluations: AtomicU64,
+    events: Mutex<Vec<RetuneEvent>>,
+    baseline: Mutex<Option<RetuneBaseline>>,
+}
+
+/// Events kept in the in-memory log.
+const EVENT_CAP: usize = 64;
+
+impl RetuneLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record(&self, event: RetuneEvent) {
+        self.retunes.fetch_add(1, Ordering::Relaxed);
+        self.generation.store(event.generation, Ordering::Relaxed);
+        let mut ev = self.events.lock().unwrap();
+        if ev.len() == EVENT_CAP {
+            ev.remove(0);
+        }
+        ev.push(event);
+    }
+
+    fn note_evaluation(&self) {
+        self.evaluations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn set_baseline(&self, baseline: RetuneBaseline) {
+        *self.baseline.lock().unwrap() = Some(baseline);
+    }
+
+    /// Completed generation swaps.
+    pub fn retunes(&self) -> u64 {
+        self.retunes.load(Ordering::Relaxed)
+    }
+
+    /// Current pool generation the log has seen.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// The recent swap events (up to the cap, oldest first).
+    pub fn events(&self) -> Vec<RetuneEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// The boot calibration + reference density the controller plans
+    /// with, once it has finished calibrating.
+    pub fn baseline(&self) -> Option<RetuneBaseline> {
+        self.baseline.lock().unwrap().clone()
+    }
+
+    pub fn summary(&self) -> RetuneSummary {
+        RetuneSummary {
+            retunes: self.retunes(),
+            generation: self.generation(),
+            evaluations: self.evaluations.load(Ordering::Relaxed),
+            last_gain: self
+                .events
+                .lock()
+                .unwrap()
+                .last()
+                .map(|e| e.predicted_gain),
+        }
+    }
+
+    /// The whole log as JSON (the `--retune-log` artifact): counters,
+    /// the baseline calibration, and the retained events.
+    pub fn to_json(&self) -> Json {
+        let s = self.summary();
+        let mut fields = vec![
+            ("retunes", Json::num(s.retunes as f64)),
+            ("generation", Json::num(s.generation as f64)),
+            ("evaluations", Json::num(s.evaluations as f64)),
+            ("events",
+             Json::Arr(self.events().iter().map(|e| e.to_json())
+                       .collect())),
+        ];
+        if let Some(b) = self.baseline() {
+            fields.push(("reference_density",
+                         Json::num(b.reference_density)));
+            fields.push(("calibration", b.calibration.to_json()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The background controller. Spawn with [`OnlineTuner::spawn`]; it
+/// re-plans every `policy.interval` until stopped (or dropped).
+pub struct OnlineTuner {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    log: Arc<RetuneLog>,
+}
+
+impl OnlineTuner {
+    /// Start the control loop over a live pool. `boot` is the
+    /// candidate the pool is currently serving; `opts` spans the same
+    /// search space the boot tune used (or would have). The first
+    /// loop iteration calibrates the baseline cost model — the one
+    /// simulator-probing step; every later tick is pure math over the
+    /// observer snapshot.
+    pub fn spawn(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
+                 observer: Arc<WorkloadObserver>, boot: Candidate,
+                 policy: RetunePolicy, opts: AutoTuneOptions) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let log = Arc::new(RetuneLog::new());
+        let handle = {
+            let stop = stop.clone();
+            let log = log.clone();
+            std::thread::spawn(move || {
+                control_loop(recipe, pool, observer, boot, policy, opts,
+                             stop, log);
+            })
+        };
+        Self { stop: stop.clone(), handle: Some(handle), log }
+    }
+
+    /// The shared log (counters, events, baseline).
+    pub fn log(&self) -> Arc<RetuneLog> {
+        self.log.clone()
+    }
+
+    /// Stop the control loop and join it. The pool is left serving
+    /// whatever generation is active.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for OnlineTuner {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Interruptible sleep: `interval` in small slices, bailing on stop.
+fn nap(interval: Duration, stop: &AtomicBool) -> bool {
+    let slice = Duration::from_millis(10);
+    let mut left = interval;
+    while left > Duration::ZERO {
+        if stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        let step = left.min(slice);
+        std::thread::sleep(step);
+        left -= step;
+    }
+    !stop.load(Ordering::SeqCst)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn control_loop(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
+                observer: Arc<WorkloadObserver>, boot: Candidate,
+                policy: RetunePolicy, opts: AutoTuneOptions,
+                stop: Arc<AtomicBool>, log: Arc<RetuneLog>) {
+    // One-time baseline: calibrate the cost model on the booted
+    // configuration (the same probes `dse::auto_tune` runs) and anchor
+    // the density units.
+    let epoch = Instant::now();
+    let boot_net = match recipe
+        .base_net
+        .clone()
+        .try_with_parallel_factors(&boot.factors)
+    {
+        Ok(n) => n,
+        Err(_) => return, // unbuildable boot candidate: nothing to do
+    };
+    let timing = ConvLatencyParams::optimized();
+    let base_cal = calibrate(&boot_net, &timing, &CalibrationConfig {
+        rate: opts.rate,
+        timesteps: opts.timesteps,
+        intra_parallel: opts.intra_parallel,
+        pipelined: opts.pipelined,
+        ..Default::default()
+    });
+    let Ok(reference_density) = recipe.reference_density(opts.rate)
+    else {
+        return;
+    };
+    log.set_baseline(RetuneBaseline {
+        calibration: base_cal.clone(),
+        reference_density,
+    });
+
+    let mut state = PolicyState::default();
+    let mut current = boot;
+    while nap(policy.interval, &stop) {
+        let snapshot = observer.snapshot();
+        // Cheap pre-guard: don't explore the space before enough
+        // traffic has been observed to plan from.
+        if snapshot.frames.saturating_sub(state.frames_at_last_swap)
+            < policy.min_frames
+        {
+            continue;
+        }
+        let Ok(Some(p)) = plan(&recipe.base_net, &opts, &base_cal,
+                               reference_density, &current,
+                               policy.headroom, &snapshot)
+        else {
+            continue;
+        };
+        log.note_evaluation();
+        let now_us = epoch.elapsed().as_micros() as u64;
+        let obs = Observation {
+            now_us,
+            frames: snapshot.frames,
+            density_spread: p.measured.density_spread,
+            same_config: p.chosen.candidate == current,
+            current_fps: effective_fps(&p.current),
+            candidate_fps: effective_fps(&p.chosen),
+        };
+        let Decision::Swap { gain } = policy.decide(&state, &obs) else {
+            continue;
+        };
+        let Ok(pipelines) = recipe.build(&p.chosen.candidate) else {
+            continue; // unbuildable candidate: keep serving
+        };
+        let stats = pool.swap(pipelines);
+        state.record_swap(now_us, snapshot.frames);
+        let to = p.chosen.candidate.clone();
+        log.record(RetuneEvent {
+            at_us: now_us,
+            generation: stats.generation,
+            from: std::mem::replace(&mut current, to.clone()),
+            to,
+            predicted_gain: gain,
+            drained: stats.drained,
+            measured: p.measured.clone(),
+            snapshot,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::sim::BackendKind;
+
+    fn recipe() -> PoolRecipe {
+        let net = arch::scnn3();
+        let sources =
+            crate::sim::engine::random_sources(&net, 1000);
+        PoolRecipe {
+            base_net: net,
+            config: PipelineConfig::default(),
+            sources,
+        }
+    }
+
+    #[test]
+    fn recipe_builds_any_candidate_bit_identically() {
+        let r = recipe();
+        let cand = Candidate {
+            factors: vec![4, 2],
+            replicas: 2,
+            backend: BackendKind::WordParallel,
+        };
+        let mut pipes = r.build(&cand).unwrap();
+        assert_eq!(pipes.len(), 2);
+        let (h, w, c) = pipes[0].input_shape();
+        let mut rng = Rng::new(3);
+        let frame = SpikeFrame::random(h, w, c, 0.2, &mut rng);
+        let a = pipes[0].run(std::slice::from_ref(&frame));
+        let b = pipes[1].run(std::slice::from_ref(&frame));
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.logits, b.logits);
+        // Different backend, same predictions (the swap contract).
+        let mut acc = r
+            .build(&Candidate { backend: BackendKind::Accurate, ..cand })
+            .unwrap();
+        let c = acc[0].run(std::slice::from_ref(&frame));
+        assert_eq!(a.predictions, c.predictions);
+        assert_eq!(a.logits, c.logits);
+        // Invalid factors error instead of panicking.
+        assert!(r
+            .build(&Candidate {
+                factors: vec![3],
+                replicas: 1,
+                backend: BackendKind::Accurate,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn reference_density_is_deterministic_and_positive() {
+        let r = recipe();
+        let a = r.reference_density(0.15).unwrap();
+        let b = r.reference_density(0.15).unwrap();
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+        // Denser probes measure denser reference traffic.
+        let dense = r.reference_density(0.9).unwrap();
+        assert!(dense > a);
+    }
+
+    #[test]
+    fn log_caps_events_and_summarises() {
+        let log = RetuneLog::new();
+        assert_eq!(log.summary(), RetuneSummary::default());
+        let snap = WorkloadSnapshot::default();
+        let m = MeasuredWorkload {
+            frames: 1,
+            rate_fps: 0.0,
+            mean_density: 0.1,
+            density_spread: 0.0,
+        };
+        let cand = |r: usize| Candidate {
+            factors: vec![1, 1],
+            replicas: r,
+            backend: BackendKind::Accurate,
+        };
+        for i in 0..(EVENT_CAP as u64 + 8) {
+            log.record(RetuneEvent {
+                at_us: i,
+                generation: i + 1,
+                from: cand(1),
+                to: cand(2),
+                predicted_gain: 0.5,
+                drained: 0,
+                measured: m.clone(),
+                snapshot: snap.clone(),
+            });
+        }
+        let s = log.summary();
+        assert_eq!(s.retunes, EVENT_CAP as u64 + 8);
+        assert_eq!(s.generation, EVENT_CAP as u64 + 8);
+        assert_eq!(s.last_gain, Some(0.5));
+        let events = log.events();
+        assert_eq!(events.len(), EVENT_CAP);
+        assert_eq!(events.last().unwrap().at_us, EVENT_CAP as u64 + 7);
+        // JSON renders and round-trips through the parser.
+        let j = format!("{}", log.to_json());
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("retunes").and_then(Json::as_f64),
+                   Some((EVENT_CAP + 8) as f64));
+    }
+}

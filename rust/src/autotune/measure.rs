@@ -1,0 +1,316 @@
+//! Measured-workload re-planning: turn a live telemetry snapshot into
+//! a calibrated DSE run and a rate-aware serving choice.
+//!
+//! The boot-time [`Calibration`] was fitted on synthetic probes at one
+//! firing rate. Live traffic has its own density (which moves the
+//! spike-gated op activity, and with it dynamic energy and the
+//! event-driven backend's host cost) and its own arrival rate (which
+//! sets how much throughput the pool actually needs). Everything here
+//! is a pure function of its inputs — the same snapshot always
+//! re-plans to the same point, so a controller decision can be
+//! reproduced offline from the logged snapshot (the acceptance test of
+//! `tests/online_tune.rs` does exactly that).
+
+use std::cmp::Ordering;
+
+use crate::arch::NetworkSpec;
+use crate::dataflow::ConvLatencyParams;
+use crate::dse::{self, Calibration, Candidate, CostModel, CostPoint,
+                 Evaluator, SearchSpace};
+use crate::sim::BackendKind;
+use crate::telemetry::WorkloadSnapshot;
+
+/// The live workload, reduced to what the cost model consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredWorkload {
+    /// Frames the snapshot covers.
+    pub frames: u64,
+    /// Observed arrival rate (frames/s, 0 until two arrivals).
+    pub rate_fps: f64,
+    /// Mean of the per-layer density EWMAs — the traffic's overall
+    /// spike-density level, in codec-ratio units.
+    pub mean_density: f64,
+    /// Max windowed per-layer density spread — the bimodality signal
+    /// the policy guards on.
+    pub density_spread: f64,
+}
+
+impl MeasuredWorkload {
+    /// Reduce an observer snapshot; `None` until at least one frame
+    /// has been observed (there is no workload to measure yet).
+    pub fn from_snapshot(s: &WorkloadSnapshot) -> Option<Self> {
+        if s.frames == 0 || s.layers.is_empty() {
+            return None;
+        }
+        let mean = s.layers.iter().map(|l| l.density_ewma).sum::<f64>()
+            / s.layers.len() as f64;
+        let spread = s
+            .layers
+            .iter()
+            .map(|l| l.density_spread())
+            .fold(0.0, f64::max);
+        Some(Self {
+            frames: s.frames,
+            rate_fps: s.rate_fps,
+            mean_density: mean,
+            density_spread: spread,
+        })
+    }
+}
+
+/// Re-scale a boot calibration to the measured workload. The density
+/// ratio (measured mean vs the boot probe's density in the same
+/// codec-ratio units) scales:
+///
+/// * `op_activity` — spike-gated ops track input density, so dynamic
+///   energy follows the live traffic (clamped to the physical `..=1`).
+/// * the **event-driven** backend's measured host-ns/frame — its cost
+///   is proportional to spike count. The word-parallel backend
+///   popcounts dense bit-planes and is density-invariant, so its
+///   timing stands.
+///
+/// The ratio is clamped to `[0.25, 4]`: beyond that the linear
+/// extrapolation from one probe point is noise, and an EWMA that far
+/// out re-calibrates again next tick anyway. Counter scales are
+/// architectural (density-independent fits) and pass through.
+pub fn measured_calibration(base: &Calibration, reference_density: f64,
+                            m: &MeasuredWorkload) -> Calibration {
+    let scale = if reference_density > 0.0 && m.mean_density > 0.0 {
+        (m.mean_density / reference_density).clamp(0.25, 4.0)
+    } else {
+        1.0
+    };
+    let mut cal = base.clone();
+    cal.op_activity = (base.op_activity * scale).clamp(1e-6, 1.0);
+    cal.host_ns_per_frame = base
+        .host_ns_per_frame
+        .iter()
+        .map(|&(b, ns)| match b {
+            BackendKind::Accurate => (b, ns * scale),
+            BackendKind::WordParallel => (b, ns),
+        })
+        .collect();
+    cal
+}
+
+/// Frames/s a point can actually serve end to end: the architectural
+/// pool rate capped by the measured host rate of its backend across
+/// its replicas (a design that simulates fast but computes slow on
+/// this host still bottlenecks on the host).
+pub fn effective_fps(p: &CostPoint) -> f64 {
+    match p.host_ns_per_frame {
+        Some(ns) if ns > 0.0 => {
+            p.pool_fps.min(p.candidate.replicas as f64 * 1e9 / ns)
+        }
+        _ => p.pool_fps,
+    }
+}
+
+/// Deterministic "cheapest adequate point" order: energy first, then
+/// LUTs, then the standing tie-break preferences of `dse::pareto`.
+fn frugal_order(a: &CostPoint, b: &CostPoint) -> Ordering {
+    a.energy_per_frame_j
+        .total_cmp(&b.energy_per_frame_j)
+        .then(a.resources.lut.cmp(&b.resources.lut))
+        .then_with(|| {
+            a.host_ns_per_frame
+                .unwrap_or(f64::INFINITY)
+                .total_cmp(&b.host_ns_per_frame.unwrap_or(f64::INFINITY))
+        })
+        .then(a.candidate.replicas.cmp(&b.candidate.replicas))
+        .then_with(|| a.candidate.factors.cmp(&b.candidate.factors))
+        .then_with(|| {
+            a.candidate.backend.name().cmp(b.candidate.backend.name())
+        })
+}
+
+/// Rate-aware serving choice. With a measured arrival rate, pick the
+/// *cheapest* fitting point whose [`effective_fps`] covers
+/// `need_fps` (rate x policy headroom) — serving a 50 fps workload
+/// with the max-throughput design wastes energy for latency nobody
+/// asked for. When no rate has been measured, or nothing covers it,
+/// fall back to the boot-time rule (max pool throughput that fits,
+/// [`dse::pareto::choose`]).
+pub fn choose_for_rate(points: &[CostPoint], need_fps: f64)
+                       -> Option<CostPoint> {
+    if need_fps > 0.0 {
+        let best = points
+            .iter()
+            .filter(|p| p.fits && effective_fps(p) >= need_fps)
+            .min_by(|a, b| frugal_order(a, b));
+        if let Some(b) = best {
+            return Some(b.clone());
+        }
+    }
+    dse::pareto::choose(points)
+}
+
+/// One reproducible re-planning result.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// The point the measured workload asks for.
+    pub chosen: CostPoint,
+    /// The serving configuration evaluated under the *same* measured
+    /// model — the apples-to-apples comparison the policy gates on.
+    pub current: CostPoint,
+    pub measured: MeasuredWorkload,
+    /// The re-scaled calibration both evaluations used.
+    pub calibration: Calibration,
+}
+
+/// Re-run the calibrated DSE against a measured snapshot:
+/// re-scale the boot calibration, explore the same space the boot
+/// tune would, choose rate-aware, and evaluate the serving candidate
+/// under the identical model. `Ok(None)` when there is nothing to
+/// measure yet or no point fits. Deterministic given its arguments.
+pub fn plan(base_net: &NetworkSpec, opts: &dse::AutoTuneOptions,
+            base_cal: &Calibration, reference_density: f64,
+            current: &Candidate, headroom: f64,
+            snapshot: &WorkloadSnapshot) -> anyhow::Result<Option<Plan>> {
+    let Some(measured) = MeasuredWorkload::from_snapshot(snapshot) else {
+        return Ok(None);
+    };
+    let calibration =
+        measured_calibration(base_cal, reference_density, &measured);
+    let budget = opts
+        .pe_budget
+        .unwrap_or_else(|| 8 * dse::min_pes(base_net));
+    let model = CostModel {
+        timing: ConvLatencyParams::optimized(),
+        calibration: calibration.clone(),
+        ..CostModel::default()
+    };
+    let space = SearchSpace::new(base_net.clone(), budget)
+        .with_replicas(opts.max_replicas)
+        .with_timesteps(opts.timesteps);
+    let ex = dse::explore(&space, &model);
+    let need_fps = measured.rate_fps * headroom.max(0.0);
+    let Some(chosen) = choose_for_rate(&ex.points, need_fps) else {
+        return Ok(None);
+    };
+    let eval = Evaluator::new(base_net, &model, opts.timesteps);
+    let current = eval.evaluate(current)?;
+    Ok(Some(Plan { chosen, current, measured, calibration }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::scnn3;
+    use crate::telemetry::WorkloadObserver;
+
+    fn snapshot(densities: &[f64]) -> WorkloadSnapshot {
+        let obs = WorkloadObserver::new();
+        let names: Vec<String> =
+            (0..densities.len()).map(|i| format!("l{i}")).collect();
+        obs.observe(&names, densities, 1);
+        obs.snapshot()
+    }
+
+    #[test]
+    fn measured_workload_reduces_a_snapshot() {
+        assert!(MeasuredWorkload::from_snapshot(
+            &WorkloadSnapshot::default()).is_none());
+        let m =
+            MeasuredWorkload::from_snapshot(&snapshot(&[0.2, 0.4]))
+                .unwrap();
+        assert_eq!(m.frames, 1);
+        assert!((m.mean_density - 0.3).abs() < 1e-9);
+        assert_eq!(m.density_spread, 0.0, "single observation window");
+    }
+
+    #[test]
+    fn calibration_scales_activity_and_event_backend_only() {
+        let base = Calibration {
+            op_activity: 0.2,
+            host_ns_per_frame: vec![
+                (BackendKind::Accurate, 1000.0),
+                (BackendKind::WordParallel, 500.0),
+            ],
+            ..Calibration::identity()
+        };
+        let m = MeasuredWorkload {
+            frames: 10,
+            rate_fps: 100.0,
+            mean_density: 0.4,
+            density_spread: 0.0,
+        };
+        // Measured density 2x the reference: activity and the
+        // event-driven host time double; word-parallel is invariant.
+        let cal = measured_calibration(&base, 0.2, &m);
+        assert!((cal.op_activity - 0.4).abs() < 1e-9);
+        assert_eq!(cal.host_ns(BackendKind::Accurate), Some(2000.0));
+        assert_eq!(cal.host_ns(BackendKind::WordParallel), Some(500.0));
+        // Clamps: a 100x density ratio saturates at 4x, activity at 1.
+        let dense = MeasuredWorkload { mean_density: 20.0, ..m.clone() };
+        let cal = measured_calibration(&base, 0.2, &dense);
+        assert!((cal.op_activity - 0.8).abs() < 1e-9);
+        assert_eq!(cal.host_ns(BackendKind::Accurate), Some(4000.0));
+    }
+
+    #[test]
+    fn choose_for_rate_prefers_cheapest_adequate_point() {
+        let model = CostModel::default();
+        let net = scnn3();
+        let space = SearchSpace::new(net, 144).with_replicas(4);
+        let ex = dse::explore(&space, &model);
+        // Unconstrained rate: identical to the boot-time choice.
+        assert_eq!(choose_for_rate(&ex.points, 0.0),
+                   dse::pareto::choose(&ex.points));
+        // A modest rate target: the choice covers it, fits, and no
+        // other covering point is cheaper under the frugal order.
+        let boot = dse::pareto::choose(&ex.points).unwrap();
+        let need = effective_fps(&boot) / 10.0;
+        let c = choose_for_rate(&ex.points, need).unwrap();
+        assert!(c.fits);
+        assert!(effective_fps(&c) >= need);
+        for p in ex.points.iter().filter(|p| {
+            p.fits && effective_fps(p) >= need
+        }) {
+            assert!(p.energy_per_frame_j >= c.energy_per_frame_j - 1e-12,
+                    "cheaper adequate point {:?} not chosen",
+                    p.candidate);
+        }
+        // An impossible rate falls back to max-throughput.
+        assert_eq!(choose_for_rate(&ex.points, 1e18),
+                   dse::pareto::choose(&ex.points));
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_evaluates_current_under_same_model() {
+        let net = scnn3();
+        let opts = dse::AutoTuneOptions {
+            pe_budget: Some(72),
+            max_replicas: 2,
+            ..Default::default()
+        };
+        let base = Calibration {
+            op_activity: 0.15,
+            host_ns_per_frame: vec![
+                (BackendKind::Accurate, 50_000.0),
+                (BackendKind::WordParallel, 10_000.0),
+            ],
+            ..Calibration::identity()
+        };
+        let current = Candidate {
+            factors: vec![1, 1],
+            replicas: 1,
+            backend: BackendKind::Accurate,
+        };
+        let snap = snapshot(&[0.3, 0.3, 0.3, 0.3, 0.3]);
+        let a = plan(&net, &opts, &base, 0.15, &current, 1.25, &snap)
+            .unwrap()
+            .expect("plannable snapshot");
+        let b = plan(&net, &opts, &base, 0.15, &current, 1.25, &snap)
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.chosen, b.chosen, "plan must be deterministic");
+        assert_eq!(a.current, b.current);
+        assert_eq!(a.current.candidate, current);
+        // Empty snapshot: nothing to plan from.
+        assert!(plan(&net, &opts, &base, 0.15, &current, 1.25,
+                     &WorkloadSnapshot::default())
+            .unwrap()
+            .is_none());
+    }
+}

@@ -1,0 +1,58 @@
+//! Online co-optimization: live-traffic DSE with zero-downtime pool
+//! hot-swap (ROADMAP item 5).
+//!
+//! A configuration tuned at boot is tuned for the *probe* workload:
+//! `dse::calibrate` measures op activity and host speed on synthetic
+//! frames at one firing rate, and the chosen design point inherits
+//! those assumptions. Real traffic drifts — sparser or denser events,
+//! faster or slower arrivals — and the serving point that was optimal
+//! at boot stops being optimal. This subsystem closes the loop the
+//! co-design thesis asks for:
+//!
+//! ```text
+//!        observe                re-evaluate              decide
+//!  ┌──────────────────┐   ┌──────────────────────┐   ┌───────────┐
+//!  │ WorkloadObserver │──▶│ measured Calibration │──▶│ Retune-   │
+//!  │ density min/max/ │   │ -> dse::explore over │   │ Policy    │
+//!  │ EWMA, rate_fps   │   │ the live search space│   │ hysteresis│
+//!  └──────────────────┘   └──────────────────────┘   │ cooldown  │
+//!            ▲                                       │ min-frames│
+//!            │ per-frame codec ratios                └─────┬─────┘
+//!            │                                      swap   │ hold
+//!  ┌─────────┴────────┐                                    ▼
+//!  │   ReplicaPool    │◀──────────── build new generation, │
+//!  │ (generation N)   │   redirect, drain, retire old ◀────┘
+//!  └──────────────────┘
+//! ```
+//!
+//! * [`policy`] — the pure decision function: hysteresis margin,
+//!   cooldown, min-frames-observed and bimodal-workload guards, so the
+//!   controller cannot flap between near-equal points.
+//! * [`measure`] — measured-workload re-calibration: the boot
+//!   [`Calibration`](crate::dse::Calibration) re-scaled by observed
+//!   spike density, and the rate-aware serving choice over the
+//!   re-evaluated space. Pure functions of their inputs, so the
+//!   controller's choice is reproducible offline from a logged
+//!   snapshot (pinned by `tests/online_tune.rs`).
+//! * [`controller`] — the [`OnlineTuner`] thread gluing them to a live
+//!   [`ReplicaPool`](crate::coordinator::replica::ReplicaPool): every
+//!   interval it snapshots the observer, re-plans, asks the policy,
+//!   and on a go-decision performs the build → redirect → drain →
+//!   retire generation swap. Every swap is a [`RetuneEvent`] in the
+//!   shared [`RetuneLog`], surfaced in `Session::telemetry()` and as
+//!   `sti_retune_total` / `sti_retune_generation` on the metrics
+//!   endpoint.
+//!
+//! Entry points: `Session::builder().online_tune(policy)` or
+//! `sti-snn serve --online-tune`.
+
+pub mod controller;
+pub mod measure;
+pub mod policy;
+
+pub use controller::{OnlineTuner, PoolRecipe, RetuneEvent, RetuneLog,
+                     RetuneSummary};
+pub use measure::{choose_for_rate, effective_fps, measured_calibration,
+                  plan, MeasuredWorkload, Plan};
+pub use policy::{Decision, HoldReason, Observation, PolicyState,
+                 RetunePolicy};

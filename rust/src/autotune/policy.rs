@@ -1,0 +1,246 @@
+//! The retune decision policy: when is a measured-workload re-plan
+//! allowed to actually swap the serving pool?
+//!
+//! A generation swap is cheap but not free (the old generation drains,
+//! replicas rebuild), and the measured workload is noisy. Without
+//! damping, two design points whose predicted throughput differs by
+//! less than the measurement noise would make the controller flap
+//! between them forever. [`RetunePolicy::decide`] is the pure gate —
+//! no clocks, no I/O, logical time in — so the no-oscillation
+//! guarantee is testable exhaustively (`tests/prop_autotune.rs`):
+//!
+//! * **hysteresis** — the candidate must beat the serving point by a
+//!   relative margin, not just beat it.
+//! * **cooldown** — a minimum wall-time between swaps, so even a
+//!   workload that alternates across the margin cannot thrash.
+//! * **min frames** — enough traffic must have been observed since
+//!   the last swap for the EWMAs to mean anything.
+//! * **bimodal guard** — a wide windowed density spread
+//!   ([`LayerWorkload::density_spread`](crate::telemetry::LayerWorkload::density_spread))
+//!   means the EWMA sits between two modes neither of which it
+//!   represents; the policy holds rather than tune for a fiction.
+
+use std::time::Duration;
+
+/// Damping knobs of the online tuner. Defaults are conservative — a
+/// production pool should re-tune on the minutes scale, not thrash on
+/// the seconds scale; tests dial everything down.
+#[derive(Debug, Clone)]
+pub struct RetunePolicy {
+    /// How often the controller wakes to observe and re-plan.
+    pub interval: Duration,
+    /// Frames that must be observed since the last swap before the
+    /// next one (EWMA warm-up guard).
+    pub min_frames: u64,
+    /// Relative throughput gain the candidate must offer over the
+    /// serving point (0.10 = 10% better or stay put).
+    pub hysteresis: f64,
+    /// Minimum wall-time between swaps.
+    pub cooldown: Duration,
+    /// Hold when the windowed per-layer density spread exceeds this
+    /// (bimodal traffic — the EWMA is not a workload).
+    pub max_density_spread: f64,
+    /// Throughput headroom the chosen point must have over the
+    /// measured arrival rate (1.25 = provision for 25% above the
+    /// observed rate) — see [`super::measure::choose_for_rate`].
+    pub headroom: f64,
+}
+
+impl Default for RetunePolicy {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_secs(2),
+            min_frames: 32,
+            hysteresis: 0.10,
+            cooldown: Duration::from_secs(10),
+            max_density_spread: 0.35,
+            headroom: 1.25,
+        }
+    }
+}
+
+/// What the controller remembers between decisions.
+#[derive(Debug, Clone, Default)]
+pub struct PolicyState {
+    /// Logical time of the last swap (µs), `None` before the first.
+    pub last_swap_us: Option<u64>,
+    /// Total frames observed at the last swap.
+    pub frames_at_last_swap: u64,
+}
+
+impl PolicyState {
+    pub fn record_swap(&mut self, now_us: u64, frames: u64) {
+        self.last_swap_us = Some(now_us);
+        self.frames_at_last_swap = frames;
+    }
+}
+
+/// One decision's inputs, all pre-measured by the caller (the policy
+/// itself never looks at a clock or a pool).
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Logical now (µs since the controller started).
+    pub now_us: u64,
+    /// Total frames observed so far.
+    pub frames: u64,
+    /// Max windowed per-layer density spread of the snapshot.
+    pub density_spread: f64,
+    /// The re-plan chose the configuration already serving.
+    pub same_config: bool,
+    /// Effective frames/s of the serving point under the measured
+    /// calibration.
+    pub current_fps: f64,
+    /// Effective frames/s of the re-planned candidate, same model.
+    pub candidate_fps: f64,
+}
+
+/// Why a decision held.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HoldReason {
+    /// The re-plan agrees with the serving configuration.
+    SameConfig,
+    /// Not enough frames observed since the last swap.
+    InsufficientFrames,
+    /// Inside the post-swap cooldown window.
+    Cooldown,
+    /// Windowed density spread too wide (bimodal traffic).
+    Bimodal,
+    /// Candidate gain below the hysteresis margin.
+    WithinHysteresis,
+}
+
+/// The gate's verdict.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Swap generations; `gain` is the predicted relative throughput
+    /// improvement that cleared the margin.
+    Swap { gain: f64 },
+    Hold(HoldReason),
+}
+
+impl RetunePolicy {
+    /// The pure retune gate. Guards run cheapest-first; only an
+    /// observation that clears every one produces a swap.
+    pub fn decide(&self, state: &PolicyState, obs: &Observation)
+                  -> Decision {
+        if obs.same_config {
+            return Decision::Hold(HoldReason::SameConfig);
+        }
+        if obs.frames.saturating_sub(state.frames_at_last_swap)
+            < self.min_frames
+        {
+            return Decision::Hold(HoldReason::InsufficientFrames);
+        }
+        if let Some(last) = state.last_swap_us {
+            let cooldown_us = self.cooldown.as_micros() as u64;
+            if obs.now_us.saturating_sub(last) < cooldown_us {
+                return Decision::Hold(HoldReason::Cooldown);
+            }
+        }
+        if obs.density_spread > self.max_density_spread {
+            return Decision::Hold(HoldReason::Bimodal);
+        }
+        let gain = if obs.current_fps > 0.0 {
+            obs.candidate_fps / obs.current_fps - 1.0
+        } else if obs.candidate_fps > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        };
+        if gain > 0.0 && gain >= self.hysteresis {
+            Decision::Swap { gain }
+        } else {
+            Decision::Hold(HoldReason::WithinHysteresis)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetunePolicy {
+        RetunePolicy {
+            interval: Duration::from_millis(100),
+            min_frames: 10,
+            hysteresis: 0.10,
+            cooldown: Duration::from_millis(1000),
+            max_density_spread: 0.35,
+            headroom: 1.25,
+        }
+    }
+
+    fn obs(now_us: u64, frames: u64, gain: f64) -> Observation {
+        Observation {
+            now_us,
+            frames,
+            density_spread: 0.0,
+            same_config: false,
+            current_fps: 100.0,
+            candidate_fps: 100.0 * (1.0 + gain),
+        }
+    }
+
+    #[test]
+    fn guards_fire_in_order() {
+        let p = policy();
+        let mut state = PolicyState::default();
+
+        let mut same = obs(0, 100, 1.0);
+        same.same_config = true;
+        assert_eq!(p.decide(&state, &same),
+                   Decision::Hold(HoldReason::SameConfig));
+
+        assert_eq!(p.decide(&state, &obs(0, 5, 1.0)),
+                   Decision::Hold(HoldReason::InsufficientFrames));
+
+        let mut bimodal = obs(0, 100, 1.0);
+        bimodal.density_spread = 0.5;
+        assert_eq!(p.decide(&state, &bimodal),
+                   Decision::Hold(HoldReason::Bimodal));
+
+        assert_eq!(p.decide(&state, &obs(0, 100, 0.05)),
+                   Decision::Hold(HoldReason::WithinHysteresis));
+
+        match p.decide(&state, &obs(0, 100, 0.5)) {
+            Decision::Swap { gain } => assert!((gain - 0.5).abs() < 1e-9),
+            d => panic!("expected swap, got {d:?}"),
+        }
+
+        // After a swap: cooldown and min-frames both re-arm.
+        state.record_swap(0, 100);
+        assert_eq!(p.decide(&state, &obs(500_000, 200, 0.5)),
+                   Decision::Hold(HoldReason::Cooldown));
+        assert_eq!(p.decide(&state, &obs(2_000_000, 105, 0.5)),
+                   Decision::Hold(HoldReason::InsufficientFrames));
+        assert!(matches!(p.decide(&state, &obs(2_000_000, 200, 0.5)),
+                         Decision::Swap { .. }));
+    }
+
+    #[test]
+    fn losing_candidate_never_swaps() {
+        let p = policy();
+        let state = PolicyState::default();
+        // Worse, equal, and marginally-better candidates all hold.
+        for gain in [-0.5, 0.0, 0.0999] {
+            assert_eq!(p.decide(&state, &obs(0, 100, gain)),
+                       Decision::Hold(HoldReason::WithinHysteresis),
+                       "gain {gain}");
+        }
+    }
+
+    #[test]
+    fn dead_current_config_swaps_to_anything_live() {
+        let p = policy();
+        let state = PolicyState::default();
+        let o = Observation {
+            now_us: 0,
+            frames: 100,
+            density_spread: 0.0,
+            same_config: false,
+            current_fps: 0.0,
+            candidate_fps: 1.0,
+        };
+        assert!(matches!(p.decide(&state, &o), Decision::Swap { .. }));
+    }
+}

@@ -1,5 +1,6 @@
 //! Multi-pipeline parallel serving: N accelerator-pipeline replicas
-//! draining one shared work queue.
+//! draining one shared work queue, with zero-downtime generation
+//! swaps.
 //!
 //! The paper's system is one physical accelerator; the reproduction's
 //! north star is a *production* simulator that saturates the host, so
@@ -20,16 +21,35 @@
 //! frames) x layer workers (within a frame) x row bands (within a
 //! layer).
 //!
-//! Per-replica counters aggregate in [`crate::metrics::PoolMetrics`].
+//! # Generations and hot swap
+//!
+//! The pool's queue + workers + metrics live in a *generation*. A
+//! [`ReplicaPool::swap`] builds the next generation in the background
+//! (new replicas, fresh queue, workers already running), atomically
+//! redirects [`ReplicaPool::submit`] / [`ReplicaPool::try_submit`] to
+//! it, then retires the old generation: its workers drain every job
+//! that was queued before the redirect and only then exit. No request
+//! is dropped and no reply receiver is left dangling — the property
+//! the online auto-tuner (`crate::autotune`) and the zero-downtime
+//! model-reload path (ROADMAP item 3) both build on. The redirect is
+//! race-free because `submit` pushes while holding the generation
+//! read lock: a concurrent swap's write lock cannot land between the
+//! generation lookup and the push, so every accepted job reaches a
+//! queue whose workers have not yet been told to stop.
+//!
+//! Per-replica counters aggregate in [`crate::metrics::PoolMetrics`]
+//! (one set per generation — a swap starts fresh books sized to the
+//! new replica count).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::codec::SpikeFrame;
 use crate::metrics::PoolMetrics;
+use crate::telemetry::WorkloadObserver;
 
 use super::batch::Batcher;
 use super::pipeline::Pipeline;
@@ -56,12 +76,137 @@ pub struct PoolResult {
     pub latency_us: u64,
 }
 
-/// A pool of pipeline replicas behind one queue.
-pub struct ReplicaPool {
+/// What a completed [`ReplicaPool::swap`] reports.
+#[derive(Debug, Clone, Copy)]
+pub struct SwapStats {
+    /// Index of the generation now serving (0 = the boot generation).
+    pub generation: u64,
+    /// Replica count of the new generation.
+    pub replicas: usize,
+    /// Jobs that were still owned by the old generation at the
+    /// redirect and were drained to completion before it retired.
+    pub drained: usize,
+}
+
+/// One queue + worker-set + metrics unit. The pool holds the active
+/// generation behind a `RwLock`; a swap replaces it wholesale.
+struct Generation {
     queue: Arc<Batcher<PoolJob>>,
     stop: Arc<AtomicBool>,
     metrics: Arc<PoolMetrics>,
-    workers: Vec<JoinHandle<()>>,
+    /// Jobs accepted but not yet replied to (incremented at submit,
+    /// decremented after the reply is sent) — the drain condition.
+    in_flight: Arc<AtomicU64>,
+    replicas: usize,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Generation {
+    fn spawn(pipelines: Vec<Pipeline>, max_batch: usize,
+             max_wait: Duration, capacity: usize,
+             observer: Option<Arc<WorkloadObserver>>) -> Self {
+        assert!(!pipelines.is_empty(), "pool needs at least one replica");
+        let queue =
+            Arc::new(Batcher::with_capacity(max_batch, max_wait, capacity));
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(PoolMetrics::new(pipelines.len()));
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let replicas = pipelines.len();
+        let workers = pipelines
+            .into_iter()
+            .enumerate()
+            .map(|(idx, mut pipe)| {
+                let queue = queue.clone();
+                let stop = stop.clone();
+                let metrics = metrics.clone();
+                let in_flight = in_flight.clone();
+                let observer = observer.clone();
+                std::thread::spawn(move || {
+                    loop {
+                        let batch = queue.next_batch();
+                        if batch.is_empty() {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            continue;
+                        }
+                        for job in batch {
+                            serve_one(&mut pipe, idx, job, &metrics,
+                                      observer.as_deref());
+                            in_flight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+        Self {
+            queue,
+            stop,
+            metrics,
+            in_flight,
+            replicas,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    fn push(&self, job: PoolJob) {
+        // Count before pushing so a drain racing this submit can never
+        // observe "idle" while the job is in neither counter nor queue.
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.queue.push(job);
+    }
+
+    fn try_push(&self, job: PoolJob) -> Result<(), PoolJob> {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        match self.queue.try_push(job) {
+            Ok(()) => Ok(()),
+            Err(job) => {
+                self.in_flight.fetch_sub(1, Ordering::SeqCst);
+                Err(job)
+            }
+        }
+    }
+
+    /// Wait until every accepted job has been replied to. Returns the
+    /// number of jobs that were in flight on entry. Does not stop the
+    /// workers — the generation keeps serving afterwards.
+    fn drain(&self) -> usize {
+        let pending = self.in_flight.load(Ordering::SeqCst) as usize;
+        while self.in_flight.load(Ordering::SeqCst) > 0 {
+            // A fully-retired generation (workers joined elsewhere)
+            // cannot make progress; don't spin forever on its account.
+            let ws = self.workers.lock().unwrap();
+            if ws.iter().all(|w| w.is_finished()) {
+                break;
+            }
+            drop(ws);
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        pending
+    }
+
+    /// Stop accepting progress, drain in-flight jobs, join workers.
+    /// Returns the drained in-flight count. Idempotent.
+    fn retire(&self) -> usize {
+        self.stop.store(true, Ordering::SeqCst);
+        let drained = self.drain();
+        let workers: Vec<_> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for w in workers {
+            let _ = w.join();
+        }
+        drained
+    }
+}
+
+/// A pool of pipeline replicas behind one queue.
+pub struct ReplicaPool {
+    active: RwLock<Arc<Generation>>,
+    generation: AtomicU64,
+    max_batch: usize,
+    max_wait: Duration,
+    capacity: usize,
+    observer: Option<Arc<WorkloadObserver>>,
     next_id: AtomicU64,
 }
 
@@ -80,53 +225,59 @@ impl ReplicaPool {
     /// queueing without limit — the event-streaming backpressure path.
     pub fn with_capacity(pipelines: Vec<Pipeline>, max_batch: usize,
                          max_wait: Duration, capacity: usize) -> Self {
-        assert!(!pipelines.is_empty(), "pool needs at least one replica");
-        let queue =
-            Arc::new(Batcher::with_capacity(max_batch, max_wait, capacity));
-        let stop = Arc::new(AtomicBool::new(false));
-        let metrics = Arc::new(PoolMetrics::new(pipelines.len()));
-        let workers = pipelines
-            .into_iter()
-            .enumerate()
-            .map(|(idx, mut pipe)| {
-                let queue = queue.clone();
-                let stop = stop.clone();
-                let metrics = metrics.clone();
-                std::thread::spawn(move || {
-                    loop {
-                        let batch = queue.next_batch();
-                        if batch.is_empty() {
-                            if stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            continue;
-                        }
-                        for job in batch {
-                            serve_one(&mut pipe, idx, job, &metrics);
-                        }
-                    }
-                })
-            })
-            .collect();
+        Self::with_observer(pipelines, max_batch, max_wait, capacity, None)
+    }
+
+    /// Full constructor: an attached [`WorkloadObserver`] sees every
+    /// served frame's per-layer codec ratios — the measured-workload
+    /// feed the online auto-tuner re-plans from. Generations created
+    /// by [`ReplicaPool::swap`] inherit the observer.
+    pub fn with_observer(pipelines: Vec<Pipeline>, max_batch: usize,
+                         max_wait: Duration, capacity: usize,
+                         observer: Option<Arc<WorkloadObserver>>)
+                         -> Self {
+        let gen = Generation::spawn(pipelines, max_batch, max_wait,
+                                    capacity, observer.clone());
         Self {
-            queue,
-            stop,
-            metrics,
-            workers,
+            active: RwLock::new(Arc::new(gen)),
+            generation: AtomicU64::new(0),
+            max_batch,
+            max_wait,
+            capacity,
+            observer,
             next_id: AtomicU64::new(0),
         }
     }
 
+    fn active(&self) -> Arc<Generation> {
+        self.active.read().unwrap().clone()
+    }
+
+    /// Replica count of the serving generation.
     pub fn replicas(&self) -> usize {
-        self.workers.len()
+        self.active().replicas
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.len()
+        self.active().queue.len()
     }
 
+    /// Jobs accepted by the serving generation and not yet replied to
+    /// (queued + being computed).
+    pub fn in_flight(&self) -> usize {
+        self.active().in_flight.load(Ordering::SeqCst) as usize
+    }
+
+    /// Index of the serving generation: 0 at boot, +1 per completed
+    /// [`ReplicaPool::swap`].
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Serving counters of the *active* generation (a swap starts a
+    /// fresh set sized to the new replica count).
     pub fn metrics(&self) -> Arc<PoolMetrics> {
-        self.metrics.clone()
+        self.active().metrics.clone()
     }
 
     /// Enqueue a frame; the receiver yields the result when a replica
@@ -134,7 +285,10 @@ impl ReplicaPool {
     pub fn submit(&self, frame: SpikeFrame) -> Receiver<PoolResult> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.queue.push(PoolJob {
+        // Push under the read guard: a concurrent swap cannot retire
+        // this generation between lookup and push (see module docs).
+        let gen = self.active.read().unwrap();
+        gen.push(PoolJob {
             id,
             frame,
             enqueued_at: Instant::now(),
@@ -150,7 +304,8 @@ impl ReplicaPool {
                       -> Result<Receiver<PoolResult>, SpikeFrame> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        match self.queue.try_push(PoolJob {
+        let gen = self.active.read().unwrap();
+        match gen.try_push(PoolJob {
             id,
             frame,
             enqueued_at: Instant::now(),
@@ -168,26 +323,50 @@ impl ReplicaPool {
             .map_err(|_| anyhow::anyhow!("replica pool shut down"))
     }
 
-    /// Stop accepting work, let workers drain the queue, and join them.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    /// Wait until every accepted job has been replied to, without
+    /// stopping the workers; returns how many were in flight when the
+    /// drain began. The same wait is what a generation swap runs while
+    /// retiring the old replica set.
+    pub fn drain(&self) -> usize {
+        self.active().drain()
+    }
+
+    /// Zero-downtime hot swap: start serving from `pipelines` without
+    /// dropping a single in-flight or future request. The new
+    /// generation's workers are already running when `submit` /
+    /// `try_submit` are redirected to it; the old generation then
+    /// drains everything it accepted (the [`ReplicaPool::drain`]
+    /// wait) and retires. Blocks until the old generation is fully
+    /// drained and joined.
+    pub fn swap(&self, pipelines: Vec<Pipeline>) -> SwapStats {
+        let fresh = Arc::new(Generation::spawn(
+            pipelines, self.max_batch, self.max_wait, self.capacity,
+            self.observer.clone()));
+        let replicas = fresh.replicas;
+        let old = {
+            let mut active = self.active.write().unwrap();
+            std::mem::replace(&mut *active, fresh)
+        };
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let drained = old.retire();
+        SwapStats { generation, replicas, drained }
+    }
+
+    /// Stop accepting work, let workers drain the queue, and join them
+    /// inline.
+    pub fn shutdown(self) {
+        self.active().retire();
     }
 }
 
 impl Drop for ReplicaPool {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.active().retire();
     }
 }
 
 fn serve_one(pipe: &mut Pipeline, idx: usize, job: PoolJob,
-             metrics: &PoolMetrics) {
+             metrics: &PoolMetrics, observer: Option<&WorkloadObserver>) {
     let t0 = Instant::now();
     let rep = pipe.run(std::slice::from_ref(&job.frame));
     let busy_us = t0.elapsed().as_micros() as u64;
@@ -197,6 +376,9 @@ fn serve_one(pipe: &mut Pipeline, idx: usize, job: PoolJob,
         metrics.record_error(idx);
     } else {
         metrics.record(idx, latency_us, busy_us);
+    }
+    if let Some(obs) = observer {
+        obs.observe(&rep.layer_names, &rep.codec_ratios, rep.frames);
     }
     let _ = job.reply.send(PoolResult {
         id: job.id,
@@ -224,19 +406,20 @@ mod tests {
             .build()
     }
 
-    fn pipes(n: usize) -> Vec<Pipeline> {
+    fn pipes_with(n: usize, backend: BackendKind) -> Vec<Pipeline> {
         (0..n)
             .map(|_| {
                 Pipeline::random(
                     mini_net(),
-                    PipelineConfig {
-                        backend: BackendKind::WordParallel,
-                        ..Default::default()
-                    },
+                    PipelineConfig { backend, ..Default::default() },
                 )
                 .unwrap()
             })
             .collect()
+    }
+
+    fn pipes(n: usize) -> Vec<Pipeline> {
+        pipes_with(n, BackendKind::WordParallel)
     }
 
     fn frames(n: usize, seed: u64) -> Vec<SpikeFrame> {
@@ -345,6 +528,108 @@ mod tests {
         assert!(r.prediction.is_some());
         assert_eq!(r.logits.len(), 10);
         assert_eq!(r.replica, 0);
+        pool.shutdown();
+    }
+
+    /// Regression for the pending-reply-loss class of bug: every
+    /// receiver handed out before, during, and after a swap resolves —
+    /// the old generation drains everything it accepted before
+    /// retiring, and redirected submits land on live workers.
+    #[test]
+    fn swap_preserves_every_pending_reply() {
+        let fs = frames(24, 5);
+        let mut serial = pipes(1).pop().unwrap();
+        let want: Vec<usize> = fs
+            .iter()
+            .map(|f| serial.run(std::slice::from_ref(f)).predictions[0])
+            .collect();
+
+        let pool = ReplicaPool::new(pipes(2), 2, Duration::from_millis(1));
+        assert_eq!(pool.generation(), 0);
+        let rxs_before: Vec<_> = fs[..12]
+            .iter()
+            .map(|f| pool.submit(f.clone()))
+            .collect();
+        // Swap while the first half is still queued/in flight; the new
+        // generation runs a different host backend (results bit-exact).
+        let stats = pool.swap(pipes_with(3, BackendKind::Accurate));
+        assert_eq!(stats.generation, 1);
+        assert_eq!(stats.replicas, 3);
+        assert_eq!(pool.generation(), 1);
+        assert_eq!(pool.replicas(), 3);
+        let rxs_after: Vec<_> = fs[12..]
+            .iter()
+            .map(|f| pool.submit(f.clone()))
+            .collect();
+        let got: Vec<usize> = rxs_before
+            .into_iter()
+            .chain(rxs_after)
+            .map(|rx| {
+                rx.recv().expect("reply lost across swap")
+                    .prediction
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(got, want);
+        pool.shutdown();
+    }
+
+    /// Swapping to an identically-configured replica set is invisible
+    /// in the results: logits and predictions are bit-identical before
+    /// and after (the bit-exactness contract the auto-tuner leans on).
+    #[test]
+    fn swap_to_identical_config_is_bit_exact() {
+        let fs = frames(6, 6);
+        let pool = ReplicaPool::new(pipes(1), 4, Duration::from_millis(1));
+        let before: Vec<_> = fs
+            .iter()
+            .map(|f| pool.infer(f.clone()).unwrap())
+            .collect();
+        pool.swap(pipes(1));
+        let after: Vec<_> = fs
+            .iter()
+            .map(|f| pool.infer(f.clone()).unwrap())
+            .collect();
+        for (a, b) in before.iter().zip(&after) {
+            assert_eq!(a.prediction, b.prediction);
+            assert_eq!(a.logits, b.logits, "logits drifted across swap");
+        }
+        pool.shutdown();
+    }
+
+    /// `drain` waits out the backlog without stopping the pool: the
+    /// queue is empty afterwards and new submits still complete.
+    #[test]
+    fn drain_leaves_the_pool_serving() {
+        let pool = ReplicaPool::new(pipes(1), 2, Duration::from_millis(1));
+        let rxs: Vec<_> = frames(6, 7)
+            .into_iter()
+            .map(|f| pool.submit(f))
+            .collect();
+        let drained = pool.drain();
+        assert!(drained <= 6, "at most the submitted jobs: {drained}");
+        assert_eq!(pool.in_flight(), 0);
+        assert_eq!(pool.queue_len(), 0);
+        for rx in rxs {
+            // Drained means replied: these must already be resolved.
+            assert!(rx.try_recv().is_ok(), "drain returned before reply");
+        }
+        // Still alive: a post-drain submit is served normally.
+        let r = pool.infer(frames(1, 8).pop().unwrap()).unwrap();
+        assert!(r.prediction.is_some());
+        pool.shutdown();
+    }
+
+    /// A swap starts fresh metrics books sized to the new generation.
+    #[test]
+    fn swap_resets_metrics_to_new_replica_count() {
+        let pool = ReplicaPool::new(pipes(1), 4, Duration::from_millis(1));
+        pool.infer(frames(1, 10).pop().unwrap()).unwrap();
+        assert_eq!(pool.metrics().totals().requests, 1);
+        pool.swap(pipes(2));
+        let m = pool.metrics();
+        assert_eq!(m.per_replica().len(), 2);
+        assert_eq!(m.totals().requests, 0);
         pool.shutdown();
     }
 }

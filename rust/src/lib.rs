@@ -31,6 +31,10 @@
 //! * [`dse`] — design-space exploration: search-space enumeration,
 //!   calibrated analytical evaluation, Pareto frontier + serving
 //!   choice, JSON reporting (`explore` / `serve --auto-tune`).
+//! * [`autotune`] — online co-optimization: a controller that re-runs
+//!   the calibrated DSE against the *measured* workload and hot-swaps
+//!   the replica pool through its zero-downtime generation protocol
+//!   (`serve --online-tune`), gated by a flap-proof decision policy.
 //! * [`runtime`] — PJRT wrapper executing the AOT HLO artifacts
 //!   (requires the `pjrt` cargo feature; stubs out otherwise).
 //! * [`model`] — artifact loading (net.json + int8 weights) into
@@ -46,9 +50,11 @@
 //!   trace spans with Chrome trace-event export (`run --trace`), the
 //!   Prometheus-style metrics registry behind the server `metrics`
 //!   command, and rolling workload observers (per-layer spike
-//!   density, inter-arrival) feeding future online re-tuning.
+//!   density with windowed min/max, inter-arrival) feeding the
+//!   [`autotune`] controller.
 
 pub mod arch;
+pub mod autotune;
 pub mod codec;
 pub mod coordinator;
 pub mod dataflow;

@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::Context as _;
 
 use sti_snn::arch;
+use sti_snn::autotune::RetunePolicy;
 use sti_snn::codec::stream::{self, DvsEvent, WindowPolicy};
 use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::scheduler;
@@ -170,6 +171,20 @@ fn usage() {
          \x20 --max-replicas N     auto-tune replica cap (as explore)\n\
          \x20 --max-batch N        queue drain batch size (default 16)\n\
          \x20 --max-wait-ms MS     queue wait for first item (default 5)\n\
+         \x20 --online-tune        re-run the calibrated DSE against the\n\
+         \x20                      measured workload on a timer and\n\
+         \x20                      hot-swap the replica pool when a\n\
+         \x20                      candidate clears the hysteresis\n\
+         \x20                      margin (zero-downtime generation\n\
+         \x20                      swap); needs --synthetic or\n\
+         \x20                      --auto-tune\n\
+         \x20 --retune-interval MS controller wake period (default 2000)\n\
+         \x20 --retune-cooldown MS minimum time between swaps\n\
+         \x20                      (default 10000)\n\
+         \x20 --retune-min-frames N frames that must be observed since\n\
+         \x20                      the last swap (default 32)\n\
+         \x20 --retune-log PATH    write the retune event log (JSON) on\n\
+         \x20                      shutdown\n\
          \x20 (live metrics: send {{\"cmd\": \"metrics\"}} to a running\n\
          \x20 server for a Prometheus-style exposition — latency\n\
          \x20 quantiles, shed count, queue depth, per-layer observed\n\
@@ -199,7 +214,9 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
                      "replicas", "synthetic", "auto-tune", "pe-budget",
                      "max-replicas", "max-batch", "max-wait-ms",
                      "intra-parallel", "no-pipelined", "events",
-                     "queue-cap"],
+                     "queue-cap", "online-tune", "retune-interval",
+                     "retune-cooldown", "retune-min-frames",
+                     "retune-log"],
         "gen-events" => &["model", "out", "windows", "rate", "window-us",
                           "seed"],
         _ => COMMON,
@@ -797,6 +814,14 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                        --auto-tune): the artifact/PJRT backend is \
                        dense-only");
     }
+    let online = args.has("online-tune");
+    if online && !(args.has("synthetic") || args.has("auto-tune")) {
+        // The controller rebuilds simulator pipelines for every new
+        // generation; the single-threaded PJRT path cannot be swapped.
+        anyhow::bail!("serve --online-tune requires --synthetic (or \
+                       --auto-tune): generation swaps rebuild \
+                       simulator pipelines");
+    }
 
     if args.has("synthetic") || args.has("auto-tune") {
         // Simulator-only serving: no artifacts, no XLA; one pipeline
@@ -835,6 +860,26 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                 intra_parallel: args.get_usize("intra-parallel", 1),
                 pipelined: !args.has("no-pipelined"),
             });
+        }
+        if online {
+            let d = RetunePolicy::default();
+            let policy = RetunePolicy {
+                interval: Duration::from_millis(
+                    args.get_u64("retune-interval", 2000)),
+                cooldown: Duration::from_millis(args.get_u64(
+                    "retune-cooldown", d.cooldown.as_millis() as u64)),
+                min_frames: args.get_u64("retune-min-frames",
+                                         d.min_frames),
+                ..d
+            };
+            println!("online-tune: interval {} ms, cooldown {} ms, \
+                      min frames {}",
+                     policy.interval.as_millis(),
+                     policy.cooldown.as_millis(), policy.min_frames);
+            builder = builder.online_tune(policy);
+            if let Some(path) = args.get("retune-log") {
+                builder = builder.retune_log(path);
+            }
         }
         let session = builder.build()?;
         if let Some(best) = session.tuned() {

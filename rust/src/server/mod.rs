@@ -35,8 +35,10 @@
 //! (`sti_latency_us{quantile="..."}`), queue depth/capacity,
 //! per-replica counters, and — when the serving session attached a
 //! workload observer — per-layer observed spike density and arrival
-//! rate. Metric names are tabled in `docs/ARCHITECTURE.md`
-//! (Observability).
+//! rate. Under `serve --online-tune` the exposition also carries
+//! `sti_retune_total` (generation swaps) and `sti_retune_generation`
+//! (the pool generation currently serving). Metric names are tabled
+//! in `docs/ARCHITECTURE.md` (Observability).
 //!
 //! # Event protocol (`mode: "events"`, length-prefixed binary)
 //!
@@ -131,6 +133,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::autotune::RetuneLog;
 use crate::codec::stream::{DvsEvent, EventStream, WindowPolicy};
 use crate::codec::SpikeFrame;
 use crate::coordinator::batch::Batcher;
@@ -259,6 +262,7 @@ pub struct Server<B: Backend> {
     max_wait: Duration,
     queue_cap: usize,
     workload: Option<Arc<WorkloadObserver>>,
+    retune: Option<Arc<RetuneLog>>,
 }
 
 impl<B: Backend> Server<B> {
@@ -280,6 +284,7 @@ impl<B: Backend> Server<B> {
             max_wait: Duration::from_millis(5),
             queue_cap: 0,
             workload: None,
+            retune: None,
         }
     }
 
@@ -307,6 +312,14 @@ impl<B: Backend> Server<B> {
     /// actual served traffic.
     pub fn with_workload(mut self, obs: Arc<WorkloadObserver>) -> Self {
         self.workload = Some(obs);
+        self
+    }
+
+    /// Attach the online tuner's retune log: swap counters and the
+    /// serving generation join the `metrics` exposition
+    /// (`sti_retune_total`, `sti_retune_generation`).
+    pub fn with_retune(mut self, log: Arc<RetuneLog>) -> Self {
+        self.retune = Some(log);
         self
     }
 
@@ -350,7 +363,7 @@ impl<B: Backend> Server<B> {
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
                                &self.shutdown, conn, &self.workload,
-                               &mut handles)?;
+                               &self.retune, &mut handles)?;
             // Drain inference jobs on this (backend-owning) thread.
             let batch = queue.try_batch();
             if batch.is_empty() {
@@ -417,7 +430,7 @@ impl<B: Backend + Send + 'static> Server<B> {
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
                                &self.shutdown, conn, &self.workload,
-                               &mut handles)?;
+                               &self.retune, &mut handles)?;
             std::thread::sleep(Duration::from_millis(1));
         }
         for w in workers {
@@ -446,6 +459,7 @@ fn accept_connections(
     listener: &TcpListener, queue: &Arc<Batcher<Job>>,
     stats: &Arc<ServerStats>, shutdown: &Arc<AtomicBool>,
     conn: ConnInfo, workload: &Option<Arc<WorkloadObserver>>,
+    retune: &Option<Arc<RetuneLog>>,
     handles: &mut Vec<std::thread::JoinHandle<()>>) -> Result<()> {
     loop {
         match listener.accept() {
@@ -454,9 +468,10 @@ fn accept_connections(
                 let stats = stats.clone();
                 let shutdown = shutdown.clone();
                 let workload = workload.clone();
+                let retune = retune.clone();
                 handles.push(std::thread::spawn(move || {
                     let _ = conn_loop(stream, queue, stats, shutdown, conn,
-                                      workload);
+                                      workload, retune);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -569,7 +584,8 @@ fn stats_json(stats: &ServerStats, queue_depth: usize,
 /// exposition's own `# EOF` line doubles as the wire terminator.
 fn metrics_text(stats: &ServerStats, queue_depth: usize,
                 queue_capacity: usize,
-                workload: Option<&WorkloadObserver>) -> String {
+                workload: Option<&WorkloadObserver>,
+                retune: Option<&RetuneLog>) -> String {
     let mut reg = MetricsRegistry::new();
     reg.counter("sti_requests_total", "requests served across replicas")
         .sample(stats.requests() as f64);
@@ -636,6 +652,14 @@ fn metrics_text(stats: &ServerStats, queue_depth: usize,
             density.sample_with(&[("layer", &l.name)], l.density_ewma);
         }
     }
+    if let Some(log) = retune {
+        reg.counter("sti_retune_total",
+                    "zero-downtime pool generation swaps")
+            .sample(log.retunes() as f64);
+        reg.gauge("sti_retune_generation",
+                  "replica-pool generation currently serving")
+            .sample(log.generation() as f64);
+    }
     reg.render()
 }
 
@@ -644,7 +668,8 @@ fn metrics_text(stats: &ServerStats, queue_depth: usize,
 /// `events_loop`.
 fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
              stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
-             conn: ConnInfo, workload: Option<Arc<WorkloadObserver>>)
+             conn: ConnInfo, workload: Option<Arc<WorkloadObserver>>,
+             retune: Option<Arc<RetuneLog>>)
              -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -670,7 +695,8 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
                         "metrics" => {
                             let text = metrics_text(
                                 &stats, queue.len(), queue.capacity,
-                                workload.as_deref());
+                                workload.as_deref(),
+                                retune.as_deref());
                             out.write_all(text.as_bytes())?;
                             continue;
                         }
@@ -1458,6 +1484,40 @@ mod tests {
         let resp = c.infer(2, &[0.9, 0.1, 0.2, 0.3]).unwrap();
         assert_eq!(resp.get("class").unwrap().as_usize(), Some(0));
 
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// With a retune log attached the exposition carries the swap
+    /// counter and serving generation; without one the lines are
+    /// absent entirely (metrics stay byte-stable for plain serving).
+    #[test]
+    fn metrics_expose_retune_counters_when_attached() {
+        let log = Arc::new(crate::autotune::RetuneLog::default());
+        let server = Server::new(Toy).with_retune(log);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+
+        let mut c = Client::connect(&addr).unwrap();
+        let text = c.metrics().unwrap();
+        assert!(text.contains("# TYPE sti_retune_total counter"), "{text}");
+        assert!(text.contains("sti_retune_total 0"), "{text}");
+        assert!(text.contains("sti_retune_generation 0"), "{text}");
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+
+        let plain = Server::new(Toy);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            plain.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let text = c.metrics().unwrap();
+        assert!(!text.contains("sti_retune"), "{text}");
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
     }

@@ -82,6 +82,8 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::arch::{self, Layer, NetworkSpec};
+use crate::autotune::{OnlineTuner, PoolRecipe, RetuneLog, RetunePolicy,
+                      RetuneSummary};
 use crate::codec::stream::{DvsEvent, EventStream, StreamStats,
                            WindowPolicy};
 use crate::codec::SpikeFrame;
@@ -312,6 +314,8 @@ pub struct SessionBuilder {
     max_wait: Option<Duration>,
     queue_cap: Option<usize>,
     trace: Option<Arc<TraceSink>>,
+    online_tune: Option<RetunePolicy>,
+    retune_log: Option<PathBuf>,
 }
 
 impl SessionBuilder {
@@ -443,6 +447,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Keep tuning while serving: spawn an [`OnlineTuner`] alongside
+    /// the replica pool that periodically re-runs the calibrated DSE
+    /// against the *measured* workload and hot-swaps the pool's
+    /// generation when the policy's hysteresis/cooldown gate clears
+    /// (see the [`crate::autotune`] module docs). The search spans the
+    /// `auto_tune` options when those are set, or their defaults
+    /// otherwise. Takes effect on the pooled paths
+    /// ([`Session::start_pool`] / [`Session::submit`] /
+    /// [`Session::serve`]).
+    pub fn online_tune(mut self, policy: RetunePolicy) -> Self {
+        self.online_tune = Some(policy);
+        self
+    }
+
+    /// Write the retune event log ([`RetuneLog::to_json`]) to this
+    /// path when the session shuts down or serving ends.
+    pub fn retune_log(mut self, path: impl Into<PathBuf>) -> Self {
+        self.retune_log = Some(path.into());
+        self
+    }
+
     /// Validate the configuration and construct the session.
     pub fn build(self) -> Result<Session> {
         // Weight source first: an artifact can supply the network.
@@ -484,6 +509,7 @@ impl SessionBuilder {
 
         // Resolve the design point: auto-tune, then explicit overrides.
         let mut tuned = None;
+        let mut tune_opts = None;
         if let Some(opts) = &self.auto_tune {
             let mut opts = opts.clone();
             opts.timesteps = timesteps;
@@ -528,6 +554,7 @@ impl SessionBuilder {
             replicas = best.candidate.replicas;
             net = net.try_with_parallel_factors(&best.candidate.factors)?;
             tuned = Some(best);
+            tune_opts = Some(opts);
         } else if let Some(f) = &self.parallel_factors {
             net = net.try_with_parallel_factors(f)?;
         }
@@ -562,9 +589,13 @@ impl SessionBuilder {
             max_wait: self.max_wait.unwrap_or(Duration::from_millis(5)),
             queue_cap: self.queue_cap.unwrap_or(0),
             tuned,
+            tune_opts,
             pipeline,
             pool: None,
             observer: Arc::new(WorkloadObserver::new()),
+            online_policy: self.online_tune,
+            retune_log_path: self.retune_log,
+            tuner: None,
         })
     }
 }
@@ -583,6 +614,9 @@ pub struct TelemetrySnapshot {
     /// Frames waiting in the shared work queue, when the pool is
     /// running.
     pub queue_depth: Option<usize>,
+    /// Online-tuner counters (swaps, generation, evaluations), when
+    /// [`SessionBuilder::online_tune`] spawned a controller.
+    pub retune: Option<RetuneSummary>,
 }
 
 /// An explicit network spec used with artifact weights must describe
@@ -631,9 +665,15 @@ pub struct Session {
     max_wait: Duration,
     queue_cap: usize,
     tuned: Option<dse::CostPoint>,
+    /// The (adjusted) options `auto_tune` searched with, kept so the
+    /// online tuner re-plans over the same space.
+    tune_opts: Option<dse::AutoTuneOptions>,
     pipeline: Pipeline,
-    pool: Option<ReplicaPool>,
+    pool: Option<Arc<ReplicaPool>>,
     observer: Arc<WorkloadObserver>,
+    online_policy: Option<RetunePolicy>,
+    retune_log_path: Option<PathBuf>,
+    tuner: Option<OnlineTuner>,
 }
 
 impl Session {
@@ -786,10 +826,99 @@ impl Session {
     pub fn start_pool(&mut self) -> Result<()> {
         if self.pool.is_none() {
             let pipes = self.build_pipelines(self.replicas)?;
-            self.pool = Some(ReplicaPool::with_capacity(
-                pipes, self.max_batch, self.max_wait, self.queue_cap));
+            self.pool = Some(Arc::new(ReplicaPool::with_observer(
+                pipes, self.max_batch, self.max_wait, self.queue_cap,
+                Some(self.observer.clone()))));
+        }
+        if self.tuner.is_none() {
+            if let Some(policy) = self.online_policy.clone() {
+                let pool = self.pool.clone().expect("pool started");
+                self.tuner = Some(OnlineTuner::spawn(
+                    self.recipe(), pool, self.observer.clone(),
+                    self.boot_candidate(), policy,
+                    self.resolved_tune_opts()));
+            }
         }
         Ok(())
+    }
+
+    /// The rebuild recipe the online tuner constructs replacement
+    /// generations from: this session's un-pinned net, config, and
+    /// weight sources.
+    fn recipe(&self) -> PoolRecipe {
+        PoolRecipe {
+            base_net: self.net.clone(),
+            config: self.config.clone(),
+            sources: self.sources.clone(),
+        }
+    }
+
+    /// The design point currently booted, as a search-space candidate.
+    fn boot_candidate(&self) -> dse::Candidate {
+        dse::Candidate {
+            factors: self
+                .net
+                .accel_convs()
+                .iter()
+                .map(|c| c.parallel)
+                .collect(),
+            replicas: self.replicas,
+            backend: self.config.backend,
+        }
+    }
+
+    /// The search-space options the online tuner re-plans over: the
+    /// boot `auto_tune` options when those ran, else defaults aligned
+    /// with this session's serving shape.
+    fn resolved_tune_opts(&self) -> dse::AutoTuneOptions {
+        self.tune_opts.clone().unwrap_or_else(|| {
+            let d = dse::AutoTuneOptions::default();
+            dse::AutoTuneOptions {
+                max_replicas: d.max_replicas.max(self.replicas),
+                timesteps: self.config.timesteps,
+                intra_parallel: self.config.intra_parallel,
+                pipelined: self.config.pipelined,
+                ..d
+            }
+        })
+    }
+
+    /// Stop the online tuner (if running) and hand back its log.
+    fn stop_tuner(&mut self) -> Option<Arc<RetuneLog>> {
+        let tuner = self.tuner.take()?;
+        let log = tuner.log();
+        tuner.stop();
+        Some(log)
+    }
+
+    /// Write the retune log where the builder asked for it.
+    fn write_retune_log(&self, log: &Option<Arc<RetuneLog>>) {
+        if let (Some(path), Some(log)) = (&self.retune_log_path, log) {
+            let _ = std::fs::write(path, format!("{}\n", log.to_json()));
+        }
+    }
+
+    /// Retire the pool: the tuner (the only other long-lived holder)
+    /// must already be stopped, so the unwrap normally succeeds and
+    /// joins inline; any stray holder falls back to drop-retirement.
+    fn retire_pool(pool: Arc<ReplicaPool>) {
+        match Arc::try_unwrap(pool) {
+            Ok(p) => p.shutdown(),
+            Err(p) => drop(p),
+        }
+    }
+
+    /// The online tuner's shared log (swap events, counters, the
+    /// calibration baseline), when [`SessionBuilder::online_tune`]
+    /// spawned one and the pool has started.
+    pub fn retune_log(&self) -> Option<Arc<RetuneLog>> {
+        self.tuner.as_ref().map(|t| t.log())
+    }
+
+    /// Pool generation currently serving (0 at boot, +1 per completed
+    /// online-retune swap), when the pool is running.
+    pub fn pool_generation(&self) -> Option<u64> {
+        self.pool.as_ref().map(|p| p.generation())
     }
 
     /// Per-replica serving counters, when the pool is running.
@@ -815,14 +944,18 @@ impl Session {
                 .as_ref()
                 .map(|p| p.metrics().latency_summary()),
             queue_depth: self.pool.as_ref().map(|p| p.queue_len()),
+            retune: self.tuner.as_ref().map(|t| t.log().summary()),
         }
     }
 
-    /// Stop the replica pool (drains queued work) and drop the
+    /// Stop the online tuner and the replica pool (drains queued
+    /// work), write the retune log if one was requested, and drop the
     /// session.
     pub fn shutdown(mut self) {
+        let log = self.stop_tuner();
+        self.write_retune_log(&log);
         if let Some(pool) = self.pool.take() {
-            pool.shutdown();
+            Self::retire_pool(pool);
         }
     }
 
@@ -838,9 +971,14 @@ impl Session {
     pub fn serve(mut self, addr: &str,
                  on_bound: impl FnOnce(std::net::SocketAddr))
                  -> Result<()> {
+        if self.online_policy.is_some() {
+            // Online tuning serves through the swappable pool; the
+            // plain path owns its replicas directly.
+            return self.serve_online(addr, on_bound);
+        }
         if let Some(pool) = self.pool.take() {
             // The server owns its replicas; don't double-run the pool.
-            pool.shutdown();
+            Self::retire_pool(pool);
         }
         let shape = self.pipeline.input_shape();
         let extra = self.build_pipelines(self.replicas - 1)?;
@@ -870,12 +1008,54 @@ impl Session {
         }
     }
 
+    /// The `--online-tune` serving path: requests flow through the
+    /// replica pool (server workers forward into its shared queue)
+    /// while the [`OnlineTuner`] hot-swaps generations underneath —
+    /// connections never notice a swap. Worker count covers the
+    /// largest replica split the tuner may choose, so a post-swap
+    /// wider pool is not starved by too few forwarders.
+    fn serve_online(mut self, addr: &str,
+                    on_bound: impl FnOnce(std::net::SocketAddr))
+                    -> Result<()> {
+        self.start_pool()?;
+        let pool = self.pool.clone().expect("pool started");
+        let shape = self.pipeline.input_shape();
+        let workers = self
+            .replicas
+            .max(self.resolved_tune_opts().max_replicas)
+            .max(1);
+        let backends: Vec<PoolBackend> = (0..workers)
+            .map(|_| PoolBackend { pool: pool.clone(), shape })
+            .collect();
+        drop(pool);
+        let retune =
+            self.tuner.as_ref().map(|t| t.log()).unwrap_or_default();
+        let server = Server::with_backends(backends)
+            .with_queue(self.max_batch, self.max_wait)
+            .with_queue_capacity(self.queue_cap)
+            .with_workload(self.observer.clone())
+            .with_retune(retune);
+        let result = if workers > 1 {
+            server.serve_pool(addr, on_bound)
+        } else {
+            server.serve(addr, on_bound)
+        };
+        let log = self.stop_tuner();
+        self.write_retune_log(&log);
+        if let Some(pool) = self.pool.take() {
+            Self::retire_pool(pool);
+        }
+        result
+    }
+
     /// Move the primary pipeline out of the session (for callers that
     /// embed it in a custom serving backend, e.g. the PJRT-reference
-    /// path). The pool, if any, is shut down.
+    /// path). The tuner and pool, if any, are stopped.
     pub fn into_pipeline(mut self) -> Pipeline {
+        let log = self.stop_tuner();
+        self.write_retune_log(&log);
         if let Some(pool) = self.pool.take() {
-            pool.shutdown();
+            Self::retire_pool(pool);
         }
         self.pipeline
     }
@@ -928,6 +1108,47 @@ impl Backend for FrameBackend {
             .first()
             .ok_or_else(|| anyhow::anyhow!("no prediction"))?;
         Ok((class, rep.logits.first().cloned().unwrap_or_default()))
+    }
+
+    fn frame_shape(&self) -> Option<(usize, usize, usize)> {
+        Some(self.shape)
+    }
+}
+
+/// Serving backend that forwards into the session's [`ReplicaPool`]
+/// instead of owning a pipeline — the `--online-tune` path, where the
+/// pool must stay swappable underneath live connections. Blocking
+/// per request; the server runs one per worker so forwarders cover
+/// the widest replica split the tuner may choose. Workload
+/// observation happens inside the pool (once per served frame), not
+/// here.
+struct PoolBackend {
+    pool: Arc<ReplicaPool>,
+    shape: (usize, usize, usize),
+}
+
+impl Backend for PoolBackend {
+    fn infer(&mut self, image: &[f32]) -> Result<(usize, Vec<f32>)> {
+        let (h, w, c) = self.shape;
+        let frame = SpikeFrame::from_f32(h, w, c, image);
+        self.infer_frame(&frame)
+    }
+
+    fn input_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    fn infer_frame(&mut self, frame: &SpikeFrame)
+                   -> Result<(usize, Vec<f32>)> {
+        anyhow::ensure!(
+            (frame.h, frame.w, frame.c) == self.shape,
+            "frame shape ({}, {}, {}) != session input {:?}",
+            frame.h, frame.w, frame.c, self.shape);
+        let r = self.pool.infer(frame.clone())?;
+        let class = r.prediction.ok_or_else(|| {
+            anyhow::anyhow!("no prediction")
+        })?;
+        Ok((class, r.logits))
     }
 
     fn frame_shape(&self) -> Option<(usize, usize, usize)> {

@@ -10,6 +10,7 @@
 //! is the read side — the `metrics` server command and
 //! `Session::telemetry()` both render it.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -17,6 +18,10 @@ use std::time::Instant;
 /// EWMA smoothing factor: each new frame contributes 20%, so the
 /// averages track the recent few dozen frames of traffic.
 const EWMA_ALPHA: f64 = 0.2;
+
+/// Observations kept per layer for the windowed min/max — enough to
+/// cover the traffic the EWMA effectively averages over.
+const DENSITY_WINDOW: usize = 64;
 
 /// Rolling statistics of one layer's observed traffic.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,8 +32,24 @@ pub struct LayerWorkload {
     /// simulator's measured spike-density proxy (sparser traffic =>
     /// smaller ratio; see `codec`).
     pub density_ewma: f64,
+    /// Lowest density in the recent observation window. A wide
+    /// [`density_min`](Self::density_min)..[`density_max`](Self::density_max)
+    /// spread flags a bimodal workload the EWMA alone would average
+    /// into a point neither mode actually hits — the retune policy's
+    /// stay-put signal.
+    pub density_min: f64,
+    /// Highest density in the recent observation window.
+    pub density_max: f64,
     /// Frames folded into the average.
     pub frames: u64,
+}
+
+impl LayerWorkload {
+    /// Window spread (`max - min`): ~0 for steady traffic, large for
+    /// bimodal traffic.
+    pub fn density_spread(&self) -> f64 {
+        self.density_max - self.density_min
+    }
 }
 
 /// Read-side snapshot of everything the observer tracks.
@@ -47,6 +68,9 @@ pub struct WorkloadSnapshot {
 
 struct Inner {
     layers: Vec<LayerWorkload>,
+    /// Ring of the last [`DENSITY_WINDOW`] raw density observations
+    /// per layer (parallel to `layers`), backing the windowed min/max.
+    windows: Vec<VecDeque<f64>>,
     interarrival_ewma_us: f64,
 }
 
@@ -79,6 +103,7 @@ impl WorkloadObserver {
             last_arrival_us: AtomicU64::new(0),
             inner: Mutex::new(Inner {
                 layers: Vec::new(),
+                windows: Vec::new(),
                 interarrival_ewma_us: 0.0,
             }),
         }
@@ -119,10 +144,25 @@ impl WorkloadObserver {
                 inner.layers.push(LayerWorkload {
                     name: name.clone(),
                     density_ewma: ratio,
+                    density_min: ratio,
+                    density_max: ratio,
                     frames: 0,
                 });
+                inner.windows.push(VecDeque::new());
+            }
+            let win = &mut inner.windows[li];
+            if win.len() == DENSITY_WINDOW {
+                win.pop_front();
+            }
+            win.push_back(ratio);
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &d in win.iter() {
+                lo = lo.min(d);
+                hi = hi.max(d);
             }
             let l = &mut inner.layers[li];
+            l.density_min = lo;
+            l.density_max = hi;
             if l.frames > 0 {
                 l.density_ewma = EWMA_ALPHA * ratio
                     + (1.0 - EWMA_ALPHA) * l.density_ewma;
@@ -197,6 +237,50 @@ mod tests {
         assert!(s.interarrival_ewma_us >= 1000.0,
                 "slept 2ms between arrivals: {s:?}");
         assert!(s.rate_fps > 0.0);
+    }
+
+    /// Steady traffic: min == max == EWMA, spread ~0. Bimodal traffic
+    /// alternating between two densities: the window brackets both
+    /// modes while the EWMA settles in between — exactly the
+    /// distinction the retune policy's bimodal guard needs.
+    #[test]
+    fn window_min_max_separates_steady_from_bimodal() {
+        let steady = WorkloadObserver::new();
+        let ns = names(1);
+        for _ in 0..10 {
+            steady.observe(&ns, &[0.4], 1);
+        }
+        let l = &steady.snapshot().layers[0];
+        assert_eq!(l.density_min, 0.4);
+        assert_eq!(l.density_max, 0.4);
+        assert_eq!(l.density_spread(), 0.0);
+
+        let bimodal = WorkloadObserver::new();
+        for i in 0..10 {
+            let d = if i % 2 == 0 { 0.1 } else { 0.7 };
+            bimodal.observe(&ns, &[d], 1);
+        }
+        let l = &bimodal.snapshot().layers[0];
+        assert_eq!(l.density_min, 0.1);
+        assert_eq!(l.density_max, 0.7);
+        assert!((l.density_spread() - 0.6).abs() < 1e-12);
+        assert!(l.density_ewma > 0.1 && l.density_ewma < 0.7,
+                "EWMA averages between the modes: {}", l.density_ewma);
+    }
+
+    /// Old extremes age out of the window: after DENSITY_WINDOW newer
+    /// observations, an early outlier no longer sets min/max.
+    #[test]
+    fn window_min_max_forgets_old_extremes() {
+        let obs = WorkloadObserver::new();
+        let ns = names(1);
+        obs.observe(&ns, &[0.95], 1); // outlier, should age out
+        for _ in 0..DENSITY_WINDOW {
+            obs.observe(&ns, &[0.2], 1);
+        }
+        let l = &obs.snapshot().layers[0];
+        assert_eq!(l.density_min, 0.2);
+        assert_eq!(l.density_max, 0.2, "outlier survived the window");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Property tests for the retune decision policy: hysteresis and
+//! cooldown together guarantee the controller cannot flap, no matter
+//! how the measured workload alternates.
+//!
+//! The policy is a pure function of logical time (`Observation` in,
+//! `Decision` out — no clocks, no pools), so the no-oscillation claim
+//! is checked by simulation: two design points A and B, two workloads
+//! under which their measured throughput differs, and a controller
+//! loop that swaps whenever the policy says so.
+
+use std::time::Duration;
+
+use sti_snn::autotune::{Decision, Observation, PolicyState,
+                        RetunePolicy};
+use sti_snn::util::rng::Rng;
+
+/// Throughput of point `p` (0 = A, 1 = B) under workload `w` (0/1).
+type FpsTable = [[f64; 2]; 2];
+
+/// Run the controller loop over `ticks` decisions: each tick observes
+/// one of the two workloads, compares the serving point against the
+/// other, and swaps when the policy allows. Returns the logical swap
+/// times (µs).
+fn simulate(policy: &RetunePolicy, fps: &FpsTable, ticks: usize,
+            tick_us: u64, frames_per_tick: u64, rng: &mut Rng)
+            -> Vec<u64> {
+    let mut state = PolicyState::default();
+    let mut serving = 0usize;
+    let mut frames = 0u64;
+    let mut swaps = Vec::new();
+    for t in 0..ticks {
+        let now_us = t as u64 * tick_us;
+        frames += frames_per_tick;
+        let w = usize::from(rng.bernoulli(0.5));
+        let candidate = 1 - serving;
+        let obs = Observation {
+            now_us,
+            frames,
+            density_spread: 0.0,
+            same_config: false,
+            current_fps: fps[serving][w],
+            candidate_fps: fps[candidate][w],
+        };
+        if let Decision::Swap { .. } = policy.decide(&state, &obs) {
+            serving = candidate;
+            state.record_swap(now_us, frames);
+            swaps.push(now_us);
+        }
+    }
+    swaps
+}
+
+fn policy(hysteresis: f64, cooldown: Duration) -> RetunePolicy {
+    RetunePolicy {
+        interval: Duration::from_millis(10),
+        min_frames: 8,
+        hysteresis,
+        cooldown,
+        max_density_spread: 0.35,
+        headroom: 1.25,
+    }
+}
+
+/// Workload-dependent winners whose mutual gains stay *inside* the
+/// hysteresis margin: the policy must never swap, even with cooldown
+/// disabled — hysteresis alone kills the oscillation.
+#[test]
+fn within_margin_alternation_never_swaps() {
+    // A/B winner flips with the workload, but the edge is 100/95
+    // (~5.3%) — below the 10% margin in both directions.
+    let fps: FpsTable = [[100.0, 95.0], [95.0, 100.0]];
+    let p = policy(0.10, Duration::ZERO);
+    for seed in 0..32 {
+        let mut rng = Rng::new(seed);
+        let swaps = simulate(&p, &fps, 10_000, 10_000, 16, &mut rng);
+        assert!(swaps.is_empty(),
+                "seed {seed}: flapped {} times inside the hysteresis \
+                 margin", swaps.len());
+    }
+}
+
+/// Gains far outside the margin in both directions (the worst-case
+/// flap-inducing workload): cooldown bounds the swap rate, and every
+/// pair of consecutive swaps is spaced at least one cooldown apart.
+#[test]
+fn cooldown_spaces_swaps_under_adversarial_alternation() {
+    let fps: FpsTable = [[100.0, 50.0], [50.0, 100.0]];
+    let cooldown = Duration::from_secs(1);
+    let p = policy(0.10, cooldown);
+    let tick_us = 10_000; // 10 ms ticks, 10 s simulated
+    for seed in 0..32 {
+        let mut rng = Rng::new(seed);
+        let swaps = simulate(&p, &fps, 1_000, tick_us, 16, &mut rng);
+        assert!(!swaps.is_empty(),
+                "seed {seed}: a >=100% gain must eventually swap");
+        let cd_us = cooldown.as_micros() as u64;
+        for pair in swaps.windows(2) {
+            assert!(pair[1] - pair[0] >= cd_us,
+                    "seed {seed}: swaps {} and {} closer than the \
+                     cooldown", pair[0], pair[1]);
+        }
+        // Rate bound: total simulated time / cooldown, plus the first.
+        let horizon_us = 1_000 * tick_us;
+        assert!(swaps.len() as u64 <= horizon_us / cd_us + 1,
+                "seed {seed}: {} swaps in {horizon_us} us",
+                swaps.len());
+    }
+}
+
+/// The min-frames guard: once traffic stops, no amount of predicted
+/// gain produces another swap — the EWMAs are stale.
+#[test]
+fn stalled_traffic_freezes_retuning() {
+    let fps: FpsTable = [[100.0, 50.0], [50.0, 100.0]];
+    let p = policy(0.10, Duration::ZERO);
+    let mut state = PolicyState::default();
+    let mut rng = Rng::new(3);
+    // Warm up with traffic until one swap lands.
+    let mut frames = 0;
+    let mut swapped_at = None;
+    for t in 0..1_000u64 {
+        frames += 16;
+        let w = usize::from(rng.bernoulli(0.5));
+        let obs = Observation {
+            now_us: t * 10_000,
+            frames,
+            density_spread: 0.0,
+            same_config: false,
+            current_fps: fps[0][w],
+            candidate_fps: fps[1][w],
+        };
+        if let Decision::Swap { .. } = p.decide(&state, &obs) {
+            state.record_swap(t * 10_000, frames);
+            swapped_at = Some(t);
+            break;
+        }
+    }
+    let start = swapped_at.expect("warm-up must swap once") + 1;
+    // Traffic stalls: frames never advance past the swap point.
+    for t in start..start + 10_000 {
+        let obs = Observation {
+            now_us: t * 10_000,
+            frames,
+            density_spread: 0.0,
+            same_config: false,
+            current_fps: 50.0,
+            candidate_fps: 1e9,
+        };
+        assert!(matches!(p.decide(&state, &obs), Decision::Hold(_)),
+                "stalled traffic at tick {t} must hold");
+    }
+}
