@@ -14,7 +14,7 @@
 //! ```
 
 use sti_snn::codec::stream::{synth_events, WindowPolicy};
-use sti_snn::server::{Client, EventReply};
+use sti_snn::server::{Client, EventReply, RetryPolicy};
 use sti_snn::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -28,6 +28,22 @@ fn main() -> anyhow::Result<()> {
     let (h, w, c) = client
         .start_events(WindowPolicy::TimeUs(window_us))?;
     println!("events mode: server windows into ({h}, {w}, {c})");
+
+    // Warm-up probe on a second dense connection, retried through
+    // transient shed/timeout replies (pool still restarting a replica,
+    // queue momentarily full) so the stream below starts against a
+    // server that is actually serving.
+    let mut probe = Client::connect(addr)?;
+    let reply = probe.submit_with_retry(0, &vec![0.0; h * w * c],
+                                        &RetryPolicy::default())?;
+    match reply.get("error").and_then(|e| e.as_str()) {
+        None => println!("warm-up probe ok (class {})",
+                         reply.get("class")
+                              .and_then(|v| v.as_f64())
+                              .unwrap_or(-1.0)),
+        Some(e) => anyhow::bail!("warm-up probe kept failing: {e}"),
+    }
+    drop(probe);
 
     let events = synth_events(h, w, c, windows, rate, window_us, 1);
     println!("streaming {} events ({windows} windows of {window_us} µs \

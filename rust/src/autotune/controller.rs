@@ -10,7 +10,21 @@
 //! exact inputs needed to reproduce any logged decision offline
 //! (`tests/online_tune.rs` replays them through
 //! [`super::measure::plan`] and asserts the same choice).
+//!
+//! # Supervision
+//!
+//! Swaps are *transactional*: before the pool sees a new generation,
+//! its first pipeline serves one synthetic health-probe frame whose
+//! logits must be bit-identical to the offline reference (all
+//! candidates are bit-exact by the factor/backend-invariance
+//! contract, so any divergence — or a panic — means a broken build).
+//! A failed probe rolls the retune back: the pool keeps serving the
+//! old generation (`pool_generation` unchanged) and a `rolled_back`
+//! [`RetuneEvent`] is recorded. The control loop itself runs under
+//! `catch_unwind` with a budgeted [`RestartPolicy`] — a tuner panic
+//! never takes the serving path down.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -24,6 +38,8 @@ use crate::dataflow::ConvLatencyParams;
 use crate::dse::{calibrate, AutoTuneOptions, Calibration,
                  CalibrationConfig, Candidate};
 use crate::sim::engine::LayerWeights;
+use crate::supervise::{panic_message, FaultHooks, RestartPolicy,
+                       Supervisor, Verdict};
 use crate::telemetry::{WorkloadObserver, WorkloadSnapshot};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -86,13 +102,22 @@ impl PoolRecipe {
     }
 }
 
-/// One completed generation swap, with everything needed to audit it.
+/// A swap outcome: the candidate generation went live.
+pub const OUTCOME_SWAPPED: &str = "swapped";
+/// A swap outcome: the candidate failed its health probe (wrong
+/// logits or a panic) and the pool kept the serving generation.
+pub const OUTCOME_ROLLED_BACK: &str = "rolled_back";
+
+/// One attempted generation swap, with everything needed to audit it.
 #[derive(Debug, Clone)]
 pub struct RetuneEvent {
     /// µs since the controller started.
     pub at_us: u64,
-    /// Pool generation index after the swap.
+    /// Pool generation index after the attempt ([`OUTCOME_SWAPPED`]:
+    /// the new generation; [`OUTCOME_ROLLED_BACK`]: unchanged).
     pub generation: u64,
+    /// [`OUTCOME_SWAPPED`] or [`OUTCOME_ROLLED_BACK`].
+    pub outcome: &'static str,
     /// The configuration that was serving.
     pub from: Candidate,
     /// The configuration now serving.
@@ -122,6 +147,7 @@ impl RetuneEvent {
         Json::obj(vec![
             ("at_us", Json::num(self.at_us as f64)),
             ("generation", Json::num(self.generation as f64)),
+            ("outcome", Json::str(self.outcome)),
             ("from", candidate_json(&self.from)),
             ("to", candidate_json(&self.to)),
             ("predicted_gain", Json::num(self.predicted_gain)),
@@ -146,6 +172,8 @@ pub struct RetuneSummary {
     pub generation: u64,
     /// Re-planning passes the controller has run (swapped or held).
     pub evaluations: u64,
+    /// Swaps rolled back after a failed health probe.
+    pub rollbacks: u64,
     /// Predicted gain of the most recent swap, if any.
     pub last_gain: Option<f64>,
 }
@@ -165,6 +193,7 @@ pub struct RetuneLog {
     retunes: AtomicU64,
     generation: AtomicU64,
     evaluations: AtomicU64,
+    rollbacks: AtomicU64,
     events: Mutex<Vec<RetuneEvent>>,
     baseline: Mutex<Option<RetuneBaseline>>,
 }
@@ -178,9 +207,16 @@ impl RetuneLog {
     }
 
     fn record(&self, event: RetuneEvent) {
-        self.retunes.fetch_add(1, Ordering::Relaxed);
-        self.generation.store(event.generation, Ordering::Relaxed);
-        let mut ev = self.events.lock().unwrap();
+        if event.outcome == OUTCOME_ROLLED_BACK {
+            // A rollback is not a retune: the generation counter and
+            // the swap tally describe the *serving* configuration.
+            self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.retunes.fetch_add(1, Ordering::Relaxed);
+            self.generation.store(event.generation, Ordering::Relaxed);
+        }
+        let mut ev =
+            self.events.lock().unwrap_or_else(|e| e.into_inner());
         if ev.len() == EVENT_CAP {
             ev.remove(0);
         }
@@ -192,7 +228,8 @@ impl RetuneLog {
     }
 
     fn set_baseline(&self, baseline: RetuneBaseline) {
-        *self.baseline.lock().unwrap() = Some(baseline);
+        *self.baseline.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(baseline);
     }
 
     /// Completed generation swaps.
@@ -205,15 +242,23 @@ impl RetuneLog {
         self.generation.load(Ordering::Relaxed)
     }
 
+    /// Swaps rolled back after a failed health probe.
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks.load(Ordering::Relaxed)
+    }
+
     /// The recent swap events (up to the cap, oldest first).
     pub fn events(&self) -> Vec<RetuneEvent> {
-        self.events.lock().unwrap().clone()
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// The boot calibration + reference density the controller plans
     /// with, once it has finished calibrating.
     pub fn baseline(&self) -> Option<RetuneBaseline> {
-        self.baseline.lock().unwrap().clone()
+        self.baseline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
     pub fn summary(&self) -> RetuneSummary {
@@ -221,10 +266,11 @@ impl RetuneLog {
             retunes: self.retunes(),
             generation: self.generation(),
             evaluations: self.evaluations.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks(),
             last_gain: self
                 .events
                 .lock()
-                .unwrap()
+                .unwrap_or_else(|e| e.into_inner())
                 .last()
                 .map(|e| e.predicted_gain),
         }
@@ -238,6 +284,7 @@ impl RetuneLog {
             ("retunes", Json::num(s.retunes as f64)),
             ("generation", Json::num(s.generation as f64)),
             ("evaluations", Json::num(s.evaluations as f64)),
+            ("rollbacks", Json::num(s.rollbacks as f64)),
             ("events",
              Json::Arr(self.events().iter().map(|e| e.to_json())
                        .collect())),
@@ -266,6 +313,11 @@ impl OnlineTuner {
     /// loop iteration calibrates the baseline cost model — the one
     /// simulator-probing step; every later tick is pure math over the
     /// observer snapshot.
+    ///
+    /// The loop is supervised: a panic restarts it under the pool's
+    /// budgeted [`RestartPolicy`] defaults (counted in the pool's
+    /// `tuner_restarts`); past the budget the tuner retires and the
+    /// pool keeps serving its current generation.
     pub fn spawn(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
                  observer: Arc<WorkloadObserver>, boot: Candidate,
                  policy: RetunePolicy, opts: AutoTuneOptions) -> Self {
@@ -275,8 +327,30 @@ impl OnlineTuner {
             let stop = stop.clone();
             let log = log.clone();
             std::thread::spawn(move || {
-                control_loop(recipe, pool, observer, boot, policy, opts,
-                             stop, log);
+                let supervisor =
+                    Supervisor::new(RestartPolicy::default(), 1);
+                let stats = pool.supervise_stats();
+                loop {
+                    let ran = catch_unwind(AssertUnwindSafe(|| {
+                        control_loop(recipe.clone(), pool.clone(),
+                                     observer.clone(), boot.clone(),
+                                     policy.clone(), opts.clone(),
+                                     stop.clone(), log.clone());
+                    }));
+                    match ran {
+                        Ok(()) => break, // clean exit (stop / no work)
+                        Err(_) if stop.load(Ordering::SeqCst) => break,
+                        Err(_) => match supervisor.decide(0) {
+                            Verdict::Restart { delay } => {
+                                stats
+                                    .tuner_restarts
+                                    .fetch_add(1, Ordering::SeqCst);
+                                std::thread::sleep(delay);
+                            }
+                            Verdict::Retire => break,
+                        },
+                    }
+                }
             })
         };
         Self { stop: stop.clone(), handle: Some(handle), log }
@@ -355,6 +429,16 @@ fn control_loop(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
         calibration: base_cal.clone(),
         reference_density,
     });
+    // Offline reference for the health probe: one synthetic frame and
+    // its logits under the boot build. Every candidate is bit-exact
+    // by construction, so a candidate that disagrees is broken.
+    let Ok((probe_frame, probe_logits)) = probe_reference(&recipe,
+                                                          opts.rate)
+    else {
+        return;
+    };
+    let hooks = pool.fault_hooks();
+    let sup_stats = pool.supervise_stats();
 
     let mut state = PolicyState::default();
     let mut current = boot;
@@ -386,15 +470,39 @@ fn control_loop(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
         let Decision::Swap { gain } = policy.decide(&state, &obs) else {
             continue;
         };
-        let Ok(pipelines) = recipe.build(&p.chosen.candidate) else {
+        let Ok(mut pipelines) = recipe.build(&p.chosen.candidate) else {
             continue; // unbuildable candidate: keep serving
         };
+        // Transactional gate: probe the candidate BEFORE the pool
+        // sees it, so a rollback is simply "don't swap".
+        if let Err(why) = health_probe(&mut pipelines[0], &probe_frame,
+                                       &probe_logits, hooks.as_deref())
+        {
+            sup_stats.retune_rollbacks.fetch_add(1, Ordering::SeqCst);
+            // The policy state still records the attempt so a broken
+            // candidate cannot make the tuner re-probe every tick.
+            state.record_swap(now_us, snapshot.frames);
+            log.record(RetuneEvent {
+                at_us: now_us,
+                generation: pool.generation(),
+                outcome: OUTCOME_ROLLED_BACK,
+                from: current.clone(),
+                to: p.chosen.candidate.clone(),
+                predicted_gain: gain,
+                drained: 0,
+                measured: p.measured.clone(),
+                snapshot,
+            });
+            let _ = why; // cause is visible through the event log
+            continue;
+        }
         let stats = pool.swap(pipelines);
         state.record_swap(now_us, snapshot.frames);
         let to = p.chosen.candidate.clone();
         log.record(RetuneEvent {
             at_us: now_us,
             generation: stats.generation,
+            outcome: OUTCOME_SWAPPED,
             from: std::mem::replace(&mut current, to.clone()),
             to,
             predicted_gain: gain,
@@ -402,6 +510,49 @@ fn control_loop(recipe: PoolRecipe, pool: Arc<ReplicaPool>,
             measured: p.measured.clone(),
             snapshot,
         });
+    }
+}
+
+/// Build the health-probe reference: a synthetic frame at the serving
+/// rate and its logits under the *boot* recipe (deterministic seed;
+/// bit-exact against every candidate by the invariance contract).
+fn probe_reference(recipe: &PoolRecipe, rate: f64)
+                   -> anyhow::Result<(SpikeFrame, Vec<f32>)> {
+    let mut pipe = Pipeline::new(recipe.base_net.clone(),
+                                 recipe.config.clone(),
+                                 recipe.sources.clone())?;
+    let (h, w, c) = pipe.input_shape();
+    let mut rng = Rng::new(CalibrationConfig::default().seed ^ 0xBEEF);
+    let frame = SpikeFrame::random(h, w, c, rate, &mut rng);
+    let rep = pipe.run(std::slice::from_ref(&frame));
+    let logits = rep
+        .logits
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("probe produced no logits"))?;
+    Ok((frame, logits))
+}
+
+/// Serve the probe frame on the candidate's first pipeline, catching
+/// panics (including the chaos harness's injected probe kill) and
+/// comparing logits bit-exactly against the offline reference.
+fn health_probe(pipe: &mut Pipeline, frame: &SpikeFrame,
+                want: &[f32], hooks: Option<&FaultHooks>)
+                -> Result<(), String> {
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        if hooks.is_some_and(|h| h.probe_panic()) {
+            panic!("injected fault: panic_at probe (mid-swap kill)");
+        }
+        pipe.run(std::slice::from_ref(frame))
+    }));
+    match outcome {
+        Err(payload) => Err(format!("health probe panicked: {}",
+                                    panic_message(payload.as_ref()))),
+        Ok(rep) if rep.logits.first().map(Vec::as_slice) == Some(want)
+        => Ok(()),
+        Ok(_) => Err("health-probe logits diverged from the offline \
+                      reference"
+            .to_string()),
     }
 }
 
@@ -488,6 +639,7 @@ mod tests {
             log.record(RetuneEvent {
                 at_us: i,
                 generation: i + 1,
+                outcome: OUTCOME_SWAPPED,
                 from: cand(1),
                 to: cand(2),
                 predicted_gain: 0.5,
@@ -499,6 +651,7 @@ mod tests {
         let s = log.summary();
         assert_eq!(s.retunes, EVENT_CAP as u64 + 8);
         assert_eq!(s.generation, EVENT_CAP as u64 + 8);
+        assert_eq!(s.rollbacks, 0);
         assert_eq!(s.last_gain, Some(0.5));
         let events = log.events();
         assert_eq!(events.len(), EVENT_CAP);
@@ -508,5 +661,84 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("retunes").and_then(Json::as_f64),
                    Some((EVENT_CAP + 8) as f64));
+    }
+
+    /// A rolled-back event counts in `rollbacks` only: retunes and the
+    /// generation stay pinned to the serving configuration.
+    #[test]
+    fn rolled_back_events_do_not_advance_the_generation() {
+        let log = RetuneLog::new();
+        let cand = |r: usize| Candidate {
+            factors: vec![1, 1],
+            replicas: r,
+            backend: BackendKind::Accurate,
+        };
+        log.record(RetuneEvent {
+            at_us: 1,
+            generation: 0,
+            outcome: OUTCOME_ROLLED_BACK,
+            from: cand(1),
+            to: cand(2),
+            predicted_gain: 0.4,
+            drained: 0,
+            measured: MeasuredWorkload {
+                frames: 1,
+                rate_fps: 0.0,
+                mean_density: 0.1,
+                density_spread: 0.0,
+            },
+            snapshot: WorkloadSnapshot::default(),
+        });
+        let s = log.summary();
+        assert_eq!(s.retunes, 0);
+        assert_eq!(s.generation, 0);
+        assert_eq!(s.rollbacks, 1);
+        assert_eq!(log.events().len(), 1);
+        let j = format!("{}", log.to_json());
+        assert!(j.contains("rolled_back"));
+    }
+
+    /// The probe reference is deterministic, and `health_probe`
+    /// accepts a bit-identical rebuild, rejects diverging logits, and
+    /// converts an injected probe panic into a rollback error.
+    #[test]
+    fn health_probe_accepts_exact_and_rejects_divergence() {
+        let r = recipe();
+        let (frame, want) = probe_reference(&r, 0.2).unwrap();
+        let (_, again) = probe_reference(&r, 0.2).unwrap();
+        assert_eq!(want, again);
+
+        // A candidate at different factors/backend still passes.
+        let cand = Candidate {
+            factors: vec![4, 2],
+            replicas: 1,
+            backend: BackendKind::WordParallel,
+        };
+        let mut pipes = r.build(&cand).unwrap();
+        assert!(health_probe(&mut pipes[0], &frame, &want, None)
+            .is_ok());
+
+        // Diverging logits roll back.
+        let mut wrong = want.clone();
+        wrong[0] += 1.0;
+        let err = health_probe(&mut pipes[0], &frame, &wrong, None)
+            .unwrap_err();
+        assert!(err.contains("diverged"), "{err}");
+
+        // An injected mid-swap kill is caught, not propagated.
+        use crate::supervise::{FaultEvent, FaultPlan, REPLICA_PROBE};
+        let hooks = FaultHooks::from_plan(FaultPlan::new(
+            1,
+            vec![FaultEvent::PanicAt { replica: REPLICA_PROBE,
+                                       frame: 0 }],
+        ));
+        let err = health_probe(&mut pipes[0], &frame, &want,
+                               Some(&hooks))
+            .unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // One-shot: a second probe on the same hooks passes.
+        assert!(health_probe(&mut pipes[0], &frame, &want,
+                             Some(&hooks))
+            .is_ok());
     }
 }

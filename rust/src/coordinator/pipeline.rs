@@ -18,7 +18,9 @@
 //! sums. The integration tests cross-check the cycle accounting
 //! against `dataflow::pipeline_latency` (Eq. 10).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::arch::NetworkSpec;
 use crate::codec::{EventCodec, SpikeFrame};
@@ -28,11 +30,18 @@ use crate::sim::energy::{EnergyModel, EnergyReport};
 use crate::sim::engine::{build_engines, random_sources, EngineConfig,
                          LayerEngine, LayerResult, LayerWeights};
 use crate::sim::fifo::{row_channel, ChannelSnapshot, RowReceiver,
-                       RowSender};
+                       RowSender, RowWait};
 use crate::sim::memory::AccessCounter;
 use crate::sim::resources::{ResourceModel, ResourceReport};
 use crate::sim::{cycles_to_ms, CLK_HZ};
+use crate::supervise::{panic_message, Deadline, FaultHooks,
+                       SuperviseStats, WatchdogPolicy};
 use crate::telemetry::TraceSink;
+
+/// Poll granularity for deadline-sliced channel waits: long enough to
+/// stay off the hot path, short enough that an expired deadline is
+/// noticed promptly.
+const WATCHDOG_SLICE: Duration = Duration::from_millis(5);
 
 /// Pipeline construction options.
 #[derive(Clone)]
@@ -62,6 +71,17 @@ pub struct PipelineConfig {
     /// observational — `tests/prop_telemetry.rs` pins that every
     /// architectural report field is identical with tracing on.
     pub trace: Option<Arc<TraceSink>>,
+    /// Deadline monitor over the streamed schedule (None = off, the
+    /// default). An overdue frame aborts every layer worker, tears the
+    /// channels down, and — when `retry_serial` — re-runs the batch on
+    /// the serial schedule, which produces a bit-identical report.
+    pub watchdog: Option<WatchdogPolicy>,
+    /// Runtime fault-injection hooks (`serve --chaos`); `None` in
+    /// production, so the hot path never consults a plan.
+    pub faults: Option<Arc<FaultHooks>>,
+    /// Supervision counters ticked on watchdog fires / stream
+    /// recoveries (shared with the pool and the metrics endpoint).
+    pub supervise: Option<Arc<SuperviseStats>>,
 }
 
 impl Default for PipelineConfig {
@@ -76,6 +96,9 @@ impl Default for PipelineConfig {
             backend: BackendKind::Accurate,
             intra_parallel: 1,
             trace: None,
+            watchdog: None,
+            faults: None,
+            supervise: None,
         }
     }
 }
@@ -213,6 +236,15 @@ impl Pipeline {
     /// the streamed schedule — one worker per layer, bounded row
     /// channels between them; otherwise layers run serially per frame.
     /// Both schedules produce bit-identical reports.
+    ///
+    /// If the streamed schedule fails — a layer worker panics, a
+    /// watchdog deadline expires, or a channel closes mid-frame — the
+    /// batch is retried once on the serial schedule (still
+    /// bit-identical: `total_cycles` follows `config.pipelined`, not
+    /// the schedule that happened to execute). With
+    /// `watchdog.retry_serial == false` the failure escalates as a
+    /// panic instead, which a supervised replica worker catches and
+    /// converts into an error reply.
     pub fn run(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
         assert!(!frames.is_empty(), "empty batch");
         // Streamed execution needs every non-terminal layer to expose
@@ -223,10 +255,40 @@ impl Pipeline {
             && n > 1
             && self.engines[..n - 1].iter().all(|e| e.out_shape().is_some());
         if streamable {
-            self.run_streamed(frames)
+            match self.run_streamed(frames) {
+                Ok(report) => report,
+                Err(cause) => self.recover_serial(frames, &cause),
+            }
         } else {
             self.run_serial(frames)
         }
+    }
+
+    /// Graceful degradation after a streamed-schedule failure: count
+    /// the fire, leave a "fault" trace span, and re-run the batch
+    /// serially (the channels and scoped workers of the failed attempt
+    /// are already torn down — `run_streamed` owns nothing persistent
+    /// beyond the reusable frame buffers, which `run_serial` resets).
+    fn recover_serial(&mut self, frames: &[SpikeFrame], cause: &str)
+                      -> PipelineReport {
+        if let Some(stats) = &self.config.supervise {
+            stats.watchdog_fires.fetch_add(1, Ordering::SeqCst);
+        }
+        if let Some(tr) = self.config.trace.as_deref() {
+            let t0 = tr.start();
+            tr.record("watchdog.fire", "fault", t0,
+                      [("frames", frames.len() as u64), ("", 0)]);
+        }
+        let retry = self
+            .config
+            .watchdog
+            .map(|w| w.retry_serial)
+            .unwrap_or(true);
+        if !retry {
+            panic!("streamed schedule failed ({cause}) and serial \
+                    retry is disabled");
+        }
+        self.run_serial(frames)
     }
 
     /// The serial schedule: per frame, layers run one after another
@@ -315,7 +377,14 @@ impl Pipeline {
     /// routines as the serial schedule; per-layer tallies are merged
     /// in layer order after the scope joins, so all report fields are
     /// identical to [`Pipeline::run_serial`].
-    fn run_streamed(&mut self, frames: &[SpikeFrame]) -> PipelineReport {
+    ///
+    /// Fallible: `Err` carries the first failure cause (worker panic,
+    /// watchdog fire, or channel closure). Failures tear down cleanly
+    /// — a worker that errors drops its channel ends, which unblocks
+    /// its neighbours (their blocking receive/acquire observes the
+    /// disconnect), so every scoped thread joins.
+    fn run_streamed(&mut self, frames: &[SpikeFrame])
+                    -> Result<PipelineReport, String> {
         let n_engines = self.engines.len();
         let out_shapes: Vec<Option<(usize, usize, usize)>> =
             self.engines.iter().map(|e| e.out_shape()).collect();
@@ -345,8 +414,15 @@ impl Pipeline {
         let stage_bufs = &mut self.stage_bufs;
         let codecs = &self.codecs;
         let energy = &self.config.energy;
+        let guard = WorkerGuard {
+            aborted: Arc::new(AtomicBool::new(false)),
+            policy: self.config.watchdog,
+            faults: self.config.faults.clone(),
+        };
 
-        let tallies: Vec<LayerTally> = std::thread::scope(|s| {
+        let mut tallies = Vec::with_capacity(n_engines);
+        let mut failure: Option<String> = None;
+        std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n_engines);
             let mut rx_iter = rxs.into_iter();
             let mut tx_iter = txs.into_iter();
@@ -361,17 +437,30 @@ impl Pipeline {
                 let in_shape =
                     if li == 0 { None } else { out_shapes[li - 1] };
                 let trace = trace.clone();
+                let guard = guard.clone();
                 handles.push(s.spawn(move || {
                     stream_worker(li, eng.as_mut(), out, stage,
                                   codec.as_ref(), rx, tx, in_shape,
-                                  frames, energy, trace)
+                                  frames, energy, trace, guard)
                 }));
             }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("layer worker panicked"))
-                .collect()
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(t)) => tallies.push(t),
+                    Ok(Err(e)) => {
+                        failure.get_or_insert(e);
+                    }
+                    Err(payload) => {
+                        failure.get_or_insert(format!(
+                            "layer worker panicked: {}",
+                            panic_message(payload.as_ref())));
+                    }
+                }
+            }
         });
+        if let Some(cause) = failure {
+            return Err(cause);
+        }
         // Satellite: surface the per-link channel counters instead of
         // dropping them with the senders.
         let channel_stats: Vec<ChannelSnapshot> =
@@ -401,10 +490,10 @@ impl Pipeline {
                 logits_all.push(logits);
             }
         }
-        self.finish_report(frames.len() as u64, layer_cycles, layer_names,
-                           ops_total, counters, layer_energy, layer_vmem,
-                           codec_ratios, predictions, logits_all,
-                           channel_stats)
+        Ok(self.finish_report(frames.len() as u64, layer_cycles,
+                              layer_names, ops_total, counters,
+                              layer_energy, layer_vmem, codec_ratios,
+                              predictions, logits_all, channel_stats))
     }
 
     /// Fold per-layer tallies into the batch report (shared by both
@@ -475,6 +564,17 @@ struct LayerTally {
     classified: Vec<(usize, Vec<f32>)>,
 }
 
+/// Shared failure-detection state for one streamed batch: the abort
+/// flag every per-frame [`Deadline`] arms against (one worker firing
+/// aborts all of them), the watchdog policy, and the fault-injection
+/// hooks (both `None`/off in production).
+#[derive(Clone)]
+struct WorkerGuard {
+    aborted: Arc<AtomicBool>,
+    policy: Option<WatchdogPolicy>,
+    faults: Option<Arc<FaultHooks>>,
+}
+
 /// Body of one layer worker thread of the streamed schedule.
 ///
 /// Per frame: receive input rows (worker 0 reads the batch frame
@@ -484,6 +584,13 @@ struct LayerTally {
 /// so the consumer never holds more than one in-flight buffer — with
 /// the acyclic worker chain that makes any channel capacity >= 1
 /// deadlock-free.
+///
+/// With a watchdog armed, every blocking channel wait is sliced
+/// against a per-frame [`Deadline`]; an overdue frame (or a deadline
+/// fired by any sibling worker) makes the worker return `Err`, which
+/// drops its channel ends and cascades the teardown. Without a
+/// watchdog the plain blocking waits run — zero supervision overhead —
+/// and a hung-up channel (sibling panic) is the only error path.
 #[allow(clippy::too_many_arguments)]
 fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
                  out: &mut SpikeFrame, stage: &mut SpikeFrame,
@@ -491,8 +598,8 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
                  tx: Option<RowSender>,
                  in_shape: Option<(usize, usize, usize)>,
                  frames: &[SpikeFrame], energy: &EnergyModel,
-                 trace: Option<Arc<TraceSink>>)
-                 -> LayerTally {
+                 trace: Option<Arc<TraceSink>>, guard: WorkerGuard)
+                 -> Result<LayerTally, String> {
     let mut tally = LayerTally {
         name: format!("{}{li}{}", eng.kind(), eng.label_detail()),
         cycles: 0,
@@ -508,6 +615,17 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
         // track — the inter-layer overlap is directly visible as
         // overlapping spans across tracks in the exported trace.
         let t0 = trace.as_ref().map(|t| t.start());
+        let deadline = guard
+            .policy
+            .map(|p| Deadline::arm(p.deadline, guard.aborted.clone()));
+        // Injected channel stall: the worker sleeps here, its
+        // neighbours back up, and (with a watchdog armed) one of them
+        // fires the shared deadline.
+        if let Some(ms) =
+            guard.faults.as_ref().and_then(|f| f.stall(li))
+        {
+            std::thread::sleep(ms);
+        }
         if let Some((h, w, c)) = eng.out_shape() {
             out.reset(h, w, c);
         }
@@ -517,18 +635,19 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
             let (h, w, c) = in_shape.expect("upstream shape known");
             stage.reset(h, w, c);
             for y in 0..h {
-                let buf =
-                    rx.recv().expect("upstream worker hung up mid-frame");
+                let buf = recv_row(rx, deadline.as_ref())?;
                 stage.or_row_words(y, &buf);
                 // Recycle before computing: progress at any capacity.
                 rx.recycle(buf);
                 let done = eng.process_row_into(stage, y, out);
-                forward_rows(&tx, out, &mut sent, done);
+                forward_rows(&tx, out, &mut sent, done,
+                             deadline.as_ref())?;
             }
         } else {
             for y in 0..frame.h {
                 let done = eng.process_row_into(frame, y, out);
-                forward_rows(&tx, out, &mut sent, done);
+                forward_rows(&tx, out, &mut sent, done,
+                             deadline.as_ref())?;
             }
         }
         let input: &SpikeFrame =
@@ -542,7 +661,7 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
             }
         }
         let (res, step) = eng.finish_frame(input, out);
-        forward_rows(&tx, out, &mut sent, out.h);
+        forward_rows(&tx, out, &mut sent, out.h, deadline.as_ref())?;
         if fi == 0 {
             tally.cycles = step.cycles;
             tally.energy = energy.dynamic(step.ops, &step.counters);
@@ -558,20 +677,78 @@ fn stream_worker(li: usize, eng: &mut dyn LayerEngine,
                       [("layer", li as u64), ("frame", fi as u64)]);
         }
     }
-    tally
+    Ok(tally)
+}
+
+/// Receive one upstream row, slicing the wait against the frame
+/// deadline when a watchdog is armed.
+fn recv_row(rx: &RowReceiver, deadline: Option<&Deadline>)
+            -> Result<Vec<u64>, String> {
+    let Some(d) = deadline else {
+        return rx
+            .recv()
+            .ok_or_else(|| "upstream worker hung up mid-frame".into());
+    };
+    loop {
+        if d.expired() {
+            d.fire();
+            return Err("watchdog deadline exceeded waiting on \
+                        upstream rows"
+                .into());
+        }
+        match rx.recv_timeout(d.wait_slice(WATCHDOG_SLICE)) {
+            RowWait::Ready(buf) => return Ok(buf),
+            RowWait::TimedOut => continue,
+            RowWait::Closed => {
+                return Err("upstream worker hung up mid-frame".into())
+            }
+        }
+    }
 }
 
 /// Forward output rows `[*sent, done)` downstream as word-packed row
-/// payloads, blocking on channel backpressure.
+/// payloads, blocking on channel backpressure (deadline-sliced when a
+/// watchdog is armed).
 fn forward_rows(tx: &Option<RowSender>, out: &SpikeFrame,
-                sent: &mut usize, done: usize) {
-    let Some(tx) = tx else { return };
+                sent: &mut usize, done: usize,
+                deadline: Option<&Deadline>) -> Result<(), String> {
+    let Some(tx) = tx else { return Ok(()) };
     let done = done.min(out.h);
     while *sent < done {
-        let mut buf = tx.acquire().expect("downstream worker hung up");
+        let mut buf = acquire_row(tx, deadline)?;
         out.row_words_into(*sent, &mut buf);
         tx.send(buf);
         *sent += 1;
+    }
+    Ok(())
+}
+
+/// Acquire one downstream row buffer, slicing the wait against the
+/// frame deadline when a watchdog is armed. Only the first timed-out
+/// slice counts as a backpressure wait, so channel stats stay
+/// comparable with the unsupervised blocking path.
+fn acquire_row(tx: &RowSender, deadline: Option<&Deadline>)
+               -> Result<Vec<u64>, String> {
+    let Some(d) = deadline else {
+        return tx
+            .acquire()
+            .ok_or_else(|| "downstream worker hung up".into());
+    };
+    let mut first = true;
+    loop {
+        if d.expired() {
+            d.fire();
+            return Err("watchdog deadline exceeded waiting on \
+                        downstream credit"
+                .into());
+        }
+        match tx.acquire_timeout(d.wait_slice(WATCHDOG_SLICE), first) {
+            RowWait::Ready(buf) => return Ok(buf),
+            RowWait::TimedOut => first = false,
+            RowWait::Closed => {
+                return Err("downstream worker hung up".into())
+            }
+        }
     }
 }
 
@@ -840,5 +1017,113 @@ mod tests {
         assert!(!rep.codec_ratios.is_empty());
         // Sparse input -> first link compresses.
         assert!(rep.codec_ratios[0] > 1.0);
+    }
+
+    use crate::supervise::{FaultEvent, FaultPlan};
+
+    /// A stalled layer worker trips the watchdog; the batch recovers
+    /// on the serial schedule with a bit-identical report (channel
+    /// stats excepted — the recovered run has none).
+    #[test]
+    fn watchdog_recovers_stalled_stream_serially() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut plain = Pipeline::random(net.clone(),
+                                         PipelineConfig::default())
+            .unwrap();
+        let want = plain.run(&f);
+
+        let stats = Arc::new(SuperviseStats::default());
+        let hooks = Arc::new(FaultHooks::from_plan(FaultPlan::new(
+            7,
+            vec![FaultEvent::StallChannel { layer: 1, ms: 2500 }],
+        )));
+        let mut guarded = Pipeline::random(
+            net,
+            PipelineConfig {
+                watchdog: Some(WatchdogPolicy::with_deadline_ms(250)),
+                faults: Some(hooks.clone()),
+                supervise: Some(stats.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got = guarded.run(&f);
+        assert_eq!(stats.snapshot().watchdog_fires, 1);
+        assert_eq!(hooks.injected(), 1);
+        assert_eq!(want.predictions, got.predictions);
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.total_cycles, got.total_cycles);
+        assert_eq!(want.layer_cycles, got.layer_cycles);
+        assert_eq!(want.ops_per_frame, got.ops_per_frame);
+        assert_eq!(want.counters, got.counters);
+        assert!(got.channel_stats.is_empty(),
+                "recovered run executed serially");
+        // The pipeline stays healthy after recovery: the stall was a
+        // one-shot fault, so the next batch streams normally.
+        let again = guarded.run(&f);
+        assert_eq!(want.predictions, again.predictions);
+        assert_eq!(stats.snapshot().watchdog_fires, 1);
+        assert!(!again.channel_stats.is_empty());
+    }
+
+    /// An idle watchdog (no fault, generous deadline) changes nothing:
+    /// the deadline-sliced channel waits are still bit-exact and no
+    /// fire is recorded.
+    #[test]
+    fn idle_watchdog_leaves_report_unchanged() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 2, 0.2);
+        let mut plain = Pipeline::random(net.clone(),
+                                         PipelineConfig::default())
+            .unwrap();
+        let want = plain.run(&f);
+        let stats = Arc::new(SuperviseStats::default());
+        let mut guarded = Pipeline::random(
+            net,
+            PipelineConfig {
+                watchdog: Some(WatchdogPolicy::default()),
+                supervise: Some(stats.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let got = guarded.run(&f);
+        assert_eq!(want.predictions, got.predictions);
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.total_cycles, got.total_cycles);
+        assert_eq!(want.counters, got.counters);
+        assert_eq!(stats.snapshot().watchdog_fires, 0);
+        assert!(!got.channel_stats.is_empty(), "still streamed");
+    }
+
+    /// With serial retry disabled the failure escalates as a panic —
+    /// the supervised replica worker upstream catches it and converts
+    /// it into an error reply.
+    #[test]
+    fn watchdog_without_retry_escalates() {
+        let net = scnn3();
+        let f = frames((28, 28, 16), 1, 0.2);
+        let hooks = Arc::new(FaultHooks::from_plan(FaultPlan::new(
+            7,
+            vec![FaultEvent::StallChannel { layer: 1, ms: 1500 }],
+        )));
+        let mut p = Pipeline::random(
+            net,
+            PipelineConfig {
+                watchdog: Some(WatchdogPolicy {
+                    deadline: Duration::from_millis(150),
+                    retry_serial: false,
+                }),
+                faults: Some(hooks),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| p.run(&f)))
+            .unwrap_err();
+        let msg = crate::supervise::panic_message(err.as_ref());
+        assert!(msg.contains("serial retry is disabled"), "{msg}");
     }
 }

@@ -40,8 +40,25 @@
 //! Per-replica counters aggregate in [`crate::metrics::PoolMetrics`]
 //! (one set per generation — a swap starts fresh books sized to the
 //! new replica count).
+//!
+//! # Supervision
+//!
+//! Every worker body runs the pipeline inside `catch_unwind`: a panic
+//! (bug or injected fault) errors the in-flight frame — the submitter
+//! gets a [`PoolResult`] with `error` set, never a hang — and the
+//! worker consults the generation's [`Supervisor`]. Within the
+//! [`RestartPolicy`] budget it backs off, optionally rebuilds its
+//! pipeline through the [`PoolSupervision::rebuild`] factory, and
+//! resumes; past the budget it retires and the pool degrades to the
+//! survivors. When the *last* replica retires, the retiring worker
+//! stays behind as a bouncer that answers every queued and future job
+//! with an explicit error, so submitters always resolve and
+//! [`ReplicaPool::drain`] still terminates. Lock poisoning (a panic
+//! on another thread while a pool lock was held) is recovered with
+//! `into_inner` everywhere — a crashed replica must never cascade
+//! into panics across submitters.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
@@ -49,10 +66,44 @@ use std::time::{Duration, Instant};
 
 use crate::codec::SpikeFrame;
 use crate::metrics::PoolMetrics;
+use crate::supervise::{panic_message, FaultHooks, RestartPolicy,
+                       Supervisor, SuperviseStats, Verdict};
 use crate::telemetry::WorkloadObserver;
 
 use super::batch::Batcher;
 use super::pipeline::Pipeline;
+
+/// Factory rebuilding replica `idx`'s pipeline after a caught panic
+/// (`None` = keep serving with the existing engines; per-frame state
+/// re-initializes on the next `begin_frame`). Wired by the session
+/// from its `PoolRecipe` so a corrupted engine never survives a
+/// restart.
+pub type RebuildFn = Arc<dyn Fn(usize) -> Option<Pipeline> + Send + Sync>;
+
+/// Supervision wiring shared by every generation of one pool.
+#[derive(Clone)]
+pub struct PoolSupervision {
+    /// Restart budget per worker (rolling window, exponential backoff).
+    pub policy: RestartPolicy,
+    /// Fault-injection hooks (`None` in production).
+    pub hooks: Option<Arc<FaultHooks>>,
+    /// Pipeline rebuild factory for post-panic restarts.
+    pub rebuild: Option<RebuildFn>,
+    /// Shared counters (restarts, retirements, ...) exported by the
+    /// metrics endpoint.
+    pub stats: Arc<SuperviseStats>,
+}
+
+impl Default for PoolSupervision {
+    fn default() -> Self {
+        Self {
+            policy: RestartPolicy::default(),
+            hooks: None,
+            rebuild: None,
+            stats: Arc::new(SuperviseStats::default()),
+        }
+    }
+}
 
 /// One unit of work travelling to a replica.
 pub struct PoolJob {
@@ -74,6 +125,9 @@ pub struct PoolResult {
     pub logits: Vec<f32>,
     /// End-to-end latency (queue wait + compute), µs.
     pub latency_us: u64,
+    /// Why the frame was *not* served (replica panicked, every
+    /// replica retired, ...). `None` on success.
+    pub error: Option<String>,
 }
 
 /// What a completed [`ReplicaPool::swap`] reports.
@@ -98,13 +152,17 @@ struct Generation {
     /// decremented after the reply is sent) — the drain condition.
     in_flight: Arc<AtomicU64>,
     replicas: usize,
+    /// Replicas still serving (shrinks as workers retire past their
+    /// restart budget; 0 = degraded to the error-bouncer).
+    alive: Arc<AtomicUsize>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Generation {
     fn spawn(pipelines: Vec<Pipeline>, max_batch: usize,
              max_wait: Duration, capacity: usize,
-             observer: Option<Arc<WorkloadObserver>>) -> Self {
+             observer: Option<Arc<WorkloadObserver>>,
+             supervision: PoolSupervision) -> Self {
         assert!(!pipelines.is_empty(), "pool needs at least one replica");
         let queue =
             Arc::new(Batcher::with_capacity(max_batch, max_wait, capacity));
@@ -112,6 +170,10 @@ impl Generation {
         let metrics = Arc::new(PoolMetrics::new(pipelines.len()));
         let in_flight = Arc::new(AtomicU64::new(0));
         let replicas = pipelines.len();
+        let alive = Arc::new(AtomicUsize::new(replicas));
+        // Restart budgets are per generation: a swap starts fresh.
+        let supervisor =
+            Arc::new(Supervisor::new(supervision.policy, replicas));
         let workers = pipelines
             .into_iter()
             .enumerate()
@@ -120,19 +182,74 @@ impl Generation {
                 let stop = stop.clone();
                 let metrics = metrics.clone();
                 let in_flight = in_flight.clone();
+                let alive = alive.clone();
                 let observer = observer.clone();
+                let supervisor = supervisor.clone();
+                let hooks = supervision.hooks.clone();
+                let rebuild = supervision.rebuild.clone();
+                let stats = supervision.stats.clone();
                 std::thread::spawn(move || {
-                    loop {
+                    // Per-replica serve sequence, stable across
+                    // restarts — the fault plans key on it.
+                    let mut frame_seq: u64 = 0;
+                    'serve: loop {
                         let batch = queue.next_batch();
                         if batch.is_empty() {
                             if stop.load(Ordering::SeqCst) {
-                                break;
+                                return;
                             }
                             continue;
                         }
                         for job in batch {
-                            serve_one(&mut pipe, idx, job, &metrics,
-                                      observer.as_deref());
+                            let crashed = serve_one(
+                                &mut pipe, idx, job, &metrics,
+                                observer.as_deref(), hooks.as_deref(),
+                                frame_seq);
+                            frame_seq += 1;
+                            in_flight.fetch_sub(1, Ordering::SeqCst);
+                            if !crashed {
+                                continue;
+                            }
+                            match supervisor.decide(idx) {
+                                Verdict::Restart { delay } => {
+                                    stats.replica_restarts
+                                        .fetch_add(1, Ordering::SeqCst);
+                                    std::thread::sleep(delay);
+                                    if let Some(fresh) = rebuild
+                                        .as_ref()
+                                        .and_then(|rb| rb(idx))
+                                    {
+                                        pipe = fresh;
+                                    }
+                                }
+                                Verdict::Retire => {
+                                    stats.replicas_retired
+                                        .fetch_add(1, Ordering::SeqCst);
+                                    break 'serve;
+                                }
+                            }
+                        }
+                    }
+                    // Retired. If other replicas survive they keep
+                    // draining the shared queue; the *last* one to go
+                    // stays as a bouncer erroring every job so
+                    // submitters never hang and drains still finish.
+                    if alive.fetch_sub(1, Ordering::SeqCst) > 1 {
+                        return;
+                    }
+                    loop {
+                        let batch = queue.next_batch();
+                        if batch.is_empty() {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            continue;
+                        }
+                        for job in batch {
+                            metrics.record_error(idx);
+                            fail_job(job, idx,
+                                     "every replica retired (restart \
+                                      budget exhausted)");
                             in_flight.fetch_sub(1, Ordering::SeqCst);
                         }
                     }
@@ -145,6 +262,7 @@ impl Generation {
             metrics,
             in_flight,
             replicas,
+            alive,
             workers: Mutex::new(workers),
         }
     }
@@ -175,7 +293,8 @@ impl Generation {
         while self.in_flight.load(Ordering::SeqCst) > 0 {
             // A fully-retired generation (workers joined elsewhere)
             // cannot make progress; don't spin forever on its account.
-            let ws = self.workers.lock().unwrap();
+            let ws =
+                self.workers.lock().unwrap_or_else(|e| e.into_inner());
             if ws.iter().all(|w| w.is_finished()) {
                 break;
             }
@@ -190,13 +309,29 @@ impl Generation {
     fn retire(&self) -> usize {
         self.stop.store(true, Ordering::SeqCst);
         let drained = self.drain();
-        let workers: Vec<_> =
-            self.workers.lock().unwrap().drain(..).collect();
+        let workers: Vec<_> = self
+            .workers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
         for w in workers {
             let _ = w.join();
         }
         drained
     }
+}
+
+/// Answer `job` with an explicit error result (never a hang).
+fn fail_job(job: PoolJob, idx: usize, msg: &str) {
+    let _ = job.reply.send(PoolResult {
+        id: job.id,
+        replica: idx,
+        prediction: None,
+        logits: Vec::new(),
+        latency_us: job.enqueued_at.elapsed().as_micros() as u64,
+        error: Some(msg.to_string()),
+    });
 }
 
 /// A pool of pipeline replicas behind one queue.
@@ -207,6 +342,7 @@ pub struct ReplicaPool {
     max_wait: Duration,
     capacity: usize,
     observer: Option<Arc<WorkloadObserver>>,
+    supervision: PoolSupervision,
     next_id: AtomicU64,
 }
 
@@ -236,8 +372,22 @@ impl ReplicaPool {
                          max_wait: Duration, capacity: usize,
                          observer: Option<Arc<WorkloadObserver>>)
                          -> Self {
+        Self::with_supervision(pipelines, max_batch, max_wait, capacity,
+                               observer, PoolSupervision::default())
+    }
+
+    /// Full constructor: `supervision` carries the restart policy,
+    /// the optional fault-injection hooks, the pipeline rebuild
+    /// factory, and the shared supervision counters. Every generation
+    /// (boot and swapped) inherits it; restart budgets reset per
+    /// generation.
+    pub fn with_supervision(pipelines: Vec<Pipeline>, max_batch: usize,
+                            max_wait: Duration, capacity: usize,
+                            observer: Option<Arc<WorkloadObserver>>,
+                            supervision: PoolSupervision) -> Self {
         let gen = Generation::spawn(pipelines, max_batch, max_wait,
-                                    capacity, observer.clone());
+                                    capacity, observer.clone(),
+                                    supervision.clone());
         Self {
             active: RwLock::new(Arc::new(gen)),
             generation: AtomicU64::new(0),
@@ -245,12 +395,32 @@ impl ReplicaPool {
             max_wait,
             capacity,
             observer,
+            supervision,
             next_id: AtomicU64::new(0),
         }
     }
 
     fn active(&self) -> Arc<Generation> {
-        self.active.read().unwrap().clone()
+        self.active
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Shared supervision counters (restarts, retirements, rollbacks).
+    pub fn supervise_stats(&self) -> Arc<SuperviseStats> {
+        self.supervision.stats.clone()
+    }
+
+    /// Fault-injection hooks, if this pool runs under a chaos plan.
+    pub fn fault_hooks(&self) -> Option<Arc<FaultHooks>> {
+        self.supervision.hooks.clone()
+    }
+
+    /// Replicas of the serving generation still alive (not retired by
+    /// the supervisor). 0 = degraded to explicit-error service.
+    pub fn alive_replicas(&self) -> usize {
+        self.active().alive.load(Ordering::SeqCst)
     }
 
     /// Replica count of the serving generation.
@@ -287,7 +457,7 @@ impl ReplicaPool {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // Push under the read guard: a concurrent swap cannot retire
         // this generation between lookup and push (see module docs).
-        let gen = self.active.read().unwrap();
+        let gen = self.active.read().unwrap_or_else(|e| e.into_inner());
         gen.push(PoolJob {
             id,
             frame,
@@ -304,7 +474,7 @@ impl ReplicaPool {
                       -> Result<Receiver<PoolResult>, SpikeFrame> {
         let (tx, rx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let gen = self.active.read().unwrap();
+        let gen = self.active.read().unwrap_or_else(|e| e.into_inner());
         match gen.try_push(PoolJob {
             id,
             frame,
@@ -318,9 +488,10 @@ impl ReplicaPool {
 
     /// Blocking convenience: submit one frame and wait for its result.
     pub fn infer(&self, frame: SpikeFrame) -> anyhow::Result<PoolResult> {
-        self.submit(frame)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("replica pool shut down"))
+        self.submit(frame).recv().map_err(|_| {
+            anyhow::anyhow!("replica pool dropped the reply (replica \
+                             crashed or pool shut down)")
+        })
     }
 
     /// Wait until every accepted job has been replied to, without
@@ -341,10 +512,11 @@ impl ReplicaPool {
     pub fn swap(&self, pipelines: Vec<Pipeline>) -> SwapStats {
         let fresh = Arc::new(Generation::spawn(
             pipelines, self.max_batch, self.max_wait, self.capacity,
-            self.observer.clone()));
+            self.observer.clone(), self.supervision.clone()));
         let replicas = fresh.replicas;
         let old = {
-            let mut active = self.active.write().unwrap();
+            let mut active =
+                self.active.write().unwrap_or_else(|e| e.into_inner());
             std::mem::replace(&mut *active, fresh)
         };
         let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
@@ -365,28 +537,80 @@ impl Drop for ReplicaPool {
     }
 }
 
+/// Serve one job with panic isolation. Returns `true` when the
+/// pipeline panicked (caught): the job was answered with an error
+/// result and the caller must consult the supervisor.
 fn serve_one(pipe: &mut Pipeline, idx: usize, job: PoolJob,
-             metrics: &PoolMetrics, observer: Option<&WorkloadObserver>) {
+             metrics: &PoolMetrics, observer: Option<&WorkloadObserver>,
+             hooks: Option<&FaultHooks>, frame_seq: u64) -> bool {
+    let fault = hooks
+        .map(|h| h.on_serve(idx, frame_seq))
+        .unwrap_or_default();
+    if let Some(d) = fault.slow {
+        std::thread::sleep(d);
+    }
     let t0 = Instant::now();
-    let rep = pipe.run(std::slice::from_ref(&job.frame));
+    // AssertUnwindSafe: on a caught panic the pipeline's engine state
+    // is treated as poisoned — the supervisor rebuilds it (or the
+    // next `begin_frame` re-initializes per-frame state) before it
+    // serves again, and the frame itself is answered as an error.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if fault.panic {
+            panic!("injected fault: panic_at replica={idx} \
+                    frame={frame_seq}");
+        }
+        pipe.run(std::slice::from_ref(&job.frame))
+    }));
     let busy_us = t0.elapsed().as_micros() as u64;
     let latency_us = job.enqueued_at.elapsed().as_micros() as u64;
-    let prediction = rep.predictions.first().copied();
-    if prediction.is_none() {
-        metrics.record_error(idx);
-    } else {
-        metrics.record(idx, latency_us, busy_us);
+    match run {
+        Ok(rep) => {
+            let prediction = rep.predictions.first().copied();
+            if prediction.is_none() {
+                metrics.record_error(idx);
+            } else {
+                metrics.record(idx, latency_us, busy_us);
+            }
+            if let Some(obs) = observer {
+                obs.observe(&rep.layer_names, &rep.codec_ratios,
+                            rep.frames);
+            }
+            if fault.drop_reply {
+                // Injected reply loss: dropping the sender makes the
+                // submitter's `recv` fail fast — an explicit error on
+                // its side, never a hang.
+                return false;
+            }
+            let _ = job.reply.send(PoolResult {
+                id: job.id,
+                replica: idx,
+                prediction,
+                logits: rep.logits.first().cloned().unwrap_or_default(),
+                latency_us,
+                error: None,
+            });
+            false
+        }
+        Err(payload) => {
+            metrics.record_error(idx);
+            if let Some(tr) = &pipe.config.trace {
+                let t = tr.start();
+                tr.record("replica.panic", "fault", t,
+                          [("replica", idx as u64),
+                           ("frame", frame_seq)]);
+            }
+            let _ = job.reply.send(PoolResult {
+                id: job.id,
+                replica: idx,
+                prediction: None,
+                logits: Vec::new(),
+                latency_us,
+                error: Some(format!("replica {idx} panicked: {}",
+                                    panic_message(payload.as_ref()))),
+            });
+            true
+        }
     }
-    if let Some(obs) = observer {
-        obs.observe(&rep.layer_names, &rep.codec_ratios, rep.frames);
-    }
-    let _ = job.reply.send(PoolResult {
-        id: job.id,
-        replica: idx,
-        prediction,
-        logits: rep.logits.first().cloned().unwrap_or_default(),
-        latency_us,
-    });
 }
 
 #[cfg(test)]
@@ -630,6 +854,147 @@ mod tests {
         let m = pool.metrics();
         assert_eq!(m.per_replica().len(), 2);
         assert_eq!(m.totals().requests, 0);
+        pool.shutdown();
+    }
+
+    use crate::supervise::{FaultEvent, FaultPlan};
+
+    fn supervised_pool(n: usize, plan: FaultPlan,
+                       policy: RestartPolicy) -> ReplicaPool {
+        let sup = PoolSupervision {
+            policy,
+            hooks: Some(Arc::new(FaultHooks::from_plan(plan))),
+            rebuild: Some(Arc::new(|_idx| {
+                Pipeline::random(mini_net(), PipelineConfig {
+                    backend: BackendKind::WordParallel,
+                    ..Default::default()
+                })
+                .ok()
+            })),
+            stats: Arc::new(SuperviseStats::default()),
+        };
+        ReplicaPool::with_supervision(pipes(n), 4,
+                                      Duration::from_millis(1), 0,
+                                      None, sup)
+    }
+
+    /// An injected panic errors exactly its own frame; the worker
+    /// restarts (counted) and keeps serving bit-identical results.
+    #[test]
+    fn panicking_replica_errors_frame_and_restarts() {
+        let plan = FaultPlan::new(0, vec![
+            FaultEvent::PanicAt { replica: 0, frame: 1 },
+        ]);
+        let pool = supervised_pool(1, plan, RestartPolicy::default());
+        let fs = frames(4, 21);
+        let mut serial = pipes(1).pop().unwrap();
+        for (i, f) in fs.iter().enumerate() {
+            let r = pool.infer(f.clone()).unwrap();
+            if i == 1 {
+                let err = r.error.expect("crashed frame must error");
+                assert!(err.contains("panicked"), "{err}");
+                assert_eq!(r.prediction, None);
+            } else {
+                assert!(r.error.is_none());
+                assert_eq!(r.prediction.unwrap(),
+                           serial.run(std::slice::from_ref(f))
+                               .predictions[0],
+                           "surviving serves stay bit-identical");
+            }
+        }
+        let snap = pool.supervise_stats().snapshot();
+        assert_eq!(snap.replica_restarts, 1);
+        assert_eq!(snap.replicas_retired, 0);
+        assert_eq!(pool.alive_replicas(), 1);
+        pool.shutdown();
+    }
+
+    /// Past the restart budget the replica retires; with no survivors
+    /// the pool answers every subsequent job with an explicit error —
+    /// zero hangs, shutdown still drains.
+    #[test]
+    fn budget_exhaustion_degrades_to_explicit_errors() {
+        let plan = FaultPlan::new(0, vec![
+            FaultEvent::PanicAt { replica: 0, frame: 0 },
+        ]);
+        let pool = supervised_pool(1, plan, RestartPolicy::never());
+        let r = pool.infer(frames(1, 22).pop().unwrap()).unwrap();
+        assert!(r.error.as_deref().unwrap().contains("panicked"));
+        // The sole replica is now retired: served by the bouncer.
+        let r = pool.infer(frames(1, 23).pop().unwrap()).unwrap();
+        assert!(r.error.as_deref().unwrap().contains("retired"),
+                "degraded pool must answer, got {r:?}");
+        let snap = pool.supervise_stats().snapshot();
+        assert_eq!(snap.replica_restarts, 0);
+        assert_eq!(snap.replicas_retired, 1);
+        assert_eq!(pool.alive_replicas(), 0);
+        pool.shutdown();
+    }
+
+    /// Restart counts respect the rolling budget: a crash-looping
+    /// replica is granted at most `max_restarts` restarts per window.
+    #[test]
+    fn restart_counts_respect_the_budget() {
+        let plan = FaultPlan::new(0, (0..8)
+            .map(|i| FaultEvent::PanicAt { replica: 0, frame: i })
+            .collect());
+        let policy = RestartPolicy {
+            max_restarts: 2,
+            window: Duration::from_secs(3600),
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+        };
+        let pool = supervised_pool(1, plan, policy);
+        for f in frames(8, 24) {
+            let r = pool.infer(f).unwrap();
+            assert!(r.error.is_some(), "every frame either panics or \
+                                        hits the retired bouncer");
+        }
+        let snap = pool.supervise_stats().snapshot();
+        assert_eq!(snap.replica_restarts, 2, "budget is the cap");
+        assert_eq!(snap.replicas_retired, 1);
+        pool.shutdown();
+    }
+
+    /// A dropped reply surfaces as a fast receive error on the
+    /// submitter side — explicit failure, not a hang.
+    #[test]
+    fn drop_reply_fault_fails_fast() {
+        let plan = FaultPlan::new(0, vec![
+            FaultEvent::DropReply { replica: 0, frame: 0 },
+        ]);
+        let pool = supervised_pool(1, plan, RestartPolicy::default());
+        let err = pool.infer(frames(1, 25).pop().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("dropped the reply"), "{err}");
+        // The worker did not crash: the next frame serves normally.
+        let r = pool.infer(frames(1, 26).pop().unwrap()).unwrap();
+        assert!(r.error.is_none());
+        assert!(r.prediction.is_some());
+        pool.shutdown();
+    }
+
+    /// Survivors keep serving (bit-identically) while another replica
+    /// crash-loops into retirement.
+    #[test]
+    fn survivors_unaffected_by_a_retired_replica() {
+        let plan = FaultPlan::new(0, (0..4)
+            .map(|i| FaultEvent::PanicAt { replica: 0, frame: i })
+            .collect());
+        let pool = supervised_pool(2, plan, RestartPolicy::never());
+        let fs = frames(24, 27);
+        let mut serial = pipes(1).pop().unwrap();
+        let mut errored = 0;
+        for f in &fs {
+            let r = pool.infer(f.clone()).unwrap();
+            match r.error {
+                Some(_) => errored += 1,
+                None => assert_eq!(
+                    r.prediction.unwrap(),
+                    serial.run(std::slice::from_ref(f)).predictions[0]),
+            }
+        }
+        assert!(errored <= 1, "only replica 0's first serve crashes");
+        assert!(pool.alive_replicas() >= 1);
         pool.shutdown();
     }
 }

@@ -46,6 +46,12 @@
 //! * [`metrics`] — FPS / GOPS / GOPS/W / GOPS/W/PE accounting plus
 //!   per-replica serving counters and the latency reservoir behind
 //!   the served p50/p95/p99 numbers.
+//! * [`supervise`] — fault tolerance: panic-isolated replica workers
+//!   under budgeted-backoff restart ([`supervise::Supervisor`]),
+//!   streamed-executor watchdog deadlines with serial-retry
+//!   degradation, transactional retune swaps with health-probe
+//!   rollback, and the seeded [`supervise::FaultPlan`] chaos harness
+//!   (`serve --chaos`).
 //! * [`telemetry`] — host-side observability: allocation-bounded
 //!   trace spans with Chrome trace-event export (`run --trace`), the
 //!   Prometheus-style metrics registry behind the server `metrics`
@@ -65,6 +71,7 @@ pub mod runtime;
 pub mod server;
 pub mod session;
 pub mod sim;
+pub mod supervise;
 pub mod telemetry;
 pub mod util;
 

@@ -43,6 +43,7 @@ use sti_snn::server::{Backend, Server};
 use sti_snn::session::{Session, Weights};
 use sti_snn::sim::{cycles_to_ms, BackendKind, EnergyModel,
                    ResourceModel};
+use sti_snn::supervise::{FaultPlan, WatchdogPolicy};
 use sti_snn::telemetry::{TraceSink, DEFAULT_TRACE_CAPACITY};
 use sti_snn::util::cli::Args;
 use sti_snn::util::rng::Rng;
@@ -185,6 +186,15 @@ fn usage() {
          \x20                      the last swap (default 32)\n\
          \x20 --retune-log PATH    write the retune event log (JSON) on\n\
          \x20                      shutdown\n\
+         \x20 --watchdog-ms MS     arm a deadline watchdog over the\n\
+         \x20                      streamed executor: an overdue frame\n\
+         \x20                      tears the pipeline down and retries\n\
+         \x20                      once on the serial schedule\n\
+         \x20 --chaos PLAN.json    run under a deterministic\n\
+         \x20                      fault-injection plan (panics, channel\n\
+         \x20                      stalls, slow replicas, dropped\n\
+         \x20                      replies); testing only — needs\n\
+         \x20                      --synthetic or --auto-tune\n\
          \x20 (live metrics: send {{\"cmd\": \"metrics\"}} to a running\n\
          \x20 server for a Prometheus-style exposition — latency\n\
          \x20 quantiles, shed count, queue depth, per-layer observed\n\
@@ -216,7 +226,7 @@ fn known_flags(sub: &str) -> &'static [&'static str] {
                      "intra-parallel", "no-pipelined", "events",
                      "queue-cap", "online-tune", "retune-interval",
                      "retune-cooldown", "retune-min-frames",
-                     "retune-log"],
+                     "retune-log", "watchdog-ms", "chaos"],
         "gen-events" => &["model", "out", "windows", "rate", "window-us",
                           "seed"],
         _ => COMMON,
@@ -822,6 +832,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                        --auto-tune): generation swaps rebuild \
                        simulator pipelines");
     }
+    if (args.get("chaos").is_some() || args.get("watchdog-ms").is_some())
+        && !(args.has("synthetic") || args.has("auto-tune"))
+    {
+        // Fault injection targets the replica pool and the watchdog
+        // monitors the streamed simulator schedule; neither exists on
+        // the single-threaded PJRT path.
+        anyhow::bail!("serve --chaos / --watchdog-ms require \
+                       --synthetic (or --auto-tune): supervision \
+                       targets the simulator pool");
+    }
 
     if args.has("synthetic") || args.has("auto-tune") {
         // Simulator-only serving: no artifacts, no XLA; one pipeline
@@ -838,6 +858,24 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             .queue_capacity(queue_cap);
         if let Some(b) = backend {
             builder = builder.backend(b);
+        }
+        if let Some(ms) = args.get("watchdog-ms") {
+            let ms: u64 = ms.parse().map_err(|_| {
+                anyhow::anyhow!("invalid --watchdog-ms {ms:?}")
+            })?;
+            println!("watchdog: {} ms streamed-frame deadline \
+                      (serial retry on fire)", ms);
+            builder = builder
+                .watchdog(WatchdogPolicy::with_deadline_ms(ms));
+        }
+        if let Some(path) = args.get("chaos") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading chaos plan {path}"))?;
+            let plan = FaultPlan::from_json(&text)
+                .with_context(|| format!("parsing chaos plan {path}"))?;
+            println!("chaos: injecting {} fault(s) from {path} \
+                      (seed {})", plan.events.len(), plan.seed);
+            builder = builder.chaos(plan);
         }
         if let Some(r) = args.get("replicas") {
             let r: usize = r.parse().map_err(|_| {

@@ -138,8 +138,10 @@ use crate::codec::stream::{DvsEvent, EventStream, WindowPolicy};
 use crate::codec::SpikeFrame;
 use crate::coordinator::batch::Batcher;
 use crate::metrics::{LatencySummary, PoolMetrics};
+use crate::supervise::SuperviseStats;
 use crate::telemetry::{MetricsRegistry, WorkloadObserver};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Inference backend the server fronts: image in, (class, logits) out.
 /// Deliberately NOT required to be `Send` — `serve` keeps it on one
@@ -174,6 +176,11 @@ pub struct ServerStats {
     pub protocol_errors: AtomicU64,
     /// Events-mode windows refused because the bounded queue was full.
     pub shed: AtomicU64,
+    /// Connections dropped because a reply write stalled past
+    /// [`EVENTS_WRITE_STALL`] (client stopped draining replies).
+    pub dropped_write_stall: AtomicU64,
+    /// Connections dropped on any other I/O error mid-conversation.
+    pub dropped_io: AtomicU64,
     /// Per-replica counters (one entry in single-pipeline mode).
     pub pool: PoolMetrics,
 }
@@ -183,6 +190,8 @@ impl ServerStats {
         Self {
             protocol_errors: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            dropped_write_stall: AtomicU64::new(0),
+            dropped_io: AtomicU64::new(0),
             pool: PoolMetrics::new(replicas),
         }
     }
@@ -200,6 +209,12 @@ impl ServerStats {
     /// Windows shed under events-mode backpressure.
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::SeqCst)
+    }
+
+    /// Connections dropped, by cause: `(write_stall, io)`.
+    pub fn dropped(&self) -> (u64, u64) {
+        (self.dropped_write_stall.load(Ordering::SeqCst),
+         self.dropped_io.load(Ordering::SeqCst))
     }
 
     /// Saturating sum of end-to-end latencies across replicas. Prefer
@@ -263,6 +278,7 @@ pub struct Server<B: Backend> {
     queue_cap: usize,
     workload: Option<Arc<WorkloadObserver>>,
     retune: Option<Arc<RetuneLog>>,
+    supervise: Option<Arc<SuperviseStats>>,
 }
 
 impl<B: Backend> Server<B> {
@@ -285,6 +301,7 @@ impl<B: Backend> Server<B> {
             queue_cap: 0,
             workload: None,
             retune: None,
+            supervise: None,
         }
     }
 
@@ -320,6 +337,15 @@ impl<B: Backend> Server<B> {
     /// (`sti_retune_total`, `sti_retune_generation`).
     pub fn with_retune(mut self, log: Arc<RetuneLog>) -> Self {
         self.retune = Some(log);
+        self
+    }
+
+    /// Attach the supervision counters: replica restarts/retirements,
+    /// watchdog fires, retune rollbacks, and tuner restarts join the
+    /// `metrics` exposition (`sti_replica_restarts_total`,
+    /// `sti_watchdog_fires_total`, `sti_retune_rollbacks_total`, ...).
+    pub fn with_supervise(mut self, stats: Arc<SuperviseStats>) -> Self {
+        self.supervise = Some(stats);
         self
     }
 
@@ -363,7 +389,8 @@ impl<B: Backend> Server<B> {
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
                                &self.shutdown, conn, &self.workload,
-                               &self.retune, &mut handles)?;
+                               &self.retune, &self.supervise,
+                               &mut handles)?;
             // Drain inference jobs on this (backend-owning) thread.
             let batch = queue.try_batch();
             if batch.is_empty() {
@@ -430,7 +457,8 @@ impl<B: Backend + Send + 'static> Server<B> {
         while !self.shutdown.load(Ordering::SeqCst) {
             accept_connections(&listener, &queue, &self.stats,
                                &self.shutdown, conn, &self.workload,
-                               &self.retune, &mut handles)?;
+                               &self.retune, &self.supervise,
+                               &mut handles)?;
             std::thread::sleep(Duration::from_millis(1));
         }
         for w in workers {
@@ -455,11 +483,13 @@ struct ConnInfo {
 }
 
 /// Accept pending connections (non-blocking listener).
+#[allow(clippy::too_many_arguments)]
 fn accept_connections(
     listener: &TcpListener, queue: &Arc<Batcher<Job>>,
     stats: &Arc<ServerStats>, shutdown: &Arc<AtomicBool>,
     conn: ConnInfo, workload: &Option<Arc<WorkloadObserver>>,
     retune: &Option<Arc<RetuneLog>>,
+    supervise: &Option<Arc<SuperviseStats>>,
     handles: &mut Vec<std::thread::JoinHandle<()>>) -> Result<()> {
     loop {
         match listener.accept() {
@@ -469,9 +499,14 @@ fn accept_connections(
                 let shutdown = shutdown.clone();
                 let workload = workload.clone();
                 let retune = retune.clone();
+                let supervise = supervise.clone();
                 handles.push(std::thread::spawn(move || {
-                    let _ = conn_loop(stream, queue, stats, shutdown, conn,
-                                      workload, retune);
+                    if let Err(e) = conn_loop(stream, queue,
+                                              stats.clone(), shutdown,
+                                              conn, workload, retune,
+                                              supervise) {
+                        count_dropped_connection(&stats, &e);
+                    }
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -479,6 +514,27 @@ fn accept_connections(
             }
             Err(e) => return Err(e.into()),
         }
+    }
+}
+
+/// Classify a connection-loop error for the drop counters: a write
+/// timeout ([`EVENTS_WRITE_STALL`] — the client stopped draining
+/// replies) versus any other I/O failure. The connection is gone
+/// either way; the counters make the silent drop observable
+/// (`sti_connections_dropped_total{reason=...}`).
+fn count_dropped_connection(stats: &ServerStats, e: &anyhow::Error) {
+    let is_stall = e
+        .downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(io.kind(),
+                     std::io::ErrorKind::WouldBlock
+                     | std::io::ErrorKind::TimedOut)
+        })
+        .unwrap_or(false);
+    if is_stall {
+        stats.dropped_write_stall.fetch_add(1, Ordering::SeqCst);
+    } else {
+        stats.dropped_io.fetch_add(1, Ordering::SeqCst);
     }
 }
 
@@ -585,7 +641,8 @@ fn stats_json(stats: &ServerStats, queue_depth: usize,
 fn metrics_text(stats: &ServerStats, queue_depth: usize,
                 queue_capacity: usize,
                 workload: Option<&WorkloadObserver>,
-                retune: Option<&RetuneLog>) -> String {
+                retune: Option<&RetuneLog>,
+                supervise: Option<&SuperviseStats>) -> String {
     let mut reg = MetricsRegistry::new();
     reg.counter("sti_requests_total", "requests served across replicas")
         .sample(stats.requests() as f64);
@@ -595,6 +652,11 @@ fn metrics_text(stats: &ServerStats, queue_depth: usize,
     reg.counter("sti_shed_total",
                 "events-mode windows refused under backpressure")
         .sample(stats.shed() as f64);
+    let (stalled, io) = stats.dropped();
+    reg.counter("sti_connections_dropped_total",
+                "connections dropped mid-conversation, by cause")
+        .sample_with(&[("reason", "write_stall")], stalled as f64)
+        .sample_with(&[("reason", "io")], io as f64);
     reg.gauge("sti_queue_depth", "jobs waiting in the shared queue")
         .sample(queue_depth as f64);
     reg.gauge("sti_queue_capacity",
@@ -660,16 +722,37 @@ fn metrics_text(stats: &ServerStats, queue_depth: usize,
                   "replica-pool generation currently serving")
             .sample(log.generation() as f64);
     }
+    if let Some(sup) = supervise {
+        let snap = sup.snapshot();
+        reg.counter("sti_replica_restarts_total",
+                    "replica workers restarted after a caught panic")
+            .sample(snap.replica_restarts as f64);
+        reg.counter("sti_replicas_retired_total",
+                    "replica workers retired past the restart budget")
+            .sample(snap.replicas_retired as f64);
+        reg.counter("sti_watchdog_fires_total",
+                    "streamed frames aborted and recovered serially")
+            .sample(snap.watchdog_fires as f64);
+        reg.counter("sti_retune_rollbacks_total",
+                    "retune swaps rolled back by the health probe")
+            .sample(snap.retune_rollbacks as f64);
+        reg.counter("sti_tuner_restarts_total",
+                    "online-tuner control loops restarted after a \
+                     caught panic")
+            .sample(snap.tuner_restarts as f64);
+    }
     reg.render()
 }
 
 /// Per-connection loop: parse lines, ship jobs, write replies. An
 /// `events` command hands the connection over to the binary
 /// `events_loop`.
+#[allow(clippy::too_many_arguments)]
 fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
              stats: Arc<ServerStats>, shutdown: Arc<AtomicBool>,
              conn: ConnInfo, workload: Option<Arc<WorkloadObserver>>,
-             retune: Option<Arc<RetuneLog>>)
+             retune: Option<Arc<RetuneLog>>,
+             supervise: Option<Arc<SuperviseStats>>)
              -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -696,7 +779,8 @@ fn conn_loop(stream: TcpStream, queue: Arc<Batcher<Job>>,
                             let text = metrics_text(
                                 &stats, queue.len(), queue.capacity,
                                 workload.as_deref(),
-                                retune.as_deref());
+                                retune.as_deref(),
+                                supervise.as_deref());
                             out.write_all(text.as_bytes())?;
                             continue;
                         }
@@ -1139,6 +1223,59 @@ fn parse_event_reply(p: &[u8]) -> Result<EventReply> {
     }
 }
 
+/// Retry schedule for [`Client::submit_with_retry`]: bounded attempt
+/// count with jittered exponential backoff between attempts.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (minimum 1).
+    pub max_attempts: u32,
+    /// Backoff budget before the second attempt; doubles per retry.
+    pub base_backoff: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff: Duration,
+    /// Seed for the jitter RNG so retry timing is reproducible.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            seed: 0x7E72_11ED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep before retry number `attempt` (1 = first retry): uniform
+    /// jitter in `[b/2, b]` where `b = base * 2^(attempt-1)`, capped
+    /// at `max_backoff`.
+    fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16));
+        let cap = exp.min(self.max_backoff).as_micros() as u64;
+        let half = cap / 2;
+        let jitter = rng.below((cap - half + 1) as usize) as u64;
+        Duration::from_micros(half + jitter)
+    }
+}
+
+/// True when an inference reply's error message indicates transient
+/// overload a later attempt may clear: explicit shed, a full queue, or
+/// a reply timeout. Terminal conditions (server shutting down,
+/// protocol errors) are not retried.
+fn reply_is_retryable(err: &str) -> bool {
+    if err.contains("timed out") || err.contains("shed")
+        || err.contains("queue full")
+    {
+        return true;
+    }
+    false
+}
+
 /// Simple blocking client (used by examples + tests). Speaks both the
 /// JSON protocol ([`Client::infer`]) and, after
 /// [`Client::start_events`], the binary events protocol.
@@ -1168,6 +1305,32 @@ impl Client {
              Json::Arr(image.iter().map(|&x| Json::num(x as f64)).collect())),
         ]);
         self.request(&req)
+    }
+
+    /// [`Client::infer`] with bounded retries: replies whose `error`
+    /// field indicates transient overload (shed, queue full, reply
+    /// timeout) are retried up to `policy.max_attempts` total
+    /// attempts with jittered exponential backoff between them.
+    /// Transport errors and terminal replies (e.g. "server shutting
+    /// down") are returned immediately; when the budget runs out, the
+    /// last reply is returned as-is for the caller to inspect.
+    pub fn submit_with_retry(&mut self, id: u64, image: &[f32],
+                             policy: &RetryPolicy) -> Result<Json> {
+        let mut rng = Rng::new(policy.seed ^ id);
+        let attempts = policy.max_attempts.max(1);
+        let mut reply = self.infer(id, image)?;
+        for attempt in 1..attempts {
+            let retryable = reply
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(reply_is_retryable);
+            if !retryable {
+                return Ok(reply);
+            }
+            std::thread::sleep(policy.backoff(attempt, &mut rng));
+            reply = self.infer(id, image)?;
+        }
+        Ok(reply)
     }
 
     /// Switch this connection to the binary events protocol; returns
@@ -1479,6 +1642,12 @@ mod tests {
                                0.25"),
                 "{text}");
         assert!(text.contains("sti_frames_observed_total 2"), "{text}");
+        assert!(text.contains("sti_connections_dropped_total\
+                               {reason=\"write_stall\"} 0"),
+                "{text}");
+        assert!(text.contains("sti_connections_dropped_total\
+                               {reason=\"io\"} 0"),
+                "{text}");
         assert!(text.ends_with("# EOF\n"), "{text}");
         // The connection still speaks JSON after a metrics reply.
         let resp = c.infer(2, &[0.9, 0.1, 0.2, 0.3]).unwrap();
@@ -1678,6 +1847,102 @@ mod tests {
         assert_eq!(stats.protocol_errors.load(Ordering::SeqCst), 1);
 
         let mut c = Client::connect(&addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// `submit_with_retry` against a scripted flaky server: two
+    /// retryable overload replies, then success on the third attempt.
+    /// A terminal error ("server shutting down") is returned on the
+    /// first attempt without burning the retry budget.
+    #[test]
+    fn submit_with_retry_survives_a_flaky_server() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let script = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader =
+                BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let mut served = 0u32;
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    return served;
+                }
+                served += 1;
+                let reply = match served {
+                    1 => r#"{"error": "window shed (queue full)"}"#,
+                    2 => r#"{"error": "request timed out (overloaded)"}"#,
+                    3 => r#"{"id": 7, "class": 3}"#,
+                    _ => r#"{"error": "server shutting down"}"#,
+                };
+                writeln!(out, "{reply}").unwrap();
+            }
+        });
+
+        let mut c = Client::connect(&addr).unwrap();
+        let policy = RetryPolicy {
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(4),
+            ..RetryPolicy::default()
+        };
+        let ok = c.submit_with_retry(7, &[0.0; 4], &policy).unwrap();
+        assert_eq!(ok.get("class").and_then(|v| v.as_usize()), Some(3));
+
+        let term = c.submit_with_retry(8, &[0.0; 4], &policy).unwrap();
+        assert_eq!(term.get("error").and_then(|e| e.as_str()),
+                   Some("server shutting down"));
+        drop(c);
+        assert_eq!(script.join().unwrap(), 4);
+    }
+
+    /// Retry classification: overload is retryable, terminal and
+    /// protocol conditions are not.
+    #[test]
+    fn retryable_reply_classification() {
+        assert!(reply_is_retryable("window shed (queue full)"));
+        assert!(reply_is_retryable(
+            "request timed out (overloaded or shutting down)"));
+        assert!(!reply_is_retryable("server shutting down"));
+        assert!(!reply_is_retryable("bad image length"));
+    }
+
+    /// With supervision stats attached the exposition carries the
+    /// restart/watchdog/rollback counters; a plain server emits none
+    /// of them (byte-stable metrics for unsupervised serving).
+    #[test]
+    fn metrics_expose_supervision_counters_when_attached() {
+        let sup = Arc::new(SuperviseStats::default());
+        sup.replica_restarts.fetch_add(2, Ordering::SeqCst);
+        sup.watchdog_fires.fetch_add(1, Ordering::SeqCst);
+        let server = Server::new(Toy).with_supervise(sup);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let text = c.metrics().unwrap();
+        assert!(text.contains("sti_replica_restarts_total 2"), "{text}");
+        assert!(text.contains("sti_replicas_retired_total 0"), "{text}");
+        assert!(text.contains("sti_watchdog_fires_total 1"), "{text}");
+        assert!(text.contains("sti_retune_rollbacks_total 0"), "{text}");
+        assert!(text.contains("sti_tuner_restarts_total 0"), "{text}");
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+
+        let plain = Server::new(Toy);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            plain.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap())
+        });
+        let addr = rx.recv().unwrap().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        let text = c.metrics().unwrap();
+        assert!(!text.contains("sti_replica_restarts_total"), "{text}");
+        assert!(!text.contains("sti_watchdog_fires_total"), "{text}");
         c.shutdown().unwrap();
         h.join().unwrap().unwrap();
     }

@@ -89,7 +89,8 @@ use crate::codec::stream::{DvsEvent, EventStream, StreamStats,
 use crate::codec::SpikeFrame;
 use crate::coordinator::pipeline::{Pipeline, PipelineConfig,
                                    PipelineReport};
-use crate::coordinator::replica::{PoolResult, ReplicaPool};
+use crate::coordinator::replica::{PoolResult, PoolSupervision,
+                                  RebuildFn, ReplicaPool};
 use crate::dataflow::ConvLatencyParams;
 use crate::dse;
 use crate::metrics::{LatencySummary, PerfRow, PoolMetrics};
@@ -97,6 +98,9 @@ use crate::model::Artifact;
 use crate::server::{Backend, Server};
 use crate::sim::engine::{random_sources, LayerWeights};
 use crate::sim::fifo::ChannelSnapshot;
+use crate::supervise::{FaultHooks, FaultPlan, RestartPolicy,
+                       SuperviseSnapshot, SuperviseStats,
+                       WatchdogPolicy};
 use crate::telemetry::{TraceSink, WorkloadObserver, WorkloadSnapshot};
 use crate::sim::{AccessCounter, BackendKind, EnergyModel, EnergyReport,
                  ResourceModel, ResourceReport, CLK_HZ};
@@ -143,6 +147,9 @@ pub struct Inference {
 
 impl Inference {
     fn from_pool(r: PoolResult) -> Result<Self> {
+        if let Some(e) = r.error {
+            anyhow::bail!("{e}");
+        }
         let class = r.prediction.ok_or_else(|| {
             anyhow::anyhow!("network has no classifier head")
         })?;
@@ -316,6 +323,9 @@ pub struct SessionBuilder {
     trace: Option<Arc<TraceSink>>,
     online_tune: Option<RetunePolicy>,
     retune_log: Option<PathBuf>,
+    watchdog: Option<WatchdogPolicy>,
+    restart: Option<RestartPolicy>,
+    chaos: Option<FaultPlan>,
 }
 
 impl SessionBuilder {
@@ -468,6 +478,36 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm a watchdog over the streamed executor: a frame that
+    /// overruns `policy.deadline` tears the worker pipeline down and
+    /// (when `policy.retry_serial`) recovers the batch bit-exactly on
+    /// the serial schedule. Without one (the default), streamed waits
+    /// are plain blocking operations with zero overhead.
+    pub fn watchdog(mut self, policy: WatchdogPolicy) -> Self {
+        self.watchdog = Some(policy);
+        self
+    }
+
+    /// Restart budget for supervised replica workers (default:
+    /// [`RestartPolicy::default`] — 3 restarts per 30 s rolling
+    /// window, exponential backoff). Workers that exhaust it retire;
+    /// a pool whose replicas all retire degrades to explicit error
+    /// replies instead of hanging.
+    pub fn restart_policy(mut self, policy: RestartPolicy) -> Self {
+        self.restart = Some(policy);
+        self
+    }
+
+    /// Run under a deterministic fault-injection plan (chaos testing):
+    /// the seeded schedule of panics, channel stalls, slow replicas,
+    /// and dropped replies is consumed one-shot as the session serves.
+    /// Production sessions leave this unset — every fault hook is an
+    /// `Option` that stays `None`.
+    pub fn chaos(mut self, plan: FaultPlan) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
     /// Validate the configuration and construct the session.
     pub fn build(self) -> Result<Session> {
         // Weight source first: an artifact can supply the network.
@@ -559,6 +599,9 @@ impl SessionBuilder {
             net = net.try_with_parallel_factors(f)?;
         }
 
+        let supervise = Arc::new(SuperviseStats::default());
+        let faults =
+            self.chaos.map(|p| Arc::new(FaultHooks::from_plan(p)));
         let config = PipelineConfig {
             timesteps,
             timing: self.timing
@@ -569,6 +612,9 @@ impl SessionBuilder {
             backend,
             intra_parallel: self.intra_parallel.unwrap_or(1),
             trace: self.trace.clone(),
+            watchdog: self.watchdog,
+            faults: faults.clone(),
+            supervise: Some(supervise.clone()),
             ..PipelineConfig::default()
         };
 
@@ -596,6 +642,9 @@ impl SessionBuilder {
             online_policy: self.online_tune,
             retune_log_path: self.retune_log,
             tuner: None,
+            supervise,
+            faults,
+            restart: self.restart.unwrap_or_default(),
         })
     }
 }
@@ -617,6 +666,9 @@ pub struct TelemetrySnapshot {
     /// Online-tuner counters (swaps, generation, evaluations), when
     /// [`SessionBuilder::online_tune`] spawned a controller.
     pub retune: Option<RetuneSummary>,
+    /// Supervision counters: replica restarts/retirements, watchdog
+    /// fires, retune rollbacks, tuner restarts.
+    pub supervise: SuperviseSnapshot,
 }
 
 /// An explicit network spec used with artifact weights must describe
@@ -674,6 +726,9 @@ pub struct Session {
     online_policy: Option<RetunePolicy>,
     retune_log_path: Option<PathBuf>,
     tuner: Option<OnlineTuner>,
+    supervise: Arc<SuperviseStats>,
+    faults: Option<Arc<FaultHooks>>,
+    restart: RestartPolicy,
 }
 
 impl Session {
@@ -826,9 +881,9 @@ impl Session {
     pub fn start_pool(&mut self) -> Result<()> {
         if self.pool.is_none() {
             let pipes = self.build_pipelines(self.replicas)?;
-            self.pool = Some(Arc::new(ReplicaPool::with_observer(
+            self.pool = Some(Arc::new(ReplicaPool::with_supervision(
                 pipes, self.max_batch, self.max_wait, self.queue_cap,
-                Some(self.observer.clone()))));
+                Some(self.observer.clone()), self.supervision())));
         }
         if self.tuner.is_none() {
             if let Some(policy) = self.online_policy.clone() {
@@ -840,6 +895,46 @@ impl Session {
             }
         }
         Ok(())
+    }
+
+    /// The supervision wiring every pool generation inherits: the
+    /// session's restart budget, fault hooks (chaos runs only), shared
+    /// counters, and a rebuild factory that reconstructs a replica's
+    /// pipeline bit-identically after a panic (same net, config, and
+    /// weight sources).
+    fn supervision(&self) -> PoolSupervision {
+        let net = self.net.clone();
+        let config = self.config.clone();
+        let sources = self.sources.clone();
+        let rebuild: RebuildFn = Arc::new(move |_replica| {
+            Pipeline::new(net.clone(), config.clone(), sources.clone())
+                .ok()
+        });
+        PoolSupervision {
+            policy: self.restart,
+            hooks: self.faults.clone(),
+            rebuild: Some(rebuild),
+            stats: self.supervise.clone(),
+        }
+    }
+
+    /// Shared supervision counters (replica restarts, watchdog fires,
+    /// retune rollbacks, ...) ticked by every component this session
+    /// builds.
+    pub fn supervise_stats(&self) -> Arc<SuperviseStats> {
+        self.supervise.clone()
+    }
+
+    /// The fault-injection hooks, when the session runs under a
+    /// [`SessionBuilder::chaos`] plan.
+    pub fn fault_hooks(&self) -> Option<Arc<FaultHooks>> {
+        self.faults.clone()
+    }
+
+    /// Replicas of the pool's serving generation still alive (not
+    /// retired by the supervisor), when the pool is running.
+    pub fn alive_replicas(&self) -> Option<usize> {
+        self.pool.as_ref().map(|p| p.alive_replicas())
     }
 
     /// The rebuild recipe the online tuner constructs replacement
@@ -945,6 +1040,7 @@ impl Session {
                 .map(|p| p.metrics().latency_summary()),
             queue_depth: self.pool.as_ref().map(|p| p.queue_len()),
             retune: self.tuner.as_ref().map(|t| t.log().summary()),
+            supervise: self.supervise.snapshot(),
         }
     }
 
@@ -982,6 +1078,7 @@ impl Session {
         }
         let shape = self.pipeline.input_shape();
         let extra = self.build_pipelines(self.replicas - 1)?;
+        let sup = self.supervise.clone();
         let obs = self.observer;
         let mut backends = Vec::with_capacity(self.replicas);
         backends.push(FrameBackend {
@@ -1000,7 +1097,8 @@ impl Session {
         let server = Server::with_backends(backends)
             .with_queue(self.max_batch, self.max_wait)
             .with_queue_capacity(self.queue_cap)
-            .with_workload(obs);
+            .with_workload(obs)
+            .with_supervise(sup);
         if pooled {
             server.serve_pool(addr, on_bound)
         } else {
@@ -1034,7 +1132,8 @@ impl Session {
             .with_queue(self.max_batch, self.max_wait)
             .with_queue_capacity(self.queue_cap)
             .with_workload(self.observer.clone())
-            .with_retune(retune);
+            .with_retune(retune)
+            .with_supervise(self.supervise.clone());
         let result = if workers > 1 {
             server.serve_pool(addr, on_bound)
         } else {
@@ -1145,6 +1244,9 @@ impl Backend for PoolBackend {
             "frame shape ({}, {}, {}) != session input {:?}",
             frame.h, frame.w, frame.c, self.shape);
         let r = self.pool.infer(frame.clone())?;
+        if let Some(e) = r.error {
+            anyhow::bail!("{e}");
+        }
         let class = r.prediction.ok_or_else(|| {
             anyhow::anyhow!("no prediction")
         })?;
@@ -1237,6 +1339,61 @@ mod tests {
         assert_eq!(got, direct);
         assert!(s.pool_metrics().is_some());
         s.shutdown();
+    }
+
+    /// A chaos plan wired through the builder: the targeted frame is
+    /// answered with an explicit error (never a hang), the worker
+    /// restarts under the default budget, and the supervision
+    /// counters surface in the telemetry snapshot.
+    #[test]
+    fn chaos_session_restarts_and_reports() {
+        use crate::supervise::{FaultEvent, FaultPlan};
+        let plan = FaultPlan::new(
+            7, vec![FaultEvent::PanicAt { replica: 0, frame: 0 }]);
+        let mut s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .chaos(plan)
+            .build()
+            .unwrap();
+        let f = frames(s.input_shape(), 2, 21);
+        s.start_pool().unwrap();
+        let first = s.infer(f[0].clone());
+        assert!(first.is_err(), "injected panic surfaces as an error");
+        let second = s.infer(f[1].clone()).unwrap();
+        assert_eq!(second.replica, 0, "restarted worker serves again");
+        let t = s.telemetry();
+        assert_eq!(t.supervise.replica_restarts, 1);
+        assert_eq!(t.supervise.replicas_retired, 0);
+        assert_eq!(s.alive_replicas(), Some(1));
+        assert_eq!(s.fault_hooks().unwrap().injected(), 1);
+        s.shutdown();
+    }
+
+    /// An idle watchdog through the builder leaves the unified report
+    /// bit-identical and never fires.
+    #[test]
+    fn watchdog_session_is_bit_exact_when_idle() {
+        let mut plain = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .build()
+            .unwrap();
+        let mut dogged = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .watchdog(WatchdogPolicy::default())
+            .build()
+            .unwrap();
+        let f = frames(plain.input_shape(), 2, 33);
+        let a = plain.infer_batch(&f);
+        let b = dogged.infer_batch(&f);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(b.channel_stats.len(), b.layer_names.len() - 1,
+                   "watchdogged batch still streams");
+        assert_eq!(dogged.telemetry().supervise.watchdog_fires, 0);
     }
 
     /// Event windows classify identically to the same frames fed

@@ -19,10 +19,27 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
+                      TryRecvError};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::telemetry::TraceSink;
+
+/// Outcome of a bounded channel wait ([`RowReceiver::recv_timeout`] /
+/// [`RowSender::acquire_timeout`]) — the watchdog-aware variants the
+/// supervised streamed executor polls with.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RowWait {
+    /// A buffer arrived within the slice.
+    Ready(Vec<u64>),
+    /// Nothing arrived within the slice; the peer is still alive.
+    /// Callers re-check their deadline/abort flag and wait again.
+    TimedOut,
+    /// The peer hung up (panicked or aborted) — no buffer will ever
+    /// arrive.
+    Closed,
+}
 
 #[derive(Debug, Clone)]
 pub struct Fifo<T> {
@@ -208,6 +225,36 @@ impl RowSender {
         }
     }
 
+    /// Bounded-wait [`RowSender::acquire`]: block at most `slice` for
+    /// a recycled buffer. The backpressure counter ticks on the first
+    /// slice of a blocking wait only (retries after `TimedOut` pass
+    /// `count_wait = false`), so counters match the unbounded path.
+    pub fn acquire_timeout(&self, slice: Duration, count_wait: bool)
+                           -> RowWait {
+        match self.recycle.try_recv() {
+            Ok(buf) => RowWait::Ready(buf),
+            Err(TryRecvError::Empty) => {
+                if count_wait {
+                    self.stats
+                        .backpressure_waits
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                let t0 = self.trace.as_ref().map(|t| t.start());
+                let got = self.recycle.recv_timeout(slice);
+                if let (Some(tr), Some(t0)) = (&self.trace, t0) {
+                    tr.record("channel.wait", "backpressure", t0,
+                              [("link", self.link), ("", 0)]);
+                }
+                match got {
+                    Ok(buf) => RowWait::Ready(buf),
+                    Err(RecvTimeoutError::Timeout) => RowWait::TimedOut,
+                    Err(RecvTimeoutError::Disconnected) => RowWait::Closed,
+                }
+            }
+            Err(TryRecvError::Disconnected) => RowWait::Closed,
+        }
+    }
+
     /// Send one filled row buffer downstream.
     pub fn send(&self, buf: Vec<u64>) -> bool {
         let occ = self.stats.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
@@ -236,6 +283,21 @@ impl RowReceiver {
         self.stats.recvs.fetch_add(1, Ordering::Relaxed);
         self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
         Some(buf)
+    }
+
+    /// Bounded-wait [`RowReceiver::recv`]: block at most `slice` for
+    /// the next row so a watchdog-supervised worker can re-check its
+    /// deadline between slices.
+    pub fn recv_timeout(&self, slice: Duration) -> RowWait {
+        match self.data.recv_timeout(slice) {
+            Ok(buf) => {
+                self.stats.recvs.fetch_add(1, Ordering::Relaxed);
+                self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+                RowWait::Ready(buf)
+            }
+            Err(RecvTimeoutError::Timeout) => RowWait::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => RowWait::Closed,
+        }
     }
 
     /// Hand a consumed buffer back to the producer.
@@ -348,6 +410,40 @@ mod tests {
                     && e.cat == "backpressure"
                     && e.args[0] == ("link", 3)),
                 "blocking acquire must leave a wait span: {evs:?}");
+    }
+
+    /// The bounded-wait variants distinguish "nothing yet" from "peer
+    /// gone" and keep the counters identical to the unbounded path.
+    #[test]
+    fn timeout_variants_report_timeout_and_closure() {
+        let (tx, rx) = row_channel(1, 1);
+        let slice = Duration::from_millis(5);
+        assert_eq!(rx.recv_timeout(slice), RowWait::TimedOut);
+        let buf = match tx.acquire_timeout(slice, true) {
+            RowWait::Ready(b) => b,
+            other => panic!("expected a prefilled buffer, got {other:?}"),
+        };
+        assert!(tx.send(buf));
+        // Channel slot now empty: a second acquire times out...
+        assert_eq!(tx.acquire_timeout(slice, true), RowWait::TimedOut);
+        match rx.recv_timeout(slice) {
+            RowWait::Ready(b) => rx.recycle(b),
+            other => panic!("expected the sent row, got {other:?}"),
+        }
+        // ...and succeeds once the consumer recycles.
+        assert!(matches!(tx.acquire_timeout(slice, false),
+                         RowWait::Ready(_)));
+        let stats = rx.stats().snapshot();
+        assert_eq!(stats.sends, 1);
+        assert_eq!(stats.recvs, 1);
+        assert_eq!(stats.backpressure_waits, 1,
+                   "only the counted blocking acquire ticks the counter");
+        // Dropped peers read as Closed on both halves.
+        drop(rx);
+        assert_eq!(tx.acquire_timeout(slice, false), RowWait::Closed);
+        let (tx2, rx2) = row_channel(1, 1);
+        drop(tx2);
+        assert_eq!(rx2.recv_timeout(slice), RowWait::Closed);
     }
 
     #[test]

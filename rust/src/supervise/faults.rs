@@ -1,0 +1,409 @@
+//! Deterministic fault injection: seeded [`FaultPlan`] schedules and
+//! the runtime [`FaultHooks`] that fire them.
+//!
+//! A plan is a *pure data* schedule — which replica panics on which
+//! frame, which streamed layer stalls for how long — so a chaos run is
+//! reproducible from its seed alone. The hooks are `#[cfg]`-free:
+//! production wiring passes `None` everywhere (an `Option<Arc<..>>`
+//! check on the hot path, no allocation — the `alloc_budget` contract
+//! is untouched), and `serve --chaos PLAN.json` or the chaos test
+//! suite passes `Some`.
+//!
+//! Frame indices are **per-replica serve sequence numbers**: replica
+//! `r`'s counter ticks once per frame it serves, surviving restarts,
+//! so `PanicAt { replica: 1, frame: 2 }` fires on the third frame
+//! replica 1 ever serves regardless of how the queue distributes work.
+//! The probe sentinel [`REPLICA_PROBE`] targets the retune health
+//! probe instead of a pool worker — a plan carrying
+//! `PanicAt { replica: REPLICA_PROBE, .. }` kills the candidate
+//! generation mid-swap and must yield a rollback.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// `replica` value addressing the retune health probe rather than a
+/// pool worker.
+pub const REPLICA_PROBE: usize = usize::MAX;
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Panic inside replica `replica`'s worker while serving its
+    /// `frame`-th frame (0-based per-replica sequence).
+    PanicAt { replica: usize, frame: u64 },
+    /// Stall streamed layer `layer`'s worker for `ms` before it
+    /// starts its next frame (watchdog fodder).
+    StallChannel { layer: usize, ms: u64 },
+    /// Delay replica `replica`'s `frame`-th serve by `ms` without
+    /// crashing (latency fault).
+    SlowReplica { replica: usize, frame: u64, ms: u64 },
+    /// Drop the reply channel for replica `replica`'s `frame`-th
+    /// serve: the submitter sees a disconnect error, never a hang.
+    DropReply { replica: usize, frame: u64 },
+}
+
+impl FaultEvent {
+    fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::PanicAt { .. } => "panic_at",
+            FaultEvent::StallChannel { .. } => "stall_channel",
+            FaultEvent::SlowReplica { .. } => "slow_replica",
+            FaultEvent::DropReply { .. } => "drop_reply",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let num = |v: u64| Json::num(v as f64);
+        let mut kv = vec![("kind", Json::str(self.kind()))];
+        match *self {
+            FaultEvent::PanicAt { replica, frame } => {
+                kv.push(("replica", num(replica as u64)));
+                kv.push(("frame", num(frame)));
+            }
+            FaultEvent::StallChannel { layer, ms } => {
+                kv.push(("layer", num(layer as u64)));
+                kv.push(("ms", num(ms)));
+            }
+            FaultEvent::SlowReplica { replica, frame, ms } => {
+                kv.push(("replica", num(replica as u64)));
+                kv.push(("frame", num(frame)));
+                kv.push(("ms", num(ms)));
+            }
+            FaultEvent::DropReply { replica, frame } => {
+                kv.push(("replica", num(replica as u64)));
+                kv.push(("frame", num(frame)));
+            }
+        }
+        Json::obj(kv)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let field = |k: &str| -> Result<u64> {
+            v.get(k)
+                .and_then(|x| x.as_f64())
+                .map(|x| x as u64)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fault event missing field {k:?}")
+                })
+        };
+        // `replica` may be the u64-encoded probe sentinel; map it back.
+        let replica = |r: u64| -> usize {
+            if r == u64::MAX || r == REPLICA_PROBE as u64 {
+                REPLICA_PROBE
+            } else {
+                r as usize
+            }
+        };
+        let kind = v
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow::anyhow!("fault event missing kind"))?;
+        Ok(match kind {
+            "panic_at" => FaultEvent::PanicAt {
+                replica: replica(field("replica")?),
+                frame: field("frame")?,
+            },
+            "stall_channel" => FaultEvent::StallChannel {
+                layer: field("layer")? as usize,
+                ms: field("ms")?,
+            },
+            "slow_replica" => FaultEvent::SlowReplica {
+                replica: replica(field("replica")?),
+                frame: field("frame")?,
+                ms: field("ms")?,
+            },
+            "drop_reply" => FaultEvent::DropReply {
+                replica: replica(field("replica")?),
+                frame: field("frame")?,
+            },
+            other => anyhow::bail!("unknown fault kind {other:?}"),
+        })
+    }
+}
+
+/// A seeded, pure schedule of faults.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, events: Vec<FaultEvent>) -> Self {
+        Self { seed, events }
+    }
+
+    /// Generate `n` faults over `replicas` workers x `frames` frames
+    /// x `layers` streamed layers, deterministically from `seed`. The
+    /// CI soak sweeps seeds; the same seed always yields the same
+    /// plan.
+    pub fn generate(seed: u64, replicas: usize, frames: u64,
+                    layers: usize, n: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5EED_FA17);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let replica = rng.below(replicas.max(1));
+            let frame = rng.below(frames.max(1) as usize) as u64;
+            events.push(match rng.below(4) {
+                0 => FaultEvent::PanicAt { replica, frame },
+                1 => FaultEvent::StallChannel {
+                    layer: rng.below(layers.max(1)),
+                    ms: 1 + rng.below(20) as u64,
+                },
+                2 => FaultEvent::SlowReplica {
+                    replica,
+                    frame,
+                    ms: 1 + rng.below(10) as u64,
+                },
+                _ => FaultEvent::DropReply { replica, frame },
+            });
+        }
+        Self { seed, events }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("events",
+             Json::Arr(self.events.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let seed = v
+            .get("seed")
+            .and_then(|s| s.as_f64())
+            .unwrap_or(0.0) as u64;
+        let events = v
+            .get("events")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("fault plan missing events"))?
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { seed, events })
+    }
+}
+
+/// What [`FaultHooks::on_serve`] tells a replica worker to do for the
+/// frame it is about to run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeFault {
+    /// Panic inside the (caught) serve body.
+    pub panic: bool,
+    /// Sleep this long before serving.
+    pub slow: Option<Duration>,
+    /// Drop the reply sender instead of answering.
+    pub drop_reply: bool,
+}
+
+impl ServeFault {
+    pub fn is_none(&self) -> bool {
+        *self == Self::default()
+    }
+}
+
+/// Runtime fault state compiled from a [`FaultPlan`]: each event
+/// fires exactly once (consumed flags), every firing is appended to a
+/// log line buffer for the chaos artifact.
+pub struct FaultHooks {
+    plan: FaultPlan,
+    consumed: Vec<AtomicBool>,
+    injected: AtomicU64,
+    log: Mutex<Vec<String>>,
+}
+
+impl FaultHooks {
+    pub fn from_plan(plan: FaultPlan) -> Self {
+        let consumed =
+            (0..plan.events.len()).map(|_| AtomicBool::new(false)).collect();
+        Self {
+            plan,
+            consumed,
+            injected: AtomicU64::new(0),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::SeqCst)
+    }
+
+    /// Human-readable record of every fired fault (chaos artifact).
+    pub fn log_lines(&self) -> Vec<String> {
+        self.log.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn fire(&self, idx: usize, note: String) {
+        self.injected.fetch_add(1, Ordering::SeqCst);
+        self.log
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(format!("[{idx}] {note}"));
+    }
+
+    /// Claim event `idx` if it has not fired yet.
+    fn claim(&self, idx: usize) -> bool {
+        !self.consumed[idx].swap(true, Ordering::SeqCst)
+    }
+
+    /// Faults scheduled for `replica`'s `frame_seq`-th serve.
+    pub fn on_serve(&self, replica: usize, frame_seq: u64) -> ServeFault {
+        let mut f = ServeFault::default();
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            match *ev {
+                FaultEvent::PanicAt { replica: r, frame }
+                    if r == replica && frame == frame_seq =>
+                {
+                    if self.claim(i) {
+                        f.panic = true;
+                        self.fire(i, format!(
+                            "panic_at replica={replica} frame={frame_seq}"));
+                    }
+                }
+                FaultEvent::SlowReplica { replica: r, frame, ms }
+                    if r == replica && frame == frame_seq =>
+                {
+                    if self.claim(i) {
+                        f.slow = Some(Duration::from_millis(ms));
+                        self.fire(i, format!(
+                            "slow_replica replica={replica} \
+                             frame={frame_seq} ms={ms}"));
+                    }
+                }
+                FaultEvent::DropReply { replica: r, frame }
+                    if r == replica && frame == frame_seq =>
+                {
+                    if self.claim(i) {
+                        f.drop_reply = true;
+                        self.fire(i, format!(
+                            "drop_reply replica={replica} \
+                             frame={frame_seq}"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// Stall scheduled for streamed layer `layer` (consumed once).
+    pub fn stall(&self, layer: usize) -> Option<Duration> {
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if let FaultEvent::StallChannel { layer: l, ms } = *ev {
+                if l == layer && self.claim(i) {
+                    self.fire(i, format!(
+                        "stall_channel layer={layer} ms={ms}"));
+                    return Some(Duration::from_millis(ms));
+                }
+            }
+        }
+        None
+    }
+
+    /// A `PanicAt` aimed at [`REPLICA_PROBE`]: the retune health probe
+    /// must die (consumed once).
+    pub fn probe_panic(&self) -> bool {
+        for (i, ev) in self.plan.events.iter().enumerate() {
+            if let FaultEvent::PanicAt { replica: REPLICA_PROBE, .. } = *ev
+            {
+                if self.claim(i) {
+                    self.fire(i, "panic_at probe".to_string());
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_in_the_seed() {
+        let a = FaultPlan::generate(7, 4, 32, 5, 12);
+        let b = FaultPlan::generate(7, 4, 32, 5, 12);
+        let c = FaultPlan::generate(8, 4, 32, 5, 12);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.events.len(), 12);
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        let plan = FaultPlan::new(3, vec![
+            FaultEvent::PanicAt { replica: 1, frame: 4 },
+            FaultEvent::PanicAt { replica: REPLICA_PROBE, frame: 0 },
+            FaultEvent::StallChannel { layer: 2, ms: 50 },
+            FaultEvent::SlowReplica { replica: 0, frame: 9, ms: 5 },
+            FaultEvent::DropReply { replica: 3, frame: 2 },
+        ]);
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::from_json(&text).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(FaultPlan::from_json("{\"seed\": 1}").is_err());
+        assert!(FaultPlan::from_json(
+            "{\"events\": [{\"kind\": \"meteor\"}]}").is_err());
+        assert!(FaultPlan::from_json(
+            "{\"events\": [{\"kind\": \"panic_at\"}]}").is_err());
+    }
+
+    #[test]
+    fn each_event_fires_exactly_once() {
+        let hooks = FaultHooks::from_plan(FaultPlan::new(0, vec![
+            FaultEvent::PanicAt { replica: 0, frame: 1 },
+            FaultEvent::StallChannel { layer: 1, ms: 5 },
+        ]));
+        assert!(hooks.on_serve(0, 0).is_none());
+        assert!(hooks.on_serve(1, 1).is_none(), "wrong replica");
+        let f = hooks.on_serve(0, 1);
+        assert!(f.panic);
+        assert!(hooks.on_serve(0, 1).is_none(), "consumed");
+        assert_eq!(hooks.stall(0), None);
+        assert_eq!(hooks.stall(1), Some(Duration::from_millis(5)));
+        assert_eq!(hooks.stall(1), None, "consumed");
+        assert_eq!(hooks.injected(), 2);
+        assert_eq!(hooks.log_lines().len(), 2);
+    }
+
+    #[test]
+    fn probe_sentinel_only_fires_the_probe_hook() {
+        let hooks = FaultHooks::from_plan(FaultPlan::new(0, vec![
+            FaultEvent::PanicAt { replica: REPLICA_PROBE, frame: 0 },
+        ]));
+        assert!(hooks.on_serve(0, 0).is_none(),
+                "pool workers never match the probe sentinel");
+        assert!(hooks.probe_panic());
+        assert!(!hooks.probe_panic(), "consumed");
+    }
+
+    #[test]
+    fn combined_faults_on_one_frame_compose() {
+        let hooks = FaultHooks::from_plan(FaultPlan::new(0, vec![
+            FaultEvent::SlowReplica { replica: 2, frame: 3, ms: 1 },
+            FaultEvent::DropReply { replica: 2, frame: 3 },
+        ]));
+        let f = hooks.on_serve(2, 3);
+        assert_eq!(f.slow, Some(Duration::from_millis(1)));
+        assert!(f.drop_reply);
+        assert!(!f.panic);
+    }
+}

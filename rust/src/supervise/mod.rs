@@ -1,0 +1,105 @@
+//! Supervision layer: panic isolation, budgeted restarts, watchdogs,
+//! and deterministic fault injection.
+//!
+//! The serving tier (replica pool + streamed executor + online tuner)
+//! must run unattended: a panic in any worker thread, a stalled row
+//! channel, or a bad retune candidate degrades service instead of
+//! silently killing a component for the life of the process.
+//!
+//! - [`policy`]: [`RestartPolicy`] budgeted exponential backoff and
+//!   the [`Supervisor`] that turns worker crashes into
+//!   restart-or-retire [`Verdict`]s.
+//! - [`watchdog`]: [`WatchdogPolicy`] deadlines over the streamed
+//!   executor; an overdue frame tears the pipeline down and retries
+//!   once on the serial schedule.
+//! - [`faults`]: seeded [`FaultPlan`] schedules injected through
+//!   `Option`-based runtime hooks ([`FaultHooks`]) that are `None` in
+//!   production — no `#[cfg]`, no hot-path allocation.
+//!
+//! Every supervision action ticks a counter on [`SuperviseStats`];
+//! the server's metrics endpoint exports them as
+//! `sti_replica_restarts_total`, `sti_watchdog_fires_total`, and
+//! `sti_retune_rollbacks_total`.
+
+pub mod faults;
+pub mod policy;
+pub mod watchdog;
+
+pub use faults::{FaultEvent, FaultHooks, FaultPlan, ServeFault,
+                 REPLICA_PROBE};
+pub use policy::{RestartPolicy, Supervisor, Verdict};
+pub use watchdog::{Deadline, WatchdogPolicy};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Best-effort extraction of a caught panic payload's message (the
+/// `&str`/`String` cases `panic!` produces; anything else gets a
+/// placeholder).
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Shared supervision counters (one set per `Session`/pool, exported
+/// by the metrics endpoint).
+#[derive(Debug, Default)]
+pub struct SuperviseStats {
+    /// Replica workers restarted after a caught panic.
+    pub replica_restarts: AtomicU64,
+    /// Replica workers retired after exhausting the restart budget.
+    pub replicas_retired: AtomicU64,
+    /// Streamed-executor frames aborted by the watchdog (or a worker
+    /// crash) and recovered on the serial schedule.
+    pub watchdog_fires: AtomicU64,
+    /// Retune generations rolled back (failed health probe or panic
+    /// during the swap).
+    pub retune_rollbacks: AtomicU64,
+    /// Online-tuner control loops restarted after a caught panic.
+    pub tuner_restarts: AtomicU64,
+}
+
+/// Plain-value snapshot of [`SuperviseStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SuperviseSnapshot {
+    pub replica_restarts: u64,
+    pub replicas_retired: u64,
+    pub watchdog_fires: u64,
+    pub retune_rollbacks: u64,
+    pub tuner_restarts: u64,
+}
+
+impl SuperviseStats {
+    pub fn snapshot(&self) -> SuperviseSnapshot {
+        SuperviseSnapshot {
+            replica_restarts: self.replica_restarts.load(Ordering::SeqCst),
+            replicas_retired: self.replicas_retired.load(Ordering::SeqCst),
+            watchdog_fires: self.watchdog_fires.load(Ordering::SeqCst),
+            retune_rollbacks: self.retune_rollbacks.load(Ordering::SeqCst),
+            tuner_restarts: self.tuner_restarts.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reads_every_counter() {
+        let s = SuperviseStats::default();
+        s.replica_restarts.fetch_add(2, Ordering::SeqCst);
+        s.watchdog_fires.fetch_add(1, Ordering::SeqCst);
+        s.retune_rollbacks.fetch_add(3, Ordering::SeqCst);
+        let snap = s.snapshot();
+        assert_eq!(snap.replica_restarts, 2);
+        assert_eq!(snap.replicas_retired, 0);
+        assert_eq!(snap.watchdog_fires, 1);
+        assert_eq!(snap.retune_rollbacks, 3);
+        assert_eq!(snap.tuner_restarts, 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Restart policies and the [`Supervisor`] bookkeeping behind them.
+//!
+//! A supervised worker (replica worker thread, tuner control loop)
+//! reports each crash to a shared [`Supervisor`]; the verdict is
+//! either *restart after a backoff* or *retire*. The budget is a
+//! rolling window — `max_restarts` crashes inside `window` retire the
+//! worker — so a worker that crashes once a day keeps restarting
+//! forever while a crash loop burns its budget in milliseconds and
+//! degrades the pool to the survivors instead of spinning.
+//!
+//! Every decision method takes the clock as an argument
+//! ([`Supervisor::decide_at`]) so tests drive the rolling window with
+//! a synthetic timeline; [`Supervisor::decide`] is the `Instant::now`
+//! convenience used by production callers.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Budgeted exponential-backoff restart policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPolicy {
+    /// Crashes tolerated per rolling `window` before retiring.
+    pub max_restarts: u32,
+    /// Rolling budget window.
+    pub window: Duration,
+    /// Backoff before the first restart; doubles per consecutive
+    /// restart inside the window.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        Self {
+            max_restarts: 3,
+            window: Duration::from_secs(30),
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// A policy that never restarts (first crash retires the worker).
+    pub fn never() -> Self {
+        Self { max_restarts: 0, ..Self::default() }
+    }
+
+    /// Exponential backoff for the `attempt`-th restart in the
+    /// current window (0-based), capped at `max_backoff`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let mult = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base_backoff
+            .checked_mul(mult)
+            .map_or(self.max_backoff, |d| d.min(self.max_backoff))
+    }
+}
+
+/// What a crashed worker should do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Sleep `delay`, rebuild, and resume serving.
+    Restart { delay: Duration },
+    /// Budget exhausted: exit for good; the pool degrades to the
+    /// survivors.
+    Retire,
+}
+
+/// Tracks restarts per worker lane and applies a [`RestartPolicy`].
+///
+/// Shared across the workers of one generation (or one tuner); cheap
+/// enough that contention is irrelevant — it is only locked when a
+/// worker crashes.
+pub struct Supervisor {
+    policy: RestartPolicy,
+    /// Restart timestamps per worker, pruned to the rolling window.
+    lanes: Mutex<Vec<Vec<Instant>>>,
+    /// Total restarts ever granted (survives window pruning).
+    granted: std::sync::atomic::AtomicU64,
+}
+
+impl Supervisor {
+    pub fn new(policy: RestartPolicy, workers: usize) -> Self {
+        Self {
+            policy,
+            lanes: Mutex::new(vec![Vec::new(); workers]),
+            granted: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> &RestartPolicy {
+        &self.policy
+    }
+
+    /// Total restarts granted across all lanes since construction.
+    pub fn restarts_granted(&self) -> u64 {
+        self.granted.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Judge a crash of `worker` at the injected time `now`.
+    pub fn decide_at(&self, worker: usize, now: Instant) -> Verdict {
+        let mut lanes =
+            self.lanes.lock().unwrap_or_else(|e| e.into_inner());
+        if worker >= lanes.len() {
+            lanes.resize(worker + 1, Vec::new());
+        }
+        let lane = &mut lanes[worker];
+        lane.retain(|t| {
+            now.saturating_duration_since(*t) < self.policy.window
+        });
+        if lane.len() as u32 >= self.policy.max_restarts {
+            return Verdict::Retire;
+        }
+        let attempt = lane.len() as u32;
+        lane.push(now);
+        self.granted
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        Verdict::Restart { delay: self.policy.backoff(attempt) }
+    }
+
+    /// Judge a crash of `worker` right now.
+    pub fn decide(&self, worker: usize) -> Verdict {
+        self.decide_at(worker, Instant::now())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RestartPolicy {
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(35),
+            ..RestartPolicy::default()
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(10));
+        assert_eq!(p.backoff(1), Duration::from_millis(20));
+        assert_eq!(p.backoff(2), Duration::from_millis(35), "capped");
+        assert_eq!(p.backoff(40), Duration::from_millis(35),
+                   "shift overflow saturates at the cap");
+    }
+
+    #[test]
+    fn budget_exhausts_then_retires() {
+        let p = RestartPolicy {
+            max_restarts: 2,
+            window: Duration::from_secs(10),
+            ..RestartPolicy::default()
+        };
+        let s = Supervisor::new(p, 1);
+        let t0 = Instant::now();
+        assert!(matches!(s.decide_at(0, t0), Verdict::Restart { .. }));
+        assert!(matches!(s.decide_at(0, t0), Verdict::Restart { .. }));
+        assert_eq!(s.decide_at(0, t0), Verdict::Retire);
+        assert_eq!(s.restarts_granted(), 2);
+    }
+
+    #[test]
+    fn window_rolls_the_budget_back() {
+        let p = RestartPolicy {
+            max_restarts: 1,
+            window: Duration::from_secs(5),
+            ..RestartPolicy::default()
+        };
+        let s = Supervisor::new(p, 1);
+        let t0 = Instant::now();
+        assert!(matches!(s.decide_at(0, t0), Verdict::Restart { .. }));
+        assert_eq!(s.decide_at(0, t0 + Duration::from_secs(1)),
+                   Verdict::Retire);
+        // Past the window the crash record expires: budget refreshed.
+        assert!(matches!(s.decide_at(0, t0 + Duration::from_secs(6)),
+                         Verdict::Restart { .. }));
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let p = RestartPolicy { max_restarts: 1,
+                                ..RestartPolicy::default() };
+        let s = Supervisor::new(p, 2);
+        let t0 = Instant::now();
+        assert!(matches!(s.decide_at(0, t0), Verdict::Restart { .. }));
+        assert_eq!(s.decide_at(0, t0), Verdict::Retire);
+        // Worker 1 still has its own budget.
+        assert!(matches!(s.decide_at(1, t0), Verdict::Restart { .. }));
+    }
+
+    #[test]
+    fn never_policy_retires_immediately() {
+        let s = Supervisor::new(RestartPolicy::never(), 1);
+        assert_eq!(s.decide(0), Verdict::Retire);
+    }
+
+    #[test]
+    fn unseen_lane_grows_on_demand() {
+        let s = Supervisor::new(RestartPolicy::default(), 1);
+        assert!(matches!(s.decide(7), Verdict::Restart { .. }));
+    }
+}

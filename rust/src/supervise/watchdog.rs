@@ -1,0 +1,109 @@
+//! Per-frame deadline monitoring for the streamed executor.
+//!
+//! The streamed schedule runs one worker per layer connected by
+//! bounded row channels; a stalled worker (bug, injected
+//! `StallChannel` fault, pathological input) would otherwise block
+//! its neighbours forever on `recv`/`acquire`. With a
+//! [`WatchdogPolicy`] armed, workers wait on the channels in bounded
+//! slices and check a shared [`Deadline`]; whoever notices the
+//! deadline first aborts the frame, the abort flag cascades through
+//! the other workers, the scoped pipeline tears down, and — policy
+//! permitting — the frame batch is retried once on the serial
+//! schedule (identical reports, graceful degradation instead of a
+//! hang).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Deadline policy for one `Pipeline::run` call on the streamed
+/// schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WatchdogPolicy {
+    /// Wall-clock budget per frame (the heartbeat: every row forward
+    /// is progress; a frame that stops progressing past this fires).
+    pub deadline: Duration,
+    /// Retry the batch once on the serial schedule after a fire
+    /// (otherwise the run reports an error).
+    pub retry_serial: bool,
+}
+
+impl Default for WatchdogPolicy {
+    fn default() -> Self {
+        Self { deadline: Duration::from_secs(5), retry_serial: true }
+    }
+}
+
+impl WatchdogPolicy {
+    pub fn with_deadline_ms(ms: u64) -> Self {
+        Self { deadline: Duration::from_millis(ms), ..Self::default() }
+    }
+}
+
+/// Shared frame deadline: armed per frame, polled by every layer
+/// worker between channel waits.
+pub struct Deadline {
+    due: Instant,
+    aborted: Arc<AtomicBool>,
+}
+
+impl Deadline {
+    /// Arm a deadline `budget` from now with a shared abort flag.
+    pub fn arm(budget: Duration, aborted: Arc<AtomicBool>) -> Self {
+        Self { due: Instant::now() + budget, aborted }
+    }
+
+    /// True once the budget is spent or any worker already aborted.
+    pub fn expired(&self) -> bool {
+        self.aborted.load(Ordering::SeqCst) || Instant::now() >= self.due
+    }
+
+    /// Mark the whole frame aborted (cascades to every worker).
+    pub fn fire(&self) {
+        self.aborted.store(true, Ordering::SeqCst);
+    }
+
+    /// How long a channel wait may block before re-checking: the
+    /// remaining budget, clamped to `slice` so the abort flag is
+    /// polled at least that often.
+    pub fn wait_slice(&self, slice: Duration) -> Duration {
+        self.due
+            .saturating_duration_since(Instant::now())
+            .min(slice)
+            .max(Duration::from_millis(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires_on_time_or_abort() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let d = Deadline::arm(Duration::from_secs(60), flag.clone());
+        assert!(!d.expired());
+        d.fire();
+        assert!(d.expired(), "abort flag expires every worker's view");
+        assert!(flag.load(Ordering::SeqCst));
+
+        let d = Deadline::arm(Duration::from_millis(0),
+                              Arc::new(AtomicBool::new(false)));
+        assert!(d.expired(), "zero budget is already due");
+    }
+
+    #[test]
+    fn wait_slice_is_bounded_and_positive() {
+        let d = Deadline::arm(Duration::from_secs(60),
+                              Arc::new(AtomicBool::new(false)));
+        let s = d.wait_slice(Duration::from_millis(20));
+        assert!(s <= Duration::from_millis(20));
+        assert!(s >= Duration::from_millis(1));
+
+        let d = Deadline::arm(Duration::from_millis(0),
+                              Arc::new(AtomicBool::new(false)));
+        assert_eq!(d.wait_slice(Duration::from_millis(20)),
+                   Duration::from_millis(1),
+                   "expired deadline still polls, never busy-spins");
+    }
+}

@@ -1,0 +1,328 @@
+//! Chaos suite (ISSUE 9 acceptance): deterministic fault-injection
+//! sweeps over the serving stack, asserting the supervision
+//! invariants end to end:
+//!
+//! 1. **Zero hangs** — under any seeded [`FaultPlan`], every
+//!    submitted frame is answered or errored within a bounded wait;
+//!    nothing blocks forever.
+//! 2. **Bounded restarts** — replica restart counts respect the
+//!    [`RestartPolicy`] budget; exhausting it degrades the pool to
+//!    explicit error replies, never silence.
+//! 3. **Bit-exact survivors** — frames served around an injected
+//!    crash (including by a restarted worker) produce logits
+//!    bit-identical to a fault-free reference session.
+//! 4. **Transactional retunes** — a replica killed mid-swap (the
+//!    health probe panics) triggers a rollback: the pool generation
+//!    is unchanged and the rolled-back attempt is logged.
+//!
+//! The CI `chaos_soak` step sweeps extra seeds in release mode
+//! (`STI_SNN_STRESS_ITERS`) and uploads the fault/restart event log
+//! written to `STI_SNN_CHAOS_LOG`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use sti_snn::autotune::RetunePolicy;
+use sti_snn::codec::SpikeFrame;
+use sti_snn::session::Session;
+use sti_snn::sim::BackendKind;
+use sti_snn::supervise::{FaultEvent, FaultPlan, RestartPolicy,
+                         REPLICA_PROBE};
+use sti_snn::util::rng::Rng;
+
+/// Bounded wait for chaos replies: generous for slow CI machines, but
+/// finite — a hit means a genuine hang, the one thing the supervision
+/// layer must never allow.
+const NO_HANG: Duration = Duration::from_secs(60);
+
+/// A restart policy with test-scale backoff (the default 10 ms base is
+/// fine too, but the sweep restarts often).
+fn fast_restarts() -> RestartPolicy {
+    RestartPolicy {
+        base_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(8),
+        ..RestartPolicy::default()
+    }
+}
+
+fn test_frames(shape: (usize, usize, usize), n: usize, seed: u64)
+               -> Vec<SpikeFrame> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SpikeFrame::random(shape.0, shape.1, shape.2, 0.2,
+                                    &mut rng))
+        .collect()
+}
+
+/// Fault-free reference logits for bit-exactness checks.
+fn reference_logits(frames: &[SpikeFrame]) -> Vec<Vec<f32>> {
+    let mut s = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .build()
+        .unwrap();
+    frames
+        .iter()
+        .map(|f| s.infer(f.clone()).unwrap().logits)
+        .collect()
+}
+
+/// Append chaos-run evidence to the `STI_SNN_CHAOS_LOG` artifact when
+/// CI asks for one (the soak step uploads it).
+fn write_chaos_log(lines: &[String]) {
+    if let Ok(path) = std::env::var("STI_SNN_CHAOS_LOG") {
+        if path.is_empty() {
+            return;
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+        {
+            for line in lines {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+    }
+}
+
+/// Invariants 1 + 2 + 3 over a sweep of generated plans: every frame
+/// answered-or-errored (zero hangs), restarts within budget, and every
+/// successful reply bit-identical to the fault-free reference.
+#[test]
+fn seeded_fault_sweep_never_hangs() {
+    let iters: u64 = std::env::var("STI_SNN_STRESS_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let policy = fast_restarts();
+    let mut log = Vec::new();
+    for seed in 0..iters {
+        let plan = FaultPlan::generate(seed, 2, 8, 3, 6);
+        log.push(format!("chaos seed {seed}: plan {}", plan.to_json()));
+        let mut s = Session::builder()
+            .model("scnn3")
+            .backend(BackendKind::WordParallel)
+            .replicas(2)
+            .queue(4, Duration::from_millis(1))
+            .chaos(plan)
+            .restart_policy(policy)
+            .build()
+            .unwrap();
+        let frames = test_frames(s.input_shape(), 8, seed ^ 0xF00D);
+        let want = reference_logits(&frames);
+        s.start_pool().unwrap();
+        let rxs: Vec<_> = frames
+            .iter()
+            .map(|f| s.submit(f.clone()).unwrap())
+            .collect();
+        let (mut served, mut errored) = (0u64, 0u64);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            match rx.recv_timeout(NO_HANG) {
+                Ok(r) => {
+                    if let Some(e) = &r.error {
+                        log.push(format!("  frame {i}: error {e}"));
+                        errored += 1;
+                    } else {
+                        assert_eq!(r.logits, want[i],
+                                   "seed {seed} frame {i}: survivor \
+                                    reply must be bit-identical");
+                        served += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // A DropReply fault: the sender is gone, which is
+                    // an explicit failure, not a hang.
+                    log.push(format!("  frame {i}: reply dropped"));
+                    errored += 1;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    panic!("seed {seed} frame {i} hung for \
+                            {NO_HANG:?} under chaos — supervision \
+                            must answer or error every frame");
+                }
+            }
+        }
+        assert_eq!(served + errored, 8, "every frame accounted for");
+        let snap = s.supervise_stats().snapshot();
+        // 2 workers, each restartable at most `max_restarts` times
+        // per rolling window.
+        let budget = 2 * policy.max_restarts as u64;
+        assert!(snap.replica_restarts <= budget,
+                "seed {seed}: {} restarts exceed the {budget} budget",
+                snap.replica_restarts);
+        log.push(format!(
+            "  seed {seed}: served {served}, errored {errored}, \
+             restarts {}, retired {}, injected {}",
+            snap.replica_restarts, snap.replicas_retired,
+            s.fault_hooks().unwrap().injected()));
+        log.extend(s.fault_hooks().unwrap().log_lines());
+        s.shutdown();
+    }
+    write_chaos_log(&log);
+}
+
+/// Invariant 2, exhaustion edge: a replica that keeps panicking runs
+/// out of budget, retires, and the pool degrades to *explicit* error
+/// replies for queued and future frames — no deadlock, no silence.
+#[test]
+fn restart_budget_exhaustion_degrades_explicitly() {
+    let plan = FaultPlan::new(3, vec![
+        FaultEvent::PanicAt { replica: 0, frame: 0 },
+        FaultEvent::PanicAt { replica: 0, frame: 1 },
+    ]);
+    let mut s = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .chaos(plan)
+        .restart_policy(RestartPolicy {
+            max_restarts: 1,
+            window: Duration::from_secs(3600),
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(2),
+        })
+        .build()
+        .unwrap();
+    let frames = test_frames(s.input_shape(), 4, 17);
+    s.start_pool().unwrap();
+    // Serve seq 0 panics (restart #1), seq 1 panics (budget gone →
+    // retire); everything after is answered by the bouncer.
+    let mut errors = Vec::new();
+    for f in &frames {
+        match s.infer(f.clone()) {
+            Ok(_) => panic!("every frame hits the panicking replica"),
+            Err(e) => errors.push(e.to_string()),
+        }
+    }
+    assert!(errors[0].contains("panicked"), "{}", errors[0]);
+    assert!(errors[1].contains("panicked"), "{}", errors[1]);
+    assert!(errors[2].contains("retired"), "{}", errors[2]);
+    assert!(errors[3].contains("retired"), "{}", errors[3]);
+    let snap = s.supervise_stats().snapshot();
+    assert_eq!(snap.replica_restarts, 1, "budget respected");
+    assert_eq!(snap.replicas_retired, 1);
+    assert_eq!(s.alive_replicas(), Some(0), "degraded, not deadlocked");
+    write_chaos_log(&[format!(
+        "exhaustion: restarts {} retired {} errors {:?}",
+        snap.replica_restarts, snap.replicas_retired, errors)]);
+    s.shutdown();
+}
+
+/// Invariant 3, restart edge: the frame a panic kills is errored, and
+/// the *restarted* worker (rebuilt from the session recipe) serves
+/// every later frame bit-identically to the fault-free reference.
+#[test]
+fn restarted_replica_serves_bit_identically() {
+    let plan = FaultPlan::new(
+        11, vec![FaultEvent::PanicAt { replica: 0, frame: 0 }]);
+    let mut s = Session::builder()
+        .model("scnn3")
+        .backend(BackendKind::WordParallel)
+        .chaos(plan)
+        .restart_policy(fast_restarts())
+        .build()
+        .unwrap();
+    let frames = test_frames(s.input_shape(), 5, 23);
+    let want = reference_logits(&frames);
+    s.start_pool().unwrap();
+    assert!(s.infer(frames[0].clone()).is_err(),
+            "the injected panic surfaces as an explicit error");
+    for (f, want) in frames[1..].iter().zip(&want[1..]) {
+        let inf = s.infer(f.clone()).unwrap();
+        assert_eq!(&inf.logits, want,
+                   "post-restart replies must be bit-identical");
+    }
+    let snap = s.supervise_stats().snapshot();
+    assert_eq!(snap.replica_restarts, 1);
+    assert_eq!(snap.replicas_retired, 0);
+    assert_eq!(s.alive_replicas(), Some(1));
+    s.shutdown();
+}
+
+/// Invariant 4: a replica killed mid-swap — the candidate's health
+/// probe panics — triggers a transactional rollback. The pool
+/// generation is unchanged, no retune is counted, the rolled-back
+/// attempt is in the event log, and no in-flight frame is lost.
+#[test]
+fn probe_kill_mid_swap_rolls_back() {
+    let plan = FaultPlan::new(
+        5, vec![FaultEvent::PanicAt { replica: REPLICA_PROBE,
+                                      frame: 0 }]);
+    // A deliberately weak boot under a fast-reacting policy (as
+    // tests/online_tune.rs) so the first eligible re-plan attempts a
+    // swap; the long cooldown keeps the rolled-back attempt the only
+    // one the test observes.
+    let policy = RetunePolicy {
+        interval: Duration::from_millis(50),
+        min_frames: 8,
+        hysteresis: 0.01,
+        cooldown: Duration::from_secs(600),
+        max_density_spread: 10.0,
+        headroom: 1.25,
+    };
+    let mut session = Session::builder()
+        .model("scnn3")
+        .replicas(1)
+        .backend(BackendKind::Accurate)
+        .queue(4, Duration::from_millis(1))
+        .online_tune(policy)
+        .chaos(plan)
+        .build()
+        .unwrap();
+    let (h, w, c) = session.input_shape();
+    let mut rng = Rng::new(7);
+    session.start_pool().unwrap();
+    let log = session.retune_log().expect("tuner spawned");
+    assert_eq!(session.pool_generation(), Some(0));
+
+    // Live traffic with a density shift until the tuner attempts (and
+    // rolls back) a swap.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut pending = VecDeque::new();
+    let mut submitted = 0u64;
+    while log.rollbacks() == 0 {
+        assert!(Instant::now() < deadline,
+                "no rollback after 120s: {:?}", log.summary());
+        let rate = if submitted < 32 { 0.05 } else { 0.6 };
+        for _ in 0..2 {
+            let f = SpikeFrame::random(h, w, c, rate, &mut rng);
+            pending.push_back(session.submit(f).unwrap());
+            submitted += 1;
+        }
+        while let Some(rx) = pending.front() {
+            match rx.try_recv() {
+                Ok(r) => {
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    pending.pop_front();
+                }
+                Err(_) => break,
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // The serving generation never moved and no retune was counted.
+    assert_eq!(session.pool_generation(), Some(0),
+               "rollback must leave the pool generation unchanged");
+    assert_eq!(log.retunes(), 0);
+    assert_eq!(log.rollbacks(), 1);
+    let snap = session.supervise_stats().snapshot();
+    assert_eq!(snap.retune_rollbacks, 1);
+    let ev = log.events().into_iter().next().expect("attempt logged");
+    assert_eq!(ev.outcome, sti_snn::autotune::controller::
+               OUTCOME_ROLLED_BACK);
+    assert_eq!(ev.generation, 0);
+
+    // Every frame submitted through the aborted swap resolves.
+    for rx in pending {
+        let r = rx.recv_timeout(NO_HANG)
+            .expect("frames in flight across a rollback resolve");
+        assert!(r.error.is_none());
+    }
+    write_chaos_log(&[format!(
+        "rollback: from {:?} to {:?} generation {}",
+        ev.from, ev.to, ev.generation)]);
+    session.shutdown();
+}

@@ -175,3 +175,157 @@ fn runtime_rejects_garbage_hlo() {
     let mut rt = Runtime::new().unwrap();
     assert!(rt.load_hlo("bad", &p, (1, 1, 1)).is_err());
 }
+
+/// Binary events-wire faults: a hostile or broken client gets a clean
+/// error reply or a closed connection — never a panicked or hung
+/// server thread, and the server keeps accepting new connections.
+mod events_wire {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use sti_snn::codec::stream::{encode_events, DvsEvent};
+    use sti_snn::codec::SpikeFrame;
+    use sti_snn::server::{Backend, Client, Server, ServerStats};
+
+    /// Frame-capable echo backend: events mode needs a frame shape.
+    struct FrameEcho;
+    impl Backend for FrameEcho {
+        fn infer(&mut self, img: &[f32])
+                 -> anyhow::Result<(usize, Vec<f32>)> {
+            Ok((0, img.to_vec()))
+        }
+        fn input_len(&self) -> usize {
+            32
+        }
+        fn infer_frame(&mut self, _frame: &SpikeFrame)
+                       -> anyhow::Result<(usize, Vec<f32>)> {
+            Ok((0, vec![1.0]))
+        }
+        fn frame_shape(&self) -> Option<(usize, usize, usize)> {
+            Some((4, 4, 2))
+        }
+    }
+
+    fn start_server() -> (String, Arc<ServerStats>,
+                          std::thread::JoinHandle<anyhow::Result<()>>) {
+        let server = Server::new(FrameEcho);
+        let stats = server.stats();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |a| tx.send(a).unwrap())
+        });
+        (rx.recv().unwrap().to_string(), stats, h)
+    }
+
+    /// Raw events-mode connection: JSON handshake, then the binary
+    /// wire belongs to the test.
+    fn raw_events_conn(addr: &str)
+                       -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = stream;
+        writeln!(out, r#"{{"cmd": "events", "window": "count:4"}}"#)
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"h\""), "handshake refused: {line}");
+        (out, reader)
+    }
+
+    /// Read one length-prefixed reply frame; `None` = closed.
+    fn read_reply(reader: &mut BufReader<TcpStream>)
+                  -> Option<Vec<u8>> {
+        let mut len4 = [0u8; 4];
+        reader.read_exact(&mut len4).ok()?;
+        let mut buf = vec![0u8; u32::from_le_bytes(len4) as usize];
+        reader.read_exact(&mut buf).ok()?;
+        Some(buf)
+    }
+
+    /// The server is still healthy: a fresh dense connection round
+    /// trips, then shuts the server down.
+    fn assert_alive_and_shutdown(
+        addr: &str, h: std::thread::JoinHandle<anyhow::Result<()>>) {
+        let mut c = Client::connect(addr).unwrap();
+        let resp = c.infer(1, &[0.0; 32]).unwrap();
+        assert!(resp.get("class").is_some(), "{resp}");
+        c.shutdown().unwrap();
+        h.join().unwrap().unwrap();
+    }
+
+    /// An oversized u32 length prefix gets an explicit error frame
+    /// and a closed connection — the server never allocates the
+    /// claimed buffer or stalls reading it.
+    #[test]
+    fn oversized_length_prefix_errors_and_closes() {
+        let (addr, stats, h) = start_server();
+        let (mut out, mut reader) = raw_events_conn(&addr);
+        out.write_all(&((1u32 << 20) + 12).to_le_bytes()).unwrap();
+        let reply = read_reply(&mut reader).expect("error frame");
+        assert_eq!(reply[0], 2, "EV_ERR status, got {reply:?}");
+        let msg = String::from_utf8_lossy(&reply[12..]);
+        assert!(msg.contains("bad event batch length"), "{msg}");
+        assert!(read_reply(&mut reader).is_none(),
+                "connection must close after a framing error");
+        assert!(stats.protocol_errors.load(Ordering::SeqCst) >= 1);
+        assert_alive_and_shutdown(&addr, h);
+    }
+
+    /// A length prefix that is not a whole number of wire events is a
+    /// framing error, not a desync: error frame, then close.
+    #[test]
+    fn misaligned_length_prefix_errors_and_closes() {
+        let (addr, stats, h) = start_server();
+        let (mut out, mut reader) = raw_events_conn(&addr);
+        out.write_all(&10u32.to_le_bytes()).unwrap();
+        let reply = read_reply(&mut reader).expect("error frame");
+        assert_eq!(reply[0], 2, "EV_ERR status, got {reply:?}");
+        assert!(read_reply(&mut reader).is_none());
+        assert!(stats.protocol_errors.load(Ordering::SeqCst) >= 1);
+        assert_alive_and_shutdown(&addr, h);
+    }
+
+    /// A client that promises a frame and disconnects mid-payload is
+    /// a dropped connection (counted under `reason="io"`), and the
+    /// server thread moves on cleanly.
+    #[test]
+    fn truncated_frame_counts_a_dropped_connection() {
+        let (addr, stats, h) = start_server();
+        let (mut out, _reader) = raw_events_conn(&addr);
+        // Promise two events (24 bytes), deliver one, vanish.
+        out.write_all(&24u32.to_le_bytes()).unwrap();
+        let one = encode_events(&[DvsEvent { x: 0, y: 0, c: 0, t: 1 }]);
+        out.write_all(&one).unwrap();
+        drop(out);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while stats.dropped().1 == 0 {
+            assert!(Instant::now() < deadline,
+                    "mid-frame disconnect never surfaced as a drop");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(stats.dropped(), (0, 1));
+        assert_alive_and_shutdown(&addr, h);
+    }
+
+    /// Disconnecting at a frame boundary (after a complete batch) is a
+    /// clean close: no drop is counted and nothing hangs, even with a
+    /// window still open in the stream.
+    #[test]
+    fn boundary_disconnect_closes_cleanly() {
+        let (addr, stats, h) = start_server();
+        let (mut out, _reader) = raw_events_conn(&addr);
+        // One complete 1-event batch leaves a count:4 window open.
+        let one = encode_events(&[DvsEvent { x: 1, y: 1, c: 1, t: 5 }]);
+        out.write_all(&(one.len() as u32).to_le_bytes()).unwrap();
+        out.write_all(&one).unwrap();
+        drop(out);
+        // The close is clean, so liveness is the whole assertion: the
+        // accept loop and a fresh connection still work immediately.
+        assert_alive_and_shutdown(&addr, h);
+        assert_eq!(stats.dropped(), (0, 0),
+                   "a boundary EOF is not a dropped connection");
+    }
+}
