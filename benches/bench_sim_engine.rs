@@ -1,10 +1,13 @@
 //! Bench: cycle-level conv engine throughput (simulation speed itself —
 //! the §Perf hot path) across modes, parallel factors, and functional
-//! compute backends (event-driven `accurate` vs bit-plane popcount
-//! `word-parallel`; see `sim::backend`).
+//! compute backends (event-driven `accurate`, bit-plane popcount
+//! `word-parallel`, and occupancy-skipping `sparse`; see
+//! `sim::backend`). A dedicated density sweep times sparse vs
+//! word-parallel at three activity levels — the crossover point where
+//! occupancy skipping stops paying.
 //!
-//! Every accurate/word-parallel pair also cross-checks bit-exactness
-//! and report equality, so the speedup numbers are guaranteed to be
+//! Every backend set also cross-checks bit-exactness and report
+//! equality before timing, so the speedup numbers are guaranteed to be
 //! apples-to-apples.
 //!
 //! `cargo bench --bench bench_sim_engine`
@@ -132,7 +135,43 @@ fn main() {
                  layer(ConvMode::Standard, 64, 64, 32, 1), 9, 0.15,
                  &mut rng);
 
+    sparse_density_sweep(&mut set, &mut rng);
+
     pipeline_streaming(&mut rng);
+}
+
+/// Sparse vs word-parallel across input densities on the cifar-scale
+/// layer: word-parallel is density-invariant, sparse tracks activity —
+/// the printed ratios locate the density crossover where occupancy
+/// skipping stops paying.
+fn sparse_density_sweep(set: &mut BenchSet, rng: &mut Rng) {
+    let timing = ConvLatencyParams::optimized();
+    for density in [0.02, 0.15, 0.4] {
+        let l = layer(ConvMode::Standard, 64, 64, 32, 1);
+        let w = ConvWeights::random(&l, 11);
+        let input =
+            SpikeFrame::random(l.in_h, l.in_w, l.ci, density, rng);
+        let mut wp = ConvEngine::with_backend(
+            l.clone(), w.clone(), timing, 1, BackendKind::WordParallel);
+        let mut sp = ConvEngine::with_backend(
+            l, w, timing, 1, BackendKind::Sparse);
+        let (ow, rw) = wp.run_frame(&input, true);
+        let (os, rs) = sp.run_frame(&input, true);
+        assert_eq!(ow, os, "d={density}: backends diverge functionally");
+        assert_eq!(rw, rs, "d={density}: backends diverge on reports");
+        let wp_ns = set.run(
+            &format!("standard 32x32 64->64 [word-parallel d={density}]"),
+            || {
+                std::hint::black_box(wp.run_frame(&input, true));
+            }).median_ns;
+        let sp_ns = set.run(
+            &format!("standard 32x32 64->64 [sparse d={density}]"),
+            || {
+                std::hint::black_box(sp.run_frame(&input, true));
+            }).median_ns;
+        println!("    -> d={density}: sparse {:.2}x vs word-parallel",
+                 wp_ns / sp_ns);
+    }
 }
 
 /// Whole-pipeline wall latency on scnn5: the streamed inter-layer

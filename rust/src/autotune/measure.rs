@@ -64,10 +64,13 @@ impl MeasuredWorkload {
 ///
 /// * `op_activity` — spike-gated ops track input density, so dynamic
 ///   energy follows the live traffic (clamped to the physical `..=1`).
-/// * the **event-driven** backend's measured host-ns/frame — its cost
-///   is proportional to spike count. The word-parallel backend
-///   popcounts dense bit-planes and is density-invariant, so its
-///   timing stands.
+/// * the measured host-ns/frame of the **density-sensitive** backends
+///   — the event-driven walk's cost is proportional to spike count,
+///   and the sparse backend's occupancy-gated popcount visits only
+///   occupied word groups, so both track the live density. The
+///   word-parallel backend popcounts dense bit-planes regardless of
+///   activity and is the one density-*invariant* kind; its timing
+///   stands.
 ///
 /// The ratio is clamped to `[0.25, 4]`: beyond that the linear
 /// extrapolation from one probe point is noise, and an EWMA that far
@@ -88,6 +91,7 @@ pub fn measured_calibration(base: &Calibration, reference_density: f64,
         .map(|&(b, ns)| match b {
             BackendKind::Accurate => (b, ns * scale),
             BackendKind::WordParallel => (b, ns),
+            BackendKind::Sparse => (b, ns * scale),
         })
         .collect();
     cal
@@ -220,12 +224,13 @@ mod tests {
     }
 
     #[test]
-    fn calibration_scales_activity_and_event_backend_only() {
+    fn calibration_scales_activity_and_density_sensitive_backends() {
         let base = Calibration {
             op_activity: 0.2,
             host_ns_per_frame: vec![
                 (BackendKind::Accurate, 1000.0),
                 (BackendKind::WordParallel, 500.0),
+                (BackendKind::Sparse, 800.0),
             ],
             ..Calibration::identity()
         };
@@ -236,16 +241,19 @@ mod tests {
             density_spread: 0.0,
         };
         // Measured density 2x the reference: activity and the
-        // event-driven host time double; word-parallel is invariant.
+        // density-sensitive host times (event-driven + sparse) double;
+        // word-parallel is the invariant one.
         let cal = measured_calibration(&base, 0.2, &m);
         assert!((cal.op_activity - 0.4).abs() < 1e-9);
         assert_eq!(cal.host_ns(BackendKind::Accurate), Some(2000.0));
         assert_eq!(cal.host_ns(BackendKind::WordParallel), Some(500.0));
+        assert_eq!(cal.host_ns(BackendKind::Sparse), Some(1600.0));
         // Clamps: a 100x density ratio saturates at 4x, activity at 1.
         let dense = MeasuredWorkload { mean_density: 20.0, ..m.clone() };
         let cal = measured_calibration(&base, 0.2, &dense);
         assert!((cal.op_activity - 0.8).abs() < 1e-9);
         assert_eq!(cal.host_ns(BackendKind::Accurate), Some(4000.0));
+        assert_eq!(cal.host_ns(BackendKind::Sparse), Some(3200.0));
     }
 
     #[test]

@@ -64,7 +64,8 @@ impl Default for CalibrationConfig {
             rate: 0.15,
             seed: 42,
             timesteps: 1,
-            backends: vec![BackendKind::Accurate, BackendKind::WordParallel],
+            backends: vec![BackendKind::Accurate, BackendKind::WordParallel,
+                           BackendKind::Sparse],
             intra_parallel: 1,
             pipelined: true,
         }
@@ -368,9 +369,10 @@ mod tests {
     fn host_times_recorded_per_backend() {
         let cal = calibrate(&std_net(), &ConvLatencyParams::optimized(),
                             &CalibrationConfig::default());
-        assert_eq!(cal.host_ns_per_frame.len(), 2);
+        assert_eq!(cal.host_ns_per_frame.len(), 3);
         assert!(cal.host_ns(BackendKind::Accurate).unwrap() > 0.0);
         assert!(cal.host_ns(BackendKind::WordParallel).unwrap() > 0.0);
+        assert!(cal.host_ns(BackendKind::Sparse).unwrap() > 0.0);
     }
 
     /// Intra-frame bands change host timing only: the fitted counter
@@ -393,6 +395,7 @@ mod tests {
         assert_eq!(base.op_activity, banded.op_activity);
         assert!(banded.host_ns(BackendKind::Accurate).unwrap() > 0.0);
         assert!(banded.host_ns(BackendKind::WordParallel).unwrap() > 0.0);
+        assert!(banded.host_ns(BackendKind::Sparse).unwrap() > 0.0);
     }
 
     #[test]

@@ -206,6 +206,7 @@ mod tests {
                 host_ns_per_frame: vec![
                     (BackendKind::Accurate, 1000.0),
                     (BackendKind::WordParallel, 10.0),
+                    (BackendKind::Sparse, 2000.0),
                 ],
                 ..Calibration::identity()
             },

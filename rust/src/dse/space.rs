@@ -31,7 +31,7 @@ pub struct Candidate {
     pub factors: Vec<usize>,
     /// Pipeline replicas sharing the PE budget.
     pub replicas: usize,
-    /// Functional compute backend (host-side; bit-exact either way).
+    /// Functional compute backend (host-side; bit-exact across kinds).
     pub backend: BackendKind,
 }
 
@@ -62,7 +62,8 @@ impl SearchSpace {
             net,
             pe_budget,
             max_replicas: 1,
-            backends: vec![BackendKind::Accurate, BackendKind::WordParallel],
+            backends: vec![BackendKind::Accurate, BackendKind::WordParallel,
+                           BackendKind::Sparse],
             timesteps: 1,
             max_candidates: 2048,
         }
@@ -228,7 +229,7 @@ mod tests {
             .iter()
             .filter(|c| c.backend == BackendKind::Accurate)
             .count();
-        assert_eq!(cands.len(), 2 * n_acc);
+        assert_eq!(cands.len(), 3 * n_acc);
     }
 
     #[test]

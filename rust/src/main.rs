@@ -74,13 +74,19 @@ fn usage() {
          \x20 --model NAME         all               scnn3|scnn5|vmobilenet\n\
          \x20 --backend KIND       run/serve         functional compute\n\
          \x20                                        backend: accurate\n\
-         \x20                                        (default) or\n\
+         \x20                                        (default),\n\
          \x20                                        word-parallel (fast\n\
-         \x20                                        bit-plane popcount;\n\
-         \x20                                        bit-exact, identical\n\
-         \x20                                        reports). With\n\
-         \x20                                        --auto-tune, pins\n\
-         \x20                                        the backend choice.\n\
+         \x20                                        bit-plane popcount),\n\
+         \x20                                        or sparse (popcount\n\
+         \x20                                        with occupancy\n\
+         \x20                                        skipping + batched\n\
+         \x20                                        rows; fastest at\n\
+         \x20                                        real spike density).\n\
+         \x20                                        All bit-exact,\n\
+         \x20                                        identical reports.\n\
+         \x20                                        With --auto-tune,\n\
+         \x20                                        pins the backend\n\
+         \x20                                        choice.\n\
          \x20 --replicas N         serve             pipeline replicas\n\
          \x20                                        draining one queue\n\
          \x20                                        (default 1). With\n\
@@ -284,7 +290,7 @@ fn main() {
 
 fn backend_for(args: &Args) -> anyhow::Result<Option<BackendKind>> {
     args.get_with("backend", BackendKind::parse)
-        .map_err(|e| anyhow::anyhow!("{e} (accurate|word-parallel)"))
+        .map_err(|e| anyhow::anyhow!("{e} (accurate|word-parallel|sparse)"))
 }
 
 fn net_for(args: &Args) -> anyhow::Result<arch::NetworkSpec> {

@@ -349,7 +349,11 @@ impl SessionBuilder {
     }
 
     /// Functional compute backend (default `accurate`; explicitly
-    /// setting one also pins the backend against `auto_tune`).
+    /// setting one also pins the backend against `auto_tune`). All
+    /// kinds are bit-exact with identical reports; `sparse` is the
+    /// density-sensitive fast path (occupancy skipping + the
+    /// weight-stationary row batching behind
+    /// [`Session::infer_batch`]).
     pub fn backend(mut self, backend: BackendKind) -> Self {
         self.backend = Some(backend);
         self
@@ -769,6 +773,15 @@ impl Session {
 
     /// Run a batch of spike frames through the primary pipeline and
     /// return the unified [`Report`].
+    ///
+    /// With `--backend sparse` this is the weight-stationary fast
+    /// path: every conv row of every queued frame stashes its packed
+    /// windows and evaluates them in one pass per output channel
+    /// (`ConvCompute::field_psums_batch`), so a batch keeps each
+    /// layer's weight planes cache-hot across frames instead of
+    /// re-streaming them per field. Reports and spikes are
+    /// bit-identical to per-frame [`Session::infer`] — the batch only
+    /// reorders host-side sums (pinned by `tests/diff_backends.rs`).
     pub fn infer_batch(&mut self, frames: &[SpikeFrame]) -> Report {
         let rep = self.pipeline.run(frames);
         self.observer

@@ -7,7 +7,7 @@
 //! engines are free to compute the functional side with whatever host
 //! algorithm is fastest, as long as it is bit-exact.
 //!
-//! Two backends implement that contract:
+//! Three backends implement that contract:
 //!
 //! * [`BackendKind::Accurate`] — the original event walk: iterate the
 //!   active channels of each window vector over tap-major weights,
@@ -27,10 +27,17 @@
 //!   64 channel-accumulates collapse into 8 AND+popcount ops, all
 //!   branchless and streaming — the word-level win the compressed &
 //!   sorted spike-vector layout (paper SectionIV-C) was built for.
+//! * [`BackendKind::Sparse`] — the word-parallel plane walk plus
+//!   hierarchical occupancy skipping and weight-stationary row
+//!   batching ([`sparse`]): a summary `u64` marks which word groups of
+//!   the packed field hold any spike, so all-zero regions skip the
+//!   plane walk entirely (SpikeX's core observation), and whole rows of
+//!   stashed fields evaluate in one pass per weight plane. Unlike
+//!   word-parallel, its host cost tracks observed spike density.
 //!
 //! ## Incremental sliding-window protocol (§Perf)
 //!
-//! Both backends keep the decoded/packed window state **per column**:
+//! Every backend keeps the decoded/packed window state **per column**:
 //! as the engine walks `ox` along an output row, [`ConvCompute::advance`]
 //! shifts out the leftmost column and appends one new `Kh x 1` column —
 //! O(Ci) incremental work per output pixel — exactly the line-buffer
@@ -41,9 +48,12 @@
 //! the full-repack fallback; both paths produce bit-identical state,
 //! pinned by `tests/prop_backend.rs`.
 //!
-//! Both backends produce identical spikes, identical op counts, and the
+//! All backends produce identical spikes, identical op counts, and the
 //! engines charge identical (architectural) cycles and memory accesses
-//! regardless of backend — pinned by `tests/prop_backend.rs`.
+//! regardless of backend — pinned by `tests/prop_backend.rs` and the
+//! cross-backend differential harness `tests/diff_backends.rs`.
+
+pub mod sparse;
 
 use std::sync::Arc;
 
@@ -54,6 +64,8 @@ use super::conv_engine::ConvWeights;
 use super::linebuf::LineBuffer;
 use super::pe::Acc;
 
+pub use sparse::sparse_conv_backend;
+
 /// Which functional backend an engine computes with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum BackendKind {
@@ -62,6 +74,10 @@ pub enum BackendKind {
     Accurate,
     /// Bit-plane popcount over packed spike words (fast host path).
     WordParallel,
+    /// Bit-plane popcount with hierarchical occupancy skipping and
+    /// weight-stationary row batching (fastest at real SNN sparsity;
+    /// host cost tracks density — see [`sparse`]).
+    Sparse,
 }
 
 impl BackendKind {
@@ -71,6 +87,7 @@ impl BackendKind {
             "accurate" | "acc" | "event" => Some(Self::Accurate),
             "word-parallel" | "word_parallel" | "wordparallel" | "wp"
                 | "word" => Some(Self::WordParallel),
+            "sparse" | "sp" | "sparsity-skip" => Some(Self::Sparse),
             _ => None,
         }
     }
@@ -79,6 +96,7 @@ impl BackendKind {
         match self {
             Self::Accurate => "accurate",
             Self::WordParallel => "word-parallel",
+            Self::Sparse => "sparse",
         }
     }
 }
@@ -133,6 +151,33 @@ pub trait ConvCompute: Send {
             *o = self.field_psum(w, co);
         }
     }
+
+    /// Queue the current field's packed window for a deferred,
+    /// weight-stationary batch evaluation
+    /// ([`ConvCompute::field_psums_batch`]). Returns `false` when this
+    /// backend (or conv mode) does not batch — the caller must then
+    /// evaluate the field immediately via
+    /// [`ConvCompute::field_psums`]. The default never batches.
+    fn stash_field(&mut self) -> bool {
+        false
+    }
+
+    /// Number of fields currently stashed (0 for non-batching
+    /// backends).
+    fn stashed_fields(&self) -> usize {
+        0
+    }
+
+    /// Evaluate every stashed field against all `n_co` output channels
+    /// in one weight-stationary pass: `out[i * n_co + co]` receives
+    /// stashed field `i`'s `(psum, ops)` for channel `co`, in stash
+    /// order. Clears the stash. Bit-identical to calling
+    /// [`ConvCompute::field_psums`] per field at stash time — pinned by
+    /// `tests/prop_backend.rs`. No-op default for non-batching
+    /// backends.
+    fn field_psums_batch(&mut self, _w: &ConvWeights, _n_co: usize,
+                         _out: &mut [(Acc, u64)]) {
+    }
 }
 
 /// Build a conv backend for one layer.
@@ -142,6 +187,9 @@ pub fn conv_backend(kind: BackendKind, layer: &ConvLayer,
         BackendKind::Accurate => Box::new(AccurateConv::new(layer)),
         BackendKind::WordParallel => {
             Box::new(WordParallelConv::new(layer, weights))
+        }
+        BackendKind::Sparse => {
+            Box::new(sparse::SparseConv::new(layer, weights))
         }
     }
 }
@@ -629,6 +677,9 @@ pub fn fc_backend(kind: BackendKind, n_in: usize, n_out: usize,
         BackendKind::WordParallel => {
             Box::new(WordParallelFc::new(n_in, n_out, weights))
         }
+        BackendKind::Sparse => {
+            Box::new(sparse::SparseFc::new(n_in, n_out, weights))
+        }
     }
 }
 
@@ -746,8 +797,14 @@ mod tests {
                    Some(BackendKind::WordParallel));
         assert_eq!(BackendKind::parse("WP"),
                    Some(BackendKind::WordParallel));
+        assert_eq!(BackendKind::parse("sparse"),
+                   Some(BackendKind::Sparse));
+        assert_eq!(BackendKind::parse("SP"), Some(BackendKind::Sparse));
+        assert_eq!(BackendKind::parse("sparsity-skip"),
+                   Some(BackendKind::Sparse));
         assert_eq!(BackendKind::parse("gpu"), None);
         assert_eq!(BackendKind::WordParallel.to_string(), "word-parallel");
+        assert_eq!(BackendKind::Sparse.to_string(), "sparse");
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Sparsity-skip compute backend: the word-parallel bit-plane walk
+//! plus the two optimisations real SNN activity pays for —
+//!
+//! 1. **Hierarchical occupancy skipping.** A summary `u64` over the
+//!    packed field string marks which *word groups* hold any spike
+//!    ([`Occupancy`]): bit `g` set iff at least one of group `g`'s
+//!    `group_words` consecutive `u64`s is nonzero. The plane walk then
+//!    visits only the set groups — an all-zero receptive field costs a
+//!    single compare, and a field with one spike cluster touches one
+//!    group per plane instead of the whole string. This is the host
+//!    mirror of the paper's compressed & sorted spike representation
+//!    (Section IV-C stores only active positions) and the core
+//!    observation SpikeX builds its accelerator around: most of a dense
+//!    AND+popcount walk is against zero words.
+//! 2. **Weight-stationary row batching.** Instead of evaluating each
+//!    field against all 8 planes of every output channel as the window
+//!    slides, the backend can *stash* the packed window
+//!    ([`super::ConvCompute::stash_field`]) and later evaluate the
+//!    whole row of stashed fields in one pass per output channel
+//!    ([`super::ConvCompute::field_psums_batch`]): the channel's planes
+//!    stay cache-hot while every window streams past, rather than the
+//!    planes streaming past every window. `Session::infer_batch`
+//!    benefits directly — queued frames' conv rows all ride this path.
+//!
+//! Popcounts run over 4-`u64` chunks ([`popcount_and`]) so the
+//! AND+popcount chains of neighbouring words stay independent — plain
+//! chunked scalar code, no nightly `std::simd`.
+//!
+//! Everything here is bit-exact against the other two backends (the
+//! skipped groups contain only zero words; popcount is exact), pinned
+//! by `tests/diff_backends.rs` and `tests/prop_backend.rs`. Unlike
+//! word-parallel, the *host* cost tracks observed spike density — the
+//! DSE calibrator treats its measured host-ns like the event-driven
+//! backend's (see `autotune::measure`).
+
+use crate::arch::{ConvLayer, ConvMode};
+
+use super::{shr_bits, Acc, BackendKind, ConvCompute, ConvWeights,
+            FcCompute, LineBuffer, WordParallelConv, WordParallelFc};
+
+/// Hierarchical occupancy bitmap over a packed `w_words`-long bit
+/// string: `summary` bit `g` is set iff word group `g` (a run of
+/// [`Occupancy::group_words`] consecutive `u64`s) holds any set bit.
+#[derive(Clone, Debug)]
+struct Occupancy {
+    /// Words per summary group: `w_words.div_ceil(64)` so the whole
+    /// string always fits the single summary word, floored at 4 so
+    /// each visited group feeds the 4-wide chunked popcount.
+    group_words: usize,
+    /// Bit `g` = "group `g` has any spike".
+    summary: u64,
+}
+
+impl Occupancy {
+    fn new(w_words: usize) -> Self {
+        Self { group_words: w_words.div_ceil(64).max(4), summary: 0 }
+    }
+
+    /// Recompute the summary from the packed string `win`. O(w_words)
+    /// ORs — the same order as the pack that produced `win`, so the
+    /// slide protocol stays O(Ci) per output pixel.
+    fn rebuild(&mut self, win: &[u64]) {
+        let mut summary = 0u64;
+        for (g, chunk) in win.chunks(self.group_words).enumerate() {
+            let mut any = 0u64;
+            for &w in chunk {
+                any |= w;
+            }
+            if any != 0 {
+                summary |= 1u64 << g;
+            }
+        }
+        self.summary = summary;
+    }
+}
+
+/// AND the two equal-length word slices and popcount the result, four
+/// words per step with independent counters (the wide-word walk).
+#[inline]
+fn popcount_and(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n4 = a.len() & !3;
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    for (qa, qb) in a[..n4].chunks_exact(4).zip(b[..n4].chunks_exact(4)) {
+        c0 += (qa[0] & qb[0]).count_ones();
+        c1 += (qa[1] & qb[1]).count_ones();
+        c2 += (qa[2] & qb[2]).count_ones();
+        c3 += (qa[3] & qb[3]).count_ones();
+    }
+    for (w, p) in a[n4..].iter().zip(&b[n4..]) {
+        c0 += (w & p).count_ones();
+    }
+    c0 + c1 + c2 + c3
+}
+
+/// The sparsity-skip conv backend: wraps the word-parallel packer and
+/// weight planes (same slide protocol, same shared `Arc` planes) and
+/// replaces the dense plane walk with an occupancy-gated one, plus the
+/// stash/batch path.
+#[derive(Clone)]
+pub(super) struct SparseConv {
+    inner: WordParallelConv,
+    occ: Occupancy,
+    /// Occupancy-skip toggle — `false` walks every group exactly like
+    /// word-parallel (test hook proving skip-on == skip-off).
+    skip: bool,
+    /// Stashed packed windows, flat `[i * w_words ..][w_words]`.
+    batch_wins: Vec<u64>,
+    /// Per-stash active spike counts (the `ops` half of each psum).
+    batch_counts: Vec<u64>,
+    /// Per-stash occupancy summaries.
+    batch_occs: Vec<u64>,
+}
+
+impl SparseConv {
+    pub(super) fn new(layer: &ConvLayer, weights: &ConvWeights) -> Self {
+        Self::with_skip(layer, weights, true)
+    }
+
+    fn with_skip(layer: &ConvLayer, weights: &ConvWeights,
+                 skip: bool) -> Self {
+        let inner = WordParallelConv::new(layer, weights);
+        let occ = Occupancy::new(inner.w_words);
+        Self {
+            inner,
+            occ,
+            skip,
+            batch_wins: Vec::new(),
+            batch_counts: Vec::new(),
+            batch_occs: Vec::new(),
+        }
+    }
+
+    /// Occupancy-gated plane walk: like `WordParallelConv::plane_psum`
+    /// but each nonzero plane is popcounted only over the word groups
+    /// `groups` marks occupied (all groups when skipping is off).
+    fn plane_walk(&self, win: &[u64], groups: u64, co: usize) -> Acc {
+        let ww = self.inner.w_words;
+        let gw = self.occ.group_words;
+        let nz = self.inner.plane_nz[co];
+        if self.skip && groups == 0 {
+            return 0;
+        }
+        let planes = &self.inner.planes[co * 8 * ww..(co + 1) * 8 * ww];
+        let mut psum: Acc = 0;
+        for (b, plane) in planes.chunks_exact(ww).enumerate() {
+            if nz & (1u8 << b) == 0 {
+                continue;
+            }
+            let cnt = if self.skip {
+                let mut cnt = 0u32;
+                let mut g = groups;
+                while g != 0 {
+                    let i = g.trailing_zeros() as usize;
+                    g &= g - 1;
+                    let s = i * gw;
+                    let e = (s + gw).min(ww);
+                    cnt += popcount_and(&win[s..e], &plane[s..e]);
+                }
+                cnt
+            } else {
+                popcount_and(win, plane)
+            };
+            if b == 7 {
+                // Two's complement: bit 7 weighs -128.
+                psum -= (cnt as Acc) << 7;
+            } else {
+                psum += (cnt as Acc) << b;
+            }
+        }
+        psum
+    }
+
+    #[inline]
+    fn packed_mode(&self) -> bool {
+        self.inner.mode != ConvMode::Depthwise
+    }
+}
+
+impl ConvCompute for SparseConv {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sparse
+    }
+
+    fn clone_box(&self) -> Box<dyn ConvCompute> {
+        Box::new(self.clone())
+    }
+
+    fn begin_row(&mut self) {
+        self.inner.begin_row();
+    }
+
+    fn begin_field(&mut self, lb: &LineBuffer, ox: usize) {
+        self.inner.begin_field(lb, ox);
+        if self.packed_mode() {
+            self.occ.rebuild(&self.inner.win);
+        }
+    }
+
+    fn advance(&mut self, lb: &LineBuffer, ox: usize) {
+        self.inner.advance(lb, ox);
+        if self.packed_mode() {
+            // The slide shifted the whole string; group membership of
+            // every surviving bit changed, so rebuild the summary (same
+            // O(w_words) order as the shift itself).
+            self.occ.rebuild(&self.inner.win);
+        }
+    }
+
+    fn field_psum(&mut self, w: &ConvWeights, co: usize) -> (Acc, u64) {
+        if !self.packed_mode() {
+            // Depthwise windows are one co-dependent tap-mask word —
+            // nothing for the occupancy hierarchy to skip over.
+            return self.inner.field_psum(w, co);
+        }
+        if self.inner.count == 0 {
+            return (0, 0);
+        }
+        let psum = self.plane_walk(&self.inner.win, self.occ.summary, co);
+        (psum, self.inner.count)
+    }
+
+    fn field_psums(&mut self, w: &ConvWeights, out: &mut [(Acc, u64)]) {
+        if !self.packed_mode() {
+            self.inner.field_psums(w, out);
+            return;
+        }
+        if self.inner.count == 0 {
+            out.iter_mut().for_each(|o| *o = (0, 0));
+            return;
+        }
+        for (co, o) in out.iter_mut().enumerate() {
+            *o = (self.plane_walk(&self.inner.win, self.occ.summary, co),
+                  self.inner.count);
+        }
+    }
+
+    fn stash_field(&mut self) -> bool {
+        if !self.packed_mode() {
+            return false;
+        }
+        self.batch_wins.extend_from_slice(&self.inner.win);
+        self.batch_counts.push(self.inner.count);
+        self.batch_occs.push(self.occ.summary);
+        true
+    }
+
+    fn stashed_fields(&self) -> usize {
+        self.batch_counts.len()
+    }
+
+    fn field_psums_batch(&mut self, _w: &ConvWeights, n_co: usize,
+                         out: &mut [(Acc, u64)]) {
+        let ww = self.inner.w_words;
+        let n = self.batch_counts.len();
+        debug_assert!(out.len() >= n * n_co);
+        // Weight-stationary: hold one output channel's planes hot while
+        // every stashed window streams past (the transpose of the
+        // per-field Co walk — identical sums, better plane locality).
+        for co in 0..n_co {
+            for i in 0..n {
+                let count = self.batch_counts[i];
+                let entry = if count == 0 {
+                    (0, 0)
+                } else {
+                    let win = &self.batch_wins[i * ww..(i + 1) * ww];
+                    (self.plane_walk(win, self.batch_occs[i], co), count)
+                };
+                out[i * n_co + co] = entry;
+            }
+        }
+        self.batch_wins.clear();
+        self.batch_counts.clear();
+        self.batch_occs.clear();
+    }
+}
+
+/// Test hook: build a sparse conv backend with occupancy skipping
+/// forced on or off (`tests/prop_backend.rs` proves the two walks
+/// bit-identical).
+pub fn sparse_conv_backend(layer: &ConvLayer, weights: &ConvWeights,
+                           skip: bool) -> Box<dyn ConvCompute> {
+    Box::new(SparseConv::with_skip(layer, weights, skip))
+}
+
+/// FC head with nonzero-word skipping: pack the input spikes like
+/// word-parallel, but record which packed words are nonzero once and
+/// popcount only those against every output neuron's planes — an
+/// all-quiet head returns without touching the planes at all.
+pub(super) struct SparseFc {
+    inner: WordParallelFc,
+    /// Indices of nonzero packed words for the current call.
+    nz_words: Vec<u32>,
+}
+
+impl SparseFc {
+    pub(super) fn new(n_in: usize, n_out: usize, weights: &[i8]) -> Self {
+        Self {
+            inner: WordParallelFc::new(n_in, n_out, weights),
+            nz_words: Vec::new(),
+        }
+    }
+}
+
+impl FcCompute for SparseFc {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sparse
+    }
+
+    fn accumulate(&mut self, spikes: &[bool], _weights: &[i8],
+                  n_out: usize, acc: &mut [i64]) -> u64 {
+        assert_eq!(spikes.len(), self.inner.n_in);
+        self.inner.packed.iter_mut().for_each(|w| *w = 0);
+        let mut active = 0u64;
+        for (i, &s) in spikes.iter().enumerate() {
+            if s {
+                self.inner.packed[i / 64] |= 1u64 << (i % 64);
+                active += 1;
+            }
+        }
+        if active == 0 {
+            return 0;
+        }
+        self.nz_words.clear();
+        for (i, &w) in self.inner.packed.iter().enumerate() {
+            if w != 0 {
+                self.nz_words.push(i as u32);
+            }
+        }
+        let ww = self.inner.w_words;
+        for (o, a) in acc.iter_mut().enumerate().take(n_out) {
+            let nz = self.inner.plane_nz[o];
+            let planes = &self.inner.planes[o * 8 * ww..(o + 1) * 8 * ww];
+            let mut sum: i64 = 0;
+            for (b, plane) in planes.chunks_exact(ww).enumerate() {
+                if nz & (1u8 << b) == 0 {
+                    continue;
+                }
+                let mut cnt: u32 = 0;
+                for &i in &self.nz_words {
+                    let i = i as usize;
+                    cnt += (self.inner.packed[i] & plane[i]).count_ones();
+                }
+                if b == 7 {
+                    sum -= (cnt as i64) << 7;
+                } else {
+                    sum += (cnt as i64) << b;
+                }
+            }
+            *a += sum;
+        }
+        active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn occupancy_empty_and_full() {
+        let mut occ = Occupancy::new(10);
+        assert_eq!(occ.group_words, 4);
+        occ.rebuild(&[0u64; 10]);
+        assert_eq!(occ.summary, 0);
+        occ.rebuild(&[!0u64; 10]);
+        // 10 words / 4 per group -> groups {0, 1, 2} all occupied.
+        assert_eq!(occ.summary, 0b111);
+    }
+
+    #[test]
+    fn occupancy_single_bit_word0_and_last_word() {
+        let mut occ = Occupancy::new(10);
+        let mut win = vec![0u64; 10];
+        win[0] = 1;
+        occ.rebuild(&win);
+        assert_eq!(occ.summary, 0b001);
+        win[0] = 0;
+        win[9] = 1u64 << 63;
+        occ.rebuild(&win);
+        assert_eq!(occ.summary, 0b100);
+    }
+
+    #[test]
+    fn occupancy_single_bit_at_group_boundary() {
+        let mut occ = Occupancy::new(10);
+        let mut win = vec![0u64; 10];
+        // Word 3 is the last word of group 0; word 4 the first of
+        // group 1.
+        win[3] = 1u64 << 17;
+        occ.rebuild(&win);
+        assert_eq!(occ.summary, 0b001);
+        win[3] = 0;
+        win[4] = 1;
+        occ.rebuild(&win);
+        assert_eq!(occ.summary, 0b010);
+    }
+
+    #[test]
+    fn occupancy_group_count_always_fits_summary_word() {
+        for w_words in [1usize, 4, 64, 256, 257, 4096, 5000] {
+            let occ = Occupancy::new(w_words);
+            assert!(w_words.div_ceil(occ.group_words) <= 64,
+                    "w_words={w_words} gw={}", occ.group_words);
+        }
+    }
+
+    #[test]
+    fn occupancy_summary_tracks_shr_bits_slide() {
+        let mut occ = Occupancy::new(12);
+        let mut win = vec![0u64; 12];
+        // One spike in the top group; slide it down 5 whole words —
+        // same protocol the incremental window uses between fields.
+        win[11] = 1u64 << 3;
+        occ.rebuild(&win);
+        assert_eq!(occ.summary, 0b100);
+        shr_bits(&mut win, 5 * 64);
+        occ.rebuild(&win);
+        assert_eq!(win[6], 1u64 << 3);
+        assert_eq!(occ.summary, 0b010);
+        shr_bits(&mut win, 5 * 64);
+        occ.rebuild(&win);
+        assert_eq!(win[1], 1u64 << 3);
+        assert_eq!(occ.summary, 0b001);
+    }
+
+    #[test]
+    fn wide_popcount_matches_scalar() {
+        let mut rng = Rng::new(0x5eed);
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 13, 64, 100] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> =
+                (0..len).map(|_| rng.next_u64() & rng.next_u64()).collect();
+            let scalar: u32 = a.iter()
+                .zip(&b)
+                .map(|(x, y)| (x & y).count_ones())
+                .sum();
+            assert_eq!(popcount_and(&a, &b), scalar, "len={len}");
+        }
+    }
+}

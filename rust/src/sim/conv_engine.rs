@@ -10,10 +10,13 @@
 //!
 //! The *functional* psum computation is delegated to a pluggable
 //! [`ComputeBackend`](super::backend::ConvCompute): the event-driven
-//! `Accurate` walk or the bit-plane `WordParallel` popcount path. Both
-//! are bit-exact; cycle / op / access reports are identical by
+//! `Accurate` walk, the bit-plane `WordParallel` popcount path, or the
+//! occupancy-skipping `Sparse` walk (which may also defer a whole
+//! row's fields to one weight-stationary batch pass). All three are
+//! bit-exact; cycle / op / access reports are identical by
 //! construction (they depend only on layer geometry and the spike
-//! pattern, never on the host algorithm — see `sim::backend`).
+//! pattern, never on the host algorithm — see `sim::backend`), pinned
+//! by `tests/diff_backends.rs`.
 //!
 //! ## Zero-allocation frame hot path (§Perf)
 //!
@@ -163,6 +166,10 @@ struct Band {
     backend: Box<dyn ConvCompute>,
     /// Per-co `(psum, ops)` of the current field (batched Co walk).
     psums: Vec<(Acc, u64)>,
+    /// Row-batch psum buffer `[ox][co]` for backends that stash whole
+    /// rows of fields and evaluate them weight-stationary
+    /// (`ConvCompute::field_psums_batch`); empty for the others.
+    batch: Vec<(Acc, u64)>,
     /// Per-lane op / busy-cycle totals, merged into the [`PeArray`]
     /// after the run (bands must not touch the shared array
     /// concurrently).
@@ -264,7 +271,7 @@ impl Band {
                    neuron: &mut NeuronBand<'_>, input: &SpikeFrame,
                    off_chip: bool, field_cycles: u64, incremental: bool,
                    oy: usize, external_out: Option<&mut SpikeFrame>) {
-        let Band { y0, lb, backend, psums, lane_ops, lane_cycles,
+        let Band { y0, lb, backend, psums, batch, lane_ops, lane_cycles,
                    out, step, trace, .. } = self;
         let t0 = trace.as_ref().map(|t| t.start());
         let y0 = *y0;
@@ -275,7 +282,6 @@ impl Band {
         };
 
         let n_ci = weights.n_ci();
-        let groups = layer.co.div_ceil(layer.parallel);
         // One weight-buffer read per input channel per output channel
         // walked — charged once per field (hoisted out of the Co loop;
         // identical totals, far fewer counter touches. §Perf).
@@ -289,6 +295,7 @@ impl Band {
                           true);
         }
         backend.begin_row();
+        let mut deferred = false;
         for ox in 0..wo {
             lb.count_window_read(layer.kw, &mut step.counters);
             // One incremental slide (or full repack on the
@@ -301,35 +308,70 @@ impl Band {
             }
             step.counters.read(MemLevel::Bram, DataKind::Weight,
                                weight_reads_per_field);
-            backend.field_psums(weights, psums);
-            // Output channels in groups of `parallel` lanes; lanes
-            // run concurrently so the group costs one lane's time.
-            for g in 0..groups {
-                for lane in 0..layer.parallel {
-                    let co = g * layer.parallel + lane;
-                    if co >= layer.co {
-                        break;
-                    }
-                    let (psum, ops) = psums[co];
-                    step.ops += ops;
-                    lane_ops[lane] += ops;
-                    lane_cycles[lane] += field_cycles;
-                    let idx = (oy * wo + ox) * layer.co + co;
-                    if neuron.fire(idx, co, psum,
-                                   &mut step.counters) {
-                        out.set(oy - out_y0, ox, co);
-                    }
-                }
-                step.cycles += field_cycles;
+            // A batching backend stashes the packed window here and
+            // evaluates the whole row weight-stationary below. Every
+            // report field is a sum, so deferring the evaluation and
+            // firing pass cannot change spikes, cycles, ops, or
+            // counters (pinned by tests/prop_backend.rs).
+            if backend.stash_field() {
+                deferred = true;
+                continue;
             }
-            step.counters.write(MemLevel::Bram, DataKind::OutputSpike,
-                                1);
+            backend.field_psums(weights, psums);
+            fire_field(layer, neuron, psums, lane_ops, lane_cycles,
+                       out, step, field_cycles, oy, out_y0, ox, wo);
+        }
+        if deferred {
+            let n = backend.stashed_fields();
+            debug_assert_eq!(n, wo);
+            batch.resize(n * layer.co, (0, 0));
+            backend.field_psums_batch(weights, layer.co, batch);
+            for ox in 0..n {
+                let psums = &batch[ox * layer.co..(ox + 1) * layer.co];
+                fire_field(layer, neuron, psums, lane_ops, lane_cycles,
+                           out, step, field_cycles, oy, out_y0, ox, wo);
+            }
         }
         if let (Some(tr), Some(t0)) = (trace.as_ref(), t0) {
             tr.record("conv.row", "band", t0,
                       [("oy", oy as u64), ("", 0)]);
         }
     }
+}
+
+/// Fire the Co walk of one field from its `(psum, ops)` slice: charge
+/// ops/cycles per lane group, fire neurons, set output spikes, and
+/// write the field's output-spike word. Shared by the immediate path
+/// and the deferred weight-stationary batch path of
+/// [`Band::compute_row`] — all charges are sums, so the two call
+/// orders produce bit-identical reports.
+#[allow(clippy::too_many_arguments)]
+fn fire_field(layer: &ConvLayer, neuron: &mut NeuronBand<'_>,
+              psums: &[(Acc, u64)], lane_ops: &mut [u64],
+              lane_cycles: &mut [u64], out: &mut SpikeFrame,
+              step: &mut LayerStep, field_cycles: u64, oy: usize,
+              out_y0: usize, ox: usize, wo: usize) {
+    let groups = layer.co.div_ceil(layer.parallel);
+    // Output channels in groups of `parallel` lanes; lanes run
+    // concurrently so the group costs one lane's time.
+    for g in 0..groups {
+        for lane in 0..layer.parallel {
+            let co = g * layer.parallel + lane;
+            if co >= layer.co {
+                break;
+            }
+            let (psum, ops) = psums[co];
+            step.ops += ops;
+            lane_ops[lane] += ops;
+            lane_cycles[lane] += field_cycles;
+            let idx = (oy * wo + ox) * layer.co + co;
+            if neuron.fire(idx, co, psum, &mut step.counters) {
+                out.set(oy - out_y0, ox, co);
+            }
+        }
+        step.cycles += field_cycles;
+    }
+    step.counters.write(MemLevel::Bram, DataKind::OutputSpike, 1);
 }
 
 /// Split `ho` output rows into `n` contiguous bands (clamped to
@@ -443,6 +485,7 @@ impl ConvEngine {
                 lb: LineBuffer::new(layer.kh, wi_pad, layer.ci),
                 backend,
                 psums: vec![(0, 0); layer.co],
+                batch: Vec::new(),
                 lane_ops: vec![0; layer.parallel],
                 lane_cycles: vec![0; layer.parallel],
                 out: if multi {
@@ -963,7 +1006,8 @@ mod tests {
     fn incremental_window_matches_begin_field_fallback() {
         for mode in [ConvMode::Standard, ConvMode::Depthwise,
                      ConvMode::Pointwise] {
-            for kind in [BackendKind::Accurate, BackendKind::WordParallel] {
+            for kind in [BackendKind::Accurate, BackendKind::WordParallel,
+                         BackendKind::Sparse] {
                 let l = layer(mode, 2);
                 let w = ConvWeights::random(&l, 41);
                 let mut rng = Rng::new(13);
@@ -989,7 +1033,8 @@ mod tests {
     fn intra_parallel_bands_are_bit_exact() {
         for mode in [ConvMode::Standard, ConvMode::Depthwise,
                      ConvMode::Pointwise] {
-            for kind in [BackendKind::Accurate, BackendKind::WordParallel] {
+            for kind in [BackendKind::Accurate, BackendKind::WordParallel,
+                         BackendKind::Sparse] {
                 for (bands, timesteps) in [(2, 1), (4, 1), (3, 2), (16, 1)]
                 {
                     let l = layer(mode, 2);

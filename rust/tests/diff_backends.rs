@@ -1,0 +1,161 @@
+//! Cross-backend differential fuzz harness — the pin for the
+//! three-backend contract: `accurate`, `word-parallel`, and `sparse`
+//! must produce bit-identical spikes, logits, and architectural
+//! reports (cycles, ops, access traffic, energy, Vmem, codec ratios)
+//! on every network geometry, schedule, band count, and timestep
+//! count.
+//!
+//! Seeded random `NetworkSpec`s (conv / depthwise-separable /
+//! pointwise / pool / FC mixes, odd shapes, 1x1-no-pad and 5x5-pad-2
+//! kernel edges) are swept over input densities from all-zero and
+//! single-spike frames up to 50% activity; every spec runs the full
+//! backend x {serial, streamed} x bands {1, 2, 4} matrix against one
+//! serial `accurate` reference (timesteps alternate 1/2 per spec so
+//! the Vmem path is covered). `STI_SNN_STRESS_ITERS` repeats the whole
+//! sweep with fresh specs (CI soak), like `stream_exec.rs`.
+
+use sti_snn::arch::{NetBuilder, NetworkSpec};
+use sti_snn::codec::SpikeFrame;
+use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig,
+                                     PipelineReport};
+use sti_snn::sim::BackendKind;
+use sti_snn::util::rng::Rng;
+
+const SPECS: u64 = 64;
+
+/// Random tiny network: optional-kernel encoder, 1-3 accelerated conv
+/// blocks mixing standard / depthwise-separable / pointwise layers,
+/// stride-2 pools where the geometry allows, FC head.
+fn random_net(rng: &mut Rng, id: u64) -> NetworkSpec {
+    let h = 6 + rng.below(6); // 6..11, odd widths included
+    let w = 6 + rng.below(6);
+    let c = 1 + rng.below(3);
+    let enc_k = [1, 3, 5][rng.below(3)];
+    let mut b = NetBuilder::new(&format!("diff{id}"), (h, w, c))
+        .encoder(2 + rng.below(5), enc_k);
+    let (mut cur_h, mut cur_w) = (h, w);
+    for _ in 0..1 + rng.below(3) {
+        b = match rng.below(3) {
+            // Standard conv: 1x1 (pad 0), 3x3 (pad 1), or 5x5 (pad 2).
+            0 => b.conv(1 + rng.below(8), [1, 3, 5][rng.below(3)]),
+            // Depthwise-separable block.
+            1 => b.dwconv([3, 5][rng.below(2)]).pwconv(1 + rng.below(8)),
+            _ => b.pwconv(1 + rng.below(8)),
+        };
+        if cur_h % 2 == 0 && cur_w % 2 == 0 && cur_h >= 6 && cur_w >= 6
+            && rng.bernoulli(0.5)
+        {
+            b = b.pool();
+            cur_h /= 2;
+            cur_w /= 2;
+        }
+    }
+    b.fc(2 + rng.below(10)).build()
+}
+
+/// Input frames at the spec's density point: all-zero, single-spike,
+/// or Bernoulli at 5-50%.
+fn frames_at(shape: (usize, usize, usize), density: f64, n: usize,
+             rng: &mut Rng) -> Vec<SpikeFrame> {
+    (0..n)
+        .map(|_| {
+            if density == 0.0 {
+                SpikeFrame::zeros(shape.0, shape.1, shape.2)
+            } else if density < 0.0 {
+                // Sentinel: exactly one spike somewhere in the frame.
+                let mut f = SpikeFrame::zeros(shape.0, shape.1, shape.2);
+                f.set(rng.below(shape.0), rng.below(shape.1),
+                      rng.below(shape.2));
+                f
+            } else {
+                SpikeFrame::random(shape.0, shape.1, shape.2, density,
+                                   rng)
+            }
+        })
+        .collect()
+}
+
+fn run_with(net: &NetworkSpec, config: PipelineConfig,
+            frames: &[SpikeFrame]) -> PipelineReport {
+    let mut p = Pipeline::random(net.clone(), config).unwrap();
+    p.run(frames)
+}
+
+/// Everything except the batch total (schedule-dependent by design,
+/// Eq. (10) vs N x t_sum) must be bit-identical.
+fn assert_reports_match(a: &PipelineReport, b: &PipelineReport,
+                        ctx: &str) {
+    assert_eq!(a.predictions, b.predictions, "{ctx}: predictions");
+    assert_eq!(a.logits, b.logits, "{ctx}: logits");
+    assert_eq!(a.layer_names, b.layer_names, "{ctx}: layer names");
+    assert_eq!(a.layer_cycles, b.layer_cycles, "{ctx}: layer cycles");
+    assert_eq!(a.t_max, b.t_max, "{ctx}: t_max");
+    assert_eq!(a.t_sum, b.t_sum, "{ctx}: t_sum");
+    assert_eq!(a.ops_per_frame, b.ops_per_frame, "{ctx}: ops");
+    assert_eq!(a.counters, b.counters, "{ctx}: access counters");
+    assert_eq!(a.layer_energy, b.layer_energy, "{ctx}: energy");
+    assert_eq!(a.layer_vmem_bytes, b.layer_vmem_bytes, "{ctx}: vmem");
+    assert_eq!(a.codec_ratios, b.codec_ratios, "{ctx}: codec ratios");
+}
+
+#[test]
+fn diff_backends_full_matrix() {
+    let iters: u64 = std::env::var("STI_SNN_STRESS_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    // -1.0 is the single-spike sentinel (see frames_at).
+    let densities = [0.0, -1.0, 0.05, 0.15, 0.3, 0.5];
+    for it in 0..iters {
+        for id in 0..SPECS {
+            let mut rng = Rng::new(0xd1ff_0000 + it * SPECS + id);
+            let net = random_net(&mut rng, id);
+            let density = densities[(id % densities.len() as u64) as usize];
+            let timesteps = 1 + (id % 2) as usize;
+            let shape =
+                Pipeline::random(net.clone(), PipelineConfig::default())
+                    .unwrap()
+                    .input_shape();
+            let frames = frames_at(shape, density, 2, &mut rng);
+            let reference = run_with(&net,
+                                     PipelineConfig {
+                                         pipelined: false,
+                                         timesteps,
+                                         ..Default::default()
+                                     },
+                                     &frames);
+            for backend in [BackendKind::Accurate,
+                            BackendKind::WordParallel,
+                            BackendKind::Sparse] {
+                for pipelined in [false, true] {
+                    for bands in [1usize, 2, 4] {
+                        if backend == BackendKind::Accurate && !pipelined
+                            && bands == 1
+                        {
+                            continue; // the reference itself
+                        }
+                        let rep = run_with(
+                            &net,
+                            PipelineConfig {
+                                pipelined,
+                                channel_capacity: 2,
+                                backend,
+                                timesteps,
+                                intra_parallel: bands,
+                                ..Default::default()
+                            },
+                            &frames,
+                        );
+                        assert_reports_match(
+                            &rep, &reference,
+                            &format!("it={it} spec={id} ({}) \
+                                      d={density} T={timesteps} \
+                                      {backend} pipelined={pipelined} \
+                                      bands={bands}",
+                                     net.name));
+                    }
+                }
+            }
+        }
+    }
+}

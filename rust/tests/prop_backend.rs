@@ -1,8 +1,10 @@
-//! Property tests: the `word-parallel` compute backend is bit-exact
-//! against the `accurate` event walk — identical output spike frames
-//! AND identical run reports (cycles, ops, spike counts, memory
-//! traffic) — across random layer geometries, conv modes, parallel
-//! factors, timestep counts, and sparsity levels.
+//! Property tests: the `word-parallel` and `sparse` compute backends
+//! are bit-exact against the `accurate` event walk — identical output
+//! spike frames AND identical run reports (cycles, ops, spike counts,
+//! memory traffic) — across random layer geometries, conv modes,
+//! parallel factors, timestep counts, and sparsity levels. Sparse
+//! appendices: occupancy skipping on == off, and the weight-stationary
+//! `field_psums_batch` == sequential `field_psums` calls.
 //!
 //! proptest is not vendored; same hand-rolled discipline as
 //! `prop_coordinator.rs`: seeded PRNG cases, seed printed on failure.
@@ -11,9 +13,12 @@ use sti_snn::arch::{ConvLayer, ConvMode};
 use sti_snn::codec::SpikeFrame;
 use sti_snn::coordinator::pipeline::{Pipeline, PipelineConfig};
 use sti_snn::dataflow::ConvLatencyParams;
+use sti_snn::sim::backend::{sparse_conv_backend, ConvCompute};
 use sti_snn::sim::conv_engine::{ConvEngine, ConvWeights};
 use sti_snn::sim::fc_engine::FcEngine;
-use sti_snn::sim::BackendKind;
+use sti_snn::sim::linebuf::LineBuffer;
+use sti_snn::sim::pe::Acc;
+use sti_snn::sim::{AccessCounter, BackendKind};
 use sti_snn::util::rng::Rng;
 
 const CASES: u64 = 30;
@@ -75,16 +80,27 @@ fn prop_conv_backends_identical_frames_and_reports() {
             l.clone(), w.clone(), timing, timesteps,
             BackendKind::Accurate);
         let mut wp = ConvEngine::with_backend(
-            l.clone(), w, timing, timesteps, BackendKind::WordParallel);
+            l.clone(), w.clone(), timing, timesteps,
+            BackendKind::WordParallel);
+        let mut sp = ConvEngine::with_backend(
+            l.clone(), w, timing, timesteps, BackendKind::Sparse);
 
         let (frame_a, rep_a) = acc.run_frame(&input, true);
         let (frame_w, rep_w) = wp.run_frame(&input, true);
+        let (frame_s, rep_s) = sp.run_frame(&input, true);
         assert_eq!(frame_a, frame_w,
                    "seed={seed} {:?} ci={} co={} k={} p={} rate={rate} \
                     t={timesteps}: frames diverge",
                    l.mode, l.ci, l.co, l.kh, l.parallel);
         assert_eq!(rep_a, rep_w,
                    "seed={seed} {:?} ci={} co={}: reports diverge",
+                   l.mode, l.ci, l.co);
+        assert_eq!(frame_a, frame_s,
+                   "seed={seed} {:?} ci={} co={} k={} p={} rate={rate} \
+                    t={timesteps}: sparse frames diverge",
+                   l.mode, l.ci, l.co, l.kh, l.parallel);
+        assert_eq!(rep_a, rep_s,
+                   "seed={seed} {:?} ci={} co={}: sparse reports diverge",
                    l.mode, l.ci, l.co);
     }
 }
@@ -104,7 +120,8 @@ fn prop_incremental_window_matches_fallback_across_bands() {
             SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, &mut rng);
         let timesteps = 1 + rng.below(2);
         let timing = ConvLatencyParams::optimized();
-        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel,
+                        BackendKind::Sparse] {
             let mut fallback = ConvEngine::with_backend(
                 l.clone(), w.clone(), timing, timesteps, backend)
                 .with_incremental(false);
@@ -136,14 +153,20 @@ fn prop_fc_backends_identical_logits_and_reports() {
         let mut acc = FcEngine::random(n_in, n_out, 200 + seed);
         let mut wp = FcEngine::random(n_in, n_out, 200 + seed)
             .with_backend(BackendKind::WordParallel);
+        let mut sp = FcEngine::random(n_in, n_out, 200 + seed)
+            .with_backend(BackendKind::Sparse);
         assert_eq!(wp.backend_kind(), BackendKind::WordParallel);
+        assert_eq!(sp.backend_kind(), BackendKind::Sparse);
         let rate = rng.f64();
         let spikes: Vec<bool> =
             (0..n_in).map(|_| rng.bernoulli(rate)).collect();
         let (logits_a, rep_a) = acc.run(&spikes);
         let (logits_w, rep_w) = wp.run(&spikes);
+        let (logits_s, rep_s) = sp.run(&spikes);
         assert_eq!(logits_a, logits_w, "seed={seed} n_in={n_in}");
         assert_eq!(rep_a, rep_w, "seed={seed} n_in={n_in}");
+        assert_eq!(logits_a, logits_s, "seed={seed} n_in={n_in} sparse");
+        assert_eq!(rep_a, rep_s, "seed={seed} n_in={n_in} sparse");
     }
 }
 
@@ -166,6 +189,14 @@ fn deployed_models_are_backend_invariant() {
             },
         )
         .unwrap();
+        let mut sp = Pipeline::random(
+            net.clone(),
+            PipelineConfig {
+                backend: BackendKind::Sparse,
+                ..Default::default()
+            },
+        )
+        .unwrap();
         let shape = acc.input_shape();
         let mut rng = Rng::new(shape_seed);
         let frames: Vec<SpikeFrame> = (0..2)
@@ -173,14 +204,16 @@ fn deployed_models_are_backend_invariant() {
                                         &mut rng))
             .collect();
         let ra = acc.run(&frames);
-        let rw = wp.run(&frames);
-        assert_eq!(ra.predictions, rw.predictions, "{}", net.name);
-        assert_eq!(ra.logits, rw.logits, "{}", net.name);
-        assert_eq!(ra.total_cycles, rw.total_cycles, "{}", net.name);
-        assert_eq!(ra.layer_cycles, rw.layer_cycles, "{}", net.name);
-        assert_eq!(ra.ops_per_frame, rw.ops_per_frame, "{}", net.name);
-        assert_eq!(ra.counters, rw.counters, "{}", net.name);
-        assert_eq!(ra.layer_energy, rw.layer_energy, "{}", net.name);
+        for rep in [wp.run(&frames), sp.run(&frames)] {
+            assert_eq!(ra.predictions, rep.predictions, "{}", net.name);
+            assert_eq!(ra.logits, rep.logits, "{}", net.name);
+            assert_eq!(ra.total_cycles, rep.total_cycles, "{}", net.name);
+            assert_eq!(ra.layer_cycles, rep.layer_cycles, "{}", net.name);
+            assert_eq!(ra.ops_per_frame, rep.ops_per_frame, "{}",
+                       net.name);
+            assert_eq!(ra.counters, rep.counters, "{}", net.name);
+            assert_eq!(ra.layer_energy, rep.layer_energy, "{}", net.name);
+        }
     }
 }
 
@@ -192,7 +225,8 @@ fn deployed_models_are_backend_invariant() {
 fn deployed_model_streamed_schedule_is_bit_exact_vs_serial() {
     use sti_snn::arch;
     let net = arch::scnn3();
-    for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+    for backend in [BackendKind::Accurate, BackendKind::WordParallel,
+                    BackendKind::Sparse] {
         let mut serial = Pipeline::random(
             net.clone(),
             PipelineConfig {
@@ -233,5 +267,125 @@ fn deployed_model_streamed_schedule_is_bit_exact_vs_serial() {
         assert_eq!(rs.total_cycles, n * rs.t_sum, "{backend}");
         assert_eq!(rp.total_cycles,
                    n * rp.t_max + (rp.t_sum - rp.t_max), "{backend}");
+    }
+}
+
+/// Drive a sparse backend through the full incremental protocol over a
+/// primed line buffer, exactly as the engine does. Returns per-field
+/// psums `[oy][ox][co]` flattened.
+fn drive_sparse(backend: &mut Box<dyn ConvCompute>, l: &ConvLayer,
+                w: &ConvWeights, input: &SpikeFrame)
+                -> Vec<(Acc, u64)> {
+    let (ho, wo) = (l.out_h(), l.out_w());
+    let mut lb = LineBuffer::new(l.kh, l.in_w + 2 * l.pad, l.ci);
+    let mut counters = AccessCounter::new();
+    let mut psums = vec![(0, 0); l.co];
+    let mut all = Vec::with_capacity(ho * wo * l.co);
+    lb.reset();
+    for py in 0..l.kh {
+        lb.ingest_row(input, py as isize, l.pad, &mut counters, false,
+                      true);
+    }
+    for oy in 0..ho {
+        if oy > 0 {
+            lb.ingest_row(input, (oy + l.kh - 1) as isize, l.pad,
+                          &mut counters, false, true);
+        }
+        backend.begin_row();
+        for ox in 0..wo {
+            backend.advance(&lb, ox);
+            backend.field_psums(w, &mut psums);
+            all.extend_from_slice(&psums);
+        }
+    }
+    all
+}
+
+/// Occupancy skipping only decides which all-zero word groups the
+/// plane walk visits: skip-on and skip-off sparse backends are
+/// bit-identical (psums AND ops) over the full incremental protocol,
+/// including all-zero and single-spike frames.
+#[test]
+fn prop_sparse_occupancy_skip_on_equals_off() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(13_000 + seed);
+        let l = random_layer(&mut rng);
+        let w = ConvWeights::random(&l, 700 + seed);
+        let input = match rng.below(4) {
+            0 => SpikeFrame::zeros(l.in_h, l.in_w, l.ci),
+            1 => {
+                let mut f = SpikeFrame::zeros(l.in_h, l.in_w, l.ci);
+                f.set(rng.below(l.in_h), rng.below(l.in_w),
+                      rng.below(l.ci));
+                f
+            }
+            _ => {
+                let rate = [0.03, 0.2, 0.5][rng.below(3)];
+                SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, &mut rng)
+            }
+        };
+        let mut on = sparse_conv_backend(&l, &w, true);
+        let mut off = sparse_conv_backend(&l, &w, false);
+        assert_eq!(on.kind(), BackendKind::Sparse);
+        let a = drive_sparse(&mut on, &l, &w, &input);
+        let b = drive_sparse(&mut off, &l, &w, &input);
+        assert_eq!(a, b,
+                   "seed={seed} {:?} ci={} co={} k={}: skip on != off",
+                   l.mode, l.ci, l.co, l.kh);
+    }
+}
+
+/// `field_psums_batch(N)` over a row of stashed fields equals N
+/// sequential `field_psums` calls, bit for bit (the weight-stationary
+/// transpose only reorders sums). Depthwise layers must decline the
+/// stash (`stash_field` false) — their mask is co-dependent.
+#[test]
+fn prop_sparse_batch_matches_sequential_psums() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(14_000 + seed);
+        let l = random_layer(&mut rng);
+        let w = ConvWeights::random(&l, 900 + seed);
+        let rate = [0.0, 0.05, 0.25, 0.5][rng.below(4)];
+        let input =
+            SpikeFrame::random(l.in_h, l.in_w, l.ci, rate, &mut rng);
+        let (ho, wo) = (l.out_h(), l.out_w());
+        let mut backend = sparse_conv_backend(&l, &w, rng.bernoulli(0.5));
+        let mut lb = LineBuffer::new(l.kh, l.in_w + 2 * l.pad, l.ci);
+        let mut counters = AccessCounter::new();
+        let mut seq = vec![(0, 0); wo * l.co];
+        let mut batch = vec![(0, 0); wo * l.co];
+        lb.reset();
+        for py in 0..l.kh {
+            lb.ingest_row(&input, py as isize, l.pad, &mut counters,
+                          false, true);
+        }
+        for oy in 0..ho {
+            if oy > 0 {
+                lb.ingest_row(&input, (oy + l.kh - 1) as isize, l.pad,
+                              &mut counters, false, true);
+            }
+            backend.begin_row();
+            let mut stashed = true;
+            for ox in 0..wo {
+                backend.advance(&lb, ox);
+                backend.field_psums(
+                    &w, &mut seq[ox * l.co..(ox + 1) * l.co]);
+                stashed &= backend.stash_field();
+            }
+            if l.mode == ConvMode::Depthwise {
+                assert!(!stashed, "seed={seed}: depthwise must decline");
+                assert_eq!(backend.stashed_fields(), 0);
+                continue;
+            }
+            assert!(stashed, "seed={seed}: packed mode must stash");
+            assert_eq!(backend.stashed_fields(), wo, "seed={seed}");
+            backend.field_psums_batch(&w, l.co, &mut batch);
+            assert_eq!(batch, seq,
+                       "seed={seed} {:?} ci={} co={} oy={oy}: \
+                        batch != sequential",
+                       l.mode, l.ci, l.co);
+            assert_eq!(backend.stashed_fields(), 0,
+                       "seed={seed}: batch must clear the stash");
+        }
     }
 }

@@ -82,7 +82,8 @@ fn prop_calibrated_predictions_track_simulator_counters() {
         let input =
             SpikeFrame::random(l2.in_h, l2.in_w, l2.ci, 0.3, &mut rng);
 
-        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel,
+                        BackendKind::Sparse] {
             let cal = dse::calibrate(&net, &timing, &CalibrationConfig {
                 timesteps,
                 backends: vec![backend],
@@ -161,7 +162,8 @@ fn prop_calibration_refit_with_bands_stays_in_envelope() {
         assert_eq!(base.weight_scale, banded.weight_scale,
                    "seed={seed}");
         assert_eq!(base.op_activity, banded.op_activity, "seed={seed}");
-        for backend in [BackendKind::Accurate, BackendKind::WordParallel] {
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel,
+                        BackendKind::Sparse] {
             assert!(banded.host_ns(backend).unwrap() > 0.0,
                     "seed={seed} {backend}: host refit missing");
         }

@@ -105,7 +105,7 @@ fn streamed_total_cycles_follow_eq_10() {
 }
 
 /// The stress sweep: channel capacities {1, Kh, > rows} x timesteps
-/// {1, 2} x intra-frame bands {1, 2, 4} x both backends, every
+/// {1, 2} x intra-frame bands {1, 2, 4} x all three backends, every
 /// combination bit-identical to the serial schedule and free of
 /// deadlock. `STI_SNN_STRESS_ITERS` repeats the sweep with fresh
 /// random frames (CI soak).
@@ -117,7 +117,8 @@ fn streamed_is_bit_exact_at_every_channel_capacity() {
         .unwrap_or(1);
     let net = mini_net();
     for it in 0..iters {
-        for backend in [BackendKind::Accurate, BackendKind::WordParallel]
+        for backend in [BackendKind::Accurate, BackendKind::WordParallel,
+                        BackendKind::Sparse]
         {
             for timesteps in [1usize, 2] {
                 let shape = Pipeline::random(net.clone(),
